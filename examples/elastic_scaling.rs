@@ -1,0 +1,62 @@
+//! Elastic scaling demo: watch λFS scale its NameNode fleet out for a
+//! burst and back in afterwards, and compare against the auto-scaling
+//! ablation modes (the paper's §5.2.4 / Figure 14 story).
+//!
+//! ```sh
+//! cargo run --release --example elastic_scaling
+//! ```
+
+use lambda_fs::config::{AutoScaleMode, SystemConfig};
+use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
+use lambda_fs::systems::{driver, LambdaFs, MdsSim};
+use lambda_fs::util::rng::Rng;
+use lambda_fs::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
+
+fn run(mode: AutoScaleMode, label: &str) {
+    let mut cfg = SystemConfig::default();
+    cfg.lambda_fs.autoscale = mode;
+    cfg.faas.vcpu_limit = 256.0;
+    // Aggressive scale-in so the post-burst contraction is visible.
+    cfg.lambda_fs.idle_reclaim_ms = 10_000.0;
+    let mut rng = Rng::new(cfg.seed);
+    let ns = generate(
+        &NamespaceParams { n_dirs: 2048, files_per_dir: 64, ..Default::default() },
+        &mut rng,
+    );
+    let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+    // 90 s: calm -> 8x burst -> calm.
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(90, 1_500.0).with_burst(30, 15, 12_000.0),
+        mix: OpMix::spotify(),
+        n_clients: 256,
+        n_vms: 4,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+    let mut sys = LambdaFs::new(cfg, ns.clone(), spec.n_clients, spec.n_vms);
+    driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+    let m = sys.into_metrics();
+
+    println!("\n== autoscale = {label} ==");
+    println!("sec   target  completed  NNs   (sparkline of fleet size)");
+    for (s, sec) in m.seconds.iter().enumerate().take(90) {
+        if s % 5 == 0 {
+            let bar = "#".repeat(sec.namenodes as usize);
+            println!("{s:>3}  {:>7}  {:>9}  {:>3}  {bar}", sec.target, sec.completed, sec.namenodes);
+        }
+    }
+    println!(
+        "peak throughput {:.0} ops/s | peak fleet {} NNs | avg latency {:.2} ms | cost ${:.4}",
+        m.peak_throughput(),
+        m.peak_namenodes(),
+        m.avg_latency_ms(),
+        m.total_cost()
+    );
+}
+
+fn main() {
+    run(AutoScaleMode::Enabled, "enabled");
+    run(AutoScaleMode::Limited(2), "limited(2)");
+    run(AutoScaleMode::Disabled, "disabled");
+    println!("\nelastic_scaling OK");
+}

@@ -1,0 +1,64 @@
+//! Fault-tolerance demo (the paper's §5.6 / Figure 15): run the bursty
+//! Spotify workload while killing an active NameNode every 30 seconds,
+//! round-robin across deployments, and verify the workload completes.
+//!
+//! ```sh
+//! cargo run --release --example fault_tolerance
+//! ```
+
+use lambda_fs::config::SystemConfig;
+use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
+use lambda_fs::systems::{driver, LambdaFs, MdsSim};
+use lambda_fs::util::rng::Rng;
+use lambda_fs::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
+
+fn main() {
+    let mut cfg = SystemConfig::default();
+    cfg.faas.vcpu_limit = 256.0;
+    let mut rng = Rng::new(cfg.seed);
+    let ns = generate(
+        &NamespaceParams { n_dirs: 2048, files_per_dir: 64, ..Default::default() },
+        &mut rng,
+    );
+    let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+    let mut spec_rng = rng.fork("schedule");
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::pareto_bursty(120, 15, 1_500.0, 2.0, 7.0, &mut spec_rng),
+        mix: OpMix::spotify(),
+        n_clients: 256,
+        n_vms: 4,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+
+    let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+    sys.prewarm(2); // start with a warm fleet (paper: 36 NNs)
+    // Kill one NameNode every 30 s, round-robin over deployments.
+    let mut dep = 0;
+    for s in (15..120).step_by(30) {
+        sys.schedule_kill(s, dep);
+        dep = (dep + 1) % cfg.lambda_fs.n_deployments;
+    }
+    driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+
+    let kills = sys.platform().stats().kills;
+    let cold_starts = sys.platform().stats().cold_starts;
+    let m = sys.into_metrics();
+    let target: u64 = m.seconds.iter().map(|s| s.target).sum();
+
+    println!("sec   target  completed  NNs");
+    for (s, sec) in m.seconds.iter().enumerate() {
+        if s % 10 == 0 {
+            println!("{s:>3}  {:>7}  {:>9}  {:>3}", sec.target, sec.completed, sec.namenodes);
+        }
+    }
+    println!("\nNameNodes killed   : {kills}");
+    println!("cold starts        : {cold_starts} (replacements provisioned)");
+    println!("ops targeted       : {target}");
+    println!("ops completed      : {}", m.completed_ops);
+    println!("resubmissions      : {}", m.resubmissions);
+    println!("avg latency        : {:.2} ms", m.avg_latency_ms());
+    assert!(kills >= 3, "fault injection ran");
+    assert!(m.completed_ops >= target, "workload completed despite failures");
+    println!("\nfault_tolerance OK — workload completed despite {kills} NameNode failures");
+}

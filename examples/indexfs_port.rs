@@ -1,0 +1,44 @@
+//! λFS portability demo (the paper's §5.7 / Figure 16): run IndexFS'
+//! tree-test against vanilla IndexFS-on-BeeGFS and λIndexFS — the λFS
+//! port that moves in-memory metadata handling into serverless functions
+//! and keeps LevelDB only as the persistent store.
+//!
+//! ```sh
+//! cargo run --release --example indexfs_port
+//! ```
+
+use lambda_fs::baselines::indexfs::{run_tree_test, IndexFs, LambdaIndexFs};
+use lambda_fs::config::SystemConfig;
+use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
+use lambda_fs::util::rng::Rng;
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let mut rng = Rng::new(cfg.seed);
+    let ns = generate(
+        &NamespaceParams { n_dirs: 1024, files_per_dir: 32, ..Default::default() },
+        &mut rng,
+    );
+    let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+
+    println!("tree-test: per-client 1,000 mknod writes then 1,000 getattr reads");
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>12}",
+        "clients", "λidx_write", "idx_write", "λidx_read", "idx_read"
+    );
+    for n_clients in [4u32, 16, 64] {
+        // λIndexFS: 8 deployments on a 64-vCPU OpenWhisk cluster (paper).
+        let mut l = LambdaIndexFs::new(cfg.clone(), ns.clone(), 8, 64.0);
+        let mut r = rng.fork(&format!("l{n_clients}"));
+        let lr = run_tree_test(&mut l, &ns, &sampler, n_clients, 1_000, &mut r);
+        // IndexFS: 4 co-located servers on the 112-vCPU BeeGFS cluster.
+        let mut v = IndexFs::new(cfg.clone(), ns.clone(), 4, 112.0);
+        let mut r = rng.fork(&format!("v{n_clients}"));
+        let vr = run_tree_test(&mut v, &ns, &sampler, n_clients, 1_000, &mut r);
+        println!(
+            "{n_clients:<8} {:>12.0} {:>12.0} {:>12.0} {:>12.0}",
+            lr.write_tp, vr.write_tp, lr.read_tp, vr.read_tp
+        );
+    }
+    println!("\nindexfs_port OK — λFS' techniques transfer to a second DFS");
+}

@@ -1,0 +1,65 @@
+//! Quickstart: stand up a λFS cluster in the simulator, run a small
+//! metadata workload against the public API, and print what happened.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use lambda_fs::config::SystemConfig;
+use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
+use lambda_fs::systems::{driver, LambdaFs, MdsSim};
+use lambda_fs::util::rng::Rng;
+use lambda_fs::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
+
+fn main() {
+    // 1. Configure the system — every constant is overridable via
+    //    SystemConfig (or a mini-TOML file; see `lambdafs --config`).
+    let mut cfg = SystemConfig::default();
+    cfg.lambda_fs.n_deployments = 16; // namespace partitions
+    cfg.faas.vcpu_limit = 128.0; // FaaS platform budget
+
+    // 2. Generate a file-system namespace and a hotspot sampler.
+    let mut rng = Rng::new(cfg.seed);
+    let ns = generate(
+        &NamespaceParams { n_dirs: 2048, files_per_dir: 64, ..Default::default() },
+        &mut rng,
+    );
+    let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+    println!(
+        "namespace: {} directories, {} files",
+        ns.n_dirs(),
+        ns.total_files()
+    );
+
+    // 3. Build λFS and drive 30 seconds of the Spotify op mix at
+    //    2,000 ops/s with a 5x burst in the middle.
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(30, 2_000.0).with_burst(15, 5, 10_000.0),
+        mix: OpMix::spotify(),
+        n_clients: 128,
+        n_vms: 4,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+    let mut sys = LambdaFs::new(cfg, ns.clone(), spec.n_clients, spec.n_vms);
+    driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+
+    // 4. Inspect the run.
+    let cache = sys.cache_stats();
+    let platform = sys.platform().stats();
+    let m = sys.into_metrics();
+    println!("\n-- results --");
+    println!("completed ops      : {}", m.completed_ops);
+    println!("avg throughput     : {:.0} ops/s", m.avg_throughput());
+    println!("peak throughput    : {:.0} ops/s (burst absorbed)", m.peak_throughput());
+    println!("avg read latency   : {:.2} ms", m.avg_read_latency_ms());
+    println!("avg write latency  : {:.2} ms (coherence + NDB txn)", m.avg_write_latency_ms());
+    println!("p99 latency        : {:.2} ms", m.all_lat.p99() / 1000.0);
+    println!("cache hit ratio    : {:.1}%", cache.hit_ratio() * 100.0);
+    println!("peak NameNodes     : {}", m.peak_namenodes());
+    println!("cold starts        : {}", platform.cold_starts);
+    println!("pay-per-use cost   : ${:.4}", m.total_cost());
+    println!("simplified cost    : ${:.4}", m.total_cost_simplified());
+    assert!(m.completed_ops > 0);
+    println!("\nquickstart OK");
+}

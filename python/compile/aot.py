@@ -1,0 +1,73 @@
+"""AOT-lower the L2 pipeline to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax
+>= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text
+parser reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/gen_hlo.py).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits one ``<name>.hlo.txt`` per entry in ``model.EXPORTS`` plus a
+``manifest.txt`` recording the shape contract the Rust runtime validates
+against.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    args_by_name = model.example_args()
+    for name, fn in model.EXPORTS.items():
+        args = args_by_name[name]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        argsig = ";".join(
+            f"{a.dtype}{list(a.shape)}" for a in args
+        )
+        manifest_lines.append(f"{name} {argsig}")
+        print(f"wrote {len(text)} chars to {path}")
+    manifest_lines.append(
+        f"shapes route_batch={model.ROUTE_BATCH} path_width={model.PATH_WIDTH} "
+        f"lat_batch={model.LAT_BATCH} lat_window={model.LAT_WINDOW} "
+        f"pareto_n={model.PARETO_N}"
+    )
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    # Back-compat single-file flag (Makefile stamp target).
+    p.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    a = p.parse_args()
+    out_dir = os.path.dirname(a.out) if a.out else a.out_dir
+    lower_all(out_dir or ".")
+    if a.out:
+        # Stamp file the Makefile tracks.
+        with open(a.out, "w") as f:
+            f.write("see manifest.txt\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: batched moving-window latency statistics.
+
+λFS clients maintain a moving-window average of per-request latency and use
+it for two control mechanisms:
+
+* **Straggler mitigation** (paper App. A): a request whose latency is
+  ``>= t_straggler x`` the window average (default 10x) is cancelled and
+  resubmitted to another NameNode.
+* **Anti-thrashing mode** (paper App. B): when the *newest* latency is
+  ``>= t_thrash x`` the window average (T in [2, 3]), the client stops the
+  randomized HTTP-for-TCP replacement so the FaaS platform stops churning
+  containers.
+
+This kernel evaluates both predicates for a batch of client windows in one
+pass: each row is one client's latency window (newest sample last), and the
+outputs are the per-row window mean, the straggler flag, and the thrash flag
+for the newest sample.
+
+TPU mapping: rows tile into VMEM as ``(BLOCK_ROWS, WINDOW)`` f32 blocks; the
+mean is a lane-dimension reduction, the flags are elementwise — one VMEM
+pass, bandwidth bound.  ``interpret=True`` for the CPU PJRT plugin.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+WINDOW = 64
+
+
+def _latency_kernel(lat_ref, cnt_ref, ts_ref, tt_ref, mean_ref, strag_ref, thrash_ref, *, window: int):
+    """Per-block kernel body.
+
+    lat_ref: (rows, window) f32 — latency samples, newest LAST, zero padded
+             at the FRONT when fewer than ``window`` samples exist.
+    cnt_ref: (rows,) i32 — number of valid samples per row (>= 1).
+    ts_ref/tt_ref: (1,) f32 — straggler / thrash threshold multipliers.
+    mean_ref:   (rows,) f32 — mean over the valid suffix.
+    strag_ref:  (rows,) i32 — 1 if newest latency >= ts * mean.
+    thrash_ref: (rows,) i32 — 1 if newest latency >= tt * mean.
+    """
+    lat = lat_ref[...]
+    cnt = cnt_ref[...]
+    ts = ts_ref[0]
+    tt = tt_ref[0]
+
+    idx = jax.lax.broadcasted_iota(jnp.int32, lat.shape, 1)
+    valid = idx >= (window - cnt)[:, None]
+    total = jnp.sum(jnp.where(valid, lat, 0.0), axis=1)
+    denom = jnp.maximum(cnt, 1).astype(jnp.float32)
+    mean = total / denom
+
+    newest = lat[:, window - 1]
+    mean_ref[...] = mean
+    strag_ref[...] = (newest >= ts * mean).astype(jnp.int32)
+    thrash_ref[...] = (newest >= tt * mean).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def latency_stats(latencies, counts, t_straggler, t_thrash, *, block_rows: int = BLOCK_ROWS):
+    """Batched moving-window latency statistics.
+
+    latencies: (B, W) float32, newest sample last, front zero padded.
+    counts:    (B,)   int32 valid-sample counts (clamped to >= 1).
+    t_straggler, t_thrash: (1,) float32 threshold multipliers.
+    returns: (mean (B,) f32, straggler (B,) i32, thrash (B,) i32)
+    """
+    b, window = latencies.shape
+    if b % block_rows != 0:
+        raise ValueError(f"batch {b} must be a multiple of block_rows {block_rows}")
+    grid = (b // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_latency_kernel, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, window), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(latencies, counts, t_straggler, t_thrash)

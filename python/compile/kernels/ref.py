@@ -1,0 +1,64 @@
+"""Pure-jnp / pure-python oracles for the L1 Pallas kernels.
+
+These are the correctness references the pytest suite asserts against.  They
+are intentionally written in the most obvious way possible (python loops for
+the scalar reference, plain jnp for the vector reference) so a bug in the
+kernels cannot plausibly be mirrored here.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FNV_OFFSET = 2166136261
+FNV_PRIME = 16777619
+MASK32 = 0xFFFFFFFF
+
+
+def fnv1a_py(data: bytes) -> int:
+    """Scalar python FNV-1a 32-bit — the ground truth."""
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK32
+    return h
+
+
+def fnv1a_ref(path_bytes, lengths):
+    """Vectorized jnp FNV-1a over padded rows (same contract as the kernel)."""
+    path_bytes = jnp.asarray(path_bytes, dtype=jnp.uint32)
+    lengths = jnp.asarray(lengths, dtype=jnp.int32)
+    b, width = path_bytes.shape
+
+    def body(j, h):
+        byte = path_bytes[:, j]
+        nh = (h ^ byte) * jnp.uint32(FNV_PRIME)
+        return jnp.where(j < lengths, nh, h)
+
+    init = jnp.full((b,), FNV_OFFSET, dtype=jnp.uint32)
+    return jax.lax.fori_loop(0, width, body, init)
+
+
+def latency_stats_ref(latencies, counts, t_straggler, t_thrash):
+    """Numpy reference for the latency-window kernel."""
+    lat = np.asarray(latencies, dtype=np.float32)
+    cnt = np.asarray(counts, dtype=np.int32)
+    ts = float(np.asarray(t_straggler).reshape(-1)[0])
+    tt = float(np.asarray(t_thrash).reshape(-1)[0])
+    b, window = lat.shape
+    mean = np.zeros(b, dtype=np.float32)
+    strag = np.zeros(b, dtype=np.int32)
+    thrash = np.zeros(b, dtype=np.int32)
+    for i in range(b):
+        n = max(int(cnt[i]), 1)
+        vals = lat[i, window - n :] if n <= window else lat[i]
+        mean[i] = np.float32(vals.astype(np.float32).sum() / np.float32(n))
+        newest = lat[i, window - 1]
+        strag[i] = 1 if newest >= ts * mean[i] else 0
+        thrash[i] = 1 if newest >= tt * mean[i] else 0
+    return mean, strag, thrash
+
+
+def pareto_ref(u, x_m, alpha):
+    """Inverse-CDF Pareto sampling: delta = x_m * (1-u)^(-1/alpha)."""
+    u = np.asarray(u, dtype=np.float64)
+    return (np.float64(x_m) * (1.0 - u) ** (-1.0 / np.float64(alpha))).astype(np.float32)

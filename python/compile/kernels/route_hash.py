@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: batched FNV-1a path hashing for λFS request routing.
+
+λFS partitions the file-system namespace across *n* serverless NameNode
+deployments by hashing the **parent directory path** of each file (§3.3 of
+the paper).  The client library routes every metadata RPC by this hash, so
+batched path hashing is the numeric hot-spot of the routing pipeline.
+
+The kernel consumes a padded byte matrix (one row per path, bytes widened to
+u32 so the whole kernel is single-dtype integer math) plus a per-row length,
+and produces the 32-bit FNV-1a hash of each row's first ``len`` bytes.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): rows are tiled into VMEM
+blocks of ``(BLOCK_ROWS, PATH_WIDTH)``; the byte loop is a masked
+``fori_loop`` over the lane dimension.  This is pure VPU integer work — no
+MXU — and is bandwidth-bound on real hardware.  The kernel is lowered with
+``interpret=True`` because the CPU PJRT plugin cannot execute Mosaic
+custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# FNV-1a 32-bit constants (numpy scalars: inlined as literals, so the pallas
+# kernel body does not close over traced jax arrays).
+FNV_OFFSET = np.uint32(2166136261)
+FNV_PRIME = np.uint32(16777619)
+
+# Default tile geometry.  PATH_WIDTH bounds the parent-path byte length the
+# router hashes (longer paths are pre-reduced by the caller — see
+# python/compile/model.py and rust/src/client/router.rs, which must agree).
+BLOCK_ROWS = 256
+PATH_WIDTH = 128
+
+
+def _fnv1a_kernel(bytes_ref, len_ref, out_ref, *, width: int):
+    """Per-block kernel body.
+
+    bytes_ref: (rows, width) u32 — path bytes, zero padded.
+    len_ref:   (rows,)       i32 — number of valid bytes per row.
+    out_ref:   (rows,)       u32 — FNV-1a hash of the valid prefix.
+    """
+    lens = len_ref[...]
+
+    def body(j, h):
+        b = bytes_ref[:, j]
+        mask = j < lens
+        nh = (h ^ b) * FNV_PRIME  # u32 arithmetic wraps mod 2**32
+        return jnp.where(mask, nh, h)
+
+    init = jnp.full(lens.shape, FNV_OFFSET, dtype=jnp.uint32)
+    out_ref[...] = jax.lax.fori_loop(0, width, body, init)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def fnv1a_hash(path_bytes, lengths, *, block_rows: int = BLOCK_ROWS):
+    """Hash each row of ``path_bytes[:, :width]`` (u32-widened bytes).
+
+    path_bytes: (B, W) uint32, zero padded per row.
+    lengths:    (B,)   int32.
+    returns:    (B,)   uint32 FNV-1a hashes.
+    """
+    b, width = path_bytes.shape
+    if b % block_rows != 0:
+        raise ValueError(f"batch {b} must be a multiple of block_rows {block_rows}")
+    grid = (b // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_fnv1a_kernel, width=width),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.uint32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(path_bytes, lengths)

@@ -1,0 +1,88 @@
+"""L2: the λFS routing & client-control pipeline as jitted JAX functions.
+
+Three build-time-lowered computations, each loaded and executed by the Rust
+coordinator via PJRT (rust/src/runtime/):
+
+* ``route_batch``     — batched parent-path FNV-1a hashing (L1 Pallas kernel)
+                        + modular reduction to a deployment id.  This is the
+                        client library's routing hot path (§3.3 of the paper:
+                        the namespace is partitioned across *n* serverless
+                        NameNode deployments by hashing the parent directory).
+* ``latency_control`` — batched moving-window latency statistics (L1 Pallas
+                        kernel) driving straggler mitigation (App. A) and
+                        anti-thrashing mode (App. B).
+* ``pareto_schedule`` — inverse-CDF Pareto(x_m, alpha) sampling producing the
+                        per-interval target-throughput schedule used by the
+                        Spotify-workload benchmark driver (§5.2.1, after
+                        iGen [55]).
+
+CONTRACT shared with rust/src/client/router.rs: the routed quantity is the
+FNV-1a 32-bit hash of the first ``min(len, PATH_WIDTH)`` UTF-8 bytes of the
+parent-directory path, and the deployment id is ``hash % n_deployments``.
+The Rust fallback implementation and this pipeline are asserted bit-identical
+in both test suites.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import latency as latency_kernel
+from compile.kernels import route_hash
+
+# Static shapes baked into the AOT artifacts.  The Rust runtime pads partial
+# batches up to these sizes (rust/src/runtime/ must agree).
+ROUTE_BATCH = route_hash.BLOCK_ROWS  # 256 rows / call
+PATH_WIDTH = route_hash.PATH_WIDTH  # 128 bytes / path
+LAT_BATCH = latency_kernel.BLOCK_ROWS  # 256 client windows / call
+LAT_WINDOW = latency_kernel.WINDOW  # 64 samples / window
+PARETO_N = 64  # samples / call
+
+
+def route_batch(path_bytes, lengths, n_deployments):
+    """(B,W) u32 bytes + (B,) i32 lens + (1,) i32 n -> ((B,) i32 dep, (B,) u32 hash)."""
+    h = route_hash.fnv1a_hash(path_bytes, lengths)
+    n = jnp.maximum(n_deployments[0], 1).astype(jnp.uint32)
+    dep = (h % n).astype(jnp.int32)
+    return dep, h
+
+
+def latency_control(window, counts, t_straggler, t_thrash):
+    """(B,W) f32 + (B,) i32 + (1,) f32 + (1,) f32 -> (mean, straggler, thrash)."""
+    return latency_kernel.latency_stats(window, counts, t_straggler, t_thrash)
+
+
+def pareto_schedule(u, x_m, alpha):
+    """(N,) f32 uniforms + (1,) f32 scale + (1,) f32 shape -> (N,) f32 throughputs.
+
+    delta_i = x_m * (1 - u_i)^(-1/alpha); u is clamped away from 1 so the
+    tail stays finite in f32.
+    """
+    uc = jnp.clip(u, 0.0, 1.0 - 1e-7)
+    return (x_m[0] * (1.0 - uc) ** (-1.0 / alpha[0]),)
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering (one entry per exported fn)."""
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    s = jax.ShapeDtypeStruct
+    return {
+        "route": (
+            s((ROUTE_BATCH, PATH_WIDTH), u32),
+            s((ROUTE_BATCH,), i32),
+            s((1,), i32),
+        ),
+        "latency": (
+            s((LAT_BATCH, LAT_WINDOW), f32),
+            s((LAT_BATCH,), i32),
+            s((1,), f32),
+            s((1,), f32),
+        ),
+        "pareto": (s((PARETO_N,), f32), s((1,), f32), s((1,), f32)),
+    }
+
+
+EXPORTS = {
+    "route": route_batch,
+    "latency": latency_control,
+    "pareto": pareto_schedule,
+}

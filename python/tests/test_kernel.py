@@ -1,0 +1,132 @@
+"""Kernel-vs-reference correctness for the route-hash Pallas kernel.
+
+This is the CORE correctness signal for L1: the Pallas FNV-1a kernel must be
+bit-identical to (a) the vectorized jnp reference and (b) a scalar python
+FNV-1a over real path strings — the same contract the Rust router fallback
+implements.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, route_hash
+
+B = route_hash.BLOCK_ROWS
+W = route_hash.PATH_WIDTH
+
+
+def pack_paths(paths, width=W):
+    """Encode paths into the kernel's padded (B, width) u32 layout."""
+    n = len(paths)
+    rows = ((n + B - 1) // B) * B
+    data = np.zeros((rows, width), dtype=np.uint32)
+    lens = np.zeros(rows, dtype=np.int32)
+    for i, p in enumerate(paths):
+        raw = p.encode("utf-8")[:width]
+        data[i, : len(raw)] = np.frombuffer(raw, dtype=np.uint8).astype(np.uint32)
+        lens[i] = len(raw)
+    return data, lens
+
+
+def test_kernel_matches_scalar_python():
+    paths = [
+        "/",
+        "/dir",
+        "/dir/note.pdf",
+        "/nts/notes.txt",
+        "/bks/book.pdf",
+        "/a/very/deep/nested/directory/tree/with/many/components",
+        "/foo/bar",
+        "",
+        "x" * W,  # exactly full width
+        "/spotify/user/12345/playlists/2021/summer",
+    ]
+    data, lens = pack_paths(paths)
+    out = np.asarray(route_hash.fnv1a_hash(data, lens))
+    for i, p in enumerate(paths):
+        expect = ref.fnv1a_py(p.encode("utf-8")[:W])
+        assert out[i] == expect, f"path {p!r}: kernel {out[i]:#x} != py {expect:#x}"
+
+
+def test_kernel_matches_jnp_ref_random():
+    rng = np.random.default_rng(7)
+    data = rng.integers(0, 256, size=(B, W), dtype=np.uint32)
+    lens = rng.integers(0, W + 1, size=B).astype(np.int32)
+    out = np.asarray(route_hash.fnv1a_hash(data, lens))
+    expect = np.asarray(ref.fnv1a_ref(data, lens))
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_empty_path_hashes_to_offset_basis():
+    data = np.zeros((B, W), dtype=np.uint32)
+    lens = np.zeros(B, dtype=np.int32)
+    out = np.asarray(route_hash.fnv1a_hash(data, lens))
+    assert (out == np.uint32(ref.FNV_OFFSET)).all()
+
+
+def test_padding_does_not_affect_hash():
+    """Bytes beyond ``len`` must be ignored regardless of their value."""
+    rng = np.random.default_rng(11)
+    data = rng.integers(0, 256, size=(B, W), dtype=np.uint32)
+    lens = rng.integers(0, W, size=B).astype(np.int32)
+    clean = data.copy()
+    for i in range(B):
+        clean[i, lens[i] :] = 0
+    dirty = data.copy()
+    for i in range(B):
+        dirty[i, lens[i] :] = rng.integers(0, 256, size=W - lens[i], dtype=np.uint32)
+    a = np.asarray(route_hash.fnv1a_hash(clean, lens))
+    b = np.asarray(route_hash.fnv1a_hash(dirty, lens))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_multi_block_grid():
+    """Batch spanning several grid blocks routes every row correctly."""
+    rng = np.random.default_rng(13)
+    rows = 4 * B
+    data = rng.integers(0, 256, size=(rows, W), dtype=np.uint32)
+    lens = rng.integers(1, W + 1, size=rows).astype(np.int32)
+    out = np.asarray(route_hash.fnv1a_hash(data, lens))
+    expect = np.asarray(ref.fnv1a_ref(data, lens))
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_rejects_non_multiple_batch():
+    data = np.zeros((B + 1, W), dtype=np.uint32)
+    lens = np.zeros(B + 1, dtype=np.int32)
+    with pytest.raises(ValueError):
+        route_hash.fnv1a_hash(data, lens)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(
+        st.text(
+            alphabet=st.characters(min_codepoint=1, max_codepoint=0x10FFFF,
+                                   blacklist_categories=("Cs",)),
+            min_size=0,
+            max_size=40,
+        ),
+        min_size=1,
+        max_size=32,
+    )
+)
+def test_hypothesis_arbitrary_unicode_paths(paths):
+    """Kernel == scalar python FNV-1a for arbitrary unicode path strings."""
+    data, lens = pack_paths(paths)
+    out = np.asarray(route_hash.fnv1a_hash(data, lens))
+    for i, p in enumerate(paths):
+        expect = ref.fnv1a_py(p.encode("utf-8")[:W])
+        assert out[i] == expect
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**32 - 1), st.integers(min_value=0, max_value=W))
+def test_hypothesis_random_bytes_match_ref(seed, length):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, size=(B, W), dtype=np.uint32)
+    lens = np.full(B, length, dtype=np.int32)
+    out = np.asarray(route_hash.fnv1a_hash(data, lens))
+    expect = np.asarray(ref.fnv1a_ref(data, lens))
+    np.testing.assert_array_equal(out, expect)

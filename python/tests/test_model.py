@@ -1,0 +1,106 @@
+"""L2 model tests: routing contract, pareto schedule, shape manifest."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from tests.test_kernel import pack_paths
+
+
+def test_route_batch_dep_ids():
+    paths = [f"/dir{i}/file{i}.dat" for i in range(model.ROUTE_BATCH)]
+    data, lens = pack_paths(paths)
+    n = np.array([10], dtype=np.int32)
+    dep, h = model.route_batch(data, lens, n)
+    dep, h = np.asarray(dep), np.asarray(h)
+    for i, p in enumerate(paths):
+        expect_h = ref.fnv1a_py(p.encode("utf-8")[: model.PATH_WIDTH])
+        assert h[i] == expect_h
+        assert dep[i] == expect_h % 10
+    assert dep.min() >= 0 and dep.max() < 10
+
+
+def test_route_batch_n_one_is_total_order():
+    """n_deployments=1 routes everything to deployment 0."""
+    paths = [f"/p{i}" for i in range(model.ROUTE_BATCH)]
+    data, lens = pack_paths(paths)
+    dep, _ = model.route_batch(data, lens, np.array([1], dtype=np.int32))
+    assert (np.asarray(dep) == 0).all()
+
+
+def test_route_batch_clamps_n_zero():
+    paths = ["/x"] * model.ROUTE_BATCH
+    data, lens = pack_paths(paths)
+    dep, _ = model.route_batch(data, lens, np.array([0], dtype=np.int32))
+    assert (np.asarray(dep) == 0).all()
+
+
+def test_route_distribution_roughly_uniform():
+    """FNV over distinct parent dirs should spread across deployments."""
+    paths = [f"/user{i}/data" for i in range(4 * model.ROUTE_BATCH)]
+    data, lens = pack_paths(paths)
+    n_dep = 8
+    dep, _ = model.route_batch(data, lens, np.array([n_dep], dtype=np.int32))
+    counts = np.bincount(np.asarray(dep), minlength=n_dep)
+    # 1024 balls into 8 bins: each bin within 3x of fair share.
+    fair = len(paths) / n_dep
+    assert counts.min() > fair / 3 and counts.max() < fair * 3
+
+
+def test_pareto_matches_ref():
+    rng = np.random.default_rng(5)
+    u = rng.uniform(0, 1, size=model.PARETO_N).astype(np.float32)
+    out = np.asarray(
+        model.pareto_schedule(
+            u, np.array([25_000.0], dtype=np.float32), np.array([2.0], dtype=np.float32)
+        )[0]
+    )
+    expect = ref.pareto_ref(u, 25_000.0, 2.0)
+    np.testing.assert_allclose(out, expect, rtol=1e-5)
+
+
+def test_pareto_min_is_scale():
+    """Pareto support is [x_m, inf): u=0 gives exactly x_m."""
+    u = np.zeros(model.PARETO_N, dtype=np.float32)
+    out = np.asarray(
+        model.pareto_schedule(
+            u, np.array([50_000.0], dtype=np.float32), np.array([2.0], dtype=np.float32)
+        )[0]
+    )
+    np.testing.assert_allclose(out, 50_000.0, rtol=1e-6)
+
+
+def test_pareto_u_near_one_is_finite():
+    u = np.full(model.PARETO_N, 1.0, dtype=np.float32)
+    out = np.asarray(
+        model.pareto_schedule(
+            u, np.array([25_000.0], dtype=np.float32), np.array([2.0], dtype=np.float32)
+        )[0]
+    )
+    assert np.isfinite(out).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.floats(min_value=1_000.0, max_value=100_000.0),
+    st.floats(min_value=1.1, max_value=4.0),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_pareto(x_m, alpha, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.uniform(0, 0.999, size=model.PARETO_N).astype(np.float32)
+    out = np.asarray(
+        model.pareto_schedule(
+            u, np.array([x_m], dtype=np.float32), np.array([alpha], dtype=np.float32)
+        )[0]
+    )
+    expect = ref.pareto_ref(u, x_m, alpha)
+    np.testing.assert_allclose(out, expect, rtol=2e-4)
+    assert (out >= x_m * 0.999).all()
+
+
+def test_example_args_cover_exports():
+    args = model.example_args()
+    assert set(args) == set(model.EXPORTS)

@@ -1,0 +1,15 @@
+//! Bench: regenerate Figure 8 (a/b/c) — Spotify workload throughput,
+//! NameNode count, performance-per-cost across all systems.
+use lambda_fs::figures::{fig08, Scale};
+use lambda_fs::metrics::BenchTimer;
+
+fn main() {
+    let scale = Scale::from_env();
+    eprintln!("fig08: scale {:?} (LAMBDAFS_SCALE=1.0 for paper scale)", scale);
+    let (fig_a, ms_a) = BenchTimer::time(|| fig08::run(scale, 25_000.0));
+    fig_a.report("25k");
+    println!("  [bench] fig8a wall time: {ms_a:.0} ms");
+    let (fig_b, ms_b) = BenchTimer::time(|| fig08::run(scale, 50_000.0));
+    fig_b.report("50k");
+    println!("  [bench] fig8b wall time: {ms_b:.0} ms");
+}

@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 9 — cumulative cost of the 25k Spotify
+//! workload under pay-per-use / simplified / serverful billing.
+use lambda_fs::figures::{fig09, Scale};
+use lambda_fs::metrics::BenchTimer;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (fig, ms) = BenchTimer::time(|| fig09::run(scale));
+    fig.report();
+    println!("  [bench] wall time: {ms:.0} ms");
+}

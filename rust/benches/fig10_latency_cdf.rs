@@ -1,0 +1,14 @@
+//! Bench: regenerate Figure 10 — read/write latency CDFs on both Spotify
+//! workload variants.
+use lambda_fs::figures::{fig10, Scale};
+use lambda_fs::metrics::BenchTimer;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (a, ms_a) = BenchTimer::time(|| fig10::run(scale, 25_000.0));
+    a.report();
+    println!("  [bench] 25k wall time: {ms_a:.0} ms");
+    let (b, ms_b) = BenchTimer::time(|| fig10::run(scale, 50_000.0));
+    b.report();
+    println!("  [bench] 50k wall time: {ms_b:.0} ms");
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Figure 11 — client-driven scaling for read / stat /
+//! ls / create / mkdir across the five systems.
+use lambda_fs::figures::{fig11, Scale};
+use lambda_fs::metrics::BenchTimer;
+use lambda_fs::namespace::OpKind;
+
+fn main() {
+    let scale = Scale::from_env();
+    for op in [OpKind::Read, OpKind::Stat, OpKind::Ls, OpKind::Create, OpKind::Mkdir] {
+        let (fig, ms) = BenchTimer::time(|| fig11::run(scale, op));
+        fig.report();
+        println!("  [bench] {} wall time: {ms:.0} ms", op.name());
+    }
+}

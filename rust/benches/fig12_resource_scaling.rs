@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 12 — resource scaling (16..512 vCPU).
+use lambda_fs::figures::{fig12, Scale};
+use lambda_fs::metrics::BenchTimer;
+use lambda_fs::namespace::OpKind;
+
+fn main() {
+    let scale = Scale::from_env();
+    for op in [OpKind::Read, OpKind::Stat, OpKind::Ls, OpKind::Create, OpKind::Mkdir] {
+        let (fig, ms) = BenchTimer::time(|| fig12::run(scale, op));
+        fig.report();
+        println!("  [bench] {} wall time: {ms:.0} ms", op.name());
+    }
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 13 — performance-per-cost for read-class ops.
+use lambda_fs::figures::{fig13, Scale};
+use lambda_fs::metrics::BenchTimer;
+use lambda_fs::namespace::OpKind;
+
+fn main() {
+    let scale = Scale::from_env();
+    for op in [OpKind::Read, OpKind::Stat, OpKind::Ls] {
+        let (fig, ms) = BenchTimer::time(|| fig13::run(scale, op));
+        fig.report();
+        println!("  [bench] {} wall time: {ms:.0} ms", op.name());
+    }
+}

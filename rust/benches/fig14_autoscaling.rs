@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 14 — the auto-scaling ablation
+//! (enabled / limited / disabled).
+use lambda_fs::figures::{fig14, Scale};
+use lambda_fs::metrics::BenchTimer;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (fig, ms) = BenchTimer::time(|| fig14::run(scale));
+    fig.report();
+    println!("  [bench] wall time: {ms:.0} ms");
+}

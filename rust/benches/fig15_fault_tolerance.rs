@@ -1,0 +1,11 @@
+//! Bench: regenerate Figure 15 — fault tolerance under the Spotify
+//! workload with periodic NameNode kills.
+use lambda_fs::figures::{fig15, Scale};
+use lambda_fs::metrics::BenchTimer;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (fig, ms) = BenchTimer::time(|| fig15::run(scale));
+    fig.report();
+    println!("  [bench] wall time: {ms:.0} ms");
+}

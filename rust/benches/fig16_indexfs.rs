@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 16 — λIndexFS vs IndexFS tree-test scaling.
+use lambda_fs::figures::{fig16, Scale};
+use lambda_fs::metrics::BenchTimer;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (fig, ms) = BenchTimer::time(|| fig16::run(scale));
+    fig.report();
+    println!("  [bench] wall time: {ms:.0} ms");
+}

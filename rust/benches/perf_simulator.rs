@@ -1,0 +1,135 @@
+//! Bench: simulator-throughput microbenchmarks (the §Perf hot paths).
+//!
+//! Reports simulated-metadata-ops per wall-second for the λFS submit path
+//! and the component hot spots (router, cache, store, event queue) so the
+//! performance pass has a stable baseline to iterate against.
+
+use lambda_fs::cache::interned::InternedCache;
+use lambda_fs::config::SystemConfig;
+use lambda_fs::metrics::BenchTimer;
+use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
+use lambda_fs::namespace::{DirId, InodeRef};
+use lambda_fs::sim::queue::EventQueue;
+use lambda_fs::store::NdbStore;
+use lambda_fs::systems::{driver, LambdaFs};
+use lambda_fs::util::fnv;
+use lambda_fs::util::rng::Rng;
+use lambda_fs::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
+
+fn main() {
+    let mut cfg = SystemConfig::default();
+    cfg.lambda_fs.n_deployments = 16;
+    let mut rng = Rng::new(cfg.seed);
+    let ns = generate(
+        &NamespaceParams { n_dirs: 4096, files_per_dir: 64, ..Default::default() },
+        &mut rng,
+    );
+    let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+
+    // End-to-end λFS submit path.
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(20, 20_000.0),
+        mix: OpMix::spotify(),
+        n_clients: 512,
+        n_vms: 8,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+    let n_ops = spec.schedule.total_ops();
+    let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+    let mut r = rng.fork("e2e");
+    let (_, ms) = BenchTimer::time(|| {
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+    });
+    let rate = n_ops / (ms / 1000.0);
+    println!("lambdafs submit path : {n_ops:.0} ops in {ms:.0} ms = {rate:.0} sim-ops/s");
+
+    // Router.
+    let router = lambda_fs::client::Router::build(&ns, 16);
+    let inodes: Vec<InodeRef> = (0..100_000).map(|_| sampler.inode(&ns, &mut rng)).collect();
+    let (sum, ms) = BenchTimer::time(|| {
+        let mut acc = 0u64;
+        for _ in 0..10 {
+            for &i in &inodes {
+                acc += router.route(&ns, i) as u64;
+            }
+        }
+        acc
+    });
+    println!(
+        "router.route         : 1M lookups in {ms:.1} ms = {:.1} M/s (sum {sum})",
+        1.0 / (ms / 1000.0)
+    );
+
+    // Raw FNV (the kernel contract).
+    let paths: Vec<&str> = ns.dirs.iter().map(|d| d.path.as_str()).collect();
+    let (sum, ms) = BenchTimer::time(|| {
+        let mut acc = 0u64;
+        for _ in 0..250 {
+            for p in &paths {
+                acc += fnv::route(p, 16) as u64;
+            }
+        }
+        acc
+    });
+    let n = 250.0 * paths.len() as f64;
+    println!(
+        "fnv::route           : {n:.0} hashes in {ms:.1} ms = {:.1} M/s (sum {sum})",
+        n / ms / 1000.0
+    );
+
+    // Cache.
+    let mut cache = InternedCache::new(1_000_000);
+    let (hits, ms) = BenchTimer::time(|| {
+        let mut h = 0u64;
+        for _ in 0..5 {
+            for &i in &inodes {
+                if cache.contains(i) {
+                    h += 1;
+                } else {
+                    cache.insert_version(i, 1);
+                }
+            }
+        }
+        h
+    });
+    println!(
+        "interned cache       : 500k ops in {ms:.1} ms = {:.1} M/s ({hits} hits)",
+        0.5 / (ms / 1000.0)
+    );
+
+    // Store.
+    let mut store = NdbStore::new(cfg.store.clone());
+    let mut r = rng.fork("store");
+    let (last, ms) = BenchTimer::time(|| {
+        let mut t = 0;
+        for i in 0..200_000u32 {
+            t = store.read_batch(t, 4, &mut r);
+            if i % 16 == 0 {
+                t = store.write_txn(t, &[InodeRef::file(DirId(i % 512), i)], false, &mut r);
+            }
+        }
+        t
+    });
+    println!(
+        "ndb store            : 212.5k txns in {ms:.1} ms = {:.2} M/s (t={last})",
+        0.2125 / (ms / 1000.0)
+    );
+
+    // Event queue.
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let (processed, ms) = BenchTimer::time(|| {
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            for i in 0..100_000u64 {
+                q.schedule_in(rng.below(1000), i);
+            }
+            while q.pop().is_some() {}
+        }
+        q.processed()
+    });
+    println!(
+        "event queue          : 1M sched+pop in {ms:.1} ms = {:.1} M/s ({processed} events)",
+        1.0 / (ms / 1000.0)
+    );
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Table 3 — subtree mv latency, λFS vs HopsFS.
+use lambda_fs::figures::{table3, Scale};
+use lambda_fs::metrics::BenchTimer;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (t, ms) = BenchTimer::time(|| table3::run(scale));
+    t.report();
+    println!("  [bench] wall time: {ms:.0} ms");
+}

@@ -1,0 +1,232 @@
+//! InfiniCache-style baseline (§5.1).
+//!
+//! InfiniCache exploits serverless function memory as an object cache but
+//! uses "a static, fixed-size deployment of cloud functions to serve I/O
+//! operations via short TCP connections that require invoking functions
+//! for every operation" — i.e. every metadata op pays the full HTTP
+//! invocation path and the fleet never scales. Under the Spotify
+//! workloads the gateway is overwhelmed and the system fails to keep up.
+
+use crate::cache::interned::InternedCache;
+use crate::config::{AutoScaleMode, SystemConfig};
+use crate::coordinator::ServiceModel;
+use crate::faas::{InstanceId, Platform};
+use crate::metrics::{CostModel, RunMetrics};
+use crate::namespace::{Namespace, Operation};
+use crate::rpc::NetModel;
+use crate::sim::{time, Time};
+use crate::store::NdbStore;
+use crate::systems::MdsSim;
+use crate::util::rng::Rng;
+
+/// InfiniCache pressed into MDS service.
+pub struct InfiniCacheMds {
+    cfg: SystemConfig,
+    ns: Namespace,
+    platform: Platform,
+    caches: Vec<InternedCache>,
+    store: NdbStore,
+    net: NetModel,
+    svc: ServiceModel,
+    metrics: RunMetrics,
+    cost: CostModel,
+    rng: Rng,
+    billed_gb_s: f64,
+    billed_requests: u64,
+}
+
+impl InfiniCacheMds {
+    /// `fleet_size` fixed function instances (one per "deployment" —
+    /// InfiniCache shards objects across its static fleet).
+    pub fn new(mut cfg: SystemConfig, ns: Namespace, fleet_size: u32) -> Self {
+        cfg.lambda_fs.n_deployments = fleet_size;
+        cfg.lambda_fs.autoscale = AutoScaleMode::Disabled; // static fleet
+        // Every metadata op is a function invocation: the OpenWhisk
+        // controller/invoker path (not the NameNode fleet) is the choke
+        // point — a few dozen concurrent invocation slots.
+        cfg.faas.gateway_capacity = 24;
+        let mut platform = Platform::new(cfg.faas.clone(), cfg.lambda_fs.clone());
+        let mut rng = Rng::new(cfg.seed ^ 0x1f1c);
+        // Pre-provision the fixed fleet.
+        let mut caches = Vec::new();
+        for dep in 0..fleet_size {
+            let (id, ready) = platform.force_spawn(dep, 0, &mut rng);
+            platform.settle(ready);
+            while caches.len() <= id.0 as usize {
+                caches.push(InternedCache::new(cfg.lambda_fs.cache_capacity));
+            }
+        }
+        platform.settle(u64::MAX / 2);
+        let store = NdbStore::new(cfg.store.clone());
+        let net = NetModel::new(cfg.net.clone());
+        let svc = ServiceModel::new(cfg.op.clone());
+        let cost = CostModel::new(cfg.cost.clone());
+        InfiniCacheMds {
+            cfg,
+            ns,
+            platform,
+            caches,
+            store,
+            net,
+            svc,
+            metrics: RunMetrics::new(),
+            cost,
+            rng,
+            billed_gb_s: 0.0,
+            billed_requests: 0,
+        }
+    }
+
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    fn ensure_cache(&mut self, idx: usize) {
+        while self.caches.len() <= idx {
+            self.caches.push(InternedCache::new(self.cfg.lambda_fs.cache_capacity));
+        }
+    }
+}
+
+impl MdsSim for InfiniCacheMds {
+    fn submit(&mut self, now: Time, _client: u32, op: &Operation, rng: &mut Rng) -> Time {
+        let mut local_rng = Rng::new(self.rng.next_u64());
+        let dep = crate::util::fnv::route(
+            self.ns.parent_path(op.target),
+            self.cfg.lambda_fs.n_deployments,
+        );
+
+        // EVERY operation is an HTTP invocation + short-lived TCP:
+        // gateway queueing + invocation leg + per-op connection setup.
+        let gw_done = self.platform.gateway_admit(now, rng);
+        let leg = self.net.http_leg(rng);
+        let (inst, ready) = self.platform.place_http(dep, now, rng);
+        self.ensure_cache(inst.0 as usize);
+        let arrive = ready.max(gw_done + leg) + self.net.tcp_connect(rng);
+
+        let hit = self.caches[inst.0 as usize].get(op.target).is_some();
+        let cpu = self.svc.cache_hit(op.kind, &mut local_rng);
+        let (_, cpu_done) = self.platform.instance_mut(inst).cpu.submit(arrive, cpu);
+        let served = if op.kind.is_write() {
+            let commit = self.store.write_txn(cpu_done, &[op.target], false, &mut local_rng);
+            self.caches[inst.0 as usize].invalidate(op.target);
+            commit
+        } else if hit {
+            cpu_done
+        } else {
+            let depth = self.ns.resolution_depth(op.target);
+            let done = self.store.read_batch(cpu_done, depth, &mut local_rng);
+            let v = self.store.version(op.target);
+            self.caches[inst.0 as usize].insert_version(op.target, v);
+            done
+        };
+        self.platform.instance_mut(inst).bill(arrive, served);
+        served + self.net.tcp_hop(rng)
+    }
+
+    fn on_second(&mut self, second: usize) {
+        let now = (second as Time + 1) * time::SEC;
+        self.platform.settle(now);
+        let gb_s = self.platform.busy_gb_seconds(now);
+        let reqs = self.platform.total_requests();
+        let delta_gb = (gb_s - self.billed_gb_s).max(0.0);
+        let delta_req = reqs.saturating_sub(self.billed_requests);
+        self.billed_gb_s = gb_s;
+        self.billed_requests = reqs;
+        let sample = self.cost.pay_per_use(delta_gb, delta_req);
+        let s = self.metrics.second_mut(second);
+        s.namenodes = self.platform.live_instances() as u32;
+        s.vcpus = self.platform.vcpus_in_use();
+        s.cost_usd = sample.usd;
+        s.cost_simplified_usd = sample.usd;
+        let _ = InstanceId(0);
+    }
+
+    fn metrics_mut(&mut self) -> &mut RunMetrics {
+        &mut self.metrics
+    }
+
+    fn into_metrics(self) -> RunMetrics {
+        self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::generate::{generate, HotspotSampler, NamespaceParams};
+    use crate::systems::driver;
+    use crate::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
+
+    fn fixtures() -> (SystemConfig, Namespace, HotspotSampler, Rng) {
+        let cfg = SystemConfig::default();
+        let mut rng = Rng::new(cfg.seed);
+        let ns = generate(
+            &NamespaceParams { n_dirs: 256, files_per_dir: 32, ..Default::default() },
+            &mut rng,
+        );
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        (cfg, ns, sampler, rng)
+    }
+
+    #[test]
+    fn fleet_is_static() {
+        let (cfg, ns, sampler, mut rng) = fixtures();
+        let mut sys = InfiniCacheMds::new(cfg, ns.clone(), 8);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(5, 500.0),
+            mix: OpMix::spotify(),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        assert_eq!(sys.platform().live_instances(), 8, "never scales");
+    }
+
+    #[test]
+    fn latency_dominated_by_http_path() {
+        let (cfg, ns, sampler, mut rng) = fixtures();
+        let mut sys = InfiniCacheMds::new(cfg, ns.clone(), 8);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(5, 200.0),
+            mix: OpMix::spotify(),
+            n_clients: 32,
+            n_vms: 1,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        let m = sys.into_metrics();
+        assert!(
+            m.avg_read_latency_ms() > 8.0,
+            "every op pays HTTP: {}ms",
+            m.avg_read_latency_ms()
+        );
+    }
+
+    #[test]
+    fn collapses_under_spotify_scale_load() {
+        // Scaled-down Spotify: the static fleet + per-op HTTP cannot keep
+        // up; per-second completions fall far below target.
+        let (cfg, ns, sampler, mut rng) = fixtures();
+        let mut sys = InfiniCacheMds::new(cfg, ns.clone(), 8);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(10, 5_000.0),
+            mix: OpMix::spotify(),
+            n_clients: 128,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        let m = sys.into_metrics();
+        let mid = &m.seconds[5.min(m.seconds.len() - 1)];
+        assert!(
+            (mid.completed as f64) < 0.8 * 5_000.0,
+            "cannot sustain target: {} of 5000",
+            mid.completed
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Baseline systems the paper evaluates λFS against (§5.1).
+//!
+//! * [`hopsfs`] — HopsFS: stateless serverful NameNodes proxying every
+//!   metadata op to NDB; optional per-NameNode cache (HopsFS+Cache) with
+//!   client-side consistent-hash routing.
+//! * [`infinicache`] — an InfiniCache-style FaaS object cache pressed into
+//!   MDS service: fixed-size function deployment, every op over HTTP.
+//! * [`cephfs`] — a CephFS-approximation: a dedicated MDS cluster with
+//!   capability-based writes; strong at small scale, flat beyond it.
+//! * [`indexfs`] — IndexFS on BeeGFS (tree-test workloads) and λIndexFS,
+//!   the λFS port that replaces its in-memory path with serverless
+//!   functions over LevelDB (§5.7).
+
+pub mod cephfs;
+pub mod hopsfs;
+pub mod indexfs;
+pub mod infinicache;
+
+pub use cephfs::CephFs;
+pub use hopsfs::HopsFs;
+pub use indexfs::{IndexFs, LambdaIndexFs};
+pub use infinicache::InfiniCacheMds;

@@ -1,0 +1,361 @@
+//! The simulator's interned metadata cache: exact LRU over
+//! [`InodeRef`](crate::namespace::InodeRef) keys, with per-directory
+//! indexing so subtree (prefix) invalidations never scan the whole cache.
+//!
+//! Semantics match [`super::trie::PathTrie`] (property-checked in
+//! `rust/tests/cache_equivalence.rs`); this version avoids all string work
+//! and is the structure on the simulation hot path.
+
+use std::collections::HashMap;
+
+use crate::namespace::{DirId, InodeRef, Namespace};
+
+use super::CacheStats;
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Debug)]
+struct Slot {
+    inode: InodeRef,
+    /// Cached metadata version (mirrors the store's row version at fill
+    /// time; the coherence invariant test asserts freshness with this).
+    version: u64,
+    prev: u32,
+    next: u32,
+    live: bool,
+}
+
+/// Exact-LRU interned cache.
+#[derive(Clone, Debug)]
+pub struct InternedCache {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    /// inode -> slot
+    index: HashMap<InodeRef, u32>,
+    /// dir -> slots whose inode lives in that dir (lazily compacted).
+    by_dir: HashMap<DirId, Vec<u32>>,
+    /// LRU list head (most recent) and tail (least recent).
+    head: u32,
+    tail: u32,
+    capacity: usize,
+    len: usize,
+    stats: CacheStats,
+}
+
+impl InternedCache {
+    pub fn new(capacity: usize) -> Self {
+        InternedCache {
+            slots: Vec::new(),
+            free: Vec::new(),
+            index: HashMap::new(),
+            by_dir: HashMap::new(),
+            head: NIL,
+            tail: NIL,
+            capacity: capacity.max(1),
+            len: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    fn unlink(&mut self, s: u32) {
+        let (p, n) = (self.slots[s as usize].prev, self.slots[s as usize].next);
+        if p != NIL {
+            self.slots[p as usize].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.slots[n as usize].prev = p;
+        } else {
+            self.tail = p;
+        }
+    }
+
+    fn push_front(&mut self, s: u32) {
+        self.slots[s as usize].prev = NIL;
+        self.slots[s as usize].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head as usize].prev = s;
+        }
+        self.head = s;
+        if self.tail == NIL {
+            self.tail = s;
+        }
+    }
+
+    /// Lookup; counts hit/miss and refreshes recency on hit. Returns the
+    /// cached version on a hit.
+    pub fn get(&mut self, inode: InodeRef) -> Option<u64> {
+        if let Some(&s) = self.index.get(&inode) {
+            let v = self.slots[s as usize].version;
+            self.unlink(s);
+            self.push_front(s);
+            self.stats.hits += 1;
+            Some(v)
+        } else {
+            self.stats.misses += 1;
+            None
+        }
+    }
+
+    /// Lookup; counts hit/miss and refreshes recency on hit.
+    pub fn contains(&mut self, inode: InodeRef) -> bool {
+        self.get(inode).is_some()
+    }
+
+    /// Non-counting peek.
+    pub fn peek(&self, inode: InodeRef) -> bool {
+        self.index.contains_key(&inode)
+    }
+
+    /// Non-counting version peek.
+    pub fn peek_version(&self, inode: InodeRef) -> Option<u64> {
+        self.index.get(&inode).map(|&s| self.slots[s as usize].version)
+    }
+
+    /// Insert after a miss fill. Evicts the LRU entry at capacity.
+    pub fn insert(&mut self, inode: InodeRef) {
+        self.insert_version(inode, 0)
+    }
+
+    /// Insert with an explicit cached version.
+    pub fn insert_version(&mut self, inode: InodeRef, version: u64) {
+        if let Some(&s) = self.index.get(&inode) {
+            self.slots[s as usize].version = version;
+            self.unlink(s);
+            self.push_front(s);
+            self.stats.insertions += 1;
+            return;
+        }
+        if self.len >= self.capacity {
+            self.evict_lru();
+        }
+        let s = match self.free.pop() {
+            Some(s) => {
+                self.slots[s as usize] = Slot { inode, version, prev: NIL, next: NIL, live: true };
+                s
+            }
+            None => {
+                self.slots.push(Slot { inode, version, prev: NIL, next: NIL, live: true });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.index.insert(inode, s);
+        self.by_dir.entry(inode.dir).or_default().push(s);
+        self.push_front(s);
+        self.len += 1;
+        self.stats.insertions += 1;
+    }
+
+    fn remove_slot(&mut self, s: u32) {
+        let inode = self.slots[s as usize].inode;
+        self.unlink(s);
+        self.slots[s as usize].live = false;
+        self.index.remove(&inode);
+        self.free.push(s);
+        self.len -= 1;
+        // by_dir entry cleaned lazily in invalidate_dir.
+    }
+
+    fn evict_lru(&mut self) {
+        let t = self.tail;
+        if t != NIL {
+            self.remove_slot(t);
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Invalidate one exact INode. Returns whether it was cached.
+    pub fn invalidate(&mut self, inode: InodeRef) -> bool {
+        if let Some(&s) = self.index.get(&inode) {
+            self.remove_slot(s);
+            self.stats.invalidations += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Invalidate every cached INode residing in directory `dir`
+    /// (the directory INode itself and its files).
+    pub fn invalidate_dir(&mut self, dir: DirId) -> usize {
+        let Some(slots) = self.by_dir.remove(&dir) else { return 0 };
+        let mut dropped = 0;
+        for s in slots {
+            let slot = &self.slots[s as usize];
+            if slot.live && slot.inode.dir == dir {
+                self.remove_slot(s);
+                dropped += 1;
+            }
+        }
+        self.stats.invalidations += dropped as u64;
+        dropped
+    }
+
+    /// Subtree (prefix) invalidation over the namespace topology: drop all
+    /// cached INodes in any directory under `root` (inclusive). This is the
+    /// interned equivalent of `PathTrie::invalidate_prefix` (Appendix C).
+    pub fn invalidate_subtree(&mut self, ns: &Namespace, root: DirId) -> usize {
+        let mut dropped = 0;
+        for d in ns.subtree_dirs(root) {
+            dropped += self.invalidate_dir(d);
+        }
+        dropped
+    }
+
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.free.clear();
+        self.index.clear();
+        self.by_dir.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::{DirInfo, Namespace};
+
+    fn inode(d: u32, f: Option<u32>) -> InodeRef {
+        InodeRef { dir: DirId(d), file: f }
+    }
+
+    fn tiny_ns() -> Namespace {
+        // 0:/ -> 1:/a -> 2:/a/b ; 3:/c
+        Namespace::new(vec![
+            DirInfo { id: DirId(0), parent: None, path: "/".into(), depth: 0, children: vec![DirId(1), DirId(3)], files: 0 },
+            DirInfo { id: DirId(1), parent: Some(DirId(0)), path: "/a".into(), depth: 1, children: vec![DirId(2)], files: 2 },
+            DirInfo { id: DirId(2), parent: Some(DirId(1)), path: "/a/b".into(), depth: 2, children: vec![], files: 2 },
+            DirInfo { id: DirId(3), parent: Some(DirId(0)), path: "/c".into(), depth: 1, children: vec![], files: 1 },
+        ])
+    }
+
+    #[test]
+    fn insert_contains() {
+        let mut c = InternedCache::new(8);
+        assert!(!c.contains(inode(1, Some(0))));
+        c.insert(inode(1, Some(0)));
+        assert!(c.contains(inode(1, Some(0))));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = InternedCache::new(2);
+        c.insert(inode(1, Some(0)));
+        c.insert(inode(1, Some(1)));
+        c.contains(inode(1, Some(0))); // refresh 0
+        c.insert(inode(2, Some(0))); // evicts (1,1)
+        assert!(c.peek(inode(1, Some(0))));
+        assert!(!c.peek(inode(1, Some(1))));
+        assert!(c.peek(inode(2, Some(0))));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn reinsert_refreshes_not_grows() {
+        let mut c = InternedCache::new(4);
+        c.insert(inode(1, None));
+        c.insert(inode(1, None));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn invalidate_exact() {
+        let mut c = InternedCache::new(4);
+        c.insert(inode(1, Some(0)));
+        assert!(c.invalidate(inode(1, Some(0))));
+        assert!(!c.invalidate(inode(1, Some(0))));
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn invalidate_dir_drops_dir_and_files() {
+        let mut c = InternedCache::new(16);
+        c.insert(inode(1, None));
+        c.insert(inode(1, Some(0)));
+        c.insert(inode(1, Some(1)));
+        c.insert(inode(2, Some(0)));
+        assert_eq!(c.invalidate_dir(DirId(1)), 3);
+        assert!(!c.peek(inode(1, None)));
+        assert!(c.peek(inode(2, Some(0))), "other dir untouched");
+    }
+
+    #[test]
+    fn invalidate_subtree_uses_topology() {
+        let ns = tiny_ns();
+        let mut c = InternedCache::new(16);
+        c.insert(inode(1, None)); // /a
+        c.insert(inode(1, Some(0))); // /a file
+        c.insert(inode(2, Some(1))); // /a/b file
+        c.insert(inode(3, Some(0))); // /c file
+        let dropped = c.invalidate_subtree(&ns, DirId(1));
+        assert_eq!(dropped, 3);
+        assert!(c.peek(inode(3, Some(0))), "sibling subtree untouched");
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn eviction_then_reuse_slot_consistent() {
+        let mut c = InternedCache::new(1);
+        for i in 0..100 {
+            c.insert(inode(1, Some(i)));
+            assert_eq!(c.len(), 1);
+        }
+        assert!(c.peek(inode(1, Some(99))));
+        assert_eq!(c.stats().evictions, 99);
+    }
+
+    #[test]
+    fn stale_by_dir_entries_are_harmless() {
+        // Insert, evict via capacity, then invalidate_dir must not
+        // double-free the stale slot reference.
+        let mut c = InternedCache::new(1);
+        c.insert(inode(1, Some(0)));
+        c.insert(inode(2, Some(0))); // evicts (1,0); by_dir[1] has stale slot
+        assert_eq!(c.invalidate_dir(DirId(1)), 0);
+        assert!(c.peek(inode(2, Some(0))));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn versions_tracked() {
+        let mut c = InternedCache::new(4);
+        c.insert_version(inode(1, Some(0)), 7);
+        assert_eq!(c.get(inode(1, Some(0))), Some(7));
+        assert_eq!(c.peek_version(inode(1, Some(0))), Some(7));
+        c.insert_version(inode(1, Some(0)), 9);
+        assert_eq!(c.get(inode(1, Some(0))), Some(9), "overwrite updates version");
+        assert_eq!(c.get(inode(2, None)), None);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = InternedCache::new(8);
+        c.insert(inode(1, Some(0)));
+        c.clear();
+        assert!(c.is_empty());
+        assert!(!c.peek(inode(1, Some(0))));
+    }
+}

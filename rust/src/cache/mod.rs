@@ -1,0 +1,52 @@
+//! The serverless metadata cache (§3.3).
+//!
+//! λFS NameNodes retain metadata across invocations, forming an elastic
+//! cache in front of the persistent store. Cached metadata is held in a
+//! trie keyed by path components so that subtree ("prefix") invalidations
+//! (Appendix C) touch exactly the affected region.
+//!
+//! Two implementations with identical semantics:
+//!
+//! * [`trie::PathTrie`] — string-component trie; the public-API cache used
+//!   by the live server and examples.
+//! * [`interned::InternedCache`] — the simulator's fast path over interned
+//!   [`DirId`](crate::namespace::DirId)s; avoids all string work.
+//!
+//! `rust/tests/cache_equivalence.rs` property-checks the two against each
+//! other on random operation sequences.
+
+pub mod interned;
+pub mod trie;
+
+/// Cache statistics — hit ratio is the paper's key cache observable.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub invalidations: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_ratio() {
+        let s = CacheStats { hits: 3, misses: 1, ..Default::default() };
+        assert!((s.hit_ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,295 @@
+//! String-keyed path trie with prefix invalidation and LRU capacity.
+//!
+//! This is the in-memory structure the paper describes for the NameNode
+//! cache: "Cached metadata is stored in a *trie* data structure" (§3.3),
+//! which makes subtree invalidation a single prefix walk (Appendix C).
+
+use std::collections::HashMap;
+
+use super::CacheStats;
+
+/// One trie node: children by component + optionally a cached value.
+#[derive(Debug)]
+struct Node<V> {
+    children: HashMap<String, usize>,
+    value: Option<V>,
+    /// LRU tick of the value (0 = none).
+    touched: u64,
+}
+
+impl<V> Node<V> {
+    fn new() -> Self {
+        Node { children: HashMap::new(), value: None, touched: 0 }
+    }
+}
+
+/// Path-component trie cache with LRU eviction.
+#[derive(Debug)]
+pub struct PathTrie<V> {
+    nodes: Vec<Node<V>>,
+    capacity: usize,
+    len: usize,
+    tick: u64,
+    stats: CacheStats,
+}
+
+fn components(path: &str) -> impl Iterator<Item = &str> {
+    path.split('/').filter(|c| !c.is_empty())
+}
+
+impl<V> PathTrie<V> {
+    /// `capacity` = max cached values (not trie nodes).
+    pub fn new(capacity: usize) -> Self {
+        PathTrie {
+            nodes: vec![Node::new()],
+            capacity: capacity.max(1),
+            len: 0,
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    fn find(&self, path: &str) -> Option<usize> {
+        let mut at = 0usize;
+        for comp in components(path) {
+            at = *self.nodes[at].children.get(comp)?;
+        }
+        Some(at)
+    }
+
+    fn find_or_create(&mut self, path: &str) -> usize {
+        let mut at = 0usize;
+        for comp in components(path) {
+            if let Some(&next) = self.nodes[at].children.get(comp) {
+                at = next;
+            } else {
+                let id = self.nodes.len();
+                self.nodes.push(Node::new());
+                self.nodes[at].children.insert(comp.to_string(), id);
+                at = id;
+            }
+        }
+        at
+    }
+
+    /// Cache lookup; counts a hit or miss and refreshes LRU order.
+    pub fn get(&mut self, path: &str) -> Option<&V> {
+        match self.find(path) {
+            Some(idx) if self.nodes[idx].value.is_some() => {
+                self.tick += 1;
+                self.nodes[idx].touched = self.tick;
+                self.stats.hits += 1;
+                self.nodes[idx].value.as_ref()
+            }
+            _ => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Non-counting peek (tests, invariant checks).
+    pub fn peek(&self, path: &str) -> Option<&V> {
+        self.find(path).and_then(|i| self.nodes[i].value.as_ref())
+    }
+
+    /// Insert (on cache miss fill or after a read-through). Evicts the
+    /// least-recently-used value when at capacity.
+    pub fn insert(&mut self, path: &str, value: V) {
+        let idx = self.find_or_create(path);
+        self.tick += 1;
+        if self.nodes[idx].value.is_none() {
+            if self.len >= self.capacity {
+                self.evict_lru();
+            }
+            self.len += 1;
+        }
+        self.nodes[idx].value = Some(value);
+        self.nodes[idx].touched = self.tick;
+        self.stats.insertions += 1;
+    }
+
+    fn evict_lru(&mut self) {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.value.is_some() {
+                match best {
+                    Some((_, t)) if n.touched >= t => {}
+                    _ => best = Some((i, n.touched)),
+                }
+            }
+        }
+        if let Some((i, _)) = best {
+            self.nodes[i].value = None;
+            self.len -= 1;
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Invalidate a single exact path. Returns whether a value was present
+    /// (the NameNode ACKs an INV regardless — see coherence protocol).
+    pub fn invalidate(&mut self, path: &str) -> bool {
+        if let Some(idx) = self.find(path) {
+            if self.nodes[idx].value.take().is_some() {
+                self.len -= 1;
+                self.stats.invalidations += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Prefix (subtree) invalidation: drop every cached value at or under
+    /// `prefix`. Returns the number of values dropped. This is Appendix
+    /// C's *subtree invalidation* — one message invalidates a whole cached
+    /// subtree via the trie structure.
+    pub fn invalidate_prefix(&mut self, prefix: &str) -> usize {
+        let Some(root) = self.find(prefix) else { return 0 };
+        let mut dropped = 0;
+        let mut stack = vec![root];
+        while let Some(at) = stack.pop() {
+            if self.nodes[at].value.take().is_some() {
+                self.len -= 1;
+                dropped += 1;
+            }
+            stack.extend(self.nodes[at].children.values().copied());
+        }
+        self.stats.invalidations += dropped as u64;
+        dropped
+    }
+
+    /// Drop everything (NameNode restart).
+    pub fn clear(&mut self) {
+        self.nodes = vec![Node::new()];
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut t = PathTrie::new(16);
+        t.insert("/a/b/c.txt", 1);
+        assert_eq!(t.get("/a/b/c.txt"), Some(&1));
+        assert_eq!(t.get("/a/b"), None);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.stats().hits, 1);
+        assert_eq!(t.stats().misses, 1);
+    }
+
+    #[test]
+    fn overwrite_does_not_grow() {
+        let mut t = PathTrie::new(16);
+        t.insert("/x", 1);
+        t.insert("/x", 2);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get("/x"), Some(&2));
+    }
+
+    #[test]
+    fn intermediate_nodes_hold_values_independently() {
+        let mut t = PathTrie::new(16);
+        t.insert("/a", 1);
+        t.insert("/a/b", 2);
+        assert_eq!(t.get("/a"), Some(&1));
+        assert_eq!(t.get("/a/b"), Some(&2));
+        t.invalidate("/a");
+        assert_eq!(t.get("/a"), None);
+        assert_eq!(t.get("/a/b"), Some(&2), "child survives exact invalidation");
+    }
+
+    #[test]
+    fn prefix_invalidation_drops_subtree_only() {
+        let mut t = PathTrie::new(64);
+        t.insert("/foo", 0);
+        t.insert("/foo/bar", 1);
+        t.insert("/foo/bar/baz.txt", 2);
+        t.insert("/foo2", 3);
+        t.insert("/other/x", 4);
+        let dropped = t.invalidate_prefix("/foo");
+        assert_eq!(dropped, 3);
+        assert_eq!(t.peek("/foo"), None);
+        assert_eq!(t.peek("/foo/bar"), None);
+        assert_eq!(t.peek("/foo/bar/baz.txt"), None);
+        assert_eq!(t.peek("/foo2"), Some(&3), "sibling prefix not affected");
+        assert_eq!(t.peek("/other/x"), Some(&4));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn prefix_invalidation_of_missing_prefix_is_zero() {
+        let mut t: PathTrie<u32> = PathTrie::new(4);
+        t.insert("/a", 1);
+        assert_eq!(t.invalidate_prefix("/zzz"), 0);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_prefers_cold_entries() {
+        let mut t = PathTrie::new(2);
+        t.insert("/a", 1);
+        t.insert("/b", 2);
+        t.get("/a"); // /a is now hotter than /b
+        t.insert("/c", 3); // evicts /b
+        assert_eq!(t.peek("/a"), Some(&1));
+        assert_eq!(t.peek("/b"), None);
+        assert_eq!(t.peek("/c"), Some(&3));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.stats().evictions, 1);
+    }
+
+    #[test]
+    fn trailing_and_duplicate_slashes_normalize() {
+        let mut t = PathTrie::new(8);
+        t.insert("/a//b/", 9);
+        assert_eq!(t.get("/a/b"), Some(&9));
+    }
+
+    #[test]
+    fn root_value() {
+        let mut t = PathTrie::new(8);
+        t.insert("/", 42);
+        assert_eq!(t.get("/"), Some(&42));
+        assert_eq!(t.invalidate_prefix("/"), 1);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut t = PathTrie::new(8);
+        t.insert("/a", 1);
+        t.insert("/b", 2);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.peek("/a"), None);
+    }
+
+    #[test]
+    fn invalidate_counts_only_present() {
+        let mut t = PathTrie::new(8);
+        t.insert("/a", 1);
+        assert!(t.invalidate("/a"));
+        assert!(!t.invalidate("/a"));
+        assert!(!t.invalidate("/never"));
+        assert_eq!(t.stats().invalidations, 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! The λFS client library.
+//!
+//! Clients route every metadata RPC by hashing the target's parent
+//! directory to one of the `n` NameNode deployments (§3.3), choose between
+//! the TCP and HTTP paths via the replacement policy (§3.4), track
+//! latency for straggler mitigation and anti-thrashing (Appendices A/B),
+//! and resubmit failed/timed-out requests with exponential backoff (§3.2).
+
+pub mod router;
+pub mod state;
+
+pub use router::Router;
+pub use state::ClientState;

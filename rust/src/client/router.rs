@@ -1,0 +1,160 @@
+//! Request routing: parent-directory hash → deployment id (§3.3).
+//!
+//! The routing function is the shared contract with the L1 Pallas kernel:
+//! `fnv1a32(parent_path_bytes[..min(len, PATH_WIDTH)]) % n_deployments`.
+//! On the hot path the simulator uses a precomputed per-directory table
+//! (the hash of a directory never changes), built either by the pure-Rust
+//! fallback or by the compiled PJRT artifact (`runtime::RouteExecutor`) —
+//! the two are asserted bit-identical in `rust/tests/runtime_artifacts.rs`.
+
+use crate::namespace::{InodeRef, Namespace};
+use crate::util::fnv;
+
+/// Precomputed routing table over a namespace.
+#[derive(Clone, Debug)]
+pub struct Router {
+    /// Deployment per directory id, for INodes *inside* that directory
+    /// (files route by containing dir; dirs route by their parent).
+    dep_of_dir: Vec<u32>,
+    n_deployments: u32,
+}
+
+impl Router {
+    /// Build with the pure-Rust FNV fallback.
+    pub fn build(ns: &Namespace, n_deployments: u32) -> Self {
+        let dep_of_dir =
+            ns.dirs.iter().map(|d| fnv::route(&d.path, n_deployments)).collect();
+        Router { dep_of_dir, n_deployments }
+    }
+
+    /// Build from externally computed per-directory deployments (the PJRT
+    /// batch executor path; see `runtime::RouteExecutor::route_namespace`).
+    pub fn from_table(dep_of_dir: Vec<u32>, n_deployments: u32) -> Self {
+        assert!(dep_of_dir.iter().all(|&d| d < n_deployments.max(1)));
+        Router { dep_of_dir, n_deployments }
+    }
+
+    pub fn n_deployments(&self) -> u32 {
+        self.n_deployments
+    }
+
+    /// Deployment responsible for caching `inode`.
+    ///
+    /// λFS hashes "on the parent directory path of each file/directory"
+    /// (§3.1): a file routes by its containing directory's path; a
+    /// directory routes by its parent's path (root routes by itself).
+    pub fn route(&self, ns: &Namespace, inode: InodeRef) -> u32 {
+        match inode.file {
+            Some(_) => self.dep_of_dir[inode.dir.0 as usize],
+            None => {
+                let parent = ns.dir(inode.dir).parent.unwrap_or(inode.dir);
+                self.dep_of_dir[parent.0 as usize]
+            }
+        }
+    }
+
+    /// Deployment caching the *contents* of directory `dir` (used for
+    /// write-path invalidation of a parent directory's listing).
+    pub fn route_dir_contents(&self, dir: crate::namespace::DirId) -> u32 {
+        self.dep_of_dir[dir.0 as usize]
+    }
+
+    /// Deployments caching metadata affected by a write on `inode`:
+    /// the INode itself plus its parent directory's INode (creates,
+    /// deletes and moves mutate the parent's listing too). Deduplicated.
+    pub fn write_deployments(&self, ns: &Namespace, inode: InodeRef) -> Vec<u32> {
+        let mut deps = vec![self.route(ns, inode)];
+        let parent_inode = match inode.file {
+            Some(_) => InodeRef::dir(inode.dir),
+            None => InodeRef::dir(ns.dir(inode.dir).parent.unwrap_or(inode.dir)),
+        };
+        let p = self.route(ns, parent_inode);
+        if !deps.contains(&p) {
+            deps.push(p);
+        }
+        deps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::generate::{generate, NamespaceParams};
+    use crate::namespace::DirId;
+    use crate::util::rng::Rng;
+
+    fn ns() -> Namespace {
+        generate(&NamespaceParams::default(), &mut Rng::new(2))
+    }
+
+    #[test]
+    fn matches_fnv_contract() {
+        let ns = ns();
+        let r = Router::build(&ns, 16);
+        for d in ns.dirs.iter().take(200) {
+            let file = InodeRef::file(d.id, 0);
+            assert_eq!(r.route(&ns, file), fnv::route(&d.path, 16));
+        }
+    }
+
+    #[test]
+    fn dir_routes_by_parent_path() {
+        let ns = ns();
+        let r = Router::build(&ns, 16);
+        for d in ns.dirs.iter().skip(1).take(200) {
+            let parent_path = &ns.dir(d.parent.unwrap()).path;
+            assert_eq!(r.route(&ns, InodeRef::dir(d.id)), fnv::route(parent_path, 16));
+        }
+    }
+
+    #[test]
+    fn root_routes_by_itself() {
+        let ns = ns();
+        let r = Router::build(&ns, 16);
+        assert_eq!(r.route(&ns, InodeRef::dir(DirId(0))), fnv::route("/", 16));
+    }
+
+    #[test]
+    fn same_directory_files_colocate() {
+        // LocoFS-style co-location: all files of one directory map to the
+        // same deployment (the paper's partitioning choice, §6).
+        let ns = ns();
+        let r = Router::build(&ns, 16);
+        let d = DirId(10);
+        let dep = r.route(&ns, InodeRef::file(d, 0));
+        for f in 1..50 {
+            assert_eq!(r.route(&ns, InodeRef::file(d, f)), dep);
+        }
+    }
+
+    #[test]
+    fn write_deployments_cover_target_and_parent() {
+        let ns = ns();
+        let r = Router::build(&ns, 16);
+        for d in ns.dirs.iter().skip(1).take(100) {
+            let file = InodeRef::file(d.id, 0);
+            let deps = r.write_deployments(&ns, file);
+            assert!(deps.contains(&r.route(&ns, file)));
+            assert!(deps.contains(&r.route(&ns, InodeRef::dir(d.id))));
+            assert!(deps.len() <= 2);
+            // No duplicates.
+            let mut sorted = deps.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), deps.len());
+        }
+    }
+
+    #[test]
+    fn from_table_validates() {
+        let t = vec![0, 1, 2, 3];
+        let r = Router::from_table(t, 4);
+        assert_eq!(r.n_deployments(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_table_rejects_out_of_range() {
+        Router::from_table(vec![0, 9], 4);
+    }
+}

@@ -1,0 +1,132 @@
+//! Per-client control state: RPC path policy, latency window, backoff.
+
+use crate::rpc::backoff::Backoff;
+use crate::rpc::conn::VmId;
+use crate::scaling::policy::{ReplacementPolicy, RpcPath};
+use crate::scaling::window::LatencyWindow;
+use crate::util::rng::Rng;
+
+/// One client process of the benchmark driver / application.
+#[derive(Clone, Debug)]
+pub struct ClientState {
+    pub vm: VmId,
+    pub policy: ReplacementPolicy,
+    pub window: LatencyWindow,
+    pub backoff: Backoff,
+    t_straggler: f64,
+    t_thrash: f64,
+    stragglers: u64,
+    thrash_entries: u64,
+}
+
+impl ClientState {
+    pub fn new(
+        vm: VmId,
+        p_replace: f64,
+        window: usize,
+        t_straggler: f64,
+        t_thrash: f64,
+    ) -> Self {
+        ClientState {
+            vm,
+            policy: ReplacementPolicy::new(p_replace),
+            window: LatencyWindow::new(window),
+            backoff: Backoff::default(),
+            t_straggler,
+            t_thrash,
+            stragglers: 0,
+            thrash_entries: 0,
+        }
+    }
+
+    /// Choose the RPC path for the next request.
+    pub fn choose_path(&mut self, tcp_available: bool, rng: &mut Rng) -> RpcPath {
+        self.policy.choose(tcp_available, rng)
+    }
+
+    /// Record a completed request latency; updates anti-thrashing mode and
+    /// reports whether the request would have been straggler-resubmitted.
+    pub fn observe(&mut self, latency_ms: f64) -> bool {
+        let flags = self.window.record(latency_ms, self.t_straggler, self.t_thrash);
+        if flags.thrash && !self.policy.anti_thrash {
+            self.policy.anti_thrash = true;
+            self.thrash_entries += 1;
+        } else if !flags.thrash && self.policy.anti_thrash {
+            // Leave anti-thrashing once latency normalizes.
+            self.policy.anti_thrash = false;
+        }
+        if flags.straggler {
+            self.stragglers += 1;
+        }
+        flags.straggler
+    }
+
+    /// Straggler check for an in-flight request (App. A): would this
+    /// latency trigger cancel + resubmit?
+    pub fn is_straggler(&self, latency_ms: f64) -> bool {
+        self.window.is_straggler(latency_ms, self.t_straggler)
+    }
+
+    pub fn stragglers(&self) -> u64 {
+        self.stragglers
+    }
+
+    pub fn thrash_entries(&self) -> u64 {
+        self.thrash_entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn client() -> ClientState {
+        ClientState::new(VmId(0), 0.005, 64, 10.0, 2.5)
+    }
+
+    #[test]
+    fn observe_normal_latencies_no_flags() {
+        let mut c = client();
+        for _ in 0..100 {
+            assert!(!c.observe(1.0));
+        }
+        assert!(!c.policy.anti_thrash);
+        assert_eq!(c.stragglers(), 0);
+    }
+
+    #[test]
+    fn spike_enters_and_exits_anti_thrash() {
+        let mut c = client();
+        for _ in 0..64 {
+            c.observe(1.0);
+        }
+        c.observe(5.0); // ≥ 2.5x mean → thrash mode
+        assert!(c.policy.anti_thrash);
+        assert_eq!(c.thrash_entries(), 1);
+        // Latency normalizes → mode exits.
+        for _ in 0..64 {
+            c.observe(1.0);
+        }
+        assert!(!c.policy.anti_thrash);
+    }
+
+    #[test]
+    fn straggler_counted() {
+        let mut c = client();
+        for _ in 0..64 {
+            c.observe(1.0);
+        }
+        assert!(c.observe(100.0));
+        assert_eq!(c.stragglers(), 1);
+    }
+
+    #[test]
+    fn straggler_precheck() {
+        let mut c = client();
+        for _ in 0..10 {
+            c.observe(2.0);
+        }
+        assert!(c.is_straggler(50.0), "50ms vs 2ms mean at T=10");
+        assert!(!c.is_straggler(10.0));
+    }
+}

@@ -1,0 +1,165 @@
+//! The pluggable "Coordinator" service (ZooKeeper-like).
+//!
+//! λFS uses the Coordinator to (a) track which NameNode instances are
+//! actively running in which deployments and (b) deliver INVs and ACKs
+//! between them (§3.5). The paper supports both ZooKeeper and NDB as
+//! Coordinator backends; the observable behaviour is membership tracking
+//! with crash detection plus message fan-out, modeled here.
+
+use std::collections::HashMap;
+
+use crate::faas::InstanceId;
+use crate::sim::Time;
+
+/// Membership record for one NameNode instance.
+#[derive(Clone, Copy, Debug)]
+struct Member {
+    deployment: u32,
+    /// Session considered expired (crash detected) at this time if no
+    /// heartbeat arrives first.
+    expires: Time,
+}
+
+/// ZooKeeper-like membership + notification service.
+#[derive(Clone, Debug)]
+pub struct Coordinator {
+    members: HashMap<InstanceId, Member>,
+    /// Session/heartbeat timeout (µs): crash detection latency.
+    session_timeout: Time,
+    delivered_invs: u64,
+    delivered_acks: u64,
+}
+
+impl Coordinator {
+    pub fn new(session_timeout: Time) -> Self {
+        Coordinator {
+            members: HashMap::new(),
+            session_timeout,
+            delivered_invs: 0,
+            delivered_acks: 0,
+        }
+    }
+
+    /// Register a NameNode (ephemeral node creation).
+    pub fn register(&mut self, inst: InstanceId, deployment: u32, now: Time) {
+        self.members
+            .insert(inst, Member { deployment, expires: now + self.session_timeout });
+    }
+
+    /// Heartbeat (session renewal).
+    pub fn heartbeat(&mut self, inst: InstanceId, now: Time) {
+        if let Some(m) = self.members.get_mut(&inst) {
+            m.expires = now + self.session_timeout;
+        }
+    }
+
+    /// Explicit deregistration (clean shutdown / reclaim).
+    pub fn deregister(&mut self, inst: InstanceId) {
+        self.members.remove(&inst);
+    }
+
+    /// Crash detection: sessions past their expiry are dropped. Returns
+    /// the instances whose crash was detected at `now`.
+    pub fn expire_sessions(&mut self, now: Time) -> Vec<InstanceId> {
+        let dead: Vec<InstanceId> = self
+            .members
+            .iter()
+            .filter(|(_, m)| m.expires <= now)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in &dead {
+            self.members.remove(id);
+        }
+        dead
+    }
+
+    /// Live members of a deployment as the Coordinator currently sees it
+    /// (the ACK quorum for an INV to that deployment).
+    pub fn live_in_deployment(&self, dep: u32) -> Vec<InstanceId> {
+        let mut v: Vec<InstanceId> = self
+            .members
+            .iter()
+            .filter(|(_, m)| m.deployment == dep)
+            .map(|(&id, _)| id)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn is_live(&self, inst: InstanceId) -> bool {
+        self.members.contains_key(&inst)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Accounting hooks used by the protocol driver.
+    pub fn count_inv(&mut self, n: u64) {
+        self.delivered_invs += n;
+    }
+
+    pub fn count_ack(&mut self, n: u64) {
+        self.delivered_acks += n;
+    }
+
+    pub fn delivered(&self) -> (u64, u64) {
+        (self.delivered_invs, self.delivered_acks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coord() -> Coordinator {
+        Coordinator::new(6_000_000) // 6s session
+    }
+
+    #[test]
+    fn register_and_membership() {
+        let mut c = coord();
+        c.register(InstanceId(1), 0, 0);
+        c.register(InstanceId(2), 0, 0);
+        c.register(InstanceId(3), 1, 0);
+        assert_eq!(c.live_in_deployment(0), vec![InstanceId(1), InstanceId(2)]);
+        assert_eq!(c.live_in_deployment(1), vec![InstanceId(3)]);
+        assert_eq!(c.live_count(), 3);
+    }
+
+    #[test]
+    fn heartbeat_extends_session() {
+        let mut c = coord();
+        c.register(InstanceId(1), 0, 0);
+        c.heartbeat(InstanceId(1), 5_000_000);
+        assert!(c.expire_sessions(6_000_001).is_empty(), "renewed");
+        let dead = c.expire_sessions(11_000_001);
+        assert_eq!(dead, vec![InstanceId(1)]);
+        assert!(!c.is_live(InstanceId(1)));
+    }
+
+    #[test]
+    fn crash_detected_after_timeout() {
+        let mut c = coord();
+        c.register(InstanceId(9), 2, 0);
+        assert!(c.expire_sessions(5_999_999).is_empty());
+        assert_eq!(c.expire_sessions(6_000_000), vec![InstanceId(9)]);
+    }
+
+    #[test]
+    fn deregister_immediate() {
+        let mut c = coord();
+        c.register(InstanceId(1), 0, 0);
+        c.deregister(InstanceId(1));
+        assert!(!c.is_live(InstanceId(1)));
+        assert!(c.live_in_deployment(0).is_empty());
+    }
+
+    #[test]
+    fn delivery_accounting() {
+        let mut c = coord();
+        c.count_inv(3);
+        c.count_ack(2);
+        assert_eq!(c.delivered(), (3, 2));
+    }
+}

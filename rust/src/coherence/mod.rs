@@ -1,0 +1,22 @@
+//! The serverless cache-coherence protocol (§3.5, Algorithm 1; Appendix C).
+//!
+//! Multiple function instances of the same deployment may cache replicas
+//! of the same metadata, so writes run an ACK-INV protocol before
+//! committing:
+//!
+//! 1. The leader NameNode `N_L` subscribes (via the Coordinator) to
+//!    liveness + ACK notifications for every deployment `d ∈ D` caching
+//!    affected metadata, then issues INVs carrying that metadata.
+//! 2. Each live NameNode in each `d` invalidates its cache, then ACKs.
+//!    ACKs are *not* required from NameNodes that terminate mid-protocol.
+//! 3. Once all required ACKs arrive, the write proceeds under exclusive
+//!    row locks in the persistent store — serializing concurrent writes.
+//!
+//! Subtree operations replace per-INode INVs with a single *prefix
+//! invalidation* (Appendix C) that NameNodes apply via their trie cache.
+
+pub mod coordinator;
+pub mod protocol;
+
+pub use coordinator::Coordinator;
+pub use protocol::{CoherenceOutcome, Invalidation};

@@ -1,0 +1,459 @@
+//! System configuration: every calibrated constant in one place.
+//!
+//! The paper's testbed constants (TCP RPC 1–2 ms, HTTP RPC 8–20 ms, NDB
+//! capacity, cold-start times, AWS Lambda prices, VM prices, NameNode
+//! shapes) live here with their paper provenance noted, and every field is
+//! overridable from a mini-TOML config file (`SystemConfig::from_toml`) or
+//! programmatically by the benches.
+
+use crate::util::minitoml::Doc;
+
+/// λFS deployment & policy parameters (§3, Appendices A/B).
+#[derive(Clone, Debug)]
+pub struct LambdaFsConfig {
+    /// Number of serverless NameNode function deployments (`n`). The
+    /// namespace is partitioned across these by parent-dir hashing.
+    pub n_deployments: u32,
+    /// Per-instance async concurrency (paper's OpenWhisk extension, §3.4).
+    pub concurrency_level: u32,
+    /// Randomized HTTP-for-TCP replacement probability (§3.4; "≤1% tends
+    /// to provide the best performance").
+    pub http_replacement_prob: f64,
+    /// vCPUs per serverless NameNode (paper: 6.25 default, 5 in §5.2).
+    pub vcpus_per_namenode: f64,
+    /// GB RAM per serverless NameNode (paper: 30 default, 6 in §5.2.2).
+    pub gb_per_namenode: f64,
+    /// Metadata cache capacity per NameNode, in INode entries. Sized from
+    /// RAM in the benches; "reduced-cache λFS" shrinks this below the WSS.
+    pub cache_capacity: usize,
+    /// Straggler-mitigation threshold T (App. A; default 10 → resubmit
+    /// TCP requests slower than 10x the moving average).
+    pub straggler_threshold: f64,
+    /// Anti-thrashing threshold T (App. B; best between 2 and 3).
+    pub thrash_threshold: f64,
+    /// Moving-window size for client latency tracking (App. A/B). Mirrors
+    /// the L1 latency-kernel window.
+    pub latency_window: usize,
+    /// Subtree sub-operation batch size (App. C; defaults to 512).
+    pub subtree_batch: usize,
+    /// Enable serverless offloading of subtree batches (App. C).
+    pub subtree_offload: bool,
+    /// Auto-scaling mode (Fig. 14 ablation).
+    pub autoscale: AutoScaleMode,
+    /// Scale-in: reclaim instances idle longer than this (ms).
+    pub idle_reclaim_ms: f64,
+    /// Fraction of the vCPU allocation λFS may actively provision
+    /// (anti-thrashing cap; paper observed ≤92.77%).
+    pub max_vcpu_fraction: f64,
+}
+
+/// Fig. 14's three auto-scaling regimes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AutoScaleMode {
+    /// Deployments scale out freely (subject to the vCPU cap).
+    Enabled,
+    /// At most `limit` instances per deployment (paper used 2–3).
+    Limited(u32),
+    /// One instance per deployment.
+    Disabled,
+}
+
+impl AutoScaleMode {
+    /// Per-deployment instance cap under this mode (`u32::MAX` = none).
+    pub fn per_deployment_cap(&self) -> u32 {
+        match self {
+            AutoScaleMode::Enabled => u32::MAX,
+            AutoScaleMode::Limited(n) => (*n).max(1),
+            AutoScaleMode::Disabled => 1,
+        }
+    }
+}
+
+/// FaaS platform model (OpenWhisk-like; §2 Terminology, §3.1).
+#[derive(Clone, Debug)]
+pub struct FaasConfig {
+    /// Total vCPUs the platform may use (the experiments' 512-vCPU cap).
+    pub vcpu_limit: f64,
+    /// Cold-start time: container provision + JVM NameNode boot (ms).
+    pub cold_start_ms: f64,
+    /// Cold-start variability (lognormal sigma).
+    pub cold_start_sigma: f64,
+    /// API-gateway + invoker overhead added to each HTTP invocation (ms);
+    /// combined with the network model this yields the paper's 8–20 ms
+    /// end-to-end HTTP RPC latency.
+    pub gateway_overhead_ms: f64,
+    /// HTTP request timeout before client backoff+resubmit (ms).
+    pub http_timeout_ms: f64,
+    /// Gateway saturation: concurrent in-flight HTTP invocations beyond
+    /// which queueing delay grows (models "request storms overwhelm the
+    /// FaaS platform", §7).
+    pub gateway_capacity: u32,
+    /// Penalty for container churn under thrashing (ms per destroy+create).
+    pub churn_penalty_ms: f64,
+}
+
+/// Persistent metadata store model (MySQL Cluster NDB; §2).
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// NDB data nodes (paper: 4).
+    pub data_nodes: u32,
+    /// Concurrent transactions each data node sustains.
+    pub per_node_concurrency: u32,
+    /// Service time for a primary-key read batch (ms).
+    pub read_ms: f64,
+    /// Service time for a transactional write (lock + update + commit, ms).
+    pub write_ms: f64,
+    /// Network round trip NameNode <-> NDB (ms).
+    pub rtt_ms: f64,
+    /// Lock-wait retry interval for row-lock conflicts (ms).
+    pub lock_retry_ms: f64,
+}
+
+/// Network latency model (same-AZ EC2; §3.2 observations).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// TCP RPC one-hop median (ms); paper observed 1–2 ms end-to-end.
+    pub tcp_median_ms: f64,
+    pub tcp_sigma: f64,
+    /// HTTP RPC extra path (client->gateway->invoker->NN) median (ms);
+    /// paper observed 8–20 ms end-to-end.
+    pub http_median_ms: f64,
+    pub http_sigma: f64,
+    /// Coordinator (ZooKeeper) notify/ACK one-way (ms).
+    pub coord_ms: f64,
+    /// TCP connection establishment (ms).
+    pub tcp_connect_ms: f64,
+}
+
+/// Serverful NameNode model for HopsFS/HopsFS+Cache baselines (§5.1).
+#[derive(Clone, Debug)]
+pub struct ServerfulConfig {
+    /// vCPUs per serverful NameNode VM (paper: 16).
+    pub vcpus_per_namenode: f64,
+    /// RPC handler threads per NameNode (paper: 200).
+    pub rpc_handlers: u32,
+    /// Client->NameNode RPC median (ms).
+    pub rpc_median_ms: f64,
+    /// CPU service time per op on the NameNode (ms) — proxying overhead.
+    pub service_ms: f64,
+    /// Peak utilization a stateless-proxy NameNode reaches (paper §5.3.2
+    /// observed ~70%).
+    pub max_utilization: f64,
+}
+
+/// Cost model constants (Fig. 9).
+#[derive(Clone, Debug)]
+pub struct CostConfig {
+    /// AWS Lambda: $ per GB-second, 1 ms granularity.
+    pub lambda_gb_second: f64,
+    /// AWS Lambda: $ per million requests.
+    pub lambda_per_million_req: f64,
+    /// Serverful VM $ per vCPU-hour (calibrated so 512 vCPU x 5 min =
+    /// $2.50, the paper's HopsFS figure).
+    pub vm_per_vcpu_hour: f64,
+}
+
+/// Per-op CPU service times on a warm λFS NameNode (ms).
+#[derive(Clone, Debug)]
+pub struct OpCostConfig {
+    /// Cache-hit metadata read served from the trie.
+    pub cache_hit_ms: f64,
+    /// Cache-miss penalty: deserialize + insert into trie.
+    pub miss_insert_ms: f64,
+    /// Write-path bookkeeping before/after the store transaction.
+    pub write_cpu_ms: f64,
+    /// `ls` fan-out factor (directory listing touches more entries).
+    pub ls_factor: f64,
+}
+
+/// Everything bundled.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub lambda_fs: LambdaFsConfig,
+    pub faas: FaasConfig,
+    pub store: StoreConfig,
+    pub net: NetConfig,
+    pub serverful: ServerfulConfig,
+    pub cost: CostConfig,
+    pub op: OpCostConfig,
+    /// Root RNG seed for the whole simulation.
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            lambda_fs: LambdaFsConfig {
+                n_deployments: 16,
+                concurrency_level: 4,
+                http_replacement_prob: 0.005,
+                vcpus_per_namenode: 6.25,
+                gb_per_namenode: 30.0,
+                cache_capacity: 4_000_000,
+                straggler_threshold: 10.0,
+                thrash_threshold: 2.5,
+                latency_window: 64,
+                subtree_batch: 512,
+                subtree_offload: true,
+                autoscale: AutoScaleMode::Enabled,
+                idle_reclaim_ms: 30_000.0,
+                max_vcpu_fraction: 0.92774, // 475/512 = 76 NameNodes (paper §5.3)
+            },
+            faas: FaasConfig {
+                vcpu_limit: 512.0,
+                cold_start_ms: 1_100.0,
+                cold_start_sigma: 0.25,
+                gateway_overhead_ms: 6.0,
+                http_timeout_ms: 5_000.0,
+                gateway_capacity: 3_000,
+                churn_penalty_ms: 800.0,
+            },
+            store: StoreConfig {
+                data_nodes: 4,
+                per_node_concurrency: 32,
+                read_ms: 0.45,
+                write_ms: 1.55,
+                rtt_ms: 0.5,
+                lock_retry_ms: 2.0,
+            },
+            net: NetConfig {
+                tcp_median_ms: 0.8,
+                tcp_sigma: 0.25,
+                http_median_ms: 9.5,
+                http_sigma: 0.35,
+                coord_ms: 0.6,
+                tcp_connect_ms: 1.2,
+            },
+            serverful: ServerfulConfig {
+                vcpus_per_namenode: 16.0,
+                rpc_handlers: 200,
+                rpc_median_ms: 0.7,
+                service_ms: 0.12,
+                max_utilization: 0.70,
+            },
+            cost: CostConfig {
+                lambda_gb_second: 0.0000166667,
+                lambda_per_million_req: 0.20,
+                // 512 vCPU * 300 s: $2.50 => $/vCPU-hr = 2.50 / (512 * 300/3600)
+                vm_per_vcpu_hour: 2.50 / (512.0 * 300.0 / 3600.0),
+                },
+            op: OpCostConfig {
+                cache_hit_ms: 0.18,
+                miss_insert_ms: 0.25,
+                write_cpu_ms: 0.40,
+                ls_factor: 1.6,
+            },
+            seed: 0x5EED_0001,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Overlay values from a mini-TOML document onto the defaults.
+    pub fn from_toml(text: &str) -> Result<SystemConfig, String> {
+        let doc = Doc::parse(text).map_err(|e| e.to_string())?;
+        let mut c = SystemConfig::default();
+        c.apply(&doc)?;
+        Ok(c)
+    }
+
+    /// Apply every recognized key; unknown keys are an error (typo guard).
+    pub fn apply(&mut self, doc: &Doc) -> Result<(), String> {
+        for key in doc.keys() {
+            if !self.apply_one(doc, key)? {
+                return Err(format!("unknown config key {key:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_one(&mut self, doc: &Doc, key: &str) -> Result<bool, String> {
+        macro_rules! f64_field {
+            ($field:expr) => {{
+                $field = doc.get_f64(key).ok_or(format!("{key}: expected number"))?;
+                return Ok(true);
+            }};
+        }
+        macro_rules! u32_field {
+            ($field:expr) => {{
+                $field = doc.get_i64(key).ok_or(format!("{key}: expected int"))? as u32;
+                return Ok(true);
+            }};
+        }
+        match key {
+            "seed" => {
+                self.seed = doc.get_i64(key).ok_or("seed: expected int")? as u64;
+                Ok(true)
+            }
+            "lambda_fs.n_deployments" => u32_field!(self.lambda_fs.n_deployments),
+            "lambda_fs.concurrency_level" => u32_field!(self.lambda_fs.concurrency_level),
+            "lambda_fs.http_replacement_prob" => f64_field!(self.lambda_fs.http_replacement_prob),
+            "lambda_fs.vcpus_per_namenode" => f64_field!(self.lambda_fs.vcpus_per_namenode),
+            "lambda_fs.gb_per_namenode" => f64_field!(self.lambda_fs.gb_per_namenode),
+            "lambda_fs.cache_capacity" => {
+                self.lambda_fs.cache_capacity =
+                    doc.get_i64(key).ok_or("cache_capacity: expected int")? as usize;
+                Ok(true)
+            }
+            "lambda_fs.straggler_threshold" => f64_field!(self.lambda_fs.straggler_threshold),
+            "lambda_fs.thrash_threshold" => f64_field!(self.lambda_fs.thrash_threshold),
+            "lambda_fs.latency_window" => {
+                self.lambda_fs.latency_window =
+                    doc.get_i64(key).ok_or("latency_window: expected int")? as usize;
+                Ok(true)
+            }
+            "lambda_fs.subtree_batch" => {
+                self.lambda_fs.subtree_batch =
+                    doc.get_i64(key).ok_or("subtree_batch: expected int")? as usize;
+                Ok(true)
+            }
+            "lambda_fs.subtree_offload" => {
+                self.lambda_fs.subtree_offload =
+                    doc.get_bool(key).ok_or("subtree_offload: expected bool")?;
+                Ok(true)
+            }
+            "lambda_fs.autoscale" => {
+                let v = doc.get_str(key).ok_or("autoscale: expected string")?;
+                self.lambda_fs.autoscale = match v {
+                    "enabled" => AutoScaleMode::Enabled,
+                    "disabled" => AutoScaleMode::Disabled,
+                    other => {
+                        let n = other
+                            .strip_prefix("limited:")
+                            .and_then(|s| s.parse().ok())
+                            .ok_or(format!("autoscale: bad value {other:?}"))?;
+                        AutoScaleMode::Limited(n)
+                    }
+                };
+                Ok(true)
+            }
+            "lambda_fs.idle_reclaim_ms" => f64_field!(self.lambda_fs.idle_reclaim_ms),
+            "lambda_fs.max_vcpu_fraction" => f64_field!(self.lambda_fs.max_vcpu_fraction),
+            "faas.vcpu_limit" => f64_field!(self.faas.vcpu_limit),
+            "faas.cold_start_ms" => f64_field!(self.faas.cold_start_ms),
+            "faas.cold_start_sigma" => f64_field!(self.faas.cold_start_sigma),
+            "faas.gateway_overhead_ms" => f64_field!(self.faas.gateway_overhead_ms),
+            "faas.http_timeout_ms" => f64_field!(self.faas.http_timeout_ms),
+            "faas.gateway_capacity" => u32_field!(self.faas.gateway_capacity),
+            "faas.churn_penalty_ms" => f64_field!(self.faas.churn_penalty_ms),
+            "store.data_nodes" => u32_field!(self.store.data_nodes),
+            "store.per_node_concurrency" => u32_field!(self.store.per_node_concurrency),
+            "store.read_ms" => f64_field!(self.store.read_ms),
+            "store.write_ms" => f64_field!(self.store.write_ms),
+            "store.rtt_ms" => f64_field!(self.store.rtt_ms),
+            "store.lock_retry_ms" => f64_field!(self.store.lock_retry_ms),
+            "net.tcp_median_ms" => f64_field!(self.net.tcp_median_ms),
+            "net.tcp_sigma" => f64_field!(self.net.tcp_sigma),
+            "net.http_median_ms" => f64_field!(self.net.http_median_ms),
+            "net.http_sigma" => f64_field!(self.net.http_sigma),
+            "net.coord_ms" => f64_field!(self.net.coord_ms),
+            "net.tcp_connect_ms" => f64_field!(self.net.tcp_connect_ms),
+            "serverful.vcpus_per_namenode" => f64_field!(self.serverful.vcpus_per_namenode),
+            "serverful.rpc_handlers" => u32_field!(self.serverful.rpc_handlers),
+            "serverful.rpc_median_ms" => f64_field!(self.serverful.rpc_median_ms),
+            "serverful.service_ms" => f64_field!(self.serverful.service_ms),
+            "serverful.max_utilization" => f64_field!(self.serverful.max_utilization),
+            "cost.lambda_gb_second" => f64_field!(self.cost.lambda_gb_second),
+            "cost.lambda_per_million_req" => f64_field!(self.cost.lambda_per_million_req),
+            "cost.vm_per_vcpu_hour" => f64_field!(self.cost.vm_per_vcpu_hour),
+            "op.cache_hit_ms" => f64_field!(self.op.cache_hit_ms),
+            "op.miss_insert_ms" => f64_field!(self.op.miss_insert_ms),
+            "op.write_cpu_ms" => f64_field!(self.op.write_cpu_ms),
+            "op.ls_factor" => f64_field!(self.op.ls_factor),
+            _ => Ok(false),
+        }
+    }
+
+    /// Max λFS NameNode instances under the vCPU cap and anti-thrash margin.
+    pub fn max_namenodes(&self) -> u32 {
+        let usable = self.faas.vcpu_limit * self.lambda_fs.max_vcpu_fraction;
+        (usable / self.lambda_fs.vcpus_per_namenode).floor().max(1.0) as u32
+    }
+
+    /// NDB aggregate concurrency (transaction slots).
+    pub fn store_slots(&self) -> u32 {
+        self.store.data_nodes * self.store.per_node_concurrency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = SystemConfig::default();
+        assert!(c.lambda_fs.http_replacement_prob <= 0.01);
+        assert!(c.lambda_fs.straggler_threshold == 10.0);
+        assert!((2.0..=3.0).contains(&c.lambda_fs.thrash_threshold));
+        assert_eq!(c.lambda_fs.subtree_batch, 512);
+        assert!(c.net.tcp_median_ms < c.net.http_median_ms);
+        // 512 vCPU for 5 minutes must cost the paper's $2.50.
+        let cost = 512.0 * (300.0 / 3600.0) * c.cost.vm_per_vcpu_hour;
+        assert!((cost - 2.50).abs() < 1e-9, "cost {cost}");
+    }
+
+    #[test]
+    fn max_namenodes_honors_cap() {
+        let c = SystemConfig::default();
+        // 512 * 0.9277 / 6.25 = 76.0 -> 76 NameNodes (paper §5.3: 76 max).
+        assert_eq!(c.max_namenodes(), 76);
+    }
+
+    #[test]
+    fn toml_overlay() {
+        let c = SystemConfig::from_toml(
+            r#"
+            seed = 99
+            [lambda_fs]
+            n_deployments = 32
+            autoscale = "limited:3"
+            [store]
+            data_nodes = 8
+            [net]
+            tcp_median_ms = 1.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.seed, 99);
+        assert_eq!(c.lambda_fs.n_deployments, 32);
+        assert_eq!(c.lambda_fs.autoscale, AutoScaleMode::Limited(3));
+        assert_eq!(c.store.data_nodes, 8);
+        assert_eq!(c.net.tcp_median_ms, 1.5);
+        // Untouched fields keep defaults.
+        assert_eq!(c.lambda_fs.subtree_batch, 512);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(SystemConfig::from_toml("[lambda_fs]\nnope = 1").is_err());
+    }
+
+    #[test]
+    fn autoscale_modes_parse() {
+        for (s, want) in [
+            ("enabled", AutoScaleMode::Enabled),
+            ("disabled", AutoScaleMode::Disabled),
+            ("limited:2", AutoScaleMode::Limited(2)),
+        ] {
+            let c =
+                SystemConfig::from_toml(&format!("[lambda_fs]\nautoscale = \"{s}\"")).unwrap();
+            assert_eq!(c.lambda_fs.autoscale, want);
+        }
+        assert!(SystemConfig::from_toml("[lambda_fs]\nautoscale = \"bogus\"").is_err());
+    }
+
+    #[test]
+    fn autoscale_caps() {
+        assert_eq!(AutoScaleMode::Enabled.per_deployment_cap(), u32::MAX);
+        assert_eq!(AutoScaleMode::Limited(3).per_deployment_cap(), 3);
+        assert_eq!(AutoScaleMode::Limited(0).per_deployment_cap(), 1);
+        assert_eq!(AutoScaleMode::Disabled.per_deployment_cap(), 1);
+    }
+
+    #[test]
+    fn store_slots() {
+        let c = SystemConfig::default();
+        assert_eq!(c.store_slots(), 128);
+    }
+}

@@ -1,0 +1,15 @@
+//! The serverless NameNode: operation execution engine and the subtree
+//! operation protocol (Appendix C).
+//!
+//! A λFS NameNode is a Java application inside a function instance; here
+//! its observable behaviour is modeled as (a) per-operation CPU service
+//! times ([`namenode`]), (b) the cache/store interaction on reads and the
+//! coherence + transactional write path (driven by
+//! [`systems::lambdafs`](crate::systems)), and (c) the three-phase subtree
+//! protocol with serverless offloading ([`subtree`]).
+
+pub mod namenode;
+pub mod subtree;
+
+pub use namenode::ServiceModel;
+pub use subtree::{SubtreeParams, SubtreePlan};

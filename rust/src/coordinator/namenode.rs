@@ -1,0 +1,82 @@
+//! Per-operation NameNode CPU service-time model.
+//!
+//! Calibrated so warm-path TCP reads land in the paper's 1–2 ms
+//! end-to-end band (§3.2) once the network hops are added, and so writes
+//! are dominated by the coherence protocol + NDB transaction.
+
+use crate::config::OpCostConfig;
+use crate::namespace::OpKind;
+use crate::sim::{time, Time};
+use crate::util::rng::Rng;
+
+/// Service-time sampler for NameNode CPU work.
+#[derive(Clone, Debug)]
+pub struct ServiceModel {
+    cfg: OpCostConfig,
+}
+
+impl ServiceModel {
+    pub fn new(cfg: OpCostConfig) -> Self {
+        ServiceModel { cfg }
+    }
+
+    fn jitter(&self, ms: f64, rng: &mut Rng) -> Time {
+        time::from_ms(ms * rng.range_f64(0.8, 1.3))
+    }
+
+    /// CPU time to serve a read-class op from the cache (a *hit*).
+    pub fn cache_hit(&self, kind: OpKind, rng: &mut Rng) -> Time {
+        let base = match kind {
+            OpKind::Ls => self.cfg.cache_hit_ms * self.cfg.ls_factor,
+            _ => self.cfg.cache_hit_ms,
+        };
+        self.jitter(base, rng)
+    }
+
+    /// Extra CPU after a store fetch on a *miss* (deserialize + insert).
+    pub fn miss_insert(&self, rng: &mut Rng) -> Time {
+        self.jitter(self.cfg.miss_insert_ms, rng)
+    }
+
+    /// CPU bookkeeping around a write's coherence + transaction.
+    pub fn write_cpu(&self, rng: &mut Rng) -> Time {
+        self.jitter(self.cfg.write_cpu_ms, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn model() -> (ServiceModel, Rng) {
+        (ServiceModel::new(SystemConfig::default().op), Rng::new(77))
+    }
+
+    #[test]
+    fn hit_is_sub_millisecond() {
+        let (m, mut rng) = model();
+        for _ in 0..1000 {
+            let t = m.cache_hit(OpKind::Read, &mut rng);
+            assert!(t < time::from_ms(0.5), "{t}");
+        }
+    }
+
+    #[test]
+    fn ls_costs_more_than_read() {
+        let (m, mut rng) = model();
+        let n = 5_000;
+        let read: u64 = (0..n).map(|_| m.cache_hit(OpKind::Read, &mut rng)).sum();
+        let ls: u64 = (0..n).map(|_| m.cache_hit(OpKind::Ls, &mut rng)).sum();
+        assert!(ls > read * 14 / 10, "ls {ls} vs read {read}");
+    }
+
+    #[test]
+    fn write_cpu_exceeds_hit() {
+        let (m, mut rng) = model();
+        let n = 5_000;
+        let hit: u64 = (0..n).map(|_| m.cache_hit(OpKind::Stat, &mut rng)).sum();
+        let wr: u64 = (0..n).map(|_| m.write_cpu(&mut rng)).sum();
+        assert!(wr > hit);
+    }
+}

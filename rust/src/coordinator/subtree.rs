@@ -1,0 +1,227 @@
+//! The subtree operation protocol (Appendix C).
+//!
+//! HopsFS' three-phase protocol, augmented by λFS:
+//!
+//! 1. **Phase 1** — exclusive lock on the subtree root; the *subtree lock
+//!    flag* persists to NDB and the operation registers in the active
+//!    table (no two subtree operations may overlap).
+//! 2. **Phase 2** — quiesce: take/release DB write locks over every INode
+//!    in a predefined total order (also builds the in-memory tree and, in
+//!    λFS, computes the deployment set caching subtree metadata).
+//! 3. **Phase 3** — partition into sub-operation batches (default 512)
+//!    executed in parallel; λFS *serverlessly offloads* batches to helper
+//!    NameNodes to compensate for a serverless NN's small CPU allocation.
+//!
+//! λFS replaces per-INode invalidations with a single *prefix
+//! invalidation* executed once for the entire subtree.
+
+use crate::namespace::{DirId, InodeRef, Namespace};
+use crate::sim::Time;
+use crate::store::NdbStore;
+use crate::util::rng::Rng;
+
+/// Execution parameters for one subtree operation.
+#[derive(Clone, Copy, Debug)]
+pub struct SubtreeParams {
+    /// Sub-operation batch size (paper default: 512).
+    pub batch: usize,
+    /// Parallel executors: helper NameNodes × concurrency (λFS with
+    /// offloading) or leader handler threads (HopsFS / no offloading).
+    pub parallelism: u32,
+}
+
+/// The planned work for a subtree op.
+#[derive(Clone, Debug)]
+pub struct SubtreePlan {
+    pub root: DirId,
+    /// Ancestor chain of the root (for overlap detection).
+    pub ancestors: Vec<DirId>,
+    /// Directories in the subtree (preorder).
+    pub dirs: Vec<DirId>,
+    /// Total INodes (dirs + files).
+    pub total_inodes: u64,
+    /// Deployments caching subtree metadata (computed during Phase 2).
+    pub deployments: Vec<u32>,
+}
+
+impl SubtreePlan {
+    /// Build the plan from the namespace topology and a routing function.
+    pub fn build(ns: &Namespace, root: DirId, route_dir: impl Fn(DirId) -> u32) -> Self {
+        let dirs = ns.subtree_dirs(root);
+        let total_inodes = ns.subtree_inodes(root);
+        let mut deployments: Vec<u32> = dirs.iter().map(|&d| route_dir(d)).collect();
+        deployments.sort_unstable();
+        deployments.dedup();
+        let mut ancestors = Vec::new();
+        let mut at = ns.dir(root).parent;
+        while let Some(p) = at {
+            ancestors.push(p);
+            at = ns.dir(p).parent;
+        }
+        SubtreePlan { root, ancestors, dirs, total_inodes, deployments }
+    }
+
+    /// Number of sub-operation batches at the given batch size.
+    pub fn n_batches(&self, batch: usize) -> u64 {
+        self.total_inodes.div_ceil(batch.max(1) as u64)
+    }
+}
+
+/// Execute the three phases against the store, returning the completion
+/// time. The caller runs the coherence prefix-INV separately (λFS) or
+/// skips it (HopsFS).
+///
+/// Timing model: Phase 1 is one root transaction; Phase 2 is a sequential
+/// sweep of lock batches (the predefined total order serializes it);
+/// Phase 3 distributes batches over `parallelism` executors, each issuing
+/// its batch transactions back-to-back, all contending on the store's
+/// finite transaction slots.
+pub fn execute(
+    now: Time,
+    plan: &SubtreePlan,
+    params: SubtreeParams,
+    store: &mut NdbStore,
+    rng: &mut Rng,
+) -> Result<Time, crate::store::ndb::TxnError> {
+    // Phase 1: subtree lock flag + active-table registration.
+    // (`until` is a generous bound; released explicitly on completion.)
+    let until = now + 600 * crate::sim::time::SEC;
+    store.try_subtree_lock(now, plan.root, &plan.ancestors, until)?;
+    let root_inode = InodeRef::dir(plan.root);
+    let p1_done = store.write_txn(now, &[root_inode], false, rng);
+
+    // Phase 2: quiesce — lock-sweep the subtree in total order. Batched
+    // read-lock passes; sequential because the total order serializes it.
+    let quiesce_batches = plan.total_inodes.div_ceil(1024).max(1);
+    let mut p2_done = p1_done;
+    for _ in 0..quiesce_batches {
+        p2_done = store.read_batch(p2_done, 64, rng);
+    }
+
+    // Phase 3: batched sub-operations over `parallelism` executors.
+    let n_batches = plan.n_batches(params.batch);
+    let executors = params.parallelism.max(1) as u64;
+    let mut executor_free: Vec<Time> = vec![p2_done; executors.min(n_batches).max(1) as usize];
+    let mut batch_rows: Vec<InodeRef> = Vec::with_capacity(params.batch.min(4096));
+    let mut done = p2_done;
+    for b in 0..n_batches {
+        // Rows for this batch: synthetic INode refs within the subtree
+        // (disjoint across batches, so no row-lock contention — contention
+        // is on the store's transaction slots, as in the paper).
+        batch_rows.clear();
+        let dir = plan.dirs[(b % plan.dirs.len() as u64) as usize];
+        let width = params.batch.min(4096);
+        for i in 0..width {
+            batch_rows.push(InodeRef::file(dir, (b as u32) << 12 | i as u32));
+        }
+        let e = (b % executor_free.len() as u64) as usize;
+        let start = executor_free[e];
+        let commit = store.write_txn(start, &batch_rows, false, rng);
+        executor_free[e] = commit;
+        done = done.max(commit);
+    }
+
+    store.release_subtree_lock(plan.root);
+    Ok(done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::namespace::generate::{generate, NamespaceParams};
+    use crate::util::fnv;
+
+    fn setup() -> (Namespace, NdbStore, Rng) {
+        let mut rng = Rng::new(4);
+        let ns = generate(
+            &NamespaceParams { n_dirs: 256, files_per_dir: 32, ..Default::default() },
+            &mut rng,
+        );
+        let store = NdbStore::new(SystemConfig::default().store);
+        (ns, store, rng)
+    }
+
+    fn plan(ns: &Namespace, root: DirId) -> SubtreePlan {
+        SubtreePlan::build(ns, root, |d| fnv::route(&ns.dir(d).path, 16))
+    }
+
+    #[test]
+    fn plan_counts_inodes_and_deployments() {
+        let (ns, _, _) = setup();
+        let p = plan(&ns, DirId(0));
+        assert_eq!(p.total_inodes, ns.subtree_inodes(DirId(0)));
+        assert!(!p.deployments.is_empty() && p.deployments.len() <= 16);
+        assert!(p.ancestors.is_empty(), "root has no ancestors");
+        // Deployments deduplicated & sorted.
+        let mut d = p.deployments.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d, p.deployments);
+    }
+
+    #[test]
+    fn n_batches_rounds_up() {
+        let (ns, _, _) = setup();
+        let p = plan(&ns, DirId(0));
+        assert_eq!(p.n_batches(usize::MAX / 2), 1);
+        assert_eq!(p.n_batches(1), p.total_inodes);
+        let b512 = p.n_batches(512);
+        assert_eq!(b512, p.total_inodes.div_ceil(512));
+    }
+
+    #[test]
+    fn execute_completes_and_releases_lock() {
+        let (ns, mut store, mut rng) = setup();
+        let p = plan(&ns, DirId(1));
+        let done =
+            execute(0, &p, SubtreeParams { batch: 512, parallelism: 8 }, &mut store, &mut rng)
+                .unwrap();
+        assert!(done > 0);
+        // Lock released: a second subtree op on the same root succeeds.
+        let done2 =
+            execute(done, &p, SubtreeParams { batch: 512, parallelism: 8 }, &mut store, &mut rng)
+                .unwrap();
+        assert!(done2 > done);
+    }
+
+    #[test]
+    fn overlapping_subtree_ops_conflict() {
+        let (ns, mut store, _) = setup();
+        let p = plan(&ns, DirId(1));
+        store.try_subtree_lock(0, DirId(1), &[], 1_000_000_000).unwrap();
+        let mut rng = Rng::new(9);
+        let err = execute(10, &p, SubtreeParams { batch: 512, parallelism: 4 }, &mut store, &mut rng);
+        assert!(err.is_err(), "active subtree op blocks overlap");
+    }
+
+    #[test]
+    fn more_parallelism_is_faster_until_store_bound() {
+        let (ns, _, mut rng) = setup();
+        let p = plan(&ns, DirId(0)); // whole tree: thousands of inodes
+        let cfg = SystemConfig::default().store;
+        let mut s1 = NdbStore::new(cfg.clone());
+        let t1 = execute(0, &p, SubtreeParams { batch: 128, parallelism: 1 }, &mut s1, &mut rng)
+            .unwrap();
+        let mut s8 = NdbStore::new(cfg);
+        let t8 = execute(0, &p, SubtreeParams { batch: 128, parallelism: 16 }, &mut s8, &mut rng)
+            .unwrap();
+        assert!(t8 < t1, "offloading speeds up subtree ops: {t8} vs {t1}");
+    }
+
+    #[test]
+    fn larger_batches_fewer_round_trips() {
+        let (ns, _, mut rng) = setup();
+        let p = plan(&ns, DirId(0));
+        let cfg = SystemConfig::default().store;
+        let mut small = NdbStore::new(cfg.clone());
+        let t_small =
+            execute(0, &p, SubtreeParams { batch: 32, parallelism: 8 }, &mut small, &mut rng)
+                .unwrap();
+        let mut big = NdbStore::new(cfg);
+        let t_big =
+            execute(0, &p, SubtreeParams { batch: 512, parallelism: 8 }, &mut big, &mut rng)
+                .unwrap();
+        assert!(t_big < t_small, "batch=512 beats batch=32: {t_big} vs {t_small}");
+    }
+}

@@ -1,0 +1,26 @@
+//! The FaaS platform substrate (OpenWhisk-like).
+//!
+//! λFS registers `n` uniquely named serverless NameNode *function
+//! deployments*; the platform provisions *function instances* of a
+//! deployment on demand (§2 Terminology). This module models the platform
+//! behaviours the paper's techniques are designed around:
+//!
+//! * **HTTP invocation path** — API gateway + invoker; routes to a warm
+//!   instance with free concurrency, or provisions a new instance (cold
+//!   start) when none exists — this is the only path that can scale a
+//!   deployment out (§3.4).
+//! * **ConcurrencyLevel** — the paper's OpenWhisk extension letting one
+//!   instance serve several HTTP RPCs at once.
+//! * **Cold starts** — lognormal container-provision + JVM boot time.
+//! * **vCPU caps & thrashing** — under a resource cap, provisioning a new
+//!   container may require destroying another; frequent churn collapses
+//!   throughput (Appendix B), modeled via a churn penalty on cold starts.
+//! * **Idle reclamation** — warm instances idle past a deadline are
+//!   reclaimed (scale-in), and the provider may also reclaim instances at
+//!   any time (§7; fault-tolerance experiments kill instances directly).
+//! * **Pay-per-use accounting** — per-instance "actively serving" time at
+//!   1 ms granularity for the Lambda cost model (Fig. 9).
+
+pub mod platform;
+
+pub use platform::{InstanceId, InstanceState, Platform, PlatformStats};

@@ -1,0 +1,584 @@
+//! The platform state machine: deployments, instances, cold starts,
+//! concurrency, billing, reclamation, and fault injection.
+
+use crate::config::{FaasConfig, LambdaFsConfig};
+use crate::sim::station::Station;
+use crate::sim::{time, Time};
+use crate::util::dist::LogNormal;
+use crate::util::rng::Rng;
+
+/// Dense instance id (slab index; never reused within a run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstanceId(pub u32);
+
+/// Instance lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Cold-starting; warm at the given time.
+    Starting(Time),
+    Warm,
+    /// Reclaimed/killed at the given time.
+    Dead(Time),
+}
+
+/// One function instance (= one serverless NameNode, §2 Terminology).
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub id: InstanceId,
+    pub deployment: u32,
+    pub state: InstanceState,
+    /// CPU slots: `ConcurrencyLevel` concurrent requests.
+    pub cpu: Station,
+    /// In-flight request count (for busy-interval billing).
+    active: u32,
+    active_since: Time,
+    /// Watermark for analytic interval billing (see [`Instance::bill`]).
+    billed_until: Time,
+    /// Accumulated actively-serving microseconds (pay-per-use billing).
+    pub busy_us: u64,
+    pub requests: u64,
+    pub last_used: Time,
+    pub born: Time,
+}
+
+impl Instance {
+    /// Is this instance past its cold start at `now`?
+    pub fn warm_at(&self, now: Time) -> bool {
+        match self.state {
+            InstanceState::Starting(t) => now >= t,
+            InstanceState::Warm => true,
+            InstanceState::Dead(_) => false,
+        }
+    }
+
+    pub fn alive(&self) -> bool {
+        !matches!(self.state, InstanceState::Dead(_))
+    }
+
+    /// Billing hook: a request begins service.
+    pub fn begin_request(&mut self, now: Time) {
+        if self.active == 0 {
+            self.active_since = now;
+        }
+        self.active += 1;
+        self.requests += 1;
+        self.last_used = now;
+    }
+
+    /// Billing hook: a request completes.
+    pub fn end_request(&mut self, now: Time) {
+        debug_assert!(self.active > 0);
+        self.active -= 1;
+        if self.active == 0 {
+            self.busy_us += now.saturating_sub(self.active_since);
+        }
+        self.last_used = now;
+    }
+
+    /// Busy time including a still-open active interval up to `now`.
+    pub fn busy_us_at(&self, now: Time) -> u64 {
+        if self.active > 0 {
+            self.busy_us + now.saturating_sub(self.active_since)
+        } else {
+            self.busy_us
+        }
+    }
+
+    /// Interval billing for the analytic simulation: credit the busy span
+    /// `[from, to)` as actively-serving time, unioned against previously
+    /// billed intervals via a watermark (requests on one instance arrive in
+    /// roughly increasing order, so overlap collapses correctly and
+    /// concurrent requests never double-bill — the paper bills a NameNode
+    /// once per 1 ms interval in which it serves *any* request).
+    pub fn bill(&mut self, from: Time, to: Time) {
+        let start = from.max(self.billed_until);
+        if to > start {
+            self.busy_us += to - start;
+        }
+        self.billed_until = self.billed_until.max(to);
+        self.requests += 1;
+        self.last_used = self.last_used.max(to);
+    }
+}
+
+/// Aggregate platform counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlatformStats {
+    pub cold_starts: u64,
+    pub evictions_for_capacity: u64,
+    pub idle_reclaims: u64,
+    pub kills: u64,
+    pub http_invocations: u64,
+    pub rejected_at_capacity: u64,
+}
+
+/// The FaaS platform.
+#[derive(Clone, Debug)]
+pub struct Platform {
+    cfg: FaasConfig,
+    lcfg: LambdaFsConfig,
+    pub instances: Vec<Instance>,
+    /// Live instance ids per deployment.
+    by_deployment: Vec<Vec<InstanceId>>,
+    /// API gateway as a finite station (saturates under request storms).
+    gateway: Station,
+    cold: LogNormal,
+    stats: PlatformStats,
+    vcpus_in_use: f64,
+}
+
+impl Platform {
+    pub fn new(cfg: FaasConfig, lcfg: LambdaFsConfig) -> Self {
+        let n = lcfg.n_deployments as usize;
+        Platform {
+            cold: LogNormal::from_median(cfg.cold_start_ms, cfg.cold_start_sigma),
+            gateway: Station::new(cfg.gateway_capacity),
+            cfg,
+            lcfg,
+            instances: Vec::new(),
+            by_deployment: vec![Vec::new(); n],
+            stats: PlatformStats::default(),
+            vcpus_in_use: 0.0,
+        }
+    }
+
+    pub fn stats(&self) -> PlatformStats {
+        self.stats
+    }
+
+    pub fn n_deployments(&self) -> u32 {
+        self.lcfg.n_deployments
+    }
+
+    pub fn vcpus_in_use(&self) -> f64 {
+        self.vcpus_in_use
+    }
+
+    /// Live instances of a deployment.
+    pub fn deployment_instances(&self, dep: u32) -> &[InstanceId] {
+        &self.by_deployment[dep as usize]
+    }
+
+    /// Count of live instances across all deployments.
+    pub fn live_instances(&self) -> usize {
+        self.by_deployment.iter().map(Vec::len).sum()
+    }
+
+    pub fn instance(&self, id: InstanceId) -> &Instance {
+        &self.instances[id.0 as usize]
+    }
+
+    pub fn instance_mut(&mut self, id: InstanceId) -> &mut Instance {
+        &mut self.instances[id.0 as usize]
+    }
+
+    /// Max instances the vCPU budget allows overall.
+    fn vcpu_headroom(&self) -> bool {
+        self.vcpus_in_use + self.lcfg.vcpus_per_namenode
+            <= self.cfg.vcpu_limit * self.lcfg.max_vcpu_fraction + 1e-9
+    }
+
+    /// The API gateway leg of an HTTP invocation: queueing + overhead.
+    /// Returns when the invoker sees the request.
+    pub fn gateway_admit(&mut self, now: Time, rng: &mut Rng) -> Time {
+        self.stats.http_invocations += 1;
+        let svc = time::from_ms(self.cfg.gateway_overhead_ms * rng.range_f64(0.8, 1.3));
+        let (_, done) = self.gateway.submit(now, svc);
+        done
+    }
+
+    /// Invoker placement for an HTTP request on `dep`. `now` is the
+    /// *invocation* time — the congestion signal is sampled here, NOT at
+    /// the (later) request-arrival time, because OpenWhisk decides to add
+    /// containers from the queue it sees when the activation shows up.
+    /// Picks the warm instance with the lightest backlog; if every
+    /// instance's queueing delay exceeds a tolerance and the deployment
+    /// may scale out, provisions a new instance.
+    ///
+    /// Returns `(instance, earliest_service_start)`.
+    pub fn place_http(&mut self, dep: u32, now: Time, rng: &mut Rng) -> (InstanceId, Time) {
+        let cap = self.lcfg.autoscale.per_deployment_cap();
+        let live = &self.by_deployment[dep as usize];
+
+        // Lightest-backlog live instance (includes still-starting ones:
+        // OpenWhisk queues onto a starting container rather than starting
+        // another for the same burst arrival). Scale-out decisions use the
+        // *queueing* delay beyond instance readiness — a cold-starting
+        // instance's boot time is not a reason to boot yet another one.
+        let mut best: Option<(InstanceId, Time)> = None;
+        let mut min_queue_delay = Time::MAX;
+        for &id in live {
+            let inst = &self.instances[id.0 as usize];
+            let ready = match inst.state {
+                InstanceState::Starting(t) => t,
+                InstanceState::Warm => 0,
+                InstanceState::Dead(_) => continue,
+            };
+            let base = now.max(ready);
+            let start = inst.cpu.earliest_start(base);
+            min_queue_delay = min_queue_delay.min(start.saturating_sub(base));
+            match best {
+                Some((_, b)) if b <= start => {}
+                _ => best = Some((id, start)),
+            }
+        }
+
+        // Scale out if: no instance, or every instance's queueing backlog
+        // exceeds a tolerance and the deployment may grow.
+        let backlog_tolerance = time::from_ms(2.0);
+        let may_grow = (live.len() as u32) < cap;
+        let should_grow = match best {
+            None => true,
+            Some(_) => may_grow && min_queue_delay > backlog_tolerance,
+        };
+
+        if should_grow && may_grow {
+            if let Some((id, ready)) = self.provision(dep, now, rng) {
+                return (id, ready);
+            }
+        }
+
+        match best {
+            Some((id, start)) => (id, start),
+            None => {
+                // Nothing live in this deployment and no idle victim to
+                // evict: the platform must still place the activation.
+                // Overcommit with the churn penalty — under a hard vCPU
+                // cap this is exactly the thrashing regime of Appendix B
+                // (destroy/create churn, long effective cold starts).
+                match self.provision_with_eviction(dep, now, rng) {
+                    Some(placed) => placed,
+                    None => {
+                        self.stats.rejected_at_capacity += 1;
+                        self.spawn(dep, now, rng, true)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Provision a new instance if vCPU headroom allows; otherwise try
+    /// evicting an idle instance (thrashing behaviour under caps).
+    fn provision(&mut self, dep: u32, now: Time, rng: &mut Rng) -> Option<(InstanceId, Time)> {
+        if self.vcpu_headroom() {
+            Some(self.spawn(dep, now, rng, false))
+        } else {
+            self.provision_with_eviction(dep, now, rng)
+        }
+    }
+
+    fn provision_with_eviction(
+        &mut self,
+        dep: u32,
+        now: Time,
+        rng: &mut Rng,
+    ) -> Option<(InstanceId, Time)> {
+        // Find the globally least-recently-used *idle, warm* instance in
+        // another deployment and destroy it to make room. Never evict a
+        // container that is still cold-starting — destroying warming
+        // containers is precisely the thrashing spiral of Appendix B.
+        let mut victim: Option<(InstanceId, Time)> = None;
+        for inst in &self.instances {
+            if !inst.alive() || inst.deployment == dep {
+                continue;
+            }
+            if inst.active > 0 || !inst.warm_at(now) {
+                continue;
+            }
+            match victim {
+                Some((_, t)) if t <= inst.last_used => {}
+                _ => victim = Some((inst.id, inst.last_used)),
+            }
+        }
+        let (victim, _) = victim?;
+        self.kill(victim, now, true);
+        self.stats.evictions_for_capacity += 1;
+        // Churn penalty: destroy+create is slower than a clean cold start.
+        let (id, ready) = self.spawn(dep, now, rng, true);
+        Some((id, ready))
+    }
+
+    fn spawn(&mut self, dep: u32, now: Time, rng: &mut Rng, churn: bool) -> (InstanceId, Time) {
+        let mut cold_ms = self.cold.sample(rng);
+        if churn {
+            cold_ms += self.cfg.churn_penalty_ms * rng.range_f64(0.8, 1.2);
+        }
+        let ready = now + time::from_ms(cold_ms);
+        let id = InstanceId(self.instances.len() as u32);
+        self.instances.push(Instance {
+            id,
+            deployment: dep,
+            state: InstanceState::Starting(ready),
+            cpu: Station::new(self.lcfg.concurrency_level),
+            active: 0,
+            billed_until: 0,
+            active_since: 0,
+            busy_us: 0,
+            requests: 0,
+            last_used: now,
+            born: now,
+        });
+        self.by_deployment[dep as usize].push(id);
+        self.vcpus_in_use += self.lcfg.vcpus_per_namenode;
+        self.stats.cold_starts += 1;
+        (id, ready)
+    }
+
+    /// Unconditionally provision an instance of `dep` (pre-warming for
+    /// experiments that start with a warm fleet, e.g. Fig. 15's 36 NNs).
+    /// Ignores backlog heuristics but honors the vCPU cap via eviction.
+    pub fn force_spawn(&mut self, dep: u32, now: Time, rng: &mut Rng) -> (InstanceId, Time) {
+        if self.vcpu_headroom() {
+            self.spawn(dep, now, rng, false)
+        } else {
+            self.provision_with_eviction(dep, now, rng)
+                .unwrap_or_else(|| self.spawn(dep, now, rng, true))
+        }
+    }
+
+    /// Promote instances past their cold start to Warm (bookkeeping).
+    pub fn settle(&mut self, now: Time) {
+        for inst in &mut self.instances {
+            if let InstanceState::Starting(t) = inst.state {
+                if now >= t {
+                    inst.state = InstanceState::Warm;
+                }
+            }
+        }
+    }
+
+    /// A warm instance of `dep` reachable for TCP RPCs (any live, warm
+    /// instance — connection state lives in the RPC fabric). Returns the
+    /// one with the lightest CPU backlog.
+    pub fn warm_instance(&self, dep: u32, now: Time) -> Option<InstanceId> {
+        let mut best: Option<(InstanceId, Time)> = None;
+        for &id in &self.by_deployment[dep as usize] {
+            let inst = &self.instances[id.0 as usize];
+            if !inst.warm_at(now) {
+                continue;
+            }
+            let start = inst.cpu.earliest_start(now);
+            match best {
+                Some((_, b)) if b <= start => {}
+                _ => best = Some((id, start)),
+            }
+        }
+        best.map(|(id, _)| id)
+    }
+
+    /// Kill an instance (fault injection, capacity eviction, reclaim).
+    pub fn kill(&mut self, id: InstanceId, now: Time, for_capacity: bool) {
+        let inst = &mut self.instances[id.0 as usize];
+        if !inst.alive() {
+            return;
+        }
+        if inst.active > 0 {
+            inst.busy_us += now.saturating_sub(inst.active_since);
+            inst.active = 0;
+        }
+        inst.state = InstanceState::Dead(now);
+        let dep = inst.deployment as usize;
+        self.by_deployment[dep].retain(|&x| x != id);
+        self.vcpus_in_use -= self.lcfg.vcpus_per_namenode;
+        if !for_capacity {
+            self.stats.kills += 1;
+        }
+    }
+
+    /// Scale-in: reclaim instances idle longer than `idle_reclaim_ms`.
+    /// Returns reclaimed ids.
+    pub fn reclaim_idle(&mut self, now: Time) -> Vec<InstanceId> {
+        let deadline = time::from_ms(self.lcfg.idle_reclaim_ms);
+        let mut victims = Vec::new();
+        for inst in &self.instances {
+            if inst.alive()
+                && inst.active == 0
+                && inst.warm_at(now)
+                && now.saturating_sub(inst.last_used) >= deadline
+            {
+                victims.push(inst.id);
+            }
+        }
+        for &v in &victims {
+            // Keep at least one instance per deployment warm so TCP
+            // clients retain a target (λFS relies on warm pools).
+            let dep = self.instances[v.0 as usize].deployment as usize;
+            if self.by_deployment[dep].len() > 1 {
+                self.kill(v, now, true);
+                self.stats.idle_reclaims += 1;
+            }
+        }
+        victims
+    }
+
+    /// Total actively-serving GB-seconds up to `now` (cost model input).
+    pub fn busy_gb_seconds(&self, now: Time) -> f64 {
+        let gb = self.lcfg.gb_per_namenode;
+        self.instances
+            .iter()
+            .map(|i| i.busy_us_at(now) as f64 / 1e6 * gb)
+            .sum()
+    }
+
+    /// Total requests served (per-request pricing input).
+    pub fn total_requests(&self) -> u64 {
+        self.instances.iter().map(|i| i.requests).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn platform() -> (Platform, Rng) {
+        let c = SystemConfig::default();
+        (Platform::new(c.faas, c.lambda_fs), Rng::new(11))
+    }
+
+    #[test]
+    fn first_http_cold_starts() {
+        let (mut p, mut rng) = platform();
+        let (id, ready) = p.place_http(3, 1_000, &mut rng);
+        assert_eq!(p.instance(id).deployment, 3);
+        assert!(ready > 1_000 + time::from_ms(300.0), "cold start takes time");
+        assert_eq!(p.stats().cold_starts, 1);
+        assert_eq!(p.live_instances(), 1);
+    }
+
+    #[test]
+    fn warm_instance_reused() {
+        let (mut p, mut rng) = platform();
+        let (id1, ready) = p.place_http(0, 0, &mut rng);
+        p.settle(ready);
+        let (id2, start) = p.place_http(0, ready + 10, &mut rng);
+        assert_eq!(id1, id2, "warm instance reused");
+        assert!(start <= ready + 10 + time::from_ms(1.0));
+        assert_eq!(p.stats().cold_starts, 1);
+    }
+
+    #[test]
+    fn saturated_deployment_scales_out() {
+        let (mut p, mut rng) = platform();
+        let (id1, ready) = p.place_http(0, 0, &mut rng);
+        p.settle(ready);
+        // Saturate the instance's concurrency slots with long jobs.
+        let conc = SystemConfig::default().lambda_fs.concurrency_level;
+        for _ in 0..conc * 4 {
+            p.instance_mut(id1).cpu.submit(ready, time::from_ms(10.0));
+        }
+        let (id2, _) = p.place_http(0, ready, &mut rng);
+        assert_ne!(id1, id2, "burst provisions a second instance");
+        assert_eq!(p.live_instances(), 2);
+    }
+
+    #[test]
+    fn autoscale_disabled_caps_at_one() {
+        let c = SystemConfig::default();
+        let mut lcfg = c.lambda_fs.clone();
+        lcfg.autoscale = crate::config::AutoScaleMode::Disabled;
+        let mut p = Platform::new(c.faas, lcfg);
+        let mut rng = Rng::new(1);
+        let (id1, ready) = p.place_http(0, 0, &mut rng);
+        p.settle(ready);
+        for _ in 0..64 {
+            p.instance_mut(id1).cpu.submit(ready, time::from_ms(50.0));
+        }
+        let (id2, _) = p.place_http(0, ready, &mut rng);
+        assert_eq!(id1, id2, "never scales past 1");
+        assert_eq!(p.live_instances(), 1);
+    }
+
+    #[test]
+    fn vcpu_cap_evicts_idle_instance() {
+        let c = SystemConfig::default();
+        let mut faas = c.faas.clone();
+        faas.vcpu_limit = 14.0; // room for exactly two 6.25-vCPU NNs (x0.928 cap)
+        let mut p = Platform::new(faas, c.lambda_fs.clone());
+        let mut rng = Rng::new(2);
+        let (_a, r1) = p.place_http(0, 0, &mut rng);
+        let (_b, r2) = p.place_http(1, 0, &mut rng);
+        p.settle(r1.max(r2));
+        assert_eq!(p.live_instances(), 2);
+        // Third deployment needs an instance: must evict one.
+        let (c3, _) = p.place_http(2, r1.max(r2) + 1, &mut rng);
+        assert_eq!(p.instance(c3).deployment, 2);
+        assert_eq!(p.live_instances(), 2, "capacity held");
+        assert_eq!(p.stats().evictions_for_capacity, 1);
+    }
+
+    #[test]
+    fn billing_tracks_active_intervals() {
+        let (mut p, mut rng) = platform();
+        let (id, ready) = p.place_http(0, 0, &mut rng);
+        p.settle(ready);
+        let inst = p.instance_mut(id);
+        inst.begin_request(ready);
+        inst.end_request(ready + 1_000);
+        inst.begin_request(ready + 5_000);
+        inst.begin_request(ready + 5_500); // overlapping: one interval
+        inst.end_request(ready + 6_000);
+        inst.end_request(ready + 7_000);
+        assert_eq!(inst.busy_us, 1_000 + 2_000);
+        assert_eq!(inst.requests, 3);
+    }
+
+    #[test]
+    fn busy_gb_seconds_scales_with_memory() {
+        let (mut p, mut rng) = platform();
+        let (id, ready) = p.place_http(0, 0, &mut rng);
+        p.settle(ready);
+        p.instance_mut(id).begin_request(ready);
+        p.instance_mut(id).end_request(ready + 2_000_000); // 2s active
+        let gb = SystemConfig::default().lambda_fs.gb_per_namenode;
+        assert!((p.busy_gb_seconds(ready + 2_000_000) - 2.0 * gb).abs() < 1e-6);
+    }
+
+    #[test]
+    fn idle_reclaim_keeps_one_per_deployment() {
+        let (mut p, mut rng) = platform();
+        let (a, r1) = p.place_http(0, 0, &mut rng);
+        p.settle(r1);
+        // saturate a; force scale-out
+        let conc = SystemConfig::default().lambda_fs.concurrency_level;
+        for _ in 0..conc * 4 {
+            p.instance_mut(a).cpu.submit(r1, time::from_ms(10.0));
+        }
+        let (_b, r2) = p.place_http(0, r1, &mut rng);
+        p.settle(r2);
+        assert_eq!(p.live_instances(), 2);
+        let far = r2 + time::from_ms(SystemConfig::default().lambda_fs.idle_reclaim_ms) + 1_000;
+        p.reclaim_idle(far);
+        assert_eq!(p.live_instances(), 1, "one instance kept warm");
+    }
+
+    #[test]
+    fn kill_removes_from_deployment() {
+        let (mut p, mut rng) = platform();
+        let (id, ready) = p.place_http(0, 0, &mut rng);
+        p.settle(ready);
+        p.kill(id, ready + 1, false);
+        assert_eq!(p.live_instances(), 0);
+        assert!(!p.instance(id).alive());
+        assert_eq!(p.stats().kills, 1);
+        assert!(p.warm_instance(0, ready + 2).is_none());
+        // Next HTTP cold-starts a replacement.
+        let (id2, _) = p.place_http(0, ready + 10, &mut rng);
+        assert_ne!(id, id2);
+    }
+
+    #[test]
+    fn gateway_saturates_under_storm() {
+        let c = SystemConfig::default();
+        let mut faas = c.faas.clone();
+        faas.gateway_capacity = 4;
+        let mut p = Platform::new(faas, c.lambda_fs.clone());
+        let mut rng = Rng::new(3);
+        let mut last = 0;
+        for _ in 0..64 {
+            last = p.gateway_admit(0, &mut rng);
+        }
+        // 64 requests over 4 slots at ~6ms each: ≥ 60ms of queueing.
+        assert!(last > time::from_ms(60.0), "storm queues at the gateway: {last}");
+    }
+}

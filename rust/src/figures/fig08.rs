@@ -1,0 +1,192 @@
+//! Figure 8: Spotify-workload throughput, NameNode count, and
+//! performance-per-cost for λFS vs HopsFS vs HopsFS+Cache vs
+//! cost-normalized HopsFS+Cache vs reduced-cache λFS (8a/8b/8c).
+
+use crate::baselines::HopsFs;
+use crate::metrics::cost::performance_per_cost;
+use crate::metrics::RunMetrics;
+use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::workload::OpenLoopSpec;
+
+use super::common::{self, Fixture, Scale};
+
+/// One system's outcome on one Spotify run.
+#[derive(Clone, Debug)]
+pub struct SystemOutcome {
+    pub name: &'static str,
+    pub metrics: RunMetrics,
+}
+
+/// The whole figure: all systems on one workload variant.
+#[derive(Debug)]
+pub struct Fig8 {
+    pub x_t: f64,
+    pub outcomes: Vec<SystemOutcome>,
+}
+
+/// Run Figure 8 at base throughput `paper_x_t` (25_000 for 8a, 50_000 for
+/// 8b; 8c derives from the same runs).
+pub fn run(scale: Scale, paper_x_t: f64) -> Fig8 {
+    let vcpus = scale.vcpus(512.0);
+    let x_t = scale.x_t(paper_x_t);
+    let Fixture { cfg, ns, sampler, mut rng } = common::fixture(scale, vcpus);
+    let mut spec_rng = rng.fork("schedule");
+    let spec = OpenLoopSpec {
+        schedule: crate::workload::ThroughputSchedule::pareto_bursty(
+            scale.duration_s(),
+            15,
+            x_t,
+            2.0,
+            7.0,
+            &mut spec_rng,
+        ),
+        mix: crate::workload::OpMix::spotify(),
+        n_clients: scale.clients(1024),
+        n_vms: 8,
+        namespace: crate::namespace::generate::NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+
+    let mut outcomes = Vec::new();
+
+    // λFS (paper: 50% of HopsFS vCPU for the 25k run; cap enforced by
+    // the platform budget).
+    {
+        let mut c = cfg.clone();
+        c.faas.vcpu_limit = vcpus * if paper_x_t <= 30_000.0 { 0.5 } else { 1.0 };
+        c.lambda_fs.gb_per_namenode = 6.0; // paper §5.2.2: 6 GB NNs here
+        let mut sys = LambdaFs::new(c, ns.clone(), spec.n_clients, spec.n_vms);
+        let mut r = rng.fork("lfs");
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+        outcomes.push(SystemOutcome { name: "lambdafs", metrics: sys.into_metrics() });
+    }
+
+    // reduced-cache λFS: cache capacity below the working-set size.
+    {
+        let mut c = cfg.clone();
+        c.faas.vcpu_limit = vcpus * if paper_x_t <= 30_000.0 { 0.5 } else { 1.0 };
+        c.lambda_fs.gb_per_namenode = 6.0;
+        let wss = ns.total_files() as usize + ns.n_dirs();
+        c.lambda_fs.cache_capacity = (wss / 2 / 16).max(64); // <50% WSS per deployment
+        let mut sys = LambdaFs::new(c, ns.clone(), spec.n_clients, spec.n_vms);
+        let mut r = rng.fork("lfs-reduced");
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+        outcomes.push(SystemOutcome { name: "lambdafs-reduced-cache", metrics: sys.into_metrics() });
+    }
+
+    // HopsFS (full vCPU allocation).
+    {
+        let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, false);
+        let mut r = rng.fork("hopsfs");
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+        outcomes.push(SystemOutcome { name: "hopsfs", metrics: sys.into_metrics() });
+    }
+
+    // HopsFS+Cache (full vCPU allocation).
+    {
+        let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, true);
+        let mut r = rng.fork("hopsfs-cache");
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+        outcomes.push(SystemOutcome { name: "hopsfs+cache", metrics: sys.into_metrics() });
+    }
+
+    // CN HopsFS+Cache: cost-normalized to λFS (paper: 72 / 144 vCPU of
+    // 512 for the 25k / 50k workloads).
+    {
+        let cn_vcpus = vcpus * if paper_x_t <= 30_000.0 { 72.0 / 512.0 } else { 144.0 / 512.0 };
+        let mut sys = HopsFs::new(cfg.clone(), ns.clone(), cn_vcpus.max(16.0), true);
+        let mut r = rng.fork("cn-hopsfs-cache");
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+        outcomes.push(SystemOutcome { name: "cn-hopsfs+cache", metrics: sys.into_metrics() });
+    }
+
+    Fig8 { x_t, outcomes }
+}
+
+impl Fig8 {
+    /// Print the summary rows and write the time-series CSV.
+    pub fn report(&self, label: &str) {
+        let rows: Vec<Vec<String>> = self
+            .outcomes
+            .iter()
+            .map(|o| {
+                let m = &o.metrics;
+                vec![
+                    o.name.to_string(),
+                    common::f0(m.avg_throughput()),
+                    common::f0(m.peak_throughput()),
+                    common::f2(m.avg_latency_ms()),
+                    common::f2(m.avg_read_latency_ms()),
+                    common::f2(m.avg_write_latency_ms()),
+                    common::f4(m.total_cost()),
+                    common::f0(m.peak_namenodes() as f64),
+                    common::f0(m.performance_per_cost()),
+                ]
+            })
+            .collect();
+        common::print_table(
+            &format!("Figure 8 ({label}): Spotify x_t={:.0} ops/s", self.x_t),
+            &[
+                "system",
+                "avg_tput",
+                "peak_tput",
+                "avg_lat_ms",
+                "read_ms",
+                "write_ms",
+                "cost_$",
+                "peak_NNs",
+                "perf/cost",
+            ],
+            &rows,
+        );
+
+        // Time series CSV: per second, per system.
+        let mut csv = Vec::new();
+        let max_len = self.outcomes.iter().map(|o| o.metrics.seconds.len()).max().unwrap_or(0);
+        for s in 0..max_len {
+            let mut cells = vec![s.to_string()];
+            for o in &self.outcomes {
+                let sec = o.metrics.seconds.get(s);
+                cells.push(sec.map(|x| x.completed.to_string()).unwrap_or_default());
+                cells.push(sec.map(|x| x.namenodes.to_string()).unwrap_or_default());
+                let ppc = sec
+                    .map(|x| performance_per_cost(x.completed as f64, x.cost_usd))
+                    .unwrap_or(0.0);
+                cells.push(format!("{ppc:.0}"));
+            }
+            csv.push(cells.join(","));
+        }
+        let header = std::iter::once("second".to_string())
+            .chain(self.outcomes.iter().flat_map(|o| {
+                [
+                    format!("{}_tput", o.name),
+                    format!("{}_nns", o.name),
+                    format!("{}_ppc", o.name),
+                ]
+            }))
+            .collect::<Vec<_>>()
+            .join(",");
+        common::write_csv(&format!("fig08_{label}.csv"), &header, &csv);
+    }
+
+    pub fn outcome(&self, name: &str) -> &RunMetrics {
+        &self.outcomes.iter().find(|o| o.name == name).expect("system ran").metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_shape_holds_at_tiny_scale() {
+        let fig = run(Scale(0.01), 25_000.0);
+        let lfs = fig.outcome("lambdafs");
+        let hops = fig.outcome("hopsfs");
+        // Paper: λFS ≥ HopsFS average throughput, lower read latency,
+        // lower cost.
+        assert!(lfs.avg_throughput() >= hops.avg_throughput() * 0.95);
+        assert!(lfs.read_lat.p50() < hops.read_lat.p50());
+        assert!(lfs.total_cost() < hops.total_cost());
+    }
+}

@@ -1,0 +1,77 @@
+//! Figure 9: cumulative cost of the 25k ops/s Spotify workload — λFS
+//! (pay-per-use), λFS (simplified/provisioned pricing), HopsFS,
+//! HopsFS+Cache.
+
+use super::common::{self, Scale};
+use super::fig08;
+
+#[derive(Debug)]
+pub struct Fig9 {
+    /// (second, lfs_ppu, lfs_simplified, hopsfs, hopsfs_cache) cumulative.
+    pub series: Vec<(usize, f64, f64, f64, f64)>,
+}
+
+pub fn run(scale: Scale) -> Fig9 {
+    let fig8 = fig08::run(scale, 25_000.0);
+    let lfs = fig8.outcome("lambdafs");
+    let hops = fig8.outcome("hopsfs");
+    let hc = fig8.outcome("hopsfs+cache");
+
+    let len = lfs.seconds.len().max(hops.seconds.len()).max(hc.seconds.len());
+    let mut series = Vec::with_capacity(len);
+    let (mut a, mut b, mut c, mut d) = (0.0, 0.0, 0.0, 0.0);
+    for s in 0..len {
+        a += lfs.seconds.get(s).map(|x| x.cost_usd).unwrap_or(0.0);
+        b += lfs.seconds.get(s).map(|x| x.cost_simplified_usd).unwrap_or(0.0);
+        c += hops.seconds.get(s).map(|x| x.cost_usd).unwrap_or(0.0);
+        d += hc.seconds.get(s).map(|x| x.cost_usd).unwrap_or(0.0);
+        series.push((s, a, b, c, d));
+    }
+    Fig9 { series }
+}
+
+impl Fig9 {
+    pub fn final_costs(&self) -> (f64, f64, f64, f64) {
+        self.series.last().map(|&(_, a, b, c, d)| (a, b, c, d)).unwrap_or_default()
+    }
+
+    pub fn report(&self) {
+        let (lfs, simp, hops, hc) = self.final_costs();
+        common::print_table(
+            "Figure 9: cumulative cost, 25k Spotify workload",
+            &["system", "total_$", "vs_hopsfs"],
+            &[
+                vec!["lambdafs (pay-per-use)".into(), common::f4(lfs), common::f2(hops / lfs.max(1e-9))],
+                vec!["lambdafs (simplified)".into(), common::f4(simp), common::f2(hops / simp.max(1e-9))],
+                vec!["hopsfs".into(), common::f4(hops), "1.00".into()],
+                vec!["hopsfs+cache".into(), common::f4(hc), common::f2(hops / hc.max(1e-9))],
+            ],
+        );
+        let rows: Vec<String> = self
+            .series
+            .iter()
+            .map(|(s, a, b, c, d)| format!("{s},{a:.6},{b:.6},{c:.6},{d:.6}"))
+            .collect();
+        common::write_csv(
+            "fig09_cost.csv",
+            "second,lambdafs_ppu,lambdafs_simplified,hopsfs,hopsfs_cache",
+            &rows,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_ordering_matches_paper() {
+        let fig = run(Scale(0.01));
+        let (lfs, simp, hops, hc) = fig.final_costs();
+        assert!(lfs < hops, "λFS cheaper than HopsFS: {lfs} vs {hops}");
+        assert!(simp >= lfs, "simplified pricing inflates λFS' cost");
+        assert!((hops - hc).abs() < hops * 0.01, "HopsFS and +Cache bill identically");
+        // Paper: 7.14x cheaper at full scale; assert a strong direction.
+        assert!(hops / lfs > 2.0, "cost ratio {}", hops / lfs);
+    }
+}

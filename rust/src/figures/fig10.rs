@@ -1,0 +1,75 @@
+//! Figure 10: read/write latency CDFs for λFS, HopsFS, HopsFS+Cache on
+//! both Spotify workload variants.
+
+use super::common::{self, Scale};
+use super::fig08;
+
+#[derive(Debug)]
+pub struct Fig10 {
+    pub label: &'static str,
+    /// (system, read_cdf, write_cdf) — CDF points are (latency_µs, frac).
+    pub cdfs: Vec<(String, Vec<(f64, f64)>, Vec<(f64, f64)>)>,
+}
+
+pub fn run(scale: Scale, paper_x_t: f64) -> Fig10 {
+    let fig8 = fig08::run(scale, paper_x_t);
+    let label = if paper_x_t <= 30_000.0 { "25k" } else { "50k" };
+    let mut cdfs = Vec::new();
+    for name in ["lambdafs", "hopsfs", "hopsfs+cache"] {
+        let m = fig8.outcome(name);
+        cdfs.push((name.to_string(), m.read_lat.cdf(), m.write_lat.cdf()));
+    }
+    Fig10 { label, cdfs }
+}
+
+impl Fig10 {
+    pub fn report(&self) {
+        let rows: Vec<Vec<String>> = self
+            .cdfs
+            .iter()
+            .map(|(name, read, write)| {
+                let q = |cdf: &Vec<(f64, f64)>, target: f64| -> f64 {
+                    cdf.iter().find(|(_, f)| *f >= target).map(|(v, _)| *v / 1000.0).unwrap_or(0.0)
+                };
+                vec![
+                    name.clone(),
+                    common::f2(q(read, 0.5)),
+                    common::f2(q(read, 0.99)),
+                    common::f2(q(write, 0.5)),
+                    common::f2(q(write, 0.99)),
+                ]
+            })
+            .collect();
+        common::print_table(
+            &format!("Figure 10 ({}): latency CDF quantiles (ms)", self.label),
+            &["system", "read_p50", "read_p99", "write_p50", "write_p99"],
+            &rows,
+        );
+        for (name, read, write) in &self.cdfs {
+            let r: Vec<String> =
+                read.iter().map(|(v, f)| format!("{:.1},{f:.6}", v / 1000.0)).collect();
+            common::write_csv(&format!("fig10_{}_{name}_read.csv", self.label), "lat_ms,frac", &r);
+            let w: Vec<String> =
+                write.iter().map(|(v, f)| format!("{:.1},{f:.6}", v / 1000.0)).collect();
+            common::write_csv(&format!("fig10_{}_{name}_write.csv", self.label), "lat_ms,frac", &w);
+        }
+    }
+
+    #[cfg(test)]
+    fn p50_read(&self, name: &str) -> f64 {
+        let (_, read, _) = self.cdfs.iter().find(|(n, _, _)| n == name).unwrap();
+        read.iter().find(|(_, f)| *f >= 0.5).map(|(v, _)| *v).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_cdf_ordering() {
+        let fig = run(Scale(0.01), 25_000.0);
+        // Paper Fig. 10: λFS' read CDF sits left of HopsFS'.
+        assert!(fig.p50_read("lambdafs") < fig.p50_read("hopsfs"));
+    }
+}

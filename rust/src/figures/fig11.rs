@@ -1,0 +1,151 @@
+//! Figure 11: client-driven scaling — fixed 512 vCPU, clients 8→1,024,
+//! 3,072 ops each, per-op-kind throughput across five systems.
+
+use crate::baselines::{CephFs, HopsFs, InfiniCacheMds};
+use crate::namespace::OpKind;
+use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::workload::ClosedLoopSpec;
+
+use super::common::{self, Fixture, Scale};
+
+#[derive(Debug)]
+pub struct Fig11 {
+    pub kind: OpKind,
+    /// (clients, per-system throughput) in the order of [`SYSTEMS`].
+    pub rows: Vec<(u32, Vec<f64>)>,
+}
+
+pub const SYSTEMS: [&str; 5] = ["lambdafs", "hopsfs", "hopsfs+cache", "infinicache", "cephfs"];
+
+/// Client counts swept (paper: 8..1024; scaled down proportionally).
+pub fn client_sizes(scale: Scale) -> Vec<u32> {
+    let max = common::clients_for(scale, 1024).max(64);
+    let mut sizes = Vec::new();
+    let mut c = 8u32;
+    while c <= max {
+        sizes.push(c);
+        c *= 2;
+    }
+    sizes
+}
+
+pub fn run(scale: Scale, kind: OpKind) -> Fig11 {
+    let vcpus = scale.vcpus(512.0);
+    let Fixture { cfg, ns, sampler, mut rng } = common::fixture(scale, vcpus);
+    let ops_per_client = ((3_072.0 * scale.0 * 8.0) as u32).clamp(256, 3_072);
+
+    let mut rows = Vec::new();
+    for &n_clients in &client_sizes(scale) {
+        let spec = ClosedLoopSpec {
+            kind,
+            n_clients,
+            n_vms: (n_clients / 128).clamp(1, 8),
+            ops_per_client,
+            namespace: crate::namespace::generate::NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut tput = Vec::new();
+        // λFS
+        {
+            let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), n_clients, spec.n_vms);
+            // The paper's λFS is a running service when the benchmark
+            // starts (e.g. 20 active NNs at the 8-client read test).
+            sys.prewarm(1);
+            let mut r = rng.fork(&format!("lfs{n_clients}"));
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+            tput.push(sys.into_metrics().sustained_throughput());
+        }
+        // HopsFS
+        {
+            let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, false);
+            let mut r = rng.fork(&format!("hops{n_clients}"));
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+            tput.push(sys.into_metrics().sustained_throughput());
+        }
+        // HopsFS+Cache
+        {
+            let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, true);
+            let mut r = rng.fork(&format!("hopsc{n_clients}"));
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+            tput.push(sys.into_metrics().sustained_throughput());
+        }
+        // InfiniCache
+        {
+            let mut sys = InfiniCacheMds::new(cfg.clone(), ns.clone(), 16);
+            let mut r = rng.fork(&format!("inf{n_clients}"));
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+            tput.push(sys.into_metrics().sustained_throughput());
+        }
+        // CephFS
+        {
+            let mut sys = CephFs::new(cfg.clone(), ns.clone(), vcpus);
+            let mut r = rng.fork(&format!("ceph{n_clients}"));
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+            tput.push(sys.into_metrics().sustained_throughput());
+        }
+        rows.push((n_clients, tput));
+    }
+    Fig11 { kind, rows }
+}
+
+impl Fig11 {
+    pub fn report(&self) {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|(c, t)| {
+                let mut cells = vec![c.to_string()];
+                cells.extend(t.iter().map(|x| common::f0(*x)));
+                cells
+            })
+            .collect();
+        let header: Vec<&str> =
+            std::iter::once("clients").chain(SYSTEMS.iter().copied()).collect();
+        common::print_table(
+            &format!("Figure 11: client-driven scaling, op={}", self.kind.name()),
+            &header,
+            &rows,
+        );
+        let csv: Vec<String> = self
+            .rows
+            .iter()
+            .map(|(c, t)| {
+                format!(
+                    "{c},{}",
+                    t.iter().map(|x| format!("{x:.0}")).collect::<Vec<_>>().join(",")
+                )
+            })
+            .collect();
+        common::write_csv(
+            &format!("fig11_{}.csv", self.kind.name()),
+            &header.join(","),
+            &csv,
+        );
+    }
+
+    /// Throughput of `system` at the largest client count.
+    pub fn final_tput(&self, system: &str) -> f64 {
+        let idx = SYSTEMS.iter().position(|s| *s == system).unwrap();
+        self.rows.last().unwrap().1[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_favor_lambdafs_at_scale() {
+        let fig = run(Scale(0.01), OpKind::Read);
+        // Paper: λFS 28.91x HopsFS for read at scale; assert it wins big.
+        // (The paper's 28.9x gap appears at LAMBDAFS_SCALE=1.0; at the
+        // tiny CI scale the sweep only just reaches HopsFS' saturation.)
+        assert!(
+            fig.final_tput("lambdafs") > fig.final_tput("hopsfs") * 1.05,
+            "λFS {} vs HopsFS {}",
+            fig.final_tput("lambdafs"),
+            fig.final_tput("hopsfs")
+        );
+        assert!(fig.final_tput("lambdafs") > fig.final_tput("infinicache"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Figure 12: resource scaling — vCPUs 16→512, fixed client count per
+//! size, per-op-kind throughput across five systems.
+
+use crate::baselines::{CephFs, HopsFs, InfiniCacheMds};
+use crate::namespace::OpKind;
+use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::workload::ClosedLoopSpec;
+
+use super::common::{self, Fixture, Scale};
+pub use super::fig11::SYSTEMS;
+
+#[derive(Debug)]
+pub struct Fig12 {
+    pub kind: OpKind,
+    pub rows: Vec<(f64, Vec<f64>)>,
+}
+
+pub fn vcpu_sizes(scale: Scale) -> Vec<f64> {
+    let max = scale.vcpus(512.0);
+    let mut sizes = Vec::new();
+    let mut v = 16.0;
+    while v <= max {
+        sizes.push(v);
+        v *= 2.0;
+    }
+    if *sizes.last().unwrap_or(&0.0) < max {
+        sizes.push(max);
+    }
+    sizes
+}
+
+pub fn run(scale: Scale, kind: OpKind) -> Fig12 {
+    let Fixture { cfg, ns, sampler, mut rng } = common::fixture(scale, scale.vcpus(512.0));
+    let n_clients = common::clients_for(scale, 512).max(64);
+    let ops_per_client = ((3_072.0 * scale.0 * 8.0) as u32).clamp(256, 3_072);
+    let spec = ClosedLoopSpec {
+        kind,
+        n_clients,
+        n_vms: (n_clients / 128).clamp(1, 8),
+        ops_per_client,
+        namespace: crate::namespace::generate::NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+
+    let mut rows = Vec::new();
+    for &vcpus in &vcpu_sizes(scale) {
+        let mut tput = Vec::new();
+        {
+            let mut c = cfg.clone();
+            c.faas.vcpu_limit = vcpus;
+            let mut sys = LambdaFs::new(c, ns.clone(), n_clients, spec.n_vms);
+            sys.prewarm(1); // running service at benchmark start
+            let mut r = rng.fork(&format!("lfs{vcpus}"));
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+            tput.push(sys.into_metrics().sustained_throughput());
+        }
+        {
+            let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, false);
+            let mut r = rng.fork(&format!("hops{vcpus}"));
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+            tput.push(sys.into_metrics().sustained_throughput());
+        }
+        {
+            let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, true);
+            let mut r = rng.fork(&format!("hopsc{vcpus}"));
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+            tput.push(sys.into_metrics().sustained_throughput());
+        }
+        {
+            let fleet = ((vcpus / 6.25) as u32).clamp(4, 64);
+            let mut c = cfg.clone();
+            c.faas.vcpu_limit = vcpus;
+            let mut sys = InfiniCacheMds::new(c, ns.clone(), fleet);
+            let mut r = rng.fork(&format!("inf{vcpus}"));
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+            tput.push(sys.into_metrics().sustained_throughput());
+        }
+        {
+            let mut sys = CephFs::new(cfg.clone(), ns.clone(), vcpus);
+            let mut r = rng.fork(&format!("ceph{vcpus}"));
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+            tput.push(sys.into_metrics().sustained_throughput());
+        }
+        rows.push((vcpus, tput));
+    }
+    Fig12 { kind, rows }
+}
+
+impl Fig12 {
+    pub fn report(&self) {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|(v, t)| {
+                let mut cells = vec![common::f0(*v)];
+                cells.extend(t.iter().map(|x| common::f0(*x)));
+                cells
+            })
+            .collect();
+        let header: Vec<&str> = std::iter::once("vcpus").chain(SYSTEMS.iter().copied()).collect();
+        common::print_table(
+            &format!("Figure 12: resource scaling, op={}", self.kind.name()),
+            &header,
+            &rows,
+        );
+        let csv: Vec<String> = self
+            .rows
+            .iter()
+            .map(|(v, t)| {
+                format!(
+                    "{v:.0},{}",
+                    t.iter().map(|x| format!("{x:.0}")).collect::<Vec<_>>().join(",")
+                )
+            })
+            .collect();
+        common::write_csv(&format!("fig12_{}.csv", self.kind.name()), &header.join(","), &csv);
+    }
+
+    pub fn tput_at(&self, system: &str, idx: usize) -> f64 {
+        let s = SYSTEMS.iter().position(|s| *s == system).unwrap();
+        self.rows[idx].1[s]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambdafs_scales_with_resources() {
+        let fig = run(Scale(0.01), OpKind::Read);
+        let first = fig.tput_at("lambdafs", 0);
+        let last = fig.tput_at("lambdafs", fig.rows.len() - 1);
+        // Paper: throughput grows with allocation (34x at full scale).
+        assert!(last > first * 1.2, "λFS resource scaling: {first} -> {last}");
+    }
+}

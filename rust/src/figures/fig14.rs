@@ -1,0 +1,98 @@
+//! Figure 14: auto-scaling ablation — enabled / limited (≤2–3 instances
+//! per deployment) / disabled (1 instance), per-op-kind throughput.
+
+use crate::config::AutoScaleMode;
+use crate::namespace::OpKind;
+use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::workload::ClosedLoopSpec;
+
+use super::common::{self, Fixture, Scale};
+
+#[derive(Debug)]
+pub struct Fig14 {
+    /// (op, enabled, limited, disabled).
+    pub rows: Vec<(OpKind, f64, f64, f64)>,
+}
+
+pub fn run(scale: Scale) -> Fig14 {
+    let vcpus = scale.vcpus(512.0);
+    let Fixture { cfg, ns, sampler, mut rng } = common::fixture(scale, vcpus);
+    let n_clients = common::clients_for(scale, 2048).max(256);
+    let ops_per_client = ((3_072.0 * scale.0 * 8.0) as u32).clamp(256, 1_024);
+
+    let mut rows = Vec::new();
+    for kind in [OpKind::Read, OpKind::Stat, OpKind::Ls, OpKind::Create, OpKind::Mkdir] {
+        let spec = ClosedLoopSpec {
+            kind,
+            n_clients,
+            n_vms: (n_clients / 128).clamp(1, 8),
+            ops_per_client,
+            namespace: crate::namespace::generate::NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let run_mode = |mode: AutoScaleMode, tag: &str, rng: &mut crate::util::rng::Rng| {
+            let mut c = cfg.clone();
+            c.lambda_fs.autoscale = mode;
+            let mut sys = LambdaFs::new(c, ns.clone(), n_clients, spec.n_vms);
+            sys.prewarm(1); // running service at benchmark start
+            let mut r = rng.fork(&format!("{tag}{}", kind.name()));
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+            sys.into_metrics().sustained_throughput()
+        };
+        let enabled = run_mode(AutoScaleMode::Enabled, "en", &mut rng);
+        let limited = run_mode(AutoScaleMode::Limited(3), "lim", &mut rng);
+        let disabled = run_mode(AutoScaleMode::Disabled, "dis", &mut rng);
+        rows.push((kind, enabled, limited, disabled));
+    }
+    Fig14 { rows }
+}
+
+impl Fig14 {
+    pub fn report(&self) {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|(k, e, l, d)| {
+                vec![
+                    k.name().to_string(),
+                    common::f0(*e),
+                    common::f0(*l),
+                    common::f0(*d),
+                    common::f2(e / l.max(1.0)),
+                    common::f2(e / d.max(1.0)),
+                ]
+            })
+            .collect();
+        common::print_table(
+            "Figure 14: auto-scaling ablation (peak ops/s)",
+            &["op", "enabled", "limited", "disabled", "en/lim", "en/dis"],
+            &rows,
+        );
+        let csv: Vec<String> = self
+            .rows
+            .iter()
+            .map(|(k, e, l, d)| format!("{},{e:.0},{l:.0},{d:.0}", k.name()))
+            .collect();
+        common::write_csv("fig14_autoscaling.csv", "op,enabled,limited,disabled", &csv);
+    }
+
+    pub fn row(&self, kind: OpKind) -> (f64, f64, f64) {
+        let r = self.rows.iter().find(|(k, ..)| *k == kind).unwrap();
+        (r.1, r.2, r.3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_ordering_for_reads() {
+        let fig = run(Scale(0.01));
+        let (e, l, d) = fig.row(OpKind::Read);
+        // Paper: 2.85-3.17x enabled/disabled at full scale; the CI-scale
+        // sweep reaches a milder saturation, so assert ordering + margin.
+        assert!(e >= l * 0.95, "enabled {e} >= limited {l}");
+        assert!(e > d * 1.15, "read ablation ratio: {}", e / d);
+    }
+}

@@ -1,0 +1,115 @@
+//! Figure 16: λIndexFS vs IndexFS on BeeGFS — tree-test client-driven
+//! scaling, variable (10k+10k per client) and fixed (1M+1M total)
+//! workloads, clients 2→256.
+
+use crate::baselines::indexfs::{run_tree_test, IndexFs, LambdaIndexFs, TreeTestResult};
+
+use super::common::{self, Fixture, Scale};
+
+#[derive(Debug)]
+pub struct Fig16 {
+    pub variable: Vec<(u32, TreeTestResult, TreeTestResult)>,
+    pub fixed: Vec<(u32, TreeTestResult, TreeTestResult)>,
+}
+
+fn client_sizes(scale: Scale) -> Vec<u32> {
+    let max = ((256.0 * scale.0 * 4.0) as u32).clamp(16, 256);
+    let mut sizes = Vec::new();
+    let mut c = 2u32;
+    while c <= max {
+        sizes.push(c);
+        c *= 4;
+    }
+    sizes
+}
+
+pub fn run(scale: Scale) -> Fig16 {
+    let Fixture { cfg, ns, sampler, mut rng } = common::fixture(scale, 112.0);
+    // Paper setup: IndexFS on 4 BeeGFS client VMs (112 vCPU cluster);
+    // λIndexFS on a 64-vCPU OpenWhisk cluster.
+    let variable_ops = ((10_000.0 * scale.0) as u32).clamp(100, 10_000);
+    let fixed_total = ((1_000_000.0 * scale.0) as u32).clamp(10_000, 1_000_000);
+
+    let mut variable = Vec::new();
+    let mut fixed = Vec::new();
+    for &n in &client_sizes(scale) {
+        // Variable-size: ops per client constant.
+        {
+            let mut l = LambdaIndexFs::new(cfg.clone(), ns.clone(), 8, 64.0);
+            let mut r = rng.fork(&format!("lvar{n}"));
+            let lr = run_tree_test(&mut l, &ns, &sampler, n, variable_ops, &mut r);
+            let mut v = IndexFs::new(cfg.clone(), ns.clone(), 4, 112.0);
+            let mut r = rng.fork(&format!("ivar{n}"));
+            let vr = run_tree_test(&mut v, &ns, &sampler, n, variable_ops, &mut r);
+            variable.push((n, lr, vr));
+        }
+        // Fixed-size: total ops constant.
+        {
+            let per_client = (fixed_total / n).max(10);
+            let mut l = LambdaIndexFs::new(cfg.clone(), ns.clone(), 8, 64.0);
+            let mut r = rng.fork(&format!("lfix{n}"));
+            let lr = run_tree_test(&mut l, &ns, &sampler, n, per_client, &mut r);
+            let mut v = IndexFs::new(cfg.clone(), ns.clone(), 4, 112.0);
+            let mut r = rng.fork(&format!("ifix{n}"));
+            let vr = run_tree_test(&mut v, &ns, &sampler, n, per_client, &mut r);
+            fixed.push((n, lr, vr));
+        }
+    }
+    Fig16 { variable, fixed }
+}
+
+impl Fig16 {
+    pub fn report(&self) {
+        for (label, rows) in [("variable", &self.variable), ("fixed", &self.fixed)] {
+            let table: Vec<Vec<String>> = rows
+                .iter()
+                .map(|(n, l, v)| {
+                    vec![
+                        n.to_string(),
+                        common::f0(l.write_tp),
+                        common::f0(v.write_tp),
+                        common::f0(l.read_tp),
+                        common::f0(v.read_tp),
+                    ]
+                })
+                .collect();
+            common::print_table(
+                &format!("Figure 16 ({label}): λIndexFS vs IndexFS tree-test (ops/s)"),
+                &["clients", "λidx_write", "idx_write", "λidx_read", "idx_read"],
+                &table,
+            );
+            let csv: Vec<String> = rows
+                .iter()
+                .map(|(n, l, v)| {
+                    format!(
+                        "{n},{:.0},{:.0},{:.0},{:.0}",
+                        l.write_tp, v.write_tp, l.read_tp, v.read_tp
+                    )
+                })
+                .collect();
+            common::write_csv(
+                &format!("fig16_{label}.csv"),
+                "clients,lidx_write,idx_write,lidx_read,idx_read",
+                &csv,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_indexfs_reads_win() {
+        let fig = run(Scale(0.01));
+        // Paper: λIndexFS read throughput consistently higher.
+        let (_, l_last, v_last) = fig.variable.last().unwrap();
+        assert!(
+            l_last.read_tp > v_last.read_tp * 0.95,
+            "λIndexFS reads at least competitive at the largest size: {} vs {}",
+            l_last.read_tp,
+            v_last.read_tp
+        );
+    }
+}

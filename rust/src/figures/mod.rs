@@ -1,0 +1,20 @@
+//! Figure/table regeneration harnesses — one per paper experiment.
+//!
+//! Each function runs the experiment at a configurable [`Scale`] and
+//! returns a printable report; the `rust/benches/*.rs` binaries and the
+//! `lambdafs bench` CLI subcommand are thin wrappers over these. CSV
+//! series are written under `target/figures/` for plotting.
+
+pub mod common;
+pub mod fig08;
+pub mod fig09;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+pub mod fig16;
+pub mod table3;
+
+pub use common::Scale;

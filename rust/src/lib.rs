@@ -1,0 +1,47 @@
+//! # λFS — a scalable, elastic DFS metadata service on serverless functions
+//!
+//! From-scratch reproduction of *λFS: A Scalable and Elastic Distributed
+//! File System Metadata Service using Serverless Functions* (ASPLOS'24),
+//! built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the λFS coordination system and every
+//!   substrate it depends on: a FaaS platform (OpenWhisk-like), an NDB-like
+//!   transactional metadata store, a ZooKeeper-like coordinator, the hybrid
+//!   HTTP/TCP RPC fabric, the trie metadata cache, the INV/ACK coherence
+//!   protocol, the agile auto-scaling policy, the client library, the
+//!   baseline systems the paper evaluates against, the workload generators,
+//!   and the metrics/cost models.
+//! * **Layer 2** — `python/compile/model.py`: the routing & client-control
+//!   pipeline in JAX, AOT-lowered to HLO text at build time.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels for batched
+//!   FNV-1a path routing and moving-window latency statistics.
+//!
+//! The Rust runtime (`runtime`) loads the AOT artifacts through the `xla`
+//! PJRT crate; Python never runs on the request path.
+//!
+//! Because the paper's evaluation is time-series behaviour over 5-minute
+//! workloads on an AWS testbed, the substrates are modeled as a
+//! deterministic discrete-event simulation (`sim`) — see DESIGN.md §5/§6
+//! for the substitution table.
+
+pub mod baselines;
+pub mod cache;
+pub mod client;
+pub mod coherence;
+pub mod config;
+pub mod coordinator;
+pub mod faas;
+pub mod figures;
+pub mod metrics;
+pub mod namespace;
+pub mod rpc;
+pub mod runtime;
+pub mod scaling;
+pub mod sim;
+pub mod store;
+pub mod systems;
+pub mod util;
+pub mod workload;
+
+/// Crate version string surfaced by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

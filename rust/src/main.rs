@@ -1,0 +1,187 @@
+//! `lambdafs` — the λFS launcher.
+//!
+//! Subcommands:
+//!
+//! * `spotify`   — run the Spotify industrial workload (§5.2) across the
+//!   systems and print the Figure-8 summary.
+//! * `micro`     — run a single-op micro-benchmark (client scaling).
+//! * `figure`    — regenerate one paper figure/table by id
+//!   (`8a 8b 8c 9 10 11 12 13 14 15 16 t3` or `all`).
+//! * `subtree`   — run one subtree `mv` (Table 3 style) at a given size.
+//! * `route`     — route paths through the compiled PJRT kernel
+//!   (demonstrates the AOT artifacts on the request path).
+//! * `selftest`  — quick end-to-end smoke run.
+//!
+//! Global flags: `--scale <f>` (experiment scale; default 0.05),
+//! `--seed <n>`, `--config <file.toml>`.
+
+use lambda_fs::config::SystemConfig;
+use lambda_fs::figures::{self, Scale};
+use lambda_fs::namespace::OpKind;
+use lambda_fs::util::cli::Args;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&raw, &["verbose", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.positional.is_empty() {
+        usage();
+        return;
+    }
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "lambdafs {} — λFS: elastic serverless DFS metadata service (reproduction)\n\n\
+         USAGE: lambdafs <command> [--scale f] [--seed n] [--config file]\n\n\
+         COMMANDS:\n\
+           spotify  [--base 25000] [--seconds 300]   Spotify workload, all systems\n\
+           micro    [--op read] [--clients 256]      single-op micro-benchmark\n\
+           figure   <8a|8b|8c|9|10|11|12|13|14|15|16|t3|all>\n\
+           subtree  [--files 262144]                 one subtree mv, λFS vs HopsFS\n\
+           route    <path> [path..] [--deployments 16]  PJRT routing kernel demo\n\
+           selftest                                   quick smoke run",
+        lambda_fs::VERSION
+    );
+}
+
+fn load_config(args: &Args) -> Result<SystemConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            SystemConfig::from_toml(&text)?
+        }
+        None => SystemConfig::default(),
+    };
+    if let Some(seed) = args.get("seed") {
+        cfg.seed = seed.parse().map_err(|_| "bad --seed")?;
+    }
+    Ok(cfg)
+}
+
+fn scale(args: &Args) -> Result<Scale, String> {
+    let s = args.get_f64("scale", 0.05)?;
+    Ok(Scale(s.clamp(0.005, 1.0)))
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    let cmd = args.positional[0].as_str();
+    let scale = scale(args)?;
+    match cmd {
+        "spotify" => {
+            let base = args.get_f64("base", 25_000.0)?;
+            let fig = figures::fig08::run(scale, base);
+            fig.report(if base <= 30_000.0 { "25k" } else { "50k" });
+            Ok(())
+        }
+        "micro" => {
+            let op = parse_op(&args.get_or("op", "read"))?;
+            let fig = figures::fig11::run(scale, op);
+            fig.report();
+            Ok(())
+        }
+        "figure" => {
+            let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+            run_figure(which, scale)
+        }
+        "subtree" => {
+            let t = figures::table3::run(scale);
+            t.report();
+            Ok(())
+        }
+        "route" => {
+            let paths: Vec<&str> = args.positional[1..].iter().map(String::as_str).collect();
+            if paths.is_empty() {
+                return Err("route: give at least one path".into());
+            }
+            let n = args.get_usize("deployments", 16)? as u32;
+            let set = lambda_fs::runtime::ArtifactSet::load_default()
+                .map_err(|e| format!("{e:#}"))?;
+            let routed = set.route.route_batch(&paths, n).map_err(|e| format!("{e:#}"))?;
+            println!("{:<40} {:>10} {:>12}", "path", "deployment", "fnv1a32");
+            for (p, (dep, hash)) in paths.iter().zip(routed) {
+                println!("{p:<40} {dep:>10} {hash:>#12x}");
+            }
+            Ok(())
+        }
+        "selftest" => {
+            let _ = load_config(args)?;
+            let fig = figures::fig08::run(Scale(0.01), 25_000.0);
+            fig.report("selftest");
+            println!("\nselftest OK");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}; see --help")),
+    }
+}
+
+fn parse_op(s: &str) -> Result<OpKind, String> {
+    Ok(match s {
+        "read" => OpKind::Read,
+        "stat" => OpKind::Stat,
+        "ls" => OpKind::Ls,
+        "create" => OpKind::Create,
+        "mkdir" => OpKind::Mkdir,
+        "mv" => OpKind::Mv,
+        "delete" => OpKind::Delete,
+        other => return Err(format!("unknown op {other:?}")),
+    })
+}
+
+fn run_figure(which: &str, scale: Scale) -> Result<(), String> {
+    let all = which == "all";
+    if all || which == "8a" {
+        figures::fig08::run(scale, 25_000.0).report("25k");
+    }
+    if all || which == "8b" || which == "8c" {
+        figures::fig08::run(scale, 50_000.0).report("50k");
+    }
+    if all || which == "9" {
+        figures::fig09::run(scale).report();
+    }
+    if all || which == "10" {
+        figures::fig10::run(scale, 25_000.0).report();
+        figures::fig10::run(scale, 50_000.0).report();
+    }
+    if all || which == "11" {
+        for op in [OpKind::Read, OpKind::Stat, OpKind::Ls, OpKind::Create, OpKind::Mkdir] {
+            figures::fig11::run(scale, op).report();
+        }
+    }
+    if all || which == "12" {
+        for op in [OpKind::Read, OpKind::Stat, OpKind::Ls, OpKind::Create, OpKind::Mkdir] {
+            figures::fig12::run(scale, op).report();
+        }
+    }
+    if all || which == "13" {
+        for op in [OpKind::Read, OpKind::Stat, OpKind::Ls] {
+            figures::fig13::run(scale, op).report();
+        }
+    }
+    if all || which == "14" {
+        figures::fig14::run(scale).report();
+    }
+    if all || which == "15" {
+        figures::fig15::run(scale).report();
+    }
+    if all || which == "16" {
+        figures::fig16::run(scale).report();
+    }
+    if all || which == "t3" {
+        figures::table3::run(scale).report();
+    }
+    let known = ["8a", "8b", "8c", "9", "10", "11", "12", "13", "14", "15", "16", "t3", "all"];
+    if !known.contains(&which) {
+        return Err(format!("unknown figure {which:?}; one of {known:?}"));
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Metrics: throughput time series, latency histograms/CDFs, cost models,
+//! and performance-per-cost (§5.2.5).
+
+pub mod cost;
+pub mod run;
+
+pub use cost::{CostModel, CostSample};
+pub use run::{RunMetrics, SecondSample};
+
+/// A simple wall-clock timer for the bench harnesses (criterion is not in
+/// the offline vendored set; `benches/` are `harness = false` binaries).
+pub struct BenchTimer {
+    start: std::time::Instant,
+}
+
+impl Default for BenchTimer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BenchTimer {
+    pub fn new() -> Self {
+        BenchTimer { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1_000.0
+    }
+
+    /// Time a closure, returning `(result, millis)`.
+    pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+        let t = BenchTimer::new();
+        let out = f();
+        let ms = t.elapsed_ms();
+        (out, ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let (_, ms) = BenchTimer::time(|| {
+            let mut x = 0u64;
+            for i in 0..100_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x)
+        });
+        assert!(ms >= 0.0);
+    }
+}

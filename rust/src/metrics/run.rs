@@ -1,0 +1,221 @@
+//! Per-run metrics: everything a figure needs from one workload execution.
+
+use crate::util::hist::Histogram;
+
+/// One second of the run (the figures' time-series resolution).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SecondSample {
+    /// Operations completed within this second.
+    pub completed: u64,
+    /// Operations the generator targeted for this second.
+    pub target: u64,
+    /// Live NameNode instances at the end of the second.
+    pub namenodes: u32,
+    /// vCPUs in use at the end of the second.
+    pub vcpus: f64,
+    /// Dollars accrued this second (system's own billing scheme).
+    pub cost_usd: f64,
+    /// Dollars accrued under the simplified (provisioned-time) scheme.
+    pub cost_simplified_usd: f64,
+}
+
+/// Full metrics for one workload execution.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub seconds: Vec<SecondSample>,
+    /// Latency (ms) of read-class ops (read/stat/ls).
+    pub read_lat: Histogram,
+    /// Latency (ms) of write-class ops.
+    pub write_lat: Histogram,
+    /// All ops.
+    pub all_lat: Histogram,
+    pub completed_ops: u64,
+    pub failed_ops: u64,
+    /// Resubmissions due to timeouts/stragglers/failures.
+    pub resubmissions: u64,
+    /// Exact first/last completion timestamps (µs) — used for sustained
+    /// throughput on short closed-loop runs where 1 s buckets saturate.
+    pub first_completion_us: u64,
+    pub last_completion_us: u64,
+}
+
+impl Default for RunMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        RunMetrics {
+            seconds: Vec::new(),
+            // Histograms store µs values: 1 µs .. ~5 hours at 2% resolution.
+            read_lat: Histogram::with_range(1.0, 1.02, 1200),
+            write_lat: Histogram::with_range(1.0, 1.02, 1200),
+            all_lat: Histogram::with_range(1.0, 1.02, 1200),
+            completed_ops: 0,
+            failed_ops: 0,
+            resubmissions: 0,
+            first_completion_us: u64::MAX,
+            last_completion_us: 0,
+        }
+    }
+
+    /// Record one completed op. `latency_ms`, `is_write`, completion time
+    /// bucketed by `second`.
+    pub fn record(&mut self, second: usize, latency_ms: f64, is_write: bool) {
+        self.record_at(second as u64 * 1_000_000, latency_ms, is_write)
+    }
+
+    /// Record with the exact completion timestamp in µs.
+    pub fn record_at(&mut self, completion_us: u64, latency_ms: f64, is_write: bool) {
+        let second = (completion_us / 1_000_000) as usize;
+        self.first_completion_us = self.first_completion_us.min(completion_us);
+        self.last_completion_us = self.last_completion_us.max(completion_us);
+        while self.seconds.len() <= second {
+            self.seconds.push(SecondSample::default());
+        }
+        self.seconds[second].completed += 1;
+        self.completed_ops += 1;
+        // Histograms bucket µs for resolution (values stored as µs).
+        let us = latency_ms * 1_000.0;
+        self.all_lat.record(us);
+        if is_write {
+            self.write_lat.record(us);
+        } else {
+            self.read_lat.record(us);
+        }
+    }
+
+    pub fn second_mut(&mut self, second: usize) -> &mut SecondSample {
+        while self.seconds.len() <= second {
+            self.seconds.push(SecondSample::default());
+        }
+        &mut self.seconds[second]
+    }
+
+    /// Average throughput over the run (ops/sec), using the span of
+    /// seconds that saw any activity.
+    pub fn avg_throughput(&self) -> f64 {
+        let active = self.seconds.iter().filter(|s| s.completed > 0).count();
+        if active == 0 {
+            0.0
+        } else {
+            self.completed_ops as f64 / active as f64
+        }
+    }
+
+    /// Peak sustained throughput: max over seconds of completed ops.
+    pub fn peak_throughput(&self) -> f64 {
+        self.seconds.iter().map(|s| s.completed).max().unwrap_or(0) as f64
+    }
+
+    /// Sustained throughput over the exact completion span — the right
+    /// metric for closed-loop runs shorter than a few seconds, where the
+    /// 1 s buckets of `peak_throughput` saturate at the total op count.
+    pub fn sustained_throughput(&self) -> f64 {
+        if self.completed_ops == 0 || self.last_completion_us <= self.first_completion_us {
+            return self.completed_ops as f64;
+        }
+        let span_s = (self.last_completion_us - self.first_completion_us) as f64 / 1e6;
+        self.completed_ops as f64 / span_s.max(1e-6)
+    }
+
+    /// Mean latency in ms across all ops.
+    pub fn avg_latency_ms(&self) -> f64 {
+        self.all_lat.mean() / 1_000.0
+    }
+
+    pub fn avg_read_latency_ms(&self) -> f64 {
+        self.read_lat.mean() / 1_000.0
+    }
+
+    pub fn avg_write_latency_ms(&self) -> f64 {
+        self.write_lat.mean() / 1_000.0
+    }
+
+    /// Total cost under the system's own billing scheme.
+    pub fn total_cost(&self) -> f64 {
+        self.seconds.iter().map(|s| s.cost_usd).sum()
+    }
+
+    pub fn total_cost_simplified(&self) -> f64 {
+        self.seconds.iter().map(|s| s.cost_simplified_usd).sum()
+    }
+
+    /// Average performance-per-cost over the whole run.
+    pub fn performance_per_cost(&self) -> f64 {
+        super::cost::performance_per_cost(self.avg_throughput(), self.total_cost())
+    }
+
+    /// Max NameNodes observed (λFS scale-out extent).
+    pub fn peak_namenodes(&self) -> u32 {
+        self.seconds.iter().map(|s| s.namenodes).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_buckets_by_second() {
+        let mut m = RunMetrics::new();
+        m.record(0, 1.0, false);
+        m.record(0, 2.0, false);
+        m.record(3, 10.0, true);
+        assert_eq!(m.seconds.len(), 4);
+        assert_eq!(m.seconds[0].completed, 2);
+        assert_eq!(m.seconds[3].completed, 1);
+        assert_eq!(m.completed_ops, 3);
+        assert_eq!(m.read_lat.count(), 2);
+        assert_eq!(m.write_lat.count(), 1);
+    }
+
+    #[test]
+    fn throughput_metrics() {
+        let mut m = RunMetrics::new();
+        for _ in 0..100 {
+            m.record(0, 1.0, false);
+        }
+        for _ in 0..300 {
+            m.record(1, 1.0, false);
+        }
+        // second 2 idle
+        for _ in 0..200 {
+            m.record(3, 1.0, false);
+        }
+        assert_eq!(m.peak_throughput(), 300.0);
+        assert!((m.avg_throughput() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_means_in_ms() {
+        let mut m = RunMetrics::new();
+        m.record(0, 2.0, false);
+        m.record(0, 4.0, false);
+        m.record(0, 30.0, true);
+        assert!((m.avg_read_latency_ms() - 3.0).abs() < 0.1);
+        assert!((m.avg_write_latency_ms() - 30.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn cost_totals() {
+        let mut m = RunMetrics::new();
+        m.second_mut(0).cost_usd = 0.5;
+        m.second_mut(1).cost_usd = 0.25;
+        m.second_mut(1).cost_simplified_usd = 1.0;
+        assert!((m.total_cost() - 0.75).abs() < 1e-12);
+        assert!((m.total_cost_simplified() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ppc_uses_avg_throughput_and_total_cost() {
+        let mut m = RunMetrics::new();
+        for _ in 0..1000 {
+            m.record(0, 1.0, false);
+        }
+        m.second_mut(0).cost_usd = 2.0;
+        assert!((m.performance_per_cost() - 500.0).abs() < 1e-9);
+    }
+}

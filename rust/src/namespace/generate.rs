@@ -1,0 +1,207 @@
+//! Synthetic namespace generation.
+//!
+//! Builds a directory tree shaped like the HDFS namespaces the paper's
+//! workloads exercise: a few levels deep, fan-out decaying with depth,
+//! file counts per directory, and a Zipf popularity ranking so a small set
+//! of directories is "hot" (which is what stresses λFS' per-deployment
+//! auto-scaling and HopsFS+Cache's consistent-hash bottleneck).
+
+use crate::util::dist::Zipf;
+use crate::util::rng::Rng;
+
+use super::{DirId, DirInfo, InodeRef, Namespace};
+
+/// Parameters for [`generate`].
+#[derive(Clone, Debug)]
+pub struct NamespaceParams {
+    /// Total directories (including root).
+    pub n_dirs: usize,
+    /// Mean files per leaf-ish directory.
+    pub files_per_dir: u32,
+    /// Maximum depth.
+    pub max_depth: u32,
+    /// Zipf skew for directory popularity (s > 1 = strong head).
+    pub zipf_s: f64,
+}
+
+impl Default for NamespaceParams {
+    fn default() -> Self {
+        NamespaceParams { n_dirs: 4_096, files_per_dir: 64, max_depth: 6, zipf_s: 1.3 }
+    }
+}
+
+/// Generate a namespace skeleton deterministically from `rng`.
+pub fn generate(params: &NamespaceParams, rng: &mut Rng) -> Namespace {
+    let n = params.n_dirs.max(1);
+    let mut dirs: Vec<DirInfo> = Vec::with_capacity(n);
+    dirs.push(DirInfo {
+        id: DirId(0),
+        parent: None,
+        path: "/".to_string(),
+        depth: 0,
+        children: Vec::new(),
+        files: 0,
+    });
+
+    for i in 1..n {
+        // Prefer shallow parents: sample parent from existing dirs with a
+        // bias toward lower depth, rejecting max-depth parents.
+        let parent = loop {
+            let cand = DirId(rng.below(i as u64) as u32);
+            let d = dirs[cand.0 as usize].depth;
+            if d >= params.max_depth {
+                continue;
+            }
+            // Acceptance decays with depth -> wide-near-root trees.
+            if rng.f64() < 1.0 / (1.0 + d as f64) {
+                break cand;
+            }
+        };
+        let depth = dirs[parent.0 as usize].depth + 1;
+        let name = format!("d{i}");
+        let path = if dirs[parent.0 as usize].path == "/" {
+            format!("/{name}")
+        } else {
+            format!("{}/{name}", dirs[parent.0 as usize].path)
+        };
+        let files = sample_file_count(params.files_per_dir, rng);
+        let id = DirId(i as u32);
+        dirs[parent.0 as usize].children.push(id);
+        dirs.push(DirInfo { id, parent: Some(parent), path, depth, children: Vec::new(), files });
+    }
+
+    Namespace::new(dirs)
+}
+
+fn sample_file_count(mean: u32, rng: &mut Rng) -> u32 {
+    if mean == 0 {
+        return 0;
+    }
+    // Geometric-ish spread around the mean, min 1.
+    let u = rng.f64().max(1e-12);
+    ((mean as f64) * (-u.ln())).round().max(1.0) as u32
+}
+
+/// Popularity-ranked sampler over a namespace: directory rank drawn from a
+/// Zipf, file drawn uniformly within the directory.
+#[derive(Clone, Debug)]
+pub struct HotspotSampler {
+    /// Directory ids in popularity order (rank 0 = hottest).
+    ranked: Vec<DirId>,
+    zipf: Zipf,
+}
+
+impl HotspotSampler {
+    pub fn new(ns: &Namespace, zipf_s: f64, rng: &mut Rng) -> Self {
+        let mut ranked: Vec<DirId> = (0..ns.n_dirs() as u32).map(DirId).collect();
+        rng.shuffle(&mut ranked); // popularity uncorrelated with creation order
+        HotspotSampler { zipf: Zipf::new(ranked.len() as u64, zipf_s), ranked }
+    }
+
+    /// Sample a directory (popularity-weighted).
+    pub fn dir(&self, rng: &mut Rng) -> DirId {
+        self.ranked[self.zipf.sample(rng) as usize]
+    }
+
+    /// Sample a file INode: hot directory + uniform file within it.
+    /// Directories with no files yield the directory INode itself.
+    pub fn inode(&self, ns: &Namespace, rng: &mut Rng) -> InodeRef {
+        let d = self.dir(rng);
+        let files = ns.dir(d).files;
+        if files == 0 {
+            InodeRef::dir(d)
+        } else {
+            InodeRef::file(d, rng.below(files as u64) as u32)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ns() -> (Namespace, Rng) {
+        let mut rng = Rng::new(77);
+        let ns = generate(&NamespaceParams::default(), &mut rng);
+        (ns, rng)
+    }
+
+    #[test]
+    fn generates_requested_size() {
+        let (ns, _) = ns();
+        assert_eq!(ns.n_dirs(), 4_096);
+        assert!(ns.total_files() > 0);
+    }
+
+    #[test]
+    fn tree_is_well_formed() {
+        let (ns, _) = ns();
+        for d in &ns.dirs {
+            if let Some(p) = d.parent {
+                assert!(p.0 < d.id.0, "parents precede children");
+                assert_eq!(d.depth, ns.dir(p).depth + 1);
+                assert!(ns.dir(p).children.contains(&d.id));
+                let ppath = &ns.dir(p).path;
+                assert!(
+                    d.path.starts_with(ppath.as_str()),
+                    "{} not under {}",
+                    d.path,
+                    ppath
+                );
+            } else {
+                assert_eq!(d.id, DirId(0));
+            }
+            assert!(d.depth <= NamespaceParams::default().max_depth);
+        }
+    }
+
+    #[test]
+    fn paths_unique() {
+        let (ns, _) = ns();
+        let mut paths: Vec<&str> = ns.dirs.iter().map(|d| d.path.as_str()).collect();
+        paths.sort_unstable();
+        let before = paths.len();
+        paths.dedup();
+        assert_eq!(paths.len(), before);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = generate(&NamespaceParams::default(), &mut r1);
+        let b = generate(&NamespaceParams::default(), &mut r2);
+        assert_eq!(a.n_dirs(), b.n_dirs());
+        for (x, y) in a.dirs.iter().zip(&b.dirs) {
+            assert_eq!(x.path, y.path);
+            assert_eq!(x.files, y.files);
+        }
+    }
+
+    #[test]
+    fn hotspot_sampler_skews() {
+        let (ns, mut rng) = ns();
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..50_000 {
+            *counts.entry(sampler.dir(&mut rng)).or_insert(0u32) += 1;
+        }
+        let mut freqs: Vec<u32> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        // Hot head: top directory gets far more than fair share (~12/50k).
+        assert!(freqs[0] > 1_000, "hottest dir got {}", freqs[0]);
+    }
+
+    #[test]
+    fn inode_sampler_valid_refs() {
+        let (ns, mut rng) = ns();
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        for _ in 0..10_000 {
+            let r = sampler.inode(&ns, &mut rng);
+            assert!((r.dir.0 as usize) < ns.n_dirs());
+            if let Some(f) = r.file {
+                assert!(f < ns.dir(r.dir).files);
+            }
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! The DFS namespace model: INodes, paths, operations, and a synthetic
+//! namespace generator.
+//!
+//! The simulation interns directories as dense [`DirId`]s (files as
+//! `(DirId, u32)` pairs) so the hot paths never touch strings; the string
+//! form of every directory is kept for the routing contract (the FNV hash
+//! is over parent-path *bytes* — the same bytes the L1 kernel hashes).
+
+pub mod generate;
+pub mod ops;
+
+pub use generate::{NamespaceParams, generate};
+pub use ops::{OpKind, Operation};
+
+/// Interned directory id (dense, 0 = root).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DirId(pub u32);
+
+/// An INode reference: a directory itself, or a file within one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct InodeRef {
+    pub dir: DirId,
+    /// `None` = the directory INode; `Some(i)` = file `i` in the directory.
+    pub file: Option<u32>,
+}
+
+impl InodeRef {
+    pub fn dir(d: DirId) -> Self {
+        InodeRef { dir: d, file: None }
+    }
+
+    pub fn file(d: DirId, f: u32) -> Self {
+        InodeRef { dir: d, file: Some(f) }
+    }
+}
+
+/// Directory metadata in the interned namespace.
+#[derive(Clone, Debug)]
+pub struct DirInfo {
+    pub id: DirId,
+    pub parent: Option<DirId>,
+    /// Absolute path, e.g. `/user3/logs`.
+    pub path: String,
+    pub depth: u32,
+    pub children: Vec<DirId>,
+    /// Number of files resident in this directory.
+    pub files: u32,
+}
+
+/// The immutable namespace skeleton the workloads operate over.
+///
+/// Mutating operations (create/delete/mv) act on store/cache *rows*; the
+/// skeleton provides the population of paths and the parent topology, which
+/// is what routing, caching, and the coherence protocol key on.
+#[derive(Clone, Debug)]
+pub struct Namespace {
+    pub dirs: Vec<DirInfo>,
+    total_files: u64,
+}
+
+impl Namespace {
+    pub fn new(dirs: Vec<DirInfo>) -> Self {
+        let total_files = dirs.iter().map(|d| d.files as u64).sum();
+        Namespace { dirs, total_files }
+    }
+
+    pub fn root(&self) -> DirId {
+        DirId(0)
+    }
+
+    pub fn dir(&self, id: DirId) -> &DirInfo {
+        &self.dirs[id.0 as usize]
+    }
+
+    pub fn n_dirs(&self) -> usize {
+        self.dirs.len()
+    }
+
+    pub fn total_files(&self) -> u64 {
+        self.total_files
+    }
+
+    /// Parent-directory path string for an INode — the routing key.
+    ///
+    /// For a file the parent is its containing directory; for a directory
+    /// it is the directory's own parent (λFS hashes "the parent directory
+    /// path of each file/directory", §3.1).
+    pub fn parent_path(&self, inode: InodeRef) -> &str {
+        match inode.file {
+            Some(_) => &self.dir(inode.dir).path,
+            None => match self.dir(inode.dir).parent {
+                Some(p) => &self.dir(p).path,
+                None => &self.dir(inode.dir).path, // root routes by itself
+            },
+        }
+    }
+
+    /// All directories in the subtree rooted at `root` (preorder,
+    /// including the root itself).
+    pub fn subtree_dirs(&self, root: DirId) -> Vec<DirId> {
+        let mut out = Vec::new();
+        let mut stack = vec![root];
+        while let Some(d) = stack.pop() {
+            out.push(d);
+            stack.extend(self.dir(d).children.iter().copied());
+        }
+        out
+    }
+
+    /// Total INodes (dirs + files) under `root`, inclusive — the
+    /// sub-operation count for a subtree operation.
+    pub fn subtree_inodes(&self, root: DirId) -> u64 {
+        self.subtree_dirs(root)
+            .iter()
+            .map(|&d| 1 + self.dir(d).files as u64)
+            .sum()
+    }
+
+    /// Path-resolution component count for an INode (path depth), which
+    /// drives the cost of a full resolution (N components) vs HopsFS'
+    /// INode-hint batch resolution (1 round trip).
+    pub fn resolution_depth(&self, inode: InodeRef) -> u32 {
+        let base = self.dir(inode.dir).depth + 1; // components incl. root
+        match inode.file {
+            Some(_) => base + 1,
+            None => base,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Namespace {
+        // /        (0)
+        // /a       (1)
+        // /a/b     (2, 3 files)
+        // /c       (3, 1 file)
+        let dirs = vec![
+            DirInfo {
+                id: DirId(0),
+                parent: None,
+                path: "/".into(),
+                depth: 0,
+                children: vec![DirId(1), DirId(3)],
+                files: 0,
+            },
+            DirInfo {
+                id: DirId(1),
+                parent: Some(DirId(0)),
+                path: "/a".into(),
+                depth: 1,
+                children: vec![DirId(2)],
+                files: 0,
+            },
+            DirInfo {
+                id: DirId(2),
+                parent: Some(DirId(1)),
+                path: "/a/b".into(),
+                depth: 2,
+                children: vec![],
+                files: 3,
+            },
+            DirInfo {
+                id: DirId(3),
+                parent: Some(DirId(0)),
+                path: "/c".into(),
+                depth: 1,
+                children: vec![],
+                files: 1,
+            },
+        ];
+        Namespace::new(dirs)
+    }
+
+    #[test]
+    fn parent_path_of_file_is_containing_dir() {
+        let ns = tiny();
+        assert_eq!(ns.parent_path(InodeRef::file(DirId(2), 0)), "/a/b");
+    }
+
+    #[test]
+    fn parent_path_of_dir_is_its_parent() {
+        let ns = tiny();
+        assert_eq!(ns.parent_path(InodeRef::dir(DirId(2))), "/a");
+        assert_eq!(ns.parent_path(InodeRef::dir(DirId(0))), "/", "root special case");
+    }
+
+    #[test]
+    fn subtree_enumeration() {
+        let ns = tiny();
+        let mut sub = ns.subtree_dirs(DirId(1));
+        sub.sort();
+        assert_eq!(sub, vec![DirId(1), DirId(2)]);
+        assert_eq!(ns.subtree_inodes(DirId(1)), 2 + 3); // 2 dirs + 3 files
+        assert_eq!(ns.subtree_inodes(DirId(0)), 4 + 4); // all dirs + all files
+    }
+
+    #[test]
+    fn totals() {
+        let ns = tiny();
+        assert_eq!(ns.total_files(), 4);
+        assert_eq!(ns.n_dirs(), 4);
+    }
+
+    #[test]
+    fn resolution_depth() {
+        let ns = tiny();
+        assert_eq!(ns.resolution_depth(InodeRef::dir(DirId(0))), 1);
+        assert_eq!(ns.resolution_depth(InodeRef::file(DirId(2), 1)), 4); // /, a, b, file
+    }
+}

@@ -1,0 +1,134 @@
+//! File-system metadata operations — the request vocabulary of the MDS.
+//!
+//! Mirrors the Spotify-workload operation mix (paper Table 2) plus the
+//! subtree operations of Appendix C.
+
+use super::{DirId, InodeRef};
+
+/// Operation kinds, with the Table-2 relative frequencies noted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// `read file` — 69.22 %.
+    Read,
+    /// `stat file/dir` — 17 %.
+    Stat,
+    /// `ls file/dir` — 9.01 %.
+    Ls,
+    /// `create file` — 2.7 %.
+    Create,
+    /// `mv file/dir` (single INode) — 1.3 %.
+    Mv,
+    /// `delete file/dir` (single INode) — 0.75 %.
+    Delete,
+    /// `mkdirs` — 0.02 %.
+    Mkdir,
+    /// Recursive subtree move (Appendix C / Table 3).
+    MvSubtree,
+    /// Recursive subtree delete (Appendix C).
+    DeleteSubtree,
+}
+
+impl OpKind {
+    /// Write operations mutate metadata and run the coherence protocol.
+    pub fn is_write(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Create
+                | OpKind::Mv
+                | OpKind::Delete
+                | OpKind::Mkdir
+                | OpKind::MvSubtree
+                | OpKind::DeleteSubtree
+        )
+    }
+
+    /// Subtree operations span many INodes (Appendix C protocol).
+    pub fn is_subtree(&self) -> bool {
+        matches!(self, OpKind::MvSubtree | OpKind::DeleteSubtree)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Read => "read",
+            OpKind::Stat => "stat",
+            OpKind::Ls => "ls",
+            OpKind::Create => "create",
+            OpKind::Mv => "mv",
+            OpKind::Delete => "delete",
+            OpKind::Mkdir => "mkdir",
+            OpKind::MvSubtree => "mv-subtree",
+            OpKind::DeleteSubtree => "delete-subtree",
+        }
+    }
+
+    /// All single-INode kinds (micro-benchmark coverage).
+    pub const SINGLE: [OpKind; 7] = [
+        OpKind::Read,
+        OpKind::Stat,
+        OpKind::Ls,
+        OpKind::Create,
+        OpKind::Mv,
+        OpKind::Delete,
+        OpKind::Mkdir,
+    ];
+}
+
+/// A concrete metadata operation issued by a client.
+#[derive(Clone, Copy, Debug)]
+pub struct Operation {
+    pub kind: OpKind,
+    /// Target INode (for subtree ops: the subtree root directory).
+    pub target: InodeRef,
+    /// For `Mv`/`MvSubtree`: destination parent directory.
+    pub dest: Option<DirId>,
+}
+
+impl Operation {
+    pub fn single(kind: OpKind, target: InodeRef) -> Self {
+        debug_assert!(!kind.is_subtree());
+        Operation { kind, target, dest: None }
+    }
+
+    pub fn mv(target: InodeRef, dest: DirId) -> Self {
+        Operation { kind: OpKind::Mv, target, dest: Some(dest) }
+    }
+
+    pub fn subtree(kind: OpKind, root: DirId, dest: Option<DirId>) -> Self {
+        debug_assert!(kind.is_subtree());
+        Operation { kind, target: InodeRef::dir(root), dest }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_classification() {
+        assert!(!OpKind::Read.is_write());
+        assert!(!OpKind::Stat.is_write());
+        assert!(!OpKind::Ls.is_write());
+        assert!(OpKind::Create.is_write());
+        assert!(OpKind::Mv.is_write());
+        assert!(OpKind::Delete.is_write());
+        assert!(OpKind::Mkdir.is_write());
+        assert!(OpKind::MvSubtree.is_write());
+        assert!(OpKind::DeleteSubtree.is_write());
+    }
+
+    #[test]
+    fn subtree_classification() {
+        assert!(OpKind::MvSubtree.is_subtree());
+        assert!(OpKind::DeleteSubtree.is_subtree());
+        assert!(!OpKind::Mv.is_subtree());
+        assert!(!OpKind::Delete.is_subtree());
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = OpKind::SINGLE.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), OpKind::SINGLE.len());
+    }
+}

@@ -1,0 +1,98 @@
+//! Exponential backoff with randomized jitter (§3.2).
+//!
+//! "When HTTP requests time out, clients could resubmit the requests ...
+//! immediately, causing a request storm that could overwhelm the FaaS
+//! platform ... clients sleep before resubmitting requests, following an
+//! exponential backoff delay pattern with randomized jitter added."
+
+use crate::sim::{time, Time};
+use crate::util::rng::Rng;
+
+/// Backoff policy: `base * 2^attempt`, capped, with full jitter.
+#[derive(Clone, Copy, Debug)]
+pub struct Backoff {
+    pub base_ms: f64,
+    pub cap_ms: f64,
+    pub max_attempts: u32,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff { base_ms: 50.0, cap_ms: 5_000.0, max_attempts: 8 }
+    }
+}
+
+impl Backoff {
+    /// Delay before resubmission attempt `attempt` (0-based), with full
+    /// jitter: uniform in `[base/2, full]` so concurrent clients spread out.
+    pub fn delay(&self, attempt: u32, rng: &mut Rng) -> Time {
+        let exp = self.base_ms * 2f64.powi(attempt.min(30) as i32);
+        let full = exp.min(self.cap_ms);
+        time::from_ms(rng.range_f64(full * 0.5, full))
+    }
+
+    /// Should the client give up after `attempt` attempts?
+    pub fn exhausted(&self, attempt: u32) -> bool {
+        attempt >= self.max_attempts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_exponentially_until_cap() {
+        let b = Backoff::default();
+        let mut rng = Rng::new(1);
+        let mean = |attempt: u32, rng: &mut Rng| -> f64 {
+            (0..2_000).map(|_| b.delay(attempt, rng) as f64).sum::<f64>() / 2_000.0
+        };
+        let m0 = mean(0, &mut rng);
+        let m1 = mean(1, &mut rng);
+        let m2 = mean(2, &mut rng);
+        assert!(m1 > m0 * 1.5 && m2 > m1 * 1.5, "{m0} {m1} {m2}");
+        // Far attempts hit the cap.
+        let m9 = mean(9, &mut rng);
+        assert!(m9 <= time::from_ms(5_000.0) as f64);
+        assert!(m9 >= time::from_ms(2_500.0) as f64 * 0.95);
+    }
+
+    #[test]
+    fn jitter_spreads_clients() {
+        let b = Backoff::default();
+        let mut rng = Rng::new(2);
+        let xs: Vec<Time> = (0..100).map(|_| b.delay(3, &mut rng)).collect();
+        let distinct: std::collections::HashSet<_> = xs.iter().collect();
+        assert!(distinct.len() > 90, "delays are spread");
+    }
+
+    #[test]
+    fn delay_within_bounds() {
+        let b = Backoff::default();
+        let mut rng = Rng::new(3);
+        for attempt in 0..12 {
+            for _ in 0..200 {
+                let d = b.delay(attempt, &mut rng);
+                let full = (b.base_ms * 2f64.powi(attempt as i32)).min(b.cap_ms);
+                assert!(d <= time::from_ms(full));
+                assert!(d >= time::from_ms(full * 0.5) - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustion() {
+        let b = Backoff::default();
+        assert!(!b.exhausted(7));
+        assert!(b.exhausted(8));
+    }
+
+    #[test]
+    fn overflow_guard_large_attempt() {
+        let b = Backoff::default();
+        let mut rng = Rng::new(4);
+        let d = b.delay(u32::MAX, &mut rng);
+        assert!(d <= time::from_ms(b.cap_ms));
+    }
+}

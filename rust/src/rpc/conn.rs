@@ -1,0 +1,133 @@
+//! Per-VM TCP connection tracking with λFS' *connection sharing* (§3.2,
+//! Fig. 4).
+//!
+//! Every client VM runs one or more TCP servers; NameNodes connect back to
+//! these servers after serving an HTTP request. Clients on a VM first
+//! check their own server for a connection to the target deployment, then
+//! the *other* servers on the same VM (connection sharing), and fall back
+//! to HTTP only when no connection exists anywhere on the VM.
+
+use std::collections::HashMap;
+
+use crate::faas::InstanceId;
+
+/// Client VM id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VmId(pub u32);
+
+/// Connection table across all client VMs.
+///
+/// Keyed `(vm, deployment) -> connected instances`. TCP servers on a VM
+/// are modeled collectively: the paper's default assigns all clients on a
+/// VM to one server, and sharing makes the per-server distinction
+/// unobservable for routing (step 2 of Fig. 4 always finds a same-VM
+/// connection if any server has one).
+#[derive(Clone, Debug, Default)]
+pub struct ConnectionTable {
+    conns: HashMap<(VmId, u32), Vec<InstanceId>>,
+    established: u64,
+    dropped: u64,
+}
+
+impl ConnectionTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A NameNode instance established a connection back to `vm`.
+    pub fn establish(&mut self, vm: VmId, dep: u32, inst: InstanceId) {
+        let list = self.conns.entry((vm, dep)).or_default();
+        if !list.contains(&inst) {
+            list.push(inst);
+            self.established += 1;
+        }
+    }
+
+    /// Any live connection from `vm` to an instance of `dep`?
+    /// (`alive` filters instances that have since died.)
+    pub fn find(
+        &self,
+        vm: VmId,
+        dep: u32,
+        mut alive: impl FnMut(InstanceId) -> bool,
+    ) -> Option<InstanceId> {
+        self.conns
+            .get(&(vm, dep))?
+            .iter()
+            .copied()
+            .find(|&i| alive(i))
+    }
+
+    /// All connections from `vm` to `dep` (callers pick the least-loaded
+    /// live instance — clients spread TCP RPCs over every connection they
+    /// hold, so scale-out actually absorbs load).
+    pub fn all(&self, vm: VmId, dep: u32) -> &[InstanceId] {
+        self.conns.get(&(vm, dep)).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Drop every connection to `inst` (instance died / was reclaimed).
+    pub fn drop_instance(&mut self, inst: InstanceId) {
+        for list in self.conns.values_mut() {
+            let before = list.len();
+            list.retain(|&i| i != inst);
+            self.dropped += (before - list.len()) as u64;
+        }
+    }
+
+    /// Number of live connections from `vm` to `dep` (tests/metrics).
+    pub fn count(&self, vm: VmId, dep: u32) -> usize {
+        self.conns.get(&(vm, dep)).map(Vec::len).unwrap_or(0)
+    }
+
+    pub fn established_total(&self) -> u64 {
+        self.established
+    }
+
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn establish_and_find() {
+        let mut t = ConnectionTable::new();
+        t.establish(VmId(0), 3, InstanceId(7));
+        assert_eq!(t.find(VmId(0), 3, |_| true), Some(InstanceId(7)));
+        assert_eq!(t.find(VmId(0), 4, |_| true), None, "other deployment");
+        assert_eq!(t.find(VmId(1), 3, |_| true), None, "other VM");
+    }
+
+    #[test]
+    fn duplicate_establish_idempotent() {
+        let mut t = ConnectionTable::new();
+        t.establish(VmId(0), 1, InstanceId(5));
+        t.establish(VmId(0), 1, InstanceId(5));
+        assert_eq!(t.count(VmId(0), 1), 1);
+        assert_eq!(t.established_total(), 1);
+    }
+
+    #[test]
+    fn dead_instances_filtered() {
+        let mut t = ConnectionTable::new();
+        t.establish(VmId(0), 1, InstanceId(5));
+        t.establish(VmId(0), 1, InstanceId(6));
+        let found = t.find(VmId(0), 1, |i| i != InstanceId(5));
+        assert_eq!(found, Some(InstanceId(6)));
+    }
+
+    #[test]
+    fn drop_instance_removes_everywhere() {
+        let mut t = ConnectionTable::new();
+        t.establish(VmId(0), 1, InstanceId(5));
+        t.establish(VmId(1), 1, InstanceId(5));
+        t.establish(VmId(0), 1, InstanceId(6));
+        t.drop_instance(InstanceId(5));
+        assert_eq!(t.count(VmId(0), 1), 1);
+        assert_eq!(t.count(VmId(1), 1), 0);
+        assert_eq!(t.dropped_total(), 2);
+    }
+}

@@ -1,0 +1,21 @@
+//! The hybrid HTTP/TCP RPC fabric (§3.2).
+//!
+//! Clients reach serverless NameNodes two ways:
+//!
+//! * **HTTP RPC** — through the platform's API gateway; slow (8–20 ms
+//!   observed) but FaaS-aware: only HTTP traffic lets the platform detect
+//!   load and scale deployments out.
+//! * **TCP RPC** — over direct connections NameNodes establish *back* to
+//!   client VMs after serving an HTTP request; fast (1–2 ms) but invisible
+//!   to the platform's autoscaler.
+//!
+//! This module provides the latency models ([`net::NetModel`]), the per-VM
+//! connection table with λFS' *connection sharing* ([`conn`]), and the
+//! exponential-backoff-with-jitter resubmission policy ([`backoff`]).
+
+pub mod backoff;
+pub mod conn;
+pub mod net;
+
+pub use conn::ConnectionTable;
+pub use net::NetModel;

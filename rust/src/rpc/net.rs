@@ -1,0 +1,102 @@
+//! Network latency models for the two RPC paths.
+//!
+//! Calibrated against §3.2: "average end-to-end latency for read
+//! operations was 1-2ms for TCP RPCs and 8-20ms for HTTP RPCs", with TCP
+//! also showing "much smaller end-to-end latency variance". Log-normal
+//! models capture those medians and tails.
+
+use crate::config::NetConfig;
+use crate::sim::{time, Time};
+use crate::util::dist::LogNormal;
+use crate::util::rng::Rng;
+
+/// Latency sampler for every network leg in the system.
+#[derive(Clone, Debug)]
+pub struct NetModel {
+    tcp: LogNormal,
+    http: LogNormal,
+    cfg: NetConfig,
+}
+
+impl NetModel {
+    pub fn new(cfg: NetConfig) -> Self {
+        NetModel {
+            tcp: LogNormal::from_median(cfg.tcp_median_ms, cfg.tcp_sigma),
+            http: LogNormal::from_median(cfg.http_median_ms, cfg.http_sigma),
+            cfg,
+        }
+    }
+
+    /// One-way client <-> NameNode hop over an established TCP connection.
+    pub fn tcp_hop(&self, rng: &mut Rng) -> Time {
+        time::from_ms(self.tcp.sample(rng))
+    }
+
+    /// Client -> gateway -> invoker -> NameNode HTTP leg (excludes the
+    /// gateway queueing, which the platform station models).
+    pub fn http_leg(&self, rng: &mut Rng) -> Time {
+        time::from_ms(self.http.sample(rng))
+    }
+
+    /// Coordinator (ZooKeeper) one-way notify/ACK.
+    pub fn coord_hop(&self, rng: &mut Rng) -> Time {
+        time::from_ms(self.cfg.coord_ms * rng.range_f64(0.8, 1.4))
+    }
+
+    /// NameNode -> client-VM TCP connection establishment.
+    pub fn tcp_connect(&self, rng: &mut Rng) -> Time {
+        time::from_ms(self.cfg.tcp_connect_ms * rng.range_f64(0.8, 1.5))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn model() -> (NetModel, Rng) {
+        (NetModel::new(SystemConfig::default().net), Rng::new(21))
+    }
+
+    #[test]
+    fn tcp_much_faster_than_http() {
+        let (m, mut rng) = model();
+        let n = 10_000;
+        let tcp: u64 = (0..n).map(|_| m.tcp_hop(&mut rng)).sum();
+        let http: u64 = (0..n).map(|_| m.http_leg(&mut rng)).sum();
+        assert!(http > tcp * 5, "tcp {tcp} vs http {http}");
+    }
+
+    #[test]
+    fn tcp_in_paper_band() {
+        let (m, mut rng) = model();
+        let n = 20_000;
+        let mean_ms =
+            (0..n).map(|_| m.tcp_hop(&mut rng)).sum::<u64>() as f64 / n as f64 / 1_000.0;
+        // End-to-end read = ~hop + service; the hop median alone sits
+        // under 2ms.
+        assert!(mean_ms > 0.3 && mean_ms < 2.0, "tcp mean {mean_ms}ms");
+    }
+
+    #[test]
+    fn http_in_paper_band() {
+        let (m, mut rng) = model();
+        let n = 20_000;
+        let mean_ms =
+            (0..n).map(|_| m.http_leg(&mut rng)).sum::<u64>() as f64 / n as f64 / 1_000.0;
+        assert!(mean_ms > 6.0 && mean_ms < 20.0, "http mean {mean_ms}ms");
+    }
+
+    #[test]
+    fn http_variance_larger() {
+        let (m, mut rng) = model();
+        let n = 20_000;
+        let var = |xs: &[f64]| {
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64
+        };
+        let tcp: Vec<f64> = (0..n).map(|_| m.tcp_hop(&mut rng) as f64).collect();
+        let http: Vec<f64> = (0..n).map(|_| m.http_leg(&mut rng) as f64).collect();
+        assert!(var(&http) > var(&tcp) * 10.0, "http variance dominates");
+    }
+}

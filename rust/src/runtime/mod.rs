@@ -1,0 +1,75 @@
+//! The PJRT runtime: load and execute the AOT-compiled L1/L2 artifacts.
+//!
+//! `make artifacts` lowers the JAX pipeline (`python/compile/`) to HLO
+//! *text* (the interchange format the bundled xla_extension 0.5.1 can
+//! parse — serialized jax≥0.5 protos carry 64-bit instruction ids it
+//! rejects). This module loads those artifacts through the `xla` crate's
+//! PJRT CPU client and exposes typed batch executors:
+//!
+//! * [`RouteExecutor`] — the L1 FNV-1a routing kernel: batches of parent
+//!   paths → deployment ids. Used to build the client
+//!   [`Router`](crate::client::Router)'s table.
+//! * [`LatencyExecutor`] — the L1 latency-window kernel: batches of
+//!   client windows → (mean, straggler, thrash) flags.
+//! * [`ParetoExecutor`] — the L2 Pareto schedule: uniforms → per-interval
+//!   target throughputs for the workload generator.
+//!
+//! Python never runs at request time: the artifacts are compiled once at
+//! build time and the binary is self-contained afterwards.
+
+pub mod executors;
+
+pub use executors::{ArtifactSet, LatencyExecutor, ParetoExecutor, RouteExecutor};
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$LAMBDAFS_ARTIFACTS`, else
+/// `./artifacts`, else `<crate root>/artifacts`.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("LAMBDAFS_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.is_dir() {
+        return Some(cwd);
+    }
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest.is_dir() {
+        return Some(manifest);
+    }
+    None
+}
+
+/// Shape constants mirrored from `python/compile/model.py`. The manifest
+/// in the artifacts directory is validated against these at load time.
+pub mod shapes {
+    pub const ROUTE_BATCH: usize = 256;
+    pub const PATH_WIDTH: usize = 128;
+    pub const LAT_BATCH: usize = 256;
+    pub const LAT_WINDOW: usize = 64;
+    pub const PARETO_N: usize = 64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_fnv_contract() {
+        assert_eq!(shapes::PATH_WIDTH, crate::util::fnv::PATH_WIDTH);
+    }
+
+    #[test]
+    fn artifacts_dir_env_override_requires_existing_dir() {
+        // A bogus env value must not produce a nonexistent dir.
+        std::env::set_var("LAMBDAFS_ARTIFACTS", "/definitely/not/here");
+        let d = artifacts_dir();
+        if let Some(d) = &d {
+            assert!(d.is_dir());
+        }
+        std::env::remove_var("LAMBDAFS_ARTIFACTS");
+    }
+}

@@ -1,0 +1,18 @@
+//! The agile auto-scaling policy (§3.4) and the client-side latency
+//! control loops (Appendices A & B).
+//!
+//! * [`policy::ReplacementPolicy`] — randomized HTTP-for-TCP replacement:
+//!   each TCP RPC is probabilistically replaced by an HTTP RPC so the FaaS
+//!   platform keeps seeing load signal and can scale out, while the vast
+//!   majority of RPCs stay on the fast TCP path.
+//! * [`window::LatencyWindow`] — the moving-window latency tracker that
+//!   drives straggler mitigation (resubmit requests ≥ T_straggler × mean)
+//!   and anti-thrashing mode (suppress HTTP replacement when latency
+//!   degrades ≥ T_thrash × mean). Semantically identical to the L1
+//!   latency Pallas kernel; the runtime can execute either.
+
+pub mod policy;
+pub mod window;
+
+pub use policy::ReplacementPolicy;
+pub use window::LatencyWindow;

@@ -1,0 +1,122 @@
+//! Randomized HTTP-TCP replacement (§3.4, Fig. 6).
+//!
+//! TCP RPCs are not FaaS-aware: if clients only ever used TCP, the
+//! platform would never see load and never scale out. The policy
+//! probabilistically sends an HTTP RPC even when a TCP connection exists:
+//!
+//! ```text
+//! P(HTTP) = p_replace        (fine-grained control, ≤ 1%)
+//! degree of auto-scaling ∝ α / ConcurrencyLevel   (coarse-grained)
+//! ```
+//!
+//! Anti-thrashing mode (Appendix B) suppresses replacement entirely so
+//! the platform stops churning containers under a resource cap.
+
+use crate::util::rng::Rng;
+
+/// Which path a client RPC takes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RpcPath {
+    Tcp,
+    Http,
+}
+
+/// The replacement policy state (per client).
+#[derive(Clone, Debug)]
+pub struct ReplacementPolicy {
+    /// HTTP-for-TCP replacement probability.
+    pub p_replace: f64,
+    /// Anti-thrashing mode: when set, never replace (Appendix B: "the
+    /// client will opt to issue TCP RPCs for every metadata operation").
+    pub anti_thrash: bool,
+    http_replacements: u64,
+    tcp_rpcs: u64,
+    http_fallbacks: u64,
+}
+
+impl ReplacementPolicy {
+    pub fn new(p_replace: f64) -> Self {
+        ReplacementPolicy {
+            p_replace: p_replace.clamp(0.0, 1.0),
+            anti_thrash: false,
+            http_replacements: 0,
+            tcp_rpcs: 0,
+            http_fallbacks: 0,
+        }
+    }
+
+    /// Choose a path given whether a TCP connection to the target
+    /// deployment exists (directly or via same-VM connection sharing).
+    pub fn choose(&mut self, tcp_available: bool, rng: &mut Rng) -> RpcPath {
+        if !tcp_available {
+            // No connection anywhere on the VM: HTTP is the only way in
+            // (and it seeds a future TCP connection).
+            self.http_fallbacks += 1;
+            return RpcPath::Http;
+        }
+        if !self.anti_thrash && rng.chance(self.p_replace) {
+            self.http_replacements += 1;
+            return RpcPath::Http;
+        }
+        self.tcp_rpcs += 1;
+        RpcPath::Tcp
+    }
+
+    /// Observed replacement statistics `(tcp, http_replacements,
+    /// http_fallbacks)`.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (self.tcp_rpcs, self.http_replacements, self.http_fallbacks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_tcp_forces_http() {
+        let mut p = ReplacementPolicy::new(0.0);
+        let mut rng = Rng::new(1);
+        assert_eq!(p.choose(false, &mut rng), RpcPath::Http);
+        assert_eq!(p.stats().2, 1);
+    }
+
+    #[test]
+    fn replacement_rate_matches_probability() {
+        let mut p = ReplacementPolicy::new(0.01);
+        let mut rng = Rng::new(2);
+        let n = 200_000;
+        let http = (0..n).filter(|_| p.choose(true, &mut rng) == RpcPath::Http).count();
+        let rate = http as f64 / n as f64;
+        assert!((rate - 0.01).abs() < 0.002, "rate {rate}");
+    }
+
+    #[test]
+    fn anti_thrash_suppresses_replacement() {
+        let mut p = ReplacementPolicy::new(0.5);
+        p.anti_thrash = true;
+        let mut rng = Rng::new(3);
+        for _ in 0..10_000 {
+            assert_eq!(p.choose(true, &mut rng), RpcPath::Tcp);
+        }
+        assert_eq!(p.stats().1, 0);
+    }
+
+    #[test]
+    fn anti_thrash_still_allows_fallback() {
+        // Without any TCP connection HTTP is unavoidable even in
+        // anti-thrashing mode (there is no other path).
+        let mut p = ReplacementPolicy::new(0.5);
+        p.anti_thrash = true;
+        let mut rng = Rng::new(4);
+        assert_eq!(p.choose(false, &mut rng), RpcPath::Http);
+    }
+
+    #[test]
+    fn probability_clamped() {
+        let p = ReplacementPolicy::new(7.0);
+        assert_eq!(p.p_replace, 1.0);
+        let p = ReplacementPolicy::new(-1.0);
+        assert_eq!(p.p_replace, 0.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Client-side moving-window latency tracking (Appendices A & B).
+//!
+//! Ring buffer of the last `W` request latencies. After each completed
+//! request the client checks:
+//!
+//! * straggler: `latency ≥ T_straggler × mean` → cancel & resubmit
+//!   elsewhere (the check actually guards *pending* requests; the sim
+//!   applies it to completions against the pre-completion mean);
+//! * thrash: `latency ≥ T_thrash × mean` → enter anti-thrashing mode.
+//!
+//! Bit-compatible with the L1 Pallas latency kernel
+//! (`python/compile/kernels/latency.py`): same front-padded window, same
+//! `count.max(1)` clamp, same `>=` comparisons. The runtime executes
+//! batches of these windows through the compiled artifact; this is the
+//! scalar fallback and the reference for the cross-checking test.
+
+/// Moving-window latency statistics for one client.
+#[derive(Clone, Debug)]
+pub struct LatencyWindow {
+    buf: Vec<f64>,
+    head: usize,
+    filled: usize,
+    sum: f64,
+}
+
+/// Flags for the newest sample.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LatencyFlags {
+    pub straggler: bool,
+    pub thrash: bool,
+}
+
+impl LatencyWindow {
+    pub fn new(window: usize) -> Self {
+        let w = window.max(1);
+        LatencyWindow { buf: vec![0.0; w], head: 0, filled: 0, sum: 0.0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.filled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filled == 0
+    }
+
+    /// Mean over the valid samples (0 if empty; denominator clamped like
+    /// the kernel's `max(count, 1)`).
+    pub fn mean(&self) -> f64 {
+        self.sum / self.filled.max(1) as f64
+    }
+
+    /// Record a new latency sample (ms) and evaluate the thresholds
+    /// against the *post-insertion* mean — matching the kernel, whose
+    /// window already contains the newest sample.
+    pub fn record(&mut self, latency_ms: f64, t_straggler: f64, t_thrash: f64) -> LatencyFlags {
+        self.sum -= self.buf[self.head];
+        self.buf[self.head] = latency_ms;
+        self.sum += latency_ms;
+        self.head = (self.head + 1) % self.buf.len();
+        if self.filled < self.buf.len() {
+            self.filled += 1;
+        }
+        let mean = self.mean();
+        LatencyFlags {
+            straggler: latency_ms >= t_straggler * mean,
+            thrash: latency_ms >= t_thrash * mean,
+        }
+    }
+
+    /// Would a latency observed now be a straggler? (pre-insertion check
+    /// used for pending-request cancellation, App. A).
+    pub fn is_straggler(&self, latency_ms: f64, t_straggler: f64) -> bool {
+        if self.filled == 0 {
+            return false;
+        }
+        latency_ms >= t_straggler * self.mean()
+    }
+
+    /// Snapshot of the window in the kernel's layout: front-padded,
+    /// newest last (for the runtime batch executor).
+    pub fn kernel_layout(&self, width: usize) -> (Vec<f32>, i32) {
+        let mut out = vec![0.0f32; width];
+        let n = self.filled.min(width);
+        for k in 0..n {
+            // k = 0 is newest.
+            let idx = (self.head + self.buf.len() - 1 - k) % self.buf.len();
+            out[width - 1 - k] = self.buf[idx] as f32;
+        }
+        (out, n as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_over_partial_window() {
+        let mut w = LatencyWindow::new(8);
+        w.record(2.0, 10.0, 2.5);
+        w.record(4.0, 10.0, 2.5);
+        assert!((w.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn window_wraps_and_forgets() {
+        let mut w = LatencyWindow::new(4);
+        for _ in 0..4 {
+            w.record(10.0, 10.0, 2.5);
+        }
+        for _ in 0..4 {
+            w.record(2.0, 10.0, 2.5);
+        }
+        assert!((w.mean() - 2.0).abs() < 1e-12, "old samples evicted");
+    }
+
+    #[test]
+    fn straggler_flagged() {
+        let mut w = LatencyWindow::new(64);
+        for _ in 0..63 {
+            w.record(1.0, 10.0, 2.5);
+        }
+        let flags = w.record(1000.0, 10.0, 2.5);
+        assert!(flags.straggler);
+        assert!(flags.thrash);
+    }
+
+    #[test]
+    fn thrash_band_without_straggler() {
+        let mut w = LatencyWindow::new(64);
+        for _ in 0..63 {
+            w.record(1.0, 10.0, 2.5);
+        }
+        // newest = 4.0: post-mean ≈ (63 + 4)/64 ≈ 1.047 -> 3.8x mean.
+        let flags = w.record(4.0, 10.0, 2.5);
+        assert!(flags.thrash);
+        assert!(!flags.straggler);
+    }
+
+    #[test]
+    fn normal_latency_no_flags() {
+        let mut w = LatencyWindow::new(16);
+        for _ in 0..16 {
+            let flags = w.record(1.0, 10.0, 2.5);
+            // 1.0 >= 2.5 * 1.0 is false... but the very first sample:
+            // mean == latency, and thresholds > 1 make flags false.
+            assert!(!flags.straggler && !flags.thrash);
+        }
+    }
+
+    #[test]
+    fn pre_insertion_straggler_check() {
+        let mut w = LatencyWindow::new(8);
+        assert!(!w.is_straggler(100.0, 10.0), "empty window never flags");
+        w.record(1.0, 10.0, 2.5);
+        assert!(w.is_straggler(50.0, 10.0));
+        assert!(!w.is_straggler(5.0, 10.0));
+    }
+
+    #[test]
+    fn kernel_layout_matches_contract() {
+        let mut w = LatencyWindow::new(4);
+        w.record(1.0, 10.0, 2.5);
+        w.record(2.0, 10.0, 2.5);
+        w.record(3.0, 10.0, 2.5);
+        let (buf, count) = w.kernel_layout(8);
+        assert_eq!(count, 3);
+        assert_eq!(&buf[5..], &[1.0, 2.0, 3.0], "newest last");
+        assert_eq!(&buf[..5], &[0.0; 5], "front padded");
+    }
+
+    #[test]
+    fn kernel_layout_truncates_to_width() {
+        let mut w = LatencyWindow::new(16);
+        for i in 0..16 {
+            w.record(i as f64, 10.0, 2.5);
+        }
+        let (buf, count) = w.kernel_layout(4);
+        assert_eq!(count, 4);
+        assert_eq!(buf, vec![12.0, 13.0, 14.0, 15.0], "newest 4 kept");
+    }
+}

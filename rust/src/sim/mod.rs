@@ -1,0 +1,63 @@
+//! Discrete-event simulation core.
+//!
+//! A deterministic virtual clock plus a binary-heap event queue. All of
+//! the λFS evaluation figures are time series over 5-minute workloads, so
+//! every substrate (FaaS platform, NDB store, network, clients) advances
+//! on this clock rather than wall time. Determinism contract: two runs
+//! with the same `SystemConfig.seed` produce identical metrics.
+//!
+//! Time unit: **microseconds** (`Time = u64`). Helper conversions are in
+//! [`time`].
+
+pub mod queue;
+pub mod station;
+
+pub use queue::{EventQueue, Scheduled};
+
+/// Virtual time in microseconds since simulation start.
+pub type Time = u64;
+
+/// Time helpers.
+pub mod time {
+    use super::Time;
+
+    pub const MS: Time = 1_000;
+    pub const SEC: Time = 1_000_000;
+
+    /// Convert fractional milliseconds to integer microseconds
+    /// (rounding; latency models are f64-ms based).
+    #[inline]
+    pub fn from_ms(ms: f64) -> Time {
+        debug_assert!(ms >= 0.0, "negative duration {ms}");
+        (ms * 1_000.0).round().max(0.0) as Time
+    }
+
+    #[inline]
+    pub fn to_ms(t: Time) -> f64 {
+        t as f64 / 1_000.0
+    }
+
+    #[inline]
+    pub fn to_sec(t: Time) -> f64 {
+        t as f64 / 1_000_000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_round_trip() {
+        assert_eq!(time::from_ms(1.5), 1_500);
+        assert_eq!(time::to_ms(2_500), 2.5);
+        assert_eq!(time::to_sec(3_000_000), 3.0);
+        assert_eq!(time::from_ms(0.0), 0);
+    }
+
+    #[test]
+    fn sub_microsecond_rounds() {
+        assert_eq!(time::from_ms(0.0004), 0);
+        assert_eq!(time::from_ms(0.0006), 1);
+    }
+}

@@ -1,0 +1,172 @@
+//! Multi-server service stations — the queueing primitive behind every
+//! capacity-limited resource in the simulation (NDB data nodes, the FaaS
+//! API gateway, serverful NameNode handler pools, instance CPU).
+//!
+//! A [`Station`] holds `c` servers as a min-heap of free-at times. A job
+//! arriving at `t` with service duration `d` starts at
+//! `max(t, earliest_free_server)` and completes at `start + d`. Processing
+//! jobs in arrival order gives deterministic FIFO-c queueing.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::Time;
+
+/// FIFO multi-server station.
+#[derive(Clone, Debug)]
+pub struct Station {
+    free_at: BinaryHeap<Reverse<Time>>,
+    servers: u32,
+    busy_time: u64,
+    jobs: u64,
+}
+
+impl Station {
+    pub fn new(servers: u32) -> Self {
+        let servers = servers.max(1);
+        let mut free_at = BinaryHeap::with_capacity(servers as usize);
+        for _ in 0..servers {
+            free_at.push(Reverse(0));
+        }
+        Station { free_at, servers, busy_time: 0, jobs: 0 }
+    }
+
+    pub fn servers(&self) -> u32 {
+        self.servers
+    }
+
+    /// Offer a job arriving at `arrival` needing `service` µs.
+    /// Returns `(start, completion)`.
+    pub fn submit(&mut self, arrival: Time, service: Time) -> (Time, Time) {
+        let Reverse(free) = self.free_at.pop().expect("station has servers");
+        let start = arrival.max(free);
+        let end = start.saturating_add(service);
+        self.free_at.push(Reverse(end));
+        self.busy_time += service;
+        self.jobs += 1;
+        (start, end)
+    }
+
+    /// Earliest time a new arrival could start service.
+    pub fn earliest_start(&self, arrival: Time) -> Time {
+        let Reverse(free) = *self.free_at.peek().expect("station has servers");
+        arrival.max(free)
+    }
+
+    /// Queueing delay a job arriving now would experience.
+    pub fn backlog(&self, arrival: Time) -> Time {
+        self.earliest_start(arrival).saturating_sub(arrival)
+    }
+
+    /// Cumulative busy server-microseconds (for utilization reporting).
+    pub fn busy_time(&self) -> u64 {
+        self.busy_time
+    }
+
+    pub fn jobs(&self) -> u64 {
+        self.jobs
+    }
+
+    /// Utilization over a horizon: busy-time / (servers * horizon).
+    pub fn utilization(&self, horizon: Time) -> f64 {
+        if horizon == 0 {
+            return 0.0;
+        }
+        self.busy_time as f64 / (self.servers as f64 * horizon as f64)
+    }
+
+    /// Grow/shrink the server pool (resource scaling experiments). New
+    /// servers are immediately free; shrinking drops the *most loaded*
+    /// servers' future free times (they finish their work first).
+    pub fn resize(&mut self, servers: u32, now: Time) {
+        let servers = servers.max(1);
+        if servers > self.servers {
+            for _ in self.servers..servers {
+                self.free_at.push(Reverse(now));
+            }
+        } else if servers < self.servers {
+            let mut all: Vec<Time> = self.free_at.drain().map(|Reverse(t)| t).collect();
+            all.sort_unstable(); // keep the soonest-free servers
+            all.truncate(servers as usize);
+            self.free_at = all.into_iter().map(Reverse).collect();
+        }
+        self.servers = servers;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_server_fifo() {
+        let mut s = Station::new(1);
+        let (a0, d0) = s.submit(0, 10);
+        let (a1, d1) = s.submit(0, 10);
+        assert_eq!((a0, d0), (0, 10));
+        assert_eq!((a1, d1), (10, 20), "second job queues");
+    }
+
+    #[test]
+    fn parallel_servers_no_queueing() {
+        let mut s = Station::new(4);
+        for _ in 0..4 {
+            let (start, _) = s.submit(0, 100);
+            assert_eq!(start, 0);
+        }
+        let (start, _) = s.submit(0, 100);
+        assert_eq!(start, 100, "fifth job waits for a server");
+    }
+
+    #[test]
+    fn idle_server_starts_immediately() {
+        let mut s = Station::new(2);
+        s.submit(0, 50);
+        let (start, end) = s.submit(200, 10);
+        assert_eq!((start, end), (200, 210));
+    }
+
+    #[test]
+    fn backlog_reflects_queue() {
+        let mut s = Station::new(1);
+        s.submit(0, 100);
+        assert_eq!(s.backlog(0), 100);
+        assert_eq!(s.backlog(60), 40);
+        assert_eq!(s.backlog(150), 0);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut s = Station::new(2);
+        s.submit(0, 100);
+        s.submit(0, 100);
+        assert!((s.utilization(100) - 1.0).abs() < 1e-12);
+        assert!((s.utilization(200) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resize_grow_adds_capacity() {
+        let mut s = Station::new(1);
+        s.submit(0, 100);
+        s.resize(2, 0);
+        let (start, _) = s.submit(0, 10);
+        assert_eq!(start, 0, "new server picks up the job");
+    }
+
+    #[test]
+    fn resize_shrink_keeps_soonest_free() {
+        let mut s = Station::new(3);
+        s.submit(0, 10);
+        s.submit(0, 200);
+        s.submit(0, 300);
+        s.resize(1, 0);
+        let (start, _) = s.submit(0, 5);
+        assert_eq!(start, 10, "kept the server free at t=10");
+    }
+
+    #[test]
+    fn zero_servers_clamped() {
+        let s = Station::new(0);
+        assert_eq!(s.servers(), 1);
+    }
+}

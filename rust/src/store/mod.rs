@@ -1,0 +1,15 @@
+//! Persistent metadata stores.
+//!
+//! * [`ndb`] — the MySQL-Cluster-NDB-like store HopsFS and λFS persist to:
+//!   sharded in-memory rows, ACID row locks (the coherence protocol's
+//!   write-serialization anchor), a subtree-lock table (Appendix C), and a
+//!   multi-server capacity model that makes the store the write bottleneck
+//!   the paper observes.
+//! * [`sstable`] — the LevelDB-like store λIndexFS persists to (§4):
+//!   LSM-ish append-optimized writes with read amplification.
+
+pub mod ndb;
+pub mod sstable;
+
+pub use ndb::NdbStore;
+pub use sstable::SsTableStore;

@@ -1,0 +1,339 @@
+//! NDB-like persistent metadata store.
+//!
+//! What λFS needs from MySQL Cluster NDB (per §3.5 and Appendix C):
+//!
+//! 1. **Row data with versions** — so tests can assert freshness
+//!    (a committed write bumps the row version; the coherence invariant is
+//!    "no NameNode serves a version older than the last committed one").
+//! 2. **Exclusive row locks** — writes serialize against concurrent writes
+//!    on the same rows; the coherence protocol commits only under locks.
+//! 3. **A subtree-lock table** — subtree operations set the *subtree lock
+//!    flag* on the root and register in an active-operations table so no
+//!    two subtree operations overlap.
+//! 4. **A capacity model** — NDB sustains a bounded transaction rate
+//!    (`data_nodes x per_node_concurrency` service slots); this ceiling is
+//!    exactly why HopsFS' stateless NameNodes are capped and why λFS' write
+//!    path gains little from elasticity (paper §5.3.1).
+
+use std::collections::HashMap;
+
+use crate::config::StoreConfig;
+use crate::namespace::{DirId, InodeRef};
+use crate::sim::station::Station;
+use crate::sim::{time, Time};
+use crate::util::rng::Rng;
+
+/// A stored metadata row.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Row {
+    /// Monotone version; bumped by every committed write.
+    pub version: u64,
+    /// Deleted rows keep a tombstone so versions stay monotone.
+    pub exists: bool,
+}
+
+/// Why a transaction could not start.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TxnError {
+    /// A row lock is held past this time; retry after it.
+    LockedUntil(Time),
+    /// An overlapping subtree operation is active.
+    SubtreeLocked(DirId),
+}
+
+/// The NDB store model.
+#[derive(Clone, Debug)]
+pub struct NdbStore {
+    cfg: StoreConfig,
+    rows: HashMap<InodeRef, Row>,
+    /// Row -> lock released at (exclusive write locks).
+    locks: HashMap<InodeRef, Time>,
+    /// Active subtree operations: root -> lock released at.
+    subtree_locks: HashMap<DirId, Time>,
+    station: Station,
+    reads: u64,
+    writes: u64,
+}
+
+impl NdbStore {
+    pub fn new(cfg: StoreConfig) -> Self {
+        let slots = (cfg.data_nodes * cfg.per_node_concurrency).max(1);
+        NdbStore {
+            cfg,
+            rows: HashMap::new(),
+            locks: HashMap::new(),
+            subtree_locks: HashMap::new(),
+            station: Station::new(slots),
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &StoreConfig {
+        &self.cfg
+    }
+
+    /// Current committed version of a row (0 = never written).
+    pub fn version(&self, inode: InodeRef) -> u64 {
+        self.rows.get(&inode).map(|r| r.version).unwrap_or(0)
+    }
+
+    pub fn exists(&self, inode: InodeRef) -> bool {
+        self.rows.get(&inode).map(|r| r.exists).unwrap_or(false)
+    }
+
+    pub fn reads(&self) -> u64 {
+        self.reads
+    }
+
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Aggregate utilization over a horizon.
+    pub fn utilization(&self, horizon: Time) -> f64 {
+        self.station.utilization(horizon)
+    }
+
+    /// Queueing backlog an arrival at `now` would see (µs).
+    pub fn backlog(&self, now: Time) -> Time {
+        self.station.backlog(now)
+    }
+
+    fn service(&self, base_ms: f64, rng: &mut Rng) -> Time {
+        // +-20% service-time jitter.
+        time::from_ms(base_ms * rng.range_f64(0.85, 1.15))
+    }
+
+    /// A batched primary-key read of `n_rows` rows (the INode-hint-cache
+    /// batch path resolution: one round trip regardless of depth).
+    /// Returns the completion time.
+    pub fn read_batch(&mut self, now: Time, n_rows: u32, rng: &mut Rng) -> Time {
+        // Batch reads share one round trip; service grows sub-linearly
+        // with batch size (NDB executes PK lookups in parallel on the
+        // data nodes).
+        let svc_ms = self.cfg.read_ms * (1.0 + 0.15 * (n_rows.max(1) - 1) as f64);
+        let service = self.service(svc_ms, rng);
+        let (_, done) = self.station.submit(now, service);
+        self.reads += 1;
+        done + time::from_ms(self.cfg.rtt_ms)
+    }
+
+    /// A transactional write over `rows`: waits for exclusive locks, holds
+    /// them to commit, bumps versions. Returns the commit (completion)
+    /// time. `deletes` marks tombstoned rows.
+    pub fn write_txn(
+        &mut self,
+        now: Time,
+        rows: &[InodeRef],
+        deletes: bool,
+        rng: &mut Rng,
+    ) -> Time {
+        // Lock acquisition: wait until every lock currently held on these
+        // rows is released (2PL with deterministic wait-for ordering).
+        let lock_wait = rows
+            .iter()
+            .filter_map(|r| self.locks.get(r).copied())
+            .max()
+            .unwrap_or(0)
+            .max(now);
+        let svc_ms = self.cfg.write_ms * (1.0 + 0.02 * (rows.len().saturating_sub(1)) as f64);
+        let service = self.service(svc_ms, rng);
+        let (_, done) = self.station.submit(lock_wait, service);
+        let commit = done + time::from_ms(self.cfg.rtt_ms);
+        for &r in rows {
+            self.locks.insert(r, commit);
+            let row = self.rows.entry(r).or_default();
+            row.version += 1;
+            row.exists = !deletes;
+        }
+        self.writes += 1;
+        commit
+    }
+
+    /// Try to begin a subtree operation rooted at `root` at `now`,
+    /// planning to finish at `until`. Fails if an *overlapping* subtree
+    /// operation is active (ancestor/descendant/same root overlap is
+    /// approximated by same-root conflict plus explicit ancestor set —
+    /// callers pass the root's ancestor chain).
+    pub fn try_subtree_lock(
+        &mut self,
+        now: Time,
+        root: DirId,
+        ancestors: &[DirId],
+        until: Time,
+    ) -> Result<(), TxnError> {
+        self.gc_subtree_locks(now);
+        if let Some(&t) = self.subtree_locks.get(&root) {
+            if t > now {
+                return Err(TxnError::SubtreeLocked(root));
+            }
+        }
+        for a in ancestors {
+            if let Some(&t) = self.subtree_locks.get(a) {
+                if t > now {
+                    return Err(TxnError::SubtreeLocked(*a));
+                }
+            }
+        }
+        self.subtree_locks.insert(root, until);
+        Ok(())
+    }
+
+    /// Release a subtree lock early (operation finished or failed over).
+    pub fn release_subtree_lock(&mut self, root: DirId) {
+        self.subtree_locks.remove(&root);
+    }
+
+    /// Locks held by crashed NameNodes are removed once detected — the
+    /// Coordinator "ensures that crashes are detected, enabling the easy
+    /// removal of locks held by crashed NameNodes" (§3.6).
+    pub fn break_locks_for_crash(&mut self, rows: &[InodeRef], now: Time) {
+        for r in rows {
+            if let Some(t) = self.locks.get_mut(r) {
+                *t = (*t).min(now);
+            }
+        }
+    }
+
+    fn gc_subtree_locks(&mut self, now: Time) {
+        self.subtree_locks.retain(|_, &mut t| t > now);
+    }
+
+    /// Number of live (existing) rows — test hook.
+    pub fn live_rows(&self) -> usize {
+        self.rows.values().filter(|r| r.exists).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> (NdbStore, Rng) {
+        (NdbStore::new(crate::config::SystemConfig::default().store), Rng::new(42))
+    }
+
+    fn inode(d: u32, f: u32) -> InodeRef {
+        InodeRef::file(DirId(d), f)
+    }
+
+    #[test]
+    fn read_completes_after_now() {
+        let (mut s, mut rng) = store();
+        let done = s.read_batch(1_000, 3, &mut rng);
+        assert!(done > 1_000);
+        assert_eq!(s.reads(), 1);
+    }
+
+    #[test]
+    fn write_bumps_version_and_exists() {
+        let (mut s, mut rng) = store();
+        assert_eq!(s.version(inode(1, 0)), 0);
+        s.write_txn(0, &[inode(1, 0)], false, &mut rng);
+        assert_eq!(s.version(inode(1, 0)), 1);
+        assert!(s.exists(inode(1, 0)));
+        s.write_txn(10_000, &[inode(1, 0)], true, &mut rng);
+        assert_eq!(s.version(inode(1, 0)), 2);
+        assert!(!s.exists(inode(1, 0)), "tombstoned");
+    }
+
+    #[test]
+    fn conflicting_writes_serialize() {
+        let (mut s, mut rng) = store();
+        let c1 = s.write_txn(0, &[inode(1, 0)], false, &mut rng);
+        let c2 = s.write_txn(0, &[inode(1, 0)], false, &mut rng);
+        assert!(c2 > c1, "second write waits for the first's lock");
+    }
+
+    #[test]
+    fn disjoint_writes_run_concurrently() {
+        let (mut s, mut rng) = store();
+        let c1 = s.write_txn(0, &[inode(1, 0)], false, &mut rng);
+        let c2 = s.write_txn(0, &[inode(2, 0)], false, &mut rng);
+        // Both should finish within ~one service time (plenty of slots).
+        let limit = time::from_ms(5.0);
+        assert!(c1 < limit && c2 < limit, "c1={c1} c2={c2}");
+    }
+
+    #[test]
+    fn capacity_ceiling_queues() {
+        let cfg = StoreConfig {
+            data_nodes: 1,
+            per_node_concurrency: 1,
+            ..crate::config::SystemConfig::default().store
+        };
+        let mut s = NdbStore::new(cfg);
+        let mut rng = Rng::new(1);
+        let mut last = 0;
+        for i in 0..10 {
+            let done = s.write_txn(0, &[inode(9, i)], false, &mut rng);
+            assert!(done > last, "serial service on one slot");
+            last = done;
+        }
+        // 10 writes x ~1.55ms each ≈ 15ms+.
+        assert!(last > time::from_ms(10.0), "queueing built up: {last}");
+    }
+
+    #[test]
+    fn subtree_lock_conflicts() {
+        let (mut s, _) = store();
+        s.try_subtree_lock(0, DirId(5), &[DirId(0)], 1_000_000).unwrap();
+        // Same root conflicts.
+        assert_eq!(
+            s.try_subtree_lock(10, DirId(5), &[DirId(0)], 2_000_000),
+            Err(TxnError::SubtreeLocked(DirId(5)))
+        );
+        // Descendant whose ancestor chain includes the locked root conflicts.
+        assert_eq!(
+            s.try_subtree_lock(10, DirId(9), &[DirId(5), DirId(0)], 2_000_000),
+            Err(TxnError::SubtreeLocked(DirId(5)))
+        );
+        // Disjoint root fine.
+        s.try_subtree_lock(10, DirId(7), &[DirId(0)], 2_000_000).unwrap();
+    }
+
+    #[test]
+    fn subtree_lock_expires() {
+        let (mut s, _) = store();
+        s.try_subtree_lock(0, DirId(5), &[], 100).unwrap();
+        assert!(s.try_subtree_lock(200, DirId(5), &[], 500).is_ok(), "expired lock GC'd");
+    }
+
+    #[test]
+    fn release_subtree_lock() {
+        let (mut s, _) = store();
+        s.try_subtree_lock(0, DirId(5), &[], 1_000_000).unwrap();
+        s.release_subtree_lock(DirId(5));
+        assert!(s.try_subtree_lock(1, DirId(5), &[], 1_000_000).is_ok());
+    }
+
+    #[test]
+    fn crash_breaks_row_locks() {
+        let (mut s, mut rng) = store();
+        let c1 = s.write_txn(0, &[inode(1, 0)], false, &mut rng);
+        assert!(c1 > 0);
+        s.break_locks_for_crash(&[inode(1, 0)], 10);
+        let c2 = s.write_txn(10, &[inode(1, 0)], false, &mut rng);
+        assert!(c2 < c1 + time::from_ms(5.0), "no full lock wait after break");
+    }
+
+    #[test]
+    fn batch_read_cheaper_than_n_reads() {
+        let (mut s, mut rng) = store();
+        let batch_done = s.read_batch(0, 8, &mut rng) ;
+        let mut serial_done = 0;
+        for _ in 0..8 {
+            serial_done = s.read_batch(serial_done, 1, &mut rng);
+        }
+        assert!(batch_done < serial_done, "batching wins: {batch_done} vs {serial_done}");
+    }
+
+    #[test]
+    fn live_rows_counts() {
+        let (mut s, mut rng) = store();
+        s.write_txn(0, &[inode(1, 0), inode(1, 1)], false, &mut rng);
+        s.write_txn(0, &[inode(1, 1)], true, &mut rng);
+        assert_eq!(s.live_rows(), 1);
+    }
+}

@@ -1,0 +1,209 @@
+//! LevelDB-like store for the λIndexFS port (§4).
+//!
+//! IndexFS packs metadata into LevelDB SSTables; λIndexFS keeps LevelDB
+//! only as the persistent store and moves in-memory metadata handling into
+//! serverless functions. The model captures the LSM behaviours that shape
+//! Figure 16: cheap appends (mknod), memtable flushes, and read
+//! amplification that grows with the number of levels a getattr must probe.
+
+use std::collections::HashMap;
+
+use crate::namespace::InodeRef;
+use crate::sim::station::Station;
+use crate::sim::{time, Time};
+use crate::util::rng::Rng;
+
+/// SSTable store tuning.
+#[derive(Clone, Debug)]
+pub struct SsTableConfig {
+    /// Memtable capacity (entries) before a flush creates an SSTable.
+    pub memtable_entries: usize,
+    /// Append (write) service time (ms).
+    pub append_ms: f64,
+    /// Memtable-hit read service (ms).
+    pub mem_read_ms: f64,
+    /// Per-SSTable probe cost on a read miss (ms) — read amplification.
+    pub probe_ms: f64,
+    /// SSTables per level before compaction merges them.
+    pub fanout: usize,
+    /// Compaction pause applied to the store when triggered (ms).
+    pub compaction_ms: f64,
+    /// Concurrent I/O slots.
+    pub io_slots: u32,
+}
+
+impl Default for SsTableConfig {
+    fn default() -> Self {
+        SsTableConfig {
+            memtable_entries: 4_096,
+            append_ms: 0.30,
+            mem_read_ms: 0.20,
+            probe_ms: 0.50,
+            fanout: 4,
+            compaction_ms: 30.0,
+            io_slots: 4,
+        }
+    }
+}
+
+/// The LSM store model.
+#[derive(Clone, Debug)]
+pub struct SsTableStore {
+    cfg: SsTableConfig,
+    /// Current memtable contents.
+    memtable: HashMap<InodeRef, u64>,
+    /// Flushed tables: each is a set of keys (newest first).
+    tables: Vec<HashMap<InodeRef, u64>>,
+    station: Station,
+    version: u64,
+    compactions: u64,
+}
+
+impl SsTableStore {
+    pub fn new(cfg: SsTableConfig) -> Self {
+        let slots = cfg.io_slots;
+        SsTableStore {
+            cfg,
+            memtable: HashMap::new(),
+            tables: Vec::new(),
+            station: Station::new(slots),
+            version: 0,
+            compactions: 0,
+        }
+    }
+
+    pub fn n_tables(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    fn jitter(&self, ms: f64, rng: &mut Rng) -> Time {
+        time::from_ms(ms * rng.range_f64(0.85, 1.15))
+    }
+
+    /// Append a write (mknod). Returns the durable-commit time.
+    pub fn append(&mut self, now: Time, key: InodeRef, rng: &mut Rng) -> Time {
+        self.version += 1;
+        self.memtable.insert(key, self.version);
+        let mut service = self.jitter(self.cfg.append_ms, rng);
+        if self.memtable.len() >= self.cfg.memtable_entries {
+            // Flush memtable to a new SSTable.
+            let flushed = std::mem::take(&mut self.memtable);
+            self.tables.insert(0, flushed);
+            if self.tables.len() > self.cfg.fanout {
+                // Compact: merge all tables into one (newest wins).
+                let mut merged = HashMap::new();
+                for t in self.tables.drain(..).rev() {
+                    merged.extend(t);
+                }
+                self.tables.push(merged);
+                self.compactions += 1;
+                service += self.jitter(self.cfg.compaction_ms, rng);
+            }
+        }
+        let (_, done) = self.station.submit(now, service);
+        done
+    }
+
+    /// Point read (getattr). Probes memtable then tables newest-to-oldest;
+    /// cost grows with the number of probes (read amplification).
+    /// Returns `(completion, found_version)`.
+    pub fn get(&mut self, now: Time, key: InodeRef, rng: &mut Rng) -> (Time, Option<u64>) {
+        if let Some(&v) = self.memtable.get(&key) {
+            let (_, done) = self.station.submit(now, self.jitter(self.cfg.mem_read_ms, rng));
+            return (done, Some(v));
+        }
+        let mut probes = 0u32;
+        let mut found = None;
+        for t in &self.tables {
+            probes += 1;
+            if let Some(&v) = t.get(&key) {
+                found = Some(v);
+                break;
+            }
+        }
+        let ms = self.cfg.mem_read_ms + self.cfg.probe_ms * probes.max(1) as f64;
+        let (_, done) = self.station.submit(now, self.jitter(ms, rng));
+        (done, found)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::DirId;
+
+    fn key(i: u32) -> InodeRef {
+        InodeRef::file(DirId(0), i)
+    }
+
+    fn store(memtable: usize) -> (SsTableStore, Rng) {
+        let cfg = SsTableConfig { memtable_entries: memtable, ..Default::default() };
+        (SsTableStore::new(cfg), Rng::new(9))
+    }
+
+    #[test]
+    fn write_then_read_from_memtable() {
+        let (mut s, mut rng) = store(100);
+        s.append(0, key(1), &mut rng);
+        let (_, v) = s.get(0, key(1), &mut rng);
+        assert_eq!(v, Some(1));
+    }
+
+    #[test]
+    fn flush_at_capacity_creates_table() {
+        let (mut s, mut rng) = store(4);
+        for i in 0..4 {
+            s.append(0, key(i), &mut rng);
+        }
+        assert_eq!(s.n_tables(), 1);
+        let (_, v) = s.get(0, key(0), &mut rng);
+        assert_eq!(v, Some(1), "flushed keys still readable");
+    }
+
+    #[test]
+    fn newest_version_wins_across_tables() {
+        let (mut s, mut rng) = store(2);
+        s.append(0, key(7), &mut rng);
+        s.append(0, key(8), &mut rng); // flush #1
+        s.append(0, key(7), &mut rng); // newer version of 7
+        s.append(0, key(9), &mut rng); // flush #2
+        let (_, v) = s.get(0, key(7), &mut rng);
+        assert_eq!(v, Some(3), "newest table probed first");
+    }
+
+    #[test]
+    fn compaction_bounds_tables() {
+        let (mut s, mut rng) = store(2);
+        for i in 0..40 {
+            s.append(0, key(i), &mut rng);
+        }
+        assert!(s.n_tables() <= SsTableConfig::default().fanout + 1);
+        assert!(s.compactions() > 0);
+        // Everything still readable post-compaction.
+        let (_, v) = s.get(0, key(0), &mut rng);
+        assert!(v.is_some());
+    }
+
+    #[test]
+    fn read_amplification_costs_more_with_tables() {
+        let (mut s, mut rng) = store(2);
+        for i in 0..8 {
+            s.append(0, key(i), &mut rng);
+        }
+        // Missing key probes all tables.
+        let t0 = 1_000_000;
+        let (done_miss, v) = s.get(t0, key(999), &mut rng);
+        assert!(v.is_none());
+        let (mut s2, mut rng2) = store(100);
+        s2.append(0, key(1), &mut rng2);
+        let (done_hit, _) = s2.get(t0, key(1), &mut rng2);
+        assert!(
+            done_miss - t0 > done_hit - t0,
+            "miss with amplification slower than memtable hit"
+        );
+    }
+}

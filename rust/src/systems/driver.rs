@@ -1,0 +1,265 @@
+//! Workload drivers, generic over [`MdsSim`].
+
+use crate::namespace::generate::HotspotSampler;
+use crate::namespace::{Namespace, OpKind, Operation};
+use crate::sim::queue::EventQueue;
+use crate::sim::{time, Time};
+use crate::util::rng::Rng;
+use crate::workload::{ClosedLoopSpec, OpenLoopSpec};
+
+use super::MdsSim;
+
+/// Open-loop driver (the Spotify workload, §5.2.1).
+///
+/// Each second `s` targets `schedule.target(s)` total ops, spread
+/// uniformly across the second and round-robined over clients. A client
+/// whose previous op has not completed issues late — unfinished work
+/// "rolls over", exactly the hammer-bench behaviour the paper describes.
+pub fn run_open_loop<S: MdsSim>(
+    sys: &mut S,
+    spec: &OpenLoopSpec,
+    ns: &Namespace,
+    sampler: &HotspotSampler,
+    rng: &mut Rng,
+) {
+    let n_clients = spec.n_clients.max(1);
+    let mut ready: Vec<Time> = vec![0; n_clients as usize];
+    let mut next_client = 0u32;
+    let mut carry = 0.0f64;
+    let duration = spec.schedule.duration_s();
+
+    for s in 0..duration {
+        let target = spec.schedule.target(s) + carry;
+        let n_ops = target.floor() as u64;
+        carry = target - n_ops as f64;
+        sys.metrics_mut().second_mut(s).target = n_ops;
+        if n_ops == 0 {
+            sys.on_second(s);
+            continue;
+        }
+        let spacing = time::SEC / n_ops.max(1);
+        for i in 0..n_ops {
+            let slot = s as Time * time::SEC + i * spacing;
+            let c = next_client;
+            next_client = (next_client + 1) % n_clients;
+            // Roll over: the client issues as soon as it is free.
+            let issue = slot.max(ready[c as usize]);
+            let op = spec.mix.sample_op(ns, sampler, rng);
+            let done = sys.submit(issue, c, &op, rng);
+            ready[c as usize] = done;
+            let lat_ms = time::to_ms(done - issue);
+            sys.metrics_mut().record_at(done, lat_ms, op.kind.is_write());
+        }
+        sys.on_second(s);
+    }
+}
+
+/// Closed-loop driver (the §5.3 micro-benchmarks): every client issues its
+/// next op the moment the previous one completes, until each has performed
+/// `ops_per_client` operations.
+pub fn run_closed_loop<S: MdsSim>(
+    sys: &mut S,
+    spec: &ClosedLoopSpec,
+    ns: &Namespace,
+    sampler: &HotspotSampler,
+    rng: &mut Rng,
+) {
+    run_closed_loop_from(sys, spec, ns, sampler, 0, rng)
+}
+
+/// Closed-loop driver starting at virtual time `start` — used by
+/// multi-phase workloads (e.g. tree-test's writes-then-reads) so a later
+/// phase does not race the earlier phase's queued work.
+pub fn run_closed_loop_from<S: MdsSim>(
+    sys: &mut S,
+    spec: &ClosedLoopSpec,
+    ns: &Namespace,
+    sampler: &HotspotSampler,
+    start: Time,
+    rng: &mut Rng,
+) {
+    let mut q: EventQueue<u32> = EventQueue::new();
+    let mut remaining: Vec<u32> = vec![spec.ops_per_client; spec.n_clients as usize];
+    // Stagger initial issues over the first 100 ms (clients do not start
+    // in perfect lockstep).
+    for c in 0..spec.n_clients {
+        q.schedule_at(start + (c as Time) * 100_000 / spec.n_clients.max(1) as Time, c);
+    }
+    let mut last_second = time::to_sec(start) as usize;
+    while let Some(ev) = q.pop() {
+        let c = ev.event;
+        let now = ev.at;
+        let sec = time::to_sec(now) as usize;
+        while last_second < sec {
+            sys.on_second(last_second);
+            last_second += 1;
+        }
+        let op = sample_closed_op(spec.kind, ns, sampler, rng);
+        let done = sys.submit(now, c, &op, rng);
+        let lat_ms = time::to_ms(done - now);
+        sys.metrics_mut().record_at(done, lat_ms, op.kind.is_write());
+        remaining[c as usize] -= 1;
+        if remaining[c as usize] > 0 {
+            q.schedule_at(done, c);
+        }
+    }
+    sys.on_second(last_second);
+}
+
+fn sample_closed_op(
+    kind: OpKind,
+    ns: &Namespace,
+    sampler: &HotspotSampler,
+    rng: &mut Rng,
+) -> Operation {
+    use crate::namespace::InodeRef;
+    match kind {
+        OpKind::Mkdir => Operation::single(kind, InodeRef::dir(sampler.dir(rng))),
+        OpKind::Mv => Operation::mv(sampler.inode(ns, rng), sampler.dir(rng)),
+        OpKind::Create => {
+            let d = sampler.dir(rng);
+            let fresh = ns.dir(d).files + rng.below(1 << 20) as u32;
+            Operation::single(kind, InodeRef::file(d, fresh))
+        }
+        _ => Operation::single(kind, sampler.inode(ns, rng)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RunMetrics;
+    use crate::namespace::generate::{generate, NamespaceParams};
+    use crate::sim::time;
+    use crate::workload::ThroughputSchedule;
+
+    /// A trivial system: fixed 2ms latency, no queueing.
+    struct FixedLatency {
+        metrics: RunMetrics,
+        submitted: u64,
+    }
+
+    impl MdsSim for FixedLatency {
+        fn submit(&mut self, now: Time, _c: u32, _op: &Operation, _r: &mut Rng) -> Time {
+            self.submitted += 1;
+            now + time::from_ms(2.0)
+        }
+        fn on_second(&mut self, _s: usize) {}
+        fn metrics_mut(&mut self) -> &mut RunMetrics {
+            &mut self.metrics
+        }
+        fn into_metrics(self) -> RunMetrics {
+            self.metrics
+        }
+    }
+
+    fn fixtures() -> (Namespace, HotspotSampler, Rng) {
+        let mut rng = Rng::new(3);
+        let ns = generate(&NamespaceParams { n_dirs: 128, ..Default::default() }, &mut rng);
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        (ns, sampler, rng)
+    }
+
+    #[test]
+    fn open_loop_hits_target_when_system_is_fast() {
+        let (ns, sampler, mut rng) = fixtures();
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(5, 1_000.0),
+            mix: crate::workload::OpMix::spotify(),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = FixedLatency { metrics: RunMetrics::new(), submitted: 0 };
+        run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        let m = sys.into_metrics();
+        assert_eq!(m.completed_ops, 5_000);
+        // Fast system: every second completes its target.
+        for s in 0..5 {
+            assert!(
+                (m.seconds[s].completed as i64 - 1_000).abs() <= 50,
+                "second {s}: {}",
+                m.seconds[s].completed
+            );
+        }
+    }
+
+    #[test]
+    fn open_loop_rolls_over_when_system_is_slow() {
+        let (ns, sampler, mut rng) = fixtures();
+        struct Slow {
+            metrics: RunMetrics,
+        }
+        impl MdsSim for Slow {
+            fn submit(&mut self, now: Time, _c: u32, _o: &Operation, _r: &mut Rng) -> Time {
+                now + time::from_ms(100.0) // each client: 10 ops/sec max
+            }
+            fn on_second(&mut self, _s: usize) {}
+            fn metrics_mut(&mut self) -> &mut RunMetrics {
+                &mut self.metrics
+            }
+            fn into_metrics(self) -> RunMetrics {
+                self.metrics
+            }
+        }
+        // 8 clients x 10 ops/s = 80 ops/s capacity, target 1000/s.
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(3, 1_000.0),
+            mix: crate::workload::OpMix::spotify(),
+            n_clients: 8,
+            n_vms: 1,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = Slow { metrics: RunMetrics::new() };
+        run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        let m = sys.into_metrics();
+        // All ops eventually complete (rolled over far past 3 seconds)...
+        assert_eq!(m.completed_ops, 3_000);
+        // ...but per-second completions cap at client capacity.
+        assert!(m.seconds[1].completed < 120, "{}", m.seconds[1].completed);
+        assert!(m.seconds.len() > 10, "work spilled past the schedule");
+    }
+
+    #[test]
+    fn closed_loop_completes_all_ops() {
+        let (ns, sampler, mut rng) = fixtures();
+        let spec = ClosedLoopSpec {
+            kind: OpKind::Read,
+            n_clients: 16,
+            n_vms: 1,
+            ops_per_client: 100,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = FixedLatency { metrics: RunMetrics::new(), submitted: 0 };
+        run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        assert_eq!(sys.submitted, 1_600);
+        let m = sys.into_metrics();
+        assert_eq!(m.completed_ops, 1_600);
+        // 16 clients x 2ms per op -> 8000 ops/sec -> done in ~0.2s.
+        assert!(m.seconds.len() <= 2);
+    }
+
+    #[test]
+    fn closed_loop_throughput_scales_with_clients() {
+        let (ns, sampler, mut rng) = fixtures();
+        let run = |n: u32, rng: &mut Rng| {
+            let spec = ClosedLoopSpec {
+                kind: OpKind::Read,
+                n_clients: n,
+                n_vms: 1,
+                ops_per_client: 200,
+                namespace: NamespaceParams::default(),
+                zipf_s: 1.3,
+            };
+            let mut sys = FixedLatency { metrics: RunMetrics::new(), submitted: 0 };
+            run_closed_loop(&mut sys, &spec, &ns, &sampler, rng);
+            sys.into_metrics().peak_throughput()
+        };
+        let t8 = run(8, &mut rng);
+        let t64 = run(64, &mut rng);
+        assert!(t64 > t8 * 4.0, "closed loop scales: {t8} -> {t64}");
+    }
+}

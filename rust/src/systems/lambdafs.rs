@@ -1,0 +1,682 @@
+//! The λFS end-to-end simulation: serverless NameNode fleet + elastic
+//! metadata cache + hybrid RPC + coherence protocol over the NDB store.
+//!
+//! This composes every substrate into the system of Figure 2. One
+//! instance of [`LambdaFs`] is one deployed λFS cluster; the generic
+//! drivers in [`super::driver`] feed it operations.
+
+use crate::cache::interned::InternedCache;
+use crate::client::{ClientState, Router};
+use crate::coherence::{protocol, Coordinator, Invalidation};
+use crate::config::SystemConfig;
+use crate::coordinator::subtree::{self, SubtreeParams, SubtreePlan};
+use crate::coordinator::ServiceModel;
+use crate::faas::{InstanceId, Platform};
+use crate::metrics::{CostModel, RunMetrics};
+use crate::namespace::{InodeRef, Namespace, OpKind, Operation};
+use crate::rpc::conn::VmId;
+use crate::rpc::{ConnectionTable, NetModel};
+use crate::scaling::policy::RpcPath;
+use crate::sim::{time, Time};
+use crate::store::NdbStore;
+use crate::util::rng::Rng;
+
+use super::MdsSim;
+
+/// λFS under simulation.
+pub struct LambdaFs {
+    pub cfg: SystemConfig,
+    ns: Namespace,
+    router: Router,
+    platform: Platform,
+    /// Per-instance metadata caches, indexed by `InstanceId` slab index.
+    caches: Vec<InternedCache>,
+    conns: ConnectionTable,
+    coord: Coordinator,
+    store: NdbStore,
+    net: NetModel,
+    svc: ServiceModel,
+    clients: Vec<ClientState>,
+    metrics: RunMetrics,
+    cost: CostModel,
+    rng: Rng,
+    /// Billing watermarks for per-second cost deltas.
+    billed_gb_s: f64,
+    billed_requests: u64,
+    /// Pending fault injections: kill one NameNode in deployment `d` at
+    /// second `s` (Fig. 15).
+    kill_schedule: Vec<(usize, u32)>,
+    last_settle: Time,
+}
+
+impl LambdaFs {
+    pub fn new(cfg: SystemConfig, ns: Namespace, n_clients: u32, n_vms: u32) -> Self {
+        let rng = Rng::new(cfg.seed ^ 0x1a3b);
+        let router = Router::build(&ns, cfg.lambda_fs.n_deployments);
+        let platform = Platform::new(cfg.faas.clone(), cfg.lambda_fs.clone());
+        let store = NdbStore::new(cfg.store.clone());
+        let net = NetModel::new(cfg.net.clone());
+        let svc = ServiceModel::new(cfg.op.clone());
+        let coord = Coordinator::new(6 * time::SEC);
+        let clients = (0..n_clients)
+            .map(|c| {
+                ClientState::new(
+                    VmId(c % n_vms.max(1)),
+                    cfg.lambda_fs.http_replacement_prob,
+                    cfg.lambda_fs.latency_window,
+                    cfg.lambda_fs.straggler_threshold,
+                    cfg.lambda_fs.thrash_threshold,
+                )
+            })
+            .collect();
+        let cost = CostModel::new(cfg.cost.clone());
+        LambdaFs {
+            cfg,
+            ns,
+            router,
+            platform,
+            caches: Vec::new(),
+            conns: ConnectionTable::new(),
+            coord,
+            store,
+            net,
+            svc,
+            clients,
+            metrics: RunMetrics::new(),
+            cost,
+            rng,
+            billed_gb_s: 0.0,
+            billed_requests: 0,
+            kill_schedule: Vec::new(),
+            last_settle: 0,
+        }
+    }
+
+    /// Replace the router (e.g. with one built by the PJRT route artifact).
+    pub fn with_router(mut self, router: Router) -> Self {
+        assert_eq!(router.n_deployments(), self.cfg.lambda_fs.n_deployments);
+        self.router = router;
+        self
+    }
+
+    /// Schedule a NameNode kill in deployment `dep` at second `s` (Fig. 15).
+    pub fn schedule_kill(&mut self, second: usize, dep: u32) {
+        self.kill_schedule.push((second, dep));
+    }
+
+    /// Pre-warm `n` instances per deployment at t=0 (the fault-tolerance
+    /// run starts with 36 active NameNodes).
+    pub fn prewarm(&mut self, per_deployment: u32) {
+        let mut rng = self.rng.fork("prewarm");
+        let vms: Vec<VmId> = self
+            .clients
+            .iter()
+            .map(|c| c.vm)
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        for dep in 0..self.cfg.lambda_fs.n_deployments {
+            for _ in 0..per_deployment {
+                let (id, ready) = self.platform.force_spawn(dep, 0, &mut rng);
+                self.platform.settle(ready);
+                self.register(id);
+                // Connect to every VM so TCP is available immediately.
+                for &vm in &vms {
+                    self.conns.establish(vm, dep, id);
+                }
+            }
+        }
+        self.platform.settle(u64::MAX / 2);
+    }
+
+    pub fn namespace(&self) -> &Namespace {
+        &self.ns
+    }
+
+    pub fn store(&self) -> &NdbStore {
+        &self.store
+    }
+
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Aggregate cache stats over all instances (hit-ratio observability).
+    pub fn cache_stats(&self) -> crate::cache::CacheStats {
+        let mut total = crate::cache::CacheStats::default();
+        for c in &self.caches {
+            let s = c.stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.insertions += s.insertions;
+            total.invalidations += s.invalidations;
+            total.evictions += s.evictions;
+        }
+        total
+    }
+
+    fn register(&mut self, id: InstanceId) {
+        while self.caches.len() <= id.0 as usize {
+            self.caches.push(InternedCache::new(self.cfg.lambda_fs.cache_capacity));
+        }
+        if !self.coord.is_live(id) {
+            let dep = self.platform.instance(id).deployment;
+            self.coord.register(id, dep, 0);
+        }
+    }
+
+    /// Find a TCP-reachable instance of `dep` for a client on `vm`
+    /// (own connections, then same-VM sharing — Fig. 4). Among the VM's
+    /// live connections, pick the least-backlogged instance so TCP load
+    /// spreads across the deployment's whole fleet.
+    fn tcp_target(&mut self, vm: VmId, dep: u32, now: Time) -> Option<InstanceId> {
+        let platform = &self.platform;
+        let mut best: Option<(InstanceId, Time)> = None;
+        for &i in self.conns.all(vm, dep) {
+            let inst = platform.instance(i);
+            if !inst.alive() || !inst.warm_at(now) {
+                continue;
+            }
+            let start = inst.cpu.earliest_start(now);
+            match best {
+                Some((_, b)) if b <= start => {}
+                _ => best = Some((i, start)),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Serve a read-class op on `inst` starting at `arrive`; returns the
+    /// service completion time on the NameNode.
+    fn serve_read(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> Time {
+        let mut rng = self.rng.fork_fast();
+        let kind = op.kind;
+        let hit = self.caches[inst.0 as usize].get(op.target).is_some();
+        let cpu = if hit {
+            self.svc.cache_hit(kind, &mut rng)
+        } else {
+            self.svc.cache_hit(kind, &mut rng) + self.svc.miss_insert(&mut rng)
+        };
+        let (_, cpu_done) = self.platform.instance_mut(inst).cpu.submit(arrive, cpu);
+        if hit {
+            return cpu_done;
+        }
+        // Miss: batched path resolution against NDB (one round trip — the
+        // INode hint cache), then fill the cache with the whole path.
+        let depth = self.ns.resolution_depth(op.target);
+        let store_done = self.store.read_batch(cpu_done, depth, &mut rng);
+        let version = self.store.version(op.target);
+        let cache = &mut self.caches[inst.0 as usize];
+        cache.insert_version(op.target, version);
+        // "NameNodes cache the metadata for *all* INodes contained within
+        // a particular path" (§3.3): fill the parent chain too.
+        let mut d = Some(op.target.dir);
+        while let Some(dir) = d {
+            cache.insert_version(InodeRef::dir(dir), self.store.version(InodeRef::dir(dir)));
+            d = self.ns.dir(dir).parent;
+        }
+        store_done
+    }
+
+    /// Serve a write-class op on `inst`: coherence protocol, then the
+    /// transactional store write (§3.5 Algorithm 1).
+    fn serve_write(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> Time {
+        let mut rng = self.rng.fork_fast();
+        let cpu = self.svc.write_cpu(&mut rng);
+        let (_, cpu_done) = self.platform.instance_mut(inst).cpu.submit(arrive, cpu);
+
+        // Rows touched: the target INode + its parent directory INode.
+        let parent_inode = match op.target.file {
+            Some(_) => InodeRef::dir(op.target.dir),
+            None => InodeRef::dir(self.ns.dir(op.target.dir).parent.unwrap_or(op.target.dir)),
+        };
+        let mut rows = vec![op.target, parent_inode];
+        if let Some(dest) = op.dest {
+            rows.push(InodeRef::dir(dest));
+        }
+
+        // Deployments caching affected metadata.
+        let mut deps = self.router.write_deployments(&self.ns, op.target);
+        if let Some(dest) = op.dest {
+            let d = self.router.route_dir_contents(dest);
+            if !deps.contains(&d) {
+                deps.push(d);
+            }
+        }
+
+        // INV/ACK fan-out; every reached cache invalidates the rows.
+        let caches = &mut self.caches;
+        let inv = Invalidation::Exact(rows.clone());
+        let outcome = protocol::run_protocol(
+            cpu_done,
+            inst,
+            &deps,
+            &inv,
+            &mut self.coord,
+            &self.net,
+            &mut rng,
+            |target, inv| {
+                if let Some(c) = caches.get_mut(target.0 as usize) {
+                    if let Invalidation::Exact(rows) = inv {
+                        for r in rows {
+                            c.invalidate(*r);
+                        }
+                    }
+                }
+            },
+        );
+
+        // Commit under exclusive row locks after all ACKs.
+        let deletes = matches!(op.kind, OpKind::Delete);
+        let commit = self.store.write_txn(outcome.complete_at, &rows, deletes, &mut rng);
+
+        // Leader caches the fresh metadata (it holds the latest version).
+        if !deletes {
+            let v = self.store.version(op.target);
+            self.caches[inst.0 as usize].insert_version(op.target, v);
+        }
+        commit
+    }
+
+    /// Serve a subtree op (Appendix C): subtree lock + quiesce + single
+    /// prefix INV + offloaded batches.
+    fn serve_subtree(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> Time {
+        let mut rng = self.rng.fork_fast();
+        let router = &self.router;
+        let ns = &self.ns;
+        let plan = SubtreePlan::build(ns, op.target.dir, |d| router.route_dir_contents(d));
+
+        // One prefix invalidation for the whole subtree.
+        let caches = &mut self.caches;
+        let ns_ref = &self.ns;
+        let outcome = protocol::run_protocol(
+            arrive,
+            inst,
+            &plan.deployments,
+            &Invalidation::Prefix(plan.root),
+            &mut self.coord,
+            &self.net,
+            &mut rng,
+            |target, inv| {
+                if let Some(c) = caches.get_mut(target.0 as usize) {
+                    if let Invalidation::Prefix(root) = inv {
+                        c.invalidate_subtree(ns_ref, *root);
+                    }
+                }
+            },
+        );
+
+        // Offloaded batch execution: helpers = live warm instances across
+        // deployments (serverless offloading) or just this NN's slots.
+        let parallelism = if self.cfg.lambda_fs.subtree_offload {
+            let helpers = self.platform.live_instances().max(1) as u32;
+            helpers * self.cfg.lambda_fs.concurrency_level
+        } else {
+            self.cfg.lambda_fs.concurrency_level
+        };
+        let params = SubtreeParams { batch: self.cfg.lambda_fs.subtree_batch, parallelism };
+        match subtree::execute(outcome.complete_at, &plan, params, &mut self.store, &mut rng) {
+            Ok(done) => done,
+            Err(_) => {
+                // Overlapping subtree op: retry after the lock-retry pause.
+                let retry = outcome.complete_at + time::from_ms(self.cfg.store.lock_retry_ms * 10.0);
+                subtree::execute(retry, &plan, params, &mut self.store, &mut rng)
+                    .map(|d| d)
+                    .unwrap_or(retry + time::SEC)
+            }
+        }
+    }
+}
+
+/// Fast per-call RNG forking without string hashing.
+trait ForkFast {
+    fn fork_fast(&mut self) -> Rng;
+}
+
+impl ForkFast for Rng {
+    #[inline]
+    fn fork_fast(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+impl MdsSim for LambdaFs {
+    fn submit(&mut self, now: Time, client: u32, op: &Operation, rng: &mut Rng) -> Time {
+        let c = client as usize % self.clients.len().max(1);
+        let vm = self.clients[c].vm;
+        let dep = self.router.route(&self.ns, op.target);
+
+        // Path choice: TCP when a connection exists (own or shared),
+        // randomized HTTP replacement for elasticity (§3.4).
+        let tcp_inst = self.tcp_target(vm, dep, now);
+        let path = self.clients[c].choose_path(tcp_inst.is_some(), rng);
+
+        let (inst, arrive, http_used) = match (path, tcp_inst) {
+            (RpcPath::Tcp, Some(i)) => (i, now + self.net.tcp_hop(rng), false),
+            _ => {
+                // HTTP: gateway + invoker placement (may cold start).
+                // Scale-out decisions sample congestion at invocation
+                // time (`now`); the request itself arrives after the
+                // gateway + network legs.
+                let gw_done = self.platform.gateway_admit(now, rng);
+                let leg = self.net.http_leg(rng);
+                let (i, ready) = self.platform.place_http(dep, now, rng);
+                self.register(i);
+                (i, ready.max(gw_done + leg), true)
+            }
+        };
+        self.register(inst);
+
+        let served = match op.kind {
+            k if k.is_subtree() => self.serve_subtree(inst, op, arrive),
+            k if k.is_write() => self.serve_write(inst, op, arrive),
+            _ => self.serve_read(inst, op, arrive),
+        };
+
+        // Reply hop back to the client.
+        let mut done = served + self.net.tcp_hop(rng);
+
+        // HTTP-served requests: NameNode proactively opens a TCP
+        // connection back to the client's VM for future fast-path RPCs.
+        if http_used {
+            let connect_at = served + self.net.tcp_connect(rng);
+            let _ = connect_at;
+            self.conns.establish(vm, dep, inst);
+        }
+
+        // Straggler mitigation (App. A): a request far beyond the moving
+        // average is cancelled and resubmitted; the effective latency is
+        // the detection time plus a fast retry on a warm path.
+        let lat_ms = time::to_ms(done - now);
+        if self.clients[c].is_straggler(lat_ms) {
+            let detect =
+                now + time::from_ms(self.clients[c].window.mean() * self.cfg.lambda_fs.straggler_threshold);
+            let retry_arrive = detect + self.net.tcp_hop(rng);
+            let retried = match op.kind {
+                k if k.is_subtree() => None, // subtree ops are not raced
+                k if k.is_write() => None,   // writes must not double-commit
+                _ => Some(self.serve_read(inst, op, retry_arrive)),
+            };
+            if let Some(r) = retried {
+                let retry_done = r + self.net.tcp_hop(rng);
+                if retry_done < done {
+                    done = retry_done;
+                    self.metrics.resubmissions += 1;
+                }
+            }
+        }
+
+        // Billing: the serving instance is active from arrival to service
+        // completion (idle NameNodes accrue no pay-per-use cost).
+        self.platform.instance_mut(inst).bill(arrive, served);
+        self.clients[c].observe(time::to_ms(done - now));
+        done
+    }
+
+    fn on_second(&mut self, second: usize) {
+        let now = (second as Time + 1) * time::SEC;
+        self.platform.settle(now);
+
+        // Fault injection (Fig. 15).
+        let mut rng = self.rng.fork_fast();
+        let kills: Vec<u32> = self
+            .kill_schedule
+            .iter()
+            .filter(|&&(s, _)| s == second)
+            .map(|&(_, d)| d)
+            .collect();
+        for dep in kills {
+            if let Some(&victim) = self.platform.deployment_instances(dep).first() {
+                self.platform.kill(victim, now, false);
+                self.conns.drop_instance(victim);
+                self.coord.deregister(victim);
+            }
+        }
+
+        // Heartbeats + scale-in.
+        let live: Vec<InstanceId> = self
+            .platform
+            .instances
+            .iter()
+            .filter(|i| i.alive())
+            .map(|i| i.id)
+            .collect();
+        for id in &live {
+            self.coord.heartbeat(*id, now);
+        }
+        for victim in self.platform.reclaim_idle(now) {
+            if !self.platform.instance(victim).alive() {
+                self.conns.drop_instance(victim);
+                self.coord.deregister(victim);
+            }
+        }
+        self.coord.expire_sessions(now);
+        let _ = rng.next_u64();
+
+        // Cost sampling: pay-per-use delta + simplified (provisioned).
+        let gb_s = self.platform.busy_gb_seconds(now);
+        let reqs = self.platform.total_requests();
+        let delta_gb_s = (gb_s - self.billed_gb_s).max(0.0);
+        let delta_req = reqs.saturating_sub(self.billed_requests);
+        self.billed_gb_s = gb_s;
+        self.billed_requests = reqs;
+        let sample = self.cost.pay_per_use(delta_gb_s, delta_req);
+        let live_count = self.platform.live_instances() as u32;
+        let simplified =
+            live_count as f64 * self.cfg.lambda_fs.gb_per_namenode * self.cfg.cost.lambda_gb_second;
+
+        let s = self.metrics.second_mut(second);
+        s.namenodes = live_count;
+        s.vcpus = self.platform.vcpus_in_use();
+        s.cost_usd = sample.usd;
+        s.cost_simplified_usd = simplified;
+        self.last_settle = now;
+    }
+
+    fn metrics_mut(&mut self) -> &mut RunMetrics {
+        &mut self.metrics
+    }
+
+    fn into_metrics(self) -> RunMetrics {
+        self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::generate::{generate, HotspotSampler, NamespaceParams};
+    use crate::systems::driver;
+    use crate::workload::{ClosedLoopSpec, OpMix, OpenLoopSpec, ThroughputSchedule};
+
+    fn small_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.lambda_fs.n_deployments = 8;
+        cfg
+    }
+
+    fn small_ns(cfg: &SystemConfig) -> Namespace {
+        let mut rng = Rng::new(cfg.seed);
+        generate(&NamespaceParams { n_dirs: 512, files_per_dir: 32, ..Default::default() }, &mut rng)
+    }
+
+    fn run_small_open(x_t: f64, seconds: usize) -> RunMetrics {
+        let cfg = small_cfg();
+        let ns = small_ns(&cfg);
+        let mut rng = Rng::new(cfg.seed ^ 1);
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(seconds, x_t),
+            mix: OpMix::spotify(),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = LambdaFs::new(cfg, ns.clone(), spec.n_clients, spec.n_vms);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    }
+
+    #[test]
+    fn completes_constant_workload() {
+        let m = run_small_open(500.0, 10);
+        assert_eq!(m.completed_ops, 5_000);
+        assert!(m.avg_latency_ms() < 50.0, "avg {}ms", m.avg_latency_ms());
+    }
+
+    #[test]
+    fn scales_out_from_cold() {
+        let m = run_small_open(2_000.0, 10);
+        assert!(m.peak_namenodes() >= 4, "scaled to {}", m.peak_namenodes());
+        assert!(m.total_cost() > 0.0);
+        assert!(m.total_cost_simplified() >= m.total_cost() * 0.5);
+    }
+
+    #[test]
+    fn read_latency_in_paper_band_when_warm() {
+        let m = run_small_open(1_000.0, 20);
+        // After warm-up TCP reads dominate: median read latency must sit
+        // in the low single-digit ms (paper: 1.02ms avg at 25k ops/s —
+        // the mean here includes the cold-start front of the run).
+        let p50_read = m.read_lat.p50() / 1_000.0;
+        assert!(p50_read < 3.0, "p50 read {p50_read}ms");
+    }
+
+    #[test]
+    fn writes_slower_than_reads() {
+        let m = run_small_open(1_000.0, 15);
+        assert!(
+            m.avg_write_latency_ms() > m.avg_read_latency_ms() * 1.5,
+            "write {} vs read {}",
+            m.avg_write_latency_ms(),
+            m.avg_read_latency_ms()
+        );
+    }
+
+    #[test]
+    fn cache_hits_accumulate() {
+        let cfg = small_cfg();
+        let ns = small_ns(&cfg);
+        let mut rng = Rng::new(7);
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(10, 1_000.0),
+            mix: OpMix::spotify(),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = LambdaFs::new(cfg, ns.clone(), 64, 2);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        let stats = sys.cache_stats();
+        assert!(stats.hit_ratio() > 0.5, "hit ratio {}", stats.hit_ratio());
+    }
+
+    #[test]
+    fn coherence_no_stale_reads() {
+        // Invariant: a read served from any cache returns the latest
+        // committed version. Exercise a write-heavy load then audit caches.
+        let mut cfg = small_cfg();
+        cfg.lambda_fs.n_deployments = 4;
+        let ns = small_ns(&cfg);
+        let mut rng = Rng::new(9);
+        let sampler = HotspotSampler::new(&ns, 1.2, &mut rng);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(5, 400.0),
+            mix: OpMix::from_weights(&[
+                (OpKind::Read, 0.5),
+                (OpKind::Create, 0.3),
+                (OpKind::Delete, 0.2),
+            ]),
+            n_clients: 32,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.2,
+        };
+        let mut sys = LambdaFs::new(cfg, ns.clone(), 32, 2);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        // Audit: every cached version equals the store's committed version.
+        let mut audited = 0;
+        for d in 0..ns.n_dirs() as u32 {
+            for f in 0..4 {
+                let inode = InodeRef::file(crate::namespace::DirId(d), f);
+                let store_v = sys.store.version(inode);
+                for c in &sys.caches {
+                    if let Some(v) = c.peek_version(inode) {
+                        assert_eq!(v, store_v, "stale cache entry for {inode:?}");
+                        audited += 1;
+                    }
+                }
+            }
+        }
+        assert!(audited > 0, "audit actually saw cached entries");
+    }
+
+    #[test]
+    fn fault_injection_recovers() {
+        let cfg = small_cfg();
+        let ns = small_ns(&cfg);
+        let mut rng = Rng::new(5);
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(20, 1_000.0),
+            mix: OpMix::spotify(),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = LambdaFs::new(cfg, ns.clone(), 64, 2);
+        for s in (5..20).step_by(3) {
+            sys.schedule_kill(s, (s % 8) as u32);
+        }
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        let kills = sys.platform().stats().kills;
+        let m = sys.into_metrics();
+        assert!(kills >= 3, "kills happened: {kills}");
+        assert_eq!(m.completed_ops, 20_000, "workload completes despite failures");
+    }
+
+    #[test]
+    fn closed_loop_read_scaling() {
+        let cfg = small_cfg();
+        let ns = small_ns(&cfg);
+        let mut rng = Rng::new(6);
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        let run = |n_clients: u32, rng: &mut Rng| {
+            let spec = ClosedLoopSpec {
+                kind: OpKind::Read,
+                n_clients,
+                n_vms: 2,
+                ops_per_client: 100,
+                namespace: NamespaceParams::default(),
+                zipf_s: 1.3,
+            };
+            let mut sys = LambdaFs::new(small_cfg(), ns.clone(), n_clients, 2);
+            driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, rng);
+            sys.into_metrics().peak_throughput()
+        };
+        let t8 = run(8, &mut rng);
+        let t128 = run(128, &mut rng);
+        assert!(t128 > t8 * 2.0, "throughput scales with clients: {t8} -> {t128}");
+    }
+
+    #[test]
+    fn prewarm_establishes_tcp_everywhere() {
+        let cfg = small_cfg();
+        let ns = small_ns(&cfg);
+        let mut sys = LambdaFs::new(cfg, ns, 16, 2);
+        sys.prewarm(1);
+        assert_eq!(sys.platform().live_instances(), 8);
+        for dep in 0..8 {
+            assert!(sys.tcp_target(VmId(0), dep, time::SEC * 30).is_some());
+            assert!(sys.tcp_target(VmId(1), dep, time::SEC * 30).is_some());
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! End-to-end system simulations and the shared workload drivers.
+//!
+//! Every evaluated system — λFS and each baseline — implements [`MdsSim`];
+//! the open-loop (Spotify) and closed-loop (micro-benchmark) drivers are
+//! generic over it, so all systems see *identical* op streams for a given
+//! seed.
+
+pub mod driver;
+pub mod lambdafs;
+
+pub use driver::{run_closed_loop, run_open_loop};
+pub use lambdafs::LambdaFs;
+
+use crate::metrics::RunMetrics;
+use crate::namespace::Operation;
+use crate::sim::Time;
+use crate::util::rng::Rng;
+
+/// A metadata service under simulation.
+pub trait MdsSim {
+    /// Process one operation issued by `client` at `now`; returns the
+    /// completion time. All queueing/caching/coherence effects apply
+    /// internally.
+    fn submit(&mut self, now: Time, client: u32, op: &Operation, rng: &mut Rng) -> Time;
+
+    /// Called at each 1-second boundary for metrics/cost sampling and
+    /// platform housekeeping (reclaim, heartbeats).
+    fn on_second(&mut self, second: usize);
+
+    /// Metrics sink.
+    fn metrics_mut(&mut self) -> &mut RunMetrics;
+
+    /// Finalize and return the run metrics.
+    fn into_metrics(self) -> RunMetrics;
+}

@@ -1,0 +1,139 @@
+//! Minimal CLI argument parsing for the `lambdafs` binary and examples.
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments. The `clap` crate is not in the offline vendored set; this
+//! covers the surface the launcher needs with helpful error messages.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, flags, positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `known_flags` lists boolean
+    /// switches; every other `--key` consumes a value.
+    pub fn parse(raw: &[String], known_flags: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing.
+                    out.positional.extend(raw[i + 1..].iter().cloned());
+                    break;
+                }
+                if let Some(eq) = body.find('=') {
+                    out.options.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let val = raw
+                        .get(i + 1)
+                        .ok_or_else(|| format!("--{body} expects a value"))?;
+                    if val.starts_with("--") {
+                        return Err(format!("--{body} expects a value, got {val}"));
+                    }
+                    out.options.insert(body.to_string(), val.clone());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| format!("--{name}: expected a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| format!("--{name}: expected an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| format!("--{name}: expected an integer, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = Args::parse(
+            &sv(&["run", "--seed", "42", "--verbose", "--out=x.csv", "extra"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--seed"]), &[]).is_err());
+        assert!(Args::parse(&sv(&["--seed", "--other", "1"]), &[]).is_err());
+    }
+
+    #[test]
+    fn numeric_parsing_and_defaults() {
+        let a = Args::parse(&sv(&["--x", "2_500"]), &[]).unwrap();
+        assert_eq!(a.get_u64("x", 0).unwrap(), 2500);
+        assert_eq!(a.get_u64("y", 7).unwrap(), 7);
+        assert!(a.get_f64("x", 0.0).unwrap() == 2500.0);
+        let bad = Args::parse(&sv(&["--x", "abc"]), &[]).unwrap();
+        assert!(bad.get_u64("x", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = Args::parse(&sv(&["--a", "1", "--", "--not-an-opt"]), &[]).unwrap();
+        assert_eq!(a.get("a"), Some("1"));
+        assert_eq!(a.positional, vec!["--not-an-opt"]);
+    }
+}

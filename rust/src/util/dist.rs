@@ -1,0 +1,196 @@
+//! Sampling distributions used by the workload generators and latency
+//! models: Pareto (burst throughput schedule, after iGen [55]), exponential
+//! (service times), log-normal (network latency), and Zipf (hot-directory
+//! skew).
+
+use super::rng::Rng;
+
+/// Pareto(x_m, alpha): inverse-CDF sampling, `x_m * (1-u)^(-1/alpha)`.
+///
+/// Matches `python/compile/model.py::pareto_schedule` — the L2 artifact the
+/// benchmark driver can execute via PJRT instead of this fallback.
+#[derive(Clone, Copy, Debug)]
+pub struct Pareto {
+    pub scale: f64,
+    pub shape: f64,
+}
+
+impl Pareto {
+    pub fn new(scale: f64, shape: f64) -> Self {
+        assert!(scale > 0.0 && shape > 0.0);
+        Pareto { scale, shape }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let u = rng.f64().min(1.0 - 1e-12);
+        self.scale * (1.0 - u).powf(-1.0 / self.shape)
+    }
+
+    /// Sample clamped to `cap` (the paper clamps bursts at 7x base).
+    pub fn sample_capped(&self, rng: &mut Rng, cap: f64) -> f64 {
+        self.sample(rng).min(cap)
+    }
+}
+
+/// Exponential(rate) via inverse CDF.
+#[derive(Clone, Copy, Debug)]
+pub struct Exp {
+    pub rate: f64,
+}
+
+impl Exp {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0);
+        Exp { rate }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let u = rng.f64().max(1e-300);
+        -u.ln() / self.rate
+    }
+}
+
+/// Log-normal parameterized by the *target* median and sigma of the
+/// underlying normal — a good fit for network RTT tails.
+#[derive(Clone, Copy, Debug)]
+pub struct LogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl LogNormal {
+    /// `median` is exp(mu).
+    pub fn from_median(median: f64, sigma: f64) -> Self {
+        assert!(median > 0.0 && sigma >= 0.0);
+        LogNormal { mu: median.ln(), sigma }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        (self.mu + self.sigma * normal(rng)).exp()
+    }
+}
+
+/// Standard normal via Box–Muller (one value per call; simple over fast).
+pub fn normal(rng: &mut Rng) -> f64 {
+    let u1 = rng.f64().max(1e-300);
+    let u2 = rng.f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// Zipf-like rank distribution over `0..n` via the continuous power-law
+/// inverse CDF (pdf ∝ x^-s on [1, n+1), then floored to a rank).
+///
+/// Used for hot-directory skew in the namespace generator: a small set of
+/// directories receives most metadata operations, which is what makes λFS'
+/// per-deployment auto-scaling matter (§3.3). The continuous approximation
+/// preserves the head/tail mass ratios that drive the simulation; exact
+/// discrete Zipf normalization is irrelevant at this fidelity.
+#[derive(Clone, Copy, Debug)]
+pub struct Zipf {
+    n: u64,
+    one_minus_s: f64,
+    span: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n > 0 && s > 0.0 && (s - 1.0).abs() > 1e-9, "s=1 unsupported");
+        let one_minus_s = 1.0 - s;
+        let span = ((n + 1) as f64).powf(one_minus_s) - 1.0;
+        Zipf { n, one_minus_s, span }
+    }
+
+    /// Sample a rank in `[0, n)` (0 = hottest when s > 1).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.f64();
+        // Inverse CDF of pdf ∝ x^-s on [1, n+1).
+        let x = (u * self.span + 1.0).powf(1.0 / self.one_minus_s);
+        let k = x as u64; // floor; x >= 1 so k >= 1
+        k.clamp(1, self.n) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(1234)
+    }
+
+    #[test]
+    fn pareto_support_and_mean() {
+        let mut r = rng();
+        let p = Pareto::new(25_000.0, 2.0);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = p.sample(&mut r);
+            assert!(x >= 25_000.0);
+            sum += x.min(1e7); // trim the unbounded tail for the mean check
+        }
+        // E[X] = scale * shape / (shape - 1) = 50_000 for alpha=2.
+        let mean = sum / n as f64;
+        assert!((mean - 50_000.0).abs() < 2_500.0, "mean {mean}");
+    }
+
+    #[test]
+    fn pareto_cap_respected() {
+        let mut r = rng();
+        let p = Pareto::new(25_000.0, 2.0);
+        for _ in 0..10_000 {
+            assert!(p.sample_capped(&mut r, 7.0 * 25_000.0) <= 7.0 * 25_000.0);
+        }
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = rng();
+        let e = Exp::new(0.5);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| e.sample(&mut r)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = rng();
+        let ln = LogNormal::from_median(1.5, 0.3);
+        let mut xs: Vec<f64> = (0..20_001).map(|_| ln.sample(&mut r)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[10_000];
+        assert!((med - 1.5).abs() < 0.1, "median {med}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = rng();
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| normal(&mut r)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn zipf_rank_zero_hottest() {
+        let mut r = rng();
+        let z = Zipf::new(1000, 1.2);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        assert!(counts[0] > counts[10], "rank 0 hotter than rank 10");
+        assert!(counts[0] > counts[100] * 2, "strong skew");
+    }
+
+    #[test]
+    fn zipf_in_range() {
+        let mut r = rng();
+        let z = Zipf::new(50, 1.5);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut r) < 50);
+        }
+    }
+}

@@ -1,0 +1,95 @@
+//! FNV-1a hashing — the routing contract shared with the L1 Pallas kernel.
+//!
+//! `fnv1a32` MUST stay bit-identical to `python/compile/kernels/route_hash.py`
+//! (asserted by `rust/tests/runtime_artifacts.rs` against the compiled HLO
+//! artifact and by unit vectors here). λFS partitions the DFS namespace by
+//! `fnv1a32(parent_dir_bytes[..min(len, PATH_WIDTH)]) % n_deployments`.
+
+/// Max path bytes the router hashes; mirrors `route_hash.PATH_WIDTH`.
+pub const PATH_WIDTH: usize = 128;
+
+const FNV32_OFFSET: u32 = 2166136261;
+const FNV32_PRIME: u32 = 16777619;
+const FNV64_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV64_PRIME: u64 = 0x100000001b3;
+
+/// 32-bit FNV-1a over `data` (the kernel contract).
+#[inline]
+pub fn fnv1a32(data: &[u8]) -> u32 {
+    let mut h = FNV32_OFFSET;
+    for &b in data {
+        h = (h ^ b as u32).wrapping_mul(FNV32_PRIME);
+    }
+    h
+}
+
+/// 64-bit FNV-1a (internal hashing: RNG stream labels, map keys).
+#[inline]
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = FNV64_OFFSET;
+    for &b in data {
+        h = (h ^ b as u64).wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
+/// The λFS routing function: hash the first `PATH_WIDTH` bytes of the
+/// parent-directory path, reduce modulo the deployment count.
+#[inline]
+pub fn route(parent_path: &str, n_deployments: u32) -> u32 {
+    let bytes = parent_path.as_bytes();
+    let take = bytes.len().min(PATH_WIDTH);
+    fnv1a32(&bytes[..take]) % n_deployments.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a 32-bit test vectors.
+        assert_eq!(fnv1a32(b""), 0x811c9dc5);
+        assert_eq!(fnv1a32(b"a"), 0xe40c292c);
+        assert_eq!(fnv1a32(b"foobar"), 0xbf9cf968);
+    }
+
+    #[test]
+    fn known_vectors_64() {
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn route_is_stable_and_bounded() {
+        for n in 1..20 {
+            let d = route("/some/dir", n);
+            assert!(d < n);
+            assert_eq!(d, route("/some/dir", n), "deterministic");
+        }
+    }
+
+    #[test]
+    fn route_truncates_at_path_width() {
+        let long = "x".repeat(PATH_WIDTH + 50);
+        let trunc = "x".repeat(PATH_WIDTH);
+        assert_eq!(route(&long, 97), route(&trunc, 97));
+    }
+
+    #[test]
+    fn route_n_zero_clamps() {
+        assert_eq!(route("/a", 0), 0);
+    }
+
+    #[test]
+    fn distinct_dirs_spread() {
+        let n = 8u32;
+        let mut counts = vec![0u32; n as usize];
+        for i in 0..800 {
+            counts[route(&format!("/user{i}/data"), n) as usize] += 1;
+        }
+        let fair = 800 / n;
+        assert!(counts.iter().all(|&c| c > fair / 3 && c < fair * 3), "{counts:?}");
+    }
+}

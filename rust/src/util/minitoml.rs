@@ -1,0 +1,283 @@
+//! A TOML-subset parser for λFS config files.
+//!
+//! Supports: `[section]` headers, `key = value` with string / integer /
+//! float / boolean values, comments (`#`), and blank lines — the subset the
+//! λFS config format (`config::SystemConfig::from_toml`) needs. The
+//! `serde`/`toml` crates are not in the offline vendored set.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`workers = 4` reads as 4.0).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number context.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "minitoml: line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Parsed document: `section.key -> value`. Keys outside any section live
+/// under the empty section `""`.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: ln + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(ParseError { line: ln + 1, msg: "empty section name".into() });
+                }
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ParseError {
+                line: ln + 1,
+                msg: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(ParseError { line: ln + 1, msg: "empty key".into() });
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|msg| ParseError { line: ln + 1, msg })?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, val);
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_i64)
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(unescape(inner)?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('\\') => out.push('\\'),
+            Some('"') => out.push('"'),
+            other => return Err(format!("bad escape \\{other:?}")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Doc::parse(
+            r#"
+            # top comment
+            top = 1
+            [faas]
+            cold_start_ms = 900.5
+            warm = true
+            name = "openwhisk"  # trailing comment
+            [store]
+            data_nodes = 4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_i64("top"), Some(1));
+        assert_eq!(doc.get_f64("faas.cold_start_ms"), Some(900.5));
+        assert_eq!(doc.get_bool("faas.warm"), Some(true));
+        assert_eq!(doc.get_str("faas.name"), Some("openwhisk"));
+        assert_eq!(doc.get_i64("store.data_nodes"), Some(4));
+        assert_eq!(doc.len(), 5);
+    }
+
+    #[test]
+    fn int_readable_as_float() {
+        let doc = Doc::parse("x = 4").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(4.0));
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let doc = Doc::parse("ops = 25_000").unwrap();
+        assert_eq!(doc.get_i64("ops"), Some(25000));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Doc::parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn escapes() {
+        let doc = Doc::parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(doc.get_str("s"), Some("a\nb\t\"c\""));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn unterminated_section_rejected() {
+        assert!(Doc::parse("[faas").is_err());
+    }
+
+    #[test]
+    fn unterminated_string_rejected() {
+        assert!(Doc::parse(r#"s = "abc"#).is_err());
+    }
+
+    #[test]
+    fn missing_key_is_none() {
+        let doc = Doc::parse("a = 1").unwrap();
+        assert!(doc.get("nope").is_none());
+        assert!(doc.get_f64("nope").is_none());
+    }
+
+    #[test]
+    fn type_mismatch_is_none() {
+        let doc = Doc::parse("a = \"str\"").unwrap();
+        assert!(doc.get_i64("a").is_none());
+        assert!(doc.get_bool("a").is_none());
+        assert_eq!(doc.get_str("a"), Some("str"));
+    }
+}

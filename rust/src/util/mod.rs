@@ -1,0 +1,23 @@
+//! Small self-contained utilities.
+//!
+//! The offline vendored crate set only contains the `xla` crate's
+//! dependency closure, so the usual ecosystem crates (`rand`, `serde`,
+//! `clap`, `proptest`, `criterion`) are re-implemented here at the scale
+//! this project needs:
+//!
+//! * [`rng`] — SplitMix64-seeded xoshiro256** PRNG.
+//! * [`dist`] — Pareto / Zipf / exponential / normal samplers.
+//! * [`fnv`] — FNV-1a 32-bit, bit-identical to the L1 Pallas kernel.
+//! * [`hist`] — latency histogram with exact-ish percentiles and CDFs.
+//! * [`minitoml`] — a TOML-subset parser for config files.
+//! * [`cli`] — flag/option argument parsing for the `lambdafs` binary.
+//! * [`ptest`] — a miniature property-testing harness (seeded generators,
+//!   iteration control, failure reporting).
+
+pub mod cli;
+pub mod dist;
+pub mod fnv;
+pub mod hist;
+pub mod minitoml;
+pub mod ptest;
+pub mod rng;

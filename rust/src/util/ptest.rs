@@ -1,0 +1,162 @@
+//! A miniature property-testing harness.
+//!
+//! The `proptest` crate is not in the offline vendored set, so this module
+//! provides the slice of it the test suite uses: seeded generators, a
+//! configurable iteration count, and failure reporting that prints the seed
+//! and iteration so a failing case can be replayed deterministically.
+//!
+//! ```ignore
+//! ptest::check("routing is stable", 500, |g| {
+//!     let path = g.path(6);
+//!     let n = g.int(1, 32) as u32;
+//!     ptest::ensure(fnv::route(&path, n) < n, "route in range")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Convenience assertion returning a `PropResult`.
+pub fn ensure(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Equality assertion with value reporting.
+pub fn ensure_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, msg: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a:?} != {b:?}"))
+    }
+}
+
+/// Generator handed to each property iteration.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Integer in `[lo, hi]` inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Random lowercase identifier of length `1..=max_len`.
+    pub fn ident(&mut self, max_len: usize) -> String {
+        let len = 1 + self.rng.below(max_len.max(1) as u64) as usize;
+        (0..len)
+            .map(|_| (b'a' + self.rng.below(26) as u8) as char)
+            .collect()
+    }
+
+    /// Random absolute path with `1..=max_depth` components.
+    pub fn path(&mut self, max_depth: usize) -> String {
+        let depth = 1 + self.rng.below(max_depth.max(1) as u64) as usize;
+        let mut p = String::new();
+        for _ in 0..depth {
+            p.push('/');
+            p.push_str(&self.ident(8));
+        }
+        p
+    }
+
+    /// Pick one element from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.pick(xs)
+    }
+
+    /// A vector of `0..=max_len` elements built by `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.rng.below(max_len as u64 + 1) as usize;
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `iters` iterations of `prop`, seeded from `PTEST_SEED` (env) or a
+/// fixed default. Panics with seed/iteration context on the first failure.
+pub fn check(name: &str, iters: u64, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let seed = std::env::var("PTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDA7A_5EED_u64);
+    let mut root = Rng::new(seed);
+    for it in 0..iters {
+        let mut g = Gen { rng: root.fork(&format!("{name}:{it}")) };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed at iteration {it} (seed {seed:#x}): {msg}\n\
+                 replay with PTEST_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iterations() {
+        let mut count = 0;
+        check("trivial", 50, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\" failed")]
+    fn failing_property_panics_with_context() {
+        check("fails", 10, |g| ensure(g.int(0, 9) < 5, "too big"));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("bounds", 200, |g| {
+            let i = g.int(-5, 5);
+            ensure(( -5..=5).contains(&i), "int bounds")?;
+            let f = g.f64(1.0, 2.0);
+            ensure((1.0..2.0).contains(&f), "f64 bounds")?;
+            let p = g.path(4);
+            ensure(p.starts_with('/'), "path absolute")?;
+            ensure(p.split('/').skip(1).count() <= 4, "path depth")?;
+            let v = g.vec(7, |g| g.bool());
+            ensure(v.len() <= 7, "vec len")
+        });
+    }
+
+    #[test]
+    fn deterministic_given_same_seed() {
+        let mut a = Vec::new();
+        check("det", 20, |g| {
+            a.push(g.int(0, 1_000_000));
+            Ok(())
+        });
+        let mut b = Vec::new();
+        check("det", 20, |g| {
+            b.push(g.int(0, 1_000_000));
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

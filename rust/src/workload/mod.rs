@@ -1,0 +1,11 @@
+//! Workload generators: the Spotify industrial workload (§5.2), the
+//! scaling micro-benchmarks (§5.3), IndexFS' `tree-test` (§5.7), and the
+//! subtree workload (Table 3).
+
+pub mod schedule;
+pub mod spec;
+pub mod spotify;
+
+pub use schedule::ThroughputSchedule;
+pub use spec::{ClosedLoopSpec, OpenLoopSpec};
+pub use spotify::OpMix;

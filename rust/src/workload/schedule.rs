@@ -1,0 +1,134 @@
+//! The bursty throughput schedule (§5.2.1).
+//!
+//! Every 15 seconds the benchmark draws a target throughput Δ from a
+//! Pareto distribution with shape α=2 and scale `x_t` (the workload's
+//! base throughput), clamped at 7× base — "the benchmark randomly
+//! generates throughput spikes up to 7× greater than the base". Each
+//! client VM then attempts to sustain δ = Δ/n ops/sec, with unfinished
+//! operations rolling over to the next second.
+//!
+//! The Pareto inverse-CDF here is the same formula as the AOT-lowered
+//! `pareto_schedule` artifact; the runtime test cross-checks the two.
+
+use crate::sim::{time, Time};
+use crate::util::dist::Pareto;
+use crate::util::rng::Rng;
+
+/// Per-second target throughput over a workload.
+#[derive(Clone, Debug)]
+pub struct ThroughputSchedule {
+    /// Target total ops/sec for each second of the run.
+    per_second: Vec<f64>,
+}
+
+impl ThroughputSchedule {
+    /// The paper's schedule: `duration` seconds, redrawing every
+    /// `interval` seconds from Pareto(x_t, alpha) clamped at `burst_cap`×x_t.
+    pub fn pareto_bursty(
+        duration_s: usize,
+        interval_s: usize,
+        x_t: f64,
+        alpha: f64,
+        burst_cap: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        let p = Pareto::new(x_t, alpha);
+        let mut per_second = Vec::with_capacity(duration_s);
+        let mut current = x_t;
+        for s in 0..duration_s {
+            if s % interval_s.max(1) == 0 {
+                current = p.sample_capped(rng, burst_cap * x_t);
+            }
+            per_second.push(current);
+        }
+        ThroughputSchedule { per_second }
+    }
+
+    /// Constant-rate schedule.
+    pub fn constant(duration_s: usize, ops_per_sec: f64) -> Self {
+        ThroughputSchedule { per_second: vec![ops_per_sec; duration_s] }
+    }
+
+    /// Inject a deterministic burst (used by tests and the paper-shaped
+    /// fixture where the 7× spike lands around t=200s).
+    pub fn with_burst(mut self, start_s: usize, len_s: usize, ops_per_sec: f64) -> Self {
+        for s in start_s..(start_s + len_s).min(self.per_second.len()) {
+            self.per_second[s] = ops_per_sec;
+        }
+        self
+    }
+
+    pub fn duration_s(&self) -> usize {
+        self.per_second.len()
+    }
+
+    pub fn duration(&self) -> Time {
+        self.per_second.len() as Time * time::SEC
+    }
+
+    /// Target for second `s`.
+    pub fn target(&self, s: usize) -> f64 {
+        self.per_second.get(s).copied().unwrap_or(0.0)
+    }
+
+    pub fn peak(&self) -> f64 {
+        self.per_second.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn total_ops(&self) -> f64 {
+        self.per_second.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_schedule_bounds() {
+        let mut rng = Rng::new(55);
+        let s = ThroughputSchedule::pareto_bursty(300, 15, 25_000.0, 2.0, 7.0, &mut rng);
+        assert_eq!(s.duration_s(), 300);
+        for i in 0..300 {
+            let t = s.target(i);
+            assert!(t >= 25_000.0, "never below base");
+            assert!(t <= 7.0 * 25_000.0, "clamped at 7x");
+        }
+    }
+
+    #[test]
+    fn redraw_interval_is_15s() {
+        let mut rng = Rng::new(56);
+        let s = ThroughputSchedule::pareto_bursty(60, 15, 25_000.0, 2.0, 7.0, &mut rng);
+        for block in 0..4 {
+            let first = s.target(block * 15);
+            for i in 1..15 {
+                assert_eq!(s.target(block * 15 + i), first, "constant within interval");
+            }
+        }
+    }
+
+    #[test]
+    fn bursts_actually_occur() {
+        let mut rng = Rng::new(57);
+        let s = ThroughputSchedule::pareto_bursty(300, 15, 25_000.0, 2.0, 7.0, &mut rng);
+        assert!(s.peak() > 40_000.0, "some spike above 1.6x base: {}", s.peak());
+    }
+
+    #[test]
+    fn with_burst_injection() {
+        let s = ThroughputSchedule::constant(300, 25_000.0).with_burst(200, 15, 163_996.0);
+        assert_eq!(s.target(199), 25_000.0);
+        assert_eq!(s.target(200), 163_996.0);
+        assert_eq!(s.target(214), 163_996.0);
+        assert_eq!(s.target(215), 25_000.0);
+        assert_eq!(s.peak(), 163_996.0);
+    }
+
+    #[test]
+    fn out_of_range_target_is_zero() {
+        let s = ThroughputSchedule::constant(10, 100.0);
+        assert_eq!(s.target(10), 0.0);
+        assert_eq!(s.duration(), 10 * time::SEC);
+    }
+}

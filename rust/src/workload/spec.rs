@@ -1,0 +1,92 @@
+//! Workload specifications shared by every system driver.
+
+use crate::namespace::generate::NamespaceParams;
+use crate::namespace::OpKind;
+
+use super::schedule::ThroughputSchedule;
+use super::spotify::OpMix;
+
+/// Open-loop workload: a throughput schedule drives op generation
+/// (the Spotify workload, §5.2).
+#[derive(Clone, Debug)]
+pub struct OpenLoopSpec {
+    pub schedule: ThroughputSchedule,
+    pub mix: OpMix,
+    /// Total client processes (paper: 1,024).
+    pub n_clients: u32,
+    /// Client VMs (paper: 8); TCP connection sharing is per-VM.
+    pub n_vms: u32,
+    pub namespace: NamespaceParams,
+    /// Hot-directory skew.
+    pub zipf_s: f64,
+}
+
+impl OpenLoopSpec {
+    /// The paper's Spotify workload at base throughput `x_t` for
+    /// `duration_s` seconds.
+    pub fn spotify(x_t: f64, duration_s: usize, rng: &mut crate::util::rng::Rng) -> Self {
+        OpenLoopSpec {
+            schedule: ThroughputSchedule::pareto_bursty(duration_s, 15, x_t, 2.0, 7.0, rng),
+            mix: OpMix::spotify(),
+            n_clients: 1024,
+            n_vms: 8,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        }
+    }
+}
+
+/// Closed-loop workload: each client performs `ops_per_client` operations
+/// back-to-back (the §5.3 micro-benchmarks: 3,072 ops per client).
+#[derive(Clone, Debug)]
+pub struct ClosedLoopSpec {
+    pub kind: OpKind,
+    pub n_clients: u32,
+    pub n_vms: u32,
+    pub ops_per_client: u32,
+    pub namespace: NamespaceParams,
+    pub zipf_s: f64,
+}
+
+impl ClosedLoopSpec {
+    /// The paper's client-driven-scaling configuration.
+    pub fn micro(kind: OpKind, n_clients: u32) -> Self {
+        ClosedLoopSpec {
+            kind,
+            n_clients,
+            n_vms: (n_clients / 128).clamp(1, 8),
+            ops_per_client: 3_072,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        }
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.n_clients as u64 * self.ops_per_client as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn spotify_spec_defaults() {
+        let mut rng = Rng::new(1);
+        let s = OpenLoopSpec::spotify(25_000.0, 300, &mut rng);
+        assert_eq!(s.n_clients, 1024);
+        assert_eq!(s.n_vms, 8);
+        assert_eq!(s.schedule.duration_s(), 300);
+        assert!((s.mix.write_fraction() - 0.0477).abs() < 1e-9);
+    }
+
+    #[test]
+    fn micro_spec_scales_vms() {
+        let s = ClosedLoopSpec::micro(OpKind::Read, 8);
+        assert_eq!(s.n_vms, 1);
+        assert_eq!(s.total_ops(), 8 * 3072);
+        let s = ClosedLoopSpec::micro(OpKind::Read, 1024);
+        assert_eq!(s.n_vms, 8);
+    }
+}

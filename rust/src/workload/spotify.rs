@@ -1,0 +1,167 @@
+//! The Spotify-workload operation mix (paper Table 2).
+//!
+//! Generated from statistics of Spotify's 1600-node HDFS cluster: 95.23 %
+//! reads, 4.77 % writes. The mix is a categorical sampler over
+//! [`OpKind`]s; op targets come from the hotspot-skewed namespace sampler.
+
+use crate::namespace::generate::HotspotSampler;
+use crate::namespace::{Namespace, OpKind, Operation};
+use crate::util::rng::Rng;
+
+/// A categorical distribution over operation kinds.
+#[derive(Clone, Debug)]
+pub struct OpMix {
+    /// (kind, cumulative probability).
+    cumulative: Vec<(OpKind, f64)>,
+}
+
+impl OpMix {
+    /// Paper Table 2: the Spotify workload frequencies.
+    pub fn spotify() -> Self {
+        OpMix::from_weights(&[
+            (OpKind::Read, 0.6922),
+            (OpKind::Stat, 0.17),
+            (OpKind::Ls, 0.0901),
+            (OpKind::Create, 0.027),
+            (OpKind::Mv, 0.013),
+            (OpKind::Delete, 0.0075),
+            (OpKind::Mkdir, 0.0002),
+        ])
+    }
+
+    /// A single-kind mix (micro-benchmarks run one op type at a time).
+    pub fn only(kind: OpKind) -> Self {
+        OpMix::from_weights(&[(kind, 1.0)])
+    }
+
+    /// Build from `(kind, weight)` pairs (weights need not sum to 1).
+    pub fn from_weights(weights: &[(OpKind, f64)]) -> Self {
+        assert!(!weights.is_empty());
+        let total: f64 = weights.iter().map(|(_, w)| w).sum();
+        assert!(total > 0.0);
+        let mut acc = 0.0;
+        let cumulative = weights
+            .iter()
+            .map(|&(k, w)| {
+                acc += w / total;
+                (k, acc)
+            })
+            .collect();
+        OpMix { cumulative }
+    }
+
+    /// Sample an operation kind.
+    pub fn sample_kind(&self, rng: &mut Rng) -> OpKind {
+        let u = rng.f64();
+        for &(k, c) in &self.cumulative {
+            if u < c {
+                return k;
+            }
+        }
+        self.cumulative.last().unwrap().0
+    }
+
+    /// Fraction of write-kind mass (Table 2: 4.77 % for Spotify).
+    pub fn write_fraction(&self) -> f64 {
+        let mut prev = 0.0;
+        let mut writes = 0.0;
+        for &(k, c) in &self.cumulative {
+            if k.is_write() {
+                writes += c - prev;
+            }
+            prev = c;
+        }
+        writes
+    }
+
+    /// Sample a full operation against a namespace.
+    pub fn sample_op(
+        &self,
+        ns: &Namespace,
+        sampler: &HotspotSampler,
+        rng: &mut Rng,
+    ) -> Operation {
+        let kind = self.sample_kind(rng);
+        match kind {
+            OpKind::Mkdir => Operation::single(kind, crate::namespace::InodeRef::dir(sampler.dir(rng))),
+            OpKind::Mv => {
+                let target = sampler.inode(ns, rng);
+                let dest = sampler.dir(rng);
+                Operation::mv(target, dest)
+            }
+            OpKind::Create => {
+                // Create targets a fresh file id in a sampled directory.
+                let d = sampler.dir(rng);
+                let fresh = ns.dir(d).files + rng.below(1 << 20) as u32;
+                Operation::single(kind, crate::namespace::InodeRef::file(d, fresh))
+            }
+            _ => Operation::single(kind, sampler.inode(ns, rng)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::generate::{generate, NamespaceParams};
+
+    #[test]
+    fn spotify_mix_frequencies() {
+        let mix = OpMix::spotify();
+        let mut rng = Rng::new(8);
+        let n = 500_000;
+        let mut reads = 0;
+        let mut creates = 0;
+        let mut writes = 0;
+        for _ in 0..n {
+            let k = mix.sample_kind(&mut rng);
+            if k == OpKind::Read {
+                reads += 1;
+            }
+            if k == OpKind::Create {
+                creates += 1;
+            }
+            if k.is_write() {
+                writes += 1;
+            }
+        }
+        let rf = reads as f64 / n as f64;
+        let cf = creates as f64 / n as f64;
+        let wf = writes as f64 / n as f64;
+        assert!((rf - 0.6922).abs() < 0.005, "read {rf}");
+        assert!((cf - 0.027).abs() < 0.002, "create {cf}");
+        assert!((wf - 0.0477).abs() < 0.003, "write {wf} (Table 2: 4.77%)");
+    }
+
+    #[test]
+    fn write_fraction_analytic() {
+        assert!((OpMix::spotify().write_fraction() - 0.0477).abs() < 1e-9);
+        assert_eq!(OpMix::only(OpKind::Read).write_fraction(), 0.0);
+        assert_eq!(OpMix::only(OpKind::Create).write_fraction(), 1.0);
+    }
+
+    #[test]
+    fn only_mix_is_pure() {
+        let mix = OpMix::only(OpKind::Stat);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert_eq!(mix.sample_kind(&mut rng), OpKind::Stat);
+        }
+    }
+
+    #[test]
+    fn sample_op_well_formed() {
+        let mut rng = Rng::new(3);
+        let ns = generate(&NamespaceParams::default(), &mut rng);
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        let mix = OpMix::spotify();
+        for _ in 0..10_000 {
+            let op = mix.sample_op(&ns, &sampler, &mut rng);
+            assert!((op.target.dir.0 as usize) < ns.n_dirs());
+            if op.kind == OpKind::Mv {
+                assert!(op.dest.is_some());
+            }
+            assert!(!op.kind.is_subtree());
+        }
+    }
+}

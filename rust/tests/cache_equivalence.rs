@@ -1,0 +1,114 @@
+//! Property test: `PathTrie` (string trie, public API) and
+//! `InternedCache` (simulator fast path) implement the same cache
+//! semantics — insert/lookup/exact-invalidate/subtree-invalidate agree on
+//! arbitrary operation sequences over a generated namespace.
+
+use lambda_fs::cache::interned::InternedCache;
+use lambda_fs::cache::trie::PathTrie;
+use lambda_fs::namespace::generate::{generate, NamespaceParams};
+use lambda_fs::namespace::{DirId, InodeRef, Namespace};
+use lambda_fs::util::ptest::{self, ensure, ensure_eq};
+
+fn file_path(ns: &Namespace, inode: InodeRef) -> String {
+    let dir = &ns.dir(inode.dir).path;
+    match inode.file {
+        Some(f) => {
+            if dir == "/" {
+                format!("/f{f}")
+            } else {
+                format!("{dir}/f{f}")
+            }
+        }
+        None => dir.clone(),
+    }
+}
+
+#[test]
+fn trie_and_interned_agree_on_random_sequences() {
+    let mut seed_rng = lambda_fs::util::rng::Rng::new(99);
+    let ns = generate(
+        &NamespaceParams { n_dirs: 64, files_per_dir: 4, max_depth: 4, zipf_s: 1.2 },
+        &mut seed_rng,
+    );
+
+    ptest::check("cache equivalence", 300, |g| {
+        // Capacity large enough to avoid eviction (eviction *order* is an
+        // implementation detail; semantics below are about visibility).
+        let mut trie: PathTrie<u64> = PathTrie::new(100_000);
+        let mut interned = InternedCache::new(100_000);
+
+        for _ in 0..g.int(1, 120) {
+            let dir = DirId(g.int(0, ns.n_dirs() as i64 - 1) as u32);
+            let files = ns.dir(dir).files;
+            let inode = if files > 0 && g.bool() {
+                InodeRef::file(dir, g.int(0, files as i64 - 1) as u32)
+            } else {
+                InodeRef::dir(dir)
+            };
+            let path = file_path(&ns, inode);
+            match g.int(0, 3) {
+                0 => {
+                    let v = g.int(0, 1000) as u64;
+                    trie.insert(&path, v);
+                    interned.insert_version(inode, v);
+                }
+                1 => {
+                    let t = trie.peek(&path).copied();
+                    let i = interned.peek_version(inode);
+                    ensure_eq(t, i, &format!("lookup {path}"))?;
+                }
+                2 => {
+                    let t = trie.invalidate(&path);
+                    let i = interned.invalidate(inode);
+                    ensure_eq(t, i, &format!("invalidate {path}"))?;
+                }
+                _ => {
+                    // Subtree invalidation rooted at a random directory.
+                    let root = DirId(g.int(0, ns.n_dirs() as i64 - 1) as u32);
+                    let t = trie.invalidate_prefix(&ns.dir(root).path);
+                    let i = interned.invalidate_subtree(&ns, root);
+                    ensure_eq(t, i, &format!("subtree inv at {}", ns.dir(root).path))?;
+                }
+            }
+            ensure_eq(trie.len(), interned.len(), "cache sizes")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn subtree_invalidation_never_leaks_outside_subtree() {
+    let mut seed_rng = lambda_fs::util::rng::Rng::new(5);
+    let ns = generate(
+        &NamespaceParams { n_dirs: 128, files_per_dir: 3, max_depth: 5, zipf_s: 1.2 },
+        &mut seed_rng,
+    );
+    ptest::check("subtree inv isolation", 200, |g| {
+        let mut cache = InternedCache::new(100_000);
+        // Fill with a random population.
+        let mut population = Vec::new();
+        for _ in 0..g.int(5, 80) {
+            let dir = DirId(g.int(0, ns.n_dirs() as i64 - 1) as u32);
+            let inode = InodeRef::dir(dir);
+            cache.insert_version(inode, 1);
+            population.push(inode);
+        }
+        let root = DirId(g.int(0, ns.n_dirs() as i64 - 1) as u32);
+        let subtree: std::collections::HashSet<DirId> =
+            ns.subtree_dirs(root).into_iter().collect();
+        cache.invalidate_subtree(&ns, root);
+        for inode in population {
+            let inside = subtree.contains(&inode.dir);
+            let present = cache.peek(inode);
+            if inside {
+                ensure(!present, "inside subtree must be invalidated")?;
+            }
+            // Outside entries must survive *iff* they were not separately
+            // invalidated — they were not, so:
+            if !inside {
+                ensure(present, "outside subtree must survive")?;
+            }
+        }
+        Ok(())
+    });
+}

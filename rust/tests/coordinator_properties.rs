@@ -1,0 +1,137 @@
+//! Property tests on coordinator invariants: routing stability, batching
+//! conservation, coherence freshness, and store serializability.
+
+use lambda_fs::client::Router;
+use lambda_fs::config::SystemConfig;
+use lambda_fs::coordinator::subtree::SubtreePlan;
+use lambda_fs::namespace::generate::{generate, NamespaceParams};
+use lambda_fs::namespace::{DirId, InodeRef, Namespace};
+use lambda_fs::store::NdbStore;
+use lambda_fs::util::fnv;
+use lambda_fs::util::ptest::{self, ensure, ensure_eq};
+use lambda_fs::util::rng::Rng;
+
+fn ns_fixture(seed: u64, dirs: usize) -> Namespace {
+    let mut rng = Rng::new(seed);
+    generate(&NamespaceParams { n_dirs: dirs, files_per_dir: 8, ..Default::default() }, &mut rng)
+}
+
+#[test]
+fn routing_is_deterministic_and_partition_stable() {
+    let ns = ns_fixture(11, 256);
+    ptest::check("routing determinism", 300, |g| {
+        let n_dep = g.int(1, 64) as u32;
+        let router = Router::build(&ns, n_dep);
+        let dir = DirId(g.int(0, ns.n_dirs() as i64 - 1) as u32);
+        let files = ns.dir(dir).files;
+        let inode = if files > 0 && g.bool() {
+            InodeRef::file(dir, g.int(0, files as i64 - 1) as u32)
+        } else {
+            InodeRef::dir(dir)
+        };
+        let d1 = router.route(&ns, inode);
+        let d2 = router.route(&ns, inode);
+        ensure_eq(d1, d2, "same inode, same deployment")?;
+        ensure(d1 < n_dep, "deployment in range")?;
+        // Partition stability: routing matches the raw FNV contract.
+        let expect = fnv::route(ns.parent_path(inode), n_dep);
+        ensure_eq(d1, expect, "matches kernel contract")?;
+        // Co-location: all files of a directory share a deployment
+        // (a directory itself routes by its parent, so compare files).
+        if files > 1 {
+            let f1 = InodeRef::file(dir, g.int(0, files as i64 - 1) as u32);
+            let f2 = InodeRef::file(dir, g.int(0, files as i64 - 1) as u32);
+            ensure_eq(router.route(&ns, f1), router.route(&ns, f2), "files co-locate")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn subtree_batching_conserves_inodes() {
+    let ns = ns_fixture(13, 512);
+    ptest::check("batch conservation", 200, |g| {
+        let root = DirId(g.int(0, ns.n_dirs() as i64 - 1) as u32);
+        let plan = SubtreePlan::build(&ns, root, |d| fnv::route(&ns.dir(d).path, 16));
+        let batch = g.int(1, 2048) as usize;
+        let n_batches = plan.n_batches(batch);
+        // Conservation: batches cover exactly the subtree's INodes.
+        let batch_u64 = batch as u64;
+        ensure(n_batches * batch_u64 >= plan.total_inodes, "batches cover all inodes")?;
+        ensure(
+            (n_batches - 1) * batch_u64 < plan.total_inodes,
+            "no fully-empty trailing batch",
+        )?;
+        // The plan's dirs match the namespace's subtree enumeration.
+        let expect: std::collections::HashSet<DirId> =
+            ns.subtree_dirs(root).into_iter().collect();
+        let got: std::collections::HashSet<DirId> = plan.dirs.iter().copied().collect();
+        ensure_eq(got.len(), plan.dirs.len(), "no duplicate dirs in plan")?;
+        ensure(got == expect, "plan dirs == subtree dirs")?;
+        // Deployment set is exactly the routes of the subtree's dirs.
+        for d in &plan.dirs {
+            let dep = fnv::route(&ns.dir(*d).path, 16);
+            ensure(plan.deployments.contains(&dep), "deployment set covers dir")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn store_writes_serialize_per_row() {
+    ptest::check("store serializability", 150, |g| {
+        let mut store = NdbStore::new(SystemConfig::default().store);
+        let mut rng = Rng::new(g.int(0, i64::MAX) as u64);
+        let row = InodeRef::file(DirId(1), 0);
+        let mut commits = Vec::new();
+        let n = g.int(2, 20);
+        for _ in 0..n {
+            commits.push(store.write_txn(0, &[row], false, &mut rng));
+        }
+        // Commits on one row are strictly ordered (exclusive locks).
+        for w in commits.windows(2) {
+            ensure(w[0] < w[1], "row commits strictly ordered")?;
+        }
+        ensure_eq(store.version(row), n as u64, "version counts commits")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn concurrent_disjoint_writes_do_not_serialize() {
+    ptest::check("disjoint concurrency", 100, |g| {
+        let mut store = NdbStore::new(SystemConfig::default().store);
+        let mut rng = Rng::new(g.int(0, i64::MAX) as u64);
+        let n = g.int(2, 30) as u32;
+        let commits: Vec<_> = (0..n)
+            .map(|i| store.write_txn(0, &[InodeRef::file(DirId(i), 0)], false, &mut rng))
+            .collect();
+        // With 128 store slots, disjoint writes all land within ~one
+        // service time — far sooner than n serialized writes would.
+        let serial_bound = lambda_fs::sim::time::from_ms(1.55 * 0.8) * n as u64;
+        let max = commits.iter().max().unwrap();
+        ensure(*max < serial_bound.max(5_000), "disjoint writes run concurrently")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn write_deployments_always_cover_read_route() {
+    // Coherence prerequisite: the set of deployments invalidated by a
+    // write must include the deployment any reader would consult.
+    let ns = ns_fixture(17, 256);
+    ptest::check("invalidation covers readers", 300, |g| {
+        let n_dep = g.int(1, 32) as u32;
+        let router = Router::build(&ns, n_dep);
+        let dir = DirId(g.int(0, ns.n_dirs() as i64 - 1) as u32);
+        let files = ns.dir(dir).files;
+        let inode = if files > 0 && g.bool() {
+            InodeRef::file(dir, g.int(0, files as i64 - 1) as u32)
+        } else {
+            InodeRef::dir(dir)
+        };
+        let deps = router.write_deployments(&ns, inode);
+        ensure(deps.contains(&router.route(&ns, inode)), "reader's deployment covered")?;
+        Ok(())
+    });
+}

@@ -1,0 +1,131 @@
+//! Integration: the compiled PJRT artifacts must be bit-identical to the
+//! pure-Rust fallbacks (the L1/L2 ↔ L3 contract).
+//!
+//! Requires `make artifacts` (skipped with a notice if absent).
+
+use lambda_fs::client::Router;
+use lambda_fs::namespace::generate::{generate, NamespaceParams};
+use lambda_fs::runtime::{artifacts_dir, ArtifactSet};
+use lambda_fs::scaling::window::LatencyWindow;
+use lambda_fs::util::dist::Pareto;
+use lambda_fs::util::fnv;
+use lambda_fs::util::rng::Rng;
+
+fn artifacts() -> Option<ArtifactSet> {
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: artifacts/ not found — run `make artifacts`");
+        return None;
+    }
+    Some(ArtifactSet::load_default().expect("artifacts load"))
+}
+
+#[test]
+fn route_kernel_matches_rust_fnv() {
+    let Some(set) = artifacts() else { return };
+    let paths = vec![
+        "/",
+        "/dir",
+        "/dir/note.pdf",
+        "/nts",
+        "/bks",
+        "/a/very/deep/nested/directory/tree",
+        "",
+        "/spotify/user/12345/playlists",
+    ];
+    for n_dep in [1u32, 5, 16, 97] {
+        let routed = set.route.route_batch(&paths, n_dep).unwrap();
+        for (p, (dep, hash)) in paths.iter().zip(&routed) {
+            assert_eq!(*hash, fnv::fnv1a32(p.as_bytes()), "hash mismatch for {p:?}");
+            assert_eq!(*dep, fnv::route(p, n_dep), "dep mismatch for {p:?}");
+        }
+    }
+}
+
+#[test]
+fn route_kernel_matches_on_generated_namespace() {
+    let Some(set) = artifacts() else { return };
+    let mut rng = Rng::new(42);
+    let ns = generate(&NamespaceParams { n_dirs: 700, ..Default::default() }, &mut rng);
+    let kernel_router = set.route.route_namespace(&ns, 16).unwrap();
+    let rust_router = Router::build(&ns, 16);
+    for d in &ns.dirs {
+        let file = lambda_fs::namespace::InodeRef::file(d.id, 0);
+        assert_eq!(
+            kernel_router.route(&ns, file),
+            rust_router.route(&ns, file),
+            "router tables diverge at {}",
+            d.path
+        );
+    }
+}
+
+#[test]
+fn route_kernel_handles_long_and_unicode_paths() {
+    let Some(set) = artifacts() else { return };
+    let long = "/x".repeat(300); // > PATH_WIDTH bytes
+    let uni = "/データ/ファイル";
+    let paths = vec![long.as_str(), uni];
+    let routed = set.route.route_batch(&paths, 16).unwrap();
+    for (p, (dep, hash)) in paths.iter().zip(&routed) {
+        let take = p.as_bytes().len().min(fnv::PATH_WIDTH);
+        assert_eq!(*hash, fnv::fnv1a32(&p.as_bytes()[..take]));
+        assert_eq!(*dep, fnv::route(p, 16));
+    }
+}
+
+#[test]
+fn latency_kernel_matches_rust_window() {
+    let Some(set) = artifacts() else { return };
+    let mut rng = Rng::new(7);
+    let mut windows = Vec::new();
+    let mut expect = Vec::new();
+    for _ in 0..300 {
+        let n = 1 + rng.below(64) as usize;
+        let mut w = LatencyWindow::new(64);
+        let mut flags = Default::default();
+        for _ in 0..n {
+            let lat = rng.range_f64(0.5, 20.0);
+            flags = w.record(lat, 10.0, 2.5);
+        }
+        let (layout, count) = w.kernel_layout(64);
+        windows.push((layout, count));
+        expect.push((w.mean(), flags));
+    }
+    let verdicts = set.latency.evaluate(&windows, 10.0, 2.5).unwrap();
+    assert_eq!(verdicts.len(), 300);
+    for (i, v) in verdicts.iter().enumerate() {
+        let (mean, flags) = &expect[i];
+        let rel = (v.mean_ms as f64 - mean).abs() / mean.max(1e-9);
+        assert!(rel < 1e-4, "window {i}: mean {} vs {}", v.mean_ms, mean);
+        assert_eq!(v.straggler, flags.straggler, "window {i} straggler");
+        assert_eq!(v.thrash, flags.thrash, "window {i} thrash");
+    }
+}
+
+#[test]
+fn pareto_kernel_matches_rust_sampler() {
+    let Some(set) = artifacts() else { return };
+    let mut rng = Rng::new(3);
+    let uniforms: Vec<f32> = (0..256).map(|_| rng.f64() as f32).collect();
+    let out = set.pareto.schedule(&uniforms, 25_000.0, 2.0).unwrap();
+    assert_eq!(out.len(), uniforms.len());
+    let p = Pareto::new(25_000.0, 2.0);
+    let _ = p; // formula checked directly below
+    for (u, d) in uniforms.iter().zip(&out) {
+        let expect = 25_000.0f64 * (1.0 - (*u as f64).min(1.0 - 1e-7)).powf(-0.5);
+        let rel = (*d as f64 - expect).abs() / expect;
+        assert!(rel < 1e-3, "u={u}: {d} vs {expect}");
+        assert!(*d >= 25_000.0 * 0.999, "support starts at x_m");
+    }
+}
+
+#[test]
+fn lambdafs_accepts_kernel_built_router() {
+    let Some(set) = artifacts() else { return };
+    let cfg = lambda_fs::config::SystemConfig::default();
+    let mut rng = Rng::new(cfg.seed);
+    let ns = generate(&NamespaceParams { n_dirs: 256, ..Default::default() }, &mut rng);
+    let router = set.route.route_namespace(&ns, cfg.lambda_fs.n_deployments).unwrap();
+    let sys = lambda_fs::systems::LambdaFs::new(cfg, ns, 16, 2).with_router(router);
+    drop(sys); // construction validates deployment count
+}
