@@ -1,20 +1,61 @@
 //! Bench: simulator-throughput microbenchmarks (the §Perf hot paths).
 //!
 //! Reports simulated-metadata-ops per wall-second for the λFS submit path
-//! and the component hot spots (router, cache, store, event queue) so the
-//! performance pass has a stable baseline to iterate against.
+//! and the component hot spots (router, cache, store, event queue), each
+//! measured **twice**:
+//!
+//! * **baseline** — for `event_queue` and `router`, the true pre-overhaul
+//!   implementation kept alive in-tree (the reference `HeapQueue` binary
+//!   heap; an allocating `Vec`-returning reimplementation of
+//!   `Router::write_deployments`). For `cache`, `store`, and
+//!   `e2e_submit`, the SipHash (`RandomState`) map configuration of the
+//!   otherwise-current code — the pre-change code also allocated per op
+//!   and kept `Vec`-based dir indexes, so those three baselines
+//!   *understate* the pre-overhaul cost (the seed could not build at all
+//!   — it had no Cargo.toml — so no true pre-change binary exists to
+//!   measure). Each entry's `baseline_impl` string says which kind it is.
+//! * **current** — the calendar-queue + FNV-map + allocation-free path.
+//!
+//! Both numbers land in `BENCH_perf.json` (override the path with
+//! `LAMBDAFS_BENCH_OUT`) so every later perf PR iterates against a
+//! machine-readable baseline. The e2e pair also cross-checks
+//! `RunMetrics::fingerprint` equality — the overhaul must not change
+//! simulation results, only wall-clock speed.
+
+use std::collections::hash_map::RandomState;
+use std::fmt::Write as _;
 
 use lambda_fs::cache::interned::InternedCache;
+use lambda_fs::client::Router;
 use lambda_fs::config::SystemConfig;
 use lambda_fs::metrics::BenchTimer;
 use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
-use lambda_fs::namespace::{DirId, InodeRef};
-use lambda_fs::sim::queue::EventQueue;
+use lambda_fs::namespace::{DirId, InodeRef, Namespace};
+use lambda_fs::sim::queue::{EventQueue, HeapQueue};
 use lambda_fs::store::NdbStore;
-use lambda_fs::systems::{driver, LambdaFs};
+use lambda_fs::systems::{driver, LambdaFs, MdsSim};
 use lambda_fs::util::fnv;
 use lambda_fs::util::rng::Rng;
 use lambda_fs::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
+
+/// One hot spot's pair of measurements (ops per wall-second).
+struct HotSpot {
+    key: &'static str,
+    baseline_impl: &'static str,
+    current_impl: &'static str,
+    baseline: f64,
+    current: f64,
+}
+
+impl HotSpot {
+    fn speedup(&self) -> f64 {
+        if self.baseline > 0.0 {
+            self.current / self.baseline
+        } else {
+            0.0
+        }
+    }
+}
 
 fn main() {
     let mut cfg = SystemConfig::default();
@@ -25,43 +66,15 @@ fn main() {
         &mut rng,
     );
     let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+    let mut spots: Vec<HotSpot> = Vec::new();
 
-    // End-to-end λFS submit path.
-    let spec = OpenLoopSpec {
-        schedule: ThroughputSchedule::constant(20, 20_000.0),
-        mix: OpMix::spotify(),
-        n_clients: 512,
-        n_vms: 8,
-        namespace: NamespaceParams::default(),
-        zipf_s: 1.3,
-    };
-    let n_ops = spec.schedule.total_ops();
-    let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
-    let mut r = rng.fork("e2e");
-    let (_, ms) = BenchTimer::time(|| {
-        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-    });
-    let rate = n_ops / (ms / 1000.0);
-    println!("lambdafs submit path : {n_ops:.0} ops in {ms:.0} ms = {rate:.0} sim-ops/s");
+    spots.push(e2e_submit(&cfg, &ns, &sampler));
+    spots.push(event_queue());
+    spots.push(cache(&ns, &sampler, &mut rng));
+    spots.push(router(&ns, &sampler, &mut rng));
+    spots.push(store(&cfg, &mut rng));
 
-    // Router.
-    let router = lambda_fs::client::Router::build(&ns, 16);
-    let inodes: Vec<InodeRef> = (0..100_000).map(|_| sampler.inode(&ns, &mut rng)).collect();
-    let (sum, ms) = BenchTimer::time(|| {
-        let mut acc = 0u64;
-        for _ in 0..10 {
-            for &i in &inodes {
-                acc += router.route(&ns, i) as u64;
-            }
-        }
-        acc
-    });
-    println!(
-        "router.route         : 1M lookups in {ms:.1} ms = {:.1} M/s (sum {sum})",
-        1.0 / (ms / 1000.0)
-    );
-
-    // Raw FNV (the kernel contract).
+    // Raw FNV (the kernel contract) — single-sided reference number.
     let paths: Vec<&str> = ns.dirs.iter().map(|d| d.path.as_str()).collect();
     let (sum, ms) = BenchTimer::time(|| {
         let mut acc = 0u64;
@@ -72,64 +85,257 @@ fn main() {
         }
         acc
     });
-    let n = 250.0 * paths.len() as f64;
-    println!(
-        "fnv::route           : {n:.0} hashes in {ms:.1} ms = {:.1} M/s (sum {sum})",
-        n / ms / 1000.0
-    );
+    let fnv_rate = 250.0 * paths.len() as f64 / (ms / 1_000.0);
+    println!("fnv::route           : {:.1} M hashes/s (sum {sum})", fnv_rate / 1e6);
 
-    // Cache.
-    let mut cache = InternedCache::new(1_000_000);
-    let (hits, ms) = BenchTimer::time(|| {
-        let mut h = 0u64;
-        for _ in 0..5 {
-            for &i in &inodes {
-                if cache.contains(i) {
-                    h += 1;
-                } else {
-                    cache.insert_version(i, 1);
-                }
-            }
-        }
-        h
+    println!();
+    for s in &spots {
+        println!(
+            "{:<12} baseline {:>12.0} ops/s | current {:>12.0} ops/s | speedup {:>5.2}x",
+            s.key,
+            s.baseline,
+            s.current,
+            s.speedup()
+        );
+    }
+
+    let json = render_json(&spots, fnv_rate);
+    let out = std::env::var("LAMBDAFS_BENCH_OUT").unwrap_or_else(|_| "BENCH_perf.json".into());
+    std::fs::write(&out, json).expect("writing BENCH_perf.json");
+    println!("\nwrote {out}");
+}
+
+/// End-to-end λFS submit path: identical workload through the FNV-map
+/// system (current) and the SipHash-map system (baseline). Also asserts
+/// both produce bit-identical `RunMetrics`.
+fn e2e_submit(cfg: &SystemConfig, ns: &Namespace, sampler: &HotspotSampler) -> HotSpot {
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(20, 20_000.0),
+        mix: OpMix::spotify(),
+        n_clients: 512,
+        n_vms: 8,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+    let n_ops = spec.schedule.total_ops();
+
+    let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+    let mut r = Rng::new(cfg.seed ^ 0xe2e);
+    let (_, ms_cur) = BenchTimer::time(|| {
+        driver::run_open_loop(&mut sys, &spec, ns, sampler, &mut r);
     });
-    println!(
-        "interned cache       : 500k ops in {ms:.1} ms = {:.1} M/s ({hits} hits)",
-        0.5 / (ms / 1000.0)
-    );
+    let fp_cur = sys.into_metrics().fingerprint();
 
-    // Store.
-    let mut store = NdbStore::new(cfg.store.clone());
-    let mut r = rng.fork("store");
-    let (last, ms) = BenchTimer::time(|| {
-        let mut t = 0;
-        for i in 0..200_000u32 {
-            t = store.read_batch(t, 4, &mut r);
-            if i % 16 == 0 {
-                t = store.write_txn(t, &[InodeRef::file(DirId(i % 512), i)], false, &mut r);
-            }
-        }
-        t
+    let mut sip: LambdaFs<RandomState> =
+        LambdaFs::with_hasher(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+    let mut r = Rng::new(cfg.seed ^ 0xe2e);
+    let (_, ms_base) = BenchTimer::time(|| {
+        driver::run_open_loop(&mut sip, &spec, ns, sampler, &mut r);
     });
-    println!(
-        "ndb store            : 212.5k txns in {ms:.1} ms = {:.2} M/s (t={last})",
-        0.2125 / (ms / 1000.0)
+    let fp_base = sip.into_metrics().fingerprint();
+    assert_eq!(
+        fp_cur, fp_base,
+        "hasher configuration changed simulation results — determinism broken"
     );
 
-    // Event queue.
+    HotSpot {
+        key: "e2e_submit",
+        baseline_impl: "LambdaFs<RandomState> (SipHash-hasher config of current code; \
+                        understates pre-overhaul cost)",
+        current_impl: "LambdaFs<FnvBuildHasher> (FNV maps, allocation-free write path)",
+        baseline: n_ops / (ms_base / 1_000.0),
+        current: n_ops / (ms_cur / 1_000.0),
+    }
+}
+
+/// Event queue: 1M schedule+pop, calendar wheel vs reference binary heap.
+fn event_queue() -> HotSpot {
     let mut q: EventQueue<u64> = EventQueue::new();
-    let (processed, ms) = BenchTimer::time(|| {
+    let (_, ms_cur) = BenchTimer::time(|| {
         let mut rng = Rng::new(1);
         for _ in 0..10 {
             for i in 0..100_000u64 {
-                q.schedule_in(rng.below(1000), i);
+                q.schedule_in(rng.below(1_000), i);
             }
             while q.pop().is_some() {}
         }
         q.processed()
     });
-    println!(
-        "event queue          : 1M sched+pop in {ms:.1} ms = {:.1} M/s ({processed} events)",
-        1.0 / (ms / 1000.0)
+    let mut h: HeapQueue<u64> = HeapQueue::new();
+    let (_, ms_base) = BenchTimer::time(|| {
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            for i in 0..100_000u64 {
+                h.schedule_in(rng.below(1_000), i);
+            }
+            while h.pop().is_some() {}
+        }
+        h.processed()
+    });
+    assert_eq!(q.processed(), h.processed());
+    HotSpot {
+        key: "event_queue",
+        baseline_impl: "HeapQueue (BinaryHeap)",
+        current_impl: "EventQueue (calendar wheel + overflow heap)",
+        baseline: 1_000_000.0 / (ms_base / 1_000.0),
+        current: 1_000_000.0 / (ms_cur / 1_000.0),
+    }
+}
+
+/// Interned cache: 500k mixed contains/insert over hot-spot skewed keys.
+fn cache(ns: &Namespace, sampler: &HotspotSampler, rng: &mut Rng) -> HotSpot {
+    let inodes: Vec<InodeRef> = (0..100_000).map(|_| sampler.inode(ns, rng)).collect();
+    let mut cur = InternedCache::new(1_000_000);
+    let (hits_cur, ms_cur) = BenchTimer::time(|| {
+        let mut h = 0u64;
+        for _ in 0..5 {
+            for &i in &inodes {
+                if cur.contains(i) {
+                    h += 1;
+                } else {
+                    cur.insert_version(i, 1);
+                }
+            }
+        }
+        h
+    });
+    let mut base: InternedCache<RandomState> = InternedCache::with_hasher(1_000_000);
+    let (hits_base, ms_base) = BenchTimer::time(|| {
+        let mut h = 0u64;
+        for _ in 0..5 {
+            for &i in &inodes {
+                if base.contains(i) {
+                    h += 1;
+                } else {
+                    base.insert_version(i, 1);
+                }
+            }
+        }
+        h
+    });
+    assert_eq!(hits_cur, hits_base);
+    HotSpot {
+        key: "cache",
+        baseline_impl: "InternedCache<RandomState> (SipHash)",
+        current_impl: "InternedCache<FnvBuildHasher> (FNV + intrusive dir lists)",
+        baseline: 500_000.0 / (ms_base / 1_000.0),
+        current: 500_000.0 / (ms_cur / 1_000.0),
+    }
+}
+
+/// Router write-dependency sets: precomputed table vs the old per-call
+/// `Vec` + `contains` reimplementation (the code `Router::build` replaced).
+fn router(ns: &Namespace, sampler: &HotspotSampler, rng: &mut Rng) -> HotSpot {
+    let router = Router::build(ns, 16);
+    let inodes: Vec<InodeRef> = (0..100_000).map(|_| sampler.inode(ns, rng)).collect();
+
+    let (sum_cur, ms_cur) = BenchTimer::time(|| {
+        let mut acc = 0u64;
+        for _ in 0..10 {
+            for &i in &inodes {
+                let deps = router.write_deployments(ns, i);
+                acc += deps.iter().map(|&d| d as u64).sum::<u64>();
+            }
+        }
+        acc
+    });
+
+    // Faithful pre-change implementation (allocates + linear dedup).
+    let write_deployments_alloc = |inode: InodeRef| -> Vec<u32> {
+        let mut deps = vec![router.route(ns, inode)];
+        let parent_inode = match inode.file {
+            Some(_) => InodeRef::dir(inode.dir),
+            None => InodeRef::dir(ns.dir(inode.dir).parent.unwrap_or(inode.dir)),
+        };
+        let p = router.route(ns, parent_inode);
+        if !deps.contains(&p) {
+            deps.push(p);
+        }
+        deps
+    };
+    let (sum_base, ms_base) = BenchTimer::time(|| {
+        let mut acc = 0u64;
+        for _ in 0..10 {
+            for &i in &inodes {
+                let deps = write_deployments_alloc(i);
+                acc += deps.iter().map(|&d| d as u64).sum::<u64>();
+            }
+        }
+        acc
+    });
+    assert_eq!(sum_cur, sum_base, "dependency sets diverge");
+
+    HotSpot {
+        key: "router",
+        baseline_impl: "per-call Vec + linear dedup",
+        current_impl: "build-time precomputed sorted DepSet table",
+        baseline: 1_000_000.0 / (ms_base / 1_000.0),
+        current: 1_000_000.0 / (ms_cur / 1_000.0),
+    }
+}
+
+/// NDB store: 212.5k transactions, FNV row/lock tables vs SipHash.
+fn store(cfg: &SystemConfig, rng: &mut Rng) -> HotSpot {
+    let mut cur = NdbStore::new(cfg.store.clone());
+    let mut r = Rng::new(rng.next_u64());
+    let seed = r.next_u64();
+    let mut r1 = Rng::new(seed);
+    let (_, ms_cur) = BenchTimer::time(|| {
+        let mut t = 0;
+        for i in 0..200_000u32 {
+            t = cur.read_batch(t, 4, &mut r1);
+            if i % 16 == 0 {
+                t = cur.write_txn(t, &[InodeRef::file(DirId(i % 512), i)], false, &mut r1);
+            }
+        }
+        t
+    });
+    let mut base: NdbStore<RandomState> = NdbStore::with_hasher(cfg.store.clone());
+    let mut r2 = Rng::new(seed);
+    let (_, ms_base) = BenchTimer::time(|| {
+        let mut t = 0;
+        for i in 0..200_000u32 {
+            t = base.read_batch(t, 4, &mut r2);
+            if i % 16 == 0 {
+                t = base.write_txn(t, &[InodeRef::file(DirId(i % 512), i)], false, &mut r2);
+            }
+        }
+        t
+    });
+    HotSpot {
+        key: "store",
+        baseline_impl: "NdbStore<RandomState> (SipHash row/lock tables)",
+        current_impl: "NdbStore<FnvBuildHasher> (FNV row/lock tables)",
+        baseline: 212_500.0 / (ms_base / 1_000.0),
+        current: 212_500.0 / (ms_cur / 1_000.0),
+    }
+}
+
+/// Hand-rolled JSON (serde is not in the offline vendored set).
+fn render_json(spots: &[HotSpot], fnv_rate: f64) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"lambdafs-perf-v1\",\n");
+    s.push_str("  \"bench\": \"perf_simulator\",\n");
+    s.push_str("  \"unit\": \"ops_per_wall_second\",\n");
+    s.push_str(
+        "  \"note\": \"event_queue/router baselines are true pre-overhaul \
+         implementations; cache/store/e2e_submit baselines are the SipHash-hasher \
+         configuration of current code and understate pre-overhaul cost (the seed \
+         tree had no Cargo.toml, so no pre-change binary exists to measure)\",\n",
     );
+    let _ = writeln!(s, "  \"fnv_route_hashes_per_s\": {fnv_rate:.0},");
+    s.push_str("  \"hot_spots\": {\n");
+    for (i, h) in spots.iter().enumerate() {
+        let _ = writeln!(s, "    \"{}\": {{", h.key);
+        let _ = writeln!(s, "      \"baseline_impl\": \"{}\",", h.baseline_impl);
+        let _ = writeln!(s, "      \"current_impl\": \"{}\",", h.current_impl);
+        let _ = writeln!(s, "      \"baseline\": {:.0},", h.baseline);
+        let _ = writeln!(s, "      \"current\": {:.0},", h.current);
+        let _ = writeln!(s, "      \"speedup\": {:.3}", h.speedup());
+        let _ = writeln!(s, "    }}{}", if i + 1 < spots.len() { "," } else { "" });
+    }
+    s.push_str("  }\n");
+    s.push_str("}\n");
+    s
 }

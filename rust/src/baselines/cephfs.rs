@@ -15,13 +15,15 @@ use crate::namespace::{Namespace, Operation};
 use crate::sim::station::Station;
 use crate::sim::{time, Time};
 use crate::systems::MdsSim;
+use crate::client::Router;
 use crate::util::dist::LogNormal;
-use crate::util::fnv;
 use crate::util::rng::Rng;
 
 /// CephFS-like MDS cluster.
 pub struct CephFs {
     ns: Namespace,
+    /// Precomputed dir-hash routing over the MDS daemons.
+    router: Router,
     /// Per-MDS service stations (dynamic subtree partitioning ≈ dir-hash).
     mds: Vec<Station>,
     /// Shared journal for metadata mutations (SSD-backed, batched).
@@ -43,8 +45,10 @@ impl CephFs {
         // Each MDS daemon is effectively bounded by a few busy cores
         // (single-threaded request path + journaling threads).
         let per_mds_parallelism = 4;
+        let router = Router::build(&ns, n_mds as u32);
         CephFs {
             ns,
+            router,
             mds: (0..n_mds).map(|_| Station::new(per_mds_parallelism)).collect(),
             journal: Station::new(16),
             rpc: LogNormal::from_median(cfg.serverful.rpc_median_ms, 0.3),
@@ -65,7 +69,7 @@ impl CephFs {
 impl MdsSim for CephFs {
     fn submit(&mut self, now: Time, _client: u32, op: &Operation, rng: &mut Rng) -> Time {
         let mut local = Rng::new(self.rng.next_u64());
-        let mds = fnv::route(self.ns.parent_path(op.target), self.mds.len() as u32) as usize;
+        let mds = self.router.route(&self.ns, op.target) as usize;
         let arrive = now + time::from_ms(self.rpc.sample(rng));
         let served = if op.kind.is_write() || op.kind.is_subtree() {
             // Capability-based write: in-memory update + journal append.

@@ -15,6 +15,7 @@
 //! ("CN HopsFS+Cache") is the same system with a smaller vCPU allocation.
 
 use crate::cache::interned::InternedCache;
+use crate::client::Router;
 use crate::config::SystemConfig;
 use crate::coordinator::subtree::{self, SubtreeParams, SubtreePlan};
 use crate::coordinator::ServiceModel;
@@ -25,7 +26,6 @@ use crate::sim::{time, Time};
 use crate::store::NdbStore;
 use crate::systems::MdsSim;
 use crate::util::dist::LogNormal;
-use crate::util::fnv;
 use crate::util::rng::Rng;
 
 /// HopsFS (optionally +Cache) under simulation.
@@ -34,6 +34,10 @@ pub struct HopsFs {
     ns: Namespace,
     /// One handler pool per NameNode VM.
     namenodes: Vec<Station>,
+    /// Precomputed parent-dir consistent-hash table over the NameNode
+    /// fleet (+Cache routing) — the same per-directory FNV table λFS
+    /// uses, so the baselines pay no per-op string hashing either.
+    router: Router,
     /// Per-NameNode caches (HopsFS+Cache only).
     caches: Option<Vec<InternedCache>>,
     store: NdbStore,
@@ -60,7 +64,8 @@ impl HopsFs {
             .rpc_handlers
             .min(cfg.serverful.vcpus_per_namenode as u32 * 2)
             .max(1);
-        let namenodes = (0..n_nn).map(|_| Station::new(parallelism)).collect();
+        let namenodes: Vec<Station> = (0..n_nn).map(|_| Station::new(parallelism)).collect();
+        let router = Router::build(&ns, namenodes.len() as u32);
         let caches = with_cache.then(|| {
             (0..n_nn).map(|_| InternedCache::new(cfg.lambda_fs.cache_capacity)).collect()
         });
@@ -73,6 +78,7 @@ impl HopsFs {
             cfg,
             ns,
             namenodes,
+            router,
             caches,
             store,
             svc,
@@ -98,8 +104,7 @@ impl HopsFs {
     /// the hot-directory bottleneck that comes with it).
     fn pick_namenode(&mut self, op: &Operation) -> usize {
         if self.caches.is_some() {
-            let parent = self.ns.parent_path(op.target);
-            fnv::route(parent, self.namenodes.len() as u32) as usize
+            self.router.route(&self.ns, op.target) as usize
         } else {
             self.rr = (self.rr + 1) % self.namenodes.len() as u32;
             self.rr as usize
@@ -146,15 +151,18 @@ impl MdsSim for HopsFs {
                     InodeRef::dir(self.ns.dir(op.target.dir).parent.unwrap_or(op.target.dir))
                 }
             };
-            let mut rows = vec![op.target, parent_inode];
+            let mut row_buf = [op.target, parent_inode, op.target];
+            let mut n_rows = 2;
             if let Some(dest) = op.dest {
-                rows.push(InodeRef::dir(dest));
+                row_buf[2] = InodeRef::dir(dest);
+                n_rows = 3;
             }
+            let rows = &row_buf[..n_rows];
             let deletes = matches!(op.kind, OpKind::Delete);
-            let commit = self.store.write_txn(cpu_done, &rows, deletes, &mut local_rng);
+            let commit = self.store.write_txn(cpu_done, rows, deletes, &mut local_rng);
             // +Cache: the (single) caching NameNode updates its copy.
             if let Some(caches) = &mut self.caches {
-                for r in &rows {
+                for r in rows {
                     caches[nn].invalidate(*r);
                 }
                 if !deletes {

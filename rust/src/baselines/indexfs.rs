@@ -11,6 +11,7 @@
 //! from function memory, and writes ride auto-scaling.
 
 use crate::cache::interned::InternedCache;
+use crate::client::Router;
 use crate::config::SystemConfig;
 use crate::coordinator::ServiceModel;
 use crate::faas::Platform;
@@ -22,12 +23,13 @@ use crate::sim::{time, Time};
 use crate::store::sstable::{SsTableConfig, SsTableStore};
 use crate::systems::MdsSim;
 use crate::util::dist::LogNormal;
-use crate::util::fnv;
 use crate::util::rng::Rng;
 
 /// Vanilla IndexFS: 4 co-located metadata servers over LevelDB.
 pub struct IndexFs {
     ns: Namespace,
+    /// Precomputed directory-hash routing over the server fleet.
+    router: Router,
     servers: Vec<(Station, SsTableStore)>,
     rpc: LogNormal,
     metrics: RunMetrics,
@@ -53,8 +55,10 @@ impl IndexFs {
         let servers = (0..n_servers)
             .map(|_| (Station::new(per_server), SsTableStore::new(colocated.clone())))
             .collect();
+        let router = Router::build(&ns, n_servers);
         IndexFs {
             ns,
+            router,
             servers,
             rpc: LogNormal::from_median(cfg.serverful.rpc_median_ms, 0.3),
             metrics: RunMetrics::new(),
@@ -68,8 +72,7 @@ impl IndexFs {
 impl MdsSim for IndexFs {
     fn submit(&mut self, now: Time, _client: u32, op: &Operation, rng: &mut Rng) -> Time {
         let mut local = Rng::new(self.rng.next_u64());
-        let srv =
-            fnv::route(self.ns.parent_path(op.target), self.servers.len() as u32) as usize;
+        let srv = self.router.route(&self.ns, op.target) as usize;
         let arrive = now + time::from_ms(self.rpc.sample(rng));
         let (station, store) = &mut self.servers[srv];
         let cpu = time::from_ms(0.08 * local.range_f64(0.85, 1.2));
@@ -108,6 +111,8 @@ impl MdsSim for IndexFs {
 pub struct LambdaIndexFs {
     cfg: SystemConfig,
     ns: Namespace,
+    /// Precomputed directory-hash routing over the deployments.
+    router: Router,
     platform: Platform,
     caches: Vec<InternedCache>,
     stores: Vec<SsTableStore>,
@@ -144,10 +149,12 @@ impl LambdaIndexFs {
         let svc = ServiceModel::new(cfg.op.clone());
         let cost = CostModel::new(cfg.cost.clone());
         let rng = Rng::new(cfg.seed ^ 0x71df);
+        let router = Router::build(&ns, n_deployments);
         LambdaIndexFs {
             warm_deps: vec![true; n_deployments as usize],
             cfg,
             ns,
+            router,
             platform,
             caches: Vec::new(),
             stores,
@@ -175,7 +182,7 @@ impl LambdaIndexFs {
 impl MdsSim for LambdaIndexFs {
     fn submit(&mut self, now: Time, _client: u32, op: &Operation, rng: &mut Rng) -> Time {
         let mut local = Rng::new(self.rng.next_u64());
-        let dep = fnv::route(self.ns.parent_path(op.target), self.cfg.lambda_fs.n_deployments);
+        let dep = self.router.route(&self.ns, op.target);
 
         // Hybrid RPC: once a deployment has served over HTTP, clients keep
         // TCP connections to it (modeled per deployment), with the λFS

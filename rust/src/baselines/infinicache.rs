@@ -8,6 +8,7 @@
 //! workloads the gateway is overwhelmed and the system fails to keep up.
 
 use crate::cache::interned::InternedCache;
+use crate::client::Router;
 use crate::config::{AutoScaleMode, SystemConfig};
 use crate::coordinator::ServiceModel;
 use crate::faas::{InstanceId, Platform};
@@ -23,6 +24,8 @@ use crate::util::rng::Rng;
 pub struct InfiniCacheMds {
     cfg: SystemConfig,
     ns: Namespace,
+    /// Precomputed dir-hash routing over the static fleet.
+    router: Router,
     platform: Platform,
     caches: Vec<InternedCache>,
     store: NdbStore,
@@ -61,9 +64,11 @@ impl InfiniCacheMds {
         let net = NetModel::new(cfg.net.clone());
         let svc = ServiceModel::new(cfg.op.clone());
         let cost = CostModel::new(cfg.cost.clone());
+        let router = Router::build(&ns, fleet_size);
         InfiniCacheMds {
             cfg,
             ns,
+            router,
             platform,
             caches,
             store,
@@ -91,10 +96,7 @@ impl InfiniCacheMds {
 impl MdsSim for InfiniCacheMds {
     fn submit(&mut self, now: Time, _client: u32, op: &Operation, rng: &mut Rng) -> Time {
         let mut local_rng = Rng::new(self.rng.next_u64());
-        let dep = crate::util::fnv::route(
-            self.ns.parent_path(op.target),
-            self.cfg.lambda_fs.n_deployments,
-        );
+        let dep = self.router.route(&self.ns, op.target);
 
         // EVERY operation is an HTTP invocation + short-lived TCP:
         // gateway queueing + invocation leg + per-op connection setup.

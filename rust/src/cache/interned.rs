@@ -5,10 +5,25 @@
 //! Semantics match [`super::trie::PathTrie`] (property-checked in
 //! `rust/tests/cache_equivalence.rs`); this version avoids all string work
 //! and is the structure on the simulation hot path.
+//!
+//! # Hot-path layout
+//!
+//! * The slot index is a [`FastMap`](crate::util::fasthash::FastMap)
+//!   (FNV-1a, one multiply per key) rather than a SipHash `HashMap` —
+//!   the lookup is executed once or more per simulated operation.
+//! * Per-directory membership is an **intrusive doubly-linked list
+//!   threaded through the slots themselves** (`dir_prev`/`dir_next`),
+//!   with a single `DirId → head-slot` map. Insertion and removal are
+//!   O(1) pointer splices with no per-directory `Vec` allocations, and
+//!   `invalidate_dir` walks exactly the live members of that directory.
+//! * The cache is generic over the `BuildHasher` so the perf benches can
+//!   measure the SipHash (`RandomState`) configuration as the baseline
+//!   tier; all production call sites use the FNV default.
 
-use std::collections::HashMap;
+use std::hash::BuildHasher;
 
 use crate::namespace::{DirId, InodeRef, Namespace};
+use crate::util::fasthash::FnvBuildHasher;
 
 use super::CacheStats;
 
@@ -20,20 +35,23 @@ struct Slot {
     /// Cached metadata version (mirrors the store's row version at fill
     /// time; the coherence invariant test asserts freshness with this).
     version: u64,
+    /// LRU list links.
     prev: u32,
     next: u32,
-    live: bool,
+    /// Intrusive per-directory list links.
+    dir_prev: u32,
+    dir_next: u32,
 }
 
 /// Exact-LRU interned cache.
 #[derive(Clone, Debug)]
-pub struct InternedCache {
+pub struct InternedCache<S: BuildHasher = FnvBuildHasher> {
     slots: Vec<Slot>,
     free: Vec<u32>,
     /// inode -> slot
-    index: HashMap<InodeRef, u32>,
-    /// dir -> slots whose inode lives in that dir (lazily compacted).
-    by_dir: HashMap<DirId, Vec<u32>>,
+    index: std::collections::HashMap<InodeRef, u32, S>,
+    /// dir -> head slot of that directory's intrusive member list.
+    by_dir: std::collections::HashMap<DirId, u32, S>,
     /// LRU list head (most recent) and tail (least recent).
     head: u32,
     tail: u32,
@@ -42,13 +60,22 @@ pub struct InternedCache {
     stats: CacheStats,
 }
 
-impl InternedCache {
+impl InternedCache<FnvBuildHasher> {
+    /// FNV-hashed cache (the production configuration).
     pub fn new(capacity: usize) -> Self {
+        Self::with_hasher(capacity)
+    }
+}
+
+impl<S: BuildHasher + Default> InternedCache<S> {
+    /// Cache with an explicit hasher configuration (bench baselines use
+    /// `RandomState` here).
+    pub fn with_hasher(capacity: usize) -> Self {
         InternedCache {
             slots: Vec::new(),
             free: Vec::new(),
-            index: HashMap::new(),
-            by_dir: HashMap::new(),
+            index: std::collections::HashMap::with_hasher(S::default()),
+            by_dir: std::collections::HashMap::with_hasher(S::default()),
             head: NIL,
             tail: NIL,
             capacity: capacity.max(1),
@@ -99,6 +126,33 @@ impl InternedCache {
         }
     }
 
+    /// Splice slot `s` onto the front of its directory's member list.
+    fn dir_link(&mut self, s: u32, dir: DirId) {
+        let head = self.by_dir.get(&dir).copied().unwrap_or(NIL);
+        self.slots[s as usize].dir_prev = NIL;
+        self.slots[s as usize].dir_next = head;
+        if head != NIL {
+            self.slots[head as usize].dir_prev = s;
+        }
+        self.by_dir.insert(dir, s);
+    }
+
+    /// Unsplice slot `s` from its directory's member list.
+    fn dir_unlink(&mut self, s: u32) {
+        let dir = self.slots[s as usize].inode.dir;
+        let (p, n) = (self.slots[s as usize].dir_prev, self.slots[s as usize].dir_next);
+        if p != NIL {
+            self.slots[p as usize].dir_next = n;
+        } else if n != NIL {
+            self.by_dir.insert(dir, n);
+        } else {
+            self.by_dir.remove(&dir);
+        }
+        if n != NIL {
+            self.slots[n as usize].dir_prev = p;
+        }
+    }
+
     /// Lookup; counts hit/miss and refreshes recency on hit. Returns the
     /// cached version on a hit.
     pub fn get(&mut self, inode: InodeRef) -> Option<u64> {
@@ -146,18 +200,26 @@ impl InternedCache {
         if self.len >= self.capacity {
             self.evict_lru();
         }
+        let slot = Slot {
+            inode,
+            version,
+            prev: NIL,
+            next: NIL,
+            dir_prev: NIL,
+            dir_next: NIL,
+        };
         let s = match self.free.pop() {
             Some(s) => {
-                self.slots[s as usize] = Slot { inode, version, prev: NIL, next: NIL, live: true };
+                self.slots[s as usize] = slot;
                 s
             }
             None => {
-                self.slots.push(Slot { inode, version, prev: NIL, next: NIL, live: true });
+                self.slots.push(slot);
                 (self.slots.len() - 1) as u32
             }
         };
         self.index.insert(inode, s);
-        self.by_dir.entry(inode.dir).or_default().push(s);
+        self.dir_link(s, inode.dir);
         self.push_front(s);
         self.len += 1;
         self.stats.insertions += 1;
@@ -166,11 +228,10 @@ impl InternedCache {
     fn remove_slot(&mut self, s: u32) {
         let inode = self.slots[s as usize].inode;
         self.unlink(s);
-        self.slots[s as usize].live = false;
+        self.dir_unlink(s);
         self.index.remove(&inode);
         self.free.push(s);
         self.len -= 1;
-        // by_dir entry cleaned lazily in invalidate_dir.
     }
 
     fn evict_lru(&mut self) {
@@ -193,16 +254,17 @@ impl InternedCache {
     }
 
     /// Invalidate every cached INode residing in directory `dir`
-    /// (the directory INode itself and its files).
+    /// (the directory INode itself and its files). Walks exactly the
+    /// directory's live members via the intrusive list.
     pub fn invalidate_dir(&mut self, dir: DirId) -> usize {
-        let Some(slots) = self.by_dir.remove(&dir) else { return 0 };
+        let mut s = self.by_dir.get(&dir).copied().unwrap_or(NIL);
         let mut dropped = 0;
-        for s in slots {
-            let slot = &self.slots[s as usize];
-            if slot.live && slot.inode.dir == dir {
-                self.remove_slot(s);
-                dropped += 1;
-            }
+        while s != NIL {
+            let next = self.slots[s as usize].dir_next;
+            debug_assert_eq!(self.slots[s as usize].inode.dir, dir);
+            self.remove_slot(s);
+            dropped += 1;
+            s = next;
         }
         self.stats.invalidations += dropped as u64;
         dropped
@@ -328,15 +390,43 @@ mod tests {
     }
 
     #[test]
-    fn stale_by_dir_entries_are_harmless() {
-        // Insert, evict via capacity, then invalidate_dir must not
-        // double-free the stale slot reference.
+    fn evicted_slots_leave_dir_lists_clean() {
+        // Insert, evict via capacity, then invalidate_dir must find the
+        // directory empty (the intrusive list unsplices eagerly).
         let mut c = InternedCache::new(1);
         c.insert(inode(1, Some(0)));
-        c.insert(inode(2, Some(0))); // evicts (1,0); by_dir[1] has stale slot
+        c.insert(inode(2, Some(0))); // evicts (1,0)
         assert_eq!(c.invalidate_dir(DirId(1)), 0);
         assert!(c.peek(inode(2, Some(0))));
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn dir_list_survives_slot_reuse_across_dirs() {
+        // A freed slot reused by a *different* directory must not corrupt
+        // either directory's intrusive chain.
+        let mut c = InternedCache::new(3);
+        c.insert(inode(1, Some(0)));
+        c.insert(inode(1, Some(1)));
+        c.insert(inode(2, Some(0)));
+        assert!(c.invalidate(inode(1, Some(0)))); // frees a slot
+        c.insert(inode(3, Some(7))); // reuses it under dir 3
+        assert_eq!(c.invalidate_dir(DirId(1)), 1, "only (1,1) remains in dir 1");
+        assert_eq!(c.invalidate_dir(DirId(3)), 1);
+        assert_eq!(c.invalidate_dir(DirId(2)), 1);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn middle_of_dir_chain_removal() {
+        // Remove the middle element of a 3-slot dir chain, then the rest.
+        let mut c = InternedCache::new(8);
+        c.insert(inode(5, Some(0)));
+        c.insert(inode(5, Some(1)));
+        c.insert(inode(5, Some(2)));
+        assert!(c.invalidate(inode(5, Some(1))));
+        assert_eq!(c.invalidate_dir(DirId(5)), 2);
+        assert!(c.is_empty());
     }
 
     #[test]
@@ -357,5 +447,19 @@ mod tests {
         c.clear();
         assert!(c.is_empty());
         assert!(!c.peek(inode(1, Some(0))));
+    }
+
+    #[test]
+    fn siphash_configuration_equivalent() {
+        // The bench-baseline hasher configuration behaves identically.
+        let mut c: InternedCache<std::collections::hash_map::RandomState> =
+            InternedCache::with_hasher(2);
+        c.insert(inode(1, Some(0)));
+        c.insert(inode(1, Some(1)));
+        c.contains(inode(1, Some(0)));
+        c.insert(inode(2, Some(0)));
+        assert!(c.peek(inode(1, Some(0))));
+        assert!(!c.peek(inode(1, Some(1))));
+        assert_eq!(c.invalidate_dir(DirId(1)), 1);
     }
 }

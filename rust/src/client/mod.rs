@@ -9,5 +9,5 @@
 pub mod router;
 pub mod state;
 
-pub use router::Router;
+pub use router::{DepSet, Router};
 pub use state::ClientState;

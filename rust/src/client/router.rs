@@ -6,9 +6,77 @@
 //! (the hash of a directory never changes), built either by the pure-Rust
 //! fallback or by the compiled PJRT artifact (`runtime::RouteExecutor`) —
 //! the two are asserted bit-identical in `rust/tests/runtime_artifacts.rs`.
+//!
+//! Write-path dependency sets (the deployments whose caches a write must
+//! invalidate) are likewise **precomputed per directory at build time** as
+//! sorted, deduplicated inline [`DepSet`]s: `write_deployments` is a table
+//! lookup returning a stack value — no per-call `Vec`, no per-call
+//! sort/dedup.
 
-use crate::namespace::{InodeRef, Namespace};
+use crate::namespace::{DirId, InodeRef, Namespace};
 use crate::util::fnv;
+
+/// A small sorted, deduplicated set of deployment ids held inline
+/// (a write touches at most 3 deployments: target, parent, mv-dest).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DepSet {
+    deps: [u32; 3],
+    len: u8,
+}
+
+impl DepSet {
+    pub const fn empty() -> Self {
+        DepSet { deps: [0; 3], len: 0 }
+    }
+
+    /// Build from up to two deployments, sorted and deduplicated.
+    fn from_pair(a: u32, b: u32) -> Self {
+        let mut s = DepSet::empty();
+        s.insert(a);
+        s.insert(b);
+        s
+    }
+
+    /// Insert keeping sorted order; no-op if already present.
+    ///
+    /// Panics on overflow: the type's contract is that a write touches at
+    /// most 3 deployments (target, parent, mv-destination) — silently
+    /// dropping one would skip its INV and leave caches stale.
+    pub fn insert(&mut self, d: u32) {
+        let n = self.len as usize;
+        let slice = &self.deps[..n];
+        match slice.binary_search(&d) {
+            Ok(_) => {}
+            Err(pos) => {
+                assert!(n < 3, "DepSet overflow: write touches more than 3 deployments");
+                self.deps.copy_within(pos..n, pos + 1);
+                self.deps[pos] = d;
+                self.len += 1;
+            }
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u32] {
+        &self.deps[..self.len as usize]
+    }
+}
+
+impl std::ops::Deref for DepSet {
+    type Target = [u32];
+
+    fn deref(&self) -> &[u32] {
+        self.as_slice()
+    }
+}
+
+impl<'a> IntoIterator for &'a DepSet {
+    type Item = &'a u32;
+    type IntoIter = std::slice::Iter<'a, u32>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
 
 /// Precomputed routing table over a namespace.
 #[derive(Clone, Debug)]
@@ -16,6 +84,12 @@ pub struct Router {
     /// Deployment per directory id, for INodes *inside* that directory
     /// (files route by containing dir; dirs route by their parent).
     dep_of_dir: Vec<u32>,
+    /// Per-directory write dependency set for a *file* INode in the dir:
+    /// `{route(file in d), route(dir d)}`, sorted + deduplicated.
+    file_write_deps: Vec<DepSet>,
+    /// Per-directory write dependency set for the directory INode itself:
+    /// `{route(dir d), route(parent dir of d)}`.
+    dir_write_deps: Vec<DepSet>,
     n_deployments: u32,
 }
 
@@ -24,14 +98,34 @@ impl Router {
     pub fn build(ns: &Namespace, n_deployments: u32) -> Self {
         let dep_of_dir =
             ns.dirs.iter().map(|d| fnv::route(&d.path, n_deployments)).collect();
-        Router { dep_of_dir, n_deployments }
+        Self::with_table(ns, dep_of_dir, n_deployments)
     }
 
     /// Build from externally computed per-directory deployments (the PJRT
     /// batch executor path; see `runtime::RouteExecutor::route_namespace`).
-    pub fn from_table(dep_of_dir: Vec<u32>, n_deployments: u32) -> Self {
+    /// The namespace supplies the parent topology for the write-dep table.
+    pub fn with_table(ns: &Namespace, dep_of_dir: Vec<u32>, n_deployments: u32) -> Self {
         assert!(dep_of_dir.iter().all(|&d| d < n_deployments.max(1)));
-        Router { dep_of_dir, n_deployments }
+        assert_eq!(dep_of_dir.len(), ns.dirs.len());
+        // Precompute the sorted write-dependency sets (see module doc).
+        let parent_dep = |d: DirId| -> u32 {
+            let p = ns.dir(d).parent.unwrap_or(d);
+            dep_of_dir[p.0 as usize]
+        };
+        let file_write_deps = ns
+            .dirs
+            .iter()
+            .map(|d| DepSet::from_pair(dep_of_dir[d.id.0 as usize], parent_dep(d.id)))
+            .collect();
+        let dir_write_deps = ns
+            .dirs
+            .iter()
+            .map(|d| {
+                let p = ns.dir(d.id).parent.unwrap_or(d.id);
+                DepSet::from_pair(parent_dep(d.id), parent_dep(p))
+            })
+            .collect();
+        Router { dep_of_dir, file_write_deps, dir_write_deps, n_deployments }
     }
 
     pub fn n_deployments(&self) -> u32 {
@@ -61,17 +155,17 @@ impl Router {
 
     /// Deployments caching metadata affected by a write on `inode`:
     /// the INode itself plus its parent directory's INode (creates,
-    /// deletes and moves mutate the parent's listing too). Deduplicated.
-    pub fn write_deployments(&self, ns: &Namespace, inode: InodeRef) -> Vec<u32> {
-        let mut deps = vec![self.route(ns, inode)];
-        let parent_inode = match inode.file {
-            Some(_) => InodeRef::dir(inode.dir),
-            None => InodeRef::dir(ns.dir(inode.dir).parent.unwrap_or(inode.dir)),
+    /// deletes and moves mutate the parent's listing too).
+    ///
+    /// Precomputed at build time: this is a table lookup returning a
+    /// sorted, deduplicated inline set (callers may [`DepSet::insert`] a
+    /// mv-destination on top without allocating).
+    pub fn write_deployments(&self, ns: &Namespace, inode: InodeRef) -> DepSet {
+        let deps = match inode.file {
+            Some(_) => self.file_write_deps[inode.dir.0 as usize],
+            None => self.dir_write_deps[inode.dir.0 as usize],
         };
-        let p = self.route(ns, parent_inode);
-        if !deps.contains(&p) {
-            deps.push(p);
-        }
+        debug_assert!(deps.contains(&self.route(ns, inode)));
         deps
     }
 }
@@ -137,24 +231,73 @@ mod tests {
             assert!(deps.contains(&r.route(&ns, file)));
             assert!(deps.contains(&r.route(&ns, InodeRef::dir(d.id))));
             assert!(deps.len() <= 2);
-            // No duplicates.
-            let mut sorted = deps.clone();
-            sorted.sort_unstable();
-            sorted.dedup();
-            assert_eq!(sorted.len(), deps.len());
+            // Precomputed sets are sorted and deduplicated at build time.
+            assert!(deps.windows(2).all(|w| w[0] < w[1]));
         }
     }
 
     #[test]
-    fn from_table_validates() {
-        let t = vec![0, 1, 2, 3];
-        let r = Router::from_table(t, 4);
-        assert_eq!(r.n_deployments(), 4);
+    fn dir_write_deployments_cover_dir_and_grandparent_route() {
+        let ns = ns();
+        let r = Router::build(&ns, 16);
+        for d in ns.dirs.iter().skip(1).take(100) {
+            let dir = InodeRef::dir(d.id);
+            let deps = r.write_deployments(&ns, dir);
+            assert!(deps.contains(&r.route(&ns, dir)));
+            let parent = InodeRef::dir(d.parent.unwrap());
+            assert!(deps.contains(&r.route(&ns, parent)));
+            assert!(deps.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn depset_insert_sorted_dedup() {
+        let mut s = DepSet::empty();
+        s.insert(7);
+        s.insert(3);
+        s.insert(7);
+        assert_eq!(s.as_slice(), &[3, 7]);
+        s.insert(5);
+        assert_eq!(s.as_slice(), &[3, 5, 7]);
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(&5));
+    }
+
+    #[test]
+    fn with_table_matches_build() {
+        // The externally-supplied-table constructor (the PJRT path) must
+        // produce the same router — routes AND write-dep tables — as the
+        // pure-Rust build when given the same per-directory table.
+        let ns = ns();
+        let built = Router::build(&ns, 16);
+        let table: Vec<u32> =
+            ns.dirs.iter().map(|d| fnv::route(&d.path, 16)).collect();
+        let external = Router::with_table(&ns, table, 16);
+        assert_eq!(external.n_deployments(), 16);
+        for d in ns.dirs.iter().take(100) {
+            for inode in [InodeRef::file(d.id, 0), InodeRef::dir(d.id)] {
+                assert_eq!(external.route(&ns, inode), built.route(&ns, inode));
+                assert_eq!(
+                    external.write_deployments(&ns, inode).as_slice(),
+                    built.write_deployments(&ns, inode).as_slice()
+                );
+            }
+        }
     }
 
     #[test]
     #[should_panic]
-    fn from_table_rejects_out_of_range() {
-        Router::from_table(vec![0, 9], 4);
+    fn with_table_rejects_out_of_range() {
+        let ns = ns();
+        let mut table = vec![0u32; ns.dirs.len()];
+        table[1] = 9;
+        Router::with_table(&ns, table, 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_table_rejects_length_mismatch() {
+        let ns = ns();
+        Router::with_table(&ns, vec![0, 1, 2], 4);
     }
 }

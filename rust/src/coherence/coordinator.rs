@@ -6,10 +6,9 @@
 //! Coordinator backends; the observable behaviour is membership tracking
 //! with crash detection plus message fan-out, modeled here.
 
-use std::collections::HashMap;
-
 use crate::faas::InstanceId;
 use crate::sim::Time;
+use crate::util::fasthash::FastMap;
 
 /// Membership record for one NameNode instance.
 #[derive(Clone, Copy, Debug)]
@@ -21,9 +20,17 @@ struct Member {
 }
 
 /// ZooKeeper-like membership + notification service.
+///
+/// Membership is mirrored into per-deployment sorted rosters so the
+/// per-write INV fan-out ([`super::protocol::run_protocol`]) borrows a
+/// slice instead of filtering + sorting + allocating a `Vec` per call —
+/// the old `live_in_deployment` allocation was once-per-write on the
+/// submit hot path.
 #[derive(Clone, Debug)]
 pub struct Coordinator {
-    members: HashMap<InstanceId, Member>,
+    members: FastMap<InstanceId, Member>,
+    /// Deployment → sorted live instances (dense by deployment id).
+    rosters: Vec<Vec<InstanceId>>,
     /// Session/heartbeat timeout (µs): crash detection latency.
     session_timeout: Time,
     delivered_invs: u64,
@@ -33,17 +40,43 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(session_timeout: Time) -> Self {
         Coordinator {
-            members: HashMap::new(),
+            members: FastMap::default(),
+            rosters: Vec::new(),
             session_timeout,
             delivered_invs: 0,
             delivered_acks: 0,
         }
     }
 
+    fn roster_insert(&mut self, dep: u32, inst: InstanceId) {
+        if self.rosters.len() <= dep as usize {
+            self.rosters.resize_with(dep as usize + 1, Vec::new);
+        }
+        let r = &mut self.rosters[dep as usize];
+        if let Err(pos) = r.binary_search(&inst) {
+            r.insert(pos, inst);
+        }
+    }
+
+    fn roster_remove(&mut self, dep: u32, inst: InstanceId) {
+        if let Some(r) = self.rosters.get_mut(dep as usize) {
+            if let Ok(pos) = r.binary_search(&inst) {
+                r.remove(pos);
+            }
+        }
+    }
+
     /// Register a NameNode (ephemeral node creation).
     pub fn register(&mut self, inst: InstanceId, deployment: u32, now: Time) {
-        self.members
+        let prev = self
+            .members
             .insert(inst, Member { deployment, expires: now + self.session_timeout });
+        if let Some(prev) = prev {
+            if prev.deployment != deployment {
+                self.roster_remove(prev.deployment, inst);
+            }
+        }
+        self.roster_insert(deployment, inst);
     }
 
     /// Heartbeat (session renewal).
@@ -55,35 +88,32 @@ impl Coordinator {
 
     /// Explicit deregistration (clean shutdown / reclaim).
     pub fn deregister(&mut self, inst: InstanceId) {
-        self.members.remove(&inst);
+        if let Some(m) = self.members.remove(&inst) {
+            self.roster_remove(m.deployment, inst);
+        }
     }
 
     /// Crash detection: sessions past their expiry are dropped. Returns
-    /// the instances whose crash was detected at `now`.
+    /// the instances whose crash was detected at `now` (sorted by id).
     pub fn expire_sessions(&mut self, now: Time) -> Vec<InstanceId> {
-        let dead: Vec<InstanceId> = self
+        let mut dead: Vec<InstanceId> = self
             .members
             .iter()
             .filter(|(_, m)| m.expires <= now)
             .map(|(&id, _)| id)
             .collect();
+        dead.sort_unstable();
         for id in &dead {
-            self.members.remove(id);
+            self.deregister(*id);
         }
         dead
     }
 
     /// Live members of a deployment as the Coordinator currently sees it
-    /// (the ACK quorum for an INV to that deployment).
-    pub fn live_in_deployment(&self, dep: u32) -> Vec<InstanceId> {
-        let mut v: Vec<InstanceId> = self
-            .members
-            .iter()
-            .filter(|(_, m)| m.deployment == dep)
-            .map(|(&id, _)| id)
-            .collect();
-        v.sort_unstable();
-        v
+    /// (the ACK quorum for an INV to that deployment), sorted by id.
+    /// Borrowed from the roster — no per-call allocation.
+    pub fn live_in_deployment(&self, dep: u32) -> &[InstanceId] {
+        self.rosters.get(dep as usize).map(Vec::as_slice).unwrap_or(&[])
     }
 
     pub fn is_live(&self, inst: InstanceId) -> bool {

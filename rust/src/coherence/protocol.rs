@@ -15,10 +15,14 @@ use super::Coordinator;
 use crate::faas::InstanceId;
 
 /// What to invalidate at each NameNode.
-#[derive(Clone, Debug)]
-pub enum Invalidation {
+///
+/// `Exact` borrows the caller's row list (typically a stack array on the
+/// write path) — the protocol driver never clones or owns the rows, so a
+/// write op runs the full INV/ACK fan-out without a heap allocation.
+#[derive(Clone, Copy, Debug)]
+pub enum Invalidation<'a> {
     /// Single-INode protocol: the exact metadata rows on the write path.
-    Exact(Vec<InodeRef>),
+    Exact(&'a [InodeRef]),
     /// Subtree protocol (Appendix C): one *prefix* invalidation — every
     /// cached INode under this root drops via the trie structure.
     Prefix(DirId),
@@ -45,15 +49,20 @@ pub struct CoherenceOutcome {
 /// same closure but needs no network round trip. Instances that terminated
 /// (not live in the Coordinator) are skipped — ACKs are not required from
 /// NameNodes that terminate mid-protocol.
+///
+/// Allocation-free: deployments are deduplicated positionally (the list
+/// is at most a handful of entries) and each deployment's live roster is
+/// borrowed from the Coordinator. An instance belongs to exactly one
+/// deployment, so deployment-level dedup reaches every instance once.
 pub fn run_protocol(
     now: Time,
     leader: InstanceId,
     deployments: &[u32],
-    inv: &Invalidation,
+    inv: &Invalidation<'_>,
     coord: &mut Coordinator,
     net: &NetModel,
     rng: &mut Rng,
-    mut apply: impl FnMut(InstanceId, &Invalidation),
+    mut apply: impl FnMut(InstanceId, &Invalidation<'_>),
 ) -> CoherenceOutcome {
     // Step 1: subscribe to liveness/ACK notifications (one coordinator
     // round trip before the fan-out).
@@ -63,25 +72,24 @@ pub fn run_protocol(
     let mut acks = 0u32;
     let mut complete_at = subscribe_done;
 
-    let mut targets: Vec<InstanceId> = Vec::new();
-    for &d in deployments {
-        for inst in coord.live_in_deployment(d) {
-            if inst != leader && !targets.contains(&inst) {
-                targets.push(inst);
-            }
-        }
-    }
-
     // Leader's own cache invalidates locally, instantly.
     apply(leader, inv);
 
-    for inst in targets {
-        // INV out + cache invalidation + ACK back, all via the Coordinator.
-        let rtt = net.coord_hop(rng) + net.coord_hop(rng);
-        apply(inst, inv);
-        invs += 1;
-        acks += 1;
-        complete_at = complete_at.max(subscribe_done + rtt);
+    for (i, &d) in deployments.iter().enumerate() {
+        if deployments[..i].contains(&d) {
+            continue; // deployment listed twice
+        }
+        for &inst in coord.live_in_deployment(d) {
+            if inst == leader {
+                continue;
+            }
+            // INV out + cache invalidation + ACK back, via the Coordinator.
+            let rtt = net.coord_hop(rng) + net.coord_hop(rng);
+            apply(inst, inv);
+            invs += 1;
+            acks += 1;
+            complete_at = complete_at.max(subscribe_done + rtt);
+        }
     }
     coord.count_inv(invs as u64);
     coord.count_ack(acks as u64);
@@ -119,7 +127,7 @@ mod tests {
             1_000,
             InstanceId(0),
             &[0],
-            &Invalidation::Exact(vec![inode(5, 0)]),
+            &Invalidation::Exact(&[inode(5, 0)]),
             &mut coord,
             &net,
             &mut rng,
@@ -169,7 +177,7 @@ mod tests {
             0,
             InstanceId(0),
             &[0, 1, 2, 1], // deployment 1 listed twice
-            &Invalidation::Exact(vec![inode(1, 1)]),
+            &Invalidation::Exact(&[inode(1, 1)]),
             &mut coord,
             &net,
             &mut rng,
@@ -187,7 +195,7 @@ mod tests {
             500,
             InstanceId(0),
             &[4], // nobody lives there
-            &Invalidation::Exact(vec![inode(2, 0)]),
+            &Invalidation::Exact(&[inode(2, 0)]),
             &mut coord,
             &net,
             &mut rng,
@@ -207,7 +215,7 @@ mod tests {
             0,
             InstanceId(0),
             &[0],
-            &Invalidation::Exact(vec![inode(1, 0)]),
+            &Invalidation::Exact(&[inode(1, 0)]),
             &mut coord,
             &net,
             &mut rng,

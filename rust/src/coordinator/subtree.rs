@@ -76,11 +76,11 @@ impl SubtreePlan {
 /// Phase 3 distributes batches over `parallelism` executors, each issuing
 /// its batch transactions back-to-back, all contending on the store's
 /// finite transaction slots.
-pub fn execute(
+pub fn execute<S: std::hash::BuildHasher + Default>(
     now: Time,
     plan: &SubtreePlan,
     params: SubtreeParams,
-    store: &mut NdbStore,
+    store: &mut NdbStore<S>,
     rng: &mut Rng,
 ) -> Result<Time, crate::store::ndb::TxnError> {
     // Phase 1: subtree lock flag + active-table registration.

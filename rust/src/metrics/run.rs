@@ -152,6 +152,34 @@ impl RunMetrics {
     pub fn peak_namenodes(&self) -> u32 {
         self.seconds.iter().map(|s| s.namenodes).max().unwrap_or(0)
     }
+
+    /// Order-sensitive digest of the complete run state: counters, the
+    /// full per-second time series (bit-exact costs/vcpus), and all three
+    /// latency histograms. Two runs with the same seed must produce the
+    /// same fingerprint — the determinism regression contract
+    /// (`rust/tests/determinism.rs`).
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::Hasher;
+        let mut h = crate::util::fasthash::FnvHasher::default();
+        h.write_u64(self.completed_ops);
+        h.write_u64(self.failed_ops);
+        h.write_u64(self.resubmissions);
+        h.write_u64(self.first_completion_us);
+        h.write_u64(self.last_completion_us);
+        h.write_usize(self.seconds.len());
+        for s in &self.seconds {
+            h.write_u64(s.completed);
+            h.write_u64(s.target);
+            h.write_u32(s.namenodes);
+            h.write_u64(s.vcpus.to_bits());
+            h.write_u64(s.cost_usd.to_bits());
+            h.write_u64(s.cost_simplified_usd.to_bits());
+        }
+        h.write_u64(self.read_lat.fingerprint());
+        h.write_u64(self.write_lat.fingerprint());
+        h.write_u64(self.all_lat.fingerprint());
+        h.finish()
+    }
 }
 
 #[cfg(test)]

@@ -8,8 +8,10 @@
 //! to HTTP only when no connection exists anywhere on the VM.
 
 use std::collections::HashMap;
+use std::hash::BuildHasher;
 
 use crate::faas::InstanceId;
+use crate::util::fasthash::FnvBuildHasher;
 
 /// Client VM id.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -22,16 +24,38 @@ pub struct VmId(pub u32);
 /// VM to one server, and sharing makes the per-server distinction
 /// unobservable for routing (step 2 of Fig. 4 always finds a same-VM
 /// connection if any server has one).
-#[derive(Clone, Debug, Default)]
-pub struct ConnectionTable {
-    conns: HashMap<(VmId, u32), Vec<InstanceId>>,
+///
+/// The `(vm, deployment) → connections` map is consulted on every submit
+/// (the TCP fast-path check), so it is keyed by the deterministic FNV
+/// hasher; the hasher is generic for the bench baseline tier.
+#[derive(Clone, Debug)]
+pub struct ConnectionTable<S: BuildHasher = FnvBuildHasher> {
+    conns: HashMap<(VmId, u32), Vec<InstanceId>, S>,
     established: u64,
     dropped: u64,
 }
 
-impl ConnectionTable {
+impl Default for ConnectionTable<FnvBuildHasher> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ConnectionTable<FnvBuildHasher> {
+    /// FNV-hashed table (the production configuration).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_hasher()
+    }
+}
+
+impl<S: BuildHasher + Default> ConnectionTable<S> {
+    /// Table with an explicit hasher configuration.
+    pub fn with_hasher() -> Self {
+        ConnectionTable {
+            conns: HashMap::with_hasher(S::default()),
+            established: 0,
+            dropped: 0,
+        }
     }
 
     /// A NameNode instance established a connection back to `vm`.

@@ -1,121 +1,22 @@
 //! Typed batch executors over the compiled HLO artifacts.
+//!
+//! Two build configurations share one public API:
+//!
+//! * **`--features pjrt`** — the real executors: load HLO text through the
+//!   `xla` crate's PJRT CPU client and execute on the request path. This
+//!   requires the vendored `xla` + `anyhow` crates (see the note in
+//!   `Cargo.toml`).
+//! * **default (offline)** — a stub with identical signatures whose
+//!   constructors report the runtime as unavailable. Callers already
+//!   handle that path: the pure-Rust FNV fallback is bit-identical to the
+//!   kernels (asserted by `rust/tests/runtime_artifacts.rs` whenever the
+//!   real runtime *is* compiled in), so simulation results do not change.
 
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+pub use real::*;
 
-use anyhow::{Context, Result};
-
-use super::shapes;
-use crate::namespace::Namespace;
-
-/// One compiled artifact on the PJRT CPU client.
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Compiled {
-    fn load(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<Compiled> {
-        let path = dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-        Ok(Compiled { exe })
-    }
-}
-
-/// The full set of compiled artifacts sharing one PJRT client.
-pub struct ArtifactSet {
-    pub route: RouteExecutor,
-    pub latency: LatencyExecutor,
-    pub pareto: ParetoExecutor,
-}
-
-impl ArtifactSet {
-    /// Load all three artifacts from `dir`.
-    pub fn load(dir: &Path) -> Result<ArtifactSet> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(ArtifactSet {
-            route: RouteExecutor { c: Compiled::load(&client, dir, "route")? },
-            latency: LatencyExecutor { c: Compiled::load(&client, dir, "latency")? },
-            pareto: ParetoExecutor { c: Compiled::load(&client, dir, "pareto")? },
-        })
-    }
-
-    /// Load from the default artifacts location.
-    pub fn load_default() -> Result<ArtifactSet> {
-        let dir = super::artifacts_dir().context(
-            "artifacts directory not found — run `make artifacts` first",
-        )?;
-        Self::load(&dir)
-    }
-}
-
-/// L1 routing kernel: parent-path bytes → deployment ids.
-pub struct RouteExecutor {
-    c: Compiled,
-}
-
-impl RouteExecutor {
-    /// Route a batch of parent paths. Pads to the compiled batch size;
-    /// returns one `(deployment, hash)` per input path.
-    pub fn route_batch(&self, paths: &[&str], n_deployments: u32) -> Result<Vec<(u32, u32)>> {
-        let mut out = Vec::with_capacity(paths.len());
-        for chunk in paths.chunks(shapes::ROUTE_BATCH) {
-            out.extend(self.route_chunk(chunk, n_deployments)?);
-        }
-        Ok(out)
-    }
-
-    fn route_chunk(&self, chunk: &[&str], n_deployments: u32) -> Result<Vec<(u32, u32)>> {
-        let b = shapes::ROUTE_BATCH;
-        let w = shapes::PATH_WIDTH;
-        let mut bytes = vec![0u32; b * w];
-        let mut lens = vec![0i32; b];
-        for (i, p) in chunk.iter().enumerate() {
-            let raw = p.as_bytes();
-            let take = raw.len().min(w);
-            for (j, &x) in raw[..take].iter().enumerate() {
-                bytes[i * w + j] = x as u32;
-            }
-            lens[i] = take as i32;
-        }
-        let bytes_lit = xla::Literal::vec1(&bytes).reshape(&[b as i64, w as i64])?;
-        let lens_lit = xla::Literal::vec1(&lens);
-        let n_lit = xla::Literal::vec1(&[n_deployments.max(1) as i32]);
-        let result = self.c.exe.execute::<xla::Literal>(&[bytes_lit, lens_lit, n_lit])?[0][0]
-            .to_literal_sync()?;
-        let tuple = result.to_tuple()?;
-        let deps = tuple[0].to_vec::<i32>()?;
-        let hashes = tuple[1].to_vec::<u32>()?;
-        Ok(chunk
-            .iter()
-            .enumerate()
-            .map(|(i, _)| (deps[i] as u32, hashes[i]))
-            .collect())
-    }
-
-    /// Build a [`Router`](crate::client::Router) table for a whole
-    /// namespace through the compiled kernel — the production path for
-    /// router construction (the pure-Rust FNV is the fallback and is
-    /// asserted bit-identical in `rust/tests/runtime_artifacts.rs`).
-    pub fn route_namespace(
-        &self,
-        ns: &Namespace,
-        n_deployments: u32,
-    ) -> Result<crate::client::Router> {
-        let paths: Vec<&str> = ns.dirs.iter().map(|d| d.path.as_str()).collect();
-        let routed = self.route_batch(&paths, n_deployments)?;
-        let table = routed.into_iter().map(|(d, _)| d).collect();
-        Ok(crate::client::Router::from_table(table, n_deployments))
-    }
-}
-
-/// L1 latency-window kernel: batched straggler/thrash evaluation.
-pub struct LatencyExecutor {
-    c: Compiled,
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;
 
 /// Per-window output of the latency kernel.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -125,86 +26,302 @@ pub struct LatencyVerdict {
     pub thrash: bool,
 }
 
-impl LatencyExecutor {
-    /// Evaluate a batch of client windows. Each entry is `(window, count)`
-    /// in the kernel layout (front-padded, newest last, width
-    /// `LAT_WINDOW`); see `LatencyWindow::kernel_layout`.
-    pub fn evaluate(
-        &self,
-        windows: &[(Vec<f32>, i32)],
-        t_straggler: f32,
-        t_thrash: f32,
-    ) -> Result<Vec<LatencyVerdict>> {
-        let mut out = Vec::with_capacity(windows.len());
-        for chunk in windows.chunks(shapes::LAT_BATCH) {
-            out.extend(self.eval_chunk(chunk, t_straggler, t_thrash)?);
-        }
-        Ok(out)
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::path::Path;
+
+    use anyhow::{Context, Result};
+
+    use super::super::shapes;
+    use super::LatencyVerdict;
+    use crate::namespace::Namespace;
+
+    /// One compiled artifact on the PJRT CPU client.
+    struct Compiled {
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    fn eval_chunk(
-        &self,
-        chunk: &[(Vec<f32>, i32)],
-        ts: f32,
-        tt: f32,
-    ) -> Result<Vec<LatencyVerdict>> {
-        let b = shapes::LAT_BATCH;
-        let w = shapes::LAT_WINDOW;
-        let mut lat = vec![0f32; b * w];
-        let mut cnt = vec![0i32; b];
-        for (i, (win, c)) in chunk.iter().enumerate() {
-            anyhow::ensure!(win.len() == w, "window width {} != {w}", win.len());
-            lat[i * w..(i + 1) * w].copy_from_slice(win);
-            cnt[i] = *c;
+    impl Compiled {
+        fn load(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<Compiled> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            Ok(Compiled { exe })
         }
-        let lat_lit = xla::Literal::vec1(&lat).reshape(&[b as i64, w as i64])?;
-        let cnt_lit = xla::Literal::vec1(&cnt);
-        let ts_lit = xla::Literal::vec1(&[ts]);
-        let tt_lit = xla::Literal::vec1(&[tt]);
-        let result = self
-            .c
-            .exe
-            .execute::<xla::Literal>(&[lat_lit, cnt_lit, ts_lit, tt_lit])?[0][0]
-            .to_literal_sync()?;
-        let tuple = result.to_tuple()?;
-        let mean = tuple[0].to_vec::<f32>()?;
-        let strag = tuple[1].to_vec::<i32>()?;
-        let thrash = tuple[2].to_vec::<i32>()?;
-        Ok((0..chunk.len())
-            .map(|i| LatencyVerdict {
-                mean_ms: mean[i],
-                straggler: strag[i] != 0,
-                thrash: thrash[i] != 0,
+    }
+
+    /// The full set of compiled artifacts sharing one PJRT client.
+    pub struct ArtifactSet {
+        pub route: RouteExecutor,
+        pub latency: LatencyExecutor,
+        pub pareto: ParetoExecutor,
+    }
+
+    impl ArtifactSet {
+        /// Load all three artifacts from `dir`.
+        pub fn load(dir: &Path) -> Result<ArtifactSet> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(ArtifactSet {
+                route: RouteExecutor { c: Compiled::load(&client, dir, "route")? },
+                latency: LatencyExecutor { c: Compiled::load(&client, dir, "latency")? },
+                pareto: ParetoExecutor { c: Compiled::load(&client, dir, "pareto")? },
             })
-            .collect())
+        }
+
+        /// Load from the default artifacts location.
+        pub fn load_default() -> Result<ArtifactSet> {
+            let dir = super::super::artifacts_dir().context(
+                "artifacts directory not found — run `make artifacts` first",
+            )?;
+            Self::load(&dir)
+        }
     }
-}
 
-/// L2 Pareto schedule: uniforms → per-interval target throughput.
-pub struct ParetoExecutor {
-    c: Compiled,
-}
+    /// L1 routing kernel: parent-path bytes → deployment ids.
+    pub struct RouteExecutor {
+        c: Compiled,
+    }
 
-impl ParetoExecutor {
-    /// `delta_i = x_m * (1 - u_i)^(-1/alpha)` for each uniform `u_i`.
-    pub fn schedule(&self, uniforms: &[f32], x_m: f32, alpha: f32) -> Result<Vec<f32>> {
-        let mut out = Vec::with_capacity(uniforms.len());
-        for chunk in uniforms.chunks(shapes::PARETO_N) {
-            let mut u = vec![0f32; shapes::PARETO_N];
-            u[..chunk.len()].copy_from_slice(chunk);
-            let u_lit = xla::Literal::vec1(&u);
-            let xm_lit = xla::Literal::vec1(&[x_m]);
-            let a_lit = xla::Literal::vec1(&[alpha]);
-            let result = self.c.exe.execute::<xla::Literal>(&[u_lit, xm_lit, a_lit])?[0][0]
+    impl RouteExecutor {
+        /// Route a batch of parent paths. Pads to the compiled batch size;
+        /// returns one `(deployment, hash)` per input path.
+        pub fn route_batch(&self, paths: &[&str], n_deployments: u32) -> Result<Vec<(u32, u32)>> {
+            let mut out = Vec::with_capacity(paths.len());
+            for chunk in paths.chunks(shapes::ROUTE_BATCH) {
+                out.extend(self.route_chunk(chunk, n_deployments)?);
+            }
+            Ok(out)
+        }
+
+        fn route_chunk(&self, chunk: &[&str], n_deployments: u32) -> Result<Vec<(u32, u32)>> {
+            let b = shapes::ROUTE_BATCH;
+            let w = shapes::PATH_WIDTH;
+            let mut bytes = vec![0u32; b * w];
+            let mut lens = vec![0i32; b];
+            for (i, p) in chunk.iter().enumerate() {
+                let raw = p.as_bytes();
+                let take = raw.len().min(w);
+                for (j, &x) in raw[..take].iter().enumerate() {
+                    bytes[i * w + j] = x as u32;
+                }
+                lens[i] = take as i32;
+            }
+            let bytes_lit = xla::Literal::vec1(&bytes).reshape(&[b as i64, w as i64])?;
+            let lens_lit = xla::Literal::vec1(&lens);
+            let n_lit = xla::Literal::vec1(&[n_deployments.max(1) as i32]);
+            let result = self.c.exe.execute::<xla::Literal>(&[bytes_lit, lens_lit, n_lit])?[0][0]
                 .to_literal_sync()?;
             let tuple = result.to_tuple()?;
-            let vals = tuple[0].to_vec::<f32>()?;
-            out.extend_from_slice(&vals[..chunk.len()]);
+            let deps = tuple[0].to_vec::<i32>()?;
+            let hashes = tuple[1].to_vec::<u32>()?;
+            Ok(chunk
+                .iter()
+                .enumerate()
+                .map(|(i, _)| (deps[i] as u32, hashes[i]))
+                .collect())
         }
-        Ok(out)
+
+        /// Build a [`Router`](crate::client::Router) table for a whole
+        /// namespace through the compiled kernel — the production path for
+        /// router construction (the pure-Rust FNV is the fallback and is
+        /// asserted bit-identical in `rust/tests/runtime_artifacts.rs`).
+        pub fn route_namespace(
+            &self,
+            ns: &Namespace,
+            n_deployments: u32,
+        ) -> Result<crate::client::Router> {
+            let paths: Vec<&str> = ns.dirs.iter().map(|d| d.path.as_str()).collect();
+            let routed = self.route_batch(&paths, n_deployments)?;
+            let table = routed.into_iter().map(|(d, _)| d).collect();
+            Ok(crate::client::Router::with_table(ns, table, n_deployments))
+        }
     }
+
+    /// L1 latency-window kernel: batched straggler/thrash evaluation.
+    pub struct LatencyExecutor {
+        c: Compiled,
+    }
+
+    impl LatencyExecutor {
+        /// Evaluate a batch of client windows. Each entry is `(window, count)`
+        /// in the kernel layout (front-padded, newest last, width
+        /// `LAT_WINDOW`); see `LatencyWindow::kernel_layout`.
+        pub fn evaluate(
+            &self,
+            windows: &[(Vec<f32>, i32)],
+            t_straggler: f32,
+            t_thrash: f32,
+        ) -> Result<Vec<LatencyVerdict>> {
+            let mut out = Vec::with_capacity(windows.len());
+            for chunk in windows.chunks(shapes::LAT_BATCH) {
+                out.extend(self.eval_chunk(chunk, t_straggler, t_thrash)?);
+            }
+            Ok(out)
+        }
+
+        fn eval_chunk(
+            &self,
+            chunk: &[(Vec<f32>, i32)],
+            ts: f32,
+            tt: f32,
+        ) -> Result<Vec<LatencyVerdict>> {
+            let b = shapes::LAT_BATCH;
+            let w = shapes::LAT_WINDOW;
+            let mut lat = vec![0f32; b * w];
+            let mut cnt = vec![0i32; b];
+            for (i, (win, c)) in chunk.iter().enumerate() {
+                anyhow::ensure!(win.len() == w, "window width {} != {w}", win.len());
+                lat[i * w..(i + 1) * w].copy_from_slice(win);
+                cnt[i] = *c;
+            }
+            let lat_lit = xla::Literal::vec1(&lat).reshape(&[b as i64, w as i64])?;
+            let cnt_lit = xla::Literal::vec1(&cnt);
+            let ts_lit = xla::Literal::vec1(&[ts]);
+            let tt_lit = xla::Literal::vec1(&[tt]);
+            let result = self
+                .c
+                .exe
+                .execute::<xla::Literal>(&[lat_lit, cnt_lit, ts_lit, tt_lit])?[0][0]
+                .to_literal_sync()?;
+            let tuple = result.to_tuple()?;
+            let mean = tuple[0].to_vec::<f32>()?;
+            let strag = tuple[1].to_vec::<i32>()?;
+            let thrash = tuple[2].to_vec::<i32>()?;
+            Ok((0..chunk.len())
+                .map(|i| LatencyVerdict {
+                    mean_ms: mean[i],
+                    straggler: strag[i] != 0,
+                    thrash: thrash[i] != 0,
+                })
+                .collect())
+        }
+    }
+
+    /// L2 Pareto schedule: uniforms → per-interval target throughput.
+    pub struct ParetoExecutor {
+        c: Compiled,
+    }
+
+    impl ParetoExecutor {
+        /// `delta_i = x_m * (1 - u_i)^(-1/alpha)` for each uniform `u_i`.
+        pub fn schedule(&self, uniforms: &[f32], x_m: f32, alpha: f32) -> Result<Vec<f32>> {
+            let mut out = Vec::with_capacity(uniforms.len());
+            for chunk in uniforms.chunks(shapes::PARETO_N) {
+                let mut u = vec![0f32; shapes::PARETO_N];
+                u[..chunk.len()].copy_from_slice(chunk);
+                let u_lit = xla::Literal::vec1(&u);
+                let xm_lit = xla::Literal::vec1(&[x_m]);
+                let a_lit = xla::Literal::vec1(&[alpha]);
+                let result = self.c.exe.execute::<xla::Literal>(&[u_lit, xm_lit, a_lit])?[0][0]
+                    .to_literal_sync()?;
+                let tuple = result.to_tuple()?;
+                let vals = tuple[0].to_vec::<f32>()?;
+                out.extend_from_slice(&vals[..chunk.len()]);
+            }
+            Ok(out)
+        }
+    }
+
+    // NOTE: executor correctness against the pure-Rust fallbacks is covered
+    // by `rust/tests/runtime_artifacts.rs` (integration test — requires
+    // `make artifacts` to have produced the HLO files).
 }
 
-// NOTE: executor correctness against the pure-Rust fallbacks is covered by
-// `rust/tests/runtime_artifacts.rs` (integration test — requires
-// `make artifacts` to have produced the HLO files).
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::fmt;
+    use std::path::Path;
+
+    use super::LatencyVerdict;
+    use crate::namespace::Namespace;
+
+    /// Why the runtime is unavailable in this build.
+    #[derive(Clone, Debug)]
+    pub struct RuntimeUnavailable;
+
+    impl fmt::Display for RuntimeUnavailable {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(
+                f,
+                "PJRT runtime not compiled in — rebuild with `--features pjrt` \
+                 (needs the vendored xla crate) to execute AOT artifacts"
+            )
+        }
+    }
+
+    impl std::error::Error for RuntimeUnavailable {}
+
+    /// Stub result type mirroring `anyhow::Result` in the real build.
+    pub type Result<T> = std::result::Result<T, RuntimeUnavailable>;
+
+    /// The full set of compiled artifacts (stub: never constructible).
+    pub struct ArtifactSet {
+        pub route: RouteExecutor,
+        pub latency: LatencyExecutor,
+        pub pareto: ParetoExecutor,
+    }
+
+    impl ArtifactSet {
+        pub fn load(_dir: &Path) -> Result<ArtifactSet> {
+            Err(RuntimeUnavailable)
+        }
+
+        pub fn load_default() -> Result<ArtifactSet> {
+            Err(RuntimeUnavailable)
+        }
+    }
+
+    /// L1 routing kernel (stub).
+    pub struct RouteExecutor {
+        _private: (),
+    }
+
+    impl RouteExecutor {
+        pub fn route_batch(
+            &self,
+            _paths: &[&str],
+            _n_deployments: u32,
+        ) -> Result<Vec<(u32, u32)>> {
+            Err(RuntimeUnavailable)
+        }
+
+        pub fn route_namespace(
+            &self,
+            _ns: &Namespace,
+            _n_deployments: u32,
+        ) -> Result<crate::client::Router> {
+            Err(RuntimeUnavailable)
+        }
+    }
+
+    /// L1 latency-window kernel (stub).
+    pub struct LatencyExecutor {
+        _private: (),
+    }
+
+    impl LatencyExecutor {
+        pub fn evaluate(
+            &self,
+            _windows: &[(Vec<f32>, i32)],
+            _t_straggler: f32,
+            _t_thrash: f32,
+        ) -> Result<Vec<LatencyVerdict>> {
+            Err(RuntimeUnavailable)
+        }
+    }
+
+    /// L2 Pareto schedule (stub).
+    pub struct ParetoExecutor {
+        _private: (),
+    }
+
+    impl ParetoExecutor {
+        pub fn schedule(&self, _uniforms: &[f32], _x_m: f32, _alpha: f32) -> Result<Vec<f32>> {
+            Err(RuntimeUnavailable)
+        }
+    }
+}

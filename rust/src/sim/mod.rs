@@ -1,6 +1,8 @@
 //! Discrete-event simulation core.
 //!
-//! A deterministic virtual clock plus a binary-heap event queue. All of
+//! A deterministic virtual clock plus a calendar-queue event scheduler
+//! (see [`queue`] for the wheel design and its determinism invariant;
+//! the reference binary heap survives as [`queue::HeapQueue`]). All of
 //! the λFS evaluation figures are time series over 5-minute workloads, so
 //! every substrate (FaaS platform, NDB store, network, clients) advances
 //! on this clock rather than wall time. Determinism contract: two runs

@@ -16,11 +16,13 @@
 //!    path gains little from elasticity (paper §5.3.1).
 
 use std::collections::HashMap;
+use std::hash::BuildHasher;
 
 use crate::config::StoreConfig;
 use crate::namespace::{DirId, InodeRef};
 use crate::sim::station::Station;
 use crate::sim::{time, Time};
+use crate::util::fasthash::FnvBuildHasher;
 use crate::util::rng::Rng;
 
 /// A stored metadata row.
@@ -42,27 +44,40 @@ pub enum TxnError {
 }
 
 /// The NDB store model.
+///
+/// Row, lock, and subtree-lock tables are keyed by the deterministic FNV
+/// hasher ([`FnvBuildHasher`]) — they sit on the per-write hot path. The
+/// hasher is generic so the perf benches can measure the SipHash
+/// configuration as the baseline tier.
 #[derive(Clone, Debug)]
-pub struct NdbStore {
+pub struct NdbStore<S: BuildHasher = FnvBuildHasher> {
     cfg: StoreConfig,
-    rows: HashMap<InodeRef, Row>,
+    rows: HashMap<InodeRef, Row, S>,
     /// Row -> lock released at (exclusive write locks).
-    locks: HashMap<InodeRef, Time>,
+    locks: HashMap<InodeRef, Time, S>,
     /// Active subtree operations: root -> lock released at.
-    subtree_locks: HashMap<DirId, Time>,
+    subtree_locks: HashMap<DirId, Time, S>,
     station: Station,
     reads: u64,
     writes: u64,
 }
 
-impl NdbStore {
+impl NdbStore<FnvBuildHasher> {
+    /// FNV-hashed store (the production configuration).
     pub fn new(cfg: StoreConfig) -> Self {
+        Self::with_hasher(cfg)
+    }
+}
+
+impl<S: BuildHasher + Default> NdbStore<S> {
+    /// Store with an explicit hasher configuration.
+    pub fn with_hasher(cfg: StoreConfig) -> Self {
         let slots = (cfg.data_nodes * cfg.per_node_concurrency).max(1);
         NdbStore {
             cfg,
-            rows: HashMap::new(),
-            locks: HashMap::new(),
-            subtree_locks: HashMap::new(),
+            rows: HashMap::with_hasher(S::default()),
+            locks: HashMap::with_hasher(S::default()),
+            subtree_locks: HashMap::with_hasher(S::default()),
             station: Station::new(slots),
             reads: 0,
             writes: 0,

@@ -6,11 +6,10 @@
 //! Figure 16: cheap appends (mknod), memtable flushes, and read
 //! amplification that grows with the number of levels a getattr must probe.
 
-use std::collections::HashMap;
-
 use crate::namespace::InodeRef;
 use crate::sim::station::Station;
 use crate::sim::{time, Time};
+use crate::util::fasthash::FastMap;
 use crate::util::rng::Rng;
 
 /// SSTable store tuning.
@@ -51,9 +50,9 @@ impl Default for SsTableConfig {
 pub struct SsTableStore {
     cfg: SsTableConfig,
     /// Current memtable contents.
-    memtable: HashMap<InodeRef, u64>,
+    memtable: FastMap<InodeRef, u64>,
     /// Flushed tables: each is a set of keys (newest first).
-    tables: Vec<HashMap<InodeRef, u64>>,
+    tables: Vec<FastMap<InodeRef, u64>>,
     station: Station,
     version: u64,
     compactions: u64,
@@ -64,7 +63,7 @@ impl SsTableStore {
         let slots = cfg.io_slots;
         SsTableStore {
             cfg,
-            memtable: HashMap::new(),
+            memtable: FastMap::default(),
             tables: Vec::new(),
             station: Station::new(slots),
             version: 0,
@@ -95,7 +94,7 @@ impl SsTableStore {
             self.tables.insert(0, flushed);
             if self.tables.len() > self.cfg.fanout {
                 // Compact: merge all tables into one (newest wins).
-                let mut merged = HashMap::new();
+                let mut merged = FastMap::default();
                 for t in self.tables.drain(..).rev() {
                     merged.extend(t);
                 }

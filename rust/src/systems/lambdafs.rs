@@ -19,21 +19,29 @@ use crate::rpc::{ConnectionTable, NetModel};
 use crate::scaling::policy::RpcPath;
 use crate::sim::{time, Time};
 use crate::store::NdbStore;
+use crate::util::fasthash::FnvBuildHasher;
 use crate::util::rng::Rng;
+
+use std::hash::BuildHasher;
 
 use super::MdsSim;
 
 /// λFS under simulation.
-pub struct LambdaFs {
+///
+/// Generic over the hot-path map hasher `S` so the perf benches can run
+/// the identical system over SipHash (`RandomState`) maps as the e2e
+/// baseline tier; every production call site uses the FNV default via
+/// [`LambdaFs::new`].
+pub struct LambdaFs<S: BuildHasher = FnvBuildHasher> {
     pub cfg: SystemConfig,
     ns: Namespace,
     router: Router,
     platform: Platform,
     /// Per-instance metadata caches, indexed by `InstanceId` slab index.
-    caches: Vec<InternedCache>,
-    conns: ConnectionTable,
+    caches: Vec<InternedCache<S>>,
+    conns: ConnectionTable<S>,
     coord: Coordinator,
-    store: NdbStore,
+    store: NdbStore<S>,
     net: NetModel,
     svc: ServiceModel,
     clients: Vec<ClientState>,
@@ -49,12 +57,20 @@ pub struct LambdaFs {
     last_settle: Time,
 }
 
-impl LambdaFs {
+impl LambdaFs<FnvBuildHasher> {
+    /// FNV-hashed substrate (the production configuration).
     pub fn new(cfg: SystemConfig, ns: Namespace, n_clients: u32, n_vms: u32) -> Self {
+        Self::with_hasher(cfg, ns, n_clients, n_vms)
+    }
+}
+
+impl<S: BuildHasher + Default> LambdaFs<S> {
+    /// Construct with an explicit hasher configuration.
+    pub fn with_hasher(cfg: SystemConfig, ns: Namespace, n_clients: u32, n_vms: u32) -> Self {
         let rng = Rng::new(cfg.seed ^ 0x1a3b);
         let router = Router::build(&ns, cfg.lambda_fs.n_deployments);
         let platform = Platform::new(cfg.faas.clone(), cfg.lambda_fs.clone());
-        let store = NdbStore::new(cfg.store.clone());
+        let store = NdbStore::with_hasher(cfg.store.clone());
         let net = NetModel::new(cfg.net.clone());
         let svc = ServiceModel::new(cfg.op.clone());
         let coord = Coordinator::new(6 * time::SEC);
@@ -76,7 +92,7 @@ impl LambdaFs {
             router,
             platform,
             caches: Vec::new(),
-            conns: ConnectionTable::new(),
+            conns: ConnectionTable::with_hasher(),
             coord,
             store,
             net,
@@ -133,7 +149,7 @@ impl LambdaFs {
         &self.ns
     }
 
-    pub fn store(&self) -> &NdbStore {
+    pub fn store(&self) -> &NdbStore<S> {
         &self.store
     }
 
@@ -161,7 +177,7 @@ impl LambdaFs {
 
     fn register(&mut self, id: InstanceId) {
         while self.caches.len() <= id.0 as usize {
-            self.caches.push(InternedCache::new(self.cfg.lambda_fs.cache_capacity));
+            self.caches.push(InternedCache::with_hasher(self.cfg.lambda_fs.cache_capacity));
         }
         if !self.coord.is_live(id) {
             let dep = self.platform.instance(id).deployment;
@@ -229,28 +245,30 @@ impl LambdaFs {
         let cpu = self.svc.write_cpu(&mut rng);
         let (_, cpu_done) = self.platform.instance_mut(inst).cpu.submit(arrive, cpu);
 
-        // Rows touched: the target INode + its parent directory INode.
+        // Rows touched: the target INode + its parent directory INode
+        // (+ mv destination). Held inline — the write path allocates
+        // nothing.
         let parent_inode = match op.target.file {
             Some(_) => InodeRef::dir(op.target.dir),
             None => InodeRef::dir(self.ns.dir(op.target.dir).parent.unwrap_or(op.target.dir)),
         };
-        let mut rows = vec![op.target, parent_inode];
+        let mut row_buf = [op.target, parent_inode, op.target];
+        let mut n_rows = 2;
         if let Some(dest) = op.dest {
-            rows.push(InodeRef::dir(dest));
+            row_buf[2] = InodeRef::dir(dest);
+            n_rows = 3;
         }
+        let rows = &row_buf[..n_rows];
 
-        // Deployments caching affected metadata.
+        // Deployments caching affected metadata (precomputed sorted set).
         let mut deps = self.router.write_deployments(&self.ns, op.target);
         if let Some(dest) = op.dest {
-            let d = self.router.route_dir_contents(dest);
-            if !deps.contains(&d) {
-                deps.push(d);
-            }
+            deps.insert(self.router.route_dir_contents(dest));
         }
 
         // INV/ACK fan-out; every reached cache invalidates the rows.
         let caches = &mut self.caches;
-        let inv = Invalidation::Exact(rows.clone());
+        let inv = Invalidation::Exact(rows);
         let outcome = protocol::run_protocol(
             cpu_done,
             inst,
@@ -262,7 +280,7 @@ impl LambdaFs {
             |target, inv| {
                 if let Some(c) = caches.get_mut(target.0 as usize) {
                     if let Invalidation::Exact(rows) = inv {
-                        for r in rows {
+                        for r in *rows {
                             c.invalidate(*r);
                         }
                     }
@@ -272,7 +290,7 @@ impl LambdaFs {
 
         // Commit under exclusive row locks after all ACKs.
         let deletes = matches!(op.kind, OpKind::Delete);
-        let commit = self.store.write_txn(outcome.complete_at, &rows, deletes, &mut rng);
+        let commit = self.store.write_txn(outcome.complete_at, rows, deletes, &mut rng);
 
         // Leader caches the fresh metadata (it holds the latest version).
         if !deletes {
@@ -344,7 +362,7 @@ impl ForkFast for Rng {
     }
 }
 
-impl MdsSim for LambdaFs {
+impl<S: BuildHasher + Default> MdsSim for LambdaFs<S> {
     fn submit(&mut self, now: Time, client: u32, op: &Operation, rng: &mut Rng) -> Time {
         let c = client as usize % self.clients.len().max(1);
         let vm = self.clients[c].vm;

@@ -1,0 +1,224 @@
+//! Deterministic FNV-backed hashing for the simulation hot path.
+//!
+//! `std::collections::HashMap`'s default `RandomState` (SipHash-1-3) is
+//! DoS-resistant but costs tens of nanoseconds per small key — far too
+//! much for per-operation lookups in `InternedCache`, `NdbStore`, and
+//! `ConnectionTable`, whose keys are 4–12 byte interned ids produced by
+//! the simulator itself (no untrusted input, so hash-flooding is not a
+//! threat model here). [`FnvBuildHasher`] swaps in the crate's FNV-1a
+//! constants (`util::fnv`) in the style of `rustc`'s `FxHashMap`:
+//!
+//! * integer writes fold the value in one xor-multiply round each —
+//!   one multiply per `u32` key instead of a full SipHash permutation;
+//! * byte-slice writes run plain streaming FNV-1a;
+//! * a final avalanche (xor-shift-multiply) spreads entropy into the low
+//!   bits hashbrown uses for bucket selection, which raw FNV concentrates
+//!   in the high bits for short keys.
+//!
+//! Determinism: the hasher is keyless, so iteration order of a
+//! [`FastMap`] depends only on the insertion history — one source of
+//! run-to-run nondeterminism (`RandomState`'s per-process seeds) removed
+//! from the simulator wholesale.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasher, Hasher};
+
+use super::fnv;
+
+const FNV64_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV64_PRIME: u64 = 0x100000001b3;
+
+/// Streaming FNV-1a hasher with per-word folding for integer keys.
+#[derive(Clone, Debug)]
+pub struct FnvHasher {
+    state: u64,
+}
+
+impl Default for FnvHasher {
+    #[inline]
+    fn default() -> Self {
+        FnvHasher { state: FNV64_OFFSET }
+    }
+}
+
+impl FnvHasher {
+    /// One xor-multiply round over a 64-bit word.
+    #[inline]
+    fn fold(&mut self, word: u64) {
+        self.state = (self.state ^ word).wrapping_mul(FNV64_PRIME);
+    }
+}
+
+impl Hasher for FnvHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        // Finalizing avalanche (splitmix64 tail): FNV leaves short keys'
+        // entropy in the high bits; hashbrown indexes buckets by the low
+        // bits, so mix before handing the value over.
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.fold(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.fold(v as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, v: u16) {
+        self.fold(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.fold(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.fold(v);
+    }
+
+    #[inline]
+    fn write_u128(&mut self, v: u128) {
+        self.fold(v as u64);
+        self.fold((v >> 64) as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.fold(v as u64);
+    }
+
+    #[inline]
+    fn write_i8(&mut self, v: i8) {
+        self.fold(v as u8 as u64);
+    }
+
+    #[inline]
+    fn write_i32(&mut self, v: i32) {
+        self.fold(v as u32 as u64);
+    }
+
+    #[inline]
+    fn write_i64(&mut self, v: i64) {
+        self.fold(v as u64);
+    }
+}
+
+/// Keyless `BuildHasher` producing [`FnvHasher`]s — the `FxHashMap`-style
+/// replacement for `RandomState` on the simulation hot path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FnvBuildHasher;
+
+impl BuildHasher for FnvBuildHasher {
+    type Hasher = FnvHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> FnvHasher {
+        FnvHasher::default()
+    }
+}
+
+/// `HashMap` keyed by the deterministic FNV hasher.
+pub type FastMap<K, V> = HashMap<K, V, FnvBuildHasher>;
+
+/// `HashSet` keyed by the deterministic FNV hasher.
+pub type FastSet<K> = HashSet<K, FnvBuildHasher>;
+
+/// Hash one byte slice to completion (convenience for digests).
+#[inline]
+pub fn hash_bytes(data: &[u8]) -> u64 {
+    let mut h = FnvHasher::default();
+    h.write(data);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::{DirId, InodeRef};
+    use std::hash::Hash;
+
+    fn hash_one<T: Hash>(v: &T) -> u64 {
+        let mut h = FnvBuildHasher.build_hasher();
+        v.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn byte_stream_matches_fnv1a() {
+        // The streaming byte path is plain FNV-1a before the avalanche:
+        // two equal streams must agree however they are chunked.
+        let mut a = FnvHasher::default();
+        a.write(b"hello world");
+        let mut b = FnvHasher::default();
+        b.write(b"hello");
+        b.write(b" world");
+        assert_eq!(a.finish(), b.finish());
+        // And relate to the canonical fnv1a64 (pre-avalanche state).
+        assert_eq!(fnv::fnv1a64(b""), FNV64_OFFSET);
+    }
+
+    #[test]
+    fn deterministic_across_builders() {
+        let k = InodeRef::file(DirId(42), 7);
+        assert_eq!(hash_one(&k), hash_one(&k));
+        let m1: FastMap<u32, u32> = (0..100).map(|i| (i, i)).collect();
+        let m2: FastMap<u32, u32> = (0..100).map(|i| (i, i)).collect();
+        let k1: Vec<u32> = m1.keys().copied().collect();
+        let k2: Vec<u32> = m2.keys().copied().collect();
+        assert_eq!(k1, k2, "iteration order is reproducible");
+    }
+
+    #[test]
+    fn distinct_keys_distinct_hashes() {
+        let mut seen = std::collections::HashSet::new();
+        for d in 0..100u32 {
+            for f in [None, Some(0u32), Some(1)] {
+                let h = hash_one(&InodeRef { dir: DirId(d), file: f });
+                assert!(seen.insert(h), "collision at dir {d} file {f:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn low_bits_spread_for_sequential_keys() {
+        // hashbrown picks buckets from the low bits: sequential interned
+        // ids must not collapse onto a few residues.
+        let mut residues = std::collections::HashSet::new();
+        for i in 0..256u32 {
+            residues.insert(hash_one(&i) & 0xff);
+        }
+        assert!(residues.len() > 150, "only {} residues", residues.len());
+    }
+
+    #[test]
+    fn map_behaves_like_std() {
+        let mut m: FastMap<InodeRef, u64> = FastMap::default();
+        let k = InodeRef::dir(DirId(3));
+        assert_eq!(m.insert(k, 1), None);
+        assert_eq!(m.insert(k, 2), Some(1));
+        assert_eq!(m.get(&k), Some(&2));
+        assert_eq!(m.remove(&k), Some(2));
+        assert!(m.is_empty());
+        let mut s: FastSet<(u32, u32)> = FastSet::default();
+        assert!(s.insert((1, 2)));
+        assert!(!s.insert((1, 2)));
+    }
+
+    #[test]
+    fn hash_bytes_stable() {
+        assert_eq!(hash_bytes(b"abc"), hash_bytes(b"abc"));
+        assert_ne!(hash_bytes(b"abc"), hash_bytes(b"abd"));
+    }
+}

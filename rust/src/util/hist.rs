@@ -119,6 +119,25 @@ impl Histogram {
         self.quantile(0.99)
     }
 
+    /// Order-sensitive digest of the full histogram state (bucket counts,
+    /// count, sum/min/max bit patterns) — used by the determinism
+    /// regression tests to compare two runs exactly.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::fasthash::FnvHasher::default();
+        use std::hash::Hasher;
+        h.write_u64(self.count);
+        h.write_u64(self.sum.to_bits());
+        h.write_u64(self.min.to_bits());
+        h.write_u64(self.max.to_bits());
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c != 0 {
+                h.write_usize(i);
+                h.write_u64(c);
+            }
+        }
+        h.finish()
+    }
+
     /// CDF as `(value, cumulative_fraction)` points over non-empty buckets —
     /// directly plottable as the paper's Figure 10.
     pub fn cdf(&self) -> Vec<(f64, f64)> {

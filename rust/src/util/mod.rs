@@ -8,6 +8,8 @@
 //! * [`rng`] — SplitMix64-seeded xoshiro256** PRNG.
 //! * [`dist`] — Pareto / Zipf / exponential / normal samplers.
 //! * [`fnv`] — FNV-1a 32-bit, bit-identical to the L1 Pallas kernel.
+//! * [`fasthash`] — FNV-backed `FxHashMap`-style hasher for the hot-path
+//!   maps (deterministic, one multiply per interned-id key).
 //! * [`hist`] — latency histogram with exact-ish percentiles and CDFs.
 //! * [`minitoml`] — a TOML-subset parser for config files.
 //! * [`cli`] — flag/option argument parsing for the `lambdafs` binary.
@@ -16,6 +18,7 @@
 
 pub mod cli;
 pub mod dist;
+pub mod fasthash;
 pub mod fnv;
 pub mod hist;
 pub mod minitoml;

@@ -12,6 +12,10 @@ use lambda_fs::util::fnv;
 use lambda_fs::util::rng::Rng;
 
 fn artifacts() -> Option<ArtifactSet> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("SKIP: built without --features pjrt — PJRT runtime is stubbed");
+        return None;
+    }
     if artifacts_dir().is_none() {
         eprintln!("SKIP: artifacts/ not found — run `make artifacts`");
         return None;
