@@ -1,0 +1,175 @@
+//! Trace engine walkthrough: record a λFS Spotify run to a trace file,
+//! reload it, verify the bit-identical replay contract, then feed the
+//! same op stream — plus the two new synthetic workload classes — to the
+//! baselines for an apples-to-apples comparison.
+//!
+//! ```sh
+//! cargo run --release --example trace_replay
+//! LAMBDAFS_SCALE=0.05 cargo run --release --example trace_replay
+//! ```
+
+use lambda_fs::baselines::{CephFs, HopsFs};
+use lambda_fs::config::SystemConfig;
+use lambda_fs::figures::Scale;
+use lambda_fs::metrics::RunMetrics;
+use lambda_fs::namespace::generate::{HotspotSampler, NamespaceParams};
+use lambda_fs::systems::{driver, LambdaFs, MdsSim};
+use lambda_fs::trace::synth::{self, ContainerChurnSpec, MlPipelineSpec};
+use lambda_fs::trace::{replay_into, Recorder, Trace, TraceMeta};
+use lambda_fs::util::rng::Rng;
+use lambda_fs::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
+
+fn main() {
+    let scale = Scale::from_env();
+    let cfg = {
+        let mut c = SystemConfig::default();
+        c.faas.vcpu_limit = scale.vcpus(512.0);
+        c.lambda_fs.n_deployments =
+            ((16.0 * c.faas.vcpu_limit / 512.0) as u32).clamp(4, 16);
+        c
+    };
+    let seed = cfg.seed;
+
+    // 1. Record a Spotify run on λFS.
+    let params = NamespaceParams { n_dirs: scale.dirs(), files_per_dir: 64, ..Default::default() };
+    let n_clients = scale.clients(1024);
+    let meta = TraceMeta::new("spotify", seed, &params, n_clients, 8);
+    let ns = meta.regenerate();
+    let mut setup = Rng::new(seed ^ 0x5e7);
+    let sampler = HotspotSampler::new(&ns, 1.3, &mut setup);
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::pareto_bursty(
+            scale.duration_s().min(60),
+            15,
+            scale.x_t(25_000.0),
+            2.0,
+            7.0,
+            &mut setup,
+        ),
+        mix: OpMix::spotify(),
+        n_clients,
+        n_vms: 8,
+        namespace: params,
+        zipf_s: 1.3,
+    };
+    let mut rec =
+        Recorder::new(LambdaFs::new(cfg.clone(), ns.clone(), n_clients, 8), meta);
+    let mut rng = Rng::new(seed ^ 0xec0);
+    driver::run_open_loop(&mut rec, &spec, &ns, &sampler, &mut rng);
+    let (sys, tr) = rec.into_parts();
+    let m_record = sys.into_metrics();
+    println!(
+        "recorded: {} ops over {} s ({} events, {} bytes encoded)",
+        tr.n_ops(),
+        tr.duration_s(),
+        tr.events.len(),
+        tr.encode().len()
+    );
+
+    // 2. Round-trip through the on-disk format.
+    let path = "target/traces/spotify.trace";
+    tr.write_file(path).expect("write trace");
+    let tr = Trace::read_file(path).expect("read trace");
+    println!("round-tripped {path} (fingerprint {:#018x})", tr.fingerprint());
+
+    // 3. Bit-identical replay into a fresh same-seed λFS.
+    let m_replay = replay_into(
+        LambdaFs::new(cfg.clone(), tr.meta.regenerate(), tr.meta.n_clients, tr.meta.n_vms),
+        &tr,
+        &mut Rng::new(seed ^ 0xec0),
+    );
+    assert_eq!(
+        m_record.fingerprint(),
+        m_replay.fingerprint(),
+        "record→replay must be bit-identical"
+    );
+    println!("replay fingerprint matches the recording bit for bit");
+
+    // 4. The same op stream against the baselines.
+    let vcpus = scale.vcpus(512.0);
+    let run_baselines = |tr: &Trace| -> Vec<(&'static str, RunMetrics)> {
+        let lfs = replay_into(
+            LambdaFs::new(cfg.clone(), tr.meta.regenerate(), tr.meta.n_clients, tr.meta.n_vms),
+            tr,
+            &mut Rng::new(seed ^ 0x1f5),
+        );
+        let hops = replay_into(
+            HopsFs::new(cfg.clone(), tr.meta.regenerate(), vcpus, false),
+            tr,
+            &mut Rng::new(seed ^ 0x205),
+        );
+        let hc = replay_into(
+            HopsFs::new(cfg.clone(), tr.meta.regenerate(), vcpus, true),
+            tr,
+            &mut Rng::new(seed ^ 0x3c5),
+        );
+        let ceph = replay_into(
+            CephFs::new(cfg.clone(), tr.meta.regenerate(), vcpus),
+            tr,
+            &mut Rng::new(seed ^ 0x4e5),
+        );
+        vec![("lambdafs", lfs), ("hopsfs", hops), ("hopsfs+cache", hc), ("cephfs", ceph)]
+    };
+
+    // 5. New workload classes, synthesized straight to traces.
+    let ml_meta = TraceMeta::new(
+        "ml-pipeline",
+        seed,
+        &NamespaceParams {
+            n_dirs: (scale.dirs() / 4).max(256),
+            files_per_dir: 256,
+            max_depth: 3,
+            zipf_s: 1.1,
+        },
+        n_clients,
+        8,
+    );
+    let ml = synth::ml_pipeline(
+        &MlPipelineSpec::at_scale(scale.0),
+        &ml_meta.regenerate(),
+        ml_meta,
+        &mut Rng::new(seed ^ 0x777),
+    );
+    let churn_meta = TraceMeta::new(
+        "container-churn",
+        seed,
+        &NamespaceParams {
+            n_dirs: scale.dirs(),
+            files_per_dir: 8,
+            max_depth: 12,
+            zipf_s: 1.05,
+        },
+        n_clients,
+        8,
+    );
+    let churn = synth::container_churn(
+        &ContainerChurnSpec::at_scale(scale.0),
+        &churn_meta.regenerate(),
+        churn_meta,
+        &mut Rng::new(seed ^ 0x888),
+    );
+
+    for (name, tr) in [("spotify-replay", &tr), ("ml-pipeline", &ml), ("container-churn", &churn)]
+    {
+        println!(
+            "\n== {name}: {} ops over {} s ==",
+            tr.n_ops(),
+            tr.duration_s()
+        );
+        println!(
+            "{:<14} {:>10} {:>10} {:>9} {:>9} {:>9}",
+            "system", "avg_tput", "peak_tput", "p50_ms", "p99_ms", "cost_$"
+        );
+        for (sys, m) in run_baselines(tr) {
+            println!(
+                "{sys:<14} {:>10.0} {:>10.0} {:>9.2} {:>9.2} {:>9.4}",
+                m.avg_throughput(),
+                m.peak_throughput(),
+                m.all_lat.p50() / 1_000.0,
+                m.all_lat.p99() / 1_000.0,
+                m.total_cost()
+            );
+        }
+    }
+    println!("\ntrace_replay OK");
+}

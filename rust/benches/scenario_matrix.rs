@@ -1,0 +1,49 @@
+//! Bench: scenario-matrix smoke run.
+//!
+//! Runs the (system × workload × scale) trace matrix at smoke scale,
+//! writes `SCENARIOS.json` (override with `LAMBDAFS_SCENARIOS_OUT`), and
+//! pins the subsystem's two load-bearing invariants end to end:
+//!
+//! * the λFS replay of its own Spotify recording is bit-identical
+//!   (asserted inside `run_matrix`);
+//! * the whole matrix is deterministic — running it twice with one seed
+//!   yields identical cell fingerprints and identical JSON.
+
+use lambda_fs::config::SystemConfig;
+use lambda_fs::metrics::BenchTimer;
+use lambda_fs::trace::run_matrix;
+
+fn main() {
+    let seed = SystemConfig::default().seed;
+    let scale = std::env::var("LAMBDAFS_SCALE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(0.01)
+        .clamp(0.005, 1.0);
+
+    let (report, ms) = BenchTimer::time(|| run_matrix(scale, seed, true));
+    report.print();
+    println!(
+        "\nmatrix: {} cells over {} workloads in {:.0} ms",
+        report.cells.len(),
+        report.workloads.len(),
+        ms
+    );
+
+    let (again, ms2) = BenchTimer::time(|| run_matrix(scale, seed, true));
+    assert_eq!(report.cells.len(), again.cells.len());
+    for (a, b) in report.cells.iter().zip(&again.cells) {
+        assert_eq!(
+            a.fingerprint, b.fingerprint,
+            "matrix not deterministic: {}/{} diverged across runs",
+            a.system, a.workload
+        );
+    }
+    assert_eq!(report.render_json(), again.render_json());
+    println!("determinism re-run: identical fingerprints in {ms2:.0} ms");
+
+    let out =
+        std::env::var("LAMBDAFS_SCENARIOS_OUT").unwrap_or_else(|_| "SCENARIOS.json".into());
+    report.write_json(&out).expect("writing SCENARIOS.json");
+    println!("wrote {out}");
+}

@@ -125,6 +125,9 @@ pub struct Platform {
     cold: LogNormal,
     stats: PlatformStats,
     vcpus_in_use: f64,
+    /// Victim scratch for [`Platform::reclaim_idle`], reused across
+    /// simulated seconds so steady-state housekeeping allocates nothing.
+    reclaim_scratch: Vec<InstanceId>,
 }
 
 impl Platform {
@@ -139,6 +142,7 @@ impl Platform {
             by_deployment: vec![Vec::new(); n],
             stats: PlatformStats::default(),
             vcpus_in_use: 0.0,
+            reclaim_scratch: Vec::new(),
         }
     }
 
@@ -386,10 +390,13 @@ impl Platform {
     }
 
     /// Scale-in: reclaim instances idle longer than `idle_reclaim_ms`.
-    /// Returns reclaimed ids.
-    pub fn reclaim_idle(&mut self, now: Time) -> Vec<InstanceId> {
+    /// Returns the instances actually killed. The victim scan reuses an
+    /// internal scratch buffer, so per-second housekeeping performs no
+    /// allocation once the buffer has grown to fleet size.
+    pub fn reclaim_idle(&mut self, now: Time) -> &[InstanceId] {
         let deadline = time::from_ms(self.lcfg.idle_reclaim_ms);
-        let mut victims = Vec::new();
+        let mut victims = std::mem::take(&mut self.reclaim_scratch);
+        victims.clear();
         for inst in &self.instances {
             if inst.alive()
                 && inst.active == 0
@@ -399,16 +406,20 @@ impl Platform {
                 victims.push(inst.id);
             }
         }
-        for &v in &victims {
+        victims.retain(|&v| {
             // Keep at least one instance per deployment warm so TCP
             // clients retain a target (λFS relies on warm pools).
             let dep = self.instances[v.0 as usize].deployment as usize;
             if self.by_deployment[dep].len() > 1 {
                 self.kill(v, now, true);
                 self.stats.idle_reclaims += 1;
+                true
+            } else {
+                false
             }
-        }
-        victims
+        });
+        self.reclaim_scratch = victims;
+        &self.reclaim_scratch
     }
 
     /// Total actively-serving GB-seconds up to `now` (cost model input).

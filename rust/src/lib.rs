@@ -40,6 +40,7 @@ pub mod scaling;
 pub mod sim;
 pub mod store;
 pub mod systems;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -8,6 +8,9 @@
 //! * `figure`    — regenerate one paper figure/table by id
 //!   (`8a 8b 8c 9 10 11 12 13 14 15 16 t3` or `all`).
 //! * `subtree`   — run one subtree `mv` (Table 3 style) at a given size.
+//! * `scenario`  — run the (system × workload × scale) trace matrix —
+//!   replayed Spotify + ML-pipeline + container-churn across λFS and the
+//!   baselines — and write `SCENARIOS.json`.
 //! * `route`     — route paths through the compiled PJRT kernel
 //!   (demonstrates the AOT artifacts on the request path).
 //! * `selftest`  — quick end-to-end smoke run.
@@ -22,7 +25,7 @@ use lambda_fs::util::cli::Args;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(&raw, &["verbose", "help"]) {
+    let args = match Args::parse(&raw, &["verbose", "help", "smoke"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -48,6 +51,8 @@ fn usage() {
            micro    [--op read] [--clients 256]      single-op micro-benchmark\n\
            figure   <8a|8b|8c|9|10|11|12|13|14|15|16|t3|all>\n\
            subtree  [--files 262144]                 one subtree mv, λFS vs HopsFS\n\
+           scenario [--smoke] [--out SCENARIOS.json] trace matrix: replayed Spotify,\n\
+                                                     ML-pipeline, container-churn\n\
            route    <path> [path..] [--deployments 16]  PJRT routing kernel demo\n\
            selftest                                   quick smoke run",
         lambda_fs::VERSION
@@ -96,6 +101,17 @@ fn run(args: &Args) -> Result<(), String> {
         "subtree" => {
             let t = figures::table3::run(scale);
             t.report();
+            Ok(())
+        }
+        "scenario" => {
+            let cfg = load_config(args)?;
+            let smoke = args.flag("smoke");
+            let sc = if smoke { 0.01 } else { scale.0 };
+            let out = args.get_or("out", "SCENARIOS.json");
+            let report = lambda_fs::trace::run_matrix(sc, cfg.seed, smoke);
+            report.print();
+            report.write_json(&out)?;
+            println!("\nwrote {out}");
             Ok(())
         }
         "route" => {

@@ -74,7 +74,7 @@ impl OpKind {
 }
 
 /// A concrete metadata operation issued by a client.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Operation {
     pub kind: OpKind,
     /// Target INode (for subtree ops: the subtree root directory).

@@ -15,6 +15,12 @@ use super::MdsSim;
 /// uniformly across the second and round-robined over clients. A client
 /// whose previous op has not completed issues late — unfinished work
 /// "rolls over", exactly the hammer-bench behaviour the paper describes.
+///
+/// Op *sampling* draws from a stream forked off `rng`; only submit-side
+/// draws stay on `rng` itself. This keeps the submit stream free of
+/// sampling draws, which is what lets `trace::replay` reproduce a
+/// recorded run bit for bit without re-sampling (a replay performs the
+/// same fork and discards it).
 pub fn run_open_loop<S: MdsSim>(
     sys: &mut S,
     spec: &OpenLoopSpec,
@@ -22,6 +28,7 @@ pub fn run_open_loop<S: MdsSim>(
     sampler: &HotspotSampler,
     rng: &mut Rng,
 ) {
+    let mut op_rng = rng.fork("ops");
     let n_clients = spec.n_clients.max(1);
     let mut ready: Vec<Time> = vec![0; n_clients as usize];
     let mut next_client = 0u32;
@@ -44,7 +51,7 @@ pub fn run_open_loop<S: MdsSim>(
             next_client = (next_client + 1) % n_clients;
             // Roll over: the client issues as soon as it is free.
             let issue = slot.max(ready[c as usize]);
-            let op = spec.mix.sample_op(ns, sampler, rng);
+            let op = spec.mix.sample_op(ns, sampler, &mut op_rng);
             let done = sys.submit(issue, c, &op, rng);
             ready[c as usize] = done;
             let lat_ms = time::to_ms(done - issue);
@@ -70,6 +77,9 @@ pub fn run_closed_loop<S: MdsSim>(
 /// Closed-loop driver starting at virtual time `start` — used by
 /// multi-phase workloads (e.g. tree-test's writes-then-reads) so a later
 /// phase does not race the earlier phase's queued work.
+///
+/// Like [`run_open_loop`], op sampling draws from a forked stream so the
+/// submit stream is replayable (see `trace::replay`).
 pub fn run_closed_loop_from<S: MdsSim>(
     sys: &mut S,
     spec: &ClosedLoopSpec,
@@ -78,6 +88,7 @@ pub fn run_closed_loop_from<S: MdsSim>(
     start: Time,
     rng: &mut Rng,
 ) {
+    let mut op_rng = rng.fork("ops");
     let mut q: EventQueue<u32> = EventQueue::new();
     let mut remaining: Vec<u32> = vec![spec.ops_per_client; spec.n_clients as usize];
     // Stagger initial issues over the first 100 ms (clients do not start
@@ -94,7 +105,7 @@ pub fn run_closed_loop_from<S: MdsSim>(
             sys.on_second(last_second);
             last_second += 1;
         }
-        let op = sample_closed_op(spec.kind, ns, sampler, rng);
+        let op = sample_closed_op(spec.kind, ns, sampler, &mut op_rng);
         let done = sys.submit(now, c, &op, rng);
         let lat_ms = time::to_ms(done - now);
         sys.metrics_mut().record_at(done, lat_ms, op.kind.is_write());

@@ -439,15 +439,14 @@ impl<S: BuildHasher + Default> MdsSim for LambdaFs<S> {
         let now = (second as Time + 1) * time::SEC;
         self.platform.settle(now);
 
-        // Fault injection (Fig. 15).
+        // Fault injection (Fig. 15). The per-second scans below iterate
+        // disjoint fields directly and `reclaim_idle` reuses a scratch
+        // buffer, so steady-state housekeeping allocates nothing.
         let mut rng = self.rng.fork_fast();
-        let kills: Vec<u32> = self
-            .kill_schedule
-            .iter()
-            .filter(|&&(s, _)| s == second)
-            .map(|&(_, d)| d)
-            .collect();
-        for dep in kills {
+        for &(s, dep) in &self.kill_schedule {
+            if s != second {
+                continue;
+            }
             if let Some(&victim) = self.platform.deployment_instances(dep).first() {
                 self.platform.kill(victim, now, false);
                 self.conns.drop_instance(victim);
@@ -455,22 +454,16 @@ impl<S: BuildHasher + Default> MdsSim for LambdaFs<S> {
             }
         }
 
-        // Heartbeats + scale-in.
-        let live: Vec<InstanceId> = self
-            .platform
-            .instances
-            .iter()
-            .filter(|i| i.alive())
-            .map(|i| i.id)
-            .collect();
-        for id in &live {
-            self.coord.heartbeat(*id, now);
-        }
-        for victim in self.platform.reclaim_idle(now) {
-            if !self.platform.instance(victim).alive() {
-                self.conns.drop_instance(victim);
-                self.coord.deregister(victim);
+        // Heartbeats + scale-in (`reclaim_idle` returns only the
+        // instances it actually killed).
+        for inst in &self.platform.instances {
+            if inst.alive() {
+                self.coord.heartbeat(inst.id, now);
             }
+        }
+        for &victim in self.platform.reclaim_idle(now) {
+            self.conns.drop_instance(victim);
+            self.coord.deregister(victim);
         }
         self.coord.expire_sessions(now);
         let _ = rng.next_u64();

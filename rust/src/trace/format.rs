@@ -1,0 +1,447 @@
+//! The versioned, compact metadata-trace format.
+//!
+//! A trace is a self-describing recording of one workload execution: the
+//! namespace recipe it ran against (seed + generation parameters, so a
+//! replayer can regenerate the identical `Namespace`), the client-fleet
+//! shape, and the full event stream — every submitted operation plus the
+//! per-second housekeeping markers the drivers emit. The encoding is a
+//! zero-dependency binary layout: LEB128 varints throughout, operation
+//! timestamps zigzag-delta-coded against the previous operation (issue
+//! times are nearly monotone, so deltas stay small), one tag byte per
+//! event. A scaled Spotify run encodes to a handful of bytes per op.
+//!
+//! Layout (version 1):
+//!
+//! ```text
+//! magic "LFSTRACE" | varint version | meta | varint n_events | events…
+//! meta   = varint len + UTF-8 source | seed | n_dirs | files_per_dir
+//!          | max_depth | zipf_s (f64 bits) | n_clients | n_vms
+//! event  = tag 0x40: Second       -> varint second, varint target
+//!          tag 0x00..=0x3F: Op    -> kind = tag & 0x0F,
+//!                                    0x10 = has file, 0x20 = has dest;
+//!                                    zigzag dt, client, dir, [file], [dest]
+//! ```
+//!
+//! All integers are varints. Decoding validates the magic, version, op
+//! kinds, and that the payload is fully consumed.
+
+use crate::namespace::generate::{generate, NamespaceParams};
+use crate::namespace::{DirId, InodeRef, Namespace, OpKind, Operation};
+use crate::sim::Time;
+use crate::util::fnv::fnv1a64;
+use crate::util::rng::Rng;
+
+/// Format magic + current version.
+pub const MAGIC: &[u8; 8] = b"LFSTRACE";
+pub const VERSION: u64 = 1;
+
+/// Everything a replayer needs to reconstruct the run's environment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMeta {
+    /// Human-readable origin: `"spotify"`, `"ml-pipeline"`, …
+    pub source: String,
+    /// Seed the namespace was generated from (`Rng::new(seed)`).
+    pub seed: u64,
+    /// Namespace generation parameters (see [`NamespaceParams`]).
+    pub n_dirs: u32,
+    pub files_per_dir: u32,
+    pub max_depth: u32,
+    pub zipf_s: f64,
+    /// Client fleet shape (drives per-client rollover state on replay).
+    pub n_clients: u32,
+    pub n_vms: u32,
+}
+
+impl TraceMeta {
+    pub fn new(
+        source: &str,
+        seed: u64,
+        params: &NamespaceParams,
+        n_clients: u32,
+        n_vms: u32,
+    ) -> Self {
+        TraceMeta {
+            source: source.to_string(),
+            seed,
+            n_dirs: params.n_dirs as u32,
+            files_per_dir: params.files_per_dir,
+            max_depth: params.max_depth,
+            zipf_s: params.zipf_s,
+            n_clients,
+            n_vms,
+        }
+    }
+
+    pub fn namespace_params(&self) -> NamespaceParams {
+        NamespaceParams {
+            n_dirs: self.n_dirs as usize,
+            files_per_dir: self.files_per_dir,
+            max_depth: self.max_depth,
+            zipf_s: self.zipf_s,
+        }
+    }
+
+    /// Regenerate the namespace this trace was recorded against
+    /// (bit-identical: generation is deterministic in `seed`).
+    pub fn regenerate(&self) -> Namespace {
+        generate(&self.namespace_params(), &mut Rng::new(self.seed))
+    }
+}
+
+/// One entry in the event stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// A client-issued operation at virtual time `at` (µs).
+    Op { at: Time, client: u32, op: Operation },
+    /// A driver 1-second boundary: `on_second(second)` with the open-loop
+    /// target the generator aimed at that second (0 for closed loops).
+    Second { second: u32, target: u64 },
+}
+
+/// A recorded or synthesized workload trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub meta: TraceMeta,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Number of operation events (excludes second markers).
+    pub fn n_ops(&self) -> u64 {
+        self.events.iter().filter(|e| matches!(e, TraceEvent::Op { .. })).count() as u64
+    }
+
+    /// Number of second markers (= the run's scheduled duration).
+    pub fn duration_s(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, TraceEvent::Second { .. })).count()
+    }
+
+    /// Order-sensitive digest of the encoded trace.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a64(&self.encode())
+    }
+
+    /// Serialize to the versioned binary format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(16 + self.events.len() * 6);
+        buf.extend_from_slice(MAGIC);
+        put_varint(&mut buf, VERSION);
+        put_bytes(&mut buf, self.meta.source.as_bytes());
+        put_varint(&mut buf, self.meta.seed);
+        put_varint(&mut buf, self.meta.n_dirs as u64);
+        put_varint(&mut buf, self.meta.files_per_dir as u64);
+        put_varint(&mut buf, self.meta.max_depth as u64);
+        put_varint(&mut buf, self.meta.zipf_s.to_bits());
+        put_varint(&mut buf, self.meta.n_clients as u64);
+        put_varint(&mut buf, self.meta.n_vms as u64);
+        put_varint(&mut buf, self.events.len() as u64);
+        let mut prev_at: Time = 0;
+        for ev in &self.events {
+            match *ev {
+                TraceEvent::Second { second, target } => {
+                    buf.push(TAG_SECOND);
+                    put_varint(&mut buf, second as u64);
+                    put_varint(&mut buf, target);
+                }
+                TraceEvent::Op { at, client, op } => {
+                    let mut tag = kind_code(op.kind);
+                    if op.target.file.is_some() {
+                        tag |= FLAG_FILE;
+                    }
+                    if op.dest.is_some() {
+                        tag |= FLAG_DEST;
+                    }
+                    buf.push(tag);
+                    put_varint(&mut buf, zigzag(at as i64 - prev_at as i64));
+                    prev_at = at;
+                    put_varint(&mut buf, client as u64);
+                    put_varint(&mut buf, op.target.dir.0 as u64);
+                    if let Some(f) = op.target.file {
+                        put_varint(&mut buf, f as u64);
+                    }
+                    if let Some(d) = op.dest {
+                        put_varint(&mut buf, d.0 as u64);
+                    }
+                }
+            }
+        }
+        buf
+    }
+
+    /// Parse the binary format; validates magic, version, kinds, and that
+    /// the payload is fully consumed.
+    pub fn decode(bytes: &[u8]) -> Result<Trace, String> {
+        if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+            return Err("not a λFS trace (bad magic)".into());
+        }
+        let mut pos = MAGIC.len();
+        let version = get_varint(bytes, &mut pos)?;
+        if version != VERSION {
+            return Err(format!("unsupported trace version {version} (expected {VERSION})"));
+        }
+        let source = String::from_utf8(get_bytes(bytes, &mut pos)?.to_vec())
+            .map_err(|_| "trace source is not UTF-8".to_string())?;
+        let seed = get_varint(bytes, &mut pos)?;
+        let n_dirs = get_varint(bytes, &mut pos)? as u32;
+        let files_per_dir = get_varint(bytes, &mut pos)? as u32;
+        let max_depth = get_varint(bytes, &mut pos)? as u32;
+        let zipf_s = f64::from_bits(get_varint(bytes, &mut pos)?);
+        let n_clients = get_varint(bytes, &mut pos)? as u32;
+        let n_vms = get_varint(bytes, &mut pos)? as u32;
+        let n_events = get_varint(bytes, &mut pos)? as usize;
+        // Pre-size from the header, but never trust it past the payload
+        // (each event is ≥ 2 bytes, so this bounds a corrupt count).
+        let mut events = Vec::with_capacity(n_events.min(bytes.len() / 2 + 1));
+        let mut prev_at: Time = 0;
+        for _ in 0..n_events {
+            let tag = *bytes.get(pos).ok_or("truncated trace (missing event tag)")?;
+            pos += 1;
+            if tag == TAG_SECOND {
+                let second = get_varint(bytes, &mut pos)? as u32;
+                let target = get_varint(bytes, &mut pos)?;
+                events.push(TraceEvent::Second { second, target });
+                continue;
+            }
+            let kind = kind_from_code(tag & 0x0F)
+                .ok_or_else(|| format!("unknown op kind code {}", tag & 0x0F))?;
+            if tag & !(0x0F | FLAG_FILE | FLAG_DEST) != 0 {
+                return Err(format!("bad event tag {tag:#04x}"));
+            }
+            let dt = unzigzag(get_varint(bytes, &mut pos)?);
+            let at = (prev_at as i64).wrapping_add(dt) as Time;
+            prev_at = at;
+            let client = get_varint(bytes, &mut pos)? as u32;
+            let dir = DirId(get_varint(bytes, &mut pos)? as u32);
+            let file = if tag & FLAG_FILE != 0 {
+                Some(get_varint(bytes, &mut pos)? as u32)
+            } else {
+                None
+            };
+            let dest = if tag & FLAG_DEST != 0 {
+                Some(DirId(get_varint(bytes, &mut pos)? as u32))
+            } else {
+                None
+            };
+            let op = Operation { kind, target: InodeRef { dir, file }, dest };
+            events.push(TraceEvent::Op { at, client, op });
+        }
+        if pos != bytes.len() {
+            return Err(format!("{} trailing bytes after trace payload", bytes.len() - pos));
+        }
+        let meta = TraceMeta {
+            source,
+            seed,
+            n_dirs,
+            files_per_dir,
+            max_depth,
+            zipf_s,
+            n_clients,
+            n_vms,
+        };
+        Ok(Trace { meta, events })
+    }
+
+    pub fn write_file(&self, path: impl AsRef<std::path::Path>) -> Result<(), String> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.encode()).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn read_file(path: impl AsRef<std::path::Path>) -> Result<Trace, String> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Trace::decode(&bytes)
+    }
+}
+
+const TAG_SECOND: u8 = 0x40;
+const FLAG_FILE: u8 = 0x10;
+const FLAG_DEST: u8 = 0x20;
+
+fn kind_code(k: OpKind) -> u8 {
+    match k {
+        OpKind::Read => 0,
+        OpKind::Stat => 1,
+        OpKind::Ls => 2,
+        OpKind::Create => 3,
+        OpKind::Mv => 4,
+        OpKind::Delete => 5,
+        OpKind::Mkdir => 6,
+        OpKind::MvSubtree => 7,
+        OpKind::DeleteSubtree => 8,
+    }
+}
+
+fn kind_from_code(c: u8) -> Option<OpKind> {
+    Some(match c {
+        0 => OpKind::Read,
+        1 => OpKind::Stat,
+        2 => OpKind::Ls,
+        3 => OpKind::Create,
+        4 => OpKind::Mv,
+        5 => OpKind::Delete,
+        6 => OpKind::Mkdir,
+        7 => OpKind::MvSubtree,
+        8 => OpKind::DeleteSubtree,
+        _ => return None,
+    })
+}
+
+fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            return;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+fn get_varint(bytes: &[u8], pos: &mut usize) -> Result<u64, String> {
+    let mut out = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes.get(*pos).ok_or("truncated varint")?;
+        *pos += 1;
+        if shift == 63 && b > 1 {
+            return Err("varint overflows u64".into());
+        }
+        out |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(out);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err("varint too long".into());
+        }
+    }
+}
+
+fn put_bytes(buf: &mut Vec<u8>, bytes: &[u8]) {
+    put_varint(buf, bytes.len() as u64);
+    buf.extend_from_slice(bytes);
+}
+
+fn get_bytes<'a>(bytes: &'a [u8], pos: &mut usize) -> Result<&'a [u8], String> {
+    let len = get_varint(bytes, pos)? as usize;
+    let end = pos.checked_add(len).ok_or("bad byte-string length")?;
+    if end > bytes.len() {
+        return Err("truncated byte string".into());
+    }
+    let out = &bytes[*pos..end];
+    *pos = end;
+    Ok(out)
+}
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> TraceMeta {
+        TraceMeta::new("test", 7, &NamespaceParams::default(), 64, 2)
+    }
+
+    #[test]
+    fn varint_round_trip() {
+        let mut buf = Vec::new();
+        let values = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &v in &values {
+            put_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &values {
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn zigzag_round_trip() {
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN, 1_000_000, -1_000_000] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn empty_trace_round_trip() {
+        let t = Trace { meta: meta(), events: Vec::new() };
+        let back = Trace::decode(&t.encode()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(t.fingerprint(), back.fingerprint());
+    }
+
+    #[test]
+    fn event_round_trip_all_shapes() {
+        let t = Trace {
+            meta: meta(),
+            events: vec![
+                TraceEvent::Op {
+                    at: 10,
+                    client: 3,
+                    op: Operation::single(OpKind::Read, InodeRef::file(DirId(5), 9)),
+                },
+                TraceEvent::Op {
+                    at: 5, // non-monotone: zigzag delta
+                    client: 1,
+                    op: Operation::single(OpKind::Stat, InodeRef::dir(DirId(2))),
+                },
+                TraceEvent::Op {
+                    at: 2_000_000,
+                    client: 0,
+                    op: Operation::mv(InodeRef::file(DirId(7), 1), DirId(3)),
+                },
+                TraceEvent::Second { second: 0, target: 42 },
+                TraceEvent::Op {
+                    at: 2_500_000,
+                    client: 63,
+                    op: Operation::subtree(OpKind::MvSubtree, DirId(11), Some(DirId(0))),
+                },
+                TraceEvent::Second { second: 1, target: 0 },
+            ],
+        };
+        let bytes = t.encode();
+        let back = Trace::decode(&bytes).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(bytes, back.encode());
+        assert_eq!(t.n_ops(), 4);
+        assert_eq!(t.duration_s(), 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Trace::decode(b"not a trace").is_err());
+        let t = Trace { meta: meta(), events: vec![TraceEvent::Second { second: 0, target: 1 }] };
+        let mut bytes = t.encode();
+        bytes.push(0); // trailing byte
+        assert!(Trace::decode(&bytes).is_err());
+        bytes.pop();
+        bytes.pop(); // truncated
+        assert!(Trace::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn meta_regenerates_namespace() {
+        let m = meta();
+        let a = m.regenerate();
+        let b = m.regenerate();
+        assert_eq!(a.n_dirs(), m.n_dirs as usize);
+        for (x, y) in a.dirs.iter().zip(&b.dirs) {
+            assert_eq!(x.path, y.path);
+            assert_eq!(x.files, y.files);
+        }
+    }
+}

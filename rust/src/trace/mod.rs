@@ -1,0 +1,30 @@
+//! The trace engine: record/replay workloads + the scenario matrix.
+//!
+//! This subsystem decouples *what operations hit the metadata service*
+//! from *how they were produced*. Any run of the existing generators
+//! (Spotify, micro, subtree) can be captured to a compact, versioned
+//! trace ([`format`], [`record`]); any trace — recorded or synthetic —
+//! replays deterministically into λFS and every baseline through the
+//! open-loop rollover semantics the paper's hammer-bench uses
+//! ([`replay`]). New workload classes beyond the paper's figures are
+//! synthesized directly as traces ([`synth`]): a FalconFS-style
+//! ML-training pipeline and a CFS-style container-platform churn. The
+//! `lambdafs scenario` subcommand sweeps the (system × workload × scale)
+//! matrix and emits `SCENARIOS.json` ([`scenario`]).
+//!
+//! Determinism contract: recording a seeded run and replaying its trace
+//! into a fresh same-seed system reproduces `RunMetrics::fingerprint`
+//! bit for bit (pinned in `rust/tests/determinism.rs`). This hinges on
+//! the drivers sampling ops from a forked RNG stream — see
+//! [`replay`]'s module doc.
+
+pub mod format;
+pub mod record;
+pub mod replay;
+pub mod scenario;
+pub mod synth;
+
+pub use format::{Trace, TraceEvent, TraceMeta};
+pub use record::Recorder;
+pub use replay::{replay, replay_into};
+pub use scenario::{run_matrix, ScenarioReport};

@@ -1,0 +1,69 @@
+//! Recording any workload execution to a [`Trace`].
+//!
+//! [`Recorder`] wraps a system under test and implements [`MdsSim`]
+//! itself, so every existing driver (open-loop Spotify, closed-loop
+//! micro, subtree, tree-test) runs unchanged while the recorder captures
+//! the exact `(issue_time, client, op)` stream plus the per-second
+//! boundaries. Replaying the captured trace into a fresh instance of the
+//! same system with the same seed reproduces the run bit for bit (see
+//! [`super::replay`] for why, and `rust/tests/determinism.rs` for the
+//! pinned contract).
+//!
+//! Captured timestamps are the *realized* issue times (post-rollover),
+//! not the generator's intended slots — the submit interface does not
+//! expose the slot. See [`super::replay`]'s module doc for what this
+//! means for cross-system replays of a saturated recording.
+
+use crate::metrics::RunMetrics;
+use crate::namespace::Operation;
+use crate::sim::Time;
+use crate::systems::MdsSim;
+use crate::util::rng::Rng;
+
+use super::format::{Trace, TraceEvent, TraceMeta};
+
+/// A transparent [`MdsSim`] wrapper that captures the op stream.
+pub struct Recorder<S: MdsSim> {
+    inner: S,
+    meta: TraceMeta,
+    events: Vec<TraceEvent>,
+}
+
+impl<S: MdsSim> Recorder<S> {
+    pub fn new(inner: S, meta: TraceMeta) -> Self {
+        Recorder { inner, meta, events: Vec::new() }
+    }
+
+    /// Finish recording: the wrapped system plus the captured trace.
+    pub fn into_parts(self) -> (S, Trace) {
+        (self.inner, Trace { meta: self.meta, events: self.events })
+    }
+
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+}
+
+impl<S: MdsSim> MdsSim for Recorder<S> {
+    fn submit(&mut self, now: Time, client: u32, op: &Operation, rng: &mut Rng) -> Time {
+        self.events.push(TraceEvent::Op { at: now, client, op: *op });
+        self.inner.submit(now, client, op, rng)
+    }
+
+    fn on_second(&mut self, second: usize) {
+        // The open-loop driver stores its per-second target in the metrics
+        // before submitting that second's ops, so it is visible here; the
+        // closed-loop drivers leave it 0.
+        let target = self.inner.metrics_mut().second_mut(second).target;
+        self.events.push(TraceEvent::Second { second: second as u32, target });
+        self.inner.on_second(second);
+    }
+
+    fn metrics_mut(&mut self) -> &mut RunMetrics {
+        self.inner.metrics_mut()
+    }
+
+    fn into_metrics(self) -> RunMetrics {
+        self.inner.into_metrics()
+    }
+}

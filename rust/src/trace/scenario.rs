@@ -1,0 +1,389 @@
+//! The scenario matrix: (system × workload × scale) sweep over the trace
+//! engine, emitting a machine-readable `SCENARIOS.json`.
+//!
+//! Workloads per scale:
+//!
+//! * `spotify-replay` — a λFS Spotify run (§5.2 shape) captured through
+//!   [`Recorder`] and replayed into every system. The λFS cell doubles as
+//!   a live invariant: its replay fingerprint must equal the recording's
+//!   (asserted here, pinned in `rust/tests/determinism.rs`).
+//! * `ml-pipeline` — FalconFS-style epoch-structured training reads.
+//! * `container-churn` — CFS-style deep-path create/stat/unlink churn.
+//!
+//! Systems: λFS plus the HopsFS, HopsFS+Cache, and CephFS baselines, all
+//! fed the byte-identical op stream through [`super::replay`]. Every RNG
+//! is derived from the root seed, so one seed yields one `SCENARIOS.json`
+//! bit for bit.
+
+use std::fmt::Write as _;
+
+use crate::baselines::{CephFs, HopsFs};
+use crate::config::SystemConfig;
+use crate::figures::common::{print_table, Scale};
+use crate::metrics::RunMetrics;
+use crate::namespace::generate::{HotspotSampler, NamespaceParams};
+use crate::namespace::Namespace;
+use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::util::fnv::fnv1a64;
+use crate::util::rng::Rng;
+use crate::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
+
+use super::format::{Trace, TraceMeta};
+use super::record::Recorder;
+use super::replay::{replay, replay_into};
+use super::synth::{self, ContainerChurnSpec, MlPipelineSpec};
+
+/// JSON schema identifier (validated in CI).
+pub const SCHEMA: &str = "lambdafs-scenarios-v1";
+
+/// Systems every workload runs against.
+pub const SYSTEMS: [&str; 4] = ["lambdafs", "hopsfs", "hopsfs+cache", "cephfs"];
+
+/// One (system × workload × scale) outcome.
+#[derive(Clone, Debug)]
+pub struct ScenarioCell {
+    pub system: &'static str,
+    pub workload: &'static str,
+    pub scale: f64,
+    pub completed_ops: u64,
+    pub avg_throughput: f64,
+    pub peak_throughput: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub total_cost_usd: f64,
+    /// `RunMetrics::fingerprint` — the determinism contract per cell.
+    pub fingerprint: u64,
+}
+
+/// One workload trace's description.
+#[derive(Clone, Debug)]
+pub struct WorkloadInfo {
+    pub name: &'static str,
+    pub scale: f64,
+    pub source: String,
+    pub events: usize,
+    pub ops: u64,
+    pub duration_s: usize,
+    pub trace_fingerprint: u64,
+}
+
+/// The full matrix outcome.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub seed: u64,
+    pub smoke: bool,
+    pub workloads: Vec<WorkloadInfo>,
+    pub cells: Vec<ScenarioCell>,
+}
+
+/// Run the matrix. `smoke` runs one small scale; otherwise the base scale
+/// plus a 2× step give the scale axis.
+pub fn run_matrix(scale: f64, seed: u64, smoke: bool) -> ScenarioReport {
+    let mut scales = vec![scale];
+    if !smoke {
+        let step = (scale * 2.0).min(1.0);
+        if step > scale {
+            scales.push(step);
+        }
+    }
+    let mut workloads = Vec::new();
+    let mut cells = Vec::new();
+    for &sc in &scales {
+        for (name, trace, record_fp) in build_traces(sc, seed) {
+            eprintln!(
+                "  scenario: {name} @ scale {sc} ({} ops over {} s)",
+                trace.n_ops(),
+                trace.duration_s()
+            );
+            workloads.push(WorkloadInfo {
+                name,
+                scale: sc,
+                source: trace.meta.source.clone(),
+                events: trace.events.len(),
+                ops: trace.n_ops(),
+                duration_s: trace.duration_s(),
+                trace_fingerprint: trace.fingerprint(),
+            });
+            // One namespace per workload; cells clone it (regenerating
+            // from the meta per cell would dominate large-matrix time).
+            let ns = trace.meta.regenerate();
+            for system in SYSTEMS {
+                let m = run_cell(system, name, &trace, &ns, sc, seed);
+                if system == "lambdafs" {
+                    if let Some(expect) = record_fp {
+                        assert_eq!(
+                            m.fingerprint(),
+                            expect,
+                            "λFS replay of its own recording must be bit-identical"
+                        );
+                    }
+                }
+                cells.push(ScenarioCell {
+                    system,
+                    workload: name,
+                    scale: sc,
+                    completed_ops: m.completed_ops,
+                    avg_throughput: m.avg_throughput(),
+                    peak_throughput: m.peak_throughput(),
+                    p50_ms: m.all_lat.p50() / 1_000.0,
+                    p99_ms: m.all_lat.p99() / 1_000.0,
+                    total_cost_usd: m.total_cost(),
+                    fingerprint: m.fingerprint(),
+                });
+            }
+        }
+    }
+    ScenarioReport { seed, smoke, workloads, cells }
+}
+
+/// The workload axis at one scale. The Spotify entry carries its
+/// recording fingerprint for the replay-identity assertion.
+fn build_traces(sc: f64, seed: u64) -> Vec<(&'static str, Trace, Option<u64>)> {
+    let (spotify, record_fp) = spotify_trace(sc, seed);
+    vec![
+        ("spotify-replay", spotify, Some(record_fp)),
+        ("ml-pipeline", ml_trace(sc, seed), None),
+        ("container-churn", container_trace(sc, seed), None),
+    ]
+}
+
+/// Record a λFS Spotify run; returns the trace and the recording run's
+/// metrics fingerprint.
+fn spotify_trace(sc: f64, seed: u64) -> (Trace, u64) {
+    let scale = Scale(sc);
+    let params = NamespaceParams {
+        n_dirs: scale.dirs(),
+        files_per_dir: 64,
+        max_depth: 6,
+        zipf_s: 1.3,
+    };
+    let n_clients = scale.clients(1024);
+    let meta = TraceMeta::new("spotify", seed, &params, n_clients, 8);
+    let ns = meta.regenerate();
+    let mut setup = Rng::new(seed ^ fnv1a64(b"scenario/spotify-setup"));
+    let sampler = HotspotSampler::new(&ns, 1.3, &mut setup);
+    let spec = OpenLoopSpec {
+        // Matrix runs cap the Spotify slice at one minute — the trace, not
+        // the schedule, is what downstream cells consume.
+        schedule: ThroughputSchedule::pareto_bursty(
+            scale.duration_s().min(60),
+            15,
+            scale.x_t(25_000.0),
+            2.0,
+            7.0,
+            &mut setup,
+        ),
+        mix: OpMix::spotify(),
+        n_clients,
+        n_vms: 8,
+        namespace: params,
+        zipf_s: 1.3,
+    };
+    let sys = LambdaFs::new(scenario_cfg(sc, seed), ns.clone(), n_clients, 8);
+    let mut rec = Recorder::new(sys, meta);
+    // Same stream the λFS replay cell uses: the replay must reproduce
+    // this run bit for bit.
+    let mut rng = cell_rng(seed, "spotify-replay", "lambdafs");
+    driver::run_open_loop(&mut rec, &spec, &ns, &sampler, &mut rng);
+    let (sys, trace) = rec.into_parts();
+    (trace, sys.into_metrics().fingerprint())
+}
+
+/// FalconFS-style ML ingest namespace: few, huge, flat directories.
+fn ml_trace(sc: f64, seed: u64) -> Trace {
+    let scale = Scale(sc);
+    let params = NamespaceParams {
+        n_dirs: (scale.dirs() / 4).max(256),
+        files_per_dir: 256,
+        max_depth: 3,
+        zipf_s: 1.1,
+    };
+    let meta = TraceMeta::new("ml-pipeline", seed, &params, scale.clients(1024), 8);
+    let ns = meta.regenerate();
+    let mut rng = Rng::new(seed ^ fnv1a64(b"scenario/ml-pipeline-gen"));
+    synth::ml_pipeline(&MlPipelineSpec::at_scale(sc), &ns, meta, &mut rng)
+}
+
+/// CFS-style container namespace: deep, skinny hierarchy.
+fn container_trace(sc: f64, seed: u64) -> Trace {
+    let scale = Scale(sc);
+    let params = NamespaceParams {
+        n_dirs: scale.dirs(),
+        files_per_dir: 8,
+        max_depth: 12,
+        zipf_s: 1.05,
+    };
+    let meta = TraceMeta::new("container-churn", seed, &params, scale.clients(1024), 8);
+    let ns = meta.regenerate();
+    let mut rng = Rng::new(seed ^ fnv1a64(b"scenario/container-churn-gen"));
+    synth::container_churn(&ContainerChurnSpec::at_scale(sc), &ns, meta, &mut rng)
+}
+
+/// The shared config recipe (mirrors `figures::common::fixture`): the
+/// deployment count and store concurrency track the vCPU budget so
+/// scaled matrices keep the paper's compute : store ratio.
+fn scenario_cfg(sc: f64, seed: u64) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.seed = seed;
+    let v = Scale(sc).vcpus(512.0);
+    cfg.faas.vcpu_limit = v;
+    cfg.lambda_fs.n_deployments = ((16.0 * v / 512.0) as u32).clamp(4, 16);
+    cfg.store.per_node_concurrency = ((32.0 * v / 512.0) as u32).clamp(4, 32);
+    cfg
+}
+
+fn cell_rng(seed: u64, workload: &str, system: &str) -> Rng {
+    let label = format!("scenario/{workload}/{system}");
+    Rng::new(seed ^ fnv1a64(label.as_bytes()))
+}
+
+fn run_cell(
+    system: &'static str,
+    workload: &str,
+    trace: &Trace,
+    ns: &Namespace,
+    sc: f64,
+    seed: u64,
+) -> RunMetrics {
+    let cfg = scenario_cfg(sc, seed);
+    let ns = ns.clone();
+    let vcpus = Scale(sc).vcpus(512.0);
+    let mut rng = cell_rng(seed, workload, system);
+    match system {
+        "lambdafs" => {
+            let mut sys = LambdaFs::new(cfg, ns, trace.meta.n_clients, trace.meta.n_vms);
+            replay(&mut sys, trace, &mut rng);
+            sys.into_metrics()
+        }
+        "hopsfs" => replay_into(HopsFs::new(cfg, ns, vcpus, false), trace, &mut rng),
+        "hopsfs+cache" => replay_into(HopsFs::new(cfg, ns, vcpus, true), trace, &mut rng),
+        "cephfs" => replay_into(CephFs::new(cfg, ns, vcpus), trace, &mut rng),
+        other => panic!("unknown system {other:?}"),
+    }
+}
+
+impl ScenarioReport {
+    /// Look up one cell.
+    pub fn cell(&self, system: &str, workload: &str, scale: f64) -> Option<&ScenarioCell> {
+        self.cells.iter().find(|c| {
+            c.system == system && c.workload == workload && (c.scale - scale).abs() < 1e-12
+        })
+    }
+
+    /// Human-readable matrix table.
+    pub fn print(&self) {
+        let rows: Vec<Vec<String>> = self
+            .cells
+            .iter()
+            .map(|c| {
+                vec![
+                    c.workload.to_string(),
+                    format!("{:.3}", c.scale),
+                    c.system.to_string(),
+                    c.completed_ops.to_string(),
+                    format!("{:.0}", c.avg_throughput),
+                    format!("{:.0}", c.peak_throughput),
+                    format!("{:.2}", c.p50_ms),
+                    format!("{:.2}", c.p99_ms),
+                    format!("{:.4}", c.total_cost_usd),
+                    format!("{:08x}", c.fingerprint >> 32),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Scenario matrix (seed {})", self.seed),
+            &[
+                "workload", "scale", "system", "ops", "avg_tput", "peak_tput", "p50_ms",
+                "p99_ms", "cost_$", "fp",
+            ],
+            &rows,
+        );
+    }
+
+    /// Hand-rolled JSON (serde is not in the offline vendored set).
+    pub fn render_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        let _ = writeln!(s, "  \"schema\": \"{SCHEMA}\",");
+        let _ = writeln!(s, "  \"seed\": {},", self.seed);
+        let _ = writeln!(s, "  \"smoke\": {},", self.smoke);
+        s.push_str("  \"units\": {\"throughput\": \"ops_per_sim_second\", \"latency\": \"ms\", \"cost\": \"usd\"},\n");
+        s.push_str("  \"systems\": [");
+        for (i, sys) in SYSTEMS.iter().enumerate() {
+            let _ = write!(s, "{}\"{sys}\"", if i > 0 { ", " } else { "" });
+        }
+        s.push_str("],\n");
+        s.push_str("  \"workloads\": [\n");
+        for (i, w) in self.workloads.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"name\": \"{}\", \"scale\": {}, \"source\": \"{}\", \"events\": {}, \
+                 \"ops\": {}, \"duration_s\": {}, \"trace_fingerprint\": \"{:#018x}\"}}",
+                w.name, w.scale, w.source, w.events, w.ops, w.duration_s, w.trace_fingerprint
+            );
+            s.push_str(if i + 1 < self.workloads.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"cells\": [\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"system\": \"{}\", \"workload\": \"{}\", \"scale\": {}, \
+                 \"completed_ops\": {}, \"avg_throughput\": {:.3}, \"peak_throughput\": {:.3}, \
+                 \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"total_cost_usd\": {:.6}, \
+                 \"fingerprint\": \"{:#018x}\"}}",
+                c.system,
+                c.workload,
+                c.scale,
+                c.completed_ops,
+                c.avg_throughput,
+                c.peak_throughput,
+                c.p50_ms,
+                c.p99_ms,
+                c.total_cost_usd,
+                c.fingerprint
+            );
+            s.push_str(if i + 1 < self.cells.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n");
+        s.push_str("}\n");
+        s
+    }
+
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> Result<(), String> {
+        let path = path.as_ref();
+        std::fs::write(path, self.render_json()).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One tiny end-to-end matrix: every cell populated, the λFS
+    /// recording/replay identity holds (asserted inside `run_matrix`),
+    /// and the whole report is deterministic in the seed.
+    #[test]
+    fn smoke_matrix_deterministic() {
+        let a = run_matrix(0.005, 7, true);
+        assert_eq!(a.cells.len(), SYSTEMS.len() * 3);
+        assert_eq!(a.workloads.len(), 3);
+        for c in &a.cells {
+            assert!(c.completed_ops > 0, "{}/{} empty", c.system, c.workload);
+            assert!(c.p50_ms > 0.0 && c.p99_ms >= c.p50_ms);
+        }
+        let b = run_matrix(0.005, 7, true);
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(x.fingerprint, y.fingerprint, "{}/{}", x.system, x.workload);
+        }
+        assert_eq!(a.render_json(), b.render_json());
+        // The JSON mentions every system and workload.
+        let json = a.render_json();
+        for sys in SYSTEMS {
+            assert!(json.contains(sys));
+        }
+        for w in ["spotify-replay", "ml-pipeline", "container-churn"] {
+            assert!(json.contains(w));
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! Synthetic trace generators for workload classes beyond the paper's
+//! figures.
+//!
+//! * [`ml_pipeline`] — a FalconFS-style (arXiv 2507.10367) deep-learning
+//!   training pipeline: epoch-structured small-file reads over a set of
+//!   hot shared dataset directories (each epoch re-reads the whole
+//!   dataset in a fresh shuffled order), directory listings at epoch
+//!   start, and periodic checkpoint-write bursts into a dedicated
+//!   checkpoint directory.
+//! * [`container_churn`] — a CFS-style (arXiv 1911.03001) container
+//!   platform: create/stat/unlink churn over deep path hierarchies with
+//!   Pareto-bursty arrivals (container cohort launches).
+//!
+//! Generators emit a [`Trace`] directly — op slots spread uniformly
+//! within each second, clients round-robined, a `Second` marker per
+//! second carrying the open-loop target — so the output runs through the
+//! same [`super::replay`] machinery as recorded traces, against λFS and
+//! every baseline alike. Generation is deterministic in the passed RNG.
+
+use crate::namespace::{DirId, InodeRef, Namespace, OpKind, Operation};
+use crate::sim::{time, Time};
+use crate::util::rng::Rng;
+use crate::workload::ThroughputSchedule;
+
+use super::format::{Trace, TraceEvent, TraceMeta};
+
+/// ML-training-pipeline shape (FalconFS-style).
+#[derive(Clone, Debug)]
+pub struct MlPipelineSpec {
+    /// Full passes over the dataset.
+    pub epochs: u32,
+    /// Sustained sample-read rate (small-file reads/sec).
+    pub reads_per_sec: f64,
+    /// Hot shared directories forming the dataset (the most populated
+    /// directories of the namespace).
+    pub dataset_dirs: usize,
+    /// Upper bound on dataset items (keeps scaled runs bounded; the full
+    /// namespace can be far larger than a scaled matrix should read).
+    pub dataset_cap: usize,
+    /// One `stat` on the containing directory every this many reads
+    /// (existence/latency checks data loaders issue).
+    pub stat_every: u32,
+    /// Seconds between checkpoint bursts.
+    pub checkpoint_every_s: usize,
+    /// `create`s per checkpoint burst (shards of one model snapshot).
+    pub checkpoint_writes: u32,
+}
+
+impl MlPipelineSpec {
+    /// Scaled shape: `scale = 1.0` ≈ a 40k reads/s training fleet.
+    pub fn at_scale(scale: f64) -> Self {
+        MlPipelineSpec {
+            epochs: 3,
+            reads_per_sec: (40_000.0 * scale).max(400.0),
+            dataset_dirs: 16,
+            dataset_cap: ((200_000.0 * scale) as usize).max(2_000),
+            stat_every: 32,
+            checkpoint_every_s: 10,
+            checkpoint_writes: ((2_000.0 * scale) as u32).max(50),
+        }
+    }
+}
+
+/// Generate an ML-pipeline trace over `ns`. `meta` describes `ns` (the
+/// replayer regenerates the namespace from it).
+pub fn ml_pipeline(spec: &MlPipelineSpec, ns: &Namespace, meta: TraceMeta, rng: &mut Rng) -> Trace {
+    // Dataset = every file of the most-populated directories: the "huge
+    // flat shared dirs" an ML ingest pipeline hammers.
+    let mut ranked: Vec<DirId> = (0..ns.n_dirs() as u32).map(DirId).collect();
+    ranked.sort_by_key(|&d| (std::cmp::Reverse(ns.dir(d).files), d.0));
+    let dataset_dirs: Vec<DirId> = ranked
+        .iter()
+        .copied()
+        .filter(|&d| ns.dir(d).files > 0)
+        .take(spec.dataset_dirs.max(1))
+        .collect();
+    let mut dataset: Vec<InodeRef> = Vec::new();
+    for &d in &dataset_dirs {
+        for f in 0..ns.dir(d).files {
+            dataset.push(InodeRef::file(d, f));
+        }
+    }
+    dataset.truncate(spec.dataset_cap.max(1));
+    assert!(!dataset.is_empty(), "namespace has no files for an ML dataset");
+    // Checkpoints land in the least-populated directory outside the
+    // dataset (a dedicated output dir).
+    let ckpt_dir = ranked.last().copied().unwrap_or(DirId(0));
+
+    let rps = spec.reads_per_sec.max(1.0);
+    let secs_per_epoch = ((dataset.len() as f64 / rps).ceil() as usize).max(1);
+    let duration = secs_per_epoch * spec.epochs.max(1) as usize;
+
+    let mut ops_by_second: Vec<Vec<Operation>> = vec![Vec::new(); duration];
+    let mut reads_since_stat = 0u32;
+    for epoch in 0..spec.epochs.max(1) as usize {
+        let mut order = dataset.clone();
+        rng.shuffle(&mut order);
+        let base_s = epoch * secs_per_epoch;
+        // Epoch prologue: the loader lists every dataset directory.
+        for &d in &dataset_dirs {
+            ops_by_second[base_s].push(Operation::single(OpKind::Ls, InodeRef::dir(d)));
+        }
+        let mut carry = 0.0f64;
+        let mut next = 0usize;
+        for s in 0..secs_per_epoch {
+            let want = rps + carry;
+            let n = (want.floor() as usize).min(order.len() - next);
+            carry = want - want.floor();
+            let sec = base_s + s;
+            for &item in &order[next..next + n] {
+                ops_by_second[sec].push(Operation::single(OpKind::Read, item));
+                reads_since_stat += 1;
+                if reads_since_stat >= spec.stat_every.max(1) {
+                    reads_since_stat = 0;
+                    ops_by_second[sec]
+                        .push(Operation::single(OpKind::Stat, InodeRef::dir(item.dir)));
+                }
+            }
+            next += n;
+        }
+        // Any shuffle remainder lands in the epoch's last second.
+        let last = base_s + secs_per_epoch - 1;
+        for &item in &order[next..] {
+            ops_by_second[last].push(Operation::single(OpKind::Read, item));
+        }
+    }
+    // Periodic checkpoint bursts (skipping t=0: training warms up first).
+    let fresh_base = ns.dir(ckpt_dir).files;
+    let mut ckpt_seq = 0u32;
+    for s in (0..duration).step_by(spec.checkpoint_every_s.max(1)) {
+        if s == 0 {
+            continue;
+        }
+        for _ in 0..spec.checkpoint_writes {
+            ckpt_seq = ckpt_seq.wrapping_add(1);
+            ops_by_second[s].push(Operation::single(
+                OpKind::Create,
+                InodeRef::file(ckpt_dir, fresh_base + ckpt_seq),
+            ));
+        }
+    }
+
+    assemble(meta, ops_by_second)
+}
+
+/// Container-platform churn shape (CFS-style).
+#[derive(Clone, Debug)]
+pub struct ContainerChurnSpec {
+    pub duration_s: usize,
+    /// Base lifecycle-op rate; bursts multiply it.
+    pub base_ops_per_sec: f64,
+    /// Pareto redraw interval (cohort launch cadence).
+    pub burst_interval_s: usize,
+    /// Pareto shape (heavier tail than Spotify's 2.0 — container
+    /// platforms see sharper cohort spikes).
+    pub burst_alpha: f64,
+    /// Burst clamp (× base).
+    pub burst_cap: f64,
+}
+
+impl ContainerChurnSpec {
+    /// Scaled shape: `scale = 1.0` ≈ a 25k ops/s container fleet.
+    pub fn at_scale(scale: f64) -> Self {
+        ContainerChurnSpec {
+            duration_s: ((120.0 * scale.sqrt()) as usize).clamp(20, 120),
+            base_ops_per_sec: (25_000.0 * scale).max(300.0),
+            burst_interval_s: 10,
+            burst_alpha: 1.5,
+            burst_cap: 10.0,
+        }
+    }
+}
+
+/// Generate a container-churn trace over `ns` (ideally a deep, skinny
+/// namespace — see `scenario`'s namespace recipe).
+pub fn container_churn(
+    spec: &ContainerChurnSpec,
+    ns: &Namespace,
+    meta: TraceMeta,
+    rng: &mut Rng,
+) -> Trace {
+    let schedule = ThroughputSchedule::pareto_bursty(
+        spec.duration_s,
+        spec.burst_interval_s,
+        spec.base_ops_per_sec,
+        spec.burst_alpha,
+        spec.burst_cap,
+        rng,
+    );
+    // Deep-path bias: weight ∝ (depth+1)^3, so image-layer and
+    // per-container state dirs at the bottom of the hierarchy dominate.
+    let mut cum = Vec::with_capacity(ns.n_dirs());
+    let mut total = 0.0f64;
+    for d in &ns.dirs {
+        total += ((d.depth + 1) as f64).powi(3);
+        cum.push(total);
+    }
+    let deep_dir = |rng: &mut Rng| -> DirId {
+        let u = rng.f64() * total;
+        let i = cum.partition_point(|&c| c <= u);
+        DirId(i.min(ns.n_dirs() - 1) as u32)
+    };
+
+    let mut ops_by_second: Vec<Vec<Operation>> = Vec::with_capacity(spec.duration_s);
+    let mut carry = 0.0f64;
+    for s in 0..spec.duration_s {
+        let want = schedule.target(s) + carry;
+        let n = want.floor() as usize;
+        carry = want - n as f64;
+        let mut ops = Vec::with_capacity(n);
+        for _ in 0..n {
+            let d = deep_dir(rng);
+            let files = ns.dir(d).files;
+            let u = rng.f64();
+            let op = if u < 0.30 {
+                // Container start: write fresh per-container state.
+                let fresh = files + rng.below(1 << 20) as u32;
+                Operation::single(OpKind::Create, InodeRef::file(d, fresh))
+            } else if u < 0.55 {
+                Operation::single(OpKind::Stat, sample_inode(ns, d, files, rng))
+            } else if u < 0.70 {
+                Operation::single(OpKind::Read, sample_inode(ns, d, files, rng))
+            } else if u < 0.92 {
+                // Container teardown: unlink state.
+                Operation::single(OpKind::Delete, sample_inode(ns, d, files, rng))
+            } else if u < 0.97 {
+                Operation::single(OpKind::Mkdir, InodeRef::dir(d))
+            } else {
+                Operation::single(OpKind::Ls, InodeRef::dir(d))
+            };
+            ops.push(op);
+        }
+        ops_by_second.push(ops);
+    }
+
+    assemble(meta, ops_by_second)
+}
+
+fn sample_inode(ns: &Namespace, d: DirId, files: u32, rng: &mut Rng) -> InodeRef {
+    if files == 0 {
+        InodeRef::dir(d)
+    } else {
+        InodeRef::file(d, rng.below(files as u64) as u32)
+    }
+}
+
+/// Lay per-second op lists out as a trace: slots spread uniformly within
+/// each second, clients round-robined across the whole run, one `Second`
+/// marker per second — the exact shape `run_open_loop` produces.
+fn assemble(meta: TraceMeta, ops_by_second: Vec<Vec<Operation>>) -> Trace {
+    let n_clients = meta.n_clients.max(1);
+    let n_ops: usize = ops_by_second.iter().map(Vec::len).sum();
+    let mut events = Vec::with_capacity(n_ops + ops_by_second.len());
+    let mut next_client = 0u32;
+    for (s, ops) in ops_by_second.iter().enumerate() {
+        let n = ops.len() as u64;
+        if n > 0 {
+            let spacing = time::SEC / n;
+            for (i, op) in ops.iter().enumerate() {
+                let at = s as Time * time::SEC + i as Time * spacing;
+                events.push(TraceEvent::Op { at, client: next_client, op: *op });
+                next_client = (next_client + 1) % n_clients;
+            }
+        }
+        events.push(TraceEvent::Second { second: s as u32, target: n });
+    }
+    Trace { meta, events }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::generate::{generate, NamespaceParams};
+
+    fn ml_ns() -> Namespace {
+        let mut rng = Rng::new(11);
+        generate(
+            &NamespaceParams { n_dirs: 256, files_per_dir: 64, max_depth: 3, zipf_s: 1.1 },
+            &mut rng,
+        )
+    }
+
+    fn deep_ns() -> Namespace {
+        let mut rng = Rng::new(12);
+        generate(
+            &NamespaceParams { n_dirs: 512, files_per_dir: 8, max_depth: 12, zipf_s: 1.05 },
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn ml_pipeline_shape() {
+        let ns = ml_ns();
+        let meta = TraceMeta::new("ml-pipeline", 11, &NamespaceParams::default(), 32, 2);
+        let spec = MlPipelineSpec {
+            epochs: 2,
+            reads_per_sec: 500.0,
+            dataset_dirs: 8,
+            dataset_cap: usize::MAX,
+            stat_every: 16,
+            checkpoint_every_s: 3,
+            checkpoint_writes: 20,
+        };
+        let t = ml_pipeline(&spec, &ns, meta, &mut Rng::new(1));
+        assert!(t.n_ops() > 1_000);
+        assert!(t.duration_s() >= 2, "epoch structure spans seconds");
+        // Composition: reads dominate; creates (checkpoints) exist.
+        let mut reads = 0u64;
+        let mut creates = 0u64;
+        let mut lists = 0u64;
+        for ev in &t.events {
+            if let TraceEvent::Op { op, .. } = ev {
+                match op.kind {
+                    OpKind::Read => reads += 1,
+                    OpKind::Create => creates += 1,
+                    OpKind::Ls => lists += 1,
+                    _ => {}
+                }
+            }
+        }
+        assert!(reads > t.n_ops() / 2, "reads dominate: {reads}/{}", t.n_ops());
+        assert!(creates > 0, "checkpoints present");
+        assert_eq!(lists, 16, "one ls per dataset dir per epoch");
+        // Every epoch reads the full dataset.
+        assert!(reads >= 2 * 1_000, "two full passes");
+    }
+
+    #[test]
+    fn container_churn_shape() {
+        let ns = deep_ns();
+        let meta = TraceMeta::new("container-churn", 12, &NamespaceParams::default(), 32, 2);
+        let spec = ContainerChurnSpec {
+            duration_s: 12,
+            base_ops_per_sec: 400.0,
+            burst_interval_s: 4,
+            burst_alpha: 1.5,
+            burst_cap: 8.0,
+        };
+        let t = container_churn(&spec, &ns, meta, &mut Rng::new(2));
+        assert_eq!(t.duration_s(), 12);
+        assert!(t.n_ops() >= 12 * 400);
+        // Deep-path bias: mean target depth well above the namespace mean.
+        let ns_mean = ns.dirs.iter().map(|d| d.depth as f64).sum::<f64>() / ns.n_dirs() as f64;
+        let (mut sum, mut n) = (0.0, 0u64);
+        let mut writes = 0u64;
+        for ev in &t.events {
+            if let TraceEvent::Op { op, .. } = ev {
+                sum += ns.dir(op.target.dir).depth as f64;
+                n += 1;
+                if op.kind.is_write() {
+                    writes += 1;
+                }
+            }
+        }
+        let trace_mean = sum / n as f64;
+        assert!(trace_mean > ns_mean + 0.5, "deep bias: {trace_mean} vs ns {ns_mean}");
+        // Churn: around half the ops are writes (create/delete/mkdir).
+        let wf = writes as f64 / n as f64;
+        assert!((0.4..0.75).contains(&wf), "write-heavy churn: {wf}");
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let ns = deep_ns();
+        let meta = TraceMeta::new("container-churn", 12, &NamespaceParams::default(), 32, 2);
+        let spec = ContainerChurnSpec::at_scale(0.01);
+        let a = container_churn(&spec, &ns, meta.clone(), &mut Rng::new(3));
+        let b = container_churn(&spec, &ns, meta, &mut Rng::new(3));
+        assert_eq!(a.fingerprint(), b.fingerprint());
+
+        let ns = ml_ns();
+        let meta = TraceMeta::new("ml-pipeline", 11, &NamespaceParams::default(), 32, 2);
+        let spec = MlPipelineSpec::at_scale(0.01);
+        let a = ml_pipeline(&spec, &ns, meta.clone(), &mut Rng::new(4));
+        let b = ml_pipeline(&spec, &ns, meta, &mut Rng::new(4));
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn assembled_slots_and_markers_well_formed() {
+        let ns = ml_ns();
+        let meta = TraceMeta::new("ml-pipeline", 11, &NamespaceParams::default(), 8, 1);
+        let spec = MlPipelineSpec {
+            epochs: 1,
+            reads_per_sec: 300.0,
+            dataset_dirs: 4,
+            dataset_cap: 900,
+            stat_every: 64,
+            checkpoint_every_s: 100,
+            checkpoint_writes: 0,
+        };
+        let t = ml_pipeline(&spec, &ns, meta, &mut Rng::new(5));
+        let mut seen_seconds = 0u32;
+        let mut ops_in_second = 0u64;
+        for ev in &t.events {
+            match *ev {
+                TraceEvent::Op { at, client, .. } => {
+                    assert_eq!(at / time::SEC, seen_seconds as Time, "slot in current second");
+                    assert!(client < 8);
+                    ops_in_second += 1;
+                }
+                TraceEvent::Second { second, target } => {
+                    assert_eq!(second, seen_seconds);
+                    assert_eq!(target, ops_in_second, "marker target = ops in second");
+                    seen_seconds += 1;
+                    ops_in_second = 0;
+                }
+            }
+        }
+        assert_eq!(seen_seconds as usize, t.duration_s());
+    }
+}

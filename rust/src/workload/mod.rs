@@ -1,6 +1,32 @@
-//! Workload generators: the Spotify industrial workload (§5.2), the
-//! scaling micro-benchmarks (§5.3), IndexFS' `tree-test` (§5.7), and the
-//! subtree workload (Table 3).
+//! Workload generators and the workload catalog.
+//!
+//! Every workload the repository can drive, its origin, and how to run
+//! it. Workloads in the first group are generated live by the drivers in
+//! [`crate::systems::driver`]; those in the second are produced (or
+//! captured) as traces and executed through [`crate::trace::replay`],
+//! which feeds λFS and every baseline the identical op stream.
+//!
+//! **Paper-figure workloads (generated live):**
+//!
+//! | workload | origin | invocation |
+//! |---|---|---|
+//! | Spotify op mix, Pareto-bursty open loop | §5.2, Table 2, Fig. 8–10 | `lambdafs spotify`, `lambdafs figure 8a` |
+//! | single-op closed-loop micro-benchmarks | §5.3, Fig. 11–13 | `lambdafs micro --op read --clients 256` |
+//! | auto-scaling ablation | §5.2.4, Fig. 14 | `lambdafs figure 14` |
+//! | fault-injection Spotify run | §5.6, Fig. 15 | `lambdafs figure 15` |
+//! | IndexFS `tree-test` (mknod then getattr) | §5.7, Fig. 16 | `lambdafs figure 16` |
+//! | subtree mv/delete | Appendix C, Table 3 | `lambdafs subtree --files 262144` |
+//!
+//! **Trace-engine workloads (new scenario classes, beyond the paper):**
+//!
+//! | workload | origin | invocation |
+//! |---|---|---|
+//! | recorded replay of any run above | `crate::trace::Recorder` | `lambdafs scenario`, `cargo run --example trace_replay` |
+//! | ML-training pipeline (epoch-structured hot-dir reads + checkpoint bursts) | FalconFS-style, `crate::trace::synth::ml_pipeline` | `lambdafs scenario` |
+//! | container-platform churn (deep-path create/stat/unlink, Pareto bursts) | CFS-style, `crate::trace::synth::container_churn` | `lambdafs scenario` |
+//!
+//! The scenario matrix sweeps (system × workload × scale) and writes
+//! `SCENARIOS.json`; see [`crate::trace::scenario`].
 
 pub mod schedule;
 pub mod spec;

@@ -19,6 +19,7 @@ use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
 use lambda_fs::namespace::Namespace;
 use lambda_fs::sim::queue::{EventQueue, HeapQueue};
 use lambda_fs::systems::{driver, LambdaFs, MdsSim};
+use lambda_fs::trace::{replay_into, Recorder, Trace, TraceMeta};
 use lambda_fs::util::rng::Rng;
 use lambda_fs::workload::{ClosedLoopSpec, OpMix, OpenLoopSpec, ThroughputSchedule};
 
@@ -155,6 +156,94 @@ fn calendar_queue_differential_randomized() {
         }
         assert_eq!(cal.processed(), heap.processed());
     }
+}
+
+/// The trace engine's record→replay contract: capturing a seeded λFS
+/// Spotify run through `Recorder`, round-tripping the trace through the
+/// binary format, and replaying it into a fresh same-seed λFS produces a
+/// bit-identical `RunMetrics::fingerprint`. Cross-system replays of the
+/// same trace complete the identical op stream.
+#[test]
+fn trace_record_replay_bit_identical_spotify() {
+    let seed = 2024u64;
+    let (cfg, ns, sampler) = fixture(seed);
+    let params = NamespaceParams { n_dirs: 384, files_per_dir: 24, ..Default::default() };
+    let mut sched_rng = Rng::new(seed ^ 0x5c);
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::pareto_bursty(6, 3, 600.0, 2.0, 7.0, &mut sched_rng),
+        mix: OpMix::spotify(),
+        n_clients: 64,
+        n_vms: 2,
+        namespace: params.clone(),
+        zipf_s: 1.3,
+    };
+    let meta = TraceMeta::new("spotify", seed, &params, spec.n_clients, spec.n_vms);
+
+    // Record.
+    let mut rec =
+        Recorder::new(LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms), meta);
+    let mut rng = Rng::new(cfg.seed ^ 0xabcd);
+    driver::run_open_loop(&mut rec, &spec, &ns, &sampler, &mut rng);
+    let (sys, trace) = rec.into_parts();
+    let m_rec = sys.into_metrics();
+    assert_eq!(trace.n_ops(), m_rec.completed_ops, "every submit captured");
+
+    // Binary format round trip.
+    let bytes = trace.encode();
+    let decoded = Trace::decode(&bytes).expect("decode recorded trace");
+    assert_eq!(trace, decoded);
+    assert_eq!(trace.fingerprint(), decoded.fingerprint());
+
+    // Bit-identical replay into a fresh same-seed λFS.
+    let m_rep = replay_into(
+        LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms),
+        &decoded,
+        &mut Rng::new(cfg.seed ^ 0xabcd),
+    );
+    assert_eq!(
+        m_rec.fingerprint(),
+        m_rep.fingerprint(),
+        "record→replay must reproduce the run bit for bit"
+    );
+
+    // Cross-system: the identical op stream drives a baseline to
+    // completion.
+    let m_hops = replay_into(
+        HopsFs::new(cfg.clone(), ns.clone(), 128.0, true),
+        &decoded,
+        &mut Rng::new(cfg.seed ^ 0x40b5),
+    );
+    assert_eq!(m_hops.completed_ops, decoded.n_ops());
+}
+
+/// Closed-loop runs (driven off the calendar queue) round-trip too.
+#[test]
+fn trace_record_replay_bit_identical_closed_loop() {
+    let seed = 99u64;
+    let (cfg, ns, sampler) = fixture(seed);
+    let params = NamespaceParams { n_dirs: 384, files_per_dir: 24, ..Default::default() };
+    let spec = ClosedLoopSpec {
+        kind: lambda_fs::namespace::OpKind::Read,
+        n_clients: 24,
+        n_vms: 2,
+        ops_per_client: 120,
+        namespace: params.clone(),
+        zipf_s: 1.3,
+    };
+    let meta = TraceMeta::new("micro-read", seed, &params, spec.n_clients, spec.n_vms);
+    let mut rec =
+        Recorder::new(LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms), meta);
+    let mut rng = Rng::new(cfg.seed ^ 0xc10);
+    driver::run_closed_loop(&mut rec, &spec, &ns, &sampler, &mut rng);
+    let (sys, trace) = rec.into_parts();
+    let m_rec = sys.into_metrics();
+
+    let m_rep = replay_into(
+        LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms),
+        &trace,
+        &mut Rng::new(cfg.seed ^ 0xc10),
+    );
+    assert_eq!(m_rec.fingerprint(), m_rep.fingerprint(), "closed-loop round trip diverged");
 }
 
 /// Driving the *same closed-loop workload* through both queue
