@@ -8,7 +8,7 @@
 
 use lambda_fs::config::SystemConfig;
 use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
-use lambda_fs::systems::{driver, LambdaFs, MdsSim};
+use lambda_fs::systems::{driver, LambdaFs, MetadataService};
 use lambda_fs::util::rng::Rng;
 use lambda_fs::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
 

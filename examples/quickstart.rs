@@ -7,7 +7,7 @@
 
 use lambda_fs::config::SystemConfig;
 use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
-use lambda_fs::systems::{driver, LambdaFs, MdsSim};
+use lambda_fs::systems::{driver, LambdaFs, MetadataService};
 use lambda_fs::util::rng::Rng;
 use lambda_fs::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
 
@@ -58,6 +58,11 @@ fn main() {
     println!("cache hit ratio    : {:.1}%", cache.hit_ratio() * 100.0);
     println!("peak NameNodes     : {}", m.peak_namenodes());
     println!("cold starts        : {}", platform.cold_starts);
+    // Per-op outcome ledger (folded from each submit's Completion).
+    println!("ops cold-started   : {} of {}", m.cold_starts, m.completed_ops);
+    println!("per-op hit ratio   : {:.1}%", m.cache_hit_ratio() * 100.0);
+    println!("op retries         : {}", m.total_retries());
+    assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops, "outcome conservation");
     println!("pay-per-use cost   : ${:.4}", m.total_cost());
     println!("simplified cost    : ${:.4}", m.total_cost_simplified());
     assert!(m.completed_ops > 0);

@@ -19,7 +19,7 @@ use lambda_fs::baselines::HopsFs;
 use lambda_fs::client::Router;
 use lambda_fs::figures::Scale;
 use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
-use lambda_fs::systems::{driver, LambdaFs, MdsSim};
+use lambda_fs::systems::{driver, LambdaFs, MetadataService};
 use lambda_fs::util::rng::Rng;
 use lambda_fs::workload::OpenLoopSpec;
 

@@ -13,7 +13,7 @@ use lambda_fs::config::SystemConfig;
 use lambda_fs::figures::Scale;
 use lambda_fs::metrics::RunMetrics;
 use lambda_fs::namespace::generate::{HotspotSampler, NamespaceParams};
-use lambda_fs::systems::{driver, LambdaFs, MdsSim};
+use lambda_fs::systems::{driver, LambdaFs, MetadataService};
 use lambda_fs::trace::synth::{self, ContainerChurnSpec, MlPipelineSpec};
 use lambda_fs::trace::{replay_into, Recorder, Trace, TraceMeta};
 use lambda_fs::util::rng::Rng;
@@ -157,17 +157,20 @@ fn main() {
             tr.duration_s()
         );
         println!(
-            "{:<14} {:>10} {:>10} {:>9} {:>9} {:>9}",
-            "system", "avg_tput", "peak_tput", "p50_ms", "p99_ms", "cost_$"
+            "{:<14} {:>10} {:>10} {:>9} {:>9} {:>9} {:>7} {:>6}",
+            "system", "avg_tput", "peak_tput", "p50_ms", "p99_ms", "cost_$", "hit_%", "cold"
         );
         for (sys, m) in run_baselines(tr) {
+            assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops, "outcome conservation");
             println!(
-                "{sys:<14} {:>10.0} {:>10.0} {:>9.2} {:>9.2} {:>9.4}",
+                "{sys:<14} {:>10.0} {:>10.0} {:>9.2} {:>9.2} {:>9.4} {:>7.1} {:>6}",
                 m.avg_throughput(),
                 m.peak_throughput(),
                 m.all_lat.p50() / 1_000.0,
                 m.all_lat.p99() / 1_000.0,
-                m.total_cost()
+                m.total_cost(),
+                m.cache_hit_ratio() * 100.0,
+                m.cold_starts
             );
         }
     }

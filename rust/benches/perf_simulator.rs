@@ -33,7 +33,7 @@ use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
 use lambda_fs::namespace::{DirId, InodeRef, Namespace};
 use lambda_fs::sim::queue::{EventQueue, HeapQueue};
 use lambda_fs::store::NdbStore;
-use lambda_fs::systems::{driver, LambdaFs, MdsSim};
+use lambda_fs::systems::{driver, LambdaFs, MetadataService};
 use lambda_fs::util::fnv;
 use lambda_fs::util::rng::Rng;
 use lambda_fs::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
@@ -69,6 +69,7 @@ fn main() {
     let mut spots: Vec<HotSpot> = Vec::new();
 
     spots.push(e2e_submit(&cfg, &ns, &sampler));
+    spots.push(e2e_submit_batch(&cfg, &ns, &sampler));
     spots.push(event_queue());
     spots.push(cache(&ns, &sampler, &mut rng));
     spots.push(router(&ns, &sampler, &mut rng));
@@ -143,6 +144,48 @@ fn e2e_submit(cfg: &SystemConfig, ns: &Namespace, sampler: &HotspotSampler) -> H
         baseline_impl: "LambdaFs<RandomState> (SipHash-hasher config of current code; \
                         understates pre-overhaul cost)",
         current_impl: "LambdaFs<FnvBuildHasher> (FNV maps, allocation-free write path)",
+        baseline: n_ops / (ms_base / 1_000.0),
+        current: n_ops / (ms_cur / 1_000.0),
+    }
+}
+
+/// End-to-end λFS batch submission: the identical workload through the
+/// batched open-loop driver (`submit_batch`, amortized routing — current)
+/// and the scalar driver (per-op `submit` — baseline). Also asserts the
+/// two paths produce bit-identical `RunMetrics` — the batch contract.
+fn e2e_submit_batch(cfg: &SystemConfig, ns: &Namespace, sampler: &HotspotSampler) -> HotSpot {
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(12, 20_000.0),
+        mix: OpMix::spotify(),
+        n_clients: 512,
+        n_vms: 8,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+    let n_ops = spec.schedule.total_ops();
+
+    let mut batched = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+    let mut r = Rng::new(cfg.seed ^ 0xba7c);
+    let (_, ms_cur) = BenchTimer::time(|| {
+        driver::run_open_loop_batched(&mut batched, &spec, ns, sampler, &mut r);
+    });
+    let fp_batched = batched.into_metrics().outcome_fingerprint();
+
+    let mut scalar = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+    let mut r = Rng::new(cfg.seed ^ 0xba7c);
+    let (_, ms_base) = BenchTimer::time(|| {
+        driver::run_open_loop(&mut scalar, &spec, ns, sampler, &mut r);
+    });
+    let fp_scalar = scalar.into_metrics().outcome_fingerprint();
+    assert_eq!(
+        fp_batched, fp_scalar,
+        "submit_batch changed simulation results — batch contract broken"
+    );
+
+    HotSpot {
+        key: "e2e_submit_batch",
+        baseline_impl: "scalar submit loop (per-op routing-table lookup)",
+        current_impl: "submit_batch (per-client-fleet chunks, amortized routing)",
         baseline: n_ops / (ms_base / 1_000.0),
         current: n_ops / (ms_cur / 1_000.0),
     }
@@ -322,7 +365,9 @@ fn render_json(spots: &[HotSpot], fnv_rate: f64) -> String {
         "  \"note\": \"event_queue/router baselines are true pre-overhaul \
          implementations; cache/store/e2e_submit baselines are the SipHash-hasher \
          configuration of current code and understate pre-overhaul cost (the seed \
-         tree had no Cargo.toml, so no pre-change binary exists to measure)\",\n",
+         tree had no Cargo.toml, so no pre-change binary exists to measure); \
+         e2e_submit_batch's baseline is the scalar per-op submit path driving the \
+         identical workload (fingerprint-checked equal)\",\n",
     );
     let _ = writeln!(s, "  \"fnv_route_hashes_per_s\": {fnv_rate:.0},");
     s.push_str("  \"hot_spots\": {\n");

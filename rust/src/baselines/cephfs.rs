@@ -9,13 +9,13 @@
 //! paper observes CephFS winning the first 4–5 problem sizes of the read
 //! micro-benchmarks and writes generally, then falling behind λFS.
 
+use crate::client::Router;
 use crate::config::SystemConfig;
 use crate::metrics::{CostModel, RunMetrics};
-use crate::namespace::{Namespace, Operation};
+use crate::namespace::Namespace;
 use crate::sim::station::Station;
-use crate::sim::{time, Time};
-use crate::systems::MdsSim;
-use crate::client::Router;
+use crate::sim::time;
+use crate::systems::{CacheOutcome, Completion, MetadataService, Outcome, Request};
 use crate::util::dist::LogNormal;
 use crate::util::rng::Rng;
 
@@ -66,12 +66,13 @@ impl CephFs {
     }
 }
 
-impl MdsSim for CephFs {
-    fn submit(&mut self, now: Time, _client: u32, op: &Operation, rng: &mut Rng) -> Time {
+impl MetadataService for CephFs {
+    fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
+        let (now, op) = (req.at, req.op);
         let mut local = Rng::new(self.rng.next_u64());
         let mds = self.router.route(&self.ns, op.target) as usize;
         let arrive = now + time::from_ms(self.rpc.sample(rng));
-        let served = if op.kind.is_write() || op.kind.is_subtree() {
+        let (served, cache) = if op.kind.is_write() || op.kind.is_subtree() {
             // Capability-based write: in-memory update + journal append.
             let factor = if op.kind.is_subtree() {
                 (self.ns.subtree_inodes(op.target.dir) / 64).max(1) as f64
@@ -82,14 +83,22 @@ impl MdsSim for CephFs {
             let (_, cpu_done) = self.mds[mds].submit(arrive, cpu);
             let j = time::from_ms(self.write_ms * factor * local.range_f64(0.85, 1.2));
             let (_, done) = self.journal.submit(cpu_done, j);
-            done
+            (done, CacheOutcome::Bypass)
         } else {
-            // In-memory read served by the MDS (no DB hop at all).
+            // In-memory read served by the MDS (no DB hop at all): the
+            // namespace lives in MDS memory, so every read is a hit.
             let cpu = time::from_ms(self.read_ms * local.range_f64(0.85, 1.2));
             let (_, done) = self.mds[mds].submit(arrive, cpu);
-            done
+            (done, CacheOutcome::Hit)
         };
-        served + time::from_ms(self.rpc.sample(rng))
+        Completion {
+            done: served + time::from_ms(self.rpc.sample(rng)),
+            outcome: Outcome {
+                cache,
+                cost_us: served.saturating_sub(arrive),
+                ..Outcome::warm(mds as u32)
+            },
+        }
     }
 
     fn on_second(&mut self, second: usize) {
@@ -143,7 +152,7 @@ mod tests {
     #[test]
     fn mds_cluster_capped_at_five() {
         let (cfg, ns, _, _) = fixtures();
-        assert_eq!(CephFs::new(cfg.clone(), ns.clone(), 512.0, ).n_mds(), 5);
+        assert_eq!(CephFs::new(cfg.clone(), ns.clone(), 512.0).n_mds(), 5);
         assert_eq!(CephFs::new(cfg, ns, 32.0).n_mds(), 2);
     }
 

@@ -24,7 +24,7 @@ use crate::namespace::{InodeRef, Namespace, OpKind, Operation};
 use crate::sim::station::Station;
 use crate::sim::{time, Time};
 use crate::store::NdbStore;
-use crate::systems::MdsSim;
+use crate::systems::{CacheOutcome, Completion, MetadataService, Outcome, Request};
 use crate::util::dist::LogNormal;
 use crate::util::rng::Rng;
 
@@ -119,8 +119,9 @@ impl HopsFs {
     }
 }
 
-impl MdsSim for HopsFs {
-    fn submit(&mut self, now: Time, _client: u32, op: &Operation, rng: &mut Rng) -> Time {
+impl MetadataService for HopsFs {
+    fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
+        let (now, op) = (req.at, req.op);
         let nn = self.pick_namenode(op);
         let arrive = now + time::from_ms(self.rpc.sample(rng));
 
@@ -137,12 +138,19 @@ impl MdsSim for HopsFs {
             };
             let done = subtree::execute(arrive, &plan, params, &mut self.store, &mut local_rng)
                 .unwrap_or(arrive + time::SEC);
-            return done + time::from_ms(self.rpc.sample(rng));
+            return Completion {
+                done: done + time::from_ms(self.rpc.sample(rng)),
+                outcome: Outcome {
+                    cost_us: done.saturating_sub(arrive),
+                    ..Outcome::warm(nn as u32)
+                },
+            };
         }
 
         let cpu = self.nn_service(self.svc.cache_hit(op.kind, &mut local_rng), &mut local_rng);
         let (_, cpu_done) = self.namenodes[nn].submit(arrive, cpu);
 
+        let mut cache_outcome = CacheOutcome::Bypass;
         let served = if op.kind.is_write() {
             // Write: transactional NDB update (target + parent rows).
             let parent_inode = match op.target.file {
@@ -174,8 +182,10 @@ impl MdsSim for HopsFs {
         } else if let Some(caches) = &mut self.caches {
             // +Cache read: hit serves locally; miss goes to NDB.
             if caches[nn].get(op.target).is_some() {
+                cache_outcome = CacheOutcome::Hit;
                 cpu_done
             } else {
+                cache_outcome = CacheOutcome::Miss;
                 let depth = self.ns.resolution_depth(op.target);
                 let done = self.store.read_batch(cpu_done, depth, &mut local_rng);
                 let v = self.store.version(op.target);
@@ -184,12 +194,22 @@ impl MdsSim for HopsFs {
             }
         } else {
             // Stateless read: ALWAYS one batched NDB query (INode hints
-            // make it a single round trip, but it cannot be skipped).
+            // make it a single round trip, but it cannot be skipped) —
+            // the outcome ledger records every stateless read as a miss,
+            // which is the paper's very point about HopsFS.
+            cache_outcome = CacheOutcome::Miss;
             let depth = self.ns.resolution_depth(op.target);
             self.store.read_batch(cpu_done, depth, &mut local_rng)
         };
 
-        served + time::from_ms(self.rpc.sample(rng))
+        Completion {
+            done: served + time::from_ms(self.rpc.sample(rng)),
+            outcome: Outcome {
+                cache: cache_outcome,
+                cost_us: served.saturating_sub(arrive),
+                ..Outcome::warm(nn as u32)
+            },
+        }
     }
 
     fn on_second(&mut self, second: usize) {

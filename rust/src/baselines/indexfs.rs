@@ -16,12 +16,12 @@ use crate::config::SystemConfig;
 use crate::coordinator::ServiceModel;
 use crate::faas::Platform;
 use crate::metrics::{CostModel, RunMetrics};
-use crate::namespace::{Namespace, Operation};
+use crate::namespace::Namespace;
 use crate::rpc::NetModel;
 use crate::sim::station::Station;
 use crate::sim::{time, Time};
 use crate::store::sstable::{SsTableConfig, SsTableStore};
-use crate::systems::MdsSim;
+use crate::systems::{CacheOutcome, Completion, MetadataService, Outcome, Request};
 use crate::util::dist::LogNormal;
 use crate::util::rng::Rng;
 
@@ -69,24 +69,33 @@ impl IndexFs {
     }
 }
 
-impl MdsSim for IndexFs {
-    fn submit(&mut self, now: Time, _client: u32, op: &Operation, rng: &mut Rng) -> Time {
+impl MetadataService for IndexFs {
+    fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
+        let (now, op) = (req.at, req.op);
         let mut local = Rng::new(self.rng.next_u64());
         let srv = self.router.route(&self.ns, op.target) as usize;
         let arrive = now + time::from_ms(self.rpc.sample(rng));
         let (station, store) = &mut self.servers[srv];
         let cpu = time::from_ms(0.08 * local.range_f64(0.85, 1.2));
         let (_, cpu_done) = station.submit(arrive, cpu);
-        let served = if op.kind.is_write() {
-            store.append(cpu_done, op.target, &mut local)
+        let (served, cache) = if op.kind.is_write() {
+            (store.append(cpu_done, op.target, &mut local), CacheOutcome::Bypass)
         } else {
             // Read hits LevelDB: memtable or SSTable probes (read
             // amplification) — IndexFS' stateless client cache only covers
-            // directory lookup state, not whole-entry reads.
+            // directory lookup state, not whole-entry reads, so every
+            // read is a miss to the persistent store.
             let (done, _) = store.get(cpu_done, op.target, &mut local);
-            done
+            (done, CacheOutcome::Miss)
         };
-        served + time::from_ms(self.rpc.sample(rng))
+        Completion {
+            done: served + time::from_ms(self.rpc.sample(rng)),
+            outcome: Outcome {
+                cache,
+                cost_us: served.saturating_sub(arrive),
+                ..Outcome::warm(srv as u32)
+            },
+        }
     }
 
     fn on_second(&mut self, second: usize) {
@@ -179,8 +188,9 @@ impl LambdaIndexFs {
     }
 }
 
-impl MdsSim for LambdaIndexFs {
-    fn submit(&mut self, now: Time, _client: u32, op: &Operation, rng: &mut Rng) -> Time {
+impl MetadataService for LambdaIndexFs {
+    fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
+        let (now, op) = (req.at, req.op);
         let mut local = Rng::new(self.rng.next_u64());
         let dep = self.router.route(&self.ns, op.target);
 
@@ -191,36 +201,45 @@ impl MdsSim for LambdaIndexFs {
             && self.platform.warm_instance(dep, now).is_some()
             && !rng.chance(self.cfg.lambda_fs.http_replacement_prob);
 
-        let (inst, arrive) = if tcp_ok {
+        let (inst, arrive, cold_start) = if tcp_ok {
             let i = self.platform.warm_instance(dep, now).unwrap();
-            (i, now + self.net.tcp_hop(rng))
+            (i, now + self.net.tcp_hop(rng), false)
         } else {
             let gw = self.platform.gateway_admit(now, rng);
             let leg = self.net.http_leg(rng);
-            let (i, ready) = self.platform.place_http(dep, now, rng);
+            let (i, ready, cold) = self.platform.place_http_traced(dep, now, rng);
             self.warm_deps[dep as usize] = true;
-            (i, ready.max(gw + leg))
+            (i, ready.max(gw + leg), cold)
         };
         self.ensure_cache(inst.0 as usize);
 
         let cpu = self.svc.cache_hit(op.kind, &mut local);
         let (_, cpu_done) = self.platform.instance_mut(inst).cpu.submit(arrive, cpu);
 
-        let served = if op.kind.is_write() {
+        let (served, cache) = if op.kind.is_write() {
             // mknod: append to LevelDB; invalidate peers in the deployment
             // (single-deployment-per-dir partitioning keeps this local).
             let done = self.stores[dep as usize].append(cpu_done, op.target, &mut local);
             self.caches[inst.0 as usize].insert_version(op.target, 1);
-            done
+            (done, CacheOutcome::Bypass)
         } else if self.caches[inst.0 as usize].get(op.target).is_some() {
-            cpu_done
+            (cpu_done, CacheOutcome::Hit)
         } else {
             let (done, _) = self.stores[dep as usize].get(cpu_done, op.target, &mut local);
             self.caches[inst.0 as usize].insert_version(op.target, 1);
-            done
+            (done, CacheOutcome::Miss)
         };
         self.platform.instance_mut(inst).bill(arrive, served);
-        served + self.net.tcp_hop(rng)
+        Completion {
+            done: served + self.net.tcp_hop(rng),
+            outcome: Outcome {
+                cold_start,
+                cache,
+                retries: 0,
+                server: dep,
+                cost_us: served.saturating_sub(arrive),
+            },
+        }
     }
 
     fn on_second(&mut self, second: usize) {
@@ -264,7 +283,7 @@ pub struct TreeTestResult {
 /// followed by `ops` random getattr reads (§5.7). Phases run back-to-back
 /// on the same system (the read phase sees the write phase's data and
 /// cache state) with separate metrics.
-pub fn run_tree_test<S: crate::systems::MdsSim>(
+pub fn run_tree_test<S: crate::systems::MetadataService>(
     sys: &mut S,
     ns: &Namespace,
     sampler: &crate::namespace::generate::HotspotSampler,

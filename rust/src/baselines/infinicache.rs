@@ -13,11 +13,11 @@ use crate::config::{AutoScaleMode, SystemConfig};
 use crate::coordinator::ServiceModel;
 use crate::faas::{InstanceId, Platform};
 use crate::metrics::{CostModel, RunMetrics};
-use crate::namespace::{Namespace, Operation};
+use crate::namespace::Namespace;
 use crate::rpc::NetModel;
 use crate::sim::{time, Time};
 use crate::store::NdbStore;
-use crate::systems::MdsSim;
+use crate::systems::{CacheOutcome, Completion, MetadataService, Outcome, Request};
 use crate::util::rng::Rng;
 
 /// InfiniCache pressed into MDS service.
@@ -93,8 +93,9 @@ impl InfiniCacheMds {
     }
 }
 
-impl MdsSim for InfiniCacheMds {
-    fn submit(&mut self, now: Time, _client: u32, op: &Operation, rng: &mut Rng) -> Time {
+impl MetadataService for InfiniCacheMds {
+    fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
+        let (now, op) = (req.at, req.op);
         let mut local_rng = Rng::new(self.rng.next_u64());
         let dep = self.router.route(&self.ns, op.target);
 
@@ -102,28 +103,37 @@ impl MdsSim for InfiniCacheMds {
         // gateway queueing + invocation leg + per-op connection setup.
         let gw_done = self.platform.gateway_admit(now, rng);
         let leg = self.net.http_leg(rng);
-        let (inst, ready) = self.platform.place_http(dep, now, rng);
+        let (inst, ready, cold_start) = self.platform.place_http_traced(dep, now, rng);
         self.ensure_cache(inst.0 as usize);
         let arrive = ready.max(gw_done + leg) + self.net.tcp_connect(rng);
 
         let hit = self.caches[inst.0 as usize].get(op.target).is_some();
         let cpu = self.svc.cache_hit(op.kind, &mut local_rng);
         let (_, cpu_done) = self.platform.instance_mut(inst).cpu.submit(arrive, cpu);
-        let served = if op.kind.is_write() {
+        let (served, cache) = if op.kind.is_write() {
             let commit = self.store.write_txn(cpu_done, &[op.target], false, &mut local_rng);
             self.caches[inst.0 as usize].invalidate(op.target);
-            commit
+            (commit, CacheOutcome::Bypass)
         } else if hit {
-            cpu_done
+            (cpu_done, CacheOutcome::Hit)
         } else {
             let depth = self.ns.resolution_depth(op.target);
             let done = self.store.read_batch(cpu_done, depth, &mut local_rng);
             let v = self.store.version(op.target);
             self.caches[inst.0 as usize].insert_version(op.target, v);
-            done
+            (done, CacheOutcome::Miss)
         };
         self.platform.instance_mut(inst).bill(arrive, served);
-        served + self.net.tcp_hop(rng)
+        Completion {
+            done: served + self.net.tcp_hop(rng),
+            outcome: Outcome {
+                cold_start,
+                cache,
+                retries: 0,
+                server: dep,
+                cost_us: served.saturating_sub(arrive),
+            },
+        }
     }
 
     fn on_second(&mut self, second: usize) {

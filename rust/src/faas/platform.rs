@@ -261,6 +261,22 @@ impl Platform {
         }
     }
 
+    /// [`Self::place_http`] plus cold-start attribution: the returned
+    /// flag is true iff this placement provisioned a new instance (the
+    /// request pays that cold start). Centralized here so the systems
+    /// folding per-op `Outcome`s don't each re-derive it from stats
+    /// deltas.
+    pub fn place_http_traced(
+        &mut self,
+        dep: u32,
+        now: Time,
+        rng: &mut Rng,
+    ) -> (InstanceId, Time, bool) {
+        let before = self.stats.cold_starts;
+        let (id, ready) = self.place_http(dep, now, rng);
+        (id, ready, self.stats.cold_starts > before)
+    }
+
     /// Provision a new instance if vCPU headroom allows; otherwise try
     /// evicting an idle instance (thrashing behaviour under caps).
     fn provision(&mut self, dep: u32, now: Time, rng: &mut Rng) -> Option<(InstanceId, Time)> {
@@ -455,6 +471,17 @@ mod tests {
         assert!(ready > 1_000 + time::from_ms(300.0), "cold start takes time");
         assert_eq!(p.stats().cold_starts, 1);
         assert_eq!(p.live_instances(), 1);
+    }
+
+    #[test]
+    fn traced_placement_attributes_cold_starts() {
+        let (mut p, mut rng) = platform();
+        let (id, ready, cold) = p.place_http_traced(0, 0, &mut rng);
+        assert!(cold, "first placement provisions (cold)");
+        p.settle(ready);
+        let (id2, _, cold2) = p.place_http_traced(0, ready + 10, &mut rng);
+        assert_eq!(id, id2);
+        assert!(!cold2, "warm reuse is not a cold start");
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use crate::baselines::HopsFs;
 use crate::metrics::cost::performance_per_cost;
 use crate::metrics::RunMetrics;
-use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::workload::OpenLoopSpec;
 
 use super::common::{self, Fixture, Scale};
@@ -111,7 +111,7 @@ impl Fig8 {
             .iter()
             .map(|o| {
                 let m = &o.metrics;
-                vec![
+                let mut cells = vec![
                     o.name.to_string(),
                     common::f0(m.avg_throughput()),
                     common::f0(m.peak_throughput()),
@@ -121,7 +121,9 @@ impl Fig8 {
                     common::f4(m.total_cost()),
                     common::f0(m.peak_namenodes() as f64),
                     common::f0(m.performance_per_cost()),
-                ]
+                ];
+                cells.extend(common::outcome_cells(m));
+                cells
             })
             .collect();
         common::print_table(
@@ -136,6 +138,9 @@ impl Fig8 {
                 "cost_$",
                 "peak_NNs",
                 "perf/cost",
+                common::OUTCOME_HEADER[0],
+                common::OUTCOME_HEADER[1],
+                common::OUTCOME_HEADER[2],
             ],
             &rows,
         );
@@ -167,6 +172,31 @@ impl Fig8 {
             .collect::<Vec<_>>()
             .join(",");
         common::write_csv(&format!("fig08_{label}.csv"), &header, &csv);
+
+        // Run-level outcome ledger: hit ratio, cold starts, retries per
+        // system (the new Completion/Outcome columns).
+        let outcome_rows: Vec<String> = self
+            .outcomes
+            .iter()
+            .map(|o| {
+                let m = &o.metrics;
+                format!(
+                    "{},{:.4},{},{},{},{},{}",
+                    o.name,
+                    m.cache_hit_ratio(),
+                    m.cache_hits,
+                    m.cache_misses,
+                    m.cold_starts,
+                    m.warm_ops,
+                    m.total_retries()
+                )
+            })
+            .collect();
+        common::write_csv(
+            &format!("fig08_{label}_outcomes.csv"),
+            "system,hit_ratio,cache_hits,cache_misses,cold_starts,warm_ops,retries",
+            &outcome_rows,
+        );
     }
 
     pub fn outcome(&self, name: &str) -> &RunMetrics {
@@ -188,5 +218,12 @@ mod tests {
         assert!(lfs.avg_throughput() >= hops.avg_throughput() * 0.95);
         assert!(lfs.read_lat.p50() < hops.read_lat.p50());
         assert!(lfs.total_cost() < hops.total_cost());
+        // Outcome columns: λFS reads hit its elastic cache; stateless
+        // HopsFS pays the store on every read (hit ratio 0), and only
+        // λFS ever cold-starts.
+        assert!(lfs.cache_hit_ratio() > hops.cache_hit_ratio());
+        assert_eq!(hops.cache_hits, 0);
+        assert_eq!(hops.cold_starts, 0);
+        assert_eq!(lfs.cold_starts + lfs.warm_ops, lfs.completed_ops);
     }
 }

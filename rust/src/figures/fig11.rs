@@ -2,17 +2,37 @@
 //! 3,072 ops each, per-op-kind throughput across five systems.
 
 use crate::baselines::{CephFs, HopsFs, InfiniCacheMds};
+use crate::metrics::RunMetrics;
 use crate::namespace::OpKind;
-use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::workload::ClosedLoopSpec;
 
 use super::common::{self, Fixture, Scale};
 
+/// One system's point on the client-scaling curve: throughput plus the
+/// outcome columns the Completion stream now carries.
+#[derive(Clone, Copy, Debug)]
+pub struct SysPoint {
+    pub tput: f64,
+    pub hit_ratio: f64,
+    pub cold_starts: u64,
+}
+
+impl SysPoint {
+    fn from_metrics(m: &RunMetrics) -> SysPoint {
+        SysPoint {
+            tput: m.sustained_throughput(),
+            hit_ratio: m.cache_hit_ratio(),
+            cold_starts: m.cold_starts,
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct Fig11 {
     pub kind: OpKind,
-    /// (clients, per-system throughput) in the order of [`SYSTEMS`].
-    pub rows: Vec<(u32, Vec<f64>)>,
+    /// (clients, per-system points) in the order of [`SYSTEMS`].
+    pub rows: Vec<(u32, Vec<SysPoint>)>,
 }
 
 pub const SYSTEMS: [&str; 5] = ["lambdafs", "hopsfs", "hopsfs+cache", "infinicache", "cephfs"];
@@ -44,7 +64,7 @@ pub fn run(scale: Scale, kind: OpKind) -> Fig11 {
             namespace: crate::namespace::generate::NamespaceParams::default(),
             zipf_s: 1.3,
         };
-        let mut tput = Vec::new();
+        let mut points = Vec::new();
         // λFS
         {
             let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), n_clients, spec.n_vms);
@@ -53,80 +73,95 @@ pub fn run(scale: Scale, kind: OpKind) -> Fig11 {
             sys.prewarm(1);
             let mut r = rng.fork(&format!("lfs{n_clients}"));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-            tput.push(sys.into_metrics().sustained_throughput());
+            points.push(SysPoint::from_metrics(&sys.into_metrics()));
         }
         // HopsFS
         {
             let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, false);
             let mut r = rng.fork(&format!("hops{n_clients}"));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-            tput.push(sys.into_metrics().sustained_throughput());
+            points.push(SysPoint::from_metrics(&sys.into_metrics()));
         }
         // HopsFS+Cache
         {
             let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, true);
             let mut r = rng.fork(&format!("hopsc{n_clients}"));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-            tput.push(sys.into_metrics().sustained_throughput());
+            points.push(SysPoint::from_metrics(&sys.into_metrics()));
         }
         // InfiniCache
         {
             let mut sys = InfiniCacheMds::new(cfg.clone(), ns.clone(), 16);
             let mut r = rng.fork(&format!("inf{n_clients}"));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-            tput.push(sys.into_metrics().sustained_throughput());
+            points.push(SysPoint::from_metrics(&sys.into_metrics()));
         }
         // CephFS
         {
             let mut sys = CephFs::new(cfg.clone(), ns.clone(), vcpus);
             let mut r = rng.fork(&format!("ceph{n_clients}"));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-            tput.push(sys.into_metrics().sustained_throughput());
+            points.push(SysPoint::from_metrics(&sys.into_metrics()));
         }
-        rows.push((n_clients, tput));
+        rows.push((n_clients, points));
     }
     Fig11 { kind, rows }
 }
 
 impl Fig11 {
     pub fn report(&self) {
+        // Table: per-system throughput plus the λFS outcome columns
+        // (cache hit ratio and cold starts explain *why* the curve
+        // scales: elastic caching absorbs reads, cold starts front-load
+        // the smallest client counts).
+        let lfs_idx = SYSTEMS.iter().position(|s| *s == "lambdafs").unwrap();
         let rows: Vec<Vec<String>> = self
             .rows
             .iter()
             .map(|(c, t)| {
                 let mut cells = vec![c.to_string()];
-                cells.extend(t.iter().map(|x| common::f0(*x)));
+                cells.extend(t.iter().map(|x| common::f0(x.tput)));
+                cells.push(format!("{:.1}", t[lfs_idx].hit_ratio * 100.0));
+                cells.push(t[lfs_idx].cold_starts.to_string());
                 cells
             })
             .collect();
-        let header: Vec<&str> =
-            std::iter::once("clients").chain(SYSTEMS.iter().copied()).collect();
+        let header: Vec<&str> = std::iter::once("clients")
+            .chain(SYSTEMS.iter().copied())
+            .chain(["λfs_hit_%", "λfs_cold"])
+            .collect();
         common::print_table(
             &format!("Figure 11: client-driven scaling, op={}", self.kind.name()),
             &header,
             &rows,
         );
+        // CSV: throughput, hit-ratio, and cold-start series per system.
+        let csv_header: String = std::iter::once("clients".to_string())
+            .chain(SYSTEMS.iter().flat_map(|s| {
+                [format!("{s}_tput"), format!("{s}_hit_ratio"), format!("{s}_cold")]
+            }))
+            .collect::<Vec<_>>()
+            .join(",");
         let csv: Vec<String> = self
             .rows
             .iter()
             .map(|(c, t)| {
-                format!(
-                    "{c},{}",
-                    t.iter().map(|x| format!("{x:.0}")).collect::<Vec<_>>().join(",")
-                )
+                let mut cells = vec![c.to_string()];
+                for p in t {
+                    cells.push(format!("{:.0}", p.tput));
+                    cells.push(format!("{:.4}", p.hit_ratio));
+                    cells.push(p.cold_starts.to_string());
+                }
+                cells.join(",")
             })
             .collect();
-        common::write_csv(
-            &format!("fig11_{}.csv", self.kind.name()),
-            &header.join(","),
-            &csv,
-        );
+        common::write_csv(&format!("fig11_{}.csv", self.kind.name()), &csv_header, &csv);
     }
 
     /// Throughput of `system` at the largest client count.
     pub fn final_tput(&self, system: &str) -> f64 {
         let idx = SYSTEMS.iter().position(|s| *s == system).unwrap();
-        self.rows.last().unwrap().1[idx]
+        self.rows.last().unwrap().1[idx].tput
     }
 }
 

@@ -3,7 +3,7 @@
 
 use crate::baselines::{CephFs, HopsFs, InfiniCacheMds};
 use crate::namespace::OpKind;
-use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::workload::ClosedLoopSpec;
 
 use super::common::{self, Fixture, Scale};

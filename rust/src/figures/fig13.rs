@@ -5,7 +5,7 @@
 use crate::baselines::HopsFs;
 use crate::metrics::cost::performance_per_cost;
 use crate::namespace::OpKind;
-use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::workload::ClosedLoopSpec;
 
 use super::common::{self, Fixture, Scale};

@@ -3,15 +3,24 @@
 
 use crate::config::AutoScaleMode;
 use crate::namespace::OpKind;
-use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::workload::ClosedLoopSpec;
 
 use super::common::{self, Fixture, Scale};
 
+/// One ablation mode's outcome: throughput plus the cold starts the
+/// Completion stream attributes to it (enabled mode trades cold starts
+/// for elasticity; disabled mode queues instead).
+#[derive(Clone, Copy, Debug)]
+pub struct ModeOutcome {
+    pub tput: f64,
+    pub cold_starts: u64,
+}
+
 #[derive(Debug)]
 pub struct Fig14 {
     /// (op, enabled, limited, disabled).
-    pub rows: Vec<(OpKind, f64, f64, f64)>,
+    pub rows: Vec<(OpKind, ModeOutcome, ModeOutcome, ModeOutcome)>,
 }
 
 pub fn run(scale: Scale) -> Fig14 {
@@ -37,7 +46,8 @@ pub fn run(scale: Scale) -> Fig14 {
             sys.prewarm(1); // running service at benchmark start
             let mut r = rng.fork(&format!("{tag}{}", kind.name()));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-            sys.into_metrics().sustained_throughput()
+            let m = sys.into_metrics();
+            ModeOutcome { tput: m.sustained_throughput(), cold_starts: m.cold_starts }
         };
         let enabled = run_mode(AutoScaleMode::Enabled, "en", &mut rng);
         let limited = run_mode(AutoScaleMode::Limited(3), "lim", &mut rng);
@@ -55,30 +65,51 @@ impl Fig14 {
             .map(|(k, e, l, d)| {
                 vec![
                     k.name().to_string(),
-                    common::f0(*e),
-                    common::f0(*l),
-                    common::f0(*d),
-                    common::f2(e / l.max(1.0)),
-                    common::f2(e / d.max(1.0)),
+                    common::f0(e.tput),
+                    common::f0(l.tput),
+                    common::f0(d.tput),
+                    common::f2(e.tput / l.tput.max(1.0)),
+                    common::f2(e.tput / d.tput.max(1.0)),
+                    e.cold_starts.to_string(),
+                    l.cold_starts.to_string(),
+                    d.cold_starts.to_string(),
                 ]
             })
             .collect();
         common::print_table(
             "Figure 14: auto-scaling ablation (peak ops/s)",
-            &["op", "enabled", "limited", "disabled", "en/lim", "en/dis"],
+            &[
+                "op", "enabled", "limited", "disabled", "en/lim", "en/dis", "cold_en",
+                "cold_lim", "cold_dis",
+            ],
             &rows,
         );
         let csv: Vec<String> = self
             .rows
             .iter()
-            .map(|(k, e, l, d)| format!("{},{e:.0},{l:.0},{d:.0}", k.name()))
+            .map(|(k, e, l, d)| {
+                format!(
+                    "{},{:.0},{:.0},{:.0},{},{},{}",
+                    k.name(),
+                    e.tput,
+                    l.tput,
+                    d.tput,
+                    e.cold_starts,
+                    l.cold_starts,
+                    d.cold_starts
+                )
+            })
             .collect();
-        common::write_csv("fig14_autoscaling.csv", "op,enabled,limited,disabled", &csv);
+        common::write_csv(
+            "fig14_autoscaling.csv",
+            "op,enabled,limited,disabled,cold_enabled,cold_limited,cold_disabled",
+            &csv,
+        );
     }
 
     pub fn row(&self, kind: OpKind) -> (f64, f64, f64) {
         let r = self.rows.iter().find(|(k, ..)| *k == kind).unwrap();
-        (r.1, r.2, r.3)
+        (r.1.tput, r.2.tput, r.3.tput)
     }
 }
 

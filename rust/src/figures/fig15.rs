@@ -2,7 +2,7 @@
 //! NameNode killed every 30 s, round-robin across deployments; λFS starts
 //! with a pre-warmed fleet (paper: 36 NNs).
 
-use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::workload::OpenLoopSpec;
 
 use super::common::{self, Fixture, Scale};
@@ -14,6 +14,10 @@ pub struct Fig15 {
     pub kills: u64,
     pub completed: u64,
     pub total_target: u64,
+    /// Ops that paid a cold start — recovery from kills shows up here.
+    pub cold_starts: u64,
+    /// Straggler/lock retries across the run.
+    pub retries: u64,
 }
 
 pub fn run(scale: Scale) -> Fig15 {
@@ -69,6 +73,8 @@ pub fn run(scale: Scale) -> Fig15 {
         kills,
         completed: m.completed_ops,
         total_target: m.seconds.iter().map(|s| s.target).sum(),
+        cold_starts: m.cold_starts,
+        retries: m.total_retries(),
     }
 }
 
@@ -83,8 +89,13 @@ impl Fig15 {
                 vec!["ops targeted".into(), self.total_target.to_string()],
                 vec![
                     "completion".into(),
-                    format!("{:.2}%", 100.0 * self.completed as f64 / self.total_target.max(1) as f64),
+                    format!(
+                        "{:.2}%",
+                        100.0 * self.completed as f64 / self.total_target.max(1) as f64
+                    ),
                 ],
+                vec!["cold starts".into(), self.cold_starts.to_string()],
+                vec!["retries".into(), self.retries.to_string()],
             ],
         );
         let csv: Vec<String> = self

@@ -3,7 +3,7 @@
 
 use crate::baselines::HopsFs;
 use crate::namespace::{DirInfo, DirId, Namespace, OpKind, Operation};
-use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::workload::ClosedLoopSpec;
 
 use super::common::{self, Scale};
@@ -66,8 +66,8 @@ pub fn run(scale: Scale) -> Table3 {
         // HopsFS: leader-executed batches.
         let hops_ms = {
             let mut sys = HopsFs::new(cfg.clone(), ns.clone(), 512.0, false);
-            let done = sys.submit(0, 0, &op, &mut rng);
-            crate::sim::time::to_ms(done)
+            let done = sys.submit(crate::systems::Request::new(0, 0, &op), &mut rng);
+            crate::sim::time::to_ms(done.done)
         };
         // λFS: prefix INV + serverless offloading. Warm a fleet first
         // (helpers for offloading).
@@ -87,8 +87,8 @@ pub fn run(scale: Scale) -> Table3 {
                 crate::namespace::generate::HotspotSampler::new(&ns, 1.2, &mut rng);
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
             let start = 30 * crate::sim::time::SEC;
-            let done = sys.submit(start, 0, &op, &mut rng);
-            crate::sim::time::to_ms(done - start)
+            let done = sys.submit(crate::systems::Request::new(start, 0, &op), &mut rng);
+            crate::sim::time::to_ms(done.done - start)
         };
         rows.push((files, hops_ms, lfs_ms));
     }

@@ -1,6 +1,11 @@
 //! Per-run metrics: everything a figure needs from one workload execution.
 
+use crate::systems::{CacheOutcome, Outcome};
 use crate::util::hist::Histogram;
+
+/// Retry-count histogram width: bucket `i` counts ops that needed `i`
+/// resubmissions; the last bucket absorbs `RETRY_BUCKETS - 1` and up.
+pub const RETRY_BUCKETS: usize = 8;
 
 /// One second of the run (the figures' time-series resolution).
 #[derive(Clone, Copy, Debug, Default)]
@@ -37,6 +42,25 @@ pub struct RunMetrics {
     /// throughput on short closed-loop runs where 1 s buckets saturate.
     pub first_completion_us: u64,
     pub last_completion_us: u64,
+    /// Ops served by an instance provisioned for that very request
+    /// (folded from [`Outcome::cold_start`]). Conservation invariant:
+    /// `cold_starts + warm_ops == completed_ops` whenever every recorded
+    /// op also records its outcome (the drivers guarantee this).
+    pub cold_starts: u64,
+    /// Ops served by an already-warm instance/server.
+    pub warm_ops: u64,
+    /// Ops served from an in-memory metadata cache.
+    pub cache_hits: u64,
+    /// Ops that missed the cache and paid a persistent-store read.
+    pub cache_misses: u64,
+    /// Histogram of per-op resubmission counts: `retry_hist[i]` ops
+    /// needed `i` retries (last bucket absorbs the tail).
+    pub retry_hist: [u64; RETRY_BUCKETS],
+    /// Ops per serving deployment/server id (grown on demand).
+    pub per_deployment_ops: Vec<u64>,
+    /// Total attributed service cost in µs (busy time billed to the
+    /// serving nodes).
+    pub attributed_cost_us: u64,
 }
 
 impl Default for RunMetrics {
@@ -58,6 +82,65 @@ impl RunMetrics {
             resubmissions: 0,
             first_completion_us: u64::MAX,
             last_completion_us: 0,
+            cold_starts: 0,
+            warm_ops: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            retry_hist: [0; RETRY_BUCKETS],
+            per_deployment_ops: Vec::new(),
+            attributed_cost_us: 0,
+        }
+    }
+
+    /// Fold one per-op [`Outcome`] into the counters. The drivers call
+    /// this exactly once per completed op, alongside [`Self::record_at`].
+    pub fn record_outcome(&mut self, o: &Outcome) {
+        if o.cold_start {
+            self.cold_starts += 1;
+        } else {
+            self.warm_ops += 1;
+        }
+        match o.cache {
+            CacheOutcome::Hit => self.cache_hits += 1,
+            CacheOutcome::Miss => self.cache_misses += 1,
+            CacheOutcome::Bypass => {}
+        }
+        self.retry_hist[(o.retries as usize).min(RETRY_BUCKETS - 1)] += 1;
+        let s = o.server as usize;
+        if self.per_deployment_ops.len() <= s {
+            self.per_deployment_ops.resize(s + 1, 0);
+        }
+        self.per_deployment_ops[s] += 1;
+        self.attributed_cost_us += o.cost_us;
+    }
+
+    /// Total resubmissions folded from outcomes (weighted retry_hist sum;
+    /// the tail bucket counts at its floor value).
+    pub fn total_retries(&self) -> u64 {
+        self.retry_hist
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| i as u64 * n)
+            .sum()
+    }
+
+    /// Cache hit ratio over ops that consulted a cache (hits + misses);
+    /// 0 when no op did.
+    pub fn cache_hit_ratio(&self) -> f64 {
+        let consulted = self.cache_hits + self.cache_misses;
+        if consulted == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / consulted as f64
+        }
+    }
+
+    /// Fraction of ops that paid a cold start.
+    pub fn cold_start_ratio(&self) -> f64 {
+        if self.completed_ops == 0 {
+            0.0
+        } else {
+            self.cold_starts as f64 / self.completed_ops as f64
         }
     }
 
@@ -158,6 +241,12 @@ impl RunMetrics {
     /// latency histograms. Two runs with the same seed must produce the
     /// same fingerprint — the determinism regression contract
     /// (`rust/tests/determinism.rs`).
+    ///
+    /// Deliberately hashes the SAME field set as before the
+    /// `MetadataService` migration, so seeded closed-loop runs (whose
+    /// issue schedule the migration did not touch) keep their historical
+    /// fingerprints; the new per-op outcome ledger is digested by the
+    /// superset [`Self::outcome_fingerprint`].
     pub fn fingerprint(&self) -> u64 {
         use std::hash::Hasher;
         let mut h = crate::util::fasthash::FnvHasher::default();
@@ -178,6 +267,31 @@ impl RunMetrics {
         h.write_u64(self.read_lat.fingerprint());
         h.write_u64(self.write_lat.fingerprint());
         h.write_u64(self.all_lat.fingerprint());
+        h.finish()
+    }
+
+    /// Superset digest: [`Self::fingerprint`] extended with the per-op
+    /// outcome ledger (cold starts, cache hits/misses, retry histogram,
+    /// per-deployment op counts, attributed cost). The `submit_batch` ≡
+    /// `submit` contract is pinned on THIS digest, so a batch override
+    /// cannot silently reorder or drop outcomes even when latencies and
+    /// throughput agree.
+    pub fn outcome_fingerprint(&self) -> u64 {
+        use std::hash::Hasher;
+        let mut h = crate::util::fasthash::FnvHasher::default();
+        h.write_u64(self.fingerprint());
+        h.write_u64(self.cold_starts);
+        h.write_u64(self.warm_ops);
+        h.write_u64(self.cache_hits);
+        h.write_u64(self.cache_misses);
+        for &n in &self.retry_hist {
+            h.write_u64(n);
+        }
+        h.write_usize(self.per_deployment_ops.len());
+        for &n in &self.per_deployment_ops {
+            h.write_u64(n);
+        }
+        h.write_u64(self.attributed_cost_us);
         h.finish()
     }
 }
@@ -235,6 +349,56 @@ mod tests {
         m.second_mut(1).cost_simplified_usd = 1.0;
         assert!((m.total_cost() - 0.75).abs() < 1e-12);
         assert!((m.total_cost_simplified() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outcome_counters_fold_and_conserve() {
+        use crate::systems::{CacheOutcome, Outcome};
+        let mut m = RunMetrics::new();
+        m.record(0, 1.0, false);
+        m.record_outcome(&Outcome {
+            cold_start: true,
+            cache: CacheOutcome::Miss,
+            retries: 0,
+            server: 3,
+            cost_us: 250,
+        });
+        m.record(0, 2.0, false);
+        m.record_outcome(&Outcome {
+            cold_start: false,
+            cache: CacheOutcome::Hit,
+            retries: 2,
+            server: 1,
+            cost_us: 40,
+        });
+        m.record(0, 3.0, true);
+        m.record_outcome(&Outcome {
+            cold_start: false,
+            cache: CacheOutcome::Bypass,
+            retries: 100, // clamps into the tail bucket
+            server: 3,
+            cost_us: 10,
+        });
+        assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops);
+        assert_eq!(m.cache_hits, 1);
+        assert_eq!(m.cache_misses, 1);
+        assert_eq!(m.retry_hist.iter().sum::<u64>(), m.completed_ops);
+        assert_eq!(m.retry_hist[0], 1);
+        assert_eq!(m.retry_hist[2], 1);
+        assert_eq!(m.retry_hist[RETRY_BUCKETS - 1], 1);
+        assert_eq!(m.per_deployment_ops, vec![0, 1, 0, 2]);
+        assert_eq!(m.per_deployment_ops.iter().sum::<u64>(), m.completed_ops);
+        assert_eq!(m.attributed_cost_us, 300);
+        assert!((m.cache_hit_ratio() - 0.5).abs() < 1e-12);
+        assert!((m.cold_start_ratio() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(m.total_retries(), 2 + (RETRY_BUCKETS as u64 - 1));
+        // The base fingerprint keeps its pre-migration domain (no
+        // outcome fields); the outcome superset digest sees them.
+        let fp = m.fingerprint();
+        let ofp = m.outcome_fingerprint();
+        m.record_outcome(&Outcome::warm(0));
+        assert_eq!(fp, m.fingerprint(), "base fingerprint ignores outcomes");
+        assert_ne!(ofp, m.outcome_fingerprint(), "outcome digest sees them");
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Workload drivers, generic over [`MdsSim`].
+//! Workload drivers, generic over [`MetadataService`].
 
 use crate::namespace::generate::HotspotSampler;
 use crate::namespace::{Namespace, OpKind, Operation};
@@ -7,7 +7,39 @@ use crate::sim::{time, Time};
 use crate::util::rng::Rng;
 use crate::workload::{ClosedLoopSpec, OpenLoopSpec};
 
-use super::MdsSim;
+use super::{Completion, MetadataService, Request};
+
+/// Record one completion: latency + per-second throughput + the per-op
+/// outcome counters (cold starts, cache hits/misses, retries,
+/// per-deployment op counts). `pub(crate)` so `trace::replay` folds
+/// completions through the identical pairing — the conservation
+/// invariant (`cold_starts + warm_ops == completed_ops`) holds only if
+/// `record_at` and `record_outcome` are always called together.
+pub(crate) fn record<S: MetadataService>(
+    sys: &mut S,
+    issue: Time,
+    c: &Completion,
+    is_write: bool,
+) {
+    let lat_ms = time::to_ms(c.done - issue);
+    let m = sys.metrics_mut();
+    m.record_at(c.done, lat_ms, is_write);
+    m.record_outcome(&c.outcome);
+}
+
+/// The intended issue slot for op `i` of `n_ops` within second `s`:
+/// ops spread uniformly across the second. Multiply-before-divide
+/// distributes the remainder over the slots instead of truncating a
+/// fixed spacing (`SEC / n_ops`), which at high per-second targets
+/// compressed every op toward the front of the second.
+///
+/// `pub(crate)` because the formula is fingerprint-load-bearing:
+/// `trace::synth::assemble` must lay synthetic traces out on the exact
+/// slots this driver would use, so both share this single definition.
+#[inline]
+pub(crate) fn open_loop_slot(s: usize, i: u64, n_ops: u64) -> Time {
+    s as Time * time::SEC + i * time::SEC / n_ops.max(1)
+}
 
 /// Open-loop driver (the Spotify workload, §5.2.1).
 ///
@@ -15,13 +47,15 @@ use super::MdsSim;
 /// uniformly across the second and round-robined over clients. A client
 /// whose previous op has not completed issues late — unfinished work
 /// "rolls over", exactly the hammer-bench behaviour the paper describes.
+/// The submitted [`Request`] carries both the intended slot and the
+/// realized issue time, so recorders capture the pure schedule.
 ///
 /// Op *sampling* draws from a stream forked off `rng`; only submit-side
 /// draws stay on `rng` itself. This keeps the submit stream free of
 /// sampling draws, which is what lets `trace::replay` reproduce a
 /// recorded run bit for bit without re-sampling (a replay performs the
 /// same fork and discards it).
-pub fn run_open_loop<S: MdsSim>(
+pub fn run_open_loop<S: MetadataService>(
     sys: &mut S,
     spec: &OpenLoopSpec,
     ns: &Namespace,
@@ -44,18 +78,87 @@ pub fn run_open_loop<S: MdsSim>(
             sys.on_second(s);
             continue;
         }
-        let spacing = time::SEC / n_ops.max(1);
         for i in 0..n_ops {
-            let slot = s as Time * time::SEC + i * spacing;
+            let slot = open_loop_slot(s, i, n_ops);
             let c = next_client;
             next_client = (next_client + 1) % n_clients;
             // Roll over: the client issues as soon as it is free.
             let issue = slot.max(ready[c as usize]);
             let op = spec.mix.sample_op(ns, sampler, &mut op_rng);
-            let done = sys.submit(issue, c, &op, rng);
-            ready[c as usize] = done;
-            let lat_ms = time::to_ms(done - issue);
-            sys.metrics_mut().record_at(done, lat_ms, op.kind.is_write());
+            let done = sys.submit(Request::scheduled(slot, issue, c, &op), rng);
+            ready[c as usize] = done.done;
+            record(sys, issue, &done, op.kind.is_write());
+        }
+        sys.on_second(s);
+    }
+}
+
+/// Open-loop driver over [`MetadataService::submit_batch`]: identical op
+/// stream, client rotation, and rollover semantics as [`run_open_loop`],
+/// but requests are staged and submitted in batches of up to one request
+/// per client. Within such a batch every issue time is already known
+/// (each client appears at most once, so no request's issue depends on
+/// another's completion), which is what makes batching sound.
+///
+/// For any conforming `submit_batch` implementation this produces a
+/// `RunMetrics::fingerprint` bit-identical to the scalar driver — pinned
+/// in `rust/tests/determinism.rs`.
+pub fn run_open_loop_batched<S: MetadataService>(
+    sys: &mut S,
+    spec: &OpenLoopSpec,
+    ns: &Namespace,
+    sampler: &HotspotSampler,
+    rng: &mut Rng,
+) {
+    let mut op_rng = rng.fork("ops");
+    let n_clients = spec.n_clients.max(1);
+    let mut ready: Vec<Time> = vec![0; n_clients as usize];
+    let mut next_client = 0u32;
+    let mut carry = 0.0f64;
+    let duration = spec.schedule.duration_s();
+
+    // Staged (op, slot, issue, client) tuples and the completion buffer
+    // are reused across batches. The borrowed `Request` views must be
+    // rebuilt per chunk (their lifetime is tied to that chunk's staged
+    // ops, so the view buffer cannot be recycled without `unsafe`):
+    // one small Vec allocation per chunk, amortized over its up-to-
+    // `n_clients` requests — the per-op submit work dominates it.
+    let mut staged: Vec<(Operation, Time, Time, u32)> = Vec::new();
+    let mut completions: Vec<Completion> = Vec::new();
+
+    for s in 0..duration {
+        let target = spec.schedule.target(s) + carry;
+        let n_ops = target.floor() as u64;
+        carry = target - n_ops as f64;
+        sys.metrics_mut().second_mut(s).target = n_ops;
+        if n_ops == 0 {
+            sys.on_second(s);
+            continue;
+        }
+        let mut i = 0u64;
+        while i < n_ops {
+            let chunk = (n_ops - i).min(n_clients as u64);
+            staged.clear();
+            for j in 0..chunk {
+                let slot = open_loop_slot(s, i + j, n_ops);
+                let c = next_client;
+                next_client = (next_client + 1) % n_clients;
+                let issue = slot.max(ready[c as usize]);
+                let op = spec.mix.sample_op(ns, sampler, &mut op_rng);
+                staged.push((op, slot, issue, c));
+            }
+            let reqs: Vec<Request<'_>> = staged
+                .iter()
+                .map(|(op, slot, issue, c)| Request::scheduled(*slot, *issue, *c, op))
+                .collect();
+            sys.submit_batch(&reqs, &mut completions, rng);
+            debug_assert_eq!(completions.len(), reqs.len());
+            for (idx, (op, _, issue, c)) in staged.iter().enumerate() {
+                let done = completions[idx];
+                ready[*c as usize] = done.done;
+                record(sys, *issue, &done, op.kind.is_write());
+            }
+            i += chunk;
         }
         sys.on_second(s);
     }
@@ -64,7 +167,7 @@ pub fn run_open_loop<S: MdsSim>(
 /// Closed-loop driver (the §5.3 micro-benchmarks): every client issues its
 /// next op the moment the previous one completes, until each has performed
 /// `ops_per_client` operations.
-pub fn run_closed_loop<S: MdsSim>(
+pub fn run_closed_loop<S: MetadataService>(
     sys: &mut S,
     spec: &ClosedLoopSpec,
     ns: &Namespace,
@@ -79,8 +182,10 @@ pub fn run_closed_loop<S: MdsSim>(
 /// phase does not race the earlier phase's queued work.
 ///
 /// Like [`run_open_loop`], op sampling draws from a forked stream so the
-/// submit stream is replayable (see `trace::replay`).
-pub fn run_closed_loop_from<S: MdsSim>(
+/// submit stream is replayable (see `trace::replay`). Batching does not
+/// apply here: every issue time is a completion of the previous op, so
+/// the dependency chain is inherently scalar.
+pub fn run_closed_loop_from<S: MetadataService>(
     sys: &mut S,
     spec: &ClosedLoopSpec,
     ns: &Namespace,
@@ -92,9 +197,15 @@ pub fn run_closed_loop_from<S: MdsSim>(
     let mut q: EventQueue<u32> = EventQueue::new();
     let mut remaining: Vec<u32> = vec![spec.ops_per_client; spec.n_clients as usize];
     // Stagger initial issues over the first 100 ms (clients do not start
-    // in perfect lockstep).
+    // in perfect lockstep). Parenthesized to make the remainder-
+    // distributing multiply-before-divide order explicit: `c * 100_000`
+    // first, so a fleet larger than 100k clients still spreads over the
+    // window (a `100_000 / n` spacing would truncate to 0 there). Same
+    // arithmetic the expression always performed — closed-loop
+    // fingerprints are unchanged.
+    let n_clients = spec.n_clients.max(1) as Time;
     for c in 0..spec.n_clients {
-        q.schedule_at(start + (c as Time) * 100_000 / spec.n_clients.max(1) as Time, c);
+        q.schedule_at(start + (c as Time * 100_000) / n_clients, c);
     }
     let mut last_second = time::to_sec(start) as usize;
     while let Some(ev) = q.pop() {
@@ -106,12 +217,11 @@ pub fn run_closed_loop_from<S: MdsSim>(
             last_second += 1;
         }
         let op = sample_closed_op(spec.kind, ns, sampler, &mut op_rng);
-        let done = sys.submit(now, c, &op, rng);
-        let lat_ms = time::to_ms(done - now);
-        sys.metrics_mut().record_at(done, lat_ms, op.kind.is_write());
+        let done = sys.submit(Request::new(now, c, &op), rng);
+        record(sys, now, &done, op.kind.is_write());
         remaining[c as usize] -= 1;
         if remaining[c as usize] > 0 {
-            q.schedule_at(done, c);
+            q.schedule_at(done.done, c);
         }
     }
     sys.on_second(last_second);
@@ -142,18 +252,41 @@ mod tests {
     use crate::metrics::RunMetrics;
     use crate::namespace::generate::{generate, NamespaceParams};
     use crate::sim::time;
+    use crate::systems::{CacheOutcome, Outcome};
     use crate::workload::ThroughputSchedule;
 
     /// A trivial system: fixed 2ms latency, no queueing.
     struct FixedLatency {
         metrics: RunMetrics,
         submitted: u64,
+        batches: u64,
     }
 
-    impl MdsSim for FixedLatency {
-        fn submit(&mut self, now: Time, _c: u32, _op: &Operation, _r: &mut Rng) -> Time {
+    impl FixedLatency {
+        fn new() -> Self {
+            FixedLatency { metrics: RunMetrics::new(), submitted: 0, batches: 0 }
+        }
+    }
+
+    impl MetadataService for FixedLatency {
+        fn submit(&mut self, req: Request<'_>, _r: &mut Rng) -> Completion {
             self.submitted += 1;
-            now + time::from_ms(2.0)
+            Completion {
+                done: req.at + time::from_ms(2.0),
+                outcome: Outcome { cache: CacheOutcome::Hit, ..Outcome::warm(0) },
+            }
+        }
+        fn submit_batch(
+            &mut self,
+            reqs: &[Request<'_>],
+            out: &mut Vec<Completion>,
+            rng: &mut Rng,
+        ) {
+            self.batches += 1;
+            out.clear();
+            for req in reqs {
+                out.push(self.submit(*req, rng));
+            }
         }
         fn on_second(&mut self, _s: usize) {}
         fn metrics_mut(&mut self) -> &mut RunMetrics {
@@ -171,21 +304,28 @@ mod tests {
         (ns, sampler, rng)
     }
 
-    #[test]
-    fn open_loop_hits_target_when_system_is_fast() {
-        let (ns, sampler, mut rng) = fixtures();
-        let spec = OpenLoopSpec {
-            schedule: ThroughputSchedule::constant(5, 1_000.0),
+    fn open_spec(secs: usize, x_t: f64, n_clients: u32) -> OpenLoopSpec {
+        OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(secs, x_t),
             mix: crate::workload::OpMix::spotify(),
-            n_clients: 64,
+            n_clients,
             n_vms: 2,
             namespace: NamespaceParams::default(),
             zipf_s: 1.3,
-        };
-        let mut sys = FixedLatency { metrics: RunMetrics::new(), submitted: 0 };
+        }
+    }
+
+    #[test]
+    fn open_loop_hits_target_when_system_is_fast() {
+        let (ns, sampler, mut rng) = fixtures();
+        let spec = open_spec(5, 1_000.0, 64);
+        let mut sys = FixedLatency::new();
         run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
         let m = sys.into_metrics();
         assert_eq!(m.completed_ops, 5_000);
+        // Outcome conservation: one outcome folded per completed op.
+        assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops);
+        assert_eq!(m.cache_hits, m.completed_ops);
         // Fast system: every second completes its target.
         for s in 0..5 {
             assert!(
@@ -197,14 +337,52 @@ mod tests {
     }
 
     #[test]
+    fn open_loop_slots_distribute_remainders() {
+        // 7 ops/s: a truncated spacing (142_857) would leave the last op
+        // at 857_142; remainder distribution pushes slots to i*SEC/7 and
+        // keeps the final slot within 1/n of the second's end.
+        assert_eq!(open_loop_slot(0, 6, 7), 6 * time::SEC / 7);
+        // High-rate second: the last slot reaches the end of the second
+        // instead of compressing toward the front.
+        let n = 999_983u64; // prime, maximal truncation loss
+        let last = open_loop_slot(0, n - 1, n);
+        assert!(last >= time::SEC - time::SEC / n - 1, "last slot {last}");
+        // Old behaviour for comparison: spacing truncates to 1 µs and
+        // the last op lands at ~n µs — the whole second's load in the
+        // first ~1/1000th of it. The fixed slots stay monotone.
+        assert!(open_loop_slot(0, 1, n) >= open_loop_slot(0, 0, n));
+    }
+
+    #[test]
+    fn batched_open_loop_matches_scalar_bit_for_bit() {
+        let (ns, sampler, _) = fixtures();
+        // Target not divisible by the client count: chunking must handle
+        // the ragged tail batch.
+        let spec = open_spec(4, 733.0, 48);
+        let mut scalar = FixedLatency::new();
+        let mut r1 = Rng::new(0xabc);
+        run_open_loop(&mut scalar, &spec, &ns, &sampler, &mut r1);
+        let m_scalar = scalar.into_metrics();
+
+        let mut batched = FixedLatency::new();
+        let mut r2 = Rng::new(0xabc);
+        run_open_loop_batched(&mut batched, &spec, &ns, &sampler, &mut r2);
+        assert!(batched.batches > 0, "batch path exercised");
+        let m_batched = batched.into_metrics();
+        assert_eq!(m_scalar.fingerprint(), m_batched.fingerprint());
+        assert_eq!(m_scalar.outcome_fingerprint(), m_batched.outcome_fingerprint());
+    }
+
+    #[test]
     fn open_loop_rolls_over_when_system_is_slow() {
         let (ns, sampler, mut rng) = fixtures();
         struct Slow {
             metrics: RunMetrics,
         }
-        impl MdsSim for Slow {
-            fn submit(&mut self, now: Time, _c: u32, _o: &Operation, _r: &mut Rng) -> Time {
-                now + time::from_ms(100.0) // each client: 10 ops/sec max
+        impl MetadataService for Slow {
+            fn submit(&mut self, req: Request<'_>, _r: &mut Rng) -> Completion {
+                // each client: 10 ops/sec max
+                Completion { done: req.at + time::from_ms(100.0), outcome: Outcome::warm(0) }
             }
             fn on_second(&mut self, _s: usize) {}
             fn metrics_mut(&mut self) -> &mut RunMetrics {
@@ -215,14 +393,7 @@ mod tests {
             }
         }
         // 8 clients x 10 ops/s = 80 ops/s capacity, target 1000/s.
-        let spec = OpenLoopSpec {
-            schedule: ThroughputSchedule::constant(3, 1_000.0),
-            mix: crate::workload::OpMix::spotify(),
-            n_clients: 8,
-            n_vms: 1,
-            namespace: NamespaceParams::default(),
-            zipf_s: 1.3,
-        };
+        let spec = open_spec(3, 1_000.0, 8);
         let mut sys = Slow { metrics: RunMetrics::new() };
         run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
         let m = sys.into_metrics();
@@ -244,11 +415,12 @@ mod tests {
             namespace: NamespaceParams::default(),
             zipf_s: 1.3,
         };
-        let mut sys = FixedLatency { metrics: RunMetrics::new(), submitted: 0 };
+        let mut sys = FixedLatency::new();
         run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
         assert_eq!(sys.submitted, 1_600);
         let m = sys.into_metrics();
         assert_eq!(m.completed_ops, 1_600);
+        assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops);
         // 16 clients x 2ms per op -> 8000 ops/sec -> done in ~0.2s.
         assert!(m.seconds.len() <= 2);
     }
@@ -265,7 +437,7 @@ mod tests {
                 namespace: NamespaceParams::default(),
                 zipf_s: 1.3,
             };
-            let mut sys = FixedLatency { metrics: RunMetrics::new(), submitted: 0 };
+            let mut sys = FixedLatency::new();
             run_closed_loop(&mut sys, &spec, &ns, &sampler, rng);
             sys.into_metrics().peak_throughput()
         };

@@ -24,7 +24,7 @@ use crate::util::rng::Rng;
 
 use std::hash::BuildHasher;
 
-use super::MdsSim;
+use super::{CacheOutcome, Completion, MetadataService, Outcome, Request};
 
 /// λFS under simulation.
 ///
@@ -207,8 +207,9 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
     }
 
     /// Serve a read-class op on `inst` starting at `arrive`; returns the
-    /// service completion time on the NameNode.
-    fn serve_read(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> Time {
+    /// service completion time on the NameNode and whether the op hit
+    /// the instance's metadata cache.
+    fn serve_read(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> (Time, bool) {
         let mut rng = self.rng.fork_fast();
         let kind = op.kind;
         let hit = self.caches[inst.0 as usize].get(op.target).is_some();
@@ -219,7 +220,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         };
         let (_, cpu_done) = self.platform.instance_mut(inst).cpu.submit(arrive, cpu);
         if hit {
-            return cpu_done;
+            return (cpu_done, true);
         }
         // Miss: batched path resolution against NDB (one round trip — the
         // INode hint cache), then fill the cache with the whole path.
@@ -235,7 +236,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             cache.insert_version(InodeRef::dir(dir), self.store.version(InodeRef::dir(dir)));
             d = self.ns.dir(dir).parent;
         }
-        store_done
+        (store_done, false)
     }
 
     /// Serve a write-class op on `inst`: coherence protocol, then the
@@ -301,8 +302,9 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
     }
 
     /// Serve a subtree op (Appendix C): subtree lock + quiesce + single
-    /// prefix INV + offloaded batches.
-    fn serve_subtree(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> Time {
+    /// prefix INV + offloaded batches. Returns the completion time and
+    /// how many lock retries the op needed.
+    fn serve_subtree(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> (Time, u32) {
         let mut rng = self.rng.fork_fast();
         let router = &self.router;
         let ns = &self.ns;
@@ -338,13 +340,13 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         };
         let params = SubtreeParams { batch: self.cfg.lambda_fs.subtree_batch, parallelism };
         match subtree::execute(outcome.complete_at, &plan, params, &mut self.store, &mut rng) {
-            Ok(done) => done,
+            Ok(done) => (done, 0),
             Err(_) => {
                 // Overlapping subtree op: retry after the lock-retry pause.
                 let retry = outcome.complete_at + time::from_ms(self.cfg.store.lock_retry_ms * 10.0);
-                subtree::execute(retry, &plan, params, &mut self.store, &mut rng)
-                    .map(|d| d)
-                    .unwrap_or(retry + time::SEC)
+                let done = subtree::execute(retry, &plan, params, &mut self.store, &mut rng)
+                    .unwrap_or(retry + time::SEC);
+                (done, 1)
             }
         }
     }
@@ -362,19 +364,25 @@ impl ForkFast for Rng {
     }
 }
 
-impl<S: BuildHasher + Default> MdsSim for LambdaFs<S> {
-    fn submit(&mut self, now: Time, client: u32, op: &Operation, rng: &mut Rng) -> Time {
-        let c = client as usize % self.clients.len().max(1);
+impl<S: BuildHasher + Default> LambdaFs<S> {
+    /// Serve one request on an already-routed deployment. This is the
+    /// single execution path behind both `submit` (which routes first)
+    /// and `submit_batch` (which amortizes routing across the batch):
+    /// every RNG draw happens here, in one fixed order, so the two entry
+    /// points are outcome-identical by construction.
+    fn submit_routed(&mut self, req: Request<'_>, dep: u32, rng: &mut Rng) -> Completion {
+        let now = req.at;
+        let op = req.op;
+        let c = req.client as usize % self.clients.len().max(1);
         let vm = self.clients[c].vm;
-        let dep = self.router.route(&self.ns, op.target);
 
         // Path choice: TCP when a connection exists (own or shared),
         // randomized HTTP replacement for elasticity (§3.4).
         let tcp_inst = self.tcp_target(vm, dep, now);
         let path = self.clients[c].choose_path(tcp_inst.is_some(), rng);
 
-        let (inst, arrive, http_used) = match (path, tcp_inst) {
-            (RpcPath::Tcp, Some(i)) => (i, now + self.net.tcp_hop(rng), false),
+        let (inst, arrive, http_used, cold_start) = match (path, tcp_inst) {
+            (RpcPath::Tcp, Some(i)) => (i, now + self.net.tcp_hop(rng), false, false),
             _ => {
                 // HTTP: gateway + invoker placement (may cold start).
                 // Scale-out decisions sample congestion at invocation
@@ -382,17 +390,25 @@ impl<S: BuildHasher + Default> MdsSim for LambdaFs<S> {
                 // gateway + network legs.
                 let gw_done = self.platform.gateway_admit(now, rng);
                 let leg = self.net.http_leg(rng);
-                let (i, ready) = self.platform.place_http(dep, now, rng);
+                let (i, ready, cold) = self.platform.place_http_traced(dep, now, rng);
                 self.register(i);
-                (i, ready.max(gw_done + leg), true)
+                (i, ready.max(gw_done + leg), true, cold)
             }
         };
         self.register(inst);
 
-        let served = match op.kind {
-            k if k.is_subtree() => self.serve_subtree(inst, op, arrive),
-            k if k.is_write() => self.serve_write(inst, op, arrive),
-            _ => self.serve_read(inst, op, arrive),
+        let mut retries = 0u32;
+        let (served, cache) = match op.kind {
+            k if k.is_subtree() => {
+                let (t, r) = self.serve_subtree(inst, op, arrive);
+                retries += r;
+                (t, CacheOutcome::Bypass)
+            }
+            k if k.is_write() => (self.serve_write(inst, op, arrive), CacheOutcome::Bypass),
+            _ => {
+                let (t, hit) = self.serve_read(inst, op, arrive);
+                (t, if hit { CacheOutcome::Hit } else { CacheOutcome::Miss })
+            }
         };
 
         // Reply hop back to the client.
@@ -411,15 +427,18 @@ impl<S: BuildHasher + Default> MdsSim for LambdaFs<S> {
         // the detection time plus a fast retry on a warm path.
         let lat_ms = time::to_ms(done - now);
         if self.clients[c].is_straggler(lat_ms) {
-            let detect =
-                now + time::from_ms(self.clients[c].window.mean() * self.cfg.lambda_fs.straggler_threshold);
+            let detect = now
+                + time::from_ms(
+                    self.clients[c].window.mean() * self.cfg.lambda_fs.straggler_threshold,
+                );
             let retry_arrive = detect + self.net.tcp_hop(rng);
             let retried = match op.kind {
                 k if k.is_subtree() => None, // subtree ops are not raced
                 k if k.is_write() => None,   // writes must not double-commit
-                _ => Some(self.serve_read(inst, op, retry_arrive)),
+                _ => Some(self.serve_read(inst, op, retry_arrive).0),
             };
             if let Some(r) = retried {
+                retries += 1;
                 let retry_done = r + self.net.tcp_hop(rng);
                 if retry_done < done {
                     done = retry_done;
@@ -432,7 +451,48 @@ impl<S: BuildHasher + Default> MdsSim for LambdaFs<S> {
         // completion (idle NameNodes accrue no pay-per-use cost).
         self.platform.instance_mut(inst).bill(arrive, served);
         self.clients[c].observe(time::to_ms(done - now));
-        done
+        Completion {
+            done,
+            outcome: Outcome {
+                cold_start,
+                cache,
+                retries,
+                server: dep,
+                cost_us: served.saturating_sub(arrive),
+            },
+        }
+    }
+}
+
+impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
+    fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
+        let dep = self.router.route(&self.ns, req.op.target);
+        self.submit_routed(req, dep, rng)
+    }
+
+    /// Batch submission with amortized routing: consecutive requests
+    /// that share a routing key — (containing dir, file-vs-dir), the
+    /// exact domain of [`Router::route`] — reuse the previous lookup
+    /// (hot directories under Zipf skew make such runs common). Because
+    /// routing is pure and consumes no RNG, this is bit-identical to
+    /// the scalar loop — pinned in `rust/tests/determinism.rs`.
+    fn submit_batch(&mut self, reqs: &[Request<'_>], out: &mut Vec<Completion>, rng: &mut Rng) {
+        out.clear();
+        out.reserve(reqs.len());
+        let mut memo: Option<(crate::namespace::DirId, bool, u32)> = None;
+        for req in reqs {
+            let t = req.op.target;
+            let key = (t.dir, t.file.is_some());
+            let dep = match memo {
+                Some((d, f, dep)) if (d, f) == key => dep,
+                _ => {
+                    let dep = self.router.route(&self.ns, t);
+                    memo = Some((key.0, key.1, dep));
+                    dep
+                }
+            };
+            out.push(self.submit_routed(*req, dep, rng));
+        }
     }
 
     fn on_second(&mut self, second: usize) {

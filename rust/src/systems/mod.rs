@@ -1,14 +1,44 @@
 //! End-to-end system simulations and the shared workload drivers.
 //!
-//! Every evaluated system — λFS and each baseline — implements [`MdsSim`];
-//! the open-loop (Spotify) and closed-loop (micro-benchmark) drivers are
-//! generic over it, so all systems see *identical* op streams for a given
-//! seed.
+//! Every evaluated system — λFS and each baseline — implements
+//! [`MetadataService`], the outcome-bearing submission API. The paper's
+//! central claims (elasticity, cold-start absorption, cache-hit-driven
+//! latency — §5) are *per-op outcome* phenomena, so the contract carries
+//! them explicitly instead of collapsing every operation to a bare
+//! completion time:
+//!
+//! * [`Request`] is a typed envelope: the operation, the issuing client,
+//!   the generator's *intended* issue slot (pre-rollover), and the
+//!   realized issue time. Carrying the intended slot is what lets the
+//!   trace engine record pure schedules even from a saturated system
+//!   (see `trace::record`).
+//! * [`Completion`] pairs the completion time with an [`Outcome`]:
+//!   warm vs cold-started, cache hit/miss/bypass, retry count, the
+//!   serving deployment (or server index), and the attributed service
+//!   cost in µs. Drivers fold outcomes into [`RunMetrics`], so scenario
+//!   matrices and figures can report hit ratios and cold-start counts
+//!   per system without reaching into system internals.
+//! * [`MetadataService::submit_batch`] submits a slice of requests whose
+//!   issue times are already known (the open-loop driver batches up to
+//!   one request per client — within such a batch no request's issue
+//!   time depends on another's completion). The default implementation
+//!   is a scalar loop; λFS overrides it to amortize routing-table
+//!   lookups across the batch. Any override MUST be outcome-identical
+//!   to the scalar loop: same completions, same RNG draw order — the
+//!   determinism suite (`rust/tests/determinism.rs`) pins
+//!   `RunMetrics::outcome_fingerprint` equality (base run state plus
+//!   the per-op outcome ledger) between the two paths. The base
+//!   `fingerprint()` keeps its pre-migration hash domain, so seeded
+//!   closed-loop runs keep their historical values.
+//!
+//! The open-loop (Spotify) and closed-loop (micro-benchmark) drivers are
+//! generic over the trait, so all systems see *identical* op streams for
+//! a given seed.
 
 pub mod driver;
 pub mod lambdafs;
 
-pub use driver::{run_closed_loop, run_open_loop};
+pub use driver::{run_closed_loop, run_open_loop, run_open_loop_batched};
 pub use lambdafs::LambdaFs;
 
 use crate::metrics::RunMetrics;
@@ -16,12 +46,111 @@ use crate::namespace::Operation;
 use crate::sim::Time;
 use crate::util::rng::Rng;
 
+/// A typed request envelope: one metadata operation issued by a client.
+#[derive(Clone, Copy, Debug)]
+pub struct Request<'a> {
+    /// The operation to perform.
+    pub op: &'a Operation,
+    /// Issuing client id.
+    pub client: u32,
+    /// The generator's *intended* issue slot (pre-rollover). Recorded
+    /// traces store this, so a trace captured from a saturated system
+    /// does not bake that system's throttling into cross-system replays.
+    pub slot: Time,
+    /// Realized issue time: `slot.max(client_ready)` — when the request
+    /// actually leaves the client (the hammer-bench rollover).
+    pub at: Time,
+}
+
+impl<'a> Request<'a> {
+    /// A request whose intended slot and realized issue time coincide
+    /// (closed loops, direct submissions).
+    pub fn new(at: Time, client: u32, op: &'a Operation) -> Self {
+        Request { op, client, slot: at, at }
+    }
+
+    /// An open-loop request: intended `slot`, realized issue time `at`.
+    pub fn scheduled(slot: Time, at: Time, client: u32, op: &'a Operation) -> Self {
+        debug_assert!(at >= slot, "realized issue precedes intended slot");
+        Request { op, client, slot, at }
+    }
+}
+
+/// How an operation met the serving node's metadata cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Served from the in-memory metadata cache.
+    Hit,
+    /// Missed the cache and paid a persistent-store read.
+    Miss,
+    /// The cache was not consulted (writes, subtree ops, cacheless
+    /// systems' non-read paths).
+    Bypass,
+}
+
+/// Per-operation outcome: everything the figures and scenario matrices
+/// need to attribute *why* a completion took as long as it did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Outcome {
+    /// The request was served by an instance provisioned for it (it paid
+    /// a cold start). Serverful systems never cold-start.
+    pub cold_start: bool,
+    /// Cache interaction of the primary service attempt.
+    pub cache: CacheOutcome,
+    /// Resubmissions performed for this op (straggler races, subtree
+    /// lock retries). 0 for a clean first attempt.
+    pub retries: u32,
+    /// Serving deployment id (FaaS systems) or server index (serverful).
+    pub server: u32,
+    /// Attributed service cost in µs: the busy interval billed to the
+    /// serving node for this request (arrival → service completion).
+    pub cost_us: u64,
+}
+
+impl Outcome {
+    /// A warm, cacheless, retry-free outcome on `server` — the baseline
+    /// shape; callers override the fields that apply.
+    pub fn warm(server: u32) -> Outcome {
+        Outcome { cold_start: false, cache: CacheOutcome::Bypass, retries: 0, server, cost_us: 0 }
+    }
+}
+
+/// The result of submitting one request.
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    /// Virtual time at which the reply reaches the client.
+    pub done: Time,
+    /// Why it took that long.
+    pub outcome: Outcome,
+}
+
 /// A metadata service under simulation.
-pub trait MdsSim {
-    /// Process one operation issued by `client` at `now`; returns the
-    /// completion time. All queueing/caching/coherence effects apply
-    /// internally.
-    fn submit(&mut self, now: Time, client: u32, op: &Operation, rng: &mut Rng) -> Time;
+pub trait MetadataService {
+    /// Process one request; returns the completion time and its outcome.
+    /// All queueing/caching/coherence effects apply internally.
+    fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion;
+
+    /// Submit a batch of requests whose issue times are already fixed
+    /// (no request in `reqs` may depend on another's completion — the
+    /// open-loop driver guarantees this by batching at most one request
+    /// per client). Completions are appended to `out` in request order;
+    /// `out` is cleared first and is reusable across calls, so the
+    /// service side of the batch path performs no per-op allocation.
+    /// (The driver's borrowed `Request` views cost one small `Vec`
+    /// per chunk, amortized over the whole batch — see
+    /// `driver::run_open_loop_batched`.)
+    ///
+    /// The default implementation is the scalar loop. Overrides may
+    /// amortize per-op work (routing, interning, coordinator checks)
+    /// but MUST produce bit-identical completions and consume RNG draws
+    /// in the same order as the scalar loop.
+    fn submit_batch(&mut self, reqs: &[Request<'_>], out: &mut Vec<Completion>, rng: &mut Rng) {
+        out.clear();
+        out.reserve(reqs.len());
+        for req in reqs {
+            out.push(self.submit(*req, rng));
+        }
+    }
 
     /// Called at each 1-second boundary for metrics/cost sampling and
     /// platform housekeeping (reclaim, heartbeats).

@@ -91,7 +91,8 @@ impl TraceMeta {
 /// One entry in the event stream.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TraceEvent {
-    /// A client-issued operation at virtual time `at` (µs).
+    /// A client operation whose *intended* issue slot is `at` (µs,
+    /// pre-rollover — the replayer applies `issue = at.max(ready)`).
     Op { at: Time, client: u32, op: Operation },
     /// A driver 1-second boundary: `on_second(second)` with the open-loop
     /// target the generator aimed at that second (0 for closed loops).

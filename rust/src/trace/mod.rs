@@ -17,6 +17,12 @@
 //! bit for bit (pinned in `rust/tests/determinism.rs`). This hinges on
 //! the drivers sampling ops from a forked RNG stream — see
 //! [`replay`]'s module doc.
+//!
+//! Recorded timestamps are the generator's *intended* issue slots (the
+//! `Request` envelope exposes them), so a trace recorded from a
+//! saturated system carries the pure offered schedule — cross-system
+//! replays are not biased by the recording system's own throttling, and
+//! every replayed system applies its own rollover.
 
 pub mod format;
 pub mod record;

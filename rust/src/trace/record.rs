@@ -1,35 +1,37 @@
 //! Recording any workload execution to a [`Trace`].
 //!
-//! [`Recorder`] wraps a system under test and implements [`MdsSim`]
-//! itself, so every existing driver (open-loop Spotify, closed-loop
-//! micro, subtree, tree-test) runs unchanged while the recorder captures
-//! the exact `(issue_time, client, op)` stream plus the per-second
-//! boundaries. Replaying the captured trace into a fresh instance of the
-//! same system with the same seed reproduces the run bit for bit (see
-//! [`super::replay`] for why, and `rust/tests/determinism.rs` for the
-//! pinned contract).
+//! [`Recorder`] wraps a system under test and implements
+//! [`MetadataService`] itself, so every existing driver (open-loop
+//! Spotify, closed-loop micro, subtree, tree-test) runs unchanged while
+//! the recorder captures the exact `(slot, client, op)` stream plus the
+//! per-second boundaries. Replaying the captured trace into a fresh
+//! instance of the same system with the same seed reproduces the run bit
+//! for bit (see [`super::replay`] for why, and
+//! `rust/tests/determinism.rs` for the pinned contract).
 //!
-//! Captured timestamps are the *realized* issue times (post-rollover),
-//! not the generator's intended slots — the submit interface does not
-//! expose the slot. See [`super::replay`]'s module doc for what this
-//! means for cross-system replays of a saturated recording.
+//! Captured timestamps are the generator's *intended* issue slots
+//! (pre-rollover), which the [`crate::systems::Request`] envelope
+//! carries explicitly. A trace recorded from a *saturated* system
+//! therefore stores the pure offered schedule — the recording system's
+//! own throttling is not baked into cross-system replays; the replayer
+//! re-applies rollover per replayed system (`issue = slot.max(ready)`),
+//! which reproduces the recorded run exactly when replayed into the
+//! same system and seed.
 
 use crate::metrics::RunMetrics;
-use crate::namespace::Operation;
-use crate::sim::Time;
-use crate::systems::MdsSim;
+use crate::systems::{Completion, MetadataService, Request};
 use crate::util::rng::Rng;
 
 use super::format::{Trace, TraceEvent, TraceMeta};
 
-/// A transparent [`MdsSim`] wrapper that captures the op stream.
-pub struct Recorder<S: MdsSim> {
+/// A transparent [`MetadataService`] wrapper that captures the op stream.
+pub struct Recorder<S: MetadataService> {
     inner: S,
     meta: TraceMeta,
     events: Vec<TraceEvent>,
 }
 
-impl<S: MdsSim> Recorder<S> {
+impl<S: MetadataService> Recorder<S> {
     pub fn new(inner: S, meta: TraceMeta) -> Self {
         Recorder { inner, meta, events: Vec::new() }
     }
@@ -44,10 +46,19 @@ impl<S: MdsSim> Recorder<S> {
     }
 }
 
-impl<S: MdsSim> MdsSim for Recorder<S> {
-    fn submit(&mut self, now: Time, client: u32, op: &Operation, rng: &mut Rng) -> Time {
-        self.events.push(TraceEvent::Op { at: now, client, op: *op });
-        self.inner.submit(now, client, op, rng)
+impl<S: MetadataService> MetadataService for Recorder<S> {
+    fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
+        // Record the *intended* slot, not the realized issue time: the
+        // trace carries the pure schedule (see module doc).
+        self.events.push(TraceEvent::Op { at: req.slot, client: req.client, op: *req.op });
+        self.inner.submit(req, rng)
+    }
+
+    fn submit_batch(&mut self, reqs: &[Request<'_>], out: &mut Vec<Completion>, rng: &mut Rng) {
+        for req in reqs {
+            self.events.push(TraceEvent::Op { at: req.slot, client: req.client, op: *req.op });
+        }
+        self.inner.submit_batch(reqs, out, rng)
     }
 
     fn on_second(&mut self, second: usize) {

@@ -1,4 +1,4 @@
-//! Deterministic trace replay into any [`MdsSim`].
+//! Deterministic trace replay into any [`MetadataService`].
 //!
 //! The replayer is the single execution path for every trace — recorded
 //! or synthetic — and it speaks the same open-loop dialect as
@@ -17,25 +17,24 @@
 //!   (`rng.fork("ops")`), so the submit-side stream they hand the system
 //!   contains no sampling draws — the replayer performs the same fork
 //!   (and discards it) to stay aligned;
-//! * recorded timestamps are post-rollover issue times, and the replayed
-//!   system's `ready` times evolve identically by induction, so
-//!   `slot.max(ready)` is the identity on them;
+//! * recorded timestamps are the intended slots the driver computed, and
+//!   the replayed system's `ready` times evolve identically by
+//!   induction, so `slot.max(ready)` reproduces the recorded run's
+//!   realized issue times op for op;
 //! * `Second` markers are captured in recorded order, so housekeeping
 //!   (reclaim, heartbeats, cost sampling) interleaves identically.
 //!
 //! Replaying the same trace into a *different* system (or scale) is the
 //! cross-system comparison mode: all systems see the identical op
-//! stream. One caveat for *recorded* traces: a `Recorder` captures
-//! realized issue times, so if the recording system itself rolled work
-//! over (it ran saturated), that throttling is baked into the trace the
-//! other systems see. Synthetic traces carry pure intended slots and are
-//! bias-free; recorded traces match the generator's offered load
-//! whenever the recording system kept pace (λFS completing its schedule,
-//! the scenario matrix's case).
+//! stream. Because recorded traces carry intended slots (the `Request`
+//! envelope exposes them — see `record`), a trace recorded from a
+//! *saturated* system presents the pure offered schedule to every other
+//! system; each replayed system applies its own rollover. Synthetic
+//! traces carry pure slots by construction.
 
 use crate::metrics::RunMetrics;
-use crate::sim::{time, Time};
-use crate::systems::MdsSim;
+use crate::sim::Time;
+use crate::systems::{driver, MetadataService, Request};
 use crate::util::rng::Rng;
 
 use super::format::{Trace, TraceEvent};
@@ -43,7 +42,7 @@ use super::format::{Trace, TraceEvent};
 /// Feed `trace` into `sys`. `rng` plays the role of the driver RNG: pass
 /// a stream seeded like the recording driver's to reproduce a recorded
 /// run bit for bit.
-pub fn replay<S: MdsSim>(sys: &mut S, trace: &Trace, rng: &mut Rng) {
+pub fn replay<S: MetadataService>(sys: &mut S, trace: &Trace, rng: &mut Rng) {
     // Mirror the drivers' op-generation fork (discarded: a trace replays
     // pre-sampled ops) so the submit stream aligns with recording.
     let _ = rng.fork("ops");
@@ -54,10 +53,11 @@ pub fn replay<S: MdsSim>(sys: &mut S, trace: &Trace, rng: &mut Rng) {
             TraceEvent::Op { at, client, op } => {
                 let c = client as usize % n_clients;
                 let issue = at.max(ready[c]);
-                let done = sys.submit(issue, client, &op, rng);
-                ready[c] = done;
-                let lat_ms = time::to_ms(done - issue);
-                sys.metrics_mut().record_at(done, lat_ms, op.kind.is_write());
+                let done = sys.submit(Request::scheduled(at, issue, client, &op), rng);
+                ready[c] = done.done;
+                // The drivers' shared fold: latency + throughput + the
+                // outcome ledger, always recorded together.
+                driver::record(sys, issue, &done, op.kind.is_write());
             }
             TraceEvent::Second { second, target } => {
                 sys.metrics_mut().second_mut(second as usize).target = target;
@@ -68,7 +68,7 @@ pub fn replay<S: MdsSim>(sys: &mut S, trace: &Trace, rng: &mut Rng) {
 }
 
 /// Convenience: replay into an owned system and return its metrics.
-pub fn replay_into<S: MdsSim>(mut sys: S, trace: &Trace, rng: &mut Rng) -> RunMetrics {
+pub fn replay_into<S: MetadataService>(mut sys: S, trace: &Trace, rng: &mut Rng) -> RunMetrics {
     replay(&mut sys, trace, rng);
     sys.into_metrics()
 }
@@ -76,10 +76,12 @@ pub fn replay_into<S: MdsSim>(mut sys: S, trace: &Trace, rng: &mut Rng) -> RunMe
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::namespace::generate::NamespaceParams;
     use crate::namespace::{DirId, InodeRef, OpKind, Operation};
+    use crate::sim::time;
+    use crate::systems::{Completion, Outcome};
     use crate::trace::format::{TraceMeta, VERSION};
     use crate::trace::Recorder;
-    use crate::namespace::generate::NamespaceParams;
 
     /// Fixed-latency mock: completion = issue + 2 ms.
     struct Fixed {
@@ -94,10 +96,10 @@ mod tests {
         }
     }
 
-    impl MdsSim for Fixed {
-        fn submit(&mut self, now: Time, c: u32, _op: &Operation, _r: &mut Rng) -> Time {
-            self.submits.push((now, c));
-            now + time::from_ms(2.0)
+    impl MetadataService for Fixed {
+        fn submit(&mut self, req: Request<'_>, _r: &mut Rng) -> Completion {
+            self.submits.push((req.at, req.client));
+            Completion { done: req.at + time::from_ms(2.0), outcome: Outcome::warm(0) }
         }
         fn on_second(&mut self, s: usize) {
             self.seconds.push(s);
@@ -138,6 +140,7 @@ mod tests {
         assert_eq!(sys.seconds, vec![0, 1]);
         let m = sys.into_metrics();
         assert_eq!(m.completed_ops, 4);
+        assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops, "outcomes folded");
         assert_eq!(m.seconds[0].target, 3);
         assert_eq!(m.seconds[1].target, 1);
         assert_eq!(m.write_lat.count(), 1); // the create
@@ -146,7 +149,9 @@ mod tests {
     #[test]
     fn record_replay_round_trip_on_mock() {
         // Record the replay of a tiny trace, then replay the recording:
-        // a fixed-latency system reaches the same final metrics.
+        // a fixed-latency system reaches the same final metrics, and the
+        // re-recorded trace carries the original intended slots (NOT the
+        // rolled-over realized times).
         let trace = tiny_trace();
         let mut rng = Rng::new(5);
         let meta = trace.meta.clone();
@@ -154,6 +159,7 @@ mod tests {
         replay(&mut rec, &trace, &mut rng);
         let (sys, rerecorded) = rec.into_parts();
         let fp_direct = sys.into_metrics().fingerprint();
+        assert_eq!(rerecorded, trace, "recording a replay is the identity on the trace");
 
         let mut rng = Rng::new(5);
         let m = replay_into(Fixed::new(), &rerecorded, &mut rng);

@@ -4,9 +4,11 @@
 //! Workloads per scale:
 //!
 //! * `spotify-replay` — a λFS Spotify run (§5.2 shape) captured through
-//!   [`Recorder`] and replayed into every system. The λFS cell doubles as
-//!   a live invariant: its replay fingerprint must equal the recording's
-//!   (asserted here, pinned in `rust/tests/determinism.rs`).
+//!   [`Recorder`] over the *batched* driver (`submit_batch`, amortized
+//!   routing) and replayed into every system through the scalar path.
+//!   The λFS cell doubles as a live invariant: the scalar replay's
+//!   outcome fingerprint must equal the batched recording's (asserted
+//!   here, pinned in `rust/tests/determinism.rs`).
 //! * `ml-pipeline` — FalconFS-style epoch-structured training reads.
 //! * `container-churn` — CFS-style deep-path create/stat/unlink churn.
 //!
@@ -23,7 +25,7 @@ use crate::figures::common::{print_table, Scale};
 use crate::metrics::RunMetrics;
 use crate::namespace::generate::{HotspotSampler, NamespaceParams};
 use crate::namespace::Namespace;
-use crate::systems::{driver, LambdaFs, MdsSim};
+use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::util::fnv::fnv1a64;
 use crate::util::rng::Rng;
 use crate::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
@@ -33,8 +35,12 @@ use super::record::Recorder;
 use super::replay::{replay, replay_into};
 use super::synth::{self, ContainerChurnSpec, MlPipelineSpec};
 
-/// JSON schema identifier (validated in CI).
-pub const SCHEMA: &str = "lambdafs-scenarios-v1";
+/// JSON schema identifier (validated in CI). v2: cells gained the
+/// outcome columns (cold_starts/warm_ops/cache_hits/cache_misses/
+/// cache_hit_ratio/retries) and `fingerprint` became the
+/// `outcome_fingerprint()` superset digest — v1 artifacts are neither
+/// forward- nor fingerprint-comparable.
+pub const SCHEMA: &str = "lambdafs-scenarios-v2";
 
 /// Systems every workload runs against.
 pub const SYSTEMS: [&str; 4] = ["lambdafs", "hopsfs", "hopsfs+cache", "cephfs"];
@@ -51,7 +57,16 @@ pub struct ScenarioCell {
     pub p50_ms: f64,
     pub p99_ms: f64,
     pub total_cost_usd: f64,
-    /// `RunMetrics::fingerprint` — the determinism contract per cell.
+    /// Per-op outcome counters folded from the `Completion` stream
+    /// (cold_starts + warm_ops == completed_ops).
+    pub cold_starts: u64,
+    pub warm_ops: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_hit_ratio: f64,
+    pub retries: u64,
+    /// `RunMetrics::outcome_fingerprint` — the determinism contract per
+    /// cell, covering the outcome columns as well as the run state.
     pub fingerprint: u64,
 }
 
@@ -111,10 +126,13 @@ pub fn run_matrix(scale: f64, seed: u64, smoke: bool) -> ScenarioReport {
                 let m = run_cell(system, name, &trace, &ns, sc, seed);
                 if system == "lambdafs" {
                     if let Some(expect) = record_fp {
+                        // The recording ran through submit_batch; this
+                        // replay is scalar — equality (outcome ledger
+                        // included) proves the batch contract live.
                         assert_eq!(
-                            m.fingerprint(),
+                            m.outcome_fingerprint(),
                             expect,
-                            "λFS replay of its own recording must be bit-identical"
+                            "λFS scalar replay of its own batched recording must be bit-identical"
                         );
                     }
                 }
@@ -128,7 +146,15 @@ pub fn run_matrix(scale: f64, seed: u64, smoke: bool) -> ScenarioReport {
                     p50_ms: m.all_lat.p50() / 1_000.0,
                     p99_ms: m.all_lat.p99() / 1_000.0,
                     total_cost_usd: m.total_cost(),
-                    fingerprint: m.fingerprint(),
+                    cold_starts: m.cold_starts,
+                    warm_ops: m.warm_ops,
+                    cache_hits: m.cache_hits,
+                    cache_misses: m.cache_misses,
+                    cache_hit_ratio: m.cache_hit_ratio(),
+                    retries: m.total_retries(),
+                    // The superset digest, so per-cell determinism also
+                    // pins the outcome columns, not just latencies.
+                    fingerprint: m.outcome_fingerprint(),
                 });
             }
         }
@@ -182,11 +208,15 @@ fn spotify_trace(sc: f64, seed: u64) -> (Trace, u64) {
     let sys = LambdaFs::new(scenario_cfg(sc, seed), ns.clone(), n_clients, 8);
     let mut rec = Recorder::new(sys, meta);
     // Same stream the λFS replay cell uses: the replay must reproduce
-    // this run bit for bit.
+    // this run bit for bit. The recording drives λFS through the
+    // *batched* driver (the production batch path: amortized routing
+    // over per-client-fleet chunks) while the replay cell is scalar —
+    // so the matrix's replay-identity assertion also exercises the
+    // submit_batch ≡ submit contract end to end on every CI run.
     let mut rng = cell_rng(seed, "spotify-replay", "lambdafs");
-    driver::run_open_loop(&mut rec, &spec, &ns, &sampler, &mut rng);
+    driver::run_open_loop_batched(&mut rec, &spec, &ns, &sampler, &mut rng);
     let (sys, trace) = rec.into_parts();
-    (trace, sys.into_metrics().fingerprint())
+    (trace, sys.into_metrics().outcome_fingerprint())
 }
 
 /// FalconFS-style ML ingest namespace: few, huge, flat directories.
@@ -286,6 +316,9 @@ impl ScenarioReport {
                     format!("{:.2}", c.p50_ms),
                     format!("{:.2}", c.p99_ms),
                     format!("{:.4}", c.total_cost_usd),
+                    c.cold_starts.to_string(),
+                    format!("{:.1}", c.cache_hit_ratio * 100.0),
+                    c.retries.to_string(),
                     format!("{:08x}", c.fingerprint >> 32),
                 ]
             })
@@ -294,7 +327,7 @@ impl ScenarioReport {
             &format!("Scenario matrix (seed {})", self.seed),
             &[
                 "workload", "scale", "system", "ops", "avg_tput", "peak_tput", "p50_ms",
-                "p99_ms", "cost_$", "fp",
+                "p99_ms", "cost_$", "cold", "hit_%", "retries", "fp",
             ],
             &rows,
         );
@@ -331,6 +364,8 @@ impl ScenarioReport {
                 "    {{\"system\": \"{}\", \"workload\": \"{}\", \"scale\": {}, \
                  \"completed_ops\": {}, \"avg_throughput\": {:.3}, \"peak_throughput\": {:.3}, \
                  \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"total_cost_usd\": {:.6}, \
+                 \"cold_starts\": {}, \"warm_ops\": {}, \"cache_hits\": {}, \
+                 \"cache_misses\": {}, \"cache_hit_ratio\": {:.6}, \"retries\": {}, \
                  \"fingerprint\": \"{:#018x}\"}}",
                 c.system,
                 c.workload,
@@ -341,6 +376,12 @@ impl ScenarioReport {
                 c.p50_ms,
                 c.p99_ms,
                 c.total_cost_usd,
+                c.cold_starts,
+                c.warm_ops,
+                c.cache_hits,
+                c.cache_misses,
+                c.cache_hit_ratio,
+                c.retries,
                 c.fingerprint
             );
             s.push_str(if i + 1 < self.cells.len() { ",\n" } else { "\n" });
@@ -371,7 +412,22 @@ mod tests {
         for c in &a.cells {
             assert!(c.completed_ops > 0, "{}/{} empty", c.system, c.workload);
             assert!(c.p50_ms > 0.0 && c.p99_ms >= c.p50_ms);
+            // Outcome conservation holds in every cell of the matrix.
+            assert_eq!(
+                c.cold_starts + c.warm_ops,
+                c.completed_ops,
+                "{}/{} outcome conservation",
+                c.system,
+                c.workload
+            );
+            assert!(c.cache_hits + c.cache_misses <= c.completed_ops);
         }
+        // λFS serves the hot Spotify read mix mostly from cache; the
+        // stateless HopsFS cell records every read as a miss.
+        let lfs = a.cell("lambdafs", "spotify-replay", 0.005).unwrap();
+        assert!(lfs.cache_hit_ratio > 0.1, "λFS hit ratio {}", lfs.cache_hit_ratio);
+        let hops = a.cell("hopsfs", "spotify-replay", 0.005).unwrap();
+        assert_eq!(hops.cache_hits, 0, "stateless HopsFS never hits a cache");
         let b = run_matrix(0.005, 7, true);
         for (x, y) in a.cells.iter().zip(&b.cells) {
             assert_eq!(x.fingerprint, y.fingerprint, "{}/{}", x.system, x.workload);

@@ -18,7 +18,6 @@
 //! every baseline alike. Generation is deterministic in the passed RNG.
 
 use crate::namespace::{DirId, InodeRef, Namespace, OpKind, Operation};
-use crate::sim::{time, Time};
 use crate::util::rng::Rng;
 use crate::workload::ThroughputSchedule;
 
@@ -255,9 +254,11 @@ fn assemble(meta: TraceMeta, ops_by_second: Vec<Vec<Operation>>) -> Trace {
     for (s, ops) in ops_by_second.iter().enumerate() {
         let n = ops.len() as u64;
         if n > 0 {
-            let spacing = time::SEC / n;
             for (i, op) in ops.iter().enumerate() {
-                let at = s as Time * time::SEC + i as Time * spacing;
+                // The driver's shared slot formula (remainder-distributed
+                // uniform spread): synthetic traces sit on the exact
+                // slots `run_open_loop` would use.
+                let at = crate::systems::driver::open_loop_slot(s, i as u64, n);
                 events.push(TraceEvent::Op { at, client: next_client, op: *op });
                 next_client = (next_client + 1) % n_clients;
             }
@@ -271,6 +272,7 @@ fn assemble(meta: TraceMeta, ops_by_second: Vec<Vec<Operation>>) -> Trace {
 mod tests {
     use super::*;
     use crate::namespace::generate::{generate, NamespaceParams};
+    use crate::sim::{time, Time};
 
     fn ml_ns() -> Namespace {
         let mut rng = Rng::new(11);

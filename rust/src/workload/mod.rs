@@ -26,7 +26,14 @@
 //! | container-platform churn (deep-path create/stat/unlink, Pareto bursts) | CFS-style, `crate::trace::synth::container_churn` | `lambdafs scenario` |
 //!
 //! The scenario matrix sweeps (system × workload × scale) and writes
-//! `SCENARIOS.json`; see [`crate::trace::scenario`].
+//! `SCENARIOS.json`; see [`crate::trace::scenario`]. Since the
+//! outcome-bearing `MetadataService` migration, every cell also carries
+//! per-op outcome columns folded from the `Completion` stream —
+//! `cold_starts`, `warm_ops`, `cache_hits`, `cache_misses`,
+//! `cache_hit_ratio`, `retries` — conserved per cell
+//! (`cold_starts + warm_ops == completed_ops`) and validated by the CI
+//! schema check. Figures gain the same columns via
+//! [`crate::figures::common::outcome_cells`].
 
 pub mod schedule;
 pub mod spec;

@@ -1,25 +1,37 @@
-//! Determinism regression tests (the PR-1 perf overhaul contract).
+//! Determinism regression tests (the PR-1 perf overhaul contract,
+//! extended by the outcome-bearing `MetadataService` migration).
 //!
-//! The calendar-queue scheduler, the FNV hot-path maps, and the
-//! allocation-free submit path must not change a single simulated
-//! outcome — only wall-clock speed. Two guarantees are pinned here:
+//! The calendar-queue scheduler, the FNV hot-path maps, the
+//! allocation-free submit path, and the typed-request API must not
+//! change a single simulated outcome — only wall-clock speed. Pinned
+//! here:
 //!
 //! 1. **Same seed → same run.** Running any system twice with one seed
 //!    produces bit-identical `RunMetrics` (fingerprint over counters,
-//!    the full per-second series, and all latency histograms).
+//!    the full per-second series, all latency histograms, and the
+//!    per-op outcome ledger).
 //! 2. **Calendar queue ≡ reference heap.** The wheel scheduler pops the
 //!    exact `(time, seq)` sequence the reference `BinaryHeap` pops, over
 //!    randomized schedules that interleave scheduling with popping and
 //!    cross the overflow horizon both ways.
+//! 3. **`submit_batch` ≡ `submit`.** The batched open-loop driver (λFS'
+//!    amortized-routing override and the default scalar-loop impl the
+//!    baselines inherit) reproduces the scalar driver's fingerprint bit
+//!    for bit, and outcome counters are conserved
+//!    (`cold_starts + warm_ops == completed_ops`).
+//! 4. **Saturation-proof recording.** Traces record *intended* slots,
+//!    so a recording made under saturation replays the pure schedule.
 
 use lambda_fs::baselines::hopsfs::HopsFs;
+use lambda_fs::baselines::{CephFs, InfiniCacheMds};
 use lambda_fs::config::SystemConfig;
 use lambda_fs::metrics::RunMetrics;
 use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
 use lambda_fs::namespace::Namespace;
 use lambda_fs::sim::queue::{EventQueue, HeapQueue};
-use lambda_fs::systems::{driver, LambdaFs, MdsSim};
-use lambda_fs::trace::{replay_into, Recorder, Trace, TraceMeta};
+use lambda_fs::sim::time;
+use lambda_fs::systems::{driver, LambdaFs, MetadataService};
+use lambda_fs::trace::{replay_into, Recorder, Trace, TraceEvent, TraceMeta};
 use lambda_fs::util::rng::Rng;
 use lambda_fs::workload::{ClosedLoopSpec, OpMix, OpenLoopSpec, ThroughputSchedule};
 
@@ -244,6 +256,199 @@ fn trace_record_replay_bit_identical_closed_loop() {
         &mut Rng::new(cfg.seed ^ 0xc10),
     );
     assert_eq!(m_rec.fingerprint(), m_rep.fingerprint(), "closed-loop round trip diverged");
+}
+
+/// `submit_batch` ≡ `submit`, for λFS' amortized-routing override and
+/// for the default scalar-loop implementation every baseline inherits:
+/// the batched open-loop driver reproduces the scalar driver's
+/// `RunMetrics::fingerprint` (outcome ledger included) bit for bit.
+#[test]
+fn submit_batch_fingerprint_identical_to_scalar_all_systems() {
+    let (cfg, ns, sampler) = fixture(51);
+    // A target that does not divide the client count exercises ragged
+    // tail batches.
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(5, 777.0),
+        mix: OpMix::spotify(),
+        n_clients: 48,
+        n_vms: 2,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+
+    fn pair<S: MetadataService>(
+        mut scalar: S,
+        mut batched: S,
+        spec: &OpenLoopSpec,
+        ns: &Namespace,
+        sampler: &HotspotSampler,
+        seed: u64,
+    ) -> (RunMetrics, RunMetrics) {
+        let mut r1 = Rng::new(seed);
+        driver::run_open_loop(&mut scalar, spec, ns, sampler, &mut r1);
+        let mut r2 = Rng::new(seed);
+        driver::run_open_loop_batched(&mut batched, spec, ns, sampler, &mut r2);
+        (scalar.into_metrics(), batched.into_metrics())
+    }
+
+    // The contract is pinned on outcome_fingerprint(), the superset
+    // digest: base run state AND the per-op outcome ledger must agree.
+    fn check(a: &RunMetrics, b: &RunMetrics, what: &str) {
+        assert_eq!(a.fingerprint(), b.fingerprint(), "{what}: base run state diverged");
+        assert_eq!(
+            a.outcome_fingerprint(),
+            b.outcome_fingerprint(),
+            "{what}: outcome ledger diverged"
+        );
+        assert_eq!(a.cold_starts + a.warm_ops, a.completed_ops, "{what}: conservation");
+    }
+
+    let mk_lfs = || LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+    let (a, b) = pair(mk_lfs(), mk_lfs(), &spec, &ns, &sampler, 0xb47c);
+    check(&a, &b, "λFS batch override");
+
+    let mk_hops = || HopsFs::new(cfg.clone(), ns.clone(), 128.0, false);
+    let (a, b) = pair(mk_hops(), mk_hops(), &spec, &ns, &sampler, 0xb47d);
+    check(&a, &b, "HopsFS");
+
+    let mk_hc = || HopsFs::new(cfg.clone(), ns.clone(), 128.0, true);
+    let (a, b) = pair(mk_hc(), mk_hc(), &spec, &ns, &sampler, 0xb47e);
+    check(&a, &b, "HopsFS+Cache");
+
+    let mk_ceph = || CephFs::new(cfg.clone(), ns.clone(), 128.0);
+    let (a, b) = pair(mk_ceph(), mk_ceph(), &spec, &ns, &sampler, 0xb47f);
+    check(&a, &b, "CephFS");
+
+    let mk_inf = || InfiniCacheMds::new(cfg.clone(), ns.clone(), 8);
+    let (a, b) = pair(mk_inf(), mk_inf(), &spec, &ns, &sampler, 0xb480);
+    check(&a, &b, "InfiniCache");
+
+    use lambda_fs::baselines::{IndexFs, LambdaIndexFs};
+    let mk_idx = || IndexFs::new(cfg.clone(), ns.clone(), 4, 112.0);
+    let (a, b) = pair(mk_idx(), mk_idx(), &spec, &ns, &sampler, 0xb481);
+    check(&a, &b, "IndexFS");
+
+    let mk_lidx = || LambdaIndexFs::new(cfg.clone(), ns.clone(), 8, 64.0);
+    let (a, b) = pair(mk_lidx(), mk_lidx(), &spec, &ns, &sampler, 0xb482);
+    check(&a, &b, "λIndexFS");
+}
+
+/// Outcome-ledger sanity on a real λFS run: conservation, cache
+/// accounting bounded by completions, retry histogram totals, and
+/// per-deployment counts summing to the op count.
+#[test]
+fn outcome_counters_conserved_on_lambdafs_run() {
+    let m = run_lambdafs_open(77);
+    assert!(m.completed_ops > 0);
+    assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops);
+    assert!(m.cold_starts > 0, "a cold-started fleet records cold starts");
+    assert!(m.cache_hits + m.cache_misses <= m.completed_ops);
+    assert!(m.cache_hits > 0, "hot Spotify reads hit the cache");
+    assert_eq!(m.retry_hist.iter().sum::<u64>(), m.completed_ops);
+    assert_eq!(m.per_deployment_ops.iter().sum::<u64>(), m.completed_ops);
+}
+
+/// A fixed-latency mock: saturates under an open-loop schedule when
+/// `per_op_ms` exceeds the per-client service budget.
+struct Fixed {
+    metrics: RunMetrics,
+    per_op_ms: f64,
+}
+
+impl Fixed {
+    fn new(per_op_ms: f64) -> Fixed {
+        Fixed { metrics: RunMetrics::new(), per_op_ms }
+    }
+}
+
+impl MetadataService for Fixed {
+    fn submit(
+        &mut self,
+        req: lambda_fs::systems::Request<'_>,
+        _rng: &mut Rng,
+    ) -> lambda_fs::systems::Completion {
+        lambda_fs::systems::Completion {
+            done: req.at + time::from_ms(self.per_op_ms),
+            outcome: lambda_fs::systems::Outcome::warm(0),
+        }
+    }
+    fn on_second(&mut self, _s: usize) {}
+    fn metrics_mut(&mut self) -> &mut RunMetrics {
+        &mut self.metrics
+    }
+    fn into_metrics(self) -> RunMetrics {
+        self.metrics
+    }
+}
+
+/// The ROADMAP-known trace refinement, closed: recording captures the
+/// *intended* (pre-rollover) slots, so a trace recorded from a saturated
+/// system carries the pure offered schedule — and still replays into the
+/// recording system bit for bit.
+#[test]
+fn record_under_saturation_keeps_pure_slots() {
+    let params = NamespaceParams { n_dirs: 128, ..Default::default() };
+    let mut rng = Rng::new(31);
+    let ns = generate(&params, &mut rng);
+    let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+    // 8 clients × 10 ops/s capacity against a 600 ops/s schedule: the
+    // run saturates hard (realized issue times sprawl far past 3 s).
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(3, 600.0),
+        mix: OpMix::spotify(),
+        n_clients: 8,
+        n_vms: 1,
+        namespace: params.clone(),
+        zipf_s: 1.3,
+    };
+    let meta = TraceMeta::new("saturated", 31, &params, spec.n_clients, spec.n_vms);
+    let mut rec = Recorder::new(Fixed::new(100.0), meta);
+    let mut drv_rng = Rng::new(0x5a7);
+    driver::run_open_loop(&mut rec, &spec, &ns, &sampler, &mut drv_rng);
+    let (sys, trace) = rec.into_parts();
+    let m_rec = sys.into_metrics();
+    assert!(
+        m_rec.last_completion_us > 10 * time::SEC,
+        "the recording system really was saturated ({})",
+        m_rec.last_completion_us
+    );
+
+    // Pure slots: every recorded op timestamp sits inside the 3 s
+    // schedule, at exactly the uniform slot the generator intended.
+    let mut per_second = [0u64; 3];
+    for ev in &trace.events {
+        if let TraceEvent::Op { at, .. } = *ev {
+            assert!(at < 3 * time::SEC, "realized (rolled-over) time leaked into trace: {at}");
+            per_second[(at / time::SEC) as usize] += 1;
+        }
+    }
+    for (s, &n) in per_second.iter().enumerate() {
+        assert_eq!(n, 600, "second {s} carries the full offered load");
+        for i in 0..n {
+            let expect = s as u64 * time::SEC + i * time::SEC / n;
+            assert!(
+                trace.events.iter().any(|e| matches!(e, TraceEvent::Op { at, .. } if *at == expect)),
+                "slot {expect} missing in second {s}"
+            );
+        }
+    }
+
+    // Round trip: replaying into a fresh identical (slow) system
+    // reproduces the saturated run bit for bit...
+    let m_rep = replay_into(Fixed::new(100.0), &trace, &mut Rng::new(0x5a7));
+    assert_eq!(m_rec.fingerprint(), m_rep.fingerprint(), "saturated round trip diverged");
+    assert_eq!(m_rec.outcome_fingerprint(), m_rep.outcome_fingerprint());
+
+    // ...while a fast system replaying the same trace sees the pure
+    // schedule and finishes on it, instead of inheriting the slow
+    // system's throttling.
+    let m_fast = replay_into(Fixed::new(2.0), &trace, &mut Rng::new(0x5a7));
+    assert_eq!(m_fast.completed_ops, 1_800);
+    assert!(
+        m_fast.last_completion_us < 4 * time::SEC,
+        "fast replay stays on schedule ({})",
+        m_fast.last_completion_us
+    );
 }
 
 /// Driving the *same closed-loop workload* through both queue
