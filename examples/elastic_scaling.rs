@@ -42,7 +42,8 @@ fn run(mode: AutoScaleMode, label: &str) {
     for (s, sec) in m.seconds.iter().enumerate().take(90) {
         if s % 5 == 0 {
             let bar = "#".repeat(sec.namenodes as usize);
-            println!("{s:>3}  {:>7}  {:>9}  {:>3}  {bar}", sec.target, sec.completed, sec.namenodes);
+            let (t, c, n) = (sec.target, sec.completed, sec.namenodes);
+            println!("{s:>3}  {t:>7}  {c:>9}  {n:>3}  {bar}");
         }
     }
     println!(

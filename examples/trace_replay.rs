@@ -133,12 +133,7 @@ fn main() {
     let churn_meta = TraceMeta::new(
         "container-churn",
         seed,
-        &NamespaceParams {
-            n_dirs: scale.dirs(),
-            files_per_dir: 8,
-            max_depth: 12,
-            zipf_s: 1.05,
-        },
+        &NamespaceParams { n_dirs: scale.dirs(), files_per_dir: 8, max_depth: 12, zipf_s: 1.05 },
         n_clients,
         8,
     );

@@ -28,6 +28,7 @@ use std::fmt::Write as _;
 use lambda_fs::cache::interned::InternedCache;
 use lambda_fs::client::Router;
 use lambda_fs::config::SystemConfig;
+use lambda_fs::faas::{Platform, ReferencePlatform};
 use lambda_fs::metrics::BenchTimer;
 use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
 use lambda_fs::namespace::{DirId, InodeRef, Namespace};
@@ -74,6 +75,7 @@ fn main() {
     spots.push(cache(&ns, &sampler, &mut rng));
     spots.push(router(&ns, &sampler, &mut rng));
     spots.push(store(&cfg, &mut rng));
+    spots.push(platform_churn(&cfg));
 
     // Raw FNV (the kernel contract) — single-sided reference number.
     let paths: Vec<&str> = ns.dirs.iter().map(|d| d.path.as_str()).collect();
@@ -351,6 +353,118 @@ fn store(cfg: &SystemConfig, rng: &mut Rng) -> HotSpot {
         current_impl: "NdbStore<FnvBuildHasher> (FNV row/lock tables)",
         baseline: 212_500.0 / (ms_base / 1_000.0),
         current: 212_500.0 / (ms_cur / 1_000.0),
+    }
+}
+
+/// FaaS platform under elastic churn: placements + fault kills + the
+/// per-second housekeeping sweep (promote_warm / reclaim_idle /
+/// utilization + request accounting), the λFS steady-state regime of
+/// Fig. 14/15 and the container-churn scenario class. Baseline = the
+/// retained pre-arena append-only `ReferencePlatform` (O(ever-spawned)
+/// scans); current = the generational slab arena (O(live) scans via
+/// intrusive lists + SoA hot fields). Both run the identical command
+/// stream and must agree on every observable outcome.
+fn platform_churn(cfg: &SystemConfig) -> HotSpot {
+    const SECONDS: u64 = 40;
+    const PLACEMENTS_PER_SEC: u64 = 250;
+    const DEPS: u32 = 16;
+    let n_ops = (SECONDS * PLACEMENTS_PER_SEC) as f64;
+
+    let mut lcfg = cfg.lambda_fs.clone();
+    lcfg.n_deployments = DEPS;
+    lcfg.idle_reclaim_ms = 3_000.0; // idle reclaim fires inside the run
+    let faas = cfg.faas.clone();
+
+    let sec = 1_000_000u64;
+    let slot_us = sec / PLACEMENTS_PER_SEC;
+
+    // (cold_starts, kills+reclaims, total_requests, live, ready_sum)
+    type Outcome = (u64, u64, u64, usize, u64);
+
+    let mut arena = Platform::new(faas.clone(), lcfg.clone());
+    let mut r = Rng::new(0x9_1a7);
+    let (out_cur, ms_cur): (Outcome, f64) = BenchTimer::time(|| {
+        let mut ready_sum = 0u64;
+        for s in 0..SECONDS {
+            let t0 = s * sec;
+            for k in 0..PLACEMENTS_PER_SEC {
+                let now = t0 + k * slot_us;
+                let dep = ((k * 7 + s) % DEPS as u64) as u32;
+                let (id, ready) = arena.place_http(dep, now, &mut r);
+                ready_sum = ready_sum.wrapping_add(ready);
+                arena.bill(id, ready, ready + 600);
+            }
+            if s % 3 == 0 {
+                let dep = (s % DEPS as u64) as u32;
+                let victim = arena.deployment_instances(dep).next();
+                if let Some(v) = victim {
+                    arena.kill(v, t0 + sec - 1, false);
+                }
+            }
+            let eos = t0 + sec;
+            arena.promote_warm(eos);
+            arena.reclaim_idle(eos);
+            let _ = arena.busy_gb_seconds(eos);
+            let _ = arena.total_requests();
+        }
+        let st = arena.stats();
+        (
+            st.cold_starts,
+            st.kills + st.idle_reclaims,
+            arena.total_requests(),
+            arena.live_instances(),
+            ready_sum,
+        )
+    });
+
+    let mut refp = ReferencePlatform::new(faas, lcfg);
+    let mut r = Rng::new(0x9_1a7);
+    let (out_base, ms_base): (Outcome, f64) = BenchTimer::time(|| {
+        let mut ready_sum = 0u64;
+        for s in 0..SECONDS {
+            let t0 = s * sec;
+            for k in 0..PLACEMENTS_PER_SEC {
+                let now = t0 + k * slot_us;
+                let dep = ((k * 7 + s) % DEPS as u64) as u32;
+                let (id, ready) = refp.place_http(dep, now, &mut r);
+                ready_sum = ready_sum.wrapping_add(ready);
+                refp.instance_mut(id).bill(ready, ready + 600);
+            }
+            if s % 3 == 0 {
+                let dep = (s % DEPS as u64) as u32;
+                if let Some(&v) = refp.deployment_instances(dep).first() {
+                    refp.kill(v, t0 + sec - 1, false);
+                }
+            }
+            let eos = t0 + sec;
+            refp.promote_warm(eos);
+            refp.reclaim_idle(eos);
+            let _ = refp.busy_gb_seconds(eos);
+            let _ = refp.total_requests();
+        }
+        let st = refp.stats();
+        (
+            st.cold_starts,
+            st.kills + st.idle_reclaims,
+            refp.total_requests(),
+            refp.live_instances(),
+            ready_sum,
+        )
+    });
+    assert_eq!(out_cur, out_base, "arena changed platform outcomes — determinism broken");
+    assert!(arena.stats().recycled_slots > 0, "churn loop never exercised slot recycling");
+    assert!(
+        (arena.arena_slots() as u64) < arena.spawned_total(),
+        "recycling must keep arena slots strictly below instances-ever"
+    );
+
+    HotSpot {
+        key: "platform",
+        baseline_impl: "ReferencePlatform (pre-arena append-only Vec; O(ever-spawned) scans)",
+        current_impl: "Platform (generational slab arena: free-list recycling, SoA hot \
+                       fields, intrusive live lists; O(live) scans)",
+        baseline: n_ops / (ms_base / 1_000.0),
+        current: n_ops / (ms_cur / 1_000.0),
     }
 }
 

@@ -10,7 +10,7 @@
 //! in memory and use LevelDB purely as the persistent store — reads serve
 //! from function memory, and writes ride auto-scaling.
 
-use crate::cache::interned::InternedCache;
+use crate::cache::SlotCaches;
 use crate::client::Router;
 use crate::config::SystemConfig;
 use crate::coordinator::ServiceModel;
@@ -123,7 +123,10 @@ pub struct LambdaIndexFs {
     /// Precomputed directory-hash routing over the deployments.
     router: Router,
     platform: Platform,
-    caches: Vec<InternedCache>,
+    /// Per-instance caches over the arena's recycled slots (capacity
+    /// evictions under the OpenWhisk vCPU budget recycle constantly;
+    /// [`SlotCaches`] owns the clear-on-recycle / stale-id invariant).
+    caches: SlotCaches,
     stores: Vec<SsTableStore>,
     net: NetModel,
     svc: ServiceModel,
@@ -150,22 +153,24 @@ impl LambdaIndexFs {
         let mut prewarm_rng = Rng::new(cfg.seed ^ 0x7a11);
         for dep in 0..n_deployments {
             let (_, ready) = platform.force_spawn(dep, 0, &mut prewarm_rng);
-            platform.settle(ready);
+            platform.promote_warm(ready);
         }
-        platform.settle(u64::MAX / 2);
-        let stores = (0..n_deployments).map(|_| SsTableStore::new(SsTableConfig::default())).collect();
+        platform.promote_warm(u64::MAX / 2);
+        let stores =
+            (0..n_deployments).map(|_| SsTableStore::new(SsTableConfig::default())).collect();
         let net = NetModel::new(cfg.net.clone());
         let svc = ServiceModel::new(cfg.op.clone());
         let cost = CostModel::new(cfg.cost.clone());
         let rng = Rng::new(cfg.seed ^ 0x71df);
         let router = Router::build(&ns, n_deployments);
+        let caches = SlotCaches::new(cfg.lambda_fs.cache_capacity);
         LambdaIndexFs {
             warm_deps: vec![true; n_deployments as usize],
             cfg,
             ns,
             router,
             platform,
-            caches: Vec::new(),
+            caches,
             stores,
             net,
             svc,
@@ -179,12 +184,6 @@ impl LambdaIndexFs {
 
     pub fn platform(&self) -> &Platform {
         &self.platform
-    }
-
-    fn ensure_cache(&mut self, idx: usize) {
-        while self.caches.len() <= idx {
-            self.caches.push(InternedCache::new(self.cfg.lambda_fs.cache_capacity));
-        }
     }
 }
 
@@ -211,25 +210,25 @@ impl MetadataService for LambdaIndexFs {
             self.warm_deps[dep as usize] = true;
             (i, ready.max(gw + leg), cold)
         };
-        self.ensure_cache(inst.0 as usize);
+        self.caches.ensure(inst);
 
         let cpu = self.svc.cache_hit(op.kind, &mut local);
-        let (_, cpu_done) = self.platform.instance_mut(inst).cpu.submit(arrive, cpu);
+        let (_, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
 
         let (served, cache) = if op.kind.is_write() {
             // mknod: append to LevelDB; invalidate peers in the deployment
             // (single-deployment-per-dir partitioning keeps this local).
             let done = self.stores[dep as usize].append(cpu_done, op.target, &mut local);
-            self.caches[inst.0 as usize].insert_version(op.target, 1);
+            self.caches.cache_mut(inst).insert_version(op.target, 1);
             (done, CacheOutcome::Bypass)
-        } else if self.caches[inst.0 as usize].get(op.target).is_some() {
+        } else if self.caches.cache_mut(inst).get(op.target).is_some() {
             (cpu_done, CacheOutcome::Hit)
         } else {
             let (done, _) = self.stores[dep as usize].get(cpu_done, op.target, &mut local);
-            self.caches[inst.0 as usize].insert_version(op.target, 1);
+            self.caches.cache_mut(inst).insert_version(op.target, 1);
             (done, CacheOutcome::Miss)
         };
-        self.platform.instance_mut(inst).bill(arrive, served);
+        self.platform.bill(inst, arrive, served);
         Completion {
             done: served + self.net.tcp_hop(rng),
             outcome: Outcome {
@@ -244,7 +243,7 @@ impl MetadataService for LambdaIndexFs {
 
     fn on_second(&mut self, second: usize) {
         let now = (second as Time + 1) * time::SEC;
-        self.platform.settle(now);
+        self.platform.promote_warm(now);
         let gb_s = self.platform.busy_gb_seconds(now);
         let reqs = self.platform.total_requests();
         let delta_gb = (gb_s - self.billed_gb_s).max(0.0);
@@ -354,7 +353,8 @@ mod tests {
         let (cfg, ns, sampler, mut rng) = fixtures();
         let mut l = LambdaIndexFs::new(cfg, ns.clone(), 8, 64.0);
         let _ = run_tree_test(&mut l, &ns, &sampler, 64, 100, &mut rng);
-        assert!(l.platform().live_instances() >= 8, "fleet held: {}", l.platform().live_instances());
+        let live = l.platform().live_instances();
+        assert!(live >= 8, "fleet held: {live}");
     }
 
     #[test]

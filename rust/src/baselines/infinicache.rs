@@ -7,11 +7,11 @@
 //! invocation path and the fleet never scales. Under the Spotify
 //! workloads the gateway is overwhelmed and the system fails to keep up.
 
-use crate::cache::interned::InternedCache;
+use crate::cache::SlotCaches;
 use crate::client::Router;
 use crate::config::{AutoScaleMode, SystemConfig};
 use crate::coordinator::ServiceModel;
-use crate::faas::{InstanceId, Platform};
+use crate::faas::Platform;
 use crate::metrics::{CostModel, RunMetrics};
 use crate::namespace::Namespace;
 use crate::rpc::NetModel;
@@ -22,12 +22,13 @@ use crate::util::rng::Rng;
 
 /// InfiniCache pressed into MDS service.
 pub struct InfiniCacheMds {
-    cfg: SystemConfig,
     ns: Namespace,
     /// Precomputed dir-hash routing over the static fleet.
     router: Router,
     platform: Platform,
-    caches: Vec<InternedCache>,
+    /// Per-instance caches over the arena's recycled slots
+    /// ([`SlotCaches`] owns the clear-on-recycle / stale-id invariant).
+    caches: SlotCaches,
     store: NdbStore,
     net: NetModel,
     svc: ServiceModel,
@@ -51,22 +52,19 @@ impl InfiniCacheMds {
         let mut platform = Platform::new(cfg.faas.clone(), cfg.lambda_fs.clone());
         let mut rng = Rng::new(cfg.seed ^ 0x1f1c);
         // Pre-provision the fixed fleet.
-        let mut caches = Vec::new();
+        let mut caches = SlotCaches::new(cfg.lambda_fs.cache_capacity);
         for dep in 0..fleet_size {
             let (id, ready) = platform.force_spawn(dep, 0, &mut rng);
-            platform.settle(ready);
-            while caches.len() <= id.0 as usize {
-                caches.push(InternedCache::new(cfg.lambda_fs.cache_capacity));
-            }
+            platform.promote_warm(ready);
+            caches.ensure(id);
         }
-        platform.settle(u64::MAX / 2);
+        platform.promote_warm(u64::MAX / 2);
         let store = NdbStore::new(cfg.store.clone());
         let net = NetModel::new(cfg.net.clone());
         let svc = ServiceModel::new(cfg.op.clone());
         let cost = CostModel::new(cfg.cost.clone());
         let router = Router::build(&ns, fleet_size);
         InfiniCacheMds {
-            cfg,
             ns,
             router,
             platform,
@@ -85,12 +83,6 @@ impl InfiniCacheMds {
     pub fn platform(&self) -> &Platform {
         &self.platform
     }
-
-    fn ensure_cache(&mut self, idx: usize) {
-        while self.caches.len() <= idx {
-            self.caches.push(InternedCache::new(self.cfg.lambda_fs.cache_capacity));
-        }
-    }
 }
 
 impl MetadataService for InfiniCacheMds {
@@ -104,15 +96,15 @@ impl MetadataService for InfiniCacheMds {
         let gw_done = self.platform.gateway_admit(now, rng);
         let leg = self.net.http_leg(rng);
         let (inst, ready, cold_start) = self.platform.place_http_traced(dep, now, rng);
-        self.ensure_cache(inst.0 as usize);
+        self.caches.ensure(inst);
         let arrive = ready.max(gw_done + leg) + self.net.tcp_connect(rng);
 
-        let hit = self.caches[inst.0 as usize].get(op.target).is_some();
+        let hit = self.caches.cache_mut(inst).get(op.target).is_some();
         let cpu = self.svc.cache_hit(op.kind, &mut local_rng);
-        let (_, cpu_done) = self.platform.instance_mut(inst).cpu.submit(arrive, cpu);
+        let (_, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
         let (served, cache) = if op.kind.is_write() {
             let commit = self.store.write_txn(cpu_done, &[op.target], false, &mut local_rng);
-            self.caches[inst.0 as usize].invalidate(op.target);
+            self.caches.cache_mut(inst).invalidate(op.target);
             (commit, CacheOutcome::Bypass)
         } else if hit {
             (cpu_done, CacheOutcome::Hit)
@@ -120,10 +112,10 @@ impl MetadataService for InfiniCacheMds {
             let depth = self.ns.resolution_depth(op.target);
             let done = self.store.read_batch(cpu_done, depth, &mut local_rng);
             let v = self.store.version(op.target);
-            self.caches[inst.0 as usize].insert_version(op.target, v);
+            self.caches.cache_mut(inst).insert_version(op.target, v);
             (done, CacheOutcome::Miss)
         };
-        self.platform.instance_mut(inst).bill(arrive, served);
+        self.platform.bill(inst, arrive, served);
         Completion {
             done: served + self.net.tcp_hop(rng),
             outcome: Outcome {
@@ -138,7 +130,7 @@ impl MetadataService for InfiniCacheMds {
 
     fn on_second(&mut self, second: usize) {
         let now = (second as Time + 1) * time::SEC;
-        self.platform.settle(now);
+        self.platform.promote_warm(now);
         let gb_s = self.platform.busy_gb_seconds(now);
         let reqs = self.platform.total_requests();
         let delta_gb = (gb_s - self.billed_gb_s).max(0.0);
@@ -151,7 +143,6 @@ impl MetadataService for InfiniCacheMds {
         s.vcpus = self.platform.vcpus_in_use();
         s.cost_usd = sample.usd;
         s.cost_simplified_usd = sample.usd;
-        let _ = InstanceId(0);
     }
 
     fn metrics_mut(&mut self) -> &mut RunMetrics {

@@ -200,14 +200,7 @@ impl<S: BuildHasher + Default> InternedCache<S> {
         if self.len >= self.capacity {
             self.evict_lru();
         }
-        let slot = Slot {
-            inode,
-            version,
-            prev: NIL,
-            next: NIL,
-            dir_prev: NIL,
-            dir_next: NIL,
-        };
+        let slot = Slot { inode, version, prev: NIL, next: NIL, dir_prev: NIL, dir_next: NIL };
         let s = match self.free.pop() {
             Some(s) => {
                 self.slots[s as usize] = slot;
@@ -281,6 +274,12 @@ impl<S: BuildHasher + Default> InternedCache<S> {
         dropped
     }
 
+    /// Drop every cached entry, keeping capacity and accumulated stats.
+    /// Since PR 4 this is also the arena-recycling hook: when a FaaS slot
+    /// is reused, the new instance's `register` clears the slot's cache so
+    /// it cannot inherit the dead instance's entries, while the preserved
+    /// stats keep aggregate hit/miss accounting spanning instances-ever
+    /// (the pre-arena layout kept one cache object per instance forever).
     pub fn clear(&mut self) {
         self.slots.clear();
         self.free.clear();
@@ -304,10 +303,38 @@ mod tests {
     fn tiny_ns() -> Namespace {
         // 0:/ -> 1:/a -> 2:/a/b ; 3:/c
         Namespace::new(vec![
-            DirInfo { id: DirId(0), parent: None, path: "/".into(), depth: 0, children: vec![DirId(1), DirId(3)], files: 0 },
-            DirInfo { id: DirId(1), parent: Some(DirId(0)), path: "/a".into(), depth: 1, children: vec![DirId(2)], files: 2 },
-            DirInfo { id: DirId(2), parent: Some(DirId(1)), path: "/a/b".into(), depth: 2, children: vec![], files: 2 },
-            DirInfo { id: DirId(3), parent: Some(DirId(0)), path: "/c".into(), depth: 1, children: vec![], files: 1 },
+            DirInfo {
+                id: DirId(0),
+                parent: None,
+                path: "/".into(),
+                depth: 0,
+                children: vec![DirId(1), DirId(3)],
+                files: 0,
+            },
+            DirInfo {
+                id: DirId(1),
+                parent: Some(DirId(0)),
+                path: "/a".into(),
+                depth: 1,
+                children: vec![DirId(2)],
+                files: 2,
+            },
+            DirInfo {
+                id: DirId(2),
+                parent: Some(DirId(1)),
+                path: "/a/b".into(),
+                depth: 2,
+                children: vec![],
+                files: 2,
+            },
+            DirInfo {
+                id: DirId(3),
+                parent: Some(DirId(0)),
+                path: "/c".into(),
+                depth: 1,
+                children: vec![],
+                files: 1,
+            },
         ])
     }
 

@@ -16,7 +16,10 @@
 //! other on random operation sequences.
 
 pub mod interned;
+pub mod slots;
 pub mod trie;
+
+pub use slots::SlotCaches;
 
 /// Cache statistics — hit ratio is the paper's key cache observable.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]

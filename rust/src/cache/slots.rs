@@ -1,0 +1,141 @@
+//! Per-instance cache registry over the FaaS arena's recycled slots.
+//!
+//! The platform hands out generational [`InstanceId`]s whose `slot` is a
+//! dense, *recycled* arena index (PR 4). Systems that keep one
+//! [`InternedCache`] per NameNode instance index it by slot — which
+//! means a recycled slot must never leak the dead occupant's cache
+//! contents into the new instance, and a stale id (e.g. a Coordinator
+//! roster entry outliving its instance) must never touch the recycled
+//! slot's new cache. This registry holds that invariant in exactly one
+//! place for λFS, λIndexFS, and InfiniCache:
+//!
+//! * [`SlotCaches::ensure`] grows the registry to cover the id's slot
+//!   and, on a generation change, clears the slot's entries and restamps
+//!   the occupying seq. [`InternedCache::clear`] keeps accumulated
+//!   stats, so aggregate hit/miss accounting spans instances-ever —
+//!   matching the pre-arena one-cache-per-instance layout.
+//! * [`SlotCaches::get_mut_if_current`] is the generation-guarded
+//!   accessor for coherence-protocol applies: while a dead instance's
+//!   slot is unrecycled its seq still matches (the dead cache keeps
+//!   receiving invalidations, exactly like the pre-arena dead cache
+//!   objects did); once recycled, the stale seq mismatches and the
+//!   apply is dropped.
+
+use std::hash::BuildHasher;
+
+use crate::faas::InstanceId;
+use crate::util::fasthash::FnvBuildHasher;
+
+use super::interned::InternedCache;
+use super::CacheStats;
+
+/// One `InternedCache` per arena slot, tagged with the occupant's seq.
+#[derive(Clone, Debug)]
+pub struct SlotCaches<S: BuildHasher = FnvBuildHasher> {
+    caches: Vec<InternedCache<S>>,
+    seqs: Vec<u32>,
+    capacity: usize,
+}
+
+impl<S: BuildHasher + Default> SlotCaches<S> {
+    /// Registry whose caches each hold `capacity` entries.
+    pub fn new(capacity: usize) -> Self {
+        SlotCaches { caches: Vec::new(), seqs: Vec::new(), capacity }
+    }
+
+    /// Make the registry current for `id`: grow to cover its slot, and
+    /// clear + restamp the slot when the arena recycled it to a new
+    /// generation. Call on every placement before touching the cache.
+    pub fn ensure(&mut self, id: InstanceId) {
+        let slot = id.slot() as usize;
+        while self.caches.len() <= slot {
+            self.caches.push(InternedCache::with_hasher(self.capacity));
+            self.seqs.push(u32::MAX);
+        }
+        if self.seqs[slot] != id.seq() {
+            self.caches[slot].clear();
+            self.seqs[slot] = id.seq();
+        }
+    }
+
+    /// The cache of an ensured, current instance. Panics (debug) on a
+    /// stale id — serve paths only run on live, just-ensured instances.
+    pub fn cache_mut(&mut self, id: InstanceId) -> &mut InternedCache<S> {
+        let slot = id.slot() as usize;
+        debug_assert_eq!(self.seqs[slot], id.seq(), "stale InstanceId on a serve path");
+        &mut self.caches[slot]
+    }
+
+    /// Generation-guarded access: `None` when `id` no longer names the
+    /// slot's occupant (or was never registered).
+    pub fn get_mut_if_current(&mut self, id: InstanceId) -> Option<&mut InternedCache<S>> {
+        let slot = id.slot() as usize;
+        if self.seqs.get(slot).copied() != Some(id.seq()) {
+            return None;
+        }
+        self.caches.get_mut(slot)
+    }
+
+    /// All slot caches (live occupants and not-yet-recycled dead ones —
+    /// the aggregate-stats domain).
+    pub fn iter(&self) -> impl Iterator<Item = &InternedCache<S>> {
+        self.caches.iter()
+    }
+
+    /// Aggregate stats over every instance ever (clear-on-recycle
+    /// preserves per-slot counters).
+    pub fn total_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for c in &self.caches {
+            let s = c.stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.insertions += s.insertions;
+            total.invalidations += s.invalidations;
+            total.evictions += s.evictions;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::{DirId, InodeRef};
+
+    fn id(seq: u32, slot: u32) -> InstanceId {
+        InstanceId::from_parts(seq, slot)
+    }
+
+    #[test]
+    fn recycled_slot_starts_empty_but_keeps_stats() {
+        let mut sc: SlotCaches = SlotCaches::new(16);
+        let a = id(0, 0);
+        sc.ensure(a);
+        let inode = InodeRef::file(DirId(1), 2);
+        sc.cache_mut(a).insert_version(inode, 7);
+        assert!(sc.cache_mut(a).get(inode).is_some());
+        let hits = sc.total_stats().hits;
+        // The arena recycles slot 0 for a new instance.
+        let b = id(5, 0);
+        sc.ensure(b);
+        assert!(sc.cache_mut(b).get(inode).is_none(), "no inherited entries");
+        assert!(sc.total_stats().hits >= hits, "stats span instances-ever");
+    }
+
+    #[test]
+    fn stale_ids_guarded_after_recycle() {
+        let mut sc: SlotCaches = SlotCaches::new(16);
+        let a = id(0, 0);
+        sc.ensure(a);
+        // Dead but unrecycled: the seq still matches, applies go through
+        // (pre-arena dead caches kept receiving invalidations too).
+        assert!(sc.get_mut_if_current(a).is_some());
+        // Recycled: the stale id must not touch the new occupant.
+        sc.ensure(id(9, 0));
+        assert!(sc.get_mut_if_current(a).is_none());
+        assert!(sc.get_mut_if_current(id(9, 0)).is_some());
+        // Never-registered slots are guarded too.
+        assert!(sc.get_mut_if_current(id(1, 44)).is_none());
+    }
+}

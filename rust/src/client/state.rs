@@ -20,13 +20,7 @@ pub struct ClientState {
 }
 
 impl ClientState {
-    pub fn new(
-        vm: VmId,
-        p_replace: f64,
-        window: usize,
-        t_straggler: f64,
-        t_thrash: f64,
-    ) -> Self {
+    pub fn new(vm: VmId, p_replace: f64, window: usize, t_straggler: f64, t_thrash: f64) -> Self {
         ClientState {
             vm,
             policy: ReplacementPolicy::new(p_replace),

@@ -146,42 +146,61 @@ mod tests {
         Coordinator::new(6_000_000) // 6s session
     }
 
+    /// Test id with seq == slot (the no-recycling shape).
+    fn iid(n: u32) -> InstanceId {
+        InstanceId::from_parts(n, n)
+    }
+
     #[test]
     fn register_and_membership() {
         let mut c = coord();
-        c.register(InstanceId(1), 0, 0);
-        c.register(InstanceId(2), 0, 0);
-        c.register(InstanceId(3), 1, 0);
-        assert_eq!(c.live_in_deployment(0), vec![InstanceId(1), InstanceId(2)]);
-        assert_eq!(c.live_in_deployment(1), vec![InstanceId(3)]);
+        c.register(iid(1), 0, 0);
+        c.register(iid(2), 0, 0);
+        c.register(iid(3), 1, 0);
+        assert_eq!(c.live_in_deployment(0), vec![iid(1), iid(2)]);
+        assert_eq!(c.live_in_deployment(1), vec![iid(3)]);
         assert_eq!(c.live_count(), 3);
+    }
+
+    #[test]
+    fn rosters_sort_by_spawn_seq_across_recycled_slots() {
+        // A recycled low slot must not jump ahead of older instances:
+        // roster order (and therefore protocol fan-out / RNG draw order)
+        // follows the spawn sequence, exactly as pre-arena slab ids did.
+        let mut c = coord();
+        c.register(InstanceId::from_parts(5, 0), 0, 0); // recycled slot 0
+        c.register(InstanceId::from_parts(3, 9), 0, 0); // older, higher slot
+        assert_eq!(
+            c.live_in_deployment(0),
+            vec![InstanceId::from_parts(3, 9), InstanceId::from_parts(5, 0)]
+        );
     }
 
     #[test]
     fn heartbeat_extends_session() {
         let mut c = coord();
-        c.register(InstanceId(1), 0, 0);
-        c.heartbeat(InstanceId(1), 5_000_000);
+        c.register(iid(1), 0, 0);
+        c.heartbeat(iid(1), 5_000_000);
         assert!(c.expire_sessions(6_000_001).is_empty(), "renewed");
         let dead = c.expire_sessions(11_000_001);
-        assert_eq!(dead, vec![InstanceId(1)]);
-        assert!(!c.is_live(InstanceId(1)));
+        assert_eq!(dead, vec![iid(1)]);
+        assert!(!c.is_live(iid(1)));
     }
 
     #[test]
     fn crash_detected_after_timeout() {
         let mut c = coord();
-        c.register(InstanceId(9), 2, 0);
+        c.register(iid(9), 2, 0);
         assert!(c.expire_sessions(5_999_999).is_empty());
-        assert_eq!(c.expire_sessions(6_000_000), vec![InstanceId(9)]);
+        assert_eq!(c.expire_sessions(6_000_000), vec![iid(9)]);
     }
 
     #[test]
     fn deregister_immediate() {
         let mut c = coord();
-        c.register(InstanceId(1), 0, 0);
-        c.deregister(InstanceId(1));
-        assert!(!c.is_live(InstanceId(1)));
+        c.register(iid(1), 0, 0);
+        c.deregister(iid(1));
+        assert!(!c.is_live(iid(1)));
         assert!(c.live_in_deployment(0).is_empty());
     }
 

@@ -104,28 +104,29 @@ mod tests {
     use std::collections::HashSet;
 
     fn setup() -> (Coordinator, NetModel, Rng) {
-        (
-            Coordinator::new(6_000_000),
-            NetModel::new(SystemConfig::default().net),
-            Rng::new(31),
-        )
+        (Coordinator::new(6_000_000), NetModel::new(SystemConfig::default().net), Rng::new(31))
     }
 
     fn inode(d: u32, f: u32) -> InodeRef {
         InodeRef::file(DirId(d), f)
     }
 
+    /// Test id with seq == slot (the no-recycling shape).
+    fn iid(n: u32) -> InstanceId {
+        InstanceId::from_parts(n, n)
+    }
+
     #[test]
     fn all_live_instances_invalidate_and_ack() {
         let (mut coord, net, mut rng) = setup();
         for i in 0..4 {
-            coord.register(InstanceId(i), 0, 0);
+            coord.register(iid(i), 0, 0);
         }
-        coord.register(InstanceId(9), 1, 0);
+        coord.register(iid(9), 1, 0);
         let mut touched = HashSet::new();
         let out = run_protocol(
             1_000,
-            InstanceId(0),
+            iid(0),
             &[0],
             &Invalidation::Exact(&[inode(5, 0)]),
             &mut coord,
@@ -138,24 +139,24 @@ mod tests {
         // Leader + 3 followers invalidated; 3 ACKs (not the leader's).
         assert_eq!(out.invs_sent, 3);
         assert_eq!(out.acks_received, 3);
-        assert!(touched.contains(&InstanceId(0)), "leader invalidates locally");
+        assert!(touched.contains(&iid(0)), "leader invalidates locally");
         for i in 1..4 {
-            assert!(touched.contains(&InstanceId(i)));
+            assert!(touched.contains(&iid(i)));
         }
-        assert!(!touched.contains(&InstanceId(9)), "other deployment untouched");
+        assert!(!touched.contains(&iid(9)), "other deployment untouched");
         assert!(out.complete_at > 1_000, "ACK wait takes time");
     }
 
     #[test]
     fn dead_instances_skip_ack() {
         let (mut coord, net, mut rng) = setup();
-        coord.register(InstanceId(0), 0, 0);
-        coord.register(InstanceId(1), 0, 0);
-        coord.register(InstanceId(2), 0, 0);
-        coord.deregister(InstanceId(2)); // terminated mid-protocol
+        coord.register(iid(0), 0, 0);
+        coord.register(iid(1), 0, 0);
+        coord.register(iid(2), 0, 0);
+        coord.deregister(iid(2)); // terminated mid-protocol
         let out = run_protocol(
             0,
-            InstanceId(0),
+            iid(0),
             &[0],
             &Invalidation::Prefix(DirId(3)),
             &mut coord,
@@ -169,13 +170,13 @@ mod tests {
     #[test]
     fn multi_deployment_fanout_deduplicates() {
         let (mut coord, net, mut rng) = setup();
-        coord.register(InstanceId(0), 0, 0);
-        coord.register(InstanceId(1), 1, 0);
-        coord.register(InstanceId(2), 2, 0);
+        coord.register(iid(0), 0, 0);
+        coord.register(iid(1), 1, 0);
+        coord.register(iid(2), 2, 0);
         let mut count = 0;
         let out = run_protocol(
             0,
-            InstanceId(0),
+            iid(0),
             &[0, 1, 2, 1], // deployment 1 listed twice
             &Invalidation::Exact(&[inode(1, 1)]),
             &mut coord,
@@ -190,10 +191,10 @@ mod tests {
     #[test]
     fn empty_deployment_completes_after_subscribe() {
         let (mut coord, net, mut rng) = setup();
-        coord.register(InstanceId(0), 0, 0);
+        coord.register(iid(0), 0, 0);
         let out = run_protocol(
             500,
-            InstanceId(0),
+            iid(0),
             &[4], // nobody lives there
             &Invalidation::Exact(&[inode(2, 0)]),
             &mut coord,
@@ -209,11 +210,11 @@ mod tests {
     fn ack_wait_is_parallel_max_not_sum() {
         let (mut coord, net, mut rng) = setup();
         for i in 0..50 {
-            coord.register(InstanceId(i), 0, 0);
+            coord.register(iid(i), 0, 0);
         }
         let out = run_protocol(
             0,
-            InstanceId(0),
+            iid(0),
             &[0],
             &Invalidation::Exact(&[inode(1, 0)]),
             &mut coord,

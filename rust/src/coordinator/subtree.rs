@@ -191,7 +191,8 @@ mod tests {
         let p = plan(&ns, DirId(1));
         store.try_subtree_lock(0, DirId(1), &[], 1_000_000_000).unwrap();
         let mut rng = Rng::new(9);
-        let err = execute(10, &p, SubtreeParams { batch: 512, parallelism: 4 }, &mut store, &mut rng);
+        let params = SubtreeParams { batch: 512, parallelism: 4 };
+        let err = execute(10, &p, params, &mut store, &mut rng);
         assert!(err.is_err(), "active subtree op blocks overlap");
     }
 

@@ -21,6 +21,17 @@
 //! * **Pay-per-use accounting** — per-instance "actively serving" time at
 //!   1 ms granularity for the Lambda cost model (Fig. 9).
 
-pub mod platform;
+//! Since PR 4 the platform state lives in a **generational slab arena**
+//! (see the `platform` module doc for the invariants): killed instances'
+//! slots are recycled through a free list, `InstanceId` carries a
+//! generation so stale ids are rejected instead of aliased, and the hot
+//! fields scanned on the submit/housekeeping paths sit in dense SoA
+//! arrays iterated through intrusive live lists. The pre-arena
+//! append-only implementation is retained in [`reference`] as the
+//! differential baseline.
 
-pub use platform::{InstanceId, InstanceState, Platform, PlatformStats};
+pub mod platform;
+pub mod reference;
+
+pub use platform::{Instance, InstanceId, Platform, PlatformStats};
+pub use reference::{ReferencePlatform, RefInstanceId};

@@ -1,104 +1,112 @@
 //! The platform state machine: deployments, instances, cold starts,
-//! concurrency, billing, reclamation, and fault injection.
+//! concurrency, billing, reclamation, and fault injection — backed by a
+//! **generational slab arena** so a churn-heavy elastic run does O(live)
+//! housekeeping work and bounded memory, instead of O(ever-spawned).
+//!
+//! # Arena invariants
+//!
+//! * **Generation check** — [`InstanceId`] is `(seq, slot)`: `seq` is a
+//!   globally monotonic spawn sequence number that doubles as the slot's
+//!   generation tag. The current occupant of a slot is recorded in
+//!   `seqs[slot]`; an id whose `seq` mismatches is *stale* —
+//!   [`Platform::get`] returns `None`, [`Platform::is_live`] /
+//!   [`Platform::warm_at`] return `false`, and the billing/CPU entry
+//!   points panic rather than silently alias the slot's new occupant.
+//!   `InstanceId` orders by `seq` first, so sorted id collections
+//!   (Coordinator rosters) keep exact pre-arena spawn-order iteration
+//!   even across slot recycling.
+//! * **Free-list discipline** — [`Platform::kill`] finalizes the victim's
+//!   billing into retired accumulators, unlinks the slot from both
+//!   membership lists, stamps `seqs[slot] = FREE_SEQ`, and pushes the
+//!   slot onto a LIFO free list. [`spawn`](Platform::place_http) pops the
+//!   free list before growing the arena, so memory is bounded by the
+//!   *peak* live fleet — not by the number of instances ever spawned.
+//! * **SoA field ownership** — the hot fields consulted by submit-path
+//!   scans and per-second housekeeping (`ready_at`, `deployment`,
+//!   `cpu_free`, `last_used`, `active`) live in parallel arrays indexed
+//!   by slot, mutated ONLY through `Platform` methods
+//!   ([`submit_cpu`](Platform::submit_cpu),
+//!   [`begin_request`](Platform::begin_request) /
+//!   [`end_request`](Platform::end_request) / [`bill`](Platform::bill),
+//!   and the lifecycle transitions). The `Station` heap and billing
+//!   watermarks stay in the cold per-slot slab; `cpu_free[slot]` mirrors
+//!   `Station::earliest_start` and is refreshed on every `submit_cpu`.
+//! * **Live iteration** — per-deployment and global membership are
+//!   intrusive doubly-linked lists in spawn order (append at tail,
+//!   unlink on kill) — the same pattern as `InternedCache`'s dir lists —
+//!   so [`promote_warm`](Platform::promote_warm),
+//!   [`reclaim_idle`](Platform::reclaim_idle), eviction victim scans,
+//!   and utilization accounting do O(live) work while preserving the
+//!   pre-arena append-only iteration order exactly.
+//!
+//! The pre-arena append-only implementation is retained verbatim as
+//! [`super::reference::ReferencePlatform`] (the differential baseline
+//! for the `platform` perf hot spot and the determinism suite, mirroring
+//! `HeapQueue`'s role for the event queue). Billing float totals sum the
+//! retired accumulator first, then live instances in spawn order — bit
+//! identical to the pre-arena sum whenever no instance has died, and
+//! within an ulp otherwise (per-op/latency state is integer-exact, so id
+//! recycling never perturbs completion order).
+
+use std::cell::Cell;
 
 use crate::config::{FaasConfig, LambdaFsConfig};
+use crate::scaling::policy::ScaleOutPolicy;
 use crate::sim::station::Station;
 use crate::sim::{time, Time};
 use crate::util::dist::LogNormal;
 use crate::util::rng::Rng;
 
-/// Dense instance id (slab index; never reused within a run).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct InstanceId(pub u32);
+/// Intrusive-list nil sentinel.
+const NIL: u32 = u32::MAX;
+/// Generation tag marking an unoccupied (free) slot.
+const FREE_SEQ: u32 = u32::MAX;
 
-/// Instance lifecycle.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum InstanceState {
-    /// Cold-starting; warm at the given time.
-    Starting(Time),
-    Warm,
-    /// Reclaimed/killed at the given time.
-    Dead(Time),
+/// Generational instance id: `seq` is the globally monotonic spawn
+/// sequence (the slot's generation tag), `slot` the arena index. Derived
+/// `Ord` compares `seq` first — spawn order, stable across recycling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstanceId {
+    seq: u32,
+    slot: u32,
 }
 
-/// One function instance (= one serverless NameNode, §2 Terminology).
+impl InstanceId {
+    /// Assemble an id from raw parts (tests, serialization).
+    pub const fn from_parts(seq: u32, slot: u32) -> InstanceId {
+        InstanceId { seq, slot }
+    }
+
+    /// Globally monotonic spawn sequence number (generation tag).
+    pub fn seq(self) -> u32 {
+        self.seq
+    }
+
+    /// Arena slot index (dense; recycled across instance lifetimes).
+    pub fn slot(self) -> u32 {
+        self.slot
+    }
+}
+
+/// Cold per-slot record of one function instance (= one serverless
+/// NameNode, §2 Terminology). Hot fields (state, deployment, CPU
+/// backlog, idle-since, in-flight count) live in the platform's SoA
+/// arrays; what remains here is touched once per request at most.
 #[derive(Clone, Debug)]
 pub struct Instance {
     pub id: InstanceId,
     pub deployment: u32,
-    pub state: InstanceState,
-    /// CPU slots: `ConcurrencyLevel` concurrent requests.
-    pub cpu: Station,
-    /// In-flight request count (for busy-interval billing).
-    active: u32,
+    /// CPU slots: `ConcurrencyLevel` concurrent requests. Private — all
+    /// submissions go through [`Platform::submit_cpu`] so the dense
+    /// `cpu_free` mirror stays coherent.
+    cpu: Station,
     active_since: Time,
-    /// Watermark for analytic interval billing (see [`Instance::bill`]).
+    /// Watermark for analytic interval billing (see [`Platform::bill`]).
     billed_until: Time,
     /// Accumulated actively-serving microseconds (pay-per-use billing).
     pub busy_us: u64,
     pub requests: u64,
-    pub last_used: Time,
     pub born: Time,
-}
-
-impl Instance {
-    /// Is this instance past its cold start at `now`?
-    pub fn warm_at(&self, now: Time) -> bool {
-        match self.state {
-            InstanceState::Starting(t) => now >= t,
-            InstanceState::Warm => true,
-            InstanceState::Dead(_) => false,
-        }
-    }
-
-    pub fn alive(&self) -> bool {
-        !matches!(self.state, InstanceState::Dead(_))
-    }
-
-    /// Billing hook: a request begins service.
-    pub fn begin_request(&mut self, now: Time) {
-        if self.active == 0 {
-            self.active_since = now;
-        }
-        self.active += 1;
-        self.requests += 1;
-        self.last_used = now;
-    }
-
-    /// Billing hook: a request completes.
-    pub fn end_request(&mut self, now: Time) {
-        debug_assert!(self.active > 0);
-        self.active -= 1;
-        if self.active == 0 {
-            self.busy_us += now.saturating_sub(self.active_since);
-        }
-        self.last_used = now;
-    }
-
-    /// Busy time including a still-open active interval up to `now`.
-    pub fn busy_us_at(&self, now: Time) -> u64 {
-        if self.active > 0 {
-            self.busy_us + now.saturating_sub(self.active_since)
-        } else {
-            self.busy_us
-        }
-    }
-
-    /// Interval billing for the analytic simulation: credit the busy span
-    /// `[from, to)` as actively-serving time, unioned against previously
-    /// billed intervals via a watermark (requests on one instance arrive in
-    /// roughly increasing order, so overlap collapses correctly and
-    /// concurrent requests never double-bill — the paper bills a NameNode
-    /// once per 1 ms interval in which it serves *any* request).
-    pub fn bill(&mut self, from: Time, to: Time) {
-        let start = from.max(self.billed_until);
-        if to > start {
-            self.busy_us += to - start;
-        }
-        self.billed_until = self.billed_until.max(to);
-        self.requests += 1;
-        self.last_used = self.last_used.max(to);
-    }
 }
 
 /// Aggregate platform counters.
@@ -110,6 +118,8 @@ pub struct PlatformStats {
     pub kills: u64,
     pub http_invocations: u64,
     pub rejected_at_capacity: u64,
+    /// Spawns that reused a freed arena slot (recycling effectiveness).
+    pub recycled_slots: u64,
 }
 
 /// The FaaS platform.
@@ -117,9 +127,37 @@ pub struct PlatformStats {
 pub struct Platform {
     cfg: FaasConfig,
     lcfg: LambdaFsConfig,
-    pub instances: Vec<Instance>,
-    /// Live instance ids per deployment.
-    by_deployment: Vec<Vec<InstanceId>>,
+    scale_out: ScaleOutPolicy,
+    // ---- generational slab arena (indexed by slot) ----
+    slab: Vec<Instance>,
+    /// Occupying spawn-seq per slot; `FREE_SEQ` when the slot is free.
+    seqs: Vec<u32>,
+    /// Free slots, LIFO.
+    free: Vec<u32>,
+    next_seq: u32,
+    // ---- SoA hot fields (indexed by slot; live slots only are valid) ----
+    /// 0 = warm, t = cold-start deadline, `Time::MAX` = free slot.
+    ready_at: Vec<Time>,
+    deployment: Vec<u32>,
+    /// Mirror of `Station::earliest_start(0)` for the slot's CPU.
+    cpu_free: Vec<Time>,
+    last_used: Vec<Time>,
+    /// In-flight request count (busy-interval billing + idle scans).
+    active: Vec<u32>,
+    // ---- intrusive membership lists (spawn order) ----
+    dep_head: Vec<u32>,
+    dep_tail: Vec<u32>,
+    dep_prev: Vec<u32>,
+    dep_next: Vec<u32>,
+    live_head: u32,
+    live_tail: u32,
+    live_prev: Vec<u32>,
+    live_next: Vec<u32>,
+    live_per_dep: Vec<u32>,
+    live_total: u32,
+    // ---- retired (killed-instance) billing accumulators ----
+    retired_gb_s: f64,
+    retired_requests: u64,
     /// API gateway as a finite station (saturates under request storms).
     gateway: Station,
     cold: LogNormal,
@@ -128,6 +166,9 @@ pub struct Platform {
     /// Victim scratch for [`Platform::reclaim_idle`], reused across
     /// simulated seconds so steady-state housekeeping allocates nothing.
     reclaim_scratch: Vec<InstanceId>,
+    /// Slots visited by housekeeping/utilization scans — the O(live)
+    /// regression hook (`rust/tests` pin scans-per-second ∝ live fleet).
+    scan_work: Cell<u64>,
 }
 
 impl Platform {
@@ -136,13 +177,36 @@ impl Platform {
         Platform {
             cold: LogNormal::from_median(cfg.cold_start_ms, cfg.cold_start_sigma),
             gateway: Station::new(cfg.gateway_capacity),
+            // OpenWhisk adds containers when the activation queue it sees
+            // exceeds ~2 ms of backlog.
+            scale_out: ScaleOutPolicy::new(time::from_ms(2.0)),
             cfg,
             lcfg,
-            instances: Vec::new(),
-            by_deployment: vec![Vec::new(); n],
+            slab: Vec::new(),
+            seqs: Vec::new(),
+            free: Vec::new(),
+            next_seq: 0,
+            ready_at: Vec::new(),
+            deployment: Vec::new(),
+            cpu_free: Vec::new(),
+            last_used: Vec::new(),
+            active: Vec::new(),
+            dep_head: vec![NIL; n],
+            dep_tail: vec![NIL; n],
+            dep_prev: Vec::new(),
+            dep_next: Vec::new(),
+            live_head: NIL,
+            live_tail: NIL,
+            live_prev: Vec::new(),
+            live_next: Vec::new(),
+            live_per_dep: vec![0; n],
+            live_total: 0,
+            retired_gb_s: 0.0,
+            retired_requests: 0,
             stats: PlatformStats::default(),
             vcpus_in_use: 0.0,
             reclaim_scratch: Vec::new(),
+            scan_work: Cell::new(0),
         }
     }
 
@@ -158,23 +222,278 @@ impl Platform {
         self.vcpus_in_use
     }
 
-    /// Live instances of a deployment.
-    pub fn deployment_instances(&self, dep: u32) -> &[InstanceId] {
-        &self.by_deployment[dep as usize]
+    /// Instances ever spawned (diagnostic; `spawned_total - live` died).
+    pub fn spawned_total(&self) -> u64 {
+        self.next_seq as u64
+    }
+
+    /// Arena capacity in slots — bounded by the peak live fleet, not by
+    /// `spawned_total` (the memory contract of the recycling arena).
+    pub fn arena_slots(&self) -> usize {
+        self.slab.len()
+    }
+
+    /// Slots visited by housekeeping/utilization scans since the last
+    /// [`Self::reset_scan_work`] — the O(live) test hook.
+    pub fn scan_work(&self) -> u64 {
+        self.scan_work.get()
+    }
+
+    pub fn reset_scan_work(&self) {
+        self.scan_work.set(0);
+    }
+
+    #[inline]
+    fn tick_scan(&self) {
+        self.scan_work.set(self.scan_work.get() + 1);
+    }
+
+    // ---- arena plumbing -------------------------------------------------
+
+    #[inline]
+    fn live_slot(&self, id: InstanceId) -> Option<usize> {
+        let si = id.slot as usize;
+        (self.seqs.get(si).copied() == Some(id.seq)).then_some(si)
+    }
+
+    #[inline]
+    fn expect_slot(&self, id: InstanceId) -> usize {
+        self.live_slot(id).expect("stale InstanceId: instance was killed (slot may be recycled)")
+    }
+
+    fn grow_one(&mut self) -> u32 {
+        let slot = self.slab.len() as u32;
+        self.slab.push(Instance {
+            id: InstanceId { seq: FREE_SEQ, slot },
+            deployment: 0,
+            cpu: Station::new(1),
+            active_since: 0,
+            billed_until: 0,
+            busy_us: 0,
+            requests: 0,
+            born: 0,
+        });
+        self.seqs.push(FREE_SEQ);
+        self.ready_at.push(Time::MAX);
+        self.deployment.push(0);
+        self.cpu_free.push(0);
+        self.last_used.push(0);
+        self.active.push(0);
+        self.dep_prev.push(NIL);
+        self.dep_next.push(NIL);
+        self.live_prev.push(NIL);
+        self.live_next.push(NIL);
+        slot
+    }
+
+    fn dep_push(&mut self, dep: u32, slot: u32) {
+        let d = dep as usize;
+        let si = slot as usize;
+        self.dep_prev[si] = self.dep_tail[d];
+        self.dep_next[si] = NIL;
+        if self.dep_tail[d] != NIL {
+            self.dep_next[self.dep_tail[d] as usize] = slot;
+        } else {
+            self.dep_head[d] = slot;
+        }
+        self.dep_tail[d] = slot;
+        self.live_per_dep[d] += 1;
+    }
+
+    fn dep_unlink(&mut self, dep: u32, slot: u32) {
+        let d = dep as usize;
+        let si = slot as usize;
+        let (p, n) = (self.dep_prev[si], self.dep_next[si]);
+        if p != NIL {
+            self.dep_next[p as usize] = n;
+        } else {
+            self.dep_head[d] = n;
+        }
+        if n != NIL {
+            self.dep_prev[n as usize] = p;
+        } else {
+            self.dep_tail[d] = p;
+        }
+        self.dep_prev[si] = NIL;
+        self.dep_next[si] = NIL;
+        self.live_per_dep[d] -= 1;
+    }
+
+    fn live_push(&mut self, slot: u32) {
+        let si = slot as usize;
+        self.live_prev[si] = self.live_tail;
+        self.live_next[si] = NIL;
+        if self.live_tail != NIL {
+            self.live_next[self.live_tail as usize] = slot;
+        } else {
+            self.live_head = slot;
+        }
+        self.live_tail = slot;
+        self.live_total += 1;
+    }
+
+    fn live_unlink(&mut self, slot: u32) {
+        let si = slot as usize;
+        let (p, n) = (self.live_prev[si], self.live_next[si]);
+        if p != NIL {
+            self.live_next[p as usize] = n;
+        } else {
+            self.live_head = n;
+        }
+        if n != NIL {
+            self.live_prev[n as usize] = p;
+        } else {
+            self.live_tail = p;
+        }
+        self.live_prev[si] = NIL;
+        self.live_next[si] = NIL;
+        self.live_total -= 1;
+    }
+
+    // ---- membership & lookups ------------------------------------------
+
+    /// Live instances of a deployment, in spawn order.
+    pub fn deployment_instances(&self, dep: u32) -> impl Iterator<Item = InstanceId> + '_ {
+        let mut s = self.dep_head.get(dep as usize).copied().unwrap_or(NIL);
+        std::iter::from_fn(move || {
+            if s == NIL {
+                return None;
+            }
+            let si = s as usize;
+            s = self.dep_next[si];
+            Some(self.slab[si].id)
+        })
+    }
+
+    /// All live instances across deployments, in spawn order.
+    pub fn live_iter(&self) -> impl Iterator<Item = InstanceId> + '_ {
+        let mut s = self.live_head;
+        std::iter::from_fn(move || {
+            if s == NIL {
+                return None;
+            }
+            let si = s as usize;
+            s = self.live_next[si];
+            Some(self.slab[si].id)
+        })
     }
 
     /// Count of live instances across all deployments.
     pub fn live_instances(&self) -> usize {
-        self.by_deployment.iter().map(Vec::len).sum()
+        self.live_total as usize
     }
 
+    /// The instance for a live id; `None` for a stale id (killed, or
+    /// killed-and-recycled — the generation check rejects it either way).
+    pub fn get(&self, id: InstanceId) -> Option<&Instance> {
+        self.live_slot(id).map(|si| &self.slab[si])
+    }
+
+    /// Is this id's instance still alive (generation check)?
+    pub fn is_live(&self, id: InstanceId) -> bool {
+        self.live_slot(id).is_some()
+    }
+
+    /// Panicking accessor for known-live ids (hot paths).
     pub fn instance(&self, id: InstanceId) -> &Instance {
-        &self.instances[id.0 as usize]
+        &self.slab[self.expect_slot(id)]
     }
 
     pub fn instance_mut(&mut self, id: InstanceId) -> &mut Instance {
-        &mut self.instances[id.0 as usize]
+        let si = self.expect_slot(id);
+        &mut self.slab[si]
     }
+
+    /// Is this instance past its cold start at `now`? (false for stale
+    /// ids — a dead instance is never warm. There is no richer state
+    /// accessor: lifecycle is fully described by `is_live` + `warm_at`,
+    /// since dead instances are unobservable in the arena.)
+    pub fn warm_at(&self, id: InstanceId, now: Time) -> bool {
+        match self.live_slot(id) {
+            Some(si) => now >= self.ready_at[si],
+            None => false,
+        }
+    }
+
+    pub fn last_used(&self, id: InstanceId) -> Time {
+        self.last_used[self.expect_slot(id)]
+    }
+
+    // ---- CPU & billing entry points (keep the SoA mirrors coherent) ----
+
+    /// Earliest time a request arriving at `now` could start on the
+    /// instance's CPU (dense mirror of `Station::earliest_start`).
+    pub fn cpu_earliest_start(&self, id: InstanceId, now: Time) -> Time {
+        now.max(self.cpu_free[self.expect_slot(id)])
+    }
+
+    /// Submit a job to the instance's CPU station; returns
+    /// `(start, completion)` and refreshes the `cpu_free` mirror.
+    pub fn submit_cpu(&mut self, id: InstanceId, arrive: Time, service: Time) -> (Time, Time) {
+        let si = self.expect_slot(id);
+        let r = self.slab[si].cpu.submit(arrive, service);
+        self.cpu_free[si] = self.slab[si].cpu.earliest_start(0);
+        r
+    }
+
+    /// Billing hook: a request begins service.
+    pub fn begin_request(&mut self, id: InstanceId, now: Time) {
+        let si = self.expect_slot(id);
+        if self.active[si] == 0 {
+            self.slab[si].active_since = now;
+        }
+        self.active[si] += 1;
+        self.slab[si].requests += 1;
+        self.last_used[si] = now;
+    }
+
+    /// Billing hook: a request completes.
+    pub fn end_request(&mut self, id: InstanceId, now: Time) {
+        let si = self.expect_slot(id);
+        debug_assert!(self.active[si] > 0);
+        self.active[si] -= 1;
+        if self.active[si] == 0 {
+            let since = self.slab[si].active_since;
+            self.slab[si].busy_us += now.saturating_sub(since);
+        }
+        self.last_used[si] = now;
+    }
+
+    /// Busy time including a still-open active interval up to `now`.
+    pub fn busy_us_at(&self, id: InstanceId, now: Time) -> u64 {
+        let si = self.expect_slot(id);
+        self.busy_us_at_slot(si, now)
+    }
+
+    #[inline]
+    fn busy_us_at_slot(&self, si: usize, now: Time) -> u64 {
+        let inst = &self.slab[si];
+        if self.active[si] > 0 {
+            inst.busy_us + now.saturating_sub(inst.active_since)
+        } else {
+            inst.busy_us
+        }
+    }
+
+    /// Interval billing for the analytic simulation: credit the busy span
+    /// `[from, to)` as actively-serving time, unioned against previously
+    /// billed intervals via a watermark (requests on one instance arrive
+    /// in roughly increasing order, so overlap collapses correctly and
+    /// concurrent requests never double-bill — the paper bills a NameNode
+    /// once per 1 ms interval in which it serves *any* request).
+    pub fn bill(&mut self, id: InstanceId, from: Time, to: Time) {
+        let si = self.expect_slot(id);
+        let inst = &mut self.slab[si];
+        let start = from.max(inst.billed_until);
+        if to > start {
+            inst.busy_us += to - start;
+        }
+        inst.billed_until = inst.billed_until.max(to);
+        inst.requests += 1;
+        self.last_used[si] = self.last_used[si].max(to);
+    }
+
+    // ---- placement ------------------------------------------------------
 
     /// Max instances the vCPU budget allows overall.
     fn vcpu_headroom(&self) -> bool {
@@ -196,54 +515,45 @@ impl Platform {
     /// the (later) request-arrival time, because OpenWhisk decides to add
     /// containers from the queue it sees when the activation shows up.
     /// Picks the warm instance with the lightest backlog; if every
-    /// instance's queueing delay exceeds a tolerance and the deployment
-    /// may scale out, provisions a new instance.
+    /// instance's queueing delay exceeds the tolerance and the deployment
+    /// may scale out (see [`ScaleOutPolicy`]), provisions a new instance.
+    ///
+    /// The scan walks the deployment's intrusive live list and touches
+    /// only the dense SoA arrays — no per-instance `Station` heap access.
     ///
     /// Returns `(instance, earliest_service_start)`.
     pub fn place_http(&mut self, dep: u32, now: Time, rng: &mut Rng) -> (InstanceId, Time) {
         let cap = self.lcfg.autoscale.per_deployment_cap();
-        let live = &self.by_deployment[dep as usize];
 
         // Lightest-backlog live instance (includes still-starting ones:
         // OpenWhisk queues onto a starting container rather than starting
         // another for the same burst arrival). Scale-out decisions use the
         // *queueing* delay beyond instance readiness — a cold-starting
         // instance's boot time is not a reason to boot yet another one.
-        let mut best: Option<(InstanceId, Time)> = None;
+        let mut best: Option<(u32, Time)> = None;
         let mut min_queue_delay = Time::MAX;
-        for &id in live {
-            let inst = &self.instances[id.0 as usize];
-            let ready = match inst.state {
-                InstanceState::Starting(t) => t,
-                InstanceState::Warm => 0,
-                InstanceState::Dead(_) => continue,
-            };
-            let base = now.max(ready);
-            let start = inst.cpu.earliest_start(base);
-            min_queue_delay = min_queue_delay.min(start.saturating_sub(base));
+        let mut s = self.dep_head[dep as usize];
+        while s != NIL {
+            let si = s as usize;
+            let base = now.max(self.ready_at[si]); // ready_at == 0 when warm
+            let start = base.max(self.cpu_free[si]);
+            min_queue_delay = min_queue_delay.min(start - base);
             match best {
                 Some((_, b)) if b <= start => {}
-                _ => best = Some((id, start)),
+                _ => best = Some((s, start)),
             }
+            s = self.dep_next[si];
         }
 
-        // Scale out if: no instance, or every instance's queueing backlog
-        // exceeds a tolerance and the deployment may grow.
-        let backlog_tolerance = time::from_ms(2.0);
-        let may_grow = (live.len() as u32) < cap;
-        let should_grow = match best {
-            None => true,
-            Some(_) => may_grow && min_queue_delay > backlog_tolerance,
-        };
-
-        if should_grow && may_grow {
+        let live = self.live_per_dep[dep as usize];
+        if self.scale_out.should_grow(best.is_some(), live, cap, min_queue_delay) {
             if let Some((id, ready)) = self.provision(dep, now, rng) {
                 return (id, ready);
             }
         }
 
         match best {
-            Some((id, start)) => (id, start),
+            Some((slot, start)) => (self.slab[slot as usize].id, start),
             None => {
                 // Nothing live in this deployment and no idle victim to
                 // evict: the platform must still place the activation.
@@ -297,18 +607,20 @@ impl Platform {
         // another deployment and destroy it to make room. Never evict a
         // container that is still cold-starting — destroying warming
         // containers is precisely the thrashing spiral of Appendix B.
+        // The scan walks the global live list (spawn order — identical to
+        // the pre-arena full-slab scan restricted to live instances).
         let mut victim: Option<(InstanceId, Time)> = None;
-        for inst in &self.instances {
-            if !inst.alive() || inst.deployment == dep {
-                continue;
+        let mut s = self.live_head;
+        while s != NIL {
+            let si = s as usize;
+            self.tick_scan();
+            if self.deployment[si] != dep && self.active[si] == 0 && now >= self.ready_at[si] {
+                match victim {
+                    Some((_, t)) if t <= self.last_used[si] => {}
+                    _ => victim = Some((self.slab[si].id, self.last_used[si])),
+                }
             }
-            if inst.active > 0 || !inst.warm_at(now) {
-                continue;
-            }
-            match victim {
-                Some((_, t)) if t <= inst.last_used => {}
-                _ => victim = Some((inst.id, inst.last_used)),
-            }
+            s = self.live_next[si];
         }
         let (victim, _) = victim?;
         self.kill(victim, now, true);
@@ -324,21 +636,35 @@ impl Platform {
             cold_ms += self.cfg.churn_penalty_ms * rng.range_f64(0.8, 1.2);
         }
         let ready = now + time::from_ms(cold_ms);
-        let id = InstanceId(self.instances.len() as u32);
-        self.instances.push(Instance {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.stats.recycled_slots += 1;
+                s
+            }
+            None => self.grow_one(),
+        };
+        let si = slot as usize;
+        let id = InstanceId { seq, slot };
+        self.slab[si] = Instance {
             id,
             deployment: dep,
-            state: InstanceState::Starting(ready),
             cpu: Station::new(self.lcfg.concurrency_level),
-            active: 0,
-            billed_until: 0,
             active_since: 0,
+            billed_until: 0,
             busy_us: 0,
             requests: 0,
-            last_used: now,
             born: now,
-        });
-        self.by_deployment[dep as usize].push(id);
+        };
+        self.seqs[si] = seq;
+        self.ready_at[si] = ready;
+        self.deployment[si] = dep;
+        self.cpu_free[si] = 0;
+        self.last_used[si] = now;
+        self.active[si] = 0;
+        self.dep_push(dep, slot);
+        self.live_push(slot);
         self.vcpus_in_use += self.lcfg.vcpus_per_namenode;
         self.stats.cold_starts += 1;
         (id, ready)
@@ -356,14 +682,20 @@ impl Platform {
         }
     }
 
+    // ---- housekeeping (O(live) by construction) ------------------------
+
     /// Promote instances past their cold start to Warm (bookkeeping).
-    pub fn settle(&mut self, now: Time) {
-        for inst in &mut self.instances {
-            if let InstanceState::Starting(t) = inst.state {
-                if now >= t {
-                    inst.state = InstanceState::Warm;
-                }
+    /// Walks the global live list — O(live), not O(ever-spawned).
+    pub fn promote_warm(&mut self, now: Time) {
+        let mut s = self.live_head;
+        while s != NIL {
+            let si = s as usize;
+            self.tick_scan();
+            let r = self.ready_at[si];
+            if r != 0 && now >= r {
+                self.ready_at[si] = 0;
             }
+            s = self.live_next[si];
         }
     }
 
@@ -371,34 +703,42 @@ impl Platform {
     /// instance — connection state lives in the RPC fabric). Returns the
     /// one with the lightest CPU backlog.
     pub fn warm_instance(&self, dep: u32, now: Time) -> Option<InstanceId> {
-        let mut best: Option<(InstanceId, Time)> = None;
-        for &id in &self.by_deployment[dep as usize] {
-            let inst = &self.instances[id.0 as usize];
-            if !inst.warm_at(now) {
-                continue;
+        let mut best: Option<(u32, Time)> = None;
+        let mut s = self.dep_head[dep as usize];
+        while s != NIL {
+            let si = s as usize;
+            if now >= self.ready_at[si] {
+                let start = now.max(self.cpu_free[si]);
+                match best {
+                    Some((_, b)) if b <= start => {}
+                    _ => best = Some((s, start)),
+                }
             }
-            let start = inst.cpu.earliest_start(now);
-            match best {
-                Some((_, b)) if b <= start => {}
-                _ => best = Some((id, start)),
-            }
+            s = self.dep_next[si];
         }
-        best.map(|(id, _)| id)
+        best.map(|(slot, _)| self.slab[slot as usize].id)
     }
 
     /// Kill an instance (fault injection, capacity eviction, reclaim).
+    /// Stale ids are a no-op. Finalizes billing into the retired
+    /// accumulators, unlinks both membership lists, and returns the slot
+    /// to the free list with its generation retired — any id still naming
+    /// this instance is stale from here on.
     pub fn kill(&mut self, id: InstanceId, now: Time, for_capacity: bool) {
-        let inst = &mut self.instances[id.0 as usize];
-        if !inst.alive() {
-            return;
+        let Some(si) = self.live_slot(id) else { return };
+        if self.active[si] > 0 {
+            let since = self.slab[si].active_since;
+            self.slab[si].busy_us += now.saturating_sub(since);
+            self.active[si] = 0;
         }
-        if inst.active > 0 {
-            inst.busy_us += now.saturating_sub(inst.active_since);
-            inst.active = 0;
-        }
-        inst.state = InstanceState::Dead(now);
-        let dep = inst.deployment as usize;
-        self.by_deployment[dep].retain(|&x| x != id);
+        self.retired_gb_s += self.slab[si].busy_us as f64 / 1e6 * self.lcfg.gb_per_namenode;
+        self.retired_requests += self.slab[si].requests;
+        let dep = self.slab[si].deployment;
+        self.dep_unlink(dep, id.slot);
+        self.live_unlink(id.slot);
+        self.seqs[si] = FREE_SEQ;
+        self.ready_at[si] = Time::MAX;
+        self.free.push(id.slot);
         self.vcpus_in_use -= self.lcfg.vcpus_per_namenode;
         if !for_capacity {
             self.stats.kills += 1;
@@ -406,27 +746,31 @@ impl Platform {
     }
 
     /// Scale-in: reclaim instances idle longer than `idle_reclaim_ms`.
-    /// Returns the instances actually killed. The victim scan reuses an
-    /// internal scratch buffer, so per-second housekeeping performs no
-    /// allocation once the buffer has grown to fleet size.
+    /// Returns the instances actually killed. The victim scan walks the
+    /// global live list into a reused scratch buffer, so per-second
+    /// housekeeping does O(live) work and performs no allocation once the
+    /// buffer has grown to fleet size.
     pub fn reclaim_idle(&mut self, now: Time) -> &[InstanceId] {
         let deadline = time::from_ms(self.lcfg.idle_reclaim_ms);
         let mut victims = std::mem::take(&mut self.reclaim_scratch);
         victims.clear();
-        for inst in &self.instances {
-            if inst.alive()
-                && inst.active == 0
-                && inst.warm_at(now)
-                && now.saturating_sub(inst.last_used) >= deadline
+        let mut s = self.live_head;
+        while s != NIL {
+            let si = s as usize;
+            self.tick_scan();
+            if self.active[si] == 0
+                && now >= self.ready_at[si]
+                && now.saturating_sub(self.last_used[si]) >= deadline
             {
-                victims.push(inst.id);
+                victims.push(self.slab[si].id);
             }
+            s = self.live_next[si];
         }
         victims.retain(|&v| {
             // Keep at least one instance per deployment warm so TCP
             // clients retain a target (λFS relies on warm pools).
-            let dep = self.instances[v.0 as usize].deployment as usize;
-            if self.by_deployment[dep].len() > 1 {
+            let dep = self.deployment[v.slot as usize] as usize;
+            if self.live_per_dep[dep] > 1 {
                 self.kill(v, now, true);
                 self.stats.idle_reclaims += 1;
                 true
@@ -439,17 +783,34 @@ impl Platform {
     }
 
     /// Total actively-serving GB-seconds up to `now` (cost model input).
+    /// Retired instances contribute via the accumulator; live instances
+    /// are summed in spawn order — bit-identical to the pre-arena sum
+    /// whenever nothing has died (see the module doc).
     pub fn busy_gb_seconds(&self, now: Time) -> f64 {
         let gb = self.lcfg.gb_per_namenode;
-        self.instances
-            .iter()
-            .map(|i| i.busy_us_at(now) as f64 / 1e6 * gb)
-            .sum()
+        let mut total = self.retired_gb_s;
+        let mut s = self.live_head;
+        while s != NIL {
+            let si = s as usize;
+            self.tick_scan();
+            total += self.busy_us_at_slot(si, now) as f64 / 1e6 * gb;
+            s = self.live_next[si];
+        }
+        total
     }
 
-    /// Total requests served (per-request pricing input).
+    /// Total requests served (per-request pricing input; integer-exact
+    /// across kills via the retired accumulator).
     pub fn total_requests(&self) -> u64 {
-        self.instances.iter().map(|i| i.requests).sum()
+        let mut total = self.retired_requests;
+        let mut s = self.live_head;
+        while s != NIL {
+            let si = s as usize;
+            self.tick_scan();
+            total += self.slab[si].requests;
+            s = self.live_next[si];
+        }
+        total
     }
 }
 
@@ -478,7 +839,7 @@ mod tests {
         let (mut p, mut rng) = platform();
         let (id, ready, cold) = p.place_http_traced(0, 0, &mut rng);
         assert!(cold, "first placement provisions (cold)");
-        p.settle(ready);
+        p.promote_warm(ready);
         let (id2, _, cold2) = p.place_http_traced(0, ready + 10, &mut rng);
         assert_eq!(id, id2);
         assert!(!cold2, "warm reuse is not a cold start");
@@ -488,7 +849,7 @@ mod tests {
     fn warm_instance_reused() {
         let (mut p, mut rng) = platform();
         let (id1, ready) = p.place_http(0, 0, &mut rng);
-        p.settle(ready);
+        p.promote_warm(ready);
         let (id2, start) = p.place_http(0, ready + 10, &mut rng);
         assert_eq!(id1, id2, "warm instance reused");
         assert!(start <= ready + 10 + time::from_ms(1.0));
@@ -499,11 +860,11 @@ mod tests {
     fn saturated_deployment_scales_out() {
         let (mut p, mut rng) = platform();
         let (id1, ready) = p.place_http(0, 0, &mut rng);
-        p.settle(ready);
+        p.promote_warm(ready);
         // Saturate the instance's concurrency slots with long jobs.
         let conc = SystemConfig::default().lambda_fs.concurrency_level;
         for _ in 0..conc * 4 {
-            p.instance_mut(id1).cpu.submit(ready, time::from_ms(10.0));
+            p.submit_cpu(id1, ready, time::from_ms(10.0));
         }
         let (id2, _) = p.place_http(0, ready, &mut rng);
         assert_ne!(id1, id2, "burst provisions a second instance");
@@ -518,9 +879,9 @@ mod tests {
         let mut p = Platform::new(c.faas, lcfg);
         let mut rng = Rng::new(1);
         let (id1, ready) = p.place_http(0, 0, &mut rng);
-        p.settle(ready);
+        p.promote_warm(ready);
         for _ in 0..64 {
-            p.instance_mut(id1).cpu.submit(ready, time::from_ms(50.0));
+            p.submit_cpu(id1, ready, time::from_ms(50.0));
         }
         let (id2, _) = p.place_http(0, ready, &mut rng);
         assert_eq!(id1, id2, "never scales past 1");
@@ -536,7 +897,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let (_a, r1) = p.place_http(0, 0, &mut rng);
         let (_b, r2) = p.place_http(1, 0, &mut rng);
-        p.settle(r1.max(r2));
+        p.promote_warm(r1.max(r2));
         assert_eq!(p.live_instances(), 2);
         // Third deployment needs an instance: must evict one.
         let (c3, _) = p.place_http(2, r1.max(r2) + 1, &mut rng);
@@ -549,41 +910,60 @@ mod tests {
     fn billing_tracks_active_intervals() {
         let (mut p, mut rng) = platform();
         let (id, ready) = p.place_http(0, 0, &mut rng);
-        p.settle(ready);
-        let inst = p.instance_mut(id);
-        inst.begin_request(ready);
-        inst.end_request(ready + 1_000);
-        inst.begin_request(ready + 5_000);
-        inst.begin_request(ready + 5_500); // overlapping: one interval
-        inst.end_request(ready + 6_000);
-        inst.end_request(ready + 7_000);
-        assert_eq!(inst.busy_us, 1_000 + 2_000);
-        assert_eq!(inst.requests, 3);
+        p.promote_warm(ready);
+        p.begin_request(id, ready);
+        p.end_request(id, ready + 1_000);
+        p.begin_request(id, ready + 5_000);
+        p.begin_request(id, ready + 5_500); // overlapping: one interval
+        p.end_request(id, ready + 6_000);
+        p.end_request(id, ready + 7_000);
+        assert_eq!(p.instance(id).busy_us, 1_000 + 2_000);
+        assert_eq!(p.instance(id).requests, 3);
     }
 
     #[test]
     fn busy_gb_seconds_scales_with_memory() {
         let (mut p, mut rng) = platform();
         let (id, ready) = p.place_http(0, 0, &mut rng);
-        p.settle(ready);
-        p.instance_mut(id).begin_request(ready);
-        p.instance_mut(id).end_request(ready + 2_000_000); // 2s active
+        p.promote_warm(ready);
+        p.begin_request(id, ready);
+        p.end_request(id, ready + 2_000_000); // 2s active
         let gb = SystemConfig::default().lambda_fs.gb_per_namenode;
         assert!((p.busy_gb_seconds(ready + 2_000_000) - 2.0 * gb).abs() < 1e-6);
+    }
+
+    #[test]
+    fn billing_survives_kill() {
+        // A killed instance's pay-per-use totals must keep counting (the
+        // provider billed them) even after its slot is recycled.
+        let (mut p, mut rng) = platform();
+        let (id, ready) = p.place_http(0, 0, &mut rng);
+        p.promote_warm(ready);
+        p.bill(id, ready, ready + 3_000_000);
+        let before = p.busy_gb_seconds(ready + 3_000_000);
+        let reqs = p.total_requests();
+        p.kill(id, ready + 3_000_000, false);
+        assert!((p.busy_gb_seconds(ready + 3_000_000) - before).abs() < 1e-9);
+        assert_eq!(p.total_requests(), reqs);
+        // Recycle the slot; totals still include the dead instance.
+        let (id2, _) = p.place_http(0, ready + 3_000_100, &mut rng);
+        assert_eq!(id2.slot(), id.slot(), "slot recycled");
+        assert!((p.busy_gb_seconds(ready + 3_000_200) - before).abs() < 1e-9);
+        assert_eq!(p.total_requests(), reqs);
     }
 
     #[test]
     fn idle_reclaim_keeps_one_per_deployment() {
         let (mut p, mut rng) = platform();
         let (a, r1) = p.place_http(0, 0, &mut rng);
-        p.settle(r1);
+        p.promote_warm(r1);
         // saturate a; force scale-out
         let conc = SystemConfig::default().lambda_fs.concurrency_level;
         for _ in 0..conc * 4 {
-            p.instance_mut(a).cpu.submit(r1, time::from_ms(10.0));
+            p.submit_cpu(a, r1, time::from_ms(10.0));
         }
         let (_b, r2) = p.place_http(0, r1, &mut rng);
-        p.settle(r2);
+        p.promote_warm(r2);
         assert_eq!(p.live_instances(), 2);
         let far = r2 + time::from_ms(SystemConfig::default().lambda_fs.idle_reclaim_ms) + 1_000;
         p.reclaim_idle(far);
@@ -594,15 +974,82 @@ mod tests {
     fn kill_removes_from_deployment() {
         let (mut p, mut rng) = platform();
         let (id, ready) = p.place_http(0, 0, &mut rng);
-        p.settle(ready);
+        p.promote_warm(ready);
         p.kill(id, ready + 1, false);
         assert_eq!(p.live_instances(), 0);
-        assert!(!p.instance(id).alive());
+        assert!(p.get(id).is_none(), "killed id goes stale");
+        assert!(!p.is_live(id));
         assert_eq!(p.stats().kills, 1);
         assert!(p.warm_instance(0, ready + 2).is_none());
         // Next HTTP cold-starts a replacement.
         let (id2, _) = p.place_http(0, ready + 10, &mut rng);
         assert_ne!(id, id2);
+    }
+
+    #[test]
+    fn stale_id_rejected_not_aliased_after_recycle() {
+        let (mut p, mut rng) = platform();
+        let (id, ready) = p.place_http(0, 0, &mut rng);
+        p.promote_warm(ready);
+        p.kill(id, ready + 1, false);
+        assert!(p.get(id).is_none());
+        // LIFO free list: the very next spawn reuses the slot.
+        let (id2, _) = p.place_http(0, ready + 10, &mut rng);
+        assert_eq!(id2.slot(), id.slot(), "slot recycled");
+        assert_ne!(id2, id, "generation differs");
+        assert!(id < id2, "ids order by spawn sequence across recycling");
+        assert!(p.get(id).is_none(), "stale id rejected, not aliased");
+        assert!(!p.warm_at(id, ready + 20), "stale id is never warm");
+        assert!(p.is_live(id2));
+        assert_eq!(p.stats().recycled_slots, 1);
+    }
+
+    #[test]
+    fn arena_memory_bounded_by_peak_fleet() {
+        let (mut p, mut rng) = platform();
+        for i in 0..1_000u64 {
+            let (id, ready) = p.place_http(0, i * 1_000, &mut rng);
+            p.promote_warm(ready);
+            p.kill(id, ready + 1, false);
+        }
+        assert_eq!(p.spawned_total(), 1_000);
+        assert!(p.arena_slots() <= 2, "slots recycle: {} allocated", p.arena_slots());
+        assert_eq!(p.live_instances(), 0);
+    }
+
+    #[test]
+    fn housekeeping_scans_are_o_live_not_o_ever() {
+        // 10k spawned, 100 live: per-second housekeeping (promote_warm,
+        // reclaim_idle, utilization + request accounting) must do work
+        // proportional to the live fleet, pinned via the scan counter.
+        let c = SystemConfig::default();
+        let mut faas = c.faas.clone();
+        faas.vcpu_limit = 1e9; // headroom for the whole churn history
+        let mut p = Platform::new(faas, c.lambda_fs.clone());
+        let mut rng = Rng::new(5);
+        let deps = c.lambda_fs.n_deployments;
+        let mut live = Vec::new();
+        for i in 0..10_000u32 {
+            let (id, _) = p.force_spawn(i % deps, 0, &mut rng);
+            live.push(id);
+        }
+        for &id in &live[..9_900] {
+            p.kill(id, 1_000, false);
+        }
+        assert_eq!(p.spawned_total(), 10_000);
+        assert_eq!(p.live_instances(), 100);
+        let now = 2_000_000;
+        p.promote_warm(now);
+        p.reset_scan_work();
+        p.promote_warm(now);
+        p.reclaim_idle(now);
+        let _ = p.busy_gb_seconds(now);
+        let _ = p.total_requests();
+        let scans = p.scan_work();
+        assert!(
+            scans <= 4 * 100,
+            "housekeeping visited {scans} slots for 100 live instances (O(ever) would be ~40000)"
+        );
     }
 
     #[test]

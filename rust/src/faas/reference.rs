@@ -1,0 +1,381 @@
+//! The **pre-arena** platform implementation, retained verbatim as a
+//! differential baseline — the same role `sim::queue::HeapQueue` plays
+//! for the calendar-queue scheduler.
+//!
+//! This is the append-only `Vec<Instance>` platform the generational
+//! arena in [`super::platform`] replaced: ids are slab indexes that are
+//! never recycled, dead instances stay in the vector forever, and every
+//! housekeeping/utilization scan walks all instances ever spawned. Two
+//! consumers keep it alive:
+//!
+//! * `rust/benches/perf_simulator.rs` — the `platform` hot spot measures
+//!   an identical churn-heavy command stream through both
+//!   implementations (baseline = this module, current = the arena) and
+//!   cross-checks the observable outcomes.
+//! * `rust/tests/determinism.rs` — randomized differential tests assert
+//!   the arena reproduces this module's placement timings, stats, and
+//!   billing totals command-for-command (the "fingerprints unchanged by
+//!   the arena refactor" contract at the substrate level).
+//!
+//! Do not extend this module with new features; it is a frozen
+//! behavioral reference.
+
+use crate::config::{FaasConfig, LambdaFsConfig};
+use crate::sim::station::Station;
+use crate::sim::{time, Time};
+use crate::util::dist::LogNormal;
+use crate::util::rng::Rng;
+
+/// Dense instance id (slab index; never reused within a run).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RefInstanceId(pub u32);
+
+/// Instance lifecycle (the pre-arena form keeps dead instances visible).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefInstanceState {
+    Starting(Time),
+    Warm,
+    Dead(Time),
+}
+
+/// One function instance in the append-only layout.
+#[derive(Clone, Debug)]
+pub struct RefInstance {
+    pub id: RefInstanceId,
+    pub deployment: u32,
+    pub state: RefInstanceState,
+    pub cpu: Station,
+    active: u32,
+    active_since: Time,
+    billed_until: Time,
+    pub busy_us: u64,
+    pub requests: u64,
+    pub last_used: Time,
+    pub born: Time,
+}
+
+impl RefInstance {
+    pub fn warm_at(&self, now: Time) -> bool {
+        match self.state {
+            RefInstanceState::Starting(t) => now >= t,
+            RefInstanceState::Warm => true,
+            RefInstanceState::Dead(_) => false,
+        }
+    }
+
+    pub fn alive(&self) -> bool {
+        !matches!(self.state, RefInstanceState::Dead(_))
+    }
+
+    pub fn begin_request(&mut self, now: Time) {
+        if self.active == 0 {
+            self.active_since = now;
+        }
+        self.active += 1;
+        self.requests += 1;
+        self.last_used = now;
+    }
+
+    pub fn end_request(&mut self, now: Time) {
+        debug_assert!(self.active > 0);
+        self.active -= 1;
+        if self.active == 0 {
+            self.busy_us += now.saturating_sub(self.active_since);
+        }
+        self.last_used = now;
+    }
+
+    pub fn busy_us_at(&self, now: Time) -> u64 {
+        if self.active > 0 {
+            self.busy_us + now.saturating_sub(self.active_since)
+        } else {
+            self.busy_us
+        }
+    }
+
+    pub fn bill(&mut self, from: Time, to: Time) {
+        let start = from.max(self.billed_until);
+        if to > start {
+            self.busy_us += to - start;
+        }
+        self.billed_until = self.billed_until.max(to);
+        self.requests += 1;
+        self.last_used = self.last_used.max(to);
+    }
+}
+
+/// The pre-arena FaaS platform (append-only instance vector).
+#[derive(Clone, Debug)]
+pub struct ReferencePlatform {
+    cfg: FaasConfig,
+    lcfg: LambdaFsConfig,
+    pub instances: Vec<RefInstance>,
+    by_deployment: Vec<Vec<RefInstanceId>>,
+    gateway: Station,
+    cold: LogNormal,
+    stats: super::PlatformStats,
+    vcpus_in_use: f64,
+    reclaim_scratch: Vec<RefInstanceId>,
+}
+
+impl ReferencePlatform {
+    pub fn new(cfg: FaasConfig, lcfg: LambdaFsConfig) -> Self {
+        let n = lcfg.n_deployments as usize;
+        ReferencePlatform {
+            cold: LogNormal::from_median(cfg.cold_start_ms, cfg.cold_start_sigma),
+            gateway: Station::new(cfg.gateway_capacity),
+            cfg,
+            lcfg,
+            instances: Vec::new(),
+            by_deployment: vec![Vec::new(); n],
+            stats: super::PlatformStats::default(),
+            vcpus_in_use: 0.0,
+            reclaim_scratch: Vec::new(),
+        }
+    }
+
+    pub fn stats(&self) -> super::PlatformStats {
+        self.stats
+    }
+
+    pub fn vcpus_in_use(&self) -> f64 {
+        self.vcpus_in_use
+    }
+
+    pub fn deployment_instances(&self, dep: u32) -> &[RefInstanceId] {
+        &self.by_deployment[dep as usize]
+    }
+
+    pub fn live_instances(&self) -> usize {
+        self.by_deployment.iter().map(Vec::len).sum()
+    }
+
+    pub fn instance(&self, id: RefInstanceId) -> &RefInstance {
+        &self.instances[id.0 as usize]
+    }
+
+    pub fn instance_mut(&mut self, id: RefInstanceId) -> &mut RefInstance {
+        &mut self.instances[id.0 as usize]
+    }
+
+    fn vcpu_headroom(&self) -> bool {
+        self.vcpus_in_use + self.lcfg.vcpus_per_namenode
+            <= self.cfg.vcpu_limit * self.lcfg.max_vcpu_fraction + 1e-9
+    }
+
+    pub fn gateway_admit(&mut self, now: Time, rng: &mut Rng) -> Time {
+        self.stats.http_invocations += 1;
+        let svc = time::from_ms(self.cfg.gateway_overhead_ms * rng.range_f64(0.8, 1.3));
+        let (_, done) = self.gateway.submit(now, svc);
+        done
+    }
+
+    pub fn place_http(&mut self, dep: u32, now: Time, rng: &mut Rng) -> (RefInstanceId, Time) {
+        let cap = self.lcfg.autoscale.per_deployment_cap();
+        let live = &self.by_deployment[dep as usize];
+
+        let mut best: Option<(RefInstanceId, Time)> = None;
+        let mut min_queue_delay = Time::MAX;
+        for &id in live {
+            let inst = &self.instances[id.0 as usize];
+            let ready = match inst.state {
+                RefInstanceState::Starting(t) => t,
+                RefInstanceState::Warm => 0,
+                RefInstanceState::Dead(_) => continue,
+            };
+            let base = now.max(ready);
+            let start = inst.cpu.earliest_start(base);
+            min_queue_delay = min_queue_delay.min(start.saturating_sub(base));
+            match best {
+                Some((_, b)) if b <= start => {}
+                _ => best = Some((id, start)),
+            }
+        }
+
+        let backlog_tolerance = time::from_ms(2.0);
+        let may_grow = (live.len() as u32) < cap;
+        let should_grow = match best {
+            None => true,
+            Some(_) => may_grow && min_queue_delay > backlog_tolerance,
+        };
+
+        if should_grow && may_grow {
+            if let Some((id, ready)) = self.provision(dep, now, rng) {
+                return (id, ready);
+            }
+        }
+
+        match best {
+            Some((id, start)) => (id, start),
+            None => match self.provision_with_eviction(dep, now, rng) {
+                Some(placed) => placed,
+                None => {
+                    self.stats.rejected_at_capacity += 1;
+                    self.spawn(dep, now, rng, true)
+                }
+            },
+        }
+    }
+
+    pub fn place_http_traced(
+        &mut self,
+        dep: u32,
+        now: Time,
+        rng: &mut Rng,
+    ) -> (RefInstanceId, Time, bool) {
+        let before = self.stats.cold_starts;
+        let (id, ready) = self.place_http(dep, now, rng);
+        (id, ready, self.stats.cold_starts > before)
+    }
+
+    fn provision(&mut self, dep: u32, now: Time, rng: &mut Rng) -> Option<(RefInstanceId, Time)> {
+        if self.vcpu_headroom() {
+            Some(self.spawn(dep, now, rng, false))
+        } else {
+            self.provision_with_eviction(dep, now, rng)
+        }
+    }
+
+    fn provision_with_eviction(
+        &mut self,
+        dep: u32,
+        now: Time,
+        rng: &mut Rng,
+    ) -> Option<(RefInstanceId, Time)> {
+        let mut victim: Option<(RefInstanceId, Time)> = None;
+        for inst in &self.instances {
+            if !inst.alive() || inst.deployment == dep {
+                continue;
+            }
+            if inst.active > 0 || !inst.warm_at(now) {
+                continue;
+            }
+            match victim {
+                Some((_, t)) if t <= inst.last_used => {}
+                _ => victim = Some((inst.id, inst.last_used)),
+            }
+        }
+        let (victim, _) = victim?;
+        self.kill(victim, now, true);
+        self.stats.evictions_for_capacity += 1;
+        let (id, ready) = self.spawn(dep, now, rng, true);
+        Some((id, ready))
+    }
+
+    fn spawn(&mut self, dep: u32, now: Time, rng: &mut Rng, churn: bool) -> (RefInstanceId, Time) {
+        let mut cold_ms = self.cold.sample(rng);
+        if churn {
+            cold_ms += self.cfg.churn_penalty_ms * rng.range_f64(0.8, 1.2);
+        }
+        let ready = now + time::from_ms(cold_ms);
+        let id = RefInstanceId(self.instances.len() as u32);
+        self.instances.push(RefInstance {
+            id,
+            deployment: dep,
+            state: RefInstanceState::Starting(ready),
+            cpu: Station::new(self.lcfg.concurrency_level),
+            active: 0,
+            billed_until: 0,
+            active_since: 0,
+            busy_us: 0,
+            requests: 0,
+            last_used: now,
+            born: now,
+        });
+        self.by_deployment[dep as usize].push(id);
+        self.vcpus_in_use += self.lcfg.vcpus_per_namenode;
+        self.stats.cold_starts += 1;
+        (id, ready)
+    }
+
+    pub fn force_spawn(&mut self, dep: u32, now: Time, rng: &mut Rng) -> (RefInstanceId, Time) {
+        if self.vcpu_headroom() {
+            self.spawn(dep, now, rng, false)
+        } else {
+            self.provision_with_eviction(dep, now, rng)
+                .unwrap_or_else(|| self.spawn(dep, now, rng, true))
+        }
+    }
+
+    /// Pre-arena `promote_warm`: scans every instance ever spawned.
+    pub fn promote_warm(&mut self, now: Time) {
+        for inst in &mut self.instances {
+            if let RefInstanceState::Starting(t) = inst.state {
+                if now >= t {
+                    inst.state = RefInstanceState::Warm;
+                }
+            }
+        }
+    }
+
+    pub fn warm_instance(&self, dep: u32, now: Time) -> Option<RefInstanceId> {
+        let mut best: Option<(RefInstanceId, Time)> = None;
+        for &id in &self.by_deployment[dep as usize] {
+            let inst = &self.instances[id.0 as usize];
+            if !inst.warm_at(now) {
+                continue;
+            }
+            let start = inst.cpu.earliest_start(now);
+            match best {
+                Some((_, b)) if b <= start => {}
+                _ => best = Some((id, start)),
+            }
+        }
+        best.map(|(id, _)| id)
+    }
+
+    pub fn kill(&mut self, id: RefInstanceId, now: Time, for_capacity: bool) {
+        let inst = &mut self.instances[id.0 as usize];
+        if !inst.alive() {
+            return;
+        }
+        if inst.active > 0 {
+            inst.busy_us += now.saturating_sub(inst.active_since);
+            inst.active = 0;
+        }
+        inst.state = RefInstanceState::Dead(now);
+        let dep = inst.deployment as usize;
+        self.by_deployment[dep].retain(|&x| x != id);
+        self.vcpus_in_use -= self.lcfg.vcpus_per_namenode;
+        if !for_capacity {
+            self.stats.kills += 1;
+        }
+    }
+
+    pub fn reclaim_idle(&mut self, now: Time) -> &[RefInstanceId] {
+        let deadline = time::from_ms(self.lcfg.idle_reclaim_ms);
+        let mut victims = std::mem::take(&mut self.reclaim_scratch);
+        victims.clear();
+        for inst in &self.instances {
+            if inst.alive()
+                && inst.active == 0
+                && inst.warm_at(now)
+                && now.saturating_sub(inst.last_used) >= deadline
+            {
+                victims.push(inst.id);
+            }
+        }
+        victims.retain(|&v| {
+            let dep = self.instances[v.0 as usize].deployment as usize;
+            if self.by_deployment[dep].len() > 1 {
+                self.kill(v, now, true);
+                self.stats.idle_reclaims += 1;
+                true
+            } else {
+                false
+            }
+        });
+        self.reclaim_scratch = victims;
+        &self.reclaim_scratch
+    }
+
+    /// Pre-arena utilization accounting: O(ever-spawned) float sum.
+    pub fn busy_gb_seconds(&self, now: Time) -> f64 {
+        let gb = self.lcfg.gb_per_namenode;
+        self.instances.iter().map(|i| i.busy_us_at(now) as f64 / 1e6 * gb).sum()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.instances.iter().map(|i| i.requests).sum()
+    }
+}

@@ -71,7 +71,8 @@ pub fn run(scale: Scale, paper_x_t: f64) -> Fig8 {
         let mut sys = LambdaFs::new(c, ns.clone(), spec.n_clients, spec.n_vms);
         let mut r = rng.fork("lfs-reduced");
         driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-        outcomes.push(SystemOutcome { name: "lambdafs-reduced-cache", metrics: sys.into_metrics() });
+        let metrics = sys.into_metrics();
+        outcomes.push(SystemOutcome { name: "lambdafs-reduced-cache", metrics });
     }
 
     // HopsFS (full vCPU allocation).

@@ -41,8 +41,16 @@ impl Fig9 {
             "Figure 9: cumulative cost, 25k Spotify workload",
             &["system", "total_$", "vs_hopsfs"],
             &[
-                vec!["lambdafs (pay-per-use)".into(), common::f4(lfs), common::f2(hops / lfs.max(1e-9))],
-                vec!["lambdafs (simplified)".into(), common::f4(simp), common::f2(hops / simp.max(1e-9))],
+                vec![
+                    "lambdafs (pay-per-use)".into(),
+                    common::f4(lfs),
+                    common::f2(hops / lfs.max(1e-9)),
+                ],
+                vec![
+                    "lambdafs (simplified)".into(),
+                    common::f4(simp),
+                    common::f2(hops / simp.max(1e-9)),
+                ],
                 vec!["hopsfs".into(), common::f4(hops), "1.00".into()],
                 vec!["hopsfs+cache".into(), common::f4(hc), common::f2(hops / hc.max(1e-9))],
             ],

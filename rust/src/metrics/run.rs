@@ -117,11 +117,7 @@ impl RunMetrics {
     /// Total resubmissions folded from outcomes (weighted retry_hist sum;
     /// the tail bucket counts at its floor value).
     pub fn total_retries(&self) -> u64 {
-        self.retry_hist
-            .iter()
-            .enumerate()
-            .map(|(i, &n)| i as u64 * n)
-            .sum()
+        self.retry_hist.iter().enumerate().map(|(i, &n)| i as u64 * n).sum()
     }
 
     /// Cache hit ratio over ops that consulted a cache (hits + misses);

@@ -110,10 +110,7 @@ impl Namespace {
     /// Total INodes (dirs + files) under `root`, inclusive — the
     /// sub-operation count for a subtree operation.
     pub fn subtree_inodes(&self, root: DirId) -> u64 {
-        self.subtree_dirs(root)
-            .iter()
-            .map(|&d| 1 + self.dir(d).files as u64)
-            .sum()
+        self.subtree_dirs(root).iter().map(|&d| 1 + self.dir(d).files as u64).sum()
     }
 
     /// Path-resolution component count for an INode (path depth), which

@@ -51,11 +51,7 @@ impl ConnectionTable<FnvBuildHasher> {
 impl<S: BuildHasher + Default> ConnectionTable<S> {
     /// Table with an explicit hasher configuration.
     pub fn with_hasher() -> Self {
-        ConnectionTable {
-            conns: HashMap::with_hasher(S::default()),
-            established: 0,
-            dropped: 0,
-        }
+        ConnectionTable { conns: HashMap::with_hasher(S::default()), established: 0, dropped: 0 }
     }
 
     /// A NameNode instance established a connection back to `vm`.
@@ -75,11 +71,7 @@ impl<S: BuildHasher + Default> ConnectionTable<S> {
         dep: u32,
         mut alive: impl FnMut(InstanceId) -> bool,
     ) -> Option<InstanceId> {
-        self.conns
-            .get(&(vm, dep))?
-            .iter()
-            .copied()
-            .find(|&i| alive(i))
+        self.conns.get(&(vm, dep))?.iter().copied().find(|&i| alive(i))
     }
 
     /// All connections from `vm` to `dep` (callers pick the least-loaded
@@ -116,11 +108,16 @@ impl<S: BuildHasher + Default> ConnectionTable<S> {
 mod tests {
     use super::*;
 
+    /// Test id with seq == slot (the no-recycling shape).
+    fn iid(n: u32) -> InstanceId {
+        InstanceId::from_parts(n, n)
+    }
+
     #[test]
     fn establish_and_find() {
         let mut t = ConnectionTable::new();
-        t.establish(VmId(0), 3, InstanceId(7));
-        assert_eq!(t.find(VmId(0), 3, |_| true), Some(InstanceId(7)));
+        t.establish(VmId(0), 3, iid(7));
+        assert_eq!(t.find(VmId(0), 3, |_| true), Some(iid(7)));
         assert_eq!(t.find(VmId(0), 4, |_| true), None, "other deployment");
         assert_eq!(t.find(VmId(1), 3, |_| true), None, "other VM");
     }
@@ -128,8 +125,8 @@ mod tests {
     #[test]
     fn duplicate_establish_idempotent() {
         let mut t = ConnectionTable::new();
-        t.establish(VmId(0), 1, InstanceId(5));
-        t.establish(VmId(0), 1, InstanceId(5));
+        t.establish(VmId(0), 1, iid(5));
+        t.establish(VmId(0), 1, iid(5));
         assert_eq!(t.count(VmId(0), 1), 1);
         assert_eq!(t.established_total(), 1);
     }
@@ -137,19 +134,19 @@ mod tests {
     #[test]
     fn dead_instances_filtered() {
         let mut t = ConnectionTable::new();
-        t.establish(VmId(0), 1, InstanceId(5));
-        t.establish(VmId(0), 1, InstanceId(6));
-        let found = t.find(VmId(0), 1, |i| i != InstanceId(5));
-        assert_eq!(found, Some(InstanceId(6)));
+        t.establish(VmId(0), 1, iid(5));
+        t.establish(VmId(0), 1, iid(6));
+        let found = t.find(VmId(0), 1, |i| i != iid(5));
+        assert_eq!(found, Some(iid(6)));
     }
 
     #[test]
     fn drop_instance_removes_everywhere() {
         let mut t = ConnectionTable::new();
-        t.establish(VmId(0), 1, InstanceId(5));
-        t.establish(VmId(1), 1, InstanceId(5));
-        t.establish(VmId(0), 1, InstanceId(6));
-        t.drop_instance(InstanceId(5));
+        t.establish(VmId(0), 1, iid(5));
+        t.establish(VmId(1), 1, iid(5));
+        t.establish(VmId(0), 1, iid(6));
+        t.drop_instance(iid(5));
         assert_eq!(t.count(VmId(0), 1), 1);
         assert_eq!(t.count(VmId(1), 1), 0);
         assert_eq!(t.dropped_total(), 2);

@@ -118,11 +118,7 @@ mod real {
             let tuple = result.to_tuple()?;
             let deps = tuple[0].to_vec::<i32>()?;
             let hashes = tuple[1].to_vec::<u32>()?;
-            Ok(chunk
-                .iter()
-                .enumerate()
-                .map(|(i, _)| (deps[i] as u32, hashes[i]))
-                .collect())
+            Ok(chunk.iter().enumerate().map(|(i, _)| (deps[i] as u32, hashes[i])).collect())
         }
 
         /// Build a [`Router`](crate::client::Router) table for a whole
@@ -281,11 +277,7 @@ mod stub {
     }
 
     impl RouteExecutor {
-        pub fn route_batch(
-            &self,
-            _paths: &[&str],
-            _n_deployments: u32,
-        ) -> Result<Vec<(u32, u32)>> {
+        pub fn route_batch(&self, _paths: &[&str], _n_deployments: u32) -> Result<Vec<(u32, u32)>> {
             Err(RuntimeUnavailable)
         }
 

@@ -21,6 +21,37 @@ pub enum RpcPath {
     Http,
 }
 
+/// The invoker-side scale-out decision (§3.4, OpenWhisk semantics).
+///
+/// Extracted from `faas::Platform::place_http` so the policy is a pure,
+/// unit-testable function of the congestion signal the platform samples
+/// at invocation time: a deployment grows when it has no live instance,
+/// or when *every* live instance's queueing backlog (beyond cold-start
+/// readiness — a booting container is not a reason to boot another)
+/// exceeds the tolerance and the autoscale cap allows another instance.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleOutPolicy {
+    /// Queueing delay (µs) every live instance must exceed before the
+    /// deployment scales out.
+    pub backlog_tolerance_us: u64,
+}
+
+impl ScaleOutPolicy {
+    pub fn new(backlog_tolerance_us: u64) -> Self {
+        ScaleOutPolicy { backlog_tolerance_us }
+    }
+
+    /// Should the deployment provision a new instance? `has_live` is
+    /// whether any live instance exists, `live`/`cap` the current fleet
+    /// size and per-deployment cap, `min_queue_us` the smallest queueing
+    /// delay observed across live instances (`u64::MAX` when none
+    /// exist).
+    pub fn should_grow(&self, has_live: bool, live: u32, cap: u32, min_queue_us: u64) -> bool {
+        let may_grow = live < cap;
+        may_grow && (!has_live || min_queue_us > self.backlog_tolerance_us)
+    }
+}
+
 /// The replacement policy state (per client).
 #[derive(Clone, Debug)]
 pub struct ReplacementPolicy {
@@ -118,5 +149,25 @@ mod tests {
         assert_eq!(p.p_replace, 1.0);
         let p = ReplacementPolicy::new(-1.0);
         assert_eq!(p.p_replace, 0.0);
+    }
+
+    #[test]
+    fn scale_out_on_empty_deployment() {
+        let p = ScaleOutPolicy::new(2_000);
+        assert!(p.should_grow(false, 0, 1, u64::MAX), "no instance: must grow");
+    }
+
+    #[test]
+    fn scale_out_needs_backlog_beyond_tolerance() {
+        let p = ScaleOutPolicy::new(2_000);
+        assert!(!p.should_grow(true, 1, 8, 2_000), "at tolerance: hold");
+        assert!(p.should_grow(true, 1, 8, 2_001), "beyond tolerance: grow");
+    }
+
+    #[test]
+    fn scale_out_respects_cap() {
+        let p = ScaleOutPolicy::new(2_000);
+        assert!(!p.should_grow(true, 8, 8, u64::MAX), "at cap: never grow");
+        assert!(!p.should_grow(false, 1, 1, u64::MAX), "cap binds even when empty-ish");
     }
 }

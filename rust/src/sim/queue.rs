@@ -210,8 +210,7 @@ impl<E> EventQueue<E> {
                     // Descending (at, seq): the minimum pops from the back.
                     // (at, seq) is a total order, so unstable sort is
                     // deterministic.
-                    self.buckets[idx]
-                        .sort_unstable_by(|a, b| (b.at, b.seq).cmp(&(a.at, a.seq)));
+                    self.buckets[idx].sort_unstable_by(|a, b| (b.at, b.seq).cmp(&(a.at, a.seq)));
                     self.sorted[idx] = true;
                 }
                 let s = self.buckets[idx].pop().expect("non-empty bucket");

@@ -15,12 +15,7 @@ use super::{Completion, MetadataService, Request};
 /// completions through the identical pairing — the conservation
 /// invariant (`cold_starts + warm_ops == completed_ops`) holds only if
 /// `record_at` and `record_outcome` are always called together.
-pub(crate) fn record<S: MetadataService>(
-    sys: &mut S,
-    issue: Time,
-    c: &Completion,
-    is_write: bool,
-) {
+pub(crate) fn record<S: MetadataService>(sys: &mut S, issue: Time, c: &Completion, is_write: bool) {
     let lat_ms = time::to_ms(c.done - issue);
     let m = sys.metrics_mut();
     m.record_at(c.done, lat_ms, is_write);
@@ -276,12 +271,7 @@ mod tests {
                 outcome: Outcome { cache: CacheOutcome::Hit, ..Outcome::warm(0) },
             }
         }
-        fn submit_batch(
-            &mut self,
-            reqs: &[Request<'_>],
-            out: &mut Vec<Completion>,
-            rng: &mut Rng,
-        ) {
+        fn submit_batch(&mut self, reqs: &[Request<'_>], out: &mut Vec<Completion>, rng: &mut Rng) {
             self.batches += 1;
             out.clear();
             for req in reqs {

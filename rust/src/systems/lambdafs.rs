@@ -5,7 +5,7 @@
 //! instance of [`LambdaFs`] is one deployed λFS cluster; the generic
 //! drivers in [`super::driver`] feed it operations.
 
-use crate::cache::interned::InternedCache;
+use crate::cache::SlotCaches;
 use crate::client::{ClientState, Router};
 use crate::coherence::{protocol, Coordinator, Invalidation};
 use crate::config::SystemConfig;
@@ -37,8 +37,10 @@ pub struct LambdaFs<S: BuildHasher = FnvBuildHasher> {
     ns: Namespace,
     router: Router,
     platform: Platform,
-    /// Per-instance metadata caches, indexed by `InstanceId` slab index.
-    caches: Vec<InternedCache<S>>,
+    /// Per-instance metadata caches over the arena's recycled slots;
+    /// [`SlotCaches`] owns the generation invariant (clear-on-recycle,
+    /// stale-id guard) shared with the FaaS baselines.
+    caches: SlotCaches<S>,
     conns: ConnectionTable<S>,
     coord: Coordinator,
     store: NdbStore<S>,
@@ -86,12 +88,13 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             })
             .collect();
         let cost = CostModel::new(cfg.cost.clone());
+        let caches = SlotCaches::new(cfg.lambda_fs.cache_capacity);
         LambdaFs {
             cfg,
             ns,
             router,
             platform,
-            caches: Vec::new(),
+            caches,
             conns: ConnectionTable::with_hasher(),
             coord,
             store,
@@ -134,7 +137,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         for dep in 0..self.cfg.lambda_fs.n_deployments {
             for _ in 0..per_deployment {
                 let (id, ready) = self.platform.force_spawn(dep, 0, &mut rng);
-                self.platform.settle(ready);
+                self.platform.promote_warm(ready);
                 self.register(id);
                 // Connect to every VM so TCP is available immediately.
                 for &vm in &vms {
@@ -142,7 +145,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
                 }
             }
         }
-        self.platform.settle(u64::MAX / 2);
+        self.platform.promote_warm(u64::MAX / 2);
     }
 
     pub fn namespace(&self) -> &Namespace {
@@ -163,22 +166,11 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
 
     /// Aggregate cache stats over all instances (hit-ratio observability).
     pub fn cache_stats(&self) -> crate::cache::CacheStats {
-        let mut total = crate::cache::CacheStats::default();
-        for c in &self.caches {
-            let s = c.stats();
-            total.hits += s.hits;
-            total.misses += s.misses;
-            total.insertions += s.insertions;
-            total.invalidations += s.invalidations;
-            total.evictions += s.evictions;
-        }
-        total
+        self.caches.total_stats()
     }
 
     fn register(&mut self, id: InstanceId) {
-        while self.caches.len() <= id.0 as usize {
-            self.caches.push(InternedCache::with_hasher(self.cfg.lambda_fs.cache_capacity));
-        }
+        self.caches.ensure(id);
         if !self.coord.is_live(id) {
             let dep = self.platform.instance(id).deployment;
             self.coord.register(id, dep, 0);
@@ -188,16 +180,18 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
     /// Find a TCP-reachable instance of `dep` for a client on `vm`
     /// (own connections, then same-VM sharing — Fig. 4). Among the VM's
     /// live connections, pick the least-backlogged instance so TCP load
-    /// spreads across the deployment's whole fleet.
+    /// spreads across the deployment's whole fleet. Stale connection ids
+    /// (instance killed, slot possibly recycled) fail the platform's
+    /// generation check and are skipped — the dense `warm_at`/`cpu_free`
+    /// reads never touch a per-instance `Station` heap.
     fn tcp_target(&mut self, vm: VmId, dep: u32, now: Time) -> Option<InstanceId> {
         let platform = &self.platform;
         let mut best: Option<(InstanceId, Time)> = None;
         for &i in self.conns.all(vm, dep) {
-            let inst = platform.instance(i);
-            if !inst.alive() || !inst.warm_at(now) {
+            if !platform.warm_at(i, now) {
                 continue;
             }
-            let start = inst.cpu.earliest_start(now);
+            let start = platform.cpu_earliest_start(i, now);
             match best {
                 Some((_, b)) if b <= start => {}
                 _ => best = Some((i, start)),
@@ -212,13 +206,13 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
     fn serve_read(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> (Time, bool) {
         let mut rng = self.rng.fork_fast();
         let kind = op.kind;
-        let hit = self.caches[inst.0 as usize].get(op.target).is_some();
+        let hit = self.caches.cache_mut(inst).get(op.target).is_some();
         let cpu = if hit {
             self.svc.cache_hit(kind, &mut rng)
         } else {
             self.svc.cache_hit(kind, &mut rng) + self.svc.miss_insert(&mut rng)
         };
-        let (_, cpu_done) = self.platform.instance_mut(inst).cpu.submit(arrive, cpu);
+        let (_, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
         if hit {
             return (cpu_done, true);
         }
@@ -227,7 +221,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         let depth = self.ns.resolution_depth(op.target);
         let store_done = self.store.read_batch(cpu_done, depth, &mut rng);
         let version = self.store.version(op.target);
-        let cache = &mut self.caches[inst.0 as usize];
+        let cache = self.caches.cache_mut(inst);
         cache.insert_version(op.target, version);
         // "NameNodes cache the metadata for *all* INodes contained within
         // a particular path" (§3.3): fill the parent chain too.
@@ -244,7 +238,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
     fn serve_write(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> Time {
         let mut rng = self.rng.fork_fast();
         let cpu = self.svc.write_cpu(&mut rng);
-        let (_, cpu_done) = self.platform.instance_mut(inst).cpu.submit(arrive, cpu);
+        let (_, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
 
         // Rows touched: the target INode + its parent directory INode
         // (+ mv destination). Held inline — the write path allocates
@@ -268,6 +262,10 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         }
 
         // INV/ACK fan-out; every reached cache invalidates the rows.
+        // `get_mut_if_current` drops applies whose target id went stale
+        // AND whose slot was recycled (roster entries can outlive
+        // instances by up to a session timeout — they must not touch the
+        // slot's new occupant).
         let caches = &mut self.caches;
         let inv = Invalidation::Exact(rows);
         let outcome = protocol::run_protocol(
@@ -279,7 +277,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             &self.net,
             &mut rng,
             |target, inv| {
-                if let Some(c) = caches.get_mut(target.0 as usize) {
+                if let Some(c) = caches.get_mut_if_current(target) {
                     if let Invalidation::Exact(rows) = inv {
                         for r in *rows {
                             c.invalidate(*r);
@@ -296,7 +294,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         // Leader caches the fresh metadata (it holds the latest version).
         if !deletes {
             let v = self.store.version(op.target);
-            self.caches[inst.0 as usize].insert_version(op.target, v);
+            self.caches.cache_mut(inst).insert_version(op.target, v);
         }
         commit
     }
@@ -310,7 +308,8 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         let ns = &self.ns;
         let plan = SubtreePlan::build(ns, op.target.dir, |d| router.route_dir_contents(d));
 
-        // One prefix invalidation for the whole subtree.
+        // One prefix invalidation for the whole subtree (same generation
+        // guard as the exact-row protocol path).
         let caches = &mut self.caches;
         let ns_ref = &self.ns;
         let outcome = protocol::run_protocol(
@@ -322,7 +321,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             &self.net,
             &mut rng,
             |target, inv| {
-                if let Some(c) = caches.get_mut(target.0 as usize) {
+                if let Some(c) = caches.get_mut_if_current(target) {
                     if let Invalidation::Prefix(root) = inv {
                         c.invalidate_subtree(ns_ref, *root);
                     }
@@ -343,7 +342,8 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             Ok(done) => (done, 0),
             Err(_) => {
                 // Overlapping subtree op: retry after the lock-retry pause.
-                let retry = outcome.complete_at + time::from_ms(self.cfg.store.lock_retry_ms * 10.0);
+                let retry =
+                    outcome.complete_at + time::from_ms(self.cfg.store.lock_retry_ms * 10.0);
                 let done = subtree::execute(retry, &plan, params, &mut self.store, &mut rng)
                     .unwrap_or(retry + time::SEC);
                 (done, 1)
@@ -449,7 +449,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
 
         // Billing: the serving instance is active from arrival to service
         // completion (idle NameNodes accrue no pay-per-use cost).
-        self.platform.instance_mut(inst).bill(arrive, served);
+        self.platform.bill(inst, arrive, served);
         self.clients[c].observe(time::to_ms(done - now));
         Completion {
             done,
@@ -497,17 +497,19 @@ impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
 
     fn on_second(&mut self, second: usize) {
         let now = (second as Time + 1) * time::SEC;
-        self.platform.settle(now);
+        self.platform.promote_warm(now);
 
-        // Fault injection (Fig. 15). The per-second scans below iterate
-        // disjoint fields directly and `reclaim_idle` reuses a scratch
-        // buffer, so steady-state housekeeping allocates nothing.
+        // Fault injection (Fig. 15). The per-second scans below walk the
+        // arena's intrusive live lists — O(live instances), not
+        // O(ever-spawned) — and `reclaim_idle` reuses a scratch buffer,
+        // so steady-state housekeeping allocates nothing.
         let mut rng = self.rng.fork_fast();
         for &(s, dep) in &self.kill_schedule {
             if s != second {
                 continue;
             }
-            if let Some(&victim) = self.platform.deployment_instances(dep).first() {
+            let victim = self.platform.deployment_instances(dep).next();
+            if let Some(victim) = victim {
                 self.platform.kill(victim, now, false);
                 self.conns.drop_instance(victim);
                 self.coord.deregister(victim);
@@ -516,10 +518,8 @@ impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
 
         // Heartbeats + scale-in (`reclaim_idle` returns only the
         // instances it actually killed).
-        for inst in &self.platform.instances {
-            if inst.alive() {
-                self.coord.heartbeat(inst.id, now);
-            }
+        for id in self.platform.live_iter() {
+            self.coord.heartbeat(id, now);
         }
         for &victim in self.platform.reclaim_idle(now) {
             self.conns.drop_instance(victim);
@@ -572,7 +572,8 @@ mod tests {
 
     fn small_ns(cfg: &SystemConfig) -> Namespace {
         let mut rng = Rng::new(cfg.seed);
-        generate(&NamespaceParams { n_dirs: 512, files_per_dir: 32, ..Default::default() }, &mut rng)
+        let params = NamespaceParams { n_dirs: 512, files_per_dir: 32, ..Default::default() };
+        generate(&params, &mut rng)
     }
 
     fn run_small_open(x_t: f64, seconds: usize) -> RunMetrics {
@@ -678,7 +679,7 @@ mod tests {
             for f in 0..4 {
                 let inode = InodeRef::file(crate::namespace::DirId(d), f);
                 let store_v = sys.store.version(inode);
-                for c in &sys.caches {
+                for c in sys.caches.iter() {
                     if let Some(v) = c.peek_version(inode) {
                         assert_eq!(v, store_v, "stale cache entry for {inode:?}");
                         audited += 1;

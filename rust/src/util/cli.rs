@@ -33,9 +33,8 @@ impl Args {
                 } else if known_flags.contains(&body) {
                     out.flags.push(body.to_string());
                 } else {
-                    let val = raw
-                        .get(i + 1)
-                        .ok_or_else(|| format!("--{body} expects a value"))?;
+                    let val =
+                        raw.get(i + 1).ok_or_else(|| format!("--{body} expects a value"))?;
                     if val.starts_with("--") {
                         return Err(format!("--{body} expects a value, got {val}"));
                     }

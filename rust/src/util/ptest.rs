@@ -63,9 +63,7 @@ impl Gen {
     /// Random lowercase identifier of length `1..=max_len`.
     pub fn ident(&mut self, max_len: usize) -> String {
         let len = 1 + self.rng.below(max_len.max(1) as u64) as usize;
-        (0..len)
-            .map(|_| (b'a' + self.rng.below(26) as u8) as char)
-            .collect()
+        (0..len).map(|_| (b'a' + self.rng.below(26) as u8) as char).collect()
     }
 
     /// Random absolute path with `1..=max_depth` components.

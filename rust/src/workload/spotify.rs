@@ -75,15 +75,12 @@ impl OpMix {
     }
 
     /// Sample a full operation against a namespace.
-    pub fn sample_op(
-        &self,
-        ns: &Namespace,
-        sampler: &HotspotSampler,
-        rng: &mut Rng,
-    ) -> Operation {
+    pub fn sample_op(&self, ns: &Namespace, sampler: &HotspotSampler, rng: &mut Rng) -> Operation {
         let kind = self.sample_kind(rng);
         match kind {
-            OpKind::Mkdir => Operation::single(kind, crate::namespace::InodeRef::dir(sampler.dir(rng))),
+            OpKind::Mkdir => {
+                Operation::single(kind, crate::namespace::InodeRef::dir(sampler.dir(rng)))
+            }
             OpKind::Mv => {
                 let target = sampler.inode(ns, rng);
                 let dest = sampler.dir(rng);

@@ -25,13 +25,15 @@
 use lambda_fs::baselines::hopsfs::HopsFs;
 use lambda_fs::baselines::{CephFs, InfiniCacheMds};
 use lambda_fs::config::SystemConfig;
+use lambda_fs::faas::{Platform, ReferencePlatform};
 use lambda_fs::metrics::RunMetrics;
 use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
 use lambda_fs::namespace::Namespace;
 use lambda_fs::sim::queue::{EventQueue, HeapQueue};
 use lambda_fs::sim::time;
 use lambda_fs::systems::{driver, LambdaFs, MetadataService};
-use lambda_fs::trace::{replay_into, Recorder, Trace, TraceEvent, TraceMeta};
+use lambda_fs::trace::synth::{self, ContainerChurnSpec};
+use lambda_fs::trace::{replay, replay_into, Recorder, Trace, TraceEvent, TraceMeta};
 use lambda_fs::util::rng::Rng;
 use lambda_fs::workload::{ClosedLoopSpec, OpMix, OpenLoopSpec, ThroughputSchedule};
 
@@ -427,7 +429,10 @@ fn record_under_saturation_keeps_pure_slots() {
         for i in 0..n {
             let expect = s as u64 * time::SEC + i * time::SEC / n;
             assert!(
-                trace.events.iter().any(|e| matches!(e, TraceEvent::Op { at, .. } if *at == expect)),
+                trace
+                    .events
+                    .iter()
+                    .any(|e| matches!(e, TraceEvent::Op { at, .. } if *at == expect)),
                 "slot {expect} missing in second {s}"
             );
         }
@@ -449,6 +454,183 @@ fn record_under_saturation_keeps_pure_slots() {
         "fast replay stays on schedule ({})",
         m_fast.last_completion_us
     );
+}
+
+/// The generational arena reproduces the retained pre-arena platform
+/// (`faas::reference::ReferencePlatform`) command for command: identical
+/// placement ready-times (and therefore identical RNG draw sequences),
+/// identical live sets in iteration order, identical stats counters, and
+/// billing totals equal to float tolerance — over randomized schedules
+/// that mix placements, fault kills, capacity pressure, and idle
+/// reclamation. This is the "fingerprints unchanged by the arena
+/// refactor" contract at the substrate level, in the same spirit as the
+/// calendar-queue ≡ `HeapQueue` differential.
+#[test]
+fn arena_platform_matches_reference_semantics() {
+    for trial in 0..6u64 {
+        let base = SystemConfig::default();
+        let mut faas = base.faas.clone();
+        let mut lcfg = base.lambda_fs.clone();
+        lcfg.n_deployments = 4;
+        // Trials 0-2 run uncapped; 3-5 run under a tight vCPU budget so
+        // capacity evictions (and thus slot recycling) fire constantly.
+        if trial >= 3 {
+            faas.vcpu_limit = 6.25 * 3.0 / lcfg.max_vcpu_fraction;
+        }
+        // Short idle deadline: reclamation happens inside the trial.
+        lcfg.idle_reclaim_ms = 50.0;
+
+        let mut arena = Platform::new(faas.clone(), lcfg.clone());
+        let mut refp = ReferencePlatform::new(faas, lcfg);
+        let seed = 0xa12e ^ trial;
+        let mut ra = Rng::new(seed);
+        let mut rr = Rng::new(seed);
+        let mut decide = Rng::new(0xd1f ^ trial);
+
+        for step in 0..1_200u64 {
+            let now = step * 2_000; // 2 ms per step
+            match decide.below(10) {
+                0..=6 => {
+                    let dep = (decide.below(4)) as u32;
+                    let (ia, ta, ca) = arena.place_http_traced(dep, now, &mut ra);
+                    let (ir, tr, cr) = refp.place_http_traced(dep, now, &mut rr);
+                    assert_eq!(ta, tr, "trial {trial} step {step}: ready time diverged");
+                    assert_eq!(ca, cr, "trial {trial} step {step}: cold attribution diverged");
+                    assert_eq!(arena.instance(ia).deployment, refp.instance(ir).deployment);
+                    // Bill the placement identically on both sides.
+                    arena.bill(ia, ta, ta + 700);
+                    refp.instance_mut(ir).bill(ta, ta + 700);
+                }
+                7 => {
+                    // Fault-inject: kill the oldest live instance of a
+                    // deployment (the fig15 selection rule).
+                    let dep = (decide.below(4)) as u32;
+                    let va = arena.deployment_instances(dep).next();
+                    let vr = refp.deployment_instances(dep).first().copied();
+                    assert_eq!(va.is_some(), vr.is_some(), "trial {trial}: membership diverged");
+                    if let (Some(va), Some(vr)) = (va, vr) {
+                        assert_eq!(arena.instance(va).born, refp.instance(vr).born);
+                        arena.kill(va, now, false);
+                        refp.kill(vr, now, false);
+                    }
+                }
+                8 => {
+                    let dep = (decide.below(4)) as u32;
+                    let wa = arena.warm_instance(dep, now);
+                    let wr = refp.warm_instance(dep, now);
+                    assert_eq!(wa.is_some(), wr.is_some());
+                    if let (Some(wa), Some(wr)) = (wa, wr) {
+                        assert_eq!(arena.instance(wa).born, refp.instance(wr).born);
+                        assert_eq!(
+                            arena.cpu_earliest_start(wa, now),
+                            refp.instance(wr).cpu.earliest_start(now)
+                        );
+                    }
+                }
+                _ => {
+                    // Second-boundary housekeeping.
+                    arena.promote_warm(now);
+                    refp.promote_warm(now);
+                    assert_eq!(arena.reclaim_idle(now).len(), refp.reclaim_idle(now).len());
+                    let (ba, br) = (arena.busy_gb_seconds(now), refp.busy_gb_seconds(now));
+                    assert!((ba - br).abs() <= 1e-6 * br.abs().max(1.0), "{ba} vs {br}");
+                    assert_eq!(arena.total_requests(), refp.total_requests());
+                }
+            }
+            assert_eq!(arena.live_instances(), refp.live_instances(), "trial {trial} step {step}");
+            // The live sets match pairwise in iteration order (the order
+            // every scan and roster consumes).
+            let a: Vec<(u64, u32)> = arena
+                .live_iter()
+                .map(|i| (arena.instance(i).born, arena.instance(i).deployment))
+                .collect();
+            let r: Vec<(u64, u32)> = refp
+                .instances
+                .iter()
+                .filter(|i| i.alive())
+                .map(|i| (i.born, i.deployment))
+                .collect();
+            assert_eq!(a, r, "trial {trial} step {step}: live iteration order diverged");
+        }
+
+        let (sa, sr) = (arena.stats(), refp.stats());
+        assert_eq!(sa.cold_starts, sr.cold_starts, "trial {trial}");
+        assert_eq!(sa.kills, sr.kills, "trial {trial}");
+        assert_eq!(sa.idle_reclaims, sr.idle_reclaims, "trial {trial}");
+        assert_eq!(sa.evictions_for_capacity, sr.evictions_for_capacity, "trial {trial}");
+        assert_eq!(sa.rejected_at_capacity, sr.rejected_at_capacity, "trial {trial}");
+        if trial >= 3 {
+            assert!(sa.recycled_slots > 0, "capped trial {trial} must recycle slots");
+            assert!(
+                arena.arena_slots() < arena.spawned_total() as usize,
+                "arena memory must stay below instances-ever under churn"
+            );
+        }
+    }
+}
+
+/// Stale ids from killed instances are rejected at the public API even
+/// after their slot has been recycled — never aliased to the new
+/// occupant.
+#[test]
+fn stale_instance_id_rejected_after_slot_recycling() {
+    let c = SystemConfig::default();
+    let mut p = Platform::new(c.faas, c.lambda_fs);
+    let mut rng = Rng::new(17);
+    let (id, ready) = p.place_http(0, 0, &mut rng);
+    p.promote_warm(ready);
+    p.kill(id, ready + 1, false);
+    assert!(p.get(id).is_none(), "killed id is stale");
+    let (id2, _) = p.place_http(0, ready + 10, &mut rng);
+    assert_eq!(id2.slot(), id.slot(), "LIFO free list recycles the slot");
+    assert_ne!(id2, id, "generation differs");
+    assert!(p.get(id).is_none(), "stale id stays rejected after recycling");
+    assert!(!p.is_live(id) && p.is_live(id2));
+    assert!(!p.warm_at(id, ready + 1_000_000));
+    assert!(id < id2, "spawn-seq ordering is monotonic across recycling");
+}
+
+/// Kill-heavy determinism: a container-churn trace (CFS-style deep-path
+/// create/stat/unlink bursts) replayed into λFS under a fig15-style kill
+/// schedule — the regime where instance ids die and slots recycle
+/// mid-run. Same seed → bit-identical `fingerprint` and
+/// `outcome_fingerprint`; the run must actually exercise recycling.
+#[test]
+fn kill_heavy_container_churn_deterministic() {
+    fn run(seed: u64) -> (RunMetrics, u64, u64, usize) {
+        let mut cfg = SystemConfig::default();
+        cfg.seed = seed;
+        cfg.lambda_fs.n_deployments = 8;
+        let params = NamespaceParams { n_dirs: 256, files_per_dir: 16, ..Default::default() };
+        let mut ns_rng = Rng::new(seed);
+        let ns = generate(&params, &mut ns_rng);
+        let spec = ContainerChurnSpec::at_scale(0.002); // 20 s, ~300 ops/s
+        let meta = TraceMeta::new("churn-kill", seed, &params, 48, 2);
+        let mut trace_rng = Rng::new(seed ^ 0xc4a);
+        let trace = synth::container_churn(&spec, &ns, meta, &mut trace_rng);
+
+        let mut sys = LambdaFs::new(cfg, ns, 48, 2);
+        for (i, s) in (2..spec.duration_s).step_by(2).enumerate() {
+            sys.schedule_kill(s, (i as u32) % 8);
+        }
+        replay(&mut sys, &trace, &mut Rng::new(seed ^ 0x5eed));
+        let stats = sys.platform().stats();
+        let slots = sys.platform().arena_slots();
+        let m = sys.into_metrics();
+        (m, stats.kills, stats.recycled_slots, slots)
+    }
+
+    let (a, kills_a, recycled_a, _) = run(4242);
+    let (b, kills_b, _, _) = run(4242);
+    assert_eq!(a.fingerprint(), b.fingerprint(), "kill-heavy runs diverged");
+    assert_eq!(a.outcome_fingerprint(), b.outcome_fingerprint(), "outcome ledgers diverged");
+    assert_eq!(kills_a, kills_b);
+    assert!(kills_a >= 5, "the kill schedule actually fired: {kills_a}");
+    assert!(recycled_a > 0, "the run must recycle killed slots: {recycled_a}");
+    assert_eq!(a.cold_starts + a.warm_ops, a.completed_ops, "conservation under churn");
+
+    let (c, ..) = run(2424);
+    assert_ne!(a.fingerprint(), c.fingerprint(), "digest insensitive to seed");
 }
 
 /// Driving the *same closed-loop workload* through both queue

@@ -1,0 +1,178 @@
+#!/usr/bin/env python3
+"""Perf regression gate: validate BENCH_perf.json and compare it against
+the committed BENCH_baseline.json.
+
+Usage:
+    perf_gate.py BENCH_perf.json BENCH_baseline.json [--write-baseline OUT]
+
+Behaviour:
+  * Always validates the BENCH_perf.json schema (all required hot spots
+    present with positive baseline/current/speedup numbers).
+  * Emits a markdown delta table (to stdout, and appended to
+    $GITHUB_STEP_SUMMARY when set).
+  * When the committed baseline is calibrated, ops/s regressions beyond
+    the tolerance FAIL the gate for the spots listed in "gated"
+    (e2e_submit, e2e_submit_batch) and WARN for every other spot.
+  * When the committed baseline has "calibrated": false (bootstrap, or
+    after a runner change), the gate runs in report-only mode and prints
+    the calibrated baseline JSON to commit.
+  * --write-baseline OUT writes that calibrated baseline to a file.
+
+Exit codes: 0 ok / report-only, 1 schema violation or gated regression.
+"""
+
+import json
+import os
+import sys
+
+REQUIRED_SPOTS = {
+    "e2e_submit",
+    "e2e_submit_batch",
+    "event_queue",
+    "cache",
+    "router",
+    "store",
+    "platform",
+}
+
+
+def fail(msg):
+    print(f"perf_gate: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def validate_schema(bench):
+    if bench.get("schema") != "lambdafs-perf-v1":
+        fail(f"unexpected BENCH_perf.json schema: {bench.get('schema')}")
+    if bench.get("unit") != "ops_per_wall_second":
+        fail(f"unexpected unit: {bench.get('unit')}")
+    spots = bench.get("hot_spots", {})
+    missing = REQUIRED_SPOTS - set(spots)
+    if missing:
+        fail(f"missing hot spots: {sorted(missing)}")
+    for name, s in spots.items():
+        for k in ("baseline", "current", "speedup"):
+            v = s.get(k)
+            if not isinstance(v, (int, float)) or v <= 0:
+                fail(f"hot spot {name}: field {k} invalid: {v!r}")
+    return spots
+
+
+def main():
+    argv = sys.argv[1:]
+    write_baseline = None
+    if "--write-baseline" in argv:
+        i = argv.index("--write-baseline")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("--"):
+            fail("--write-baseline requires an output path")
+        write_baseline = argv[i + 1]
+        del argv[i : i + 2]
+    args = argv
+    if len(args) != 2 or any(a.startswith("--") for a in args):
+        fail("usage: perf_gate.py BENCH_perf.json BENCH_baseline.json [--write-baseline OUT]")
+    with open(args[0]) as f:
+        bench = json.load(f)
+    with open(args[1]) as f:
+        base = json.load(f)
+
+    spots = validate_schema(bench)
+    if base.get("schema") != "lambdafs-perf-baseline-v1":
+        fail(f"unexpected baseline schema: {base.get('schema')}")
+    calibrated = bool(base.get("calibrated", False))
+    tolerance = float(base.get("tolerance", 0.15))
+    gated = set(base.get("gated", []))
+    base_spots = base.get("hot_spots", {})
+
+    rows = []
+    failures = []
+    warnings = []
+    order = sorted(spots, key=lambda k: (k not in gated, k))
+    for name in order:
+        cur = spots[name]["current"]
+        committed = (base_spots.get(name) or {}).get("ops_per_wall_second")
+        gate = "gate" if name in gated else "warn"
+        if not calibrated or committed is None:
+            rows.append((name, "—", f"{cur:,.0f}", "—", f"({gate}, uncalibrated)"))
+            continue
+        delta = (cur - committed) / committed
+        status = "ok"
+        if delta < -tolerance:
+            status = "REGRESSION" if name in gated else "warn"
+            line = (
+                f"{name}: current {cur:,.0f} ops/s is {-delta * 100:.1f}% below "
+                f"committed baseline {committed:,.0f} ops/s (tolerance {tolerance * 100:.0f}%)"
+            )
+            (failures if name in gated else warnings).append(line)
+        rows.append((name, f"{committed:,.0f}", f"{cur:,.0f}", f"{delta * 100:+.1f}%", status))
+
+    md = ["## Perf regression gate", ""]
+    if calibrated:
+        md.append(
+            f"Committed baseline vs this run (ops/wall-second); gated spots "
+            f"({', '.join(sorted(gated))}) fail CI beyond {tolerance * 100:.0f}%."
+        )
+    else:
+        md.append(
+            "**Baseline is uncalibrated** — report-only. Commit the calibrated "
+            "baseline below (from a CI runner) to arm the gate."
+        )
+    md += ["", "| hot spot | committed | current | delta | status |", "|---|---|---|---|---|"]
+    for r in rows:
+        md.append("| " + " | ".join(r) + " |")
+    for w in warnings:
+        md.append(f"\n> ⚠️ {w}")
+    for f_ in failures:
+        md.append(f"\n> ❌ {f_}")
+
+    calibrated_out = {
+        "schema": "lambdafs-perf-baseline-v1",
+        "calibrated": True,
+        "tolerance": tolerance,
+        "gated": sorted(gated) if gated else ["e2e_submit", "e2e_submit_batch"],
+        "note": (
+            "ops/wall-second floors for the perf regression gate; recalibrate "
+            "(scripts/perf_gate.py --write-baseline) when the CI runner class changes"
+        ),
+        "hot_spots": {
+            name: {"ops_per_wall_second": round(spots[name]["current"])} for name in sorted(spots)
+        },
+    }
+    if not calibrated:
+        md += [
+            "",
+            "```json",
+            json.dumps(calibrated_out, indent=2),
+            "```",
+        ]
+    if write_baseline:
+        with open(write_baseline, "w") as f:
+            json.dump(calibrated_out, f, indent=2)
+            f.write("\n")
+        print(f"perf_gate: wrote calibrated baseline to {write_baseline}")
+
+    text = "\n".join(md) + "\n"
+    print(text)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(text)
+
+    e2e = spots["e2e_submit"]
+    print(
+        f"e2e submit: {e2e['baseline']:.0f} -> {e2e['current']:.0f} ops/s "
+        f"({e2e['speedup']:.2f}x)"
+    )
+    plat = spots["platform"]
+    print(
+        f"platform churn: {plat['baseline']:.0f} -> {plat['current']:.0f} ops/s "
+        f"({plat['speedup']:.2f}x, arena vs reference)"
+    )
+    if failures:
+        for f_ in failures:
+            print(f"perf_gate: FAIL: {f_}", file=sys.stderr)
+        sys.exit(1)
+    print("perf_gate: OK" + ("" if calibrated else " (report-only: baseline uncalibrated)"))
+
+
+if __name__ == "__main__":
+    main()
