@@ -1,8 +1,9 @@
 //! Bench: simulator-throughput microbenchmarks (the §Perf hot paths).
 //!
 //! Reports simulated-metadata-ops per wall-second for the λFS submit path
-//! and the component hot spots (router, cache, store, event queue), each
-//! measured **twice**:
+//! and the component hot spots (router, cache, store, event queue,
+//! platform churn, the table-driven sampling substrate, and the
+//! histogram record path), each measured **twice**:
 //!
 //! * **baseline** — for `event_queue` and `router`, the true pre-overhaul
 //!   implementation kept alive in-tree (the reference `HeapQueue` binary
@@ -35,7 +36,9 @@ use lambda_fs::namespace::{DirId, InodeRef, Namespace};
 use lambda_fs::sim::queue::{EventQueue, HeapQueue};
 use lambda_fs::store::NdbStore;
 use lambda_fs::systems::{driver, LambdaFs, MetadataService};
+use lambda_fs::util::dist::{self, Exp, LogNormal, Pareto, Zipf};
 use lambda_fs::util::fnv;
+use lambda_fs::util::hist::{reference::LnHistogram, Histogram};
 use lambda_fs::util::rng::Rng;
 use lambda_fs::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
 
@@ -76,6 +79,8 @@ fn main() {
     spots.push(router(&ns, &sampler, &mut rng));
     spots.push(store(&cfg, &mut rng));
     spots.push(platform_churn(&cfg));
+    spots.push(sampler_tables());
+    spots.push(hist_record());
 
     // Raw FNV (the kernel contract) — single-sided reference number.
     let paths: Vec<&str> = ns.dirs.iter().map(|d| d.path.as_str()).collect();
@@ -468,6 +473,124 @@ fn platform_churn(cfg: &SystemConfig) -> HotSpot {
     }
 }
 
+/// Sampling substrate: the per-op distribution mix (log-normal network
+/// leg, exponential service time, capped Pareto burst target, Zipf
+/// hot-directory rank) through the table-driven samplers (current) vs
+/// the retained closed-form `dist::reference` implementations
+/// (baseline), over identical per-side draw streams. Moments are
+/// cross-checked: the LUT/alias substrate must change only wall-clock
+/// speed, not the distributions.
+fn sampler_tables() -> HotSpot {
+    const N: usize = 400_000;
+    let n_ops = (4 * N) as f64;
+
+    let ln = LogNormal::from_median(8.0, 0.6);
+    let ex = Exp::new(0.5);
+    let pa = Pareto::new(25_000.0, 2.0);
+    let zi = Zipf::new(4096, 1.3);
+    let ((m_ln, m_ex, m_pa, m_zi), ms_cur) = BenchTimer::time(|| {
+        let mut r = Rng::new(0x5a3917);
+        let (mut s_ln, mut s_ex, mut s_pa, mut s_zi) = (0.0f64, 0.0f64, 0.0f64, 0u64);
+        for _ in 0..N {
+            s_ln += ln.sample(&mut r);
+            s_ex += ex.sample(&mut r);
+            s_pa += pa.sample_capped(&mut r, 7.0 * 25_000.0);
+            s_zi += zi.sample(&mut r);
+        }
+        let n = N as f64;
+        (s_ln / n, s_ex / n, s_pa / n, s_zi as f64 / n)
+    });
+
+    let rln = dist::reference::LogNormal::from_median(8.0, 0.6);
+    let rex = dist::reference::Exp::new(0.5);
+    let rpa = dist::reference::Pareto::new(25_000.0, 2.0);
+    let rzi = dist::reference::Zipf::new(4096, 1.3);
+    let ((r_ln, r_ex, r_pa, r_zi), ms_base) = BenchTimer::time(|| {
+        let mut r = Rng::new(0x5a3917);
+        let (mut s_ln, mut s_ex, mut s_pa, mut s_zi) = (0.0f64, 0.0f64, 0.0f64, 0u64);
+        for _ in 0..N {
+            s_ln += rln.sample(&mut r);
+            s_ex += rex.sample(&mut r);
+            s_pa += rpa.sample_capped(&mut r, 7.0 * 25_000.0);
+            s_zi += rzi.sample(&mut r);
+        }
+        let n = N as f64;
+        (s_ln / n, s_ex / n, s_pa / n, s_zi as f64 / n)
+    });
+
+    // Moment cross-checks. The three continuous distributions must agree
+    // tightly between substrates; Zipf's exact-discrete alias table and
+    // the continuous reference approximation agree only loosely on the
+    // mean rank (documented head-mass difference), so it gets a wide
+    // band plus a skew sanity check.
+    assert!((m_ln - r_ln).abs() / r_ln < 0.03, "lognormal mean {m_ln} vs {r_ln}");
+    assert!((m_ex - r_ex).abs() / r_ex < 0.03, "exp mean {m_ex} vs {r_ex}");
+    assert!((m_pa - r_pa).abs() / r_pa < 0.03, "pareto mean {m_pa} vs {r_pa}");
+    assert!(
+        (m_zi - r_zi).abs() / r_zi.max(1.0) < 0.5,
+        "zipf mean rank {m_zi} vs reference {r_zi}"
+    );
+    assert!(m_zi < 4096.0 * 0.25, "zipf skew: mean rank {m_zi} must sit in the head");
+
+    HotSpot {
+        key: "sampler",
+        baseline_impl: "dist::reference closed-form samplers (ln/exp/powf/cos per draw)",
+        current_impl: "quantile-LUT + alias-table samplers (one u64 draw, FMA/table reads)",
+        baseline: n_ops / (ms_base / 1_000.0),
+        current: n_ops / (ms_cur / 1_000.0),
+    }
+}
+
+/// Histogram record path: a pre-generated latency-shaped value stream
+/// through the integer-bucketed `Histogram` (leading_zeros log2 segments
+/// — current) vs the retained ln-bucketed `reference::LnHistogram`
+/// (baseline). Counts match exactly and quantiles agree within combined
+/// bucket resolution.
+fn hist_record() -> HotSpot {
+    const N: usize = 500_000;
+    const REPS: usize = 4;
+    let n_ops = (N * REPS) as f64;
+
+    let ln = LogNormal::from_median(1_500.0, 0.8);
+    let mut r = Rng::new(0x4157);
+    let vals: Vec<u64> = (0..N).map(|_| ln.sample(&mut r) as u64).collect();
+
+    let mut cur = Histogram::new();
+    let (_, ms_cur) = BenchTimer::time(|| {
+        for _ in 0..REPS {
+            for &v in &vals {
+                cur.record_us(v);
+            }
+        }
+        cur.count()
+    });
+
+    let mut base = LnHistogram::with_range(1.0, 1.02, 1200);
+    let (_, ms_base) = BenchTimer::time(|| {
+        for _ in 0..REPS {
+            for &v in &vals {
+                base.record(v as f64);
+            }
+        }
+        base.count()
+    });
+
+    assert_eq!(cur.count(), base.count());
+    assert!((cur.mean() - base.mean()).abs() / base.mean() < 1e-9, "means diverge");
+    for q in [0.5, 0.9, 0.99] {
+        let (a, b) = (cur.quantile(q), base.quantile(q));
+        assert!((a - b).abs() / b.max(1.0) < 0.05, "q={q}: {a} vs {b}");
+    }
+
+    HotSpot {
+        key: "hist",
+        baseline_impl: "reference::LnHistogram (one ln per record)",
+        current_impl: "integer-bucketed Histogram (leading_zeros + shift/mask per record)",
+        baseline: n_ops / (ms_base / 1_000.0),
+        current: n_ops / (ms_cur / 1_000.0),
+    }
+}
+
 /// Hand-rolled JSON (serde is not in the offline vendored set).
 fn render_json(spots: &[HotSpot], fnv_rate: f64) -> String {
     let mut s = String::new();
@@ -476,12 +599,14 @@ fn render_json(spots: &[HotSpot], fnv_rate: f64) -> String {
     s.push_str("  \"bench\": \"perf_simulator\",\n");
     s.push_str("  \"unit\": \"ops_per_wall_second\",\n");
     s.push_str(
-        "  \"note\": \"event_queue/router baselines are true pre-overhaul \
-         implementations; cache/store/e2e_submit baselines are the SipHash-hasher \
-         configuration of current code and understate pre-overhaul cost (the seed \
-         tree had no Cargo.toml, so no pre-change binary exists to measure); \
-         e2e_submit_batch's baseline is the scalar per-op submit path driving the \
-         identical workload (fingerprint-checked equal)\",\n",
+        "  \"note\": \"event_queue/router/platform/sampler/hist baselines are true \
+         pre-overhaul implementations retained in-tree (HeapQueue, Vec-router, \
+         ReferencePlatform, dist::reference closed-form samplers, \
+         hist::reference::LnHistogram); cache/store/e2e_submit baselines are the \
+         SipHash-hasher configuration of current code and understate pre-overhaul \
+         cost (the seed tree had no Cargo.toml, so no pre-change binary exists to \
+         measure); e2e_submit_batch's baseline is the scalar per-op submit path \
+         driving the identical workload (fingerprint-checked equal)\",\n",
     );
     let _ = writeln!(s, "  \"fnv_route_hashes_per_s\": {fnv_rate:.0},");
     s.push_str("  \"hot_spots\": {\n");

@@ -28,6 +28,7 @@ pub struct CephFs {
     mds: Vec<Station>,
     /// Shared journal for metadata mutations (SSD-backed, batched).
     journal: Station,
+    /// Per-op RPC latency (table-driven LUT sampler, one draw per leg).
     rpc: LogNormal,
     read_ms: f64,
     write_ms: f64,

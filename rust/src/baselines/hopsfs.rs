@@ -42,6 +42,9 @@ pub struct HopsFs {
     caches: Option<Vec<InternedCache>>,
     store: NdbStore,
     svc: ServiceModel,
+    /// Per-op RPC latency (table-driven LUT sampler; one draw per leg —
+    /// the baselines ride the same sampling substrate as λFS, keeping
+    /// comparisons apples-to-apples).
     rpc: LogNormal,
     metrics: RunMetrics,
     cost: CostModel,

@@ -31,6 +31,7 @@ pub struct IndexFs {
     /// Precomputed directory-hash routing over the server fleet.
     router: Router,
     servers: Vec<(Station, SsTableStore)>,
+    /// Per-op RPC latency (table-driven LUT sampler, one draw per leg).
     rpc: LogNormal,
     metrics: RunMetrics,
     cost: CostModel,

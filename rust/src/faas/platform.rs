@@ -160,6 +160,9 @@ pub struct Platform {
     retired_requests: u64,
     /// API gateway as a finite station (saturates under request storms).
     gateway: Station,
+    /// Cold-start latency sampler (table-driven quantile LUT — one RNG
+    /// draw per spawn; `faas::reference::ReferencePlatform` shares the
+    /// same type, so the arena↔reference differential stays draw-exact).
     cold: LogNormal,
     stats: PlatformStats,
     vcpus_in_use: f64,

@@ -73,10 +73,11 @@ impl RunMetrics {
     pub fn new() -> Self {
         RunMetrics {
             seconds: Vec::new(),
-            // Histograms store µs values: 1 µs .. ~5 hours at 2% resolution.
-            read_lat: Histogram::with_range(1.0, 1.02, 1200),
-            write_lat: Histogram::with_range(1.0, 1.02, 1200),
-            all_lat: Histogram::with_range(1.0, 1.02, 1200),
+            // Histograms store fixed-point µs (integer-bucketed, <1%
+            // resolution across the full u64 range — see util::hist).
+            read_lat: Histogram::new(),
+            write_lat: Histogram::new(),
+            all_lat: Histogram::new(),
             completed_ops: 0,
             failed_ops: 0,
             resubmissions: 0,
@@ -146,8 +147,16 @@ impl RunMetrics {
         self.record_at(second as u64 * 1_000_000, latency_ms, is_write)
     }
 
-    /// Record with the exact completion timestamp in µs.
+    /// Record with the exact completion timestamp in µs (float-latency
+    /// shim; the drivers use [`Self::record_at_us`] directly).
     pub fn record_at(&mut self, completion_us: u64, latency_ms: f64, is_write: bool) {
+        self.record_at_us(completion_us, (latency_ms * 1_000.0).round() as u64, is_write)
+    }
+
+    /// The per-op record hot path: exact completion timestamp and latency
+    /// both in integer µs — bucketing is pure integer math end to end
+    /// (no `ln`; see `util::hist::Histogram::record_us`).
+    pub fn record_at_us(&mut self, completion_us: u64, latency_us: u64, is_write: bool) {
         let second = (completion_us / 1_000_000) as usize;
         self.first_completion_us = self.first_completion_us.min(completion_us);
         self.last_completion_us = self.last_completion_us.max(completion_us);
@@ -156,13 +165,11 @@ impl RunMetrics {
         }
         self.seconds[second].completed += 1;
         self.completed_ops += 1;
-        // Histograms bucket µs for resolution (values stored as µs).
-        let us = latency_ms * 1_000.0;
-        self.all_lat.record(us);
+        self.all_lat.record_us(latency_us);
         if is_write {
-            self.write_lat.record(us);
+            self.write_lat.record_us(latency_us);
         } else {
-            self.read_lat.record(us);
+            self.read_lat.record_us(latency_us);
         }
     }
 

@@ -6,7 +6,7 @@
 //! of directories is "hot" (which is what stresses λFS' per-deployment
 //! auto-scaling and HopsFS+Cache's consistent-hash bottleneck).
 
-use crate::util::dist::Zipf;
+use crate::util::dist::{Exp, Zipf};
 use crate::util::rng::Rng;
 
 use super::{DirId, DirInfo, InodeRef, Namespace};
@@ -43,6 +43,11 @@ pub fn generate(params: &NamespaceParams, rng: &mut Rng) -> Namespace {
         files: 0,
     });
 
+    // File counts: exponential spread around the mean (table-driven
+    // sampler built once for the whole generation pass).
+    let file_count =
+        (params.files_per_dir > 0).then(|| Exp::new(1.0 / params.files_per_dir as f64));
+
     for i in 1..n {
         // Prefer shallow parents: sample parent from existing dirs with a
         // bias toward lower depth, rejecting max-depth parents.
@@ -64,7 +69,10 @@ pub fn generate(params: &NamespaceParams, rng: &mut Rng) -> Namespace {
         } else {
             format!("{}/{name}", dirs[parent.0 as usize].path)
         };
-        let files = sample_file_count(params.files_per_dir, rng);
+        let files = match &file_count {
+            Some(dist) => dist.sample(rng).round().max(1.0) as u32,
+            None => 0,
+        };
         let id = DirId(i as u32);
         dirs[parent.0 as usize].children.push(id);
         dirs.push(DirInfo { id, parent: Some(parent), path, depth, children: Vec::new(), files });
@@ -73,17 +81,10 @@ pub fn generate(params: &NamespaceParams, rng: &mut Rng) -> Namespace {
     Namespace::new(dirs)
 }
 
-fn sample_file_count(mean: u32, rng: &mut Rng) -> u32 {
-    if mean == 0 {
-        return 0;
-    }
-    // Geometric-ish spread around the mean, min 1.
-    let u = rng.f64().max(1e-12);
-    ((mean as f64) * (-u.ln())).round().max(1.0) as u32
-}
-
-/// Popularity-ranked sampler over a namespace: directory rank drawn from a
-/// Zipf, file drawn uniformly within the directory.
+/// Popularity-ranked sampler over a namespace: directory rank drawn from
+/// an exact discrete Zipf (alias table — one draw, two reads per sample;
+/// any skew `s >= 0` including `s = 1`), file drawn uniformly within the
+/// directory.
 #[derive(Clone, Debug)]
 pub struct HotspotSampler {
     /// Directory ids in popularity order (rank 0 = hottest).

@@ -4,6 +4,11 @@
 //! operations was 1-2ms for TCP RPCs and 8-20ms for HTTP RPCs", with TCP
 //! also showing "much smaller end-to-end latency variance". Log-normal
 //! models capture those medians and tails.
+//!
+//! Every op pays at least two of these samples, so they ride the
+//! table-driven substrate (`util::dist::LogNormal` quantile LUT): one
+//! RNG draw and a fused multiply-add per leg, no `ln`/`exp`/`cos` on the
+//! per-op path.
 
 use crate::config::NetConfig;
 use crate::sim::{time, Time};

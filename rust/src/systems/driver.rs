@@ -14,11 +14,12 @@ use super::{Completion, MetadataService, Request};
 /// per-deployment op counts). `pub(crate)` so `trace::replay` folds
 /// completions through the identical pairing — the conservation
 /// invariant (`cold_starts + warm_ops == completed_ops`) holds only if
-/// `record_at` and `record_outcome` are always called together.
+/// `record_at_us` and `record_outcome` are always called together.
 pub(crate) fn record<S: MetadataService>(sys: &mut S, issue: Time, c: &Completion, is_write: bool) {
-    let lat_ms = time::to_ms(c.done - issue);
     let m = sys.metrics_mut();
-    m.record_at(c.done, lat_ms, is_write);
+    // Latency stays in integer µs end to end: the histogram record path
+    // is pure integer math (no float conversion, no `ln` bucketing).
+    m.record_at_us(c.done, c.done - issue, is_write);
     m.record_outcome(&c.outcome);
 }
 

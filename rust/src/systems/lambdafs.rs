@@ -4,6 +4,12 @@
 //! This composes every substrate into the system of Figure 2. One
 //! instance of [`LambdaFs`] is one deployed λFS cluster; the generic
 //! drivers in [`super::driver`] feed it operations.
+//!
+//! Per-op stochastic legs (network hops via `NetModel`, platform cold
+//! starts, hot-directory ranks) all sample the table-driven substrate in
+//! `util::dist` — one RNG draw each, no transcendental math on the
+//! submit path; latencies are recorded through the integer-bucketed
+//! histogram path (`RunMetrics::record_at_us`).
 
 use crate::cache::SlotCaches;
 use crate::client::{ClientState, Router};

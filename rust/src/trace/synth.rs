@@ -18,6 +18,7 @@
 //! every baseline alike. Generation is deterministic in the passed RNG.
 
 use crate::namespace::{DirId, InodeRef, Namespace, OpKind, Operation};
+use crate::util::dist::Alias;
 use crate::util::rng::Rng;
 use crate::workload::ThroughputSchedule;
 
@@ -188,17 +189,11 @@ pub fn container_churn(
     );
     // Deep-path bias: weight ∝ (depth+1)^3, so image-layer and
     // per-container state dirs at the bottom of the hierarchy dominate.
-    let mut cum = Vec::with_capacity(ns.n_dirs());
-    let mut total = 0.0f64;
-    for d in &ns.dirs {
-        total += ((d.depth + 1) as f64).powi(3);
-        cum.push(total);
-    }
-    let deep_dir = |rng: &mut Rng| -> DirId {
-        let u = rng.f64() * total;
-        let i = cum.partition_point(|&c| c <= u);
-        DirId(i.min(ns.n_dirs() - 1) as u32)
-    };
+    // Alias table (table-driven substrate): one draw + two reads per op
+    // instead of a binary search over the cumulative weights.
+    let weights: Vec<f64> = ns.dirs.iter().map(|d| ((d.depth + 1) as f64).powi(3)).collect();
+    let deep = Alias::new(&weights);
+    let deep_dir = |rng: &mut Rng| -> DirId { DirId(deep.sample(rng) as u32) };
 
     let mut ops_by_second: Vec<Vec<Operation>> = Vec::with_capacity(spec.duration_s);
     let mut carry = 0.0f64;

@@ -1,17 +1,38 @@
 //! Latency histograms, percentiles, and CDFs (the paper's Figure 10).
 //!
-//! Log-bucketed histogram: ~1% relative resolution across nine decades of
-//! microseconds, constant memory, mergeable — what HdrHistogram does, at
-//! the scale this project needs.
+//! Integer-bucketed histogram, HdrHistogram-style: values (µs, fixed
+//! point) index into log2 segments with `SUB_BUCKETS` linear sub-buckets
+//! each, so a record is a `leading_zeros` + shift/mask — no `ln` on the
+//! per-op record path (the old log-bucketed implementation, one `ln` per
+//! record, survives as [`reference::LnHistogram`] for the differential
+//! tests and the `hist` bench baseline). Resolution is `1/SUB_BUCKETS`
+//! (< 1%) across the full `u64` range, constant memory, mergeable.
+//!
+//! Bucket layout: segment 0 covers `[0, SUB_BUCKETS)` exactly (one
+//! bucket per µs); segment `g >= 1` covers `[SUB_BUCKETS << (g-1),
+//! SUB_BUCKETS << g)` in `SUB_BUCKETS` linear sub-buckets of width
+//! `2^(g-1)`. The mapping is continuous (the last bucket of segment `g`
+//! abuts the first of `g+1`), covers all of `u64`, and is exact below
+//! `2 * SUB_BUCKETS`.
 
-/// Log-bucketed histogram over positive values (typically µs latencies).
+/// Linear sub-buckets per log2 segment: 128 → worst-case relative
+/// resolution 1/128 ≈ 0.8%.
+const SUB_BUCKETS: usize = 128;
+const SUB_BITS: u32 = SUB_BUCKETS.trailing_zeros(); // 7
+/// Segments 1..=57 cover `[128, u64::MAX]`; segment 0 is the exact
+/// linear region.
+const SEGMENTS: usize = 64 - SUB_BITS as usize; // 57
+const N_BUCKETS: usize = (SEGMENTS + 1) << SUB_BITS; // 7424
+
+/// Integer-bucketed histogram over non-negative values (µs latencies).
+///
+/// `count`/`sum`/`min`/`max` (and therefore [`Histogram::mean`]) are
+/// exact; [`Histogram::quantile`] and [`Histogram::cdf`] report bucket
+/// upper edges (≤ 1/128 relative error), clamped to the observed
+/// `[min, max]` like the pre-PR-5 implementation.
 #[derive(Clone, Debug)]
 pub struct Histogram {
-    /// buckets[i] counts values in [lo * G^i, lo * G^(i+1)).
     buckets: Vec<u64>,
-    lo: f64,
-    growth: f64,
-    inv_log_growth: f64,
     count: u64,
     sum: f64,
     min: f64,
@@ -25,18 +46,9 @@ impl Default for Histogram {
 }
 
 impl Histogram {
-    /// 1 µs .. ~17 minutes at 1% resolution.
     pub fn new() -> Self {
-        Self::with_range(1.0, 1.01, 2200)
-    }
-
-    pub fn with_range(lo: f64, growth: f64, n_buckets: usize) -> Self {
-        assert!(lo > 0.0 && growth > 1.0 && n_buckets > 0);
         Histogram {
-            buckets: vec![0; n_buckets],
-            lo,
-            growth,
-            inv_log_growth: 1.0 / growth.ln(),
+            buckets: vec![0; N_BUCKETS],
             count: 0,
             sum: 0.0,
             min: f64::INFINITY,
@@ -44,18 +56,48 @@ impl Histogram {
         }
     }
 
+    /// Bucket index for a fixed-point µs value: `leading_zeros` picks the
+    /// log2 segment, the top `SUB_BITS` mantissa bits the sub-bucket.
     #[inline]
-    fn index(&self, v: f64) -> usize {
-        if v <= self.lo {
-            return 0;
+    fn index_us(x: u64) -> usize {
+        if x < SUB_BUCKETS as u64 {
+            return x as usize;
         }
-        let i = ((v / self.lo).ln() * self.inv_log_growth) as usize;
-        i.min(self.buckets.len() - 1)
+        let msb = 63 - x.leading_zeros(); // >= SUB_BITS
+        let seg = (msb - SUB_BITS + 1) as usize;
+        let sub = ((x >> (msb - SUB_BITS)) & (SUB_BUCKETS as u64 - 1)) as usize;
+        (seg << SUB_BITS) + sub
     }
 
+    /// Exclusive upper edge of bucket `i`, as f64 (reporting only).
+    fn bucket_high(i: usize) -> f64 {
+        let seg = i >> SUB_BITS;
+        let sub = (i & (SUB_BUCKETS - 1)) as u128;
+        if seg == 0 {
+            (sub + 1) as f64
+        } else {
+            // u128 shift: the top segment's edge (256 << 56) overflows u64.
+            ((SUB_BUCKETS as u128 + sub + 1) << (seg - 1)) as f64
+        }
+    }
+
+    /// Integer fast path: the per-op record is a few ALU ops and two
+    /// array updates (the drivers feed µs latencies directly).
+    #[inline]
+    pub fn record_us(&mut self, us: u64) {
+        self.buckets[Self::index_us(us)] += 1;
+        self.count += 1;
+        let v = us as f64;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Float shim (tests/figures): truncates to fixed-point µs for
+    /// bucketing while keeping `sum`/`min`/`max` exact in f64.
     pub fn record(&mut self, v: f64) {
         debug_assert!(v.is_finite() && v >= 0.0, "bad sample {v}");
-        let idx = self.index(v.max(0.0));
+        let idx = Self::index_us(v.max(0.0) as u64);
         self.buckets[idx] += 1;
         self.count += 1;
         self.sum += v;
@@ -104,7 +146,7 @@ impl Histogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
             if acc >= target {
-                let edge = self.lo * self.growth.powi(i as i32 + 1);
+                let edge = Self::bucket_high(i);
                 return edge.min(self.max).max(self.min);
             }
         }
@@ -151,10 +193,105 @@ impl Histogram {
                 continue;
             }
             acc += c;
-            let edge = self.lo * self.growth.powi(i as i32 + 1);
-            out.push((edge.min(self.max), acc as f64 / self.count as f64));
+            out.push((Self::bucket_high(i).min(self.max), acc as f64 / self.count as f64));
         }
         out
+    }
+}
+
+/// The pre-PR-5 log-bucketed histogram (`ln` per record), retained
+/// verbatim as the differential baseline for the `hist` bench hot spot
+/// and the resolution-equivalence tests.
+pub mod reference {
+    /// Log-bucketed histogram over positive values (typically µs).
+    #[derive(Clone, Debug)]
+    pub struct LnHistogram {
+        /// buckets[i] counts values in [lo * G^i, lo * G^(i+1)).
+        buckets: Vec<u64>,
+        lo: f64,
+        growth: f64,
+        inv_log_growth: f64,
+        count: u64,
+        sum: f64,
+        min: f64,
+        max: f64,
+    }
+
+    impl LnHistogram {
+        /// 1 µs .. ~17 minutes at 1% resolution.
+        pub fn new() -> Self {
+            Self::with_range(1.0, 1.01, 2200)
+        }
+
+        pub fn with_range(lo: f64, growth: f64, n_buckets: usize) -> Self {
+            assert!(lo > 0.0 && growth > 1.0 && n_buckets > 0);
+            LnHistogram {
+                buckets: vec![0; n_buckets],
+                lo,
+                growth,
+                inv_log_growth: 1.0 / growth.ln(),
+                count: 0,
+                sum: 0.0,
+                min: f64::INFINITY,
+                max: f64::NEG_INFINITY,
+            }
+        }
+
+        #[inline]
+        fn index(&self, v: f64) -> usize {
+            if v <= self.lo {
+                return 0;
+            }
+            let i = ((v / self.lo).ln() * self.inv_log_growth) as usize;
+            i.min(self.buckets.len() - 1)
+        }
+
+        pub fn record(&mut self, v: f64) {
+            debug_assert!(v.is_finite() && v >= 0.0, "bad sample {v}");
+            let idx = self.index(v.max(0.0));
+            self.buckets[idx] += 1;
+            self.count += 1;
+            self.sum += v;
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+
+        pub fn count(&self) -> u64 {
+            self.count
+        }
+
+        pub fn mean(&self) -> f64 {
+            if self.count == 0 {
+                0.0
+            } else {
+                self.sum / self.count as f64
+            }
+        }
+
+        /// Approximate quantile `q` in [0,1] (bucket upper edge).
+        pub fn quantile(&self, q: f64) -> f64 {
+            if self.count == 0 {
+                return 0.0;
+            }
+            let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+            let mut acc = 0u64;
+            for (i, &c) in self.buckets.iter().enumerate() {
+                acc += c;
+                if acc >= target {
+                    let edge = self.lo * self.growth.powi(i as i32 + 1);
+                    return edge.min(self.max).max(self.min);
+                }
+            }
+            self.max
+        }
+
+        pub fn p50(&self) -> f64 {
+            self.quantile(0.50)
+        }
+
+        pub fn p99(&self) -> f64 {
+            self.quantile(0.99)
+        }
     }
 }
 
@@ -238,5 +375,61 @@ mod tests {
         }
         assert!(h.quantile(0.0) <= h.quantile(1.0));
         assert!(h.quantile(1.0) >= 50_000.0 * 0.98);
+    }
+
+    #[test]
+    fn index_is_monotone_and_continuous() {
+        // Exact linear region.
+        for x in 0..SUB_BUCKETS as u64 {
+            assert_eq!(Histogram::index_us(x), x as usize);
+        }
+        // Monotone (non-decreasing) across segment boundaries, and every
+        // bucket's upper edge bounds the values it receives.
+        let mut prev = 0usize;
+        for shift in 0..57u32 {
+            for off in [0u64, 1, 63, 64, 127] {
+                let x = (SUB_BUCKETS as u64 + off) << shift;
+                let i = Histogram::index_us(x);
+                assert!(i >= prev, "index not monotone at {x}");
+                assert!(Histogram::bucket_high(i) > x as f64, "edge bounds value at {x}");
+                prev = i;
+            }
+        }
+        assert!(Histogram::index_us(u64::MAX) < N_BUCKETS);
+    }
+
+    #[test]
+    fn record_us_matches_record_on_integers() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut x = 1u64;
+        for _ in 0..64 {
+            a.record_us(x);
+            b.record(x as f64);
+            x = x.wrapping_mul(2862933555777941757).wrapping_add(3037000493) >> 20;
+        }
+        assert_eq!(a.fingerprint(), b.fingerprint(), "integer and float paths agree");
+    }
+
+    #[test]
+    fn resolution_matches_reference_quantiles() {
+        // The integer-bucketed path reports the same quantiles as the
+        // retained ln-bucketed reference within combined resolution.
+        let mut cur = Histogram::new();
+        let mut refh = reference::LnHistogram::with_range(1.0, 1.01, 2200);
+        let mut v = 1.0f64;
+        for i in 0..20_000 {
+            let x = 1.0 + (v * 100_000.0) % 250_000.0;
+            cur.record_us(x as u64);
+            refh.record((x as u64) as f64);
+            v = (v * 1.0000931 + i as f64 * 1e-5) % 1.0 + 1.0;
+        }
+        assert_eq!(cur.count(), refh.count());
+        assert!((cur.mean() - refh.mean()).abs() / refh.mean() < 1e-9);
+        for q in [0.1, 0.5, 0.9, 0.99, 0.999] {
+            let a = cur.quantile(q);
+            let b = refh.quantile(q);
+            assert!((a - b).abs() / b.max(1.0) < 0.03, "q={q}: {a} vs {b}");
+        }
     }
 }

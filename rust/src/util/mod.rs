@@ -6,11 +6,16 @@
 //! this project needs:
 //!
 //! * [`rng`] — SplitMix64-seeded xoshiro256** PRNG.
-//! * [`dist`] — Pareto / Zipf / exponential / normal samplers.
+//! * [`dist`] — table-driven Pareto / Zipf / exponential / log-normal /
+//!   normal samplers (quantile LUTs + alias tables; one `u64` draw per
+//!   sample, no transcendental math after construction) with the
+//!   closed-form originals retained under `dist::reference`.
 //! * [`fnv`] — FNV-1a 32-bit, bit-identical to the L1 Pallas kernel.
 //! * [`fasthash`] — FNV-backed `FxHashMap`-style hasher for the hot-path
 //!   maps (deterministic, one multiply per interned-id key).
-//! * [`hist`] — latency histogram with exact-ish percentiles and CDFs.
+//! * [`hist`] — integer-bucketed latency histogram (log2 segments +
+//!   linear sub-buckets; no `ln` per record) with exact-ish percentiles
+//!   and CDFs.
 //! * [`minitoml`] — a TOML-subset parser for config files.
 //! * [`cli`] — flag/option argument parsing for the `lambdafs` binary.
 //! * [`ptest`] — a miniature property-testing harness (seeded generators,

@@ -7,8 +7,11 @@
 //! client VM then attempts to sustain δ = Δ/n ops/sec, with unfinished
 //! operations rolling over to the next second.
 //!
-//! The Pareto inverse-CDF here is the same formula as the AOT-lowered
-//! `pareto_schedule` artifact; the runtime test cross-checks the two.
+//! The redraws sample the table-driven `Pareto` (quantile LUT — see
+//! `util::dist`); the exact inverse-CDF formula the LUT is built from is
+//! retained in `util::dist::reference::Pareto` and matches the
+//! AOT-lowered `pareto_schedule` artifact, which the runtime test
+//! cross-checks against the formula directly.
 
 use crate::sim::{time, Time};
 use crate::util::dist::Pareto;

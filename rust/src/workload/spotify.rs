@@ -6,13 +6,19 @@
 
 use crate::namespace::generate::HotspotSampler;
 use crate::namespace::{Namespace, OpKind, Operation};
+use crate::util::dist::Alias;
 use crate::util::rng::Rng;
 
-/// A categorical distribution over operation kinds.
+/// A categorical distribution over operation kinds, sampled through the
+/// table-driven substrate: one RNG draw and at most two table reads per
+/// kind (`util::dist::Alias`), instead of a cumulative-probability scan.
 #[derive(Clone, Debug)]
 pub struct OpMix {
-    /// (kind, cumulative probability).
-    cumulative: Vec<(OpKind, f64)>,
+    /// Kind per alias column (index-aligned with `alias`).
+    kinds: Vec<OpKind>,
+    alias: Alias,
+    /// Write-kind probability mass, precomputed at construction.
+    write_fraction: f64,
 }
 
 impl OpMix {
@@ -39,39 +45,21 @@ impl OpMix {
         assert!(!weights.is_empty());
         let total: f64 = weights.iter().map(|(_, w)| w).sum();
         assert!(total > 0.0);
-        let mut acc = 0.0;
-        let cumulative = weights
-            .iter()
-            .map(|&(k, w)| {
-                acc += w / total;
-                (k, acc)
-            })
-            .collect();
-        OpMix { cumulative }
+        let kinds: Vec<OpKind> = weights.iter().map(|&(k, _)| k).collect();
+        let write_fraction =
+            weights.iter().filter(|(k, _)| k.is_write()).map(|(_, w)| w).sum::<f64>() / total;
+        let alias = Alias::new(&weights.iter().map(|&(_, w)| w).collect::<Vec<f64>>());
+        OpMix { kinds, alias, write_fraction }
     }
 
-    /// Sample an operation kind.
+    /// Sample an operation kind (one draw, alias-table lookup).
     pub fn sample_kind(&self, rng: &mut Rng) -> OpKind {
-        let u = rng.f64();
-        for &(k, c) in &self.cumulative {
-            if u < c {
-                return k;
-            }
-        }
-        self.cumulative.last().unwrap().0
+        self.kinds[self.alias.sample(rng)]
     }
 
     /// Fraction of write-kind mass (Table 2: 4.77 % for Spotify).
     pub fn write_fraction(&self) -> f64 {
-        let mut prev = 0.0;
-        let mut writes = 0.0;
-        for &(k, c) in &self.cumulative {
-            if k.is_write() {
-                writes += c - prev;
-            }
-            prev = c;
-        }
-        writes
+        self.write_fraction
     }
 
     /// Sample a full operation against a namespace.

@@ -21,6 +21,14 @@
 //!    (`cold_starts + warm_ops == completed_ops`).
 //! 4. **Saturation-proof recording.** Traces record *intended* slots,
 //!    so a recording made under saturation replays the pure schedule.
+//! 5. **Table-driven sampling substrate (PR 5).** Every distribution
+//!    sample consumes exactly one RNG draw (quantile LUT / alias table —
+//!    `util::dist`), and the integer-bucketed histogram keeps its
+//!    conservation invariants at the system level. The substrate switch
+//!    intentionally shifted sampled values, so fingerprints recorded
+//!    before PR 5 are not comparable to post-PR-5 runs (ROADMAP
+//!    artifact-comparability note); every test here pins *relative*
+//!    equalities, which re-pin the new values automatically.
 
 use lambda_fs::baselines::hopsfs::HopsFs;
 use lambda_fs::baselines::{CephFs, InfiniCacheMds};
@@ -631,6 +639,75 @@ fn kill_heavy_container_churn_deterministic() {
 
     let (c, ..) = run(2424);
     assert_ne!(a.fingerprint(), c.fingerprint(), "digest insensitive to seed");
+}
+
+/// The sampling-substrate determinism contract at the public-API level:
+/// one RNG draw per sample for every table-driven distribution. Forked
+/// component streams stay aligned across refactors only if per-sample
+/// draw counts are fixed, so this is load-bearing for record→replay.
+#[test]
+fn sampling_substrate_consumes_one_draw_per_sample() {
+    use lambda_fs::util::dist::{Alias, Exp, LogNormal, Pareto, Zipf};
+    fn one_draw(label: &str, mut sample: impl FnMut(&mut Rng)) {
+        let mut a = Rng::new(0x0d1a);
+        let mut b = Rng::new(0x0d1a);
+        for _ in 0..32 {
+            sample(&mut a);
+            b.next_u64();
+        }
+        for _ in 0..4 {
+            assert_eq!(a.next_u64(), b.next_u64(), "{label}: != one draw per sample");
+        }
+    }
+    let net = lambda_fs::rpc::NetModel::new(SystemConfig::default().net);
+    one_draw("NetModel::tcp_hop", |r| {
+        net.tcp_hop(r);
+    });
+    one_draw("NetModel::http_leg", |r| {
+        net.http_leg(r);
+    });
+    let p = Pareto::new(25_000.0, 2.0);
+    one_draw("Pareto", |r| {
+        p.sample(r);
+    });
+    let e = Exp::new(2.0);
+    one_draw("Exp", |r| {
+        e.sample(r);
+    });
+    let ln = LogNormal::from_median(8.0, 0.6);
+    one_draw("LogNormal", |r| {
+        ln.sample(r);
+    });
+    let z = Zipf::new(4096, 1.3);
+    one_draw("Zipf", |r| {
+        z.sample(r);
+    });
+    let a = Alias::new(&[3.0, 1.0, 0.5]);
+    one_draw("Alias", |r| {
+        a.sample(r);
+    });
+    let mix = OpMix::spotify();
+    one_draw("OpMix::sample_kind", |r| {
+        mix.sample_kind(r);
+    });
+}
+
+/// The integer-bucketed histogram migration, pinned at the system level:
+/// latency counts conserve across read/write splits, quantiles stay
+/// ordered and bounded by observed extremes, and the CDF terminates at 1.
+#[test]
+fn latency_histograms_consistent_after_integer_migration() {
+    let m = run_lambdafs_open(1234);
+    assert!(m.completed_ops > 0);
+    assert_eq!(m.all_lat.count(), m.completed_ops);
+    assert_eq!(m.read_lat.count() + m.write_lat.count(), m.all_lat.count());
+    for h in [&m.read_lat, &m.write_lat, &m.all_lat] {
+        assert!(h.p50() <= h.p99(), "quantiles ordered");
+        assert!(h.min() <= h.mean() && h.mean() <= h.max(), "mean within extremes");
+        assert!(h.quantile(1.0) <= h.max() && h.quantile(0.0) >= h.min());
+        let cdf = h.cdf();
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9, "cdf completes");
+    }
 }
 
 /// Driving the *same closed-loop workload* through both queue

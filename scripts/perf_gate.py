@@ -33,6 +33,8 @@ REQUIRED_SPOTS = {
     "router",
     "store",
     "platform",
+    "sampler",
+    "hist",
 }
 
 
@@ -86,12 +88,19 @@ def main():
     rows = []
     failures = []
     warnings = []
+    uncalibrated_spots = []
     order = sorted(spots, key=lambda k: (k not in gated, k))
     for name in order:
         cur = spots[name]["current"]
         committed = (base_spots.get(name) or {}).get("ops_per_wall_second")
         gate = "gate" if name in gated else "warn"
         if not calibrated or committed is None:
+            if calibrated and name in gated:
+                # A baseline claiming calibration must carry a floor for
+                # every gated spot — otherwise the tentpole regressions
+                # it exists to catch could never fail CI.
+                fail(f"baseline is calibrated but gated spot {name} has no committed floor")
+            uncalibrated_spots.append(name)
             rows.append((name, "—", f"{cur:,.0f}", "—", f"({gate}, uncalibrated)"))
             continue
         delta = (cur - committed) / committed
@@ -115,6 +124,16 @@ def main():
         md.append(
             "**Baseline is uncalibrated** — report-only. Commit the calibrated "
             "baseline below (from a CI runner) to arm the gate."
+        )
+    if uncalibrated_spots:
+        # Loud counter: every run without committed floors shouts how much
+        # of the suite is unenforced, so an uncalibrated gate cannot pass
+        # silently for months.
+        md.append(
+            f"\n> ### ⚠️ UNCALIBRATED RUN — {len(uncalibrated_spots)}/{len(order)} hot "
+            f"spots have no committed floor\n"
+            f"> Unenforced: {', '.join(sorted(uncalibrated_spots))}. Regressions in "
+            f"these spots CANNOT fail CI until a calibrated baseline is committed."
         )
     md += ["", "| hot spot | committed | current | delta | status |", "|---|---|---|---|---|"]
     for r in rows:
@@ -171,6 +190,12 @@ def main():
         for f_ in failures:
             print(f"perf_gate: FAIL: {f_}", file=sys.stderr)
         sys.exit(1)
+    if uncalibrated_spots:
+        print(
+            f"perf_gate: WARNING: UNCALIBRATED RUN — {len(uncalibrated_spots)}/{len(order)} "
+            f"hot spots unenforced ({', '.join(sorted(uncalibrated_spots))})",
+            file=sys.stderr,
+        )
     print("perf_gate: OK" + ("" if calibrated else " (report-only: baseline uncalibrated)"))
 
 
