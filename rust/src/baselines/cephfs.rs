@@ -9,10 +9,12 @@
 //! paper observes CephFS winning the first 4–5 problem sizes of the read
 //! micro-benchmarks and writes generally, then falling behind λFS.
 
+use crate::chaos::{self, ChaosPlan, ChaosState};
 use crate::client::Router;
 use crate::config::SystemConfig;
 use crate::metrics::{CostModel, RunMetrics};
 use crate::namespace::Namespace;
+use crate::rpc::backoff::Backoff;
 use crate::sim::station::Station;
 use crate::sim::time;
 use crate::systems::{CacheOutcome, Completion, MetadataService, Outcome, Request};
@@ -36,6 +38,13 @@ pub struct CephFs {
     cost: CostModel,
     rng: Rng,
     total_vcpus: f64,
+    /// Config seed + client HTTP timeout, retained for chaos installs
+    /// (CephFs does not keep the whole `SystemConfig`).
+    seed: u64,
+    timeout_ms: f64,
+    /// Installed chaos plan + dedicated stream; `None` keeps the no-chaos
+    /// draw sequence untouched.
+    chaos: Option<ChaosState>,
 }
 
 impl CephFs {
@@ -59,6 +68,9 @@ impl CephFs {
             cost: CostModel::new(cfg.cost.clone()),
             rng: Rng::new(cfg.seed ^ 0xcef5),
             total_vcpus,
+            seed: cfg.seed,
+            timeout_ms: cfg.faas.http_timeout_ms,
+            chaos: None,
         }
     }
 
@@ -68,11 +80,41 @@ impl CephFs {
 }
 
 impl MetadataService for CephFs {
+    fn install_chaos(&mut self, plan: &ChaosPlan) {
+        self.chaos = (!plan.is_none()).then(|| ChaosState::new(self.seed, plan));
+    }
+
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
-        let (now, op) = (req.at, req.op);
+        let (mut now, op) = (req.at, req.op);
         let mut local = Rng::new(self.rng.next_u64());
         let mds = self.router.route(&self.ns, op.target) as usize;
-        let arrive = now + time::from_ms(self.rpc.sample(rng));
+        let mut timeouts = 0u32;
+        let mut rpc_mult = 1.0;
+        if let Some(ch) = self.chaos.as_mut() {
+            let vm = req.client % ch.plan.n_vms.max(1);
+            let backoff = Backoff::default();
+            let mut attempt = 0u32;
+            while ch.plan.lost(chaos::second_of(now), vm, mds as u32, op.kind.is_write()) {
+                timeouts += 1;
+                if backoff.exhausted(attempt) {
+                    return Completion {
+                        done: now,
+                        outcome: Outcome {
+                            retries: attempt,
+                            timeouts,
+                            gave_up: true,
+                            ..Outcome::warm(mds as u32)
+                        },
+                    };
+                }
+                now += time::from_ms(self.timeout_ms) + backoff.delay(attempt, &mut ch.rng);
+                attempt += 1;
+            }
+            if let Some(m) = ch.plan.leg_mults(chaos::second_of(now)) {
+                rpc_mult = m.http;
+            }
+        }
+        let arrive = now + time::from_ms(self.rpc.sample(rng) * rpc_mult);
         let (served, cache) = if op.kind.is_write() || op.kind.is_subtree() {
             // Capability-based write: in-memory update + journal append.
             let factor = if op.kind.is_subtree() {
@@ -92,11 +134,16 @@ impl MetadataService for CephFs {
             let (_, done) = self.mds[mds].submit(arrive, cpu);
             (done, CacheOutcome::Hit)
         };
+        let done = served + time::from_ms(self.rpc.sample(rng) * rpc_mult);
+        if self.chaos.is_some() && done.saturating_sub(now) > time::from_ms(self.timeout_ms) {
+            timeouts += 1;
+        }
         Completion {
-            done: served + time::from_ms(self.rpc.sample(rng)),
+            done,
             outcome: Outcome {
                 cache,
                 cost_us: served.saturating_sub(arrive),
+                timeouts,
                 ..Outcome::warm(mds as u32)
             },
         }

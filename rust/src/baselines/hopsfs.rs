@@ -15,12 +15,14 @@
 //! ("CN HopsFS+Cache") is the same system with a smaller vCPU allocation.
 
 use crate::cache::interned::InternedCache;
+use crate::chaos::{self, ChaosPlan, ChaosState};
 use crate::client::Router;
 use crate::config::SystemConfig;
 use crate::coordinator::subtree::{self, SubtreeParams, SubtreePlan};
 use crate::coordinator::ServiceModel;
 use crate::metrics::{CostModel, RunMetrics};
 use crate::namespace::{InodeRef, Namespace, OpKind, Operation};
+use crate::rpc::backoff::Backoff;
 use crate::sim::station::Station;
 use crate::sim::{time, Time};
 use crate::store::NdbStore;
@@ -51,6 +53,9 @@ pub struct HopsFs {
     rng: Rng,
     total_vcpus: f64,
     rr: u32,
+    /// Installed chaos plan + dedicated stream; `None` keeps the no-chaos
+    /// draw sequence untouched (every hook below is gated on it).
+    chaos: Option<ChaosState>,
 }
 
 impl HopsFs {
@@ -91,6 +96,7 @@ impl HopsFs {
             rng,
             total_vcpus,
             rr: 0,
+            chaos: None,
         }
     }
 
@@ -123,10 +129,51 @@ impl HopsFs {
 }
 
 impl MetadataService for HopsFs {
+    /// Serverful baseline: kill windows don't apply (there are no
+    /// function instances to kill), but the network fault model —
+    /// partitions, blackouts, delay storms — does, with the NameNode
+    /// index standing in for the deployment id.
+    fn install_chaos(&mut self, plan: &ChaosPlan) {
+        self.chaos = (!plan.is_none()).then(|| ChaosState::new(self.cfg.seed, plan));
+    }
+
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
-        let (now, op) = (req.at, req.op);
+        let (mut now, op) = (req.at, req.op);
         let nn = self.pick_namenode(op);
-        let arrive = now + time::from_ms(self.rpc.sample(rng));
+
+        // Chaos verdict + delay storm, mirroring the λFS client path:
+        // lost attempts time out and back off with jitter from the
+        // dedicated chaos stream; exhaustion is a give-up. `rpc_mult`
+        // stays exactly 1.0 without chaos, leaving the RPC samples
+        // bit-identical.
+        let mut timeouts = 0u32;
+        let mut rpc_mult = 1.0;
+        if let Some(ch) = self.chaos.as_mut() {
+            let vm = req.client % ch.plan.n_vms.max(1);
+            let backoff = Backoff::default();
+            let mut attempt = 0u32;
+            while ch.plan.lost(chaos::second_of(now), vm, nn as u32, op.kind.is_write()) {
+                timeouts += 1;
+                if backoff.exhausted(attempt) {
+                    return Completion {
+                        done: now,
+                        outcome: Outcome {
+                            retries: attempt,
+                            timeouts,
+                            gave_up: true,
+                            ..Outcome::warm(nn as u32)
+                        },
+                    };
+                }
+                now += time::from_ms(self.cfg.faas.http_timeout_ms)
+                    + backoff.delay(attempt, &mut ch.rng);
+                attempt += 1;
+            }
+            if let Some(m) = ch.plan.leg_mults(chaos::second_of(now)) {
+                rpc_mult = m.http;
+            }
+        }
+        let arrive = now + time::from_ms(self.rpc.sample(rng) * rpc_mult);
 
         let mut local_rng = Rng::new(self.rng.next_u64());
 
@@ -141,10 +188,17 @@ impl MetadataService for HopsFs {
             };
             let done = subtree::execute(arrive, &plan, params, &mut self.store, &mut local_rng)
                 .unwrap_or(arrive + time::SEC);
+            let done = done + time::from_ms(self.rpc.sample(rng) * rpc_mult);
+            if self.chaos.is_some()
+                && done.saturating_sub(now) > time::from_ms(self.cfg.faas.http_timeout_ms)
+            {
+                timeouts += 1;
+            }
             return Completion {
-                done: done + time::from_ms(self.rpc.sample(rng)),
+                done,
                 outcome: Outcome {
                     cost_us: done.saturating_sub(arrive),
+                    timeouts,
                     ..Outcome::warm(nn as u32)
                 },
             };
@@ -205,11 +259,18 @@ impl MetadataService for HopsFs {
             self.store.read_batch(cpu_done, depth, &mut local_rng)
         };
 
+        let done = served + time::from_ms(self.rpc.sample(rng) * rpc_mult);
+        if self.chaos.is_some()
+            && done.saturating_sub(now) > time::from_ms(self.cfg.faas.http_timeout_ms)
+        {
+            timeouts += 1;
+        }
         Completion {
-            done: served + time::from_ms(self.rpc.sample(rng)),
+            done,
             outcome: Outcome {
                 cache: cache_outcome,
                 cost_us: served.saturating_sub(arrive),
+                timeouts,
                 ..Outcome::warm(nn as u32)
             },
         }

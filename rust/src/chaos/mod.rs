@@ -1,0 +1,479 @@
+//! Deterministic chaos engine: seeded fault plans any run can carry.
+//!
+//! A [`ChaosPlan`] is a declarative schedule of fault windows — instance
+//! kills (the generalization of the Fig. 15 kill schedule),
+//! deployment/coordinator blackouts, client-VM↔deployment partitions,
+//! delay storms multiplying the [`crate::rpc::net::NetModel`] legs,
+//! straggler bursts, and delayed/dropped invalidation ACKs in the
+//! coherence protocol. Systems install a plan through
+//! [`crate::systems::MetadataService::install_chaos`]; the plan is
+//! immutable during a run, and a [`ChaosState`] pairs it with the RNG
+//! stream that feeds every stochastic chaos decision (retry jitter,
+//! straggler coin flips, ACK drops).
+//!
+//! ## Determinism invariant
+//!
+//! Chaos must never perturb the draw sequence of the underlying
+//! simulation:
+//!
+//! * all chaos draws come from a dedicated stream,
+//!   `Rng::new(seed ^ plan.digest()).fork("chaos")`, derived from the
+//!   config seed and the plan itself — never from the system's root RNG —
+//!   so the same seed + plan is run-twice bit-identical;
+//! * an empty plan ([`ChaosPlan::none`]) installs nothing and draws
+//!   nothing: every chaos hook is gated on `Option<ChaosState>` being
+//!   `Some`, so a no-chaos run is draw-for-draw identical to a build
+//!   without the chaos engine and pre-chaos fingerprints stay valid;
+//! * the plan serializes into the trace header (format version 2, see
+//!   [`crate::trace::format`]), so record→replay reproduces the exact
+//!   fault schedule — replay auto-installs the recorded plan.
+//!
+//! Fault semantics on the client path: an op whose verdict window says
+//! *lost* ([`ChaosPlan::lost`]) times out after the HTTP timeout, retries
+//! with the existing jittered [`crate::rpc::backoff::Backoff`] policy,
+//! and on exhaustion completes as a first-class give-up
+//! (`Outcome::gave_up`), counted in `RunMetrics::{timeouts, gave_up}`.
+
+use crate::sim::{time, Time};
+use crate::util::fnv::fnv1a64;
+use crate::util::rng::Rng;
+
+/// Kill the oldest instance of `deployment` at second `second`
+/// (generalizes `LambdaFs::schedule_kill`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KillEvent {
+    pub second: u32,
+    pub deployment: u32,
+}
+
+/// `[from_s, to_s)`: a deployment (or, with `deployment: None`, the
+/// coordinator) is unreachable. A deployment blackout loses every op
+/// routed to it; a coordinator blackout loses writes (they need the
+/// invalidation round) while reads pass.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Blackout {
+    pub from_s: u32,
+    pub to_s: u32,
+    pub deployment: Option<u32>,
+}
+
+/// `[from_s, to_s)`: client VM `vm` cannot reach `deployment`
+/// (asymmetric network partition — other VMs are unaffected).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Partition {
+    pub from_s: u32,
+    pub to_s: u32,
+    pub vm: u32,
+    pub deployment: u32,
+}
+
+/// `[from_s, to_s)`: degraded links — every TCP/HTTP leg sample is
+/// multiplied by the given factors (overlapping windows compose).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DelayWindow {
+    pub from_s: u32,
+    pub to_s: u32,
+    pub tcp_mult: f64,
+    pub http_mult: f64,
+}
+
+/// `[from_s, to_s)`: each op independently stalls with probability
+/// `prob`, inflating its reply leg by `factor` (models straggling
+/// function instances, §3.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerBurst {
+    pub from_s: u32,
+    pub to_s: u32,
+    pub prob: f64,
+    pub factor: f64,
+}
+
+/// `[from_s, to_s)`: invalidation ACKs are delayed by `delay_ms` and
+/// independently dropped with probability `drop_prob` (a drop costs one
+/// retransmission round on top of the delay).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AckChaos {
+    pub from_s: u32,
+    pub to_s: u32,
+    pub drop_prob: f64,
+    pub delay_ms: f64,
+}
+
+/// Effective leg multipliers for one second (composed over all active
+/// [`DelayWindow`]s).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LegMults {
+    pub tcp: f64,
+    pub http: f64,
+}
+
+/// A declarative, seeded schedule of fault windows.
+///
+/// `n_vms` partitions the client fleet into VM groups for
+/// [`Partition`] matching (client `c` lives on VM `c % n_vms`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosPlan {
+    pub n_vms: u32,
+    pub kills: Vec<KillEvent>,
+    pub blackouts: Vec<Blackout>,
+    pub partitions: Vec<Partition>,
+    pub delays: Vec<DelayWindow>,
+    pub stragglers: Vec<StragglerBurst>,
+    pub acks: Vec<AckChaos>,
+}
+
+impl Default for ChaosPlan {
+    fn default() -> Self {
+        ChaosPlan {
+            n_vms: 1,
+            kills: Vec::new(),
+            blackouts: Vec::new(),
+            partitions: Vec::new(),
+            delays: Vec::new(),
+            stragglers: Vec::new(),
+            acks: Vec::new(),
+        }
+    }
+}
+
+impl ChaosPlan {
+    /// The empty plan: no fault windows, no chaos draws, zero effect.
+    pub fn none() -> Self {
+        ChaosPlan::default()
+    }
+
+    /// True when the plan schedules nothing (regardless of `n_vms`).
+    pub fn is_none(&self) -> bool {
+        self.kills.is_empty()
+            && self.blackouts.is_empty()
+            && self.partitions.is_empty()
+            && self.delays.is_empty()
+            && self.stragglers.is_empty()
+            && self.acks.is_empty()
+    }
+
+    /// Is an op from VM `vm` to `deployment` lost at `second`? True under
+    /// a matching partition, a deployment blackout, or (for writes) a
+    /// coordinator blackout.
+    pub fn lost(&self, second: u32, vm: u32, deployment: u32, is_write: bool) -> bool {
+        self.partitions.iter().any(|p| {
+            p.vm == vm && p.deployment == deployment && p.from_s <= second && second < p.to_s
+        }) || self.blackouts.iter().any(|b| {
+            b.from_s <= second
+                && second < b.to_s
+                && match b.deployment {
+                    Some(d) => d == deployment,
+                    None => is_write,
+                }
+        })
+    }
+
+    /// Composed leg multipliers at `second`; `None` when no delay window
+    /// is active (the zero-overhead fast path).
+    pub fn leg_mults(&self, second: u32) -> Option<LegMults> {
+        let mut out: Option<LegMults> = None;
+        for w in &self.delays {
+            if w.from_s <= second && second < w.to_s {
+                let m = out.get_or_insert(LegMults { tcp: 1.0, http: 1.0 });
+                m.tcp *= w.tcp_mult;
+                m.http *= w.http_mult;
+            }
+        }
+        out
+    }
+
+    /// Active straggler burst at `second` as `(prob, factor)`.
+    pub fn straggler_burst(&self, second: u32) -> Option<(f64, f64)> {
+        self.stragglers
+            .iter()
+            .find(|w| w.from_s <= second && second < w.to_s)
+            .map(|w| (w.prob, w.factor))
+    }
+
+    /// Active ACK-disruption window at `second` as `(drop_prob, delay_ms)`.
+    pub fn ack_window(&self, second: u32) -> Option<(f64, f64)> {
+        self.acks
+            .iter()
+            .find(|w| w.from_s <= second && second < w.to_s)
+            .map(|w| (w.drop_prob, w.delay_ms))
+    }
+
+    /// Order-sensitive digest of the serialized plan; folded into the
+    /// chaos RNG seed so different plans get decorrelated chaos streams.
+    pub fn digest(&self) -> u64 {
+        fnv1a64(&self.encode())
+    }
+
+    /// Serialize to the compact binary form embedded in version-2 traces.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(16);
+        put_varint(&mut buf, self.n_vms as u64);
+        put_varint(&mut buf, self.kills.len() as u64);
+        for k in &self.kills {
+            put_varint(&mut buf, k.second as u64);
+            put_varint(&mut buf, k.deployment as u64);
+        }
+        put_varint(&mut buf, self.blackouts.len() as u64);
+        for b in &self.blackouts {
+            put_varint(&mut buf, b.from_s as u64);
+            put_varint(&mut buf, b.to_s as u64);
+            // 0 = coordinator, d+1 = deployment d.
+            put_varint(&mut buf, b.deployment.map_or(0, |d| d as u64 + 1));
+        }
+        put_varint(&mut buf, self.partitions.len() as u64);
+        for p in &self.partitions {
+            put_varint(&mut buf, p.from_s as u64);
+            put_varint(&mut buf, p.to_s as u64);
+            put_varint(&mut buf, p.vm as u64);
+            put_varint(&mut buf, p.deployment as u64);
+        }
+        put_varint(&mut buf, self.delays.len() as u64);
+        for w in &self.delays {
+            put_varint(&mut buf, w.from_s as u64);
+            put_varint(&mut buf, w.to_s as u64);
+            put_varint(&mut buf, w.tcp_mult.to_bits());
+            put_varint(&mut buf, w.http_mult.to_bits());
+        }
+        put_varint(&mut buf, self.stragglers.len() as u64);
+        for w in &self.stragglers {
+            put_varint(&mut buf, w.from_s as u64);
+            put_varint(&mut buf, w.to_s as u64);
+            put_varint(&mut buf, w.prob.to_bits());
+            put_varint(&mut buf, w.factor.to_bits());
+        }
+        put_varint(&mut buf, self.acks.len() as u64);
+        for w in &self.acks {
+            put_varint(&mut buf, w.from_s as u64);
+            put_varint(&mut buf, w.to_s as u64);
+            put_varint(&mut buf, w.drop_prob.to_bits());
+            put_varint(&mut buf, w.delay_ms.to_bits());
+        }
+        buf
+    }
+
+    /// Parse the binary form; the payload must be fully consumed.
+    pub fn decode(bytes: &[u8]) -> Result<ChaosPlan, String> {
+        let mut pos = 0usize;
+        let n_vms = get_varint(bytes, &mut pos)? as u32;
+        let mut plan = ChaosPlan { n_vms, ..ChaosPlan::none() };
+        for _ in 0..get_varint(bytes, &mut pos)? {
+            plan.kills.push(KillEvent {
+                second: get_varint(bytes, &mut pos)? as u32,
+                deployment: get_varint(bytes, &mut pos)? as u32,
+            });
+        }
+        for _ in 0..get_varint(bytes, &mut pos)? {
+            let from_s = get_varint(bytes, &mut pos)? as u32;
+            let to_s = get_varint(bytes, &mut pos)? as u32;
+            let dep = get_varint(bytes, &mut pos)?;
+            let deployment = if dep == 0 { None } else { Some((dep - 1) as u32) };
+            plan.blackouts.push(Blackout { from_s, to_s, deployment });
+        }
+        for _ in 0..get_varint(bytes, &mut pos)? {
+            plan.partitions.push(Partition {
+                from_s: get_varint(bytes, &mut pos)? as u32,
+                to_s: get_varint(bytes, &mut pos)? as u32,
+                vm: get_varint(bytes, &mut pos)? as u32,
+                deployment: get_varint(bytes, &mut pos)? as u32,
+            });
+        }
+        for _ in 0..get_varint(bytes, &mut pos)? {
+            plan.delays.push(DelayWindow {
+                from_s: get_varint(bytes, &mut pos)? as u32,
+                to_s: get_varint(bytes, &mut pos)? as u32,
+                tcp_mult: f64::from_bits(get_varint(bytes, &mut pos)?),
+                http_mult: f64::from_bits(get_varint(bytes, &mut pos)?),
+            });
+        }
+        for _ in 0..get_varint(bytes, &mut pos)? {
+            plan.stragglers.push(StragglerBurst {
+                from_s: get_varint(bytes, &mut pos)? as u32,
+                to_s: get_varint(bytes, &mut pos)? as u32,
+                prob: f64::from_bits(get_varint(bytes, &mut pos)?),
+                factor: f64::from_bits(get_varint(bytes, &mut pos)?),
+            });
+        }
+        for _ in 0..get_varint(bytes, &mut pos)? {
+            plan.acks.push(AckChaos {
+                from_s: get_varint(bytes, &mut pos)? as u32,
+                to_s: get_varint(bytes, &mut pos)? as u32,
+                drop_prob: f64::from_bits(get_varint(bytes, &mut pos)?),
+                delay_ms: f64::from_bits(get_varint(bytes, &mut pos)?),
+            });
+        }
+        if pos != bytes.len() {
+            return Err(format!("{} trailing bytes after chaos plan", bytes.len() - pos));
+        }
+        Ok(plan)
+    }
+}
+
+/// An installed plan plus the dedicated chaos RNG stream.
+///
+/// The plan/rng split lets callers query windows on `state.plan` while
+/// holding `&mut state.rng` for jitter draws.
+#[derive(Clone, Debug)]
+pub struct ChaosState {
+    pub plan: ChaosPlan,
+    pub rng: Rng,
+}
+
+impl ChaosState {
+    /// Derive the chaos stream from the config seed and the plan digest —
+    /// independent of the system's root RNG by construction.
+    pub fn new(seed: u64, plan: &ChaosPlan) -> Self {
+        let mut root = Rng::new(seed ^ plan.digest());
+        let rng = root.fork("chaos");
+        ChaosState { plan: plan.clone(), rng }
+    }
+}
+
+/// Wall-clock second an instant falls in (fault windows are second-granular).
+#[inline]
+pub fn second_of(at: Time) -> u32 {
+    (at / time::SEC) as u32
+}
+
+fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            return;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+fn get_varint(bytes: &[u8], pos: &mut usize) -> Result<u64, String> {
+    let mut out = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes.get(*pos).ok_or("truncated chaos varint")?;
+        *pos += 1;
+        if shift == 63 && b > 1 {
+            return Err("chaos varint overflows u64".into());
+        }
+        out |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(out);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err("chaos varint too long".into());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_plan() -> ChaosPlan {
+        ChaosPlan {
+            n_vms: 8,
+            kills: vec![
+                KillEvent { second: 5, deployment: 0 },
+                KillEvent { second: 10, deployment: 3 },
+            ],
+            blackouts: vec![
+                Blackout { from_s: 2, to_s: 4, deployment: Some(1) },
+                Blackout { from_s: 20, to_s: 22, deployment: None },
+            ],
+            partitions: vec![Partition { from_s: 6, to_s: 9, vm: 2, deployment: 0 }],
+            delays: vec![
+                DelayWindow { from_s: 12, to_s: 18, tcp_mult: 10.0, http_mult: 5.0 },
+                DelayWindow { from_s: 15, to_s: 16, tcp_mult: 2.0, http_mult: 1.0 },
+            ],
+            stragglers: vec![StragglerBurst { from_s: 0, to_s: 30, prob: 0.1, factor: 25.0 }],
+            acks: vec![AckChaos { from_s: 3, to_s: 8, drop_prob: 0.2, delay_ms: 40.0 }],
+        }
+    }
+
+    #[test]
+    fn none_is_none_and_empty_digest_is_stable() {
+        let a = ChaosPlan::none();
+        assert!(a.is_none());
+        assert_eq!(a.digest(), ChaosPlan::none().digest());
+        assert!(!full_plan().is_none());
+        assert_ne!(a.digest(), full_plan().digest());
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        for plan in [ChaosPlan::none(), full_plan()] {
+            let bytes = plan.encode();
+            let back = ChaosPlan::decode(&bytes).unwrap();
+            assert_eq!(plan, back);
+            assert_eq!(bytes, back.encode());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_trailing_bytes() {
+        let mut bytes = full_plan().encode();
+        bytes.push(0);
+        assert!(ChaosPlan::decode(&bytes).is_err());
+        bytes.pop();
+        bytes.pop();
+        assert!(ChaosPlan::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn lost_matches_partitions_and_blackouts() {
+        let p = full_plan();
+        // Partition: vm 2 ↔ dep 0 over [6, 9).
+        assert!(p.lost(6, 2, 0, false));
+        assert!(p.lost(8, 2, 0, true));
+        assert!(!p.lost(9, 2, 0, false), "window is half-open");
+        assert!(!p.lost(7, 1, 0, false), "other VMs unaffected");
+        assert!(!p.lost(7, 2, 1, false), "other deployments unaffected");
+        // Deployment blackout: dep 1 over [2, 4) loses reads and writes.
+        assert!(p.lost(2, 0, 1, false));
+        assert!(p.lost(3, 5, 1, true));
+        assert!(!p.lost(4, 0, 1, false));
+        // Coordinator blackout over [20, 22): writes only.
+        assert!(p.lost(20, 0, 4, true));
+        assert!(!p.lost(20, 0, 4, false), "reads pass a coordinator blackout");
+    }
+
+    #[test]
+    fn leg_mults_compose_overlapping_windows() {
+        let p = full_plan();
+        assert_eq!(p.leg_mults(0), None);
+        assert_eq!(p.leg_mults(12), Some(LegMults { tcp: 10.0, http: 5.0 }));
+        assert_eq!(p.leg_mults(15), Some(LegMults { tcp: 20.0, http: 5.0 }));
+        assert_eq!(p.leg_mults(18), None);
+    }
+
+    #[test]
+    fn straggler_and_ack_windows() {
+        let p = full_plan();
+        assert_eq!(p.straggler_burst(0), Some((0.1, 25.0)));
+        assert_eq!(p.straggler_burst(30), None);
+        assert_eq!(p.ack_window(3), Some((0.2, 40.0)));
+        assert_eq!(p.ack_window(8), None);
+    }
+
+    #[test]
+    fn chaos_state_is_deterministic_and_plan_sensitive() {
+        let plan = full_plan();
+        let mut a = ChaosState::new(42, &plan);
+        let mut b = ChaosState::new(42, &plan);
+        for _ in 0..100 {
+            assert_eq!(a.rng.next_u64(), b.rng.next_u64());
+        }
+        let mut c = ChaosState::new(42, &ChaosPlan::none());
+        let same = (0..100).filter(|_| a.rng.next_u64() == c.rng.next_u64()).count();
+        assert_eq!(same, 0, "different plans get decorrelated streams");
+    }
+
+    #[test]
+    fn second_of_buckets_microseconds() {
+        assert_eq!(second_of(0), 0);
+        assert_eq!(second_of(time::SEC - 1), 0);
+        assert_eq!(second_of(time::SEC), 1);
+        assert_eq!(second_of(5 * time::SEC + 123), 5);
+    }
+}

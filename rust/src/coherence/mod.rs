@@ -19,4 +19,4 @@ pub mod coordinator;
 pub mod protocol;
 
 pub use coordinator::Coordinator;
-pub use protocol::{CoherenceOutcome, Invalidation};
+pub use protocol::{AckDisruption, CoherenceOutcome, Invalidation};

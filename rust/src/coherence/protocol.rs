@@ -28,6 +28,19 @@ pub enum Invalidation<'a> {
     Prefix(DirId),
 }
 
+/// Chaos-injected ACK disruption for one protocol run (see
+/// [`crate::chaos::AckChaos`]): every follower's ACK is delayed by
+/// `delay`, and with probability `drop_prob` the INV/ACK round is lost
+/// and retransmitted, costing one extra delayed RTT. Draws come from the
+/// caller's dedicated chaos stream — never from the protocol's own RNG —
+/// so installing chaos does not perturb the coherence draw sequence.
+#[derive(Debug)]
+pub struct AckDisruption<'a> {
+    pub drop_prob: f64,
+    pub delay: Time,
+    pub rng: &'a mut Rng,
+}
+
 /// Result of one protocol run.
 #[derive(Clone, Copy, Debug)]
 pub struct CoherenceOutcome {
@@ -54,6 +67,7 @@ pub struct CoherenceOutcome {
 /// is at most a handful of entries) and each deployment's live roster is
 /// borrowed from the Coordinator. An instance belongs to exactly one
 /// deployment, so deployment-level dedup reaches every instance once.
+#[allow(clippy::too_many_arguments)]
 pub fn run_protocol(
     now: Time,
     leader: InstanceId,
@@ -62,6 +76,7 @@ pub fn run_protocol(
     coord: &mut Coordinator,
     net: &NetModel,
     rng: &mut Rng,
+    mut disrupt: Option<&mut AckDisruption<'_>>,
     mut apply: impl FnMut(InstanceId, &Invalidation<'_>),
 ) -> CoherenceOutcome {
     // Step 1: subscribe to liveness/ACK notifications (one coordinator
@@ -84,7 +99,15 @@ pub fn run_protocol(
                 continue;
             }
             // INV out + cache invalidation + ACK back, via the Coordinator.
-            let rtt = net.coord_hop(rng) + net.coord_hop(rng);
+            let mut rtt = net.coord_hop(rng) + net.coord_hop(rng);
+            if let Some(d) = disrupt.as_deref_mut() {
+                rtt += d.delay;
+                if d.rng.chance(d.drop_prob) {
+                    // Lost round: the leader retransmits after the same
+                    // (disrupted) RTT again.
+                    rtt += rtt;
+                }
+            }
             apply(inst, inv);
             invs += 1;
             acks += 1;
@@ -132,6 +155,7 @@ mod tests {
             &mut coord,
             &net,
             &mut rng,
+            None,
             |i, _| {
                 touched.insert(i);
             },
@@ -162,6 +186,7 @@ mod tests {
             &mut coord,
             &net,
             &mut rng,
+            None,
             |_, _| {},
         );
         assert_eq!(out.acks_received, 1, "only the live follower ACKs");
@@ -182,6 +207,7 @@ mod tests {
             &mut coord,
             &net,
             &mut rng,
+            None,
             |_, _| count += 1,
         );
         assert_eq!(out.invs_sent, 2, "each instance INV'd once");
@@ -200,10 +226,42 @@ mod tests {
             &mut coord,
             &net,
             &mut rng,
+            None,
             |_, _| {},
         );
         assert_eq!(out.invs_sent, 0);
         assert!(out.complete_at >= 500);
+    }
+
+    #[test]
+    fn ack_disruption_delays_completion_without_touching_protocol_rng() {
+        let (mut coord, net, mut rng) = setup();
+        for i in 0..4 {
+            coord.register(iid(i), 0, 0);
+        }
+        let run = |coord: &mut Coordinator, disrupt: Option<&mut AckDisruption<'_>>| {
+            let mut rng = Rng::new(31);
+            run_protocol(
+                0,
+                iid(0),
+                &[0],
+                &Invalidation::Exact(&[inode(1, 0)]),
+                coord,
+                &net,
+                &mut rng,
+                disrupt,
+                |_, _| {},
+            )
+        };
+        let clean = run(&mut coord, None);
+        let mut chaos_rng = rng.fork("chaos-test");
+        let delay = crate::sim::time::from_ms(40.0);
+        let mut d = AckDisruption { drop_prob: 1.0, delay, rng: &mut chaos_rng };
+        let disrupted = run(&mut coord, Some(&mut d));
+        // Same protocol draws (fresh seeded rng each run), so the delta is
+        // purely the injected delay + guaranteed retransmission.
+        assert!(disrupted.complete_at >= clean.complete_at + delay, "ACKs are delayed");
+        assert_eq!(disrupted.acks_received, clean.acks_received, "ACKs still arrive");
     }
 
     #[test]
@@ -220,6 +278,7 @@ mod tests {
             &mut coord,
             &net,
             &mut rng,
+            None,
             |_, _| {},
         );
         // 49 followers; if serial this would be ~49 * 1.2ms ≈ 60ms. The

@@ -748,6 +748,16 @@ impl Platform {
         }
     }
 
+    /// Fault injection: kill the oldest live instance of `dep` (the
+    /// spawn-order head — the victim `LambdaFs::schedule_kill` has always
+    /// chosen) and return its id so the caller can clean up connections
+    /// and coordinator registration. `None` when the deployment is empty.
+    pub fn kill_oldest(&mut self, dep: u32, now: Time) -> Option<InstanceId> {
+        let victim = self.deployment_instances(dep).next()?;
+        self.kill(victim, now, false);
+        Some(victim)
+    }
+
     /// Scale-in: reclaim instances idle longer than `idle_reclaim_ms`.
     /// Returns the instances actually killed. The victim scan walks the
     /// global live list into a reused scratch buffer, so per-second

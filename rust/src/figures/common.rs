@@ -136,18 +136,21 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
 }
 
 /// Shared outcome columns for figure tables: cache hit %, cold starts,
-/// total retries — folded from the per-op `Outcome` stream by the
-/// drivers. Pair with [`OUTCOME_HEADER`].
-pub fn outcome_cells(m: &crate::metrics::RunMetrics) -> [String; 3] {
+/// total retries, client-visible timeouts, and give-ups — folded from
+/// the per-op `Outcome` stream by the drivers. Pair with
+/// [`OUTCOME_HEADER`].
+pub fn outcome_cells(m: &crate::metrics::RunMetrics) -> [String; 5] {
     [
         format!("{:.1}", m.cache_hit_ratio() * 100.0),
         m.cold_starts.to_string(),
         m.total_retries().to_string(),
+        m.timeouts.to_string(),
+        m.gave_up.to_string(),
     ]
 }
 
 /// Header labels matching [`outcome_cells`].
-pub const OUTCOME_HEADER: [&str; 3] = ["hit_%", "cold", "retries"];
+pub const OUTCOME_HEADER: [&str; 5] = ["hit_%", "cold", "retries", "t_out", "gaveup"];
 
 /// Format helpers.
 pub fn f0(x: f64) -> String {

@@ -142,6 +142,8 @@ impl Fig8 {
                 common::OUTCOME_HEADER[0],
                 common::OUTCOME_HEADER[1],
                 common::OUTCOME_HEADER[2],
+                common::OUTCOME_HEADER[3],
+                common::OUTCOME_HEADER[4],
             ],
             &rows,
         );
@@ -182,20 +184,22 @@ impl Fig8 {
             .map(|o| {
                 let m = &o.metrics;
                 format!(
-                    "{},{:.4},{},{},{},{},{}",
+                    "{},{:.4},{},{},{},{},{},{},{}",
                     o.name,
                     m.cache_hit_ratio(),
                     m.cache_hits,
                     m.cache_misses,
                     m.cold_starts,
                     m.warm_ops,
-                    m.total_retries()
+                    m.total_retries(),
+                    m.timeouts,
+                    m.gave_up
                 )
             })
             .collect();
         common::write_csv(
             &format!("fig08_{label}_outcomes.csv"),
-            "system,hit_ratio,cache_hits,cache_misses,cold_starts,warm_ops,retries",
+            "system,hit_ratio,cache_hits,cache_misses,cold_starts,warm_ops,retries,timeouts,gave_up",
             &outcome_rows,
         );
     }

@@ -26,6 +26,7 @@
 
 pub mod baselines;
 pub mod cache;
+pub mod chaos;
 pub mod client;
 pub mod coherence;
 pub mod config;

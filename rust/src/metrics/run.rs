@@ -61,6 +61,14 @@ pub struct RunMetrics {
     /// Total attributed service cost in µs (busy time billed to the
     /// serving nodes).
     pub attributed_cost_us: u64,
+    /// HTTP timeouts across all ops (folded from [`Outcome::timeouts`],
+    /// including those suffered by ops that ultimately gave up). 0 on a
+    /// chaos-free run.
+    pub timeouts: u64,
+    /// Ops abandoned after backoff exhaustion (also counted in
+    /// `failed_ops`). Conservation: `completed_ops + gave_up` equals the
+    /// submitted op count on runs without other failure modes.
+    pub gave_up: u64,
 }
 
 impl Default for RunMetrics {
@@ -90,6 +98,8 @@ impl RunMetrics {
             retry_hist: [0; RETRY_BUCKETS],
             per_deployment_ops: Vec::new(),
             attributed_cost_us: 0,
+            timeouts: 0,
+            gave_up: 0,
         }
     }
 
@@ -113,6 +123,7 @@ impl RunMetrics {
         }
         self.per_deployment_ops[s] += 1;
         self.attributed_cost_us += o.cost_us;
+        self.timeouts += o.timeouts as u64;
     }
 
     /// Total resubmissions folded from outcomes (weighted retry_hist sum;
@@ -295,6 +306,12 @@ impl RunMetrics {
             h.write_u64(n);
         }
         h.write_u64(self.attributed_cost_us);
+        // Chaos counters fold in only when nonzero, so every pre-chaos
+        // artifact (and every no-chaos run) keeps its historical digest.
+        if self.timeouts != 0 || self.gave_up != 0 {
+            h.write_u64(self.timeouts);
+            h.write_u64(self.gave_up);
+        }
         h.finish()
     }
 }
@@ -365,6 +382,8 @@ mod tests {
             retries: 0,
             server: 3,
             cost_us: 250,
+            timeouts: 0,
+            gave_up: false,
         });
         m.record(0, 2.0, false);
         m.record_outcome(&Outcome {
@@ -373,6 +392,8 @@ mod tests {
             retries: 2,
             server: 1,
             cost_us: 40,
+            timeouts: 0,
+            gave_up: false,
         });
         m.record(0, 3.0, true);
         m.record_outcome(&Outcome {
@@ -381,6 +402,8 @@ mod tests {
             retries: 100, // clamps into the tail bucket
             server: 3,
             cost_us: 10,
+            timeouts: 0,
+            gave_up: false,
         });
         assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops);
         assert_eq!(m.cache_hits, 1);
@@ -402,6 +425,20 @@ mod tests {
         m.record_outcome(&Outcome::warm(0));
         assert_eq!(fp, m.fingerprint(), "base fingerprint ignores outcomes");
         assert_ne!(ofp, m.outcome_fingerprint(), "outcome digest sees them");
+    }
+
+    #[test]
+    fn chaos_counters_fold_only_when_nonzero() {
+        use crate::systems::Outcome;
+        let mut m = RunMetrics::new();
+        m.record(0, 1.0, false);
+        m.record_outcome(&Outcome::warm(0));
+        let ofp = m.outcome_fingerprint();
+        let mut with = m.clone();
+        with.timeouts = 3;
+        with.gave_up = 1;
+        assert_ne!(ofp, with.outcome_fingerprint(), "chaos counters are digested");
+        assert_eq!(ofp, m.outcome_fingerprint(), "zero counters keep the historical digest");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! RNG draw and a fused multiply-add per leg, no `ln`/`exp`/`cos` on the
 //! per-op path.
 
+use crate::chaos::LegMults;
 use crate::config::NetConfig;
 use crate::sim::{time, Time};
 use crate::util::dist::LogNormal;
@@ -52,6 +53,26 @@ impl NetModel {
     pub fn tcp_connect(&self, rng: &mut Rng) -> Time {
         time::from_ms(self.cfg.tcp_connect_ms * rng.range_f64(0.8, 1.5))
     }
+
+    /// [`Self::tcp_hop`] under an optional chaos delay window. Exactly
+    /// one RNG draw either way; `None` reproduces the plain hop bit for
+    /// bit (the zero-overhead no-chaos fast path).
+    pub fn tcp_hop_chaos(&self, rng: &mut Rng, m: Option<&LegMults>) -> Time {
+        match m {
+            None => time::from_ms(self.tcp.sample(rng)),
+            Some(m) => time::from_ms(self.tcp.sample(rng) * m.tcp),
+        }
+    }
+
+    /// [`Self::http_leg`] under an optional chaos delay window; same
+    /// one-draw / bit-identical-on-`None` contract as
+    /// [`Self::tcp_hop_chaos`].
+    pub fn http_leg_chaos(&self, rng: &mut Rng, m: Option<&LegMults>) -> Time {
+        match m {
+            None => time::from_ms(self.http.sample(rng)),
+            Some(m) => time::from_ms(self.http.sample(rng) * m.http),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -90,6 +111,26 @@ mod tests {
         let mean_ms =
             (0..n).map(|_| m.http_leg(&mut rng)).sum::<u64>() as f64 / n as f64 / 1_000.0;
         assert!(mean_ms > 6.0 && mean_ms < 20.0, "http mean {mean_ms}ms");
+    }
+
+    #[test]
+    fn chaos_legs_match_plain_on_none_and_scale_on_some() {
+        let (m, mut a) = model();
+        let mut b = Rng::new(21);
+        for _ in 0..1_000 {
+            assert_eq!(m.tcp_hop(&mut a), m.tcp_hop_chaos(&mut b, None));
+            assert_eq!(m.http_leg(&mut a), m.http_leg_chaos(&mut b, None));
+        }
+        let mults = LegMults { tcp: 10.0, http: 3.0 };
+        let mut c = b.clone();
+        for _ in 0..1_000 {
+            let plain = m.tcp_hop(&mut b);
+            let storm = m.tcp_hop_chaos(&mut c, Some(&mults));
+            assert!(storm > plain * 5, "tcp mult inflates the same draw");
+            let plain = m.http_leg(&mut b);
+            let storm = m.http_leg_chaos(&mut c, Some(&mults));
+            assert!(storm > plain * 2, "http mult inflates the same draw");
+        }
     }
 
     #[test]

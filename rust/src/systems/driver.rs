@@ -17,6 +17,17 @@ use super::{Completion, MetadataService, Request};
 /// `record_at_us` and `record_outcome` are always called together.
 pub(crate) fn record<S: MetadataService>(sys: &mut S, issue: Time, c: &Completion, is_write: bool) {
     let m = sys.metrics_mut();
+    if c.outcome.gave_up {
+        // A give-up is a first-class failure, not a completion: it keeps
+        // out of the latency/outcome ledgers (preserving
+        // `cold_starts + warm_ops == completed_ops`) and lands in the
+        // failure counters instead. Conservation across both paths:
+        // `completed_ops + gave_up == submitted`.
+        m.failed_ops += 1;
+        m.gave_up += 1;
+        m.timeouts += c.outcome.timeouts as u64;
+        return;
+    }
     // Latency stays in integer µs end to end: the histogram record path
     // is pure integer math (no float conversion, no `ln` bucketing).
     m.record_at_us(c.done, c.done - issue, is_write);

@@ -12,14 +12,16 @@
 //! histogram path (`RunMetrics::record_at_us`).
 
 use crate::cache::SlotCaches;
+use crate::chaos::{self, ChaosPlan, ChaosState};
 use crate::client::{ClientState, Router};
-use crate::coherence::{protocol, Coordinator, Invalidation};
+use crate::coherence::{protocol, AckDisruption, Coordinator, Invalidation};
 use crate::config::SystemConfig;
 use crate::coordinator::subtree::{self, SubtreeParams, SubtreePlan};
 use crate::coordinator::ServiceModel;
 use crate::faas::{InstanceId, Platform};
 use crate::metrics::{CostModel, RunMetrics};
 use crate::namespace::{InodeRef, Namespace, OpKind, Operation};
+use crate::rpc::backoff::Backoff;
 use crate::rpc::conn::VmId;
 use crate::rpc::{ConnectionTable, NetModel};
 use crate::scaling::policy::RpcPath;
@@ -60,8 +62,12 @@ pub struct LambdaFs<S: BuildHasher = FnvBuildHasher> {
     billed_gb_s: f64,
     billed_requests: u64,
     /// Pending fault injections: kill one NameNode in deployment `d` at
-    /// second `s` (Fig. 15).
+    /// second `s` (Fig. 15). Chaos kill windows lower onto this schedule.
     kill_schedule: Vec<(usize, u32)>,
+    /// Installed chaos plan + its dedicated RNG stream. `None` (the
+    /// default) arms nothing: every chaos hook below is gated on this
+    /// `Option`, so a no-chaos run draws the exact pre-chaos sequence.
+    chaos: Option<ChaosState>,
     last_settle: Time,
 }
 
@@ -113,6 +119,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             billed_gb_s: 0.0,
             billed_requests: 0,
             kill_schedule: Vec::new(),
+            chaos: None,
             last_settle: 0,
         }
     }
@@ -274,6 +281,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         // slot's new occupant).
         let caches = &mut self.caches;
         let inv = Invalidation::Exact(rows);
+        let mut disrupt = ack_disruption(&mut self.chaos, cpu_done);
         let outcome = protocol::run_protocol(
             cpu_done,
             inst,
@@ -282,6 +290,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             &mut self.coord,
             &self.net,
             &mut rng,
+            disrupt.as_mut(),
             |target, inv| {
                 if let Some(c) = caches.get_mut_if_current(target) {
                     if let Invalidation::Exact(rows) = inv {
@@ -306,9 +315,10 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
     }
 
     /// Serve a subtree op (Appendix C): subtree lock + quiesce + single
-    /// prefix INV + offloaded batches. Returns the completion time and
-    /// how many lock retries the op needed.
-    fn serve_subtree(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> (Time, u32) {
+    /// prefix INV + offloaded batches. Returns the completion time, how
+    /// many lock retries the op needed, and whether it exhausted the
+    /// retry budget and gave up.
+    fn serve_subtree(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> (Time, u32, bool) {
         let mut rng = self.rng.fork_fast();
         let router = &self.router;
         let ns = &self.ns;
@@ -318,6 +328,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         // guard as the exact-row protocol path).
         let caches = &mut self.caches;
         let ns_ref = &self.ns;
+        let mut disrupt = ack_disruption(&mut self.chaos, arrive);
         let outcome = protocol::run_protocol(
             arrive,
             inst,
@@ -326,6 +337,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             &mut self.coord,
             &self.net,
             &mut rng,
+            disrupt.as_mut(),
             |target, inv| {
                 if let Some(c) = caches.get_mut_if_current(target) {
                     if let Invalidation::Prefix(root) = inv {
@@ -345,17 +357,41 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         };
         let params = SubtreeParams { batch: self.cfg.lambda_fs.subtree_batch, parallelism };
         match subtree::execute(outcome.complete_at, &plan, params, &mut self.store, &mut rng) {
-            Ok(done) => (done, 0),
+            Ok(done) => (done, 0, false),
             Err(_) => {
-                // Overlapping subtree op: retry after the lock-retry pause.
-                let retry =
-                    outcome.complete_at + time::from_ms(self.cfg.store.lock_retry_ms * 10.0);
-                let done = subtree::execute(retry, &plan, params, &mut self.store, &mut rng)
-                    .unwrap_or(retry + time::SEC);
-                (done, 1)
+                // Overlapping subtree op: retry under the backoff budget
+                // with a deterministically doubling pause. No jitter draw
+                // here — all draws stay on this op's private forked
+                // stream, and a fixed pause keeps the retry path free of
+                // extra draws entirely. Exhaustion surfaces as a give-up
+                // instead of the old fabricated completion time.
+                let backoff = Backoff::default();
+                let mut at = outcome.complete_at;
+                let mut attempt = 0u32;
+                loop {
+                    let pause =
+                        self.cfg.store.lock_retry_ms * 10.0 * (1u64 << attempt.min(10)) as f64;
+                    at += time::from_ms(pause);
+                    attempt += 1;
+                    match subtree::execute(at, &plan, params, &mut self.store, &mut rng) {
+                        Ok(done) => return (done, attempt, false),
+                        Err(_) if backoff.exhausted(attempt) => return (at, attempt, true),
+                        Err(_) => {}
+                    }
+                }
             }
         }
     }
+}
+
+/// Build the coherence-protocol ACK disruption for a protocol run at
+/// `at`, when an installed chaos plan has an active ACK window. Borrows
+/// the dedicated chaos stream for the run's drop draws — the protocol's
+/// own RNG is untouched.
+fn ack_disruption(state: &mut Option<ChaosState>, at: Time) -> Option<AckDisruption<'_>> {
+    let ch = state.as_mut()?;
+    let (drop_prob, delay_ms) = ch.plan.ack_window(chaos::second_of(at))?;
+    Some(AckDisruption { drop_prob, delay: time::from_ms(delay_ms), rng: &mut ch.rng })
 }
 
 /// Fast per-call RNG forking without string hashing.
@@ -377,10 +413,41 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
     /// every RNG draw happens here, in one fixed order, so the two entry
     /// points are outcome-identical by construction.
     fn submit_routed(&mut self, req: Request<'_>, dep: u32, rng: &mut Rng) -> Completion {
-        let now = req.at;
+        let mut now = req.at;
         let op = req.op;
         let c = req.client as usize % self.clients.len().max(1);
         let vm = self.clients[c].vm;
+
+        // Chaos verdict: while a partition/blackout window swallows this
+        // op, each attempt times out after the HTTP timeout and the
+        // client backs off with jitter (§3.2) before resubmitting; an
+        // exhausted budget completes the op as a first-class give-up.
+        // All draws come from the dedicated chaos stream.
+        let mut timeouts = 0u32;
+        if let Some(ch) = self.chaos.as_mut() {
+            let backoff = Backoff::default();
+            let mut attempt = 0u32;
+            while ch.plan.lost(chaos::second_of(now), vm.0, dep, op.kind.is_write()) {
+                timeouts += 1;
+                if backoff.exhausted(attempt) {
+                    return Completion {
+                        done: now,
+                        outcome: Outcome {
+                            retries: attempt,
+                            timeouts,
+                            gave_up: true,
+                            ..Outcome::warm(dep)
+                        },
+                    };
+                }
+                now += time::from_ms(self.cfg.faas.http_timeout_ms)
+                    + backoff.delay(attempt, &mut ch.rng);
+                attempt += 1;
+            }
+        }
+        // Active delay-storm multipliers (None on the no-chaos fast path:
+        // every leg below then samples the plain, bit-identical hop).
+        let mults = self.chaos.as_ref().and_then(|ch| ch.plan.leg_mults(chaos::second_of(now)));
 
         // Path choice: TCP when a connection exists (own or shared),
         // randomized HTTP replacement for elasticity (§3.4).
@@ -388,14 +455,16 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         let path = self.clients[c].choose_path(tcp_inst.is_some(), rng);
 
         let (inst, arrive, http_used, cold_start) = match (path, tcp_inst) {
-            (RpcPath::Tcp, Some(i)) => (i, now + self.net.tcp_hop(rng), false, false),
+            (RpcPath::Tcp, Some(i)) => {
+                (i, now + self.net.tcp_hop_chaos(rng, mults.as_ref()), false, false)
+            }
             _ => {
                 // HTTP: gateway + invoker placement (may cold start).
                 // Scale-out decisions sample congestion at invocation
                 // time (`now`); the request itself arrives after the
                 // gateway + network legs.
                 let gw_done = self.platform.gateway_admit(now, rng);
-                let leg = self.net.http_leg(rng);
+                let leg = self.net.http_leg_chaos(rng, mults.as_ref());
                 let (i, ready, cold) = self.platform.place_http_traced(dep, now, rng);
                 self.register(i);
                 (i, ready.max(gw_done + leg), true, cold)
@@ -404,10 +473,12 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         self.register(inst);
 
         let mut retries = 0u32;
+        let mut gave_up = false;
         let (served, cache) = match op.kind {
             k if k.is_subtree() => {
-                let (t, r) = self.serve_subtree(inst, op, arrive);
+                let (t, r, gu) = self.serve_subtree(inst, op, arrive);
                 retries += r;
+                gave_up = gu;
                 (t, CacheOutcome::Bypass)
             }
             k if k.is_write() => (self.serve_write(inst, op, arrive), CacheOutcome::Bypass),
@@ -417,8 +488,17 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             }
         };
 
-        // Reply hop back to the client.
-        let mut done = served + self.net.tcp_hop(rng);
+        // Reply hop back to the client, possibly stalled by a chaos
+        // straggler burst (one chaos draw per op while a burst is live).
+        let mut reply = self.net.tcp_hop_chaos(rng, mults.as_ref());
+        if let Some(ch) = self.chaos.as_mut() {
+            if let Some((prob, factor)) = ch.plan.straggler_burst(chaos::second_of(now)) {
+                if ch.rng.chance(prob) {
+                    reply = (reply as f64 * factor) as Time;
+                }
+            }
+        }
+        let mut done = served + reply;
 
         // HTTP-served requests: NameNode proactively opens a TCP
         // connection back to the client's VM for future fast-path RPCs.
@@ -437,7 +517,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
                 + time::from_ms(
                     self.clients[c].window.mean() * self.cfg.lambda_fs.straggler_threshold,
                 );
-            let retry_arrive = detect + self.net.tcp_hop(rng);
+            let retry_arrive = detect + self.net.tcp_hop_chaos(rng, mults.as_ref());
             let retried = match op.kind {
                 k if k.is_subtree() => None, // subtree ops are not raced
                 k if k.is_write() => None,   // writes must not double-commit
@@ -445,12 +525,21 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             };
             if let Some(r) = retried {
                 retries += 1;
-                let retry_done = r + self.net.tcp_hop(rng);
+                let retry_done = r + self.net.tcp_hop_chaos(rng, mults.as_ref());
                 if retry_done < done {
                     done = retry_done;
                     self.metrics.resubmissions += 1;
                 }
             }
+        }
+
+        // Under chaos, a response slower than the HTTP timeout counts as
+        // a timeout even though the (straggler-mitigated) op completes —
+        // gated on chaos being installed so healthy runs stay at zero.
+        if self.chaos.is_some()
+            && done.saturating_sub(now) > time::from_ms(self.cfg.faas.http_timeout_ms)
+        {
+            timeouts += 1;
         }
 
         // Billing: the serving instance is active from arrival to service
@@ -465,12 +554,28 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
                 retries,
                 server: dep,
                 cost_us: served.saturating_sub(arrive),
+                timeouts,
+                gave_up,
             },
         }
     }
 }
 
 impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
+    /// Arm the chaos hooks. Kill windows lower onto the existing Fig. 15
+    /// `kill_schedule`; everything else installs as the `ChaosState`
+    /// queried per op. An empty plan installs nothing at all.
+    fn install_chaos(&mut self, plan: &ChaosPlan) {
+        if plan.is_none() {
+            self.chaos = None;
+            return;
+        }
+        for k in &plan.kills {
+            self.schedule_kill(k.second as usize, k.deployment);
+        }
+        self.chaos = Some(ChaosState::new(self.cfg.seed, plan));
+    }
+
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
         let dep = self.router.route(&self.ns, req.op.target);
         self.submit_routed(req, dep, rng)
@@ -514,9 +619,7 @@ impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
             if s != second {
                 continue;
             }
-            let victim = self.platform.deployment_instances(dep).next();
-            if let Some(victim) = victim {
-                self.platform.kill(victim, now, false);
+            if let Some(victim) = self.platform.kill_oldest(dep, now) {
                 self.conns.drop_instance(victim);
                 self.coord.deregister(victim);
             }
@@ -719,6 +822,36 @@ mod tests {
         let m = sys.into_metrics();
         assert!(kills >= 3, "kills happened: {kills}");
         assert_eq!(m.completed_ops, 20_000, "workload completes despite failures");
+    }
+
+    #[test]
+    fn chaos_partition_times_out_and_gives_up() {
+        let cfg = small_cfg();
+        let ns = small_ns(&cfg);
+        let mut rng = Rng::new(5);
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(10, 500.0),
+            mix: OpMix::spotify(),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = LambdaFs::new(cfg, ns.clone(), 64, 2);
+        let plan = ChaosPlan {
+            n_vms: 2,
+            partitions: vec![chaos::Partition { from_s: 2, to_s: 10_000, vm: 0, deployment: 0 }],
+            ..ChaosPlan::none()
+        };
+        sys.install_chaos(&plan);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        let m = sys.into_metrics();
+        assert!(m.timeouts > 0, "partitioned ops time out");
+        assert!(m.gave_up > 0, "exhausted backoff budgets give up");
+        assert_eq!(m.completed_ops + m.gave_up, 5_000, "every submitted op is accounted for");
+        assert_eq!(m.failed_ops, m.gave_up);
+        assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops, "outcome ledger conserved");
     }
 
     #[test]

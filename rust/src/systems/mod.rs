@@ -105,13 +105,29 @@ pub struct Outcome {
     /// Attributed service cost in µs: the busy interval billed to the
     /// serving node for this request (arrival → service completion).
     pub cost_us: u64,
+    /// HTTP timeouts this op suffered before completing (or giving up):
+    /// fault-window losses plus chaos-inflated responses past the
+    /// client's HTTP timeout. 0 on a healthy run.
+    pub timeouts: u32,
+    /// The client exhausted its backoff budget and abandoned the op.
+    /// A gave-up completion carries the abandonment time, not a service
+    /// time; drivers count it as a failed op, never as a completed one.
+    pub gave_up: bool,
 }
 
 impl Outcome {
     /// A warm, cacheless, retry-free outcome on `server` — the baseline
     /// shape; callers override the fields that apply.
     pub fn warm(server: u32) -> Outcome {
-        Outcome { cold_start: false, cache: CacheOutcome::Bypass, retries: 0, server, cost_us: 0 }
+        Outcome {
+            cold_start: false,
+            cache: CacheOutcome::Bypass,
+            retries: 0,
+            server,
+            cost_us: 0,
+            timeouts: 0,
+            gave_up: false,
+        }
     }
 }
 
@@ -151,6 +167,12 @@ pub trait MetadataService {
             out.push(self.submit(*req, rng));
         }
     }
+
+    /// Install a chaos fault plan (see [`crate::chaos`]). The default is
+    /// a no-op: systems that opt in override this to arm their chaos
+    /// hooks. Installing [`crate::chaos::ChaosPlan::none`] must leave the
+    /// system draw-for-draw identical to never calling this at all.
+    fn install_chaos(&mut self, _plan: &crate::chaos::ChaosPlan) {}
 
     /// Called at each 1-second boundary for metrics/cost sampling and
     /// platform housekeeping (reclaim, heartbeats).

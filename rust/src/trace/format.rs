@@ -22,18 +22,29 @@
 //!                                    zigzag dt, client, dir, [file], [dest]
 //! ```
 //!
+//! Version 2 inserts one field between `n_vms` and `n_events`: a
+//! length-prefixed [`ChaosPlan`](crate::chaos::ChaosPlan) payload, so a
+//! replayed trace reproduces the recording's fault schedule bit-exactly.
+//! Traces with an empty plan still encode as version 1 — byte-identical
+//! to pre-chaos builds — and version-1 traces decode with
+//! `ChaosPlan::none()`.
+//!
 //! All integers are varints. Decoding validates the magic, version, op
 //! kinds, and that the payload is fully consumed.
 
+use crate::chaos::ChaosPlan;
 use crate::namespace::generate::{generate, NamespaceParams};
 use crate::namespace::{DirId, InodeRef, Namespace, OpKind, Operation};
 use crate::sim::Time;
 use crate::util::fnv::fnv1a64;
 use crate::util::rng::Rng;
 
-/// Format magic + current version.
+/// Format magic + supported versions. Traces without a chaos plan encode
+/// as `VERSION` (byte-compatible with pre-chaos readers); traces carrying
+/// a plan encode as `VERSION_CHAOS`.
 pub const MAGIC: &[u8; 8] = b"LFSTRACE";
 pub const VERSION: u64 = 1;
+pub const VERSION_CHAOS: u64 = 2;
 
 /// Everything a replayer needs to reconstruct the run's environment.
 #[derive(Clone, Debug, PartialEq)]
@@ -104,6 +115,9 @@ pub enum TraceEvent {
 pub struct Trace {
     pub meta: TraceMeta,
     pub events: Vec<TraceEvent>,
+    /// Fault schedule active during the recording (empty = none). Carried
+    /// in the header (format v2) so replay reinstalls it automatically.
+    pub chaos: ChaosPlan,
 }
 
 impl Trace {
@@ -126,7 +140,8 @@ impl Trace {
     pub fn encode(&self) -> Vec<u8> {
         let mut buf = Vec::with_capacity(16 + self.events.len() * 6);
         buf.extend_from_slice(MAGIC);
-        put_varint(&mut buf, VERSION);
+        let version = if self.chaos.is_none() { VERSION } else { VERSION_CHAOS };
+        put_varint(&mut buf, version);
         put_bytes(&mut buf, self.meta.source.as_bytes());
         put_varint(&mut buf, self.meta.seed);
         put_varint(&mut buf, self.meta.n_dirs as u64);
@@ -135,6 +150,9 @@ impl Trace {
         put_varint(&mut buf, self.meta.zipf_s.to_bits());
         put_varint(&mut buf, self.meta.n_clients as u64);
         put_varint(&mut buf, self.meta.n_vms as u64);
+        if version == VERSION_CHAOS {
+            put_bytes(&mut buf, &self.chaos.encode());
+        }
         put_varint(&mut buf, self.events.len() as u64);
         let mut prev_at: Time = 0;
         for ev in &self.events {
@@ -177,8 +195,10 @@ impl Trace {
         }
         let mut pos = MAGIC.len();
         let version = get_varint(bytes, &mut pos)?;
-        if version != VERSION {
-            return Err(format!("unsupported trace version {version} (expected {VERSION})"));
+        if version != VERSION && version != VERSION_CHAOS {
+            return Err(format!(
+                "unsupported trace version {version} (expected {VERSION} or {VERSION_CHAOS})"
+            ));
         }
         let source = String::from_utf8(get_bytes(bytes, &mut pos)?.to_vec())
             .map_err(|_| "trace source is not UTF-8".to_string())?;
@@ -189,6 +209,11 @@ impl Trace {
         let zipf_s = f64::from_bits(get_varint(bytes, &mut pos)?);
         let n_clients = get_varint(bytes, &mut pos)? as u32;
         let n_vms = get_varint(bytes, &mut pos)? as u32;
+        let chaos = if version == VERSION_CHAOS {
+            ChaosPlan::decode(get_bytes(bytes, &mut pos)?)?
+        } else {
+            ChaosPlan::none()
+        };
         let n_events = get_varint(bytes, &mut pos)? as usize;
         // Pre-size from the header, but never trust it past the payload
         // (each event is ≥ 2 bytes, so this bounds a corrupt count).
@@ -239,7 +264,7 @@ impl Trace {
             n_clients,
             n_vms,
         };
-        Ok(Trace { meta, events })
+        Ok(Trace { meta, events, chaos })
     }
 
     pub fn write_file(&self, path: impl AsRef<std::path::Path>) -> Result<(), String> {
@@ -379,10 +404,42 @@ mod tests {
 
     #[test]
     fn empty_trace_round_trip() {
-        let t = Trace { meta: meta(), events: Vec::new() };
+        let t = Trace { meta: meta(), events: Vec::new(), chaos: ChaosPlan::none() };
         let back = Trace::decode(&t.encode()).unwrap();
         assert_eq!(t, back);
         assert_eq!(t.fingerprint(), back.fingerprint());
+    }
+
+    #[test]
+    fn no_chaos_traces_stay_version_1() {
+        // The chaos field must not perturb plan-free encodings: the
+        // version byte stays 1 and no plan payload is emitted.
+        let t = Trace { meta: meta(), events: Vec::new(), chaos: ChaosPlan::none() };
+        let bytes = t.encode();
+        let mut pos = MAGIC.len();
+        assert_eq!(get_varint(&bytes, &mut pos).unwrap(), VERSION);
+    }
+
+    #[test]
+    fn chaos_plan_round_trips_in_header() {
+        use crate::chaos::{KillEvent, Partition};
+        let plan = ChaosPlan {
+            n_vms: 4,
+            kills: vec![KillEvent { second: 3, deployment: 1 }],
+            partitions: vec![Partition { from_s: 2, to_s: 9, vm: 0, deployment: 2 }],
+            ..ChaosPlan::none()
+        };
+        let t = Trace {
+            meta: meta(),
+            events: vec![TraceEvent::Second { second: 0, target: 7 }],
+            chaos: plan,
+        };
+        let bytes = t.encode();
+        let mut pos = MAGIC.len();
+        assert_eq!(get_varint(&bytes, &mut pos).unwrap(), VERSION_CHAOS);
+        let back = Trace::decode(&bytes).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(bytes, back.encode());
     }
 
     #[test]
@@ -413,6 +470,7 @@ mod tests {
                 },
                 TraceEvent::Second { second: 1, target: 0 },
             ],
+            chaos: ChaosPlan::none(),
         };
         let bytes = t.encode();
         let back = Trace::decode(&bytes).unwrap();
@@ -425,7 +483,11 @@ mod tests {
     #[test]
     fn rejects_garbage() {
         assert!(Trace::decode(b"not a trace").is_err());
-        let t = Trace { meta: meta(), events: vec![TraceEvent::Second { second: 0, target: 1 }] };
+        let t = Trace {
+            meta: meta(),
+            events: vec![TraceEvent::Second { second: 0, target: 1 }],
+            chaos: ChaosPlan::none(),
+        };
         let mut bytes = t.encode();
         bytes.push(0); // trailing byte
         assert!(Trace::decode(&bytes).is_err());

@@ -18,6 +18,7 @@
 //! which reproduces the recorded run exactly when replayed into the
 //! same system and seed.
 
+use crate::chaos::ChaosPlan;
 use crate::metrics::RunMetrics;
 use crate::systems::{Completion, MetadataService, Request};
 use crate::util::rng::Rng;
@@ -29,16 +30,19 @@ pub struct Recorder<S: MetadataService> {
     inner: S,
     meta: TraceMeta,
     events: Vec<TraceEvent>,
+    /// Chaos plan installed through the recorder, captured into the trace
+    /// header so replays reinstall the identical fault schedule.
+    chaos: ChaosPlan,
 }
 
 impl<S: MetadataService> Recorder<S> {
     pub fn new(inner: S, meta: TraceMeta) -> Self {
-        Recorder { inner, meta, events: Vec::new() }
+        Recorder { inner, meta, events: Vec::new(), chaos: ChaosPlan::none() }
     }
 
     /// Finish recording: the wrapped system plus the captured trace.
     pub fn into_parts(self) -> (S, Trace) {
-        (self.inner, Trace { meta: self.meta, events: self.events })
+        (self.inner, Trace { meta: self.meta, events: self.events, chaos: self.chaos })
     }
 
     pub fn inner(&self) -> &S {
@@ -47,6 +51,11 @@ impl<S: MetadataService> Recorder<S> {
 }
 
 impl<S: MetadataService> MetadataService for Recorder<S> {
+    fn install_chaos(&mut self, plan: &ChaosPlan) {
+        self.chaos = plan.clone();
+        self.inner.install_chaos(plan);
+    }
+
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
         // Record the *intended* slot, not the realized issue time: the
         // trace carries the pure schedule (see module doc).

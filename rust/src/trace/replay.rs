@@ -46,6 +46,12 @@ pub fn replay<S: MetadataService>(sys: &mut S, trace: &Trace, rng: &mut Rng) {
     // Mirror the drivers' op-generation fork (discarded: a trace replays
     // pre-sampled ops) so the submit stream aligns with recording.
     let _ = rng.fork("ops");
+    // Reinstall the recording's fault schedule (v2 traces). Chaos draws
+    // come from a dedicated stream seeded by system seed + plan digest,
+    // so the replayed run reproduces the recorded one bit for bit.
+    if !trace.chaos.is_none() {
+        sys.install_chaos(&trace.chaos);
+    }
     let n_clients = trace.meta.n_clients.max(1) as usize;
     let mut ready: Vec<Time> = vec![0; n_clients];
     for ev in &trace.events {
@@ -126,6 +132,7 @@ mod tests {
                 TraceEvent::Op { at: 1_000_000, client: 2, op: op(OpKind::Create) },
                 TraceEvent::Second { second: 1, target: 1 },
             ],
+            chaos: crate::chaos::ChaosPlan::none(),
         }
     }
 

@@ -20,6 +20,7 @@
 use std::fmt::Write as _;
 
 use crate::baselines::{CephFs, HopsFs};
+use crate::chaos::{Blackout, ChaosPlan, DelayWindow, KillEvent, Partition, StragglerBurst};
 use crate::config::SystemConfig;
 use crate::figures::common::{print_table, Scale};
 use crate::metrics::RunMetrics;
@@ -38,19 +39,34 @@ use super::synth::{self, ContainerChurnSpec, MlPipelineSpec};
 /// JSON schema identifier (validated in CI). v2: cells gained the
 /// outcome columns (cold_starts/warm_ops/cache_hits/cache_misses/
 /// cache_hit_ratio/retries) and `fingerprint` became the
-/// `outcome_fingerprint()` superset digest — v1 artifacts are neither
-/// forward- nor fingerprint-comparable.
-pub const SCHEMA: &str = "lambdafs-scenarios-v2";
+/// `outcome_fingerprint()` superset digest. v3: a chaos axis — every
+/// scale replays the Spotify trace under each [`CHAOS_MODES`] fault plan
+/// against every system — and cells gained `chaos`/`submitted`/
+/// `timeouts`/`gave_up` (conservation: completed_ops + gave_up ==
+/// submitted). Earlier artifacts are not fingerprint-comparable.
+pub const SCHEMA: &str = "lambdafs-scenarios-v3";
 
 /// Systems every workload runs against.
 pub const SYSTEMS: [&str; 4] = ["lambdafs", "hopsfs", "hopsfs+cache", "cephfs"];
+
+/// The chaos axis: seeded fault plans the Spotify trace is replayed
+/// under, against every system. `kills` stresses λFS's instance churn
+/// (baselines have no instances to kill); `partition` severs two
+/// VM↔deployment legs for the rest of the run (timeouts, then give-ups);
+/// `delay-storm` composes degraded links, a straggler burst, and a short
+/// deployment blackout (timeouts that recover).
+pub const CHAOS_MODES: [&str; 3] = ["kills", "partition", "delay-storm"];
 
 /// One (system × workload × scale) outcome.
 #[derive(Clone, Debug)]
 pub struct ScenarioCell {
     pub system: &'static str,
     pub workload: &'static str,
+    /// Chaos mode the cell ran under (`"none"` for the plain sweep).
+    pub chaos: &'static str,
     pub scale: f64,
+    /// Ops offered to the system (completed_ops + gave_up == submitted).
+    pub submitted: u64,
     pub completed_ops: u64,
     pub avg_throughput: f64,
     pub peak_throughput: f64,
@@ -65,6 +81,10 @@ pub struct ScenarioCell {
     pub cache_misses: u64,
     pub cache_hit_ratio: f64,
     pub retries: u64,
+    /// Client-visible HTTP timeouts (lost legs + over-deadline replies).
+    pub timeouts: u64,
+    /// Ops abandoned after exhausting the retry budget.
+    pub gave_up: u64,
     /// `RunMetrics::outcome_fingerprint` — the determinism contract per
     /// cell, covering the outcome columns as well as the run state.
     pub fingerprint: u64,
@@ -136,30 +156,101 @@ pub fn run_matrix(scale: f64, seed: u64, smoke: bool) -> ScenarioReport {
                         );
                     }
                 }
-                cells.push(ScenarioCell {
-                    system,
-                    workload: name,
-                    scale: sc,
-                    completed_ops: m.completed_ops,
-                    avg_throughput: m.avg_throughput(),
-                    peak_throughput: m.peak_throughput(),
-                    p50_ms: m.all_lat.p50() / 1_000.0,
-                    p99_ms: m.all_lat.p99() / 1_000.0,
-                    total_cost_usd: m.total_cost(),
-                    cold_starts: m.cold_starts,
-                    warm_ops: m.warm_ops,
-                    cache_hits: m.cache_hits,
-                    cache_misses: m.cache_misses,
-                    cache_hit_ratio: m.cache_hit_ratio(),
-                    retries: m.total_retries(),
-                    // The superset digest, so per-cell determinism also
-                    // pins the outcome columns, not just latencies.
-                    fingerprint: m.outcome_fingerprint(),
-                });
+                cells.push(make_cell(system, name, "none", sc, &m));
+            }
+            // The chaos axis: replay the *same* Spotify op stream under
+            // each fault plan — the plan rides in the trace header, so
+            // these cells exercise the exact path a recorded chaotic
+            // trace replays through. No record_fp assertion here: chaos
+            // runs diverge from the clean recording by design.
+            if name == "spotify-replay" {
+                for mode in CHAOS_MODES {
+                    let mut chaotic = trace.clone();
+                    chaotic.chaos = chaos_plan(mode, trace.duration_s() as u32);
+                    for system in SYSTEMS {
+                        let label = format!("{name}/{mode}");
+                        let m = run_cell(system, &label, &chaotic, &ns, sc, seed);
+                        cells.push(make_cell(system, name, mode, sc, &m));
+                    }
+                }
             }
         }
     }
     ScenarioReport { seed, smoke, workloads, cells }
+}
+
+fn make_cell(
+    system: &'static str,
+    workload: &'static str,
+    chaos: &'static str,
+    sc: f64,
+    m: &RunMetrics,
+) -> ScenarioCell {
+    ScenarioCell {
+        system,
+        workload,
+        chaos,
+        scale: sc,
+        submitted: m.completed_ops + m.gave_up,
+        completed_ops: m.completed_ops,
+        avg_throughput: m.avg_throughput(),
+        peak_throughput: m.peak_throughput(),
+        p50_ms: m.all_lat.p50() / 1_000.0,
+        p99_ms: m.all_lat.p99() / 1_000.0,
+        total_cost_usd: m.total_cost(),
+        cold_starts: m.cold_starts,
+        warm_ops: m.warm_ops,
+        cache_hits: m.cache_hits,
+        cache_misses: m.cache_misses,
+        cache_hit_ratio: m.cache_hit_ratio(),
+        retries: m.total_retries(),
+        timeouts: m.timeouts,
+        gave_up: m.gave_up,
+        // The superset digest, so per-cell determinism also
+        // pins the outcome columns, not just latencies.
+        fingerprint: m.outcome_fingerprint(),
+    }
+}
+
+/// The named fault plans of the chaos axis. All windows are expressed
+/// against the trace's duration so smoke and full matrices stress the
+/// same run fractions; `n_vms` matches the Spotify fleet shape.
+fn chaos_plan(mode: &str, duration_s: u32) -> ChaosPlan {
+    let end = duration_s.max(10);
+    match mode {
+        // Kill an instance in round-robin deployments every few seconds
+        // (generalized Fig. 15). Baselines have no instances: their
+        // cells measure the plan's zero-overhead path.
+        "kills" => ChaosPlan {
+            n_vms: 8,
+            kills: (1..end)
+                .step_by(5)
+                .enumerate()
+                .map(|(i, s)| KillEvent { second: s, deployment: (i % 4) as u32 })
+                .collect(),
+            ..ChaosPlan::none()
+        },
+        // Sever two VM↔deployment legs for the rest of the run: affected
+        // clients time out, retry with backoff, and eventually give up.
+        "partition" => ChaosPlan {
+            n_vms: 8,
+            partitions: vec![
+                Partition { from_s: 2, to_s: u32::MAX, vm: 0, deployment: 0 },
+                Partition { from_s: 2, to_s: u32::MAX, vm: 1, deployment: 1 },
+            ],
+            ..ChaosPlan::none()
+        },
+        // Degraded links + a straggler burst + a short blackout of one
+        // deployment: timeouts that recover rather than give up.
+        "delay-storm" => ChaosPlan {
+            n_vms: 8,
+            blackouts: vec![Blackout { from_s: 2, to_s: 8, deployment: Some(0) }],
+            delays: vec![DelayWindow { from_s: 0, to_s: end, tcp_mult: 25.0, http_mult: 25.0 }],
+            stragglers: vec![StragglerBurst { from_s: 0, to_s: end, prob: 0.2, factor: 40.0 }],
+            ..ChaosPlan::none()
+        },
+        other => panic!("unknown chaos mode {other:?}"),
+    }
 }
 
 /// The workload axis at one scale. The Spotify entry carries its
@@ -293,10 +384,20 @@ fn run_cell(
 }
 
 impl ScenarioReport {
-    /// Look up one cell.
+    /// Look up one plain-sweep cell (chaos == "none").
     pub fn cell(&self, system: &str, workload: &str, scale: f64) -> Option<&ScenarioCell> {
         self.cells.iter().find(|c| {
-            c.system == system && c.workload == workload && (c.scale - scale).abs() < 1e-12
+            c.system == system
+                && c.workload == workload
+                && c.chaos == "none"
+                && (c.scale - scale).abs() < 1e-12
+        })
+    }
+
+    /// Look up one chaos-axis cell.
+    pub fn chaos_cell(&self, system: &str, mode: &str, scale: f64) -> Option<&ScenarioCell> {
+        self.cells.iter().find(|c| {
+            c.system == system && c.chaos == mode && (c.scale - scale).abs() < 1e-12
         })
     }
 
@@ -308,6 +409,7 @@ impl ScenarioReport {
             .map(|c| {
                 vec![
                     c.workload.to_string(),
+                    c.chaos.to_string(),
                     format!("{:.3}", c.scale),
                     c.system.to_string(),
                     c.completed_ops.to_string(),
@@ -319,6 +421,8 @@ impl ScenarioReport {
                     c.cold_starts.to_string(),
                     format!("{:.1}", c.cache_hit_ratio * 100.0),
                     c.retries.to_string(),
+                    c.timeouts.to_string(),
+                    c.gave_up.to_string(),
                     format!("{:08x}", c.fingerprint >> 32),
                 ]
             })
@@ -326,8 +430,9 @@ impl ScenarioReport {
         print_table(
             &format!("Scenario matrix (seed {})", self.seed),
             &[
-                "workload", "scale", "system", "ops", "avg_tput", "peak_tput", "p50_ms",
-                "p99_ms", "cost_$", "cold", "hit_%", "retries", "fp",
+                "workload", "chaos", "scale", "system", "ops", "avg_tput", "peak_tput",
+                "p50_ms", "p99_ms", "cost_$", "cold", "hit_%", "retries", "t_out", "gaveup",
+                "fp",
             ],
             &rows,
         );
@@ -346,6 +451,11 @@ impl ScenarioReport {
             let _ = write!(s, "{}\"{sys}\"", if i > 0 { ", " } else { "" });
         }
         s.push_str("],\n");
+        s.push_str("  \"chaos_modes\": [");
+        for (i, mode) in CHAOS_MODES.iter().enumerate() {
+            let _ = write!(s, "{}\"{mode}\"", if i > 0 { ", " } else { "" });
+        }
+        s.push_str("],\n");
         s.push_str("  \"workloads\": [\n");
         for (i, w) in self.workloads.iter().enumerate() {
             let _ = write!(
@@ -361,15 +471,19 @@ impl ScenarioReport {
         for (i, c) in self.cells.iter().enumerate() {
             let _ = write!(
                 s,
-                "    {{\"system\": \"{}\", \"workload\": \"{}\", \"scale\": {}, \
+                "    {{\"system\": \"{}\", \"workload\": \"{}\", \"chaos\": \"{}\", \
+                 \"scale\": {}, \"submitted\": {}, \
                  \"completed_ops\": {}, \"avg_throughput\": {:.3}, \"peak_throughput\": {:.3}, \
                  \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"total_cost_usd\": {:.6}, \
                  \"cold_starts\": {}, \"warm_ops\": {}, \"cache_hits\": {}, \
                  \"cache_misses\": {}, \"cache_hit_ratio\": {:.6}, \"retries\": {}, \
+                 \"timeouts\": {}, \"gave_up\": {}, \
                  \"fingerprint\": \"{:#018x}\"}}",
                 c.system,
                 c.workload,
+                c.chaos,
                 c.scale,
+                c.submitted,
                 c.completed_ops,
                 c.avg_throughput,
                 c.peak_throughput,
@@ -382,6 +496,8 @@ impl ScenarioReport {
                 c.cache_misses,
                 c.cache_hit_ratio,
                 c.retries,
+                c.timeouts,
+                c.gave_up,
                 c.fingerprint
             );
             s.push_str(if i + 1 < self.cells.len() { ",\n" } else { "\n" });
@@ -407,20 +523,35 @@ mod tests {
     #[test]
     fn smoke_matrix_deterministic() {
         let a = run_matrix(0.005, 7, true);
-        assert_eq!(a.cells.len(), SYSTEMS.len() * 3);
+        assert_eq!(a.cells.len(), SYSTEMS.len() * (3 + CHAOS_MODES.len()));
         assert_eq!(a.workloads.len(), 3);
         for c in &a.cells {
             assert!(c.completed_ops > 0, "{}/{} empty", c.system, c.workload);
             assert!(c.p50_ms > 0.0 && c.p99_ms >= c.p50_ms);
-            // Outcome conservation holds in every cell of the matrix.
+            // Outcome conservation holds in every cell of the matrix,
+            // chaos cells included: nothing vanishes, nothing double
+            // counts.
+            assert_eq!(
+                c.completed_ops + c.gave_up,
+                c.submitted,
+                "{}/{}/{} submission conservation",
+                c.system,
+                c.workload,
+                c.chaos
+            );
             assert_eq!(
                 c.cold_starts + c.warm_ops,
                 c.completed_ops,
-                "{}/{} outcome conservation",
+                "{}/{}/{} outcome conservation",
                 c.system,
-                c.workload
+                c.workload,
+                c.chaos
             );
             assert!(c.cache_hits + c.cache_misses <= c.completed_ops);
+            if c.chaos == "none" {
+                assert_eq!(c.timeouts, 0, "{}/{} timeouts without chaos", c.system, c.workload);
+                assert_eq!(c.gave_up, 0, "{}/{} give-ups without chaos", c.system, c.workload);
+            }
         }
         // λFS serves the hot Spotify read mix mostly from cache; the
         // stateless HopsFS cell records every read as a miss.
@@ -428,18 +559,35 @@ mod tests {
         assert!(lfs.cache_hit_ratio > 0.1, "λFS hit ratio {}", lfs.cache_hit_ratio);
         let hops = a.cell("hopsfs", "spotify-replay", 0.005).unwrap();
         assert_eq!(hops.cache_hits, 0, "stateless HopsFS never hits a cache");
+        // The chaos axis bites: severed legs drive timeouts then
+        // give-ups in every system; blackout + degraded links drive
+        // timeouts that recover.
+        for sys in SYSTEMS {
+            let p = a.chaos_cell(sys, "partition", 0.005).unwrap();
+            assert!(p.timeouts > 0, "{sys}/partition saw no timeouts");
+            assert!(p.gave_up > 0, "{sys}/partition saw no give-ups");
+            let d = a.chaos_cell(sys, "delay-storm", 0.005).unwrap();
+            assert!(d.timeouts > 0, "{sys}/delay-storm saw no timeouts");
+        }
         let b = run_matrix(0.005, 7, true);
         for (x, y) in a.cells.iter().zip(&b.cells) {
-            assert_eq!(x.fingerprint, y.fingerprint, "{}/{}", x.system, x.workload);
+            assert_eq!(
+                x.fingerprint, y.fingerprint,
+                "{}/{}/{}",
+                x.system, x.workload, x.chaos
+            );
         }
         assert_eq!(a.render_json(), b.render_json());
-        // The JSON mentions every system and workload.
+        // The JSON mentions every system, workload, and chaos mode.
         let json = a.render_json();
         for sys in SYSTEMS {
             assert!(json.contains(sys));
         }
         for w in ["spotify-replay", "ml-pipeline", "container-churn"] {
             assert!(json.contains(w));
+        }
+        for mode in CHAOS_MODES {
+            assert!(json.contains(mode));
         }
     }
 }

@@ -260,7 +260,7 @@ fn assemble(meta: TraceMeta, ops_by_second: Vec<Vec<Operation>>) -> Trace {
         }
         events.push(TraceEvent::Second { second: s as u32, target: n });
     }
-    Trace { meta, events }
+    Trace { meta, events, chaos: crate::chaos::ChaosPlan::none() }
 }
 
 #[cfg(test)]

@@ -34,6 +34,19 @@
 //! (`cold_starts + warm_ops == completed_ops`) and validated by the CI
 //! schema check. Figures gain the same columns via
 //! [`crate::figures::common::outcome_cells`].
+//!
+//! **Chaos axis (schema v3):** the matrix additionally replays the
+//! Spotify trace under each seeded fault plan in
+//! [`crate::trace::scenario::CHAOS_MODES`] — `kills` (round-robin
+//! instance kills, the generalized Fig. 15 schedule), `partition`
+//! (client-VM↔deployment legs severed until the end of the run), and
+//! `delay-storm` (degraded links + straggler burst + a short deployment
+//! blackout) — against every system. Chaos cells carry `timeouts` and
+//! `gave_up` columns with the conservation law
+//! `completed_ops + gave_up == submitted`; plans are declarative
+//! [`crate::chaos::ChaosPlan`]s that ride in the trace header, so any
+//! recorded chaotic run replays bit-identically (pinned in
+//! `rust/tests/determinism.rs`).
 
 pub mod schedule;
 pub mod spec;

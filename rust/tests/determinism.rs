@@ -32,6 +32,9 @@
 
 use lambda_fs::baselines::hopsfs::HopsFs;
 use lambda_fs::baselines::{CephFs, InfiniCacheMds};
+use lambda_fs::chaos::{
+    AckChaos, Blackout, ChaosPlan, DelayWindow, KillEvent, Partition, StragglerBurst,
+};
 use lambda_fs::config::SystemConfig;
 use lambda_fs::faas::{Platform, ReferencePlatform};
 use lambda_fs::metrics::RunMetrics;
@@ -708,6 +711,165 @@ fn latency_histograms_consistent_after_integer_migration() {
         let cdf = h.cdf();
         assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9, "cdf completes");
     }
+}
+
+/// A composite fault plan touching every chaos category: instance kills,
+/// a deployment blackout, a coordinator blackout (writes only), a
+/// client-VM↔deployment partition held to the end of the run, degraded
+/// links, a straggler burst, and invalidation-ACK disruption.
+fn composite_plan() -> ChaosPlan {
+    ChaosPlan {
+        n_vms: 2,
+        kills: vec![
+            KillEvent { second: 2, deployment: 0 },
+            KillEvent { second: 4, deployment: 3 },
+        ],
+        blackouts: vec![
+            Blackout { from_s: 3, to_s: 5, deployment: Some(1) },
+            Blackout { from_s: 5, to_s: 6, deployment: None },
+        ],
+        partitions: vec![Partition { from_s: 2, to_s: u32::MAX, vm: 1, deployment: 2 }],
+        delays: vec![DelayWindow { from_s: 0, to_s: 8, tcp_mult: 10.0, http_mult: 10.0 }],
+        stragglers: vec![StragglerBurst { from_s: 0, to_s: 8, prob: 0.15, factor: 30.0 }],
+        acks: vec![AckChaos { from_s: 0, to_s: 8, drop_prob: 0.3, delay_ms: 4.0 }],
+    }
+}
+
+/// Seeded chaos is part of the determinism contract: the same seed and
+/// the same plan reproduce the run bit for bit, fault handling included
+/// — and nothing is lost or double-counted on the way
+/// (`completed_ops + gave_up` accounts for every submitted op).
+#[test]
+fn chaos_run_twice_fingerprint_identical() {
+    fn run(seed: u64) -> RunMetrics {
+        let (cfg, ns, sampler) = fixture(seed);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(8, 800.0),
+            mix: OpMix::spotify(),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+        sys.install_chaos(&composite_plan());
+        let mut rng = Rng::new(cfg.seed ^ 0xd0);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    }
+
+    let a = run(1234);
+    let b = run(1234);
+    assert_eq!(a.fingerprint(), b.fingerprint(), "chaotic runs diverged");
+    assert_eq!(a.outcome_fingerprint(), b.outcome_fingerprint(), "chaos ledgers diverged");
+    // The plan actually bit.
+    assert!(a.timeouts > 0, "composite plan produced no timeouts");
+    assert!(a.gave_up > 0, "the held partition produced no give-ups");
+    // Conservation under chaos: every op either completed or gave up,
+    // and completed ops still split exactly into cold + warm.
+    assert_eq!(a.failed_ops, a.gave_up, "give-ups are the only failures");
+    assert_eq!(a.cold_starts + a.warm_ops, a.completed_ops, "conservation under chaos");
+    assert_eq!(a.completed_ops + a.gave_up, 8 * 800, "no op vanished");
+    // A different seed moves the chaotic fingerprint too.
+    let c = run(4321);
+    assert_ne!(a.fingerprint(), c.fingerprint(), "chaos digest insensitive to seed");
+}
+
+/// Chaos runs record→replay bit-identically: the plan rides in the trace
+/// header (format v2), the replayer reinstalls it, and the dedicated
+/// chaos stream (seeded by system seed ⊕ plan digest) realigns draws.
+#[test]
+fn chaos_record_replay_bit_identical() {
+    let seed = 2025u64;
+    let (cfg, ns, sampler) = fixture(seed);
+    let params = NamespaceParams { n_dirs: 384, files_per_dir: 24, ..Default::default() };
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(8, 700.0),
+        mix: OpMix::spotify(),
+        n_clients: 64,
+        n_vms: 2,
+        namespace: params.clone(),
+        zipf_s: 1.3,
+    };
+    let meta = TraceMeta::new("spotify-chaos", seed, &params, spec.n_clients, spec.n_vms);
+
+    let mut rec =
+        Recorder::new(LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms), meta);
+    rec.install_chaos(&composite_plan());
+    let mut rng = Rng::new(cfg.seed ^ 0xabce);
+    driver::run_open_loop(&mut rec, &spec, &ns, &sampler, &mut rng);
+    let (sys, trace) = rec.into_parts();
+    let m_rec = sys.into_metrics();
+    assert!(m_rec.timeouts > 0 && m_rec.gave_up > 0, "recording saw chaos");
+    assert_eq!(trace.chaos, composite_plan(), "plan captured into the trace");
+
+    // Binary round trip carries the plan (format v2).
+    let decoded = Trace::decode(&trace.encode()).expect("decode chaotic trace");
+    assert_eq!(trace, decoded);
+
+    // The replayer reinstalls the plan from the header: bit-identical.
+    let m_rep = replay_into(
+        LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms),
+        &decoded,
+        &mut Rng::new(cfg.seed ^ 0xabce),
+    );
+    assert_eq!(
+        m_rec.fingerprint(),
+        m_rep.fingerprint(),
+        "chaotic record→replay must reproduce the run bit for bit"
+    );
+    assert_eq!(m_rec.outcome_fingerprint(), m_rep.outcome_fingerprint());
+    assert_eq!(m_rec.timeouts, m_rep.timeouts);
+    assert_eq!(m_rec.gave_up, m_rep.gave_up);
+}
+
+/// The zero-overhead contract: a system with `ChaosPlan::none()`
+/// installed is draw-for-draw identical to one with no plan at all —
+/// chaos hooks must not perturb clean runs.
+#[test]
+fn empty_chaos_plan_is_identity() {
+    let baseline = run_lambdafs_open(1234);
+    let (cfg, ns, sampler) = fixture(1234);
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(8, 800.0),
+        mix: OpMix::spotify(),
+        n_clients: 64,
+        n_vms: 2,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+    let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+    sys.install_chaos(&ChaosPlan::none());
+    let mut rng = Rng::new(cfg.seed ^ 0xd0);
+    driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+    let m = sys.into_metrics();
+    assert_eq!(baseline.fingerprint(), m.fingerprint(), "empty plan perturbed λFS");
+    assert_eq!(baseline.outcome_fingerprint(), m.outcome_fingerprint());
+    assert_eq!(m.timeouts, 0);
+    assert_eq!(m.gave_up, 0);
+
+    // Baselines honor the same contract through the shared hook.
+    let run_hops = |chaos: bool| -> RunMetrics {
+        let mut sys = HopsFs::new(cfg.clone(), ns.clone(), 128.0, true);
+        if chaos {
+            sys.install_chaos(&ChaosPlan::none());
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0xb0);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    };
+    assert_eq!(run_hops(false).fingerprint(), run_hops(true).fingerprint());
+
+    let run_ceph = |chaos: bool| -> RunMetrics {
+        let mut sys = CephFs::new(cfg.clone(), ns.clone(), 128.0);
+        if chaos {
+            sys.install_chaos(&ChaosPlan::none());
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0xce);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    };
+    assert_eq!(run_ceph(false).fingerprint(), run_ceph(true).fingerprint());
 }
 
 /// Driving the *same closed-loop workload* through both queue
