@@ -18,6 +18,7 @@ use crate::rpc::backoff::Backoff;
 use crate::sim::station::Station;
 use crate::sim::time;
 use crate::systems::{CacheOutcome, Completion, MetadataService, Outcome, Request};
+use crate::telemetry::{Phase, Span, Timeline, TimelineSample};
 use crate::util::dist::LogNormal;
 use crate::util::rng::Rng;
 
@@ -45,6 +46,8 @@ pub struct CephFs {
     /// Installed chaos plan + dedicated stream; `None` keeps the no-chaos
     /// draw sequence untouched.
     chaos: Option<ChaosState>,
+    /// Armed per-second telemetry sampler (read-only capture, no RNG).
+    timeline: Option<Timeline>,
 }
 
 impl CephFs {
@@ -71,6 +74,7 @@ impl CephFs {
             seed: cfg.seed,
             timeout_ms: cfg.faas.http_timeout_ms,
             chaos: None,
+            timeline: None,
         }
     }
 
@@ -84,10 +88,21 @@ impl MetadataService for CephFs {
         self.chaos = (!plan.is_none()).then(|| ChaosState::new(self.seed, plan));
     }
 
+    /// Arm the per-second sampler (read-only, no RNG draws).
+    fn install_telemetry(&mut self, timeline: Timeline) -> bool {
+        self.timeline = Some(timeline);
+        true
+    }
+
+    fn take_telemetry(&mut self) -> Option<Timeline> {
+        self.timeline.take()
+    }
+
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
         let (mut now, op) = (req.at, req.op);
         let mut local = Rng::new(self.rng.next_u64());
         let mds = self.router.route(&self.ns, op.target) as usize;
+        let mut span = Span::begin(req.at);
         let mut timeouts = 0u32;
         let mut rpc_mult = 1.0;
         if let Some(ch) = self.chaos.as_mut() {
@@ -97,15 +112,15 @@ impl MetadataService for CephFs {
             while ch.plan.lost(chaos::second_of(now), vm, mds as u32, op.kind.is_write()) {
                 timeouts += 1;
                 if backoff.exhausted(attempt) {
-                    return Completion {
-                        done: now,
-                        outcome: Outcome {
+                    return Completion::unstamped(
+                        now,
+                        Outcome {
                             retries: attempt,
                             timeouts,
                             gave_up: true,
                             ..Outcome::warm(mds as u32)
                         },
-                    };
+                    );
                 }
                 now += time::from_ms(self.timeout_ms) + backoff.delay(attempt, &mut ch.rng);
                 attempt += 1;
@@ -114,7 +129,9 @@ impl MetadataService for CephFs {
                 rpc_mult = m.http;
             }
         }
+        span.advance(Phase::Retry, now);
         let arrive = now + time::from_ms(self.rpc.sample(rng) * rpc_mult);
+        span.advance(Phase::Net, arrive);
         let (served, cache) = if op.kind.is_write() || op.kind.is_subtree() {
             // Capability-based write: in-memory update + journal append.
             let factor = if op.kind.is_subtree() {
@@ -123,15 +140,20 @@ impl MetadataService for CephFs {
                 1.0
             };
             let cpu = time::from_ms(self.write_ms * local.range_f64(0.85, 1.2));
-            let (_, cpu_done) = self.mds[mds].submit(arrive, cpu);
+            let (start, cpu_done) = self.mds[mds].submit(arrive, cpu);
+            span.advance(Phase::Queue, start);
+            span.advance(Phase::Exec, cpu_done);
             let j = time::from_ms(self.write_ms * factor * local.range_f64(0.85, 1.2));
             let (_, done) = self.journal.submit(cpu_done, j);
+            span.advance(Phase::Store, done);
             (done, CacheOutcome::Bypass)
         } else {
             // In-memory read served by the MDS (no DB hop at all): the
             // namespace lives in MDS memory, so every read is a hit.
             let cpu = time::from_ms(self.read_ms * local.range_f64(0.85, 1.2));
-            let (_, done) = self.mds[mds].submit(arrive, cpu);
+            let (start, done) = self.mds[mds].submit(arrive, cpu);
+            span.advance(Phase::Queue, start);
+            span.advance(Phase::Exec, done);
             (done, CacheOutcome::Hit)
         };
         let done = served + time::from_ms(self.rpc.sample(rng) * rpc_mult);
@@ -146,6 +168,7 @@ impl MetadataService for CephFs {
                 timeouts,
                 ..Outcome::warm(mds as u32)
             },
+            phases: span.finish(Phase::Net, done),
         }
     }
 
@@ -156,6 +179,13 @@ impl MetadataService for CephFs {
         s.vcpus = self.total_vcpus;
         s.cost_usd = sample.usd;
         s.cost_simplified_usd = sample.usd;
+
+        // Timeline sampling: the fixed MDS cluster is a flat line.
+        if let Some(tl) = self.timeline.as_mut() {
+            let mut sample = TimelineSample::from_metrics(second, &self.metrics);
+            sample.live_per_dep = vec![1; self.mds.len()];
+            tl.push(sample);
+        }
     }
 
     fn metrics_mut(&mut self) -> &mut RunMetrics {

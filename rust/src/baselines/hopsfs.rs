@@ -27,6 +27,7 @@ use crate::sim::station::Station;
 use crate::sim::{time, Time};
 use crate::store::NdbStore;
 use crate::systems::{CacheOutcome, Completion, MetadataService, Outcome, Request};
+use crate::telemetry::{Phase, Span, Timeline, TimelineSample};
 use crate::util::dist::LogNormal;
 use crate::util::rng::Rng;
 
@@ -56,6 +57,8 @@ pub struct HopsFs {
     /// Installed chaos plan + dedicated stream; `None` keeps the no-chaos
     /// draw sequence untouched (every hook below is gated on it).
     chaos: Option<ChaosState>,
+    /// Armed per-second telemetry sampler (read-only capture, no RNG).
+    timeline: Option<Timeline>,
 }
 
 impl HopsFs {
@@ -97,6 +100,7 @@ impl HopsFs {
             total_vcpus,
             rr: 0,
             chaos: None,
+            timeline: None,
         }
     }
 
@@ -137,9 +141,20 @@ impl MetadataService for HopsFs {
         self.chaos = (!plan.is_none()).then(|| ChaosState::new(self.cfg.seed, plan));
     }
 
+    /// Arm the per-second sampler (read-only, no RNG draws).
+    fn install_telemetry(&mut self, timeline: Timeline) -> bool {
+        self.timeline = Some(timeline);
+        true
+    }
+
+    fn take_telemetry(&mut self) -> Option<Timeline> {
+        self.timeline.take()
+    }
+
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
         let (mut now, op) = (req.at, req.op);
         let nn = self.pick_namenode(op);
+        let mut span = Span::begin(req.at);
 
         // Chaos verdict + delay storm, mirroring the λFS client path:
         // lost attempts time out and back off with jitter from the
@@ -155,15 +170,15 @@ impl MetadataService for HopsFs {
             while ch.plan.lost(chaos::second_of(now), vm, nn as u32, op.kind.is_write()) {
                 timeouts += 1;
                 if backoff.exhausted(attempt) {
-                    return Completion {
-                        done: now,
-                        outcome: Outcome {
+                    return Completion::unstamped(
+                        now,
+                        Outcome {
                             retries: attempt,
                             timeouts,
                             gave_up: true,
                             ..Outcome::warm(nn as u32)
                         },
-                    };
+                    );
                 }
                 now += time::from_ms(self.cfg.faas.http_timeout_ms)
                     + backoff.delay(attempt, &mut ch.rng);
@@ -173,7 +188,9 @@ impl MetadataService for HopsFs {
                 rpc_mult = m.http;
             }
         }
+        span.advance(Phase::Retry, now);
         let arrive = now + time::from_ms(self.rpc.sample(rng) * rpc_mult);
+        span.advance(Phase::Net, arrive);
 
         let mut local_rng = Rng::new(self.rng.next_u64());
 
@@ -186,9 +203,10 @@ impl MetadataService for HopsFs {
                 batch: self.cfg.lambda_fs.subtree_batch,
                 parallelism: self.cfg.serverful.vcpus_per_namenode as u32,
             };
-            let done = subtree::execute(arrive, &plan, params, &mut self.store, &mut local_rng)
+            let served = subtree::execute(arrive, &plan, params, &mut self.store, &mut local_rng)
                 .unwrap_or(arrive + time::SEC);
-            let done = done + time::from_ms(self.rpc.sample(rng) * rpc_mult);
+            span.advance(Phase::Store, served);
+            let done = served + time::from_ms(self.rpc.sample(rng) * rpc_mult);
             if self.chaos.is_some()
                 && done.saturating_sub(now) > time::from_ms(self.cfg.faas.http_timeout_ms)
             {
@@ -201,11 +219,14 @@ impl MetadataService for HopsFs {
                     timeouts,
                     ..Outcome::warm(nn as u32)
                 },
+                phases: span.finish(Phase::Net, done),
             };
         }
 
         let cpu = self.nn_service(self.svc.cache_hit(op.kind, &mut local_rng), &mut local_rng);
-        let (_, cpu_done) = self.namenodes[nn].submit(arrive, cpu);
+        let (start, cpu_done) = self.namenodes[nn].submit(arrive, cpu);
+        span.advance(Phase::Queue, start);
+        span.advance(Phase::Exec, cpu_done);
 
         let mut cache_outcome = CacheOutcome::Bypass;
         let served = if op.kind.is_write() {
@@ -259,6 +280,9 @@ impl MetadataService for HopsFs {
             self.store.read_batch(cpu_done, depth, &mut local_rng)
         };
 
+        // Everything past CPU completion is store time (write commit or
+        // miss read); a cache hit leaves this a zero-length segment.
+        span.advance(Phase::Store, served);
         let done = served + time::from_ms(self.rpc.sample(rng) * rpc_mult);
         if self.chaos.is_some()
             && done.saturating_sub(now) > time::from_ms(self.cfg.faas.http_timeout_ms)
@@ -273,6 +297,7 @@ impl MetadataService for HopsFs {
                 timeouts,
                 ..Outcome::warm(nn as u32)
             },
+            phases: span.finish(Phase::Net, done),
         }
     }
 
@@ -285,6 +310,14 @@ impl MetadataService for HopsFs {
         s.vcpus = self.total_vcpus;
         s.cost_usd = sample.usd;
         s.cost_simplified_usd = sample.usd;
+
+        // Timeline sampling (armed runs only): a serverful cluster is a
+        // flat line — one live "instance" per NameNode, nothing warming.
+        if let Some(tl) = self.timeline.as_mut() {
+            let mut sample = TimelineSample::from_metrics(second, &self.metrics);
+            sample.live_per_dep = vec![1; self.namenodes.len()];
+            tl.push(sample);
+        }
     }
 
     fn metrics_mut(&mut self) -> &mut RunMetrics {

@@ -22,6 +22,7 @@ use crate::sim::station::Station;
 use crate::sim::{time, Time};
 use crate::store::sstable::{SsTableConfig, SsTableStore};
 use crate::systems::{CacheOutcome, Completion, MetadataService, Outcome, Request};
+use crate::telemetry::{Phase, Span, Timeline, TimelineSample};
 use crate::util::dist::LogNormal;
 use crate::util::rng::Rng;
 
@@ -37,6 +38,8 @@ pub struct IndexFs {
     cost: CostModel,
     rng: Rng,
     total_vcpus: f64,
+    /// Armed per-second telemetry sampler (read-only capture, no RNG).
+    timeline: Option<Timeline>,
 }
 
 impl IndexFs {
@@ -66,19 +69,34 @@ impl IndexFs {
             cost: CostModel::new(cfg.cost.clone()),
             rng: Rng::new(cfg.seed ^ 0x1df5),
             total_vcpus,
+            timeline: None,
         }
     }
 }
 
 impl MetadataService for IndexFs {
+    /// Arm the per-second sampler (read-only, no RNG draws).
+    fn install_telemetry(&mut self, timeline: Timeline) -> bool {
+        self.timeline = Some(timeline);
+        true
+    }
+
+    fn take_telemetry(&mut self) -> Option<Timeline> {
+        self.timeline.take()
+    }
+
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
         let (now, op) = (req.at, req.op);
         let mut local = Rng::new(self.rng.next_u64());
         let srv = self.router.route(&self.ns, op.target) as usize;
+        let mut span = Span::begin(req.at);
         let arrive = now + time::from_ms(self.rpc.sample(rng));
+        span.advance(Phase::Net, arrive);
         let (station, store) = &mut self.servers[srv];
         let cpu = time::from_ms(0.08 * local.range_f64(0.85, 1.2));
-        let (_, cpu_done) = station.submit(arrive, cpu);
+        let (start, cpu_done) = station.submit(arrive, cpu);
+        span.advance(Phase::Queue, start);
+        span.advance(Phase::Exec, cpu_done);
         let (served, cache) = if op.kind.is_write() {
             (store.append(cpu_done, op.target, &mut local), CacheOutcome::Bypass)
         } else {
@@ -89,13 +107,16 @@ impl MetadataService for IndexFs {
             let (done, _) = store.get(cpu_done, op.target, &mut local);
             (done, CacheOutcome::Miss)
         };
+        span.advance(Phase::Store, served);
+        let done = served + time::from_ms(self.rpc.sample(rng));
         Completion {
-            done: served + time::from_ms(self.rpc.sample(rng)),
+            done,
             outcome: Outcome {
                 cache,
                 cost_us: served.saturating_sub(arrive),
                 ..Outcome::warm(srv as u32)
             },
+            phases: span.finish(Phase::Net, done),
         }
     }
 
@@ -106,6 +127,13 @@ impl MetadataService for IndexFs {
         s.vcpus = self.total_vcpus;
         s.cost_usd = sample.usd;
         s.cost_simplified_usd = sample.usd;
+
+        // Timeline sampling: fixed co-located server fleet — flat line.
+        if let Some(tl) = self.timeline.as_mut() {
+            let mut sample = TimelineSample::from_metrics(second, &self.metrics);
+            sample.live_per_dep = vec![1; self.servers.len()];
+            tl.push(sample);
+        }
     }
 
     fn metrics_mut(&mut self) -> &mut RunMetrics {
@@ -139,6 +167,8 @@ pub struct LambdaIndexFs {
     /// Per-(vm-less) client TCP availability: λIndexFS reuses λFS' hybrid
     /// RPC, modeled as warm-after-first-contact per deployment.
     warm_deps: Vec<bool>,
+    /// Armed per-second telemetry sampler (read-only capture, no RNG).
+    timeline: Option<Timeline>,
 }
 
 impl LambdaIndexFs {
@@ -180,6 +210,7 @@ impl LambdaIndexFs {
             rng,
             billed_gb_s: 0.0,
             billed_requests: 0,
+            timeline: None,
         }
     }
 
@@ -189,10 +220,21 @@ impl LambdaIndexFs {
 }
 
 impl MetadataService for LambdaIndexFs {
+    /// Arm the per-second sampler (read-only, no RNG draws).
+    fn install_telemetry(&mut self, timeline: Timeline) -> bool {
+        self.timeline = Some(timeline);
+        true
+    }
+
+    fn take_telemetry(&mut self) -> Option<Timeline> {
+        self.timeline.take()
+    }
+
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
         let (now, op) = (req.at, req.op);
         let mut local = Rng::new(self.rng.next_u64());
         let dep = self.router.route(&self.ns, op.target);
+        let mut span = Span::begin(req.at);
 
         // Hybrid RPC: once a deployment has served over HTTP, clients keep
         // TCP connections to it (modeled per deployment), with the λFS
@@ -203,18 +245,25 @@ impl MetadataService for LambdaIndexFs {
 
         let (inst, arrive, cold_start) = if tcp_ok {
             let i = self.platform.warm_instance(dep, now).unwrap();
-            (i, now + self.net.tcp_hop(rng), false)
+            let arrive = now + self.net.tcp_hop(rng);
+            span.advance(Phase::Net, arrive);
+            (i, arrive, false)
         } else {
             let gw = self.platform.gateway_admit(now, rng);
             let leg = self.net.http_leg(rng);
             let (i, ready, cold) = self.platform.place_http_traced(dep, now, rng);
             self.warm_deps[dep as usize] = true;
-            (i, ready.max(gw + leg), cold)
+            let arrive = ready.max(gw + leg);
+            span.advance(Phase::Net, gw + leg);
+            span.advance(if cold { Phase::ColdStart } else { Phase::Queue }, arrive);
+            (i, arrive, cold)
         };
         self.caches.ensure(inst);
 
         let cpu = self.svc.cache_hit(op.kind, &mut local);
-        let (_, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
+        let (start, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
+        span.advance(Phase::Queue, start);
+        span.advance(Phase::Exec, cpu_done);
 
         let (served, cache) = if op.kind.is_write() {
             // mknod: append to LevelDB; invalidate peers in the deployment
@@ -229,16 +278,18 @@ impl MetadataService for LambdaIndexFs {
             self.caches.cache_mut(inst).insert_version(op.target, 1);
             (done, CacheOutcome::Miss)
         };
+        span.advance(Phase::Store, served);
         self.platform.bill(inst, arrive, served);
+        let done = served + self.net.tcp_hop(rng);
         Completion {
-            done: served + self.net.tcp_hop(rng),
+            done,
             outcome: Outcome {
                 cold_start,
                 cache,
-                retries: 0,
-                server: dep,
                 cost_us: served.saturating_sub(arrive),
+                ..Outcome::warm(dep)
             },
+            phases: span.finish(Phase::Net, done),
         }
     }
 
@@ -257,6 +308,16 @@ impl MetadataService for LambdaIndexFs {
         s.vcpus = self.platform.vcpus_in_use();
         s.cost_usd = sample.usd;
         s.cost_simplified_usd = sample.usd;
+
+        // Timeline sampling: per-deployment function counts.
+        if let Some(tl) = self.timeline.as_mut() {
+            let mut sample = TimelineSample::from_metrics(second, &self.metrics);
+            sample.live_per_dep = (0..self.platform.n_deployments())
+                .map(|d| self.platform.live_in_deployment(d))
+                .collect();
+            sample.warm = self.platform.starting_instances(now);
+            tl.push(sample);
+        }
     }
 
     fn metrics_mut(&mut self) -> &mut RunMetrics {

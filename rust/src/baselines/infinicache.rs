@@ -18,6 +18,7 @@ use crate::rpc::NetModel;
 use crate::sim::{time, Time};
 use crate::store::NdbStore;
 use crate::systems::{CacheOutcome, Completion, MetadataService, Outcome, Request};
+use crate::telemetry::{Phase, Span, Timeline, TimelineSample};
 use crate::util::rng::Rng;
 
 /// InfiniCache pressed into MDS service.
@@ -37,6 +38,8 @@ pub struct InfiniCacheMds {
     rng: Rng,
     billed_gb_s: f64,
     billed_requests: u64,
+    /// Armed per-second telemetry sampler (read-only capture, no RNG).
+    timeline: Option<Timeline>,
 }
 
 impl InfiniCacheMds {
@@ -77,6 +80,7 @@ impl InfiniCacheMds {
             rng,
             billed_gb_s: 0.0,
             billed_requests: 0,
+            timeline: None,
         }
     }
 
@@ -86,10 +90,21 @@ impl InfiniCacheMds {
 }
 
 impl MetadataService for InfiniCacheMds {
+    /// Arm the per-second sampler (read-only, no RNG draws).
+    fn install_telemetry(&mut self, timeline: Timeline) -> bool {
+        self.timeline = Some(timeline);
+        true
+    }
+
+    fn take_telemetry(&mut self) -> Option<Timeline> {
+        self.timeline.take()
+    }
+
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
         let (now, op) = (req.at, req.op);
         let mut local_rng = Rng::new(self.rng.next_u64());
         let dep = self.router.route(&self.ns, op.target);
+        let mut span = Span::begin(req.at);
 
         // EVERY operation is an HTTP invocation + short-lived TCP:
         // gateway queueing + invocation leg + per-op connection setup.
@@ -97,11 +112,16 @@ impl MetadataService for InfiniCacheMds {
         let leg = self.net.http_leg(rng);
         let (inst, ready, cold_start) = self.platform.place_http_traced(dep, now, rng);
         self.caches.ensure(inst);
+        span.advance(Phase::Net, gw_done + leg);
+        span.advance(if cold_start { Phase::ColdStart } else { Phase::Queue }, ready);
         let arrive = ready.max(gw_done + leg) + self.net.tcp_connect(rng);
+        span.advance(Phase::Net, arrive);
 
         let hit = self.caches.cache_mut(inst).get(op.target).is_some();
         let cpu = self.svc.cache_hit(op.kind, &mut local_rng);
-        let (_, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
+        let (start, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
+        span.advance(Phase::Queue, start);
+        span.advance(Phase::Exec, cpu_done);
         let (served, cache) = if op.kind.is_write() {
             let commit = self.store.write_txn(cpu_done, &[op.target], false, &mut local_rng);
             self.caches.cache_mut(inst).invalidate(op.target);
@@ -115,16 +135,18 @@ impl MetadataService for InfiniCacheMds {
             self.caches.cache_mut(inst).insert_version(op.target, v);
             (done, CacheOutcome::Miss)
         };
+        span.advance(Phase::Store, served);
         self.platform.bill(inst, arrive, served);
+        let done = served + self.net.tcp_hop(rng);
         Completion {
-            done: served + self.net.tcp_hop(rng),
+            done,
             outcome: Outcome {
                 cold_start,
                 cache,
-                retries: 0,
-                server: dep,
                 cost_us: served.saturating_sub(arrive),
+                ..Outcome::warm(dep)
             },
+            phases: span.finish(Phase::Net, done),
         }
     }
 
@@ -143,6 +165,16 @@ impl MetadataService for InfiniCacheMds {
         s.vcpus = self.platform.vcpus_in_use();
         s.cost_usd = sample.usd;
         s.cost_simplified_usd = sample.usd;
+
+        // Timeline sampling: the static fleet, one instance per shard.
+        if let Some(tl) = self.timeline.as_mut() {
+            let mut sample = TimelineSample::from_metrics(second, &self.metrics);
+            sample.live_per_dep = (0..self.platform.n_deployments())
+                .map(|d| self.platform.live_in_deployment(d))
+                .collect();
+            sample.warm = self.platform.starting_instances(now);
+            tl.push(sample);
+        }
     }
 
     fn metrics_mut(&mut self) -> &mut RunMetrics {

@@ -386,6 +386,27 @@ impl Platform {
         self.live_total as usize
     }
 
+    /// Live instances of one deployment — the per-second telemetry
+    /// gauge. Walks the deployment's intrusive list: O(live in dep).
+    pub fn live_in_deployment(&self, dep: u32) -> u32 {
+        self.deployment_instances(dep).count() as u32
+    }
+
+    /// Live instances still inside their cold start at `now` — the
+    /// "provisioned, not yet serving" pool the timeline sampler reports.
+    pub fn starting_instances(&self, now: Time) -> u32 {
+        let mut n = 0;
+        let mut s = self.live_head;
+        while s != NIL {
+            let si = s as usize;
+            if self.ready_at[si] > now {
+                n += 1;
+            }
+            s = self.live_next[si];
+        }
+        n
+    }
+
     /// The instance for a live id; `None` for a stale id (killed, or
     /// killed-and-recycled — the generation check rejects it either way).
     pub fn get(&self, id: InstanceId) -> Option<&Instance> {

@@ -63,7 +63,15 @@ pub struct Fixture {
 /// Build the standard fixture at a scale. `vcpus` caps both λFS' FaaS
 /// budget and the serverful clusters.
 pub fn fixture(scale: Scale, vcpus: f64) -> Fixture {
+    fixture_seeded(scale, vcpus, SystemConfig::default().seed)
+}
+
+/// [`fixture`] with an explicit seed: every stream (namespace, sampler,
+/// driver forks, system seeds) keys off `seed` instead of the config
+/// default. `lambdafs observe --seed` routes through this.
+pub fn fixture_seeded(scale: Scale, vcpus: f64, seed: u64) -> Fixture {
     let mut cfg = SystemConfig::default();
+    cfg.seed = seed;
     cfg.faas.vcpu_limit = vcpus;
     // Scale the deployment count with the resource budget so the
     // namespace partitioning : instance-slot ratio matches the paper's
@@ -152,6 +160,64 @@ pub fn outcome_cells(m: &crate::metrics::RunMetrics) -> [String; 5] {
 /// Header labels matching [`outcome_cells`].
 pub const OUTCOME_HEADER: [&str; 5] = ["hit_%", "cold", "retries", "t_out", "gaveup"];
 
+/// The one per-system summary row every figure table prints: throughput,
+/// latency, cost, the dominant phase of the span ledger with its p50/p99,
+/// then the outcome columns. Pair with [`SUMMARY_HEADER`]; render via
+/// [`print_summary`]. Keeping fig08/fig11/fig14/fig15 on this single
+/// builder is what makes their tables column-compatible.
+pub const SUMMARY_HEADER: [&str; 17] = [
+    "system",
+    "avg_tput",
+    "peak_tput",
+    "avg_lat_ms",
+    "read_ms",
+    "write_ms",
+    "cost_$",
+    "peak_NNs",
+    "perf/cost",
+    "dom_phase",
+    "dom_p50_us",
+    "dom_p99_us",
+    OUTCOME_HEADER[0],
+    OUTCOME_HEADER[1],
+    OUTCOME_HEADER[2],
+    OUTCOME_HEADER[3],
+    OUTCOME_HEADER[4],
+];
+
+/// Build the [`SUMMARY_HEADER`] row for one system's run.
+pub fn summary_row(name: &str, m: &crate::metrics::RunMetrics) -> Vec<String> {
+    let (dom, p50, p99) = match m.dominant_phase() {
+        Some(p) => {
+            let h = m.phase_hist(p);
+            (p.name().to_string(), format!("{:.1}", h.p50()), format!("{:.1}", h.p99()))
+        }
+        // Mocked or unstamped runs have an empty phase ledger.
+        None => ("-".to_string(), "-".to_string(), "-".to_string()),
+    };
+    let mut cells = vec![
+        name.to_string(),
+        f0(m.avg_throughput()),
+        f0(m.peak_throughput()),
+        f2(m.avg_latency_ms()),
+        f2(m.avg_read_latency_ms()),
+        f2(m.avg_write_latency_ms()),
+        f4(m.total_cost()),
+        f0(m.peak_namenodes() as f64),
+        f0(m.performance_per_cost()),
+        dom,
+        p50,
+        p99,
+    ];
+    cells.extend(outcome_cells(m));
+    cells
+}
+
+/// Render [`summary_row`]s under the shared header.
+pub fn print_summary(title: &str, rows: &[Vec<String>]) {
+    print_table(title, &SUMMARY_HEADER, rows);
+}
+
 /// Format helpers.
 pub fn f0(x: f64) -> String {
     format!("{x:.0}")
@@ -185,6 +251,21 @@ mod tests {
         assert_eq!(s.clients(1024), 1024);
         assert_eq!(s.vcpus(512.0), 512.0);
         assert_eq!(s.duration_s(), 300);
+    }
+
+    #[test]
+    fn summary_row_matches_header() {
+        let mut m = crate::metrics::RunMetrics::new();
+        m.record(0, 1.0, false);
+        let row = summary_row("x", &m);
+        assert_eq!(row.len(), SUMMARY_HEADER.len());
+        assert_eq!(row[9], "-", "unstamped run has no dominant phase");
+    }
+
+    #[test]
+    fn fixture_seeded_threads_the_seed() {
+        let f = fixture_seeded(Scale(0.01), 96.0, 42);
+        assert_eq!(f.cfg.seed, 42);
     }
 
     #[test]

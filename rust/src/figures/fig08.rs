@@ -110,41 +110,10 @@ impl Fig8 {
         let rows: Vec<Vec<String>> = self
             .outcomes
             .iter()
-            .map(|o| {
-                let m = &o.metrics;
-                let mut cells = vec![
-                    o.name.to_string(),
-                    common::f0(m.avg_throughput()),
-                    common::f0(m.peak_throughput()),
-                    common::f2(m.avg_latency_ms()),
-                    common::f2(m.avg_read_latency_ms()),
-                    common::f2(m.avg_write_latency_ms()),
-                    common::f4(m.total_cost()),
-                    common::f0(m.peak_namenodes() as f64),
-                    common::f0(m.performance_per_cost()),
-                ];
-                cells.extend(common::outcome_cells(m));
-                cells
-            })
+            .map(|o| common::summary_row(o.name, &o.metrics))
             .collect();
-        common::print_table(
+        common::print_summary(
             &format!("Figure 8 ({label}): Spotify x_t={:.0} ops/s", self.x_t),
-            &[
-                "system",
-                "avg_tput",
-                "peak_tput",
-                "avg_lat_ms",
-                "read_ms",
-                "write_ms",
-                "cost_$",
-                "peak_NNs",
-                "perf/cost",
-                common::OUTCOME_HEADER[0],
-                common::OUTCOME_HEADER[1],
-                common::OUTCOME_HEADER[2],
-                common::OUTCOME_HEADER[3],
-                common::OUTCOME_HEADER[4],
-            ],
             &rows,
         );
 

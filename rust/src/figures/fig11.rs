@@ -33,6 +33,9 @@ pub struct Fig11 {
     pub kind: OpKind,
     /// (clients, per-system points) in the order of [`SYSTEMS`].
     pub rows: Vec<(u32, Vec<SysPoint>)>,
+    /// Full ledgers at the largest client count, in [`SYSTEMS`] order —
+    /// feeds the shared per-system summary table.
+    pub finals: Vec<RunMetrics>,
 }
 
 pub const SYSTEMS: [&str; 5] = ["lambdafs", "hopsfs", "hopsfs+cache", "infinicache", "cephfs"];
@@ -55,7 +58,10 @@ pub fn run(scale: Scale, kind: OpKind) -> Fig11 {
     let ops_per_client = ((3_072.0 * scale.0 * 8.0) as u32).clamp(256, 3_072);
 
     let mut rows = Vec::new();
-    for &n_clients in &client_sizes(scale) {
+    let mut finals = Vec::new();
+    let sizes = client_sizes(scale);
+    let largest = *sizes.last().unwrap();
+    for &n_clients in &sizes {
         let spec = ClosedLoopSpec {
             kind,
             n_clients,
@@ -73,39 +79,59 @@ pub fn run(scale: Scale, kind: OpKind) -> Fig11 {
             sys.prewarm(1);
             let mut r = rng.fork(&format!("lfs{n_clients}"));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-            points.push(SysPoint::from_metrics(&sys.into_metrics()));
+            let m = sys.into_metrics();
+            points.push(SysPoint::from_metrics(&m));
+            if n_clients == largest {
+                finals.push(m);
+            }
         }
         // HopsFS
         {
             let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, false);
             let mut r = rng.fork(&format!("hops{n_clients}"));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-            points.push(SysPoint::from_metrics(&sys.into_metrics()));
+            let m = sys.into_metrics();
+            points.push(SysPoint::from_metrics(&m));
+            if n_clients == largest {
+                finals.push(m);
+            }
         }
         // HopsFS+Cache
         {
             let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, true);
             let mut r = rng.fork(&format!("hopsc{n_clients}"));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-            points.push(SysPoint::from_metrics(&sys.into_metrics()));
+            let m = sys.into_metrics();
+            points.push(SysPoint::from_metrics(&m));
+            if n_clients == largest {
+                finals.push(m);
+            }
         }
         // InfiniCache
         {
             let mut sys = InfiniCacheMds::new(cfg.clone(), ns.clone(), 16);
             let mut r = rng.fork(&format!("inf{n_clients}"));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-            points.push(SysPoint::from_metrics(&sys.into_metrics()));
+            let m = sys.into_metrics();
+            points.push(SysPoint::from_metrics(&m));
+            if n_clients == largest {
+                finals.push(m);
+            }
         }
         // CephFS
         {
             let mut sys = CephFs::new(cfg.clone(), ns.clone(), vcpus);
             let mut r = rng.fork(&format!("ceph{n_clients}"));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-            points.push(SysPoint::from_metrics(&sys.into_metrics()));
+            let m = sys.into_metrics();
+            points.push(SysPoint::from_metrics(&m));
+            if n_clients == largest {
+                finals.push(m);
+            }
         }
         rows.push((n_clients, points));
     }
-    Fig11 { kind, rows }
+    Fig11 { kind, rows, finals }
 }
 
 impl Fig11 {
@@ -156,6 +182,18 @@ impl Fig11 {
             })
             .collect();
         common::write_csv(&format!("fig11_{}.csv", self.kind.name()), &csv_header, &csv);
+        // Shared per-system summary (same columns as fig08/fig14/fig15)
+        // at the largest client count.
+        let (largest, _) = self.rows.last().unwrap();
+        let summary: Vec<Vec<String>> = SYSTEMS
+            .iter()
+            .zip(&self.finals)
+            .map(|(name, m)| common::summary_row(name, m))
+            .collect();
+        common::print_summary(
+            &format!("Figure 11 summary: op={}, {largest} clients", self.kind.name()),
+            &summary,
+        );
     }
 
     /// Throughput of `system` at the largest client count.

@@ -2,6 +2,7 @@
 //! per deployment) / disabled (1 instance), per-op-kind throughput.
 
 use crate::config::AutoScaleMode;
+use crate::metrics::RunMetrics;
 use crate::namespace::OpKind;
 use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::workload::ClosedLoopSpec;
@@ -21,6 +22,9 @@ pub struct ModeOutcome {
 pub struct Fig14 {
     /// (op, enabled, limited, disabled).
     pub rows: Vec<(OpKind, ModeOutcome, ModeOutcome, ModeOutcome)>,
+    /// Full ledgers for the Read row's three modes — feeds the shared
+    /// per-system summary table.
+    pub read_modes: Vec<(&'static str, RunMetrics)>,
 }
 
 pub fn run(scale: Scale) -> Fig14 {
@@ -30,6 +34,7 @@ pub fn run(scale: Scale) -> Fig14 {
     let ops_per_client = ((3_072.0 * scale.0 * 8.0) as u32).clamp(256, 1_024);
 
     let mut rows = Vec::new();
+    let mut read_modes = Vec::new();
     for kind in [OpKind::Read, OpKind::Stat, OpKind::Ls, OpKind::Create, OpKind::Mkdir] {
         let spec = ClosedLoopSpec {
             kind,
@@ -47,14 +52,21 @@ pub fn run(scale: Scale) -> Fig14 {
             let mut r = rng.fork(&format!("{tag}{}", kind.name()));
             driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
             let m = sys.into_metrics();
-            ModeOutcome { tput: m.sustained_throughput(), cold_starts: m.cold_starts }
+            (ModeOutcome { tput: m.sustained_throughput(), cold_starts: m.cold_starts }, m)
         };
-        let enabled = run_mode(AutoScaleMode::Enabled, "en", &mut rng);
-        let limited = run_mode(AutoScaleMode::Limited(3), "lim", &mut rng);
-        let disabled = run_mode(AutoScaleMode::Disabled, "dis", &mut rng);
+        let (enabled, m_en) = run_mode(AutoScaleMode::Enabled, "en", &mut rng);
+        let (limited, m_lim) = run_mode(AutoScaleMode::Limited(3), "lim", &mut rng);
+        let (disabled, m_dis) = run_mode(AutoScaleMode::Disabled, "dis", &mut rng);
+        if kind == OpKind::Read {
+            read_modes = vec![
+                ("lambdafs-as-enabled", m_en),
+                ("lambdafs-as-limited", m_lim),
+                ("lambdafs-as-disabled", m_dis),
+            ];
+        }
         rows.push((kind, enabled, limited, disabled));
     }
-    Fig14 { rows }
+    Fig14 { rows, read_modes }
 }
 
 impl Fig14 {
@@ -105,6 +117,14 @@ impl Fig14 {
             "op,enabled,limited,disabled,cold_enabled,cold_limited,cold_disabled",
             &csv,
         );
+        // Shared per-system summary (same columns as fig08/fig11/fig15)
+        // over the Read row's three ablation modes.
+        let summary: Vec<Vec<String>> = self
+            .read_modes
+            .iter()
+            .map(|(name, m)| common::summary_row(name, m))
+            .collect();
+        common::print_summary("Figure 14 summary: Read-row ablation modes", &summary);
     }
 
     pub fn row(&self, kind: OpKind) -> (f64, f64, f64) {

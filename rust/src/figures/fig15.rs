@@ -7,6 +7,7 @@
 //! in its header — rather than a bespoke scheduling loop.
 
 use crate::chaos::{ChaosPlan, KillEvent};
+use crate::metrics::RunMetrics;
 use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::workload::OpenLoopSpec;
 
@@ -27,6 +28,8 @@ pub struct Fig15 {
     /// neither: the fleet absorbs the churn).
     pub timeouts: u64,
     pub gave_up: u64,
+    /// The full run ledger — feeds the shared per-system summary table.
+    pub metrics: RunMetrics,
 }
 
 pub fn run(scale: Scale) -> Fig15 {
@@ -93,6 +96,7 @@ pub fn run(scale: Scale) -> Fig15 {
         retries: m.total_retries(),
         timeouts: m.timeouts,
         gave_up: m.gave_up,
+        metrics: m,
     }
 }
 
@@ -124,6 +128,11 @@ impl Fig15 {
             .map(|(s, c, t, n)| format!("{s},{c},{t},{n}"))
             .collect();
         common::write_csv("fig15_fault_tolerance.csv", "second,completed,target,namenodes", &csv);
+        // Shared per-system summary (same columns as fig08/fig11/fig14).
+        common::print_summary(
+            "Figure 15 summary: λFS under the kill schedule",
+            &[common::summary_row("lambdafs-under-kills", &self.metrics)],
+        );
     }
 }
 

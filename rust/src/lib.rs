@@ -41,6 +41,7 @@ pub mod scaling;
 pub mod sim;
 pub mod store;
 pub mod systems;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 pub mod workload;

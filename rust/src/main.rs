@@ -11,6 +11,9 @@
 //! * `scenario`  — run the (system × workload × scale) trace matrix —
 //!   replayed Spotify + ML-pipeline + container-churn across λFS and the
 //!   baselines — and write `SCENARIOS.json`.
+//! * `observe`   — run one instrumented Spotify λFS experiment with the
+//!   timeline sampler armed and export a Perfetto-loadable Chrome
+//!   trace (`--out trace.json`).
 //! * `route`     — route paths through the compiled PJRT kernel
 //!   (demonstrates the AOT artifacts on the request path).
 //! * `selftest`  — quick end-to-end smoke run.
@@ -53,6 +56,8 @@ fn usage() {
            subtree  [--files 262144]                 one subtree mv, λFS vs HopsFS\n\
            scenario [--smoke] [--out SCENARIOS.json] trace matrix: replayed Spotify,\n\
                                                      ML-pipeline, container-churn\n\
+           observe  [--smoke] [--out trace.json]     instrumented Spotify run ->\n\
+                                                     Perfetto trace-event JSON\n\
            route    <path> [path..] [--deployments 16]  PJRT routing kernel demo\n\
            selftest                                   quick smoke run",
         lambda_fs::VERSION
@@ -112,6 +117,17 @@ fn run(args: &Args) -> Result<(), String> {
             report.print();
             report.write_json(&out)?;
             println!("\nwrote {out}");
+            Ok(())
+        }
+        "observe" => {
+            let cfg = load_config(args)?;
+            let smoke = args.flag("smoke");
+            let sc = Scale(if smoke { 0.01 } else { scale.0 });
+            let out = args.get_or("out", "trace.json");
+            let report = lambda_fs::telemetry::observe::run(sc, cfg.seed);
+            report.print();
+            std::fs::write(&out, &report.json).map_err(|e| format!("{out}: {e}"))?;
+            println!("\nwrote {out} ({} bytes)", report.json.len());
             Ok(())
         }
         "route" => {

@@ -1,6 +1,7 @@
 //! Per-run metrics: everything a figure needs from one workload execution.
 
 use crate::systems::{CacheOutcome, Outcome};
+use crate::telemetry::{Phase, PhaseBreakdown, N_PHASES};
 use crate::util::hist::Histogram;
 
 /// Retry-count histogram width: bucket `i` counts ops that needed `i`
@@ -69,6 +70,13 @@ pub struct RunMetrics {
     /// `failed_ops`). Conservation: `completed_ops + gave_up` equals the
     /// submitted op count on runs without other failure modes.
     pub gave_up: u64,
+    /// Per-phase latency histograms, indexed by
+    /// [`Phase::index`]: where completed ops' end-to-end
+    /// latency went (queue/cold/net/exec/coherence/store/retry µs). The
+    /// drivers fold every stamped [`PhaseBreakdown`] here; the per-op
+    /// conservation `sum(phases) == latency` (asserted at the fold)
+    /// lifts to `sum of phase sums == all_lat sum` run-wide.
+    pub phase_lat: [Histogram; N_PHASES],
 }
 
 impl Default for RunMetrics {
@@ -100,6 +108,100 @@ impl RunMetrics {
             attributed_cost_us: 0,
             timeouts: 0,
             gave_up: 0,
+            phase_lat: std::array::from_fn(|_| Histogram::new()),
+        }
+    }
+
+    /// Fold one stamped [`PhaseBreakdown`] into the per-phase
+    /// histograms. Every phase is recorded (zeros included), so each
+    /// phase histogram's count equals the number of stamped ops and its
+    /// percentiles are over *all* ops, not just the ops that touched
+    /// the phase.
+    pub fn record_phases(&mut self, ph: &PhaseBreakdown) {
+        for (h, &us) in self.phase_lat.iter_mut().zip(ph.as_array()) {
+            h.record_us(us);
+        }
+    }
+
+    /// The latency histogram of one phase.
+    pub fn phase_hist(&self, p: Phase) -> &Histogram {
+        &self.phase_lat[p.index()]
+    }
+
+    /// Fraction of all attributed latency spent in `p` (0 when no op
+    /// was stamped).
+    pub fn phase_share(&self, p: Phase) -> f64 {
+        let total: u64 = self.phase_lat.iter().map(|h| h.sum_us()).sum();
+        if total == 0 {
+            0.0
+        } else {
+            self.phase_lat[p.index()].sum_us() as f64 / total as f64
+        }
+    }
+
+    /// The phase holding the largest share of attributed latency; `None`
+    /// when nothing was stamped. Ties break toward the earlier phase in
+    /// [`Phase::ALL`] order (deterministic).
+    pub fn dominant_phase(&self) -> Option<Phase> {
+        let mut best: Option<(Phase, u64)> = None;
+        for p in Phase::ALL {
+            let sum = self.phase_lat[p.index()].sum_us();
+            if sum > 0 && best.map(|(_, b)| sum > b).unwrap_or(true) {
+                best = Some((p, sum));
+            }
+        }
+        best.map(|(p, _)| p)
+    }
+
+    /// Merge another run's metrics into this one — the fold sharded
+    /// simulation needs (ROADMAP item 1): shards run disjoint portions
+    /// of a workload and their ledgers combine associatively.
+    ///
+    /// Policy per field class:
+    /// * counters (ops, outcomes, retry/phase/latency histograms,
+    ///   per-deployment vecs) add;
+    /// * the per-second series adds element-wise, extending to the
+    ///   longer run — gauges (`namenodes`, `vcpus`) sum because shards
+    ///   model disjoint fleets, as do both cost series;
+    /// * `first/last_completion_us` take min/max.
+    pub fn merge(&mut self, other: &RunMetrics) {
+        while self.seconds.len() < other.seconds.len() {
+            self.seconds.push(SecondSample::default());
+        }
+        for (a, b) in self.seconds.iter_mut().zip(&other.seconds) {
+            a.completed += b.completed;
+            a.target += b.target;
+            a.namenodes += b.namenodes;
+            a.vcpus += b.vcpus;
+            a.cost_usd += b.cost_usd;
+            a.cost_simplified_usd += b.cost_simplified_usd;
+        }
+        self.read_lat.merge(&other.read_lat);
+        self.write_lat.merge(&other.write_lat);
+        self.all_lat.merge(&other.all_lat);
+        self.completed_ops += other.completed_ops;
+        self.failed_ops += other.failed_ops;
+        self.resubmissions += other.resubmissions;
+        self.first_completion_us = self.first_completion_us.min(other.first_completion_us);
+        self.last_completion_us = self.last_completion_us.max(other.last_completion_us);
+        self.cold_starts += other.cold_starts;
+        self.warm_ops += other.warm_ops;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        for (a, b) in self.retry_hist.iter_mut().zip(&other.retry_hist) {
+            *a += b;
+        }
+        if self.per_deployment_ops.len() < other.per_deployment_ops.len() {
+            self.per_deployment_ops.resize(other.per_deployment_ops.len(), 0);
+        }
+        for (a, b) in self.per_deployment_ops.iter_mut().zip(&other.per_deployment_ops) {
+            *a += b;
+        }
+        self.attributed_cost_us += other.attributed_cost_us;
+        self.timeouts += other.timeouts;
+        self.gave_up += other.gave_up;
+        for (a, b) in self.phase_lat.iter_mut().zip(&other.phase_lat) {
+            a.merge(b);
         }
     }
 
@@ -312,6 +414,16 @@ impl RunMetrics {
             h.write_u64(self.timeouts);
             h.write_u64(self.gave_up);
         }
+        // Phase histograms fold in only when some op was stamped (the
+        // same pattern): unstamped runs — mocks, empty ledgers — keep
+        // their historical digests, while real systems (which always
+        // stamp) pin the full phase attribution under the determinism
+        // contract.
+        if self.phase_lat.iter().any(|p| p.count() != 0) {
+            for p in &self.phase_lat {
+                h.write_u64(p.fingerprint());
+            }
+        }
         h.finish()
     }
 }
@@ -439,6 +551,116 @@ mod tests {
         with.gave_up = 1;
         assert_ne!(ofp, with.outcome_fingerprint(), "chaos counters are digested");
         assert_eq!(ofp, m.outcome_fingerprint(), "zero counters keep the historical digest");
+    }
+
+    #[test]
+    fn phase_fold_conserves_and_digests_conditionally() {
+        use crate::telemetry::{Phase, Span};
+        let mut m = RunMetrics::new();
+        m.record_at_us(1_000_000, 900, false);
+        let ofp_unstamped = m.outcome_fingerprint();
+        assert!(m.dominant_phase().is_none(), "nothing stamped yet");
+
+        let mut sp = Span::begin(0);
+        sp.advance(Phase::Net, 200);
+        sp.advance(Phase::Queue, 300);
+        sp.advance(Phase::Exec, 600);
+        let ph = sp.finish(Phase::Store, 900);
+        m.record_phases(&ph);
+        // Per-op conservation lifts to the run-wide sums.
+        let phase_sum: u64 = m.phase_lat.iter().map(|h| h.sum_us()).sum();
+        assert_eq!(phase_sum, m.all_lat.sum_us());
+        for p in Phase::ALL {
+            assert_eq!(m.phase_hist(p).count(), 1, "zeros recorded too");
+        }
+        assert_eq!(m.dominant_phase(), Some(Phase::Exec));
+        assert!((m.phase_share(Phase::Exec) - 300.0 / 900.0).abs() < 1e-12);
+        assert!((m.phase_share(Phase::Coherence)).abs() < 1e-12);
+        // Stamping changes the outcome digest but never the base one.
+        assert_ne!(m.outcome_fingerprint(), ofp_unstamped);
+        let base = m.fingerprint();
+        m.record_phases(&ph);
+        assert_eq!(m.fingerprint(), base, "base fingerprint ignores phases");
+    }
+
+    #[test]
+    fn merge_combines_all_ledgers() {
+        use crate::systems::{CacheOutcome, Outcome};
+        use crate::telemetry::{Phase, Span};
+        let stamp = |m: &mut RunMetrics, at: u64, lat: u64, write: bool, o: &Outcome| {
+            m.record_at_us(at, lat, write);
+            m.record_outcome(o);
+            let mut sp = Span::begin(at - lat);
+            sp.advance(Phase::Net, at - lat / 2);
+            m.record_phases(&sp.finish(Phase::Exec, at));
+        };
+        let cold = Outcome {
+            cold_start: true,
+            cache: CacheOutcome::Miss,
+            retries: 1,
+            server: 2,
+            cost_us: 100,
+            timeouts: 1,
+            gave_up: false,
+        };
+        let mut a = RunMetrics::new();
+        stamp(&mut a, 500_000, 1_000, false, &Outcome::warm(0));
+        a.second_mut(0).target = 10;
+        a.second_mut(0).namenodes = 3;
+        a.second_mut(0).cost_usd = 0.5;
+        let mut b = RunMetrics::new();
+        stamp(&mut b, 2_500_000, 2_000, true, &cold);
+        b.second_mut(2).target = 5;
+        b.second_mut(2).namenodes = 2;
+        b.second_mut(2).cost_usd = 0.25;
+        b.failed_ops = 1;
+        b.gave_up = 1;
+
+        // The reference: both streams folded into one ledger directly.
+        let mut c = RunMetrics::new();
+        stamp(&mut c, 500_000, 1_000, false, &Outcome::warm(0));
+        stamp(&mut c, 2_500_000, 2_000, true, &cold);
+        c.second_mut(0).target = 10;
+        c.second_mut(0).namenodes = 3;
+        c.second_mut(0).cost_usd = 0.5;
+        c.second_mut(2).target = 5;
+        c.second_mut(2).namenodes = 2;
+        c.second_mut(2).cost_usd = 0.25;
+        c.failed_ops = 1;
+        c.gave_up = 1;
+
+        a.merge(&b);
+        assert_eq!(a.fingerprint(), c.fingerprint(), "merge == combined fold");
+        assert_eq!(a.outcome_fingerprint(), c.outcome_fingerprint());
+        assert_eq!(a.completed_ops, 2);
+        assert_eq!(a.seconds.len(), 3);
+        assert_eq!(a.seconds[0].completed, 1);
+        assert_eq!(a.seconds[2].completed, 1);
+        assert_eq!(a.first_completion_us, 500_000);
+        assert_eq!(a.last_completion_us, 2_500_000);
+        assert_eq!(a.per_deployment_ops, vec![1, 0, 1]);
+        assert_eq!(a.timeouts, 1);
+        assert_eq!(a.gave_up, 1);
+        let phase_sum: u64 = a.phase_lat.iter().map(|h| h.sum_us()).sum();
+        assert_eq!(phase_sum, a.all_lat.sum_us());
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut m = RunMetrics::new();
+        m.record_at_us(700_000, 1_500, false);
+        m.record_outcome(&crate::systems::Outcome::warm(1));
+        m.second_mut(0).cost_usd = 0.125;
+        let fp = m.fingerprint();
+        let ofp = m.outcome_fingerprint();
+        m.merge(&RunMetrics::new());
+        assert_eq!(m.fingerprint(), fp);
+        assert_eq!(m.outcome_fingerprint(), ofp);
+        // And the other direction: empty.merge(m) == m.
+        let mut empty = RunMetrics::new();
+        empty.merge(&m);
+        assert_eq!(empty.fingerprint(), fp);
+        assert_eq!(empty.outcome_fingerprint(), ofp);
     }
 
     #[test]

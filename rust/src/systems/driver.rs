@@ -32,6 +32,17 @@ pub(crate) fn record<S: MetadataService>(sys: &mut S, issue: Time, c: &Completio
     // is pure integer math (no float conversion, no `ln` bucketing).
     m.record_at_us(c.done, c.done - issue, is_write);
     m.record_outcome(&c.outcome);
+    // Phase conservation: a stamped breakdown attributes every µs of the
+    // end-to-end latency to exactly one phase (an all-zero breakdown is
+    // the "unstamped" marker from mocks and stays out of the ledger).
+    if !c.phases.is_zero() || c.done == issue {
+        debug_assert_eq!(
+            c.phases.total_us(),
+            c.done - issue,
+            "phase breakdown must conserve end-to-end latency"
+        );
+        m.record_phases(&c.phases);
+    }
 }
 
 /// The intended issue slot for op `i` of `n_ops` within second `s`:
@@ -278,9 +289,14 @@ mod tests {
     impl MetadataService for FixedLatency {
         fn submit(&mut self, req: Request<'_>, _r: &mut Rng) -> Completion {
             self.submitted += 1;
+            let done = req.at + time::from_ms(2.0);
+            // Stamp the whole 2 ms as Exec so the driver's conservation
+            // assert and the phase ledger are exercised by these tests.
+            let sp = crate::telemetry::Span::begin(req.at);
             Completion {
-                done: req.at + time::from_ms(2.0),
+                done,
                 outcome: Outcome { cache: CacheOutcome::Hit, ..Outcome::warm(0) },
+                phases: sp.finish(crate::telemetry::Phase::Exec, done),
             }
         }
         fn submit_batch(&mut self, reqs: &[Request<'_>], out: &mut Vec<Completion>, rng: &mut Rng) {
@@ -384,7 +400,7 @@ mod tests {
         impl MetadataService for Slow {
             fn submit(&mut self, req: Request<'_>, _r: &mut Rng) -> Completion {
                 // each client: 10 ops/sec max
-                Completion { done: req.at + time::from_ms(100.0), outcome: Outcome::warm(0) }
+                Completion::unstamped(req.at + time::from_ms(100.0), Outcome::warm(0))
             }
             fn on_second(&mut self, _s: usize) {}
             fn metrics_mut(&mut self) -> &mut RunMetrics {

@@ -27,6 +27,7 @@ use crate::rpc::{ConnectionTable, NetModel};
 use crate::scaling::policy::RpcPath;
 use crate::sim::{time, Time};
 use crate::store::NdbStore;
+use crate::telemetry::{Phase, PhaseBreakdown, Span, Timeline, TimelineSample};
 use crate::util::fasthash::FnvBuildHasher;
 use crate::util::rng::Rng;
 
@@ -68,6 +69,10 @@ pub struct LambdaFs<S: BuildHasher = FnvBuildHasher> {
     /// default) arms nothing: every chaos hook below is gated on this
     /// `Option`, so a no-chaos run draws the exact pre-chaos sequence.
     chaos: Option<ChaosState>,
+    /// Armed per-second telemetry sampler (`install_telemetry`). Sampling
+    /// is read-only gauge capture: an armed run consumes the exact RNG
+    /// sequence of an unarmed one.
+    timeline: Option<Timeline>,
     last_settle: Time,
 }
 
@@ -120,6 +125,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             billed_requests: 0,
             kill_schedule: Vec::new(),
             chaos: None,
+            timeline: None,
             last_settle: 0,
         }
     }
@@ -215,8 +221,15 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
 
     /// Serve a read-class op on `inst` starting at `arrive`; returns the
     /// service completion time on the NameNode and whether the op hit
-    /// the instance's metadata cache.
-    fn serve_read(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> (Time, bool) {
+    /// the instance's metadata cache. `span` (cursor at `arrive`) gets
+    /// the queue-wait/exec/store segments stamped as they materialize.
+    fn serve_read(
+        &mut self,
+        inst: InstanceId,
+        op: &Operation,
+        arrive: Time,
+        span: &mut Span,
+    ) -> (Time, bool) {
         let mut rng = self.rng.fork_fast();
         let kind = op.kind;
         let hit = self.caches.cache_mut(inst).get(op.target).is_some();
@@ -225,7 +238,9 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         } else {
             self.svc.cache_hit(kind, &mut rng) + self.svc.miss_insert(&mut rng)
         };
-        let (_, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
+        let (start, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
+        span.advance(Phase::Queue, start);
+        span.advance(Phase::Exec, cpu_done);
         if hit {
             return (cpu_done, true);
         }
@@ -233,6 +248,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         // INode hint cache), then fill the cache with the whole path.
         let depth = self.ns.resolution_depth(op.target);
         let store_done = self.store.read_batch(cpu_done, depth, &mut rng);
+        span.advance(Phase::Store, store_done);
         let version = self.store.version(op.target);
         let cache = self.caches.cache_mut(inst);
         cache.insert_version(op.target, version);
@@ -247,11 +263,14 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
     }
 
     /// Serve a write-class op on `inst`: coherence protocol, then the
-    /// transactional store write (§3.5 Algorithm 1).
-    fn serve_write(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> Time {
+    /// transactional store write (§3.5 Algorithm 1). `span` gets the
+    /// queue/exec/coherence/store segments.
+    fn serve_write(&mut self, inst: InstanceId, op: &Operation, arrive: Time, span: &mut Span) -> Time {
         let mut rng = self.rng.fork_fast();
         let cpu = self.svc.write_cpu(&mut rng);
-        let (_, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
+        let (start, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
+        span.advance(Phase::Queue, start);
+        span.advance(Phase::Exec, cpu_done);
 
         // Rows touched: the target INode + its parent directory INode
         // (+ mv destination). Held inline — the write path allocates
@@ -303,8 +322,10 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         );
 
         // Commit under exclusive row locks after all ACKs.
+        span.advance(Phase::Coherence, outcome.complete_at);
         let deletes = matches!(op.kind, OpKind::Delete);
         let commit = self.store.write_txn(outcome.complete_at, rows, deletes, &mut rng);
+        span.advance(Phase::Store, commit);
 
         // Leader caches the fresh metadata (it holds the latest version).
         if !deletes {
@@ -318,7 +339,13 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
     /// prefix INV + offloaded batches. Returns the completion time, how
     /// many lock retries the op needed, and whether it exhausted the
     /// retry budget and gave up.
-    fn serve_subtree(&mut self, inst: InstanceId, op: &Operation, arrive: Time) -> (Time, u32, bool) {
+    fn serve_subtree(
+        &mut self,
+        inst: InstanceId,
+        op: &Operation,
+        arrive: Time,
+        span: &mut Span,
+    ) -> (Time, u32, bool) {
         let mut rng = self.rng.fork_fast();
         let router = &self.router;
         let ns = &self.ns;
@@ -356,8 +383,12 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             self.cfg.lambda_fs.concurrency_level
         };
         let params = SubtreeParams { batch: self.cfg.lambda_fs.subtree_batch, parallelism };
+        span.advance(Phase::Coherence, outcome.complete_at);
         match subtree::execute(outcome.complete_at, &plan, params, &mut self.store, &mut rng) {
-            Ok(done) => (done, 0, false),
+            Ok(done) => {
+                span.advance(Phase::Store, done);
+                (done, 0, false)
+            }
             Err(_) => {
                 // Overlapping subtree op: retry under the backoff budget
                 // with a deterministically doubling pause. No jitter draw
@@ -373,8 +404,12 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
                         self.cfg.store.lock_retry_ms * 10.0 * (1u64 << attempt.min(10)) as f64;
                     at += time::from_ms(pause);
                     attempt += 1;
+                    span.advance(Phase::Retry, at);
                     match subtree::execute(at, &plan, params, &mut self.store, &mut rng) {
-                        Ok(done) => return (done, attempt, false),
+                        Ok(done) => {
+                            span.advance(Phase::Store, done);
+                            return (done, attempt, false);
+                        }
                         Err(_) if backoff.exhausted(attempt) => return (at, attempt, true),
                         Err(_) => {}
                     }
@@ -417,6 +452,11 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         let op = req.op;
         let c = req.client as usize % self.clients.len().max(1);
         let vm = self.clients[c].vm;
+        // Phase attribution cursor (see `telemetry`): walks the op's
+        // virtual timeline from issue to completion, so the breakdown
+        // conserves end-to-end latency by construction. Pure arithmetic
+        // over timestamps this path already materializes — no RNG.
+        let mut span = Span::begin(req.at);
 
         // Chaos verdict: while a partition/blackout window swallows this
         // op, each attempt times out after the HTTP timeout and the
@@ -430,21 +470,24 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             while ch.plan.lost(chaos::second_of(now), vm.0, dep, op.kind.is_write()) {
                 timeouts += 1;
                 if backoff.exhausted(attempt) {
-                    return Completion {
-                        done: now,
-                        outcome: Outcome {
+                    // Give-ups carry no service timeline; the drivers
+                    // skip unstamped breakdowns at the fold.
+                    return Completion::unstamped(
+                        now,
+                        Outcome {
                             retries: attempt,
                             timeouts,
                             gave_up: true,
                             ..Outcome::warm(dep)
                         },
-                    };
+                    );
                 }
                 now += time::from_ms(self.cfg.faas.http_timeout_ms)
                     + backoff.delay(attempt, &mut ch.rng);
                 attempt += 1;
             }
         }
+        span.advance(Phase::Retry, now);
         // Active delay-storm multipliers (None on the no-chaos fast path:
         // every leg below then samples the plain, bit-identical hop).
         let mults = self.chaos.as_ref().and_then(|ch| ch.plan.leg_mults(chaos::second_of(now)));
@@ -456,7 +499,9 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
 
         let (inst, arrive, http_used, cold_start) = match (path, tcp_inst) {
             (RpcPath::Tcp, Some(i)) => {
-                (i, now + self.net.tcp_hop_chaos(rng, mults.as_ref()), false, false)
+                let arrive = now + self.net.tcp_hop_chaos(rng, mults.as_ref());
+                span.advance(Phase::Net, arrive);
+                (i, arrive, false, false)
             }
             _ => {
                 // HTTP: gateway + invoker placement (may cold start).
@@ -467,7 +512,13 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
                 let leg = self.net.http_leg_chaos(rng, mults.as_ref());
                 let (i, ready, cold) = self.platform.place_http_traced(dep, now, rng);
                 self.register(i);
-                (i, ready.max(gw_done + leg), true, cold)
+                let arrive = ready.max(gw_done + leg);
+                // Gateway + request leg are network time; any further
+                // wait for the placed instance is provisioning (cold
+                // path) or a busy-slot wait (warm path).
+                span.advance(Phase::Net, gw_done + leg);
+                span.advance(if cold { Phase::ColdStart } else { Phase::Queue }, arrive);
+                (i, arrive, true, cold)
             }
         };
         self.register(inst);
@@ -476,14 +527,16 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         let mut gave_up = false;
         let (served, cache) = match op.kind {
             k if k.is_subtree() => {
-                let (t, r, gu) = self.serve_subtree(inst, op, arrive);
+                let (t, r, gu) = self.serve_subtree(inst, op, arrive, &mut span);
                 retries += r;
                 gave_up = gu;
                 (t, CacheOutcome::Bypass)
             }
-            k if k.is_write() => (self.serve_write(inst, op, arrive), CacheOutcome::Bypass),
+            k if k.is_write() => {
+                (self.serve_write(inst, op, arrive, &mut span), CacheOutcome::Bypass)
+            }
             _ => {
-                let (t, hit) = self.serve_read(inst, op, arrive);
+                let (t, hit) = self.serve_read(inst, op, arrive, &mut span);
                 (t, if hit { CacheOutcome::Hit } else { CacheOutcome::Miss })
             }
         };
@@ -499,6 +552,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             }
         }
         let mut done = served + reply;
+        span.advance(Phase::Net, done);
 
         // HTTP-served requests: NameNode proactively opens a TCP
         // connection back to the client's VM for future fast-path RPCs.
@@ -511,17 +565,22 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         // Straggler mitigation (App. A): a request far beyond the moving
         // average is cancelled and resubmitted; the effective latency is
         // the detection time plus a fast retry on a warm path.
+        let mut phase_override: Option<PhaseBreakdown> = None;
         let lat_ms = time::to_ms(done - now);
         if self.clients[c].is_straggler(lat_ms) {
             let detect = now
                 + time::from_ms(
                     self.clients[c].window.mean() * self.cfg.lambda_fs.straggler_threshold,
                 );
+            // The retry gets its own span from the detection point; it
+            // only becomes the op's breakdown if the retry wins.
+            let mut rspan = Span::begin(detect);
             let retry_arrive = detect + self.net.tcp_hop_chaos(rng, mults.as_ref());
+            rspan.advance(Phase::Net, retry_arrive);
             let retried = match op.kind {
                 k if k.is_subtree() => None, // subtree ops are not raced
                 k if k.is_write() => None,   // writes must not double-commit
-                _ => Some(self.serve_read(inst, op, retry_arrive).0),
+                _ => Some(self.serve_read(inst, op, retry_arrive, &mut rspan).0),
             };
             if let Some(r) = retried {
                 retries += 1;
@@ -529,6 +588,11 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
                 if retry_done < done {
                     done = retry_done;
                     self.metrics.resubmissions += 1;
+                    // Effective timeline is the retry's: everything up
+                    // to detection was the abandoned slow attempt.
+                    let mut ph = rspan.finish(Phase::Net, retry_done);
+                    ph.add(Phase::Retry, detect - req.at);
+                    phase_override = Some(ph);
                 }
             }
         }
@@ -557,6 +621,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
                 timeouts,
                 gave_up,
             },
+            phases: phase_override.unwrap_or_else(|| span.finish(Phase::Net, done)),
         }
     }
 }
@@ -574,6 +639,18 @@ impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
             self.schedule_kill(k.second as usize, k.deployment);
         }
         self.chaos = Some(ChaosState::new(self.cfg.seed, plan));
+    }
+
+    /// Arm the per-second fleet sampler. Capture is read-only (platform
+    /// and metrics gauges) and draws no RNG: an armed run is
+    /// fingerprint-identical to an unarmed one.
+    fn install_telemetry(&mut self, timeline: Timeline) -> bool {
+        self.timeline = Some(timeline);
+        true
+    }
+
+    fn take_telemetry(&mut self) -> Option<Timeline> {
+        self.timeline.take()
     }
 
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
@@ -654,6 +731,18 @@ impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
         s.vcpus = self.platform.vcpus_in_use();
         s.cost_usd = sample.usd;
         s.cost_simplified_usd = simplified;
+
+        // Timeline sampling (armed runs only): fleet gauges the metrics
+        // ledger cannot see — per-deployment live counts and the
+        // still-provisioning pool. Pure reads; no RNG.
+        if let Some(tl) = self.timeline.as_mut() {
+            let mut sample = TimelineSample::from_metrics(second, &self.metrics);
+            sample.live_per_dep = (0..self.cfg.lambda_fs.n_deployments)
+                .map(|d| self.platform.live_in_deployment(d))
+                .collect();
+            sample.warm = self.platform.starting_instances(now);
+            tl.push(sample);
+        }
         self.last_settle = now;
     }
 

@@ -44,6 +44,7 @@ pub use lambdafs::LambdaFs;
 use crate::metrics::RunMetrics;
 use crate::namespace::Operation;
 use crate::sim::Time;
+use crate::telemetry::{PhaseBreakdown, Timeline};
 use crate::util::rng::Rng;
 
 /// A typed request envelope: one metadata operation issued by a client.
@@ -138,6 +139,18 @@ pub struct Completion {
     pub done: Time,
     /// Why it took that long.
     pub outcome: Outcome,
+    /// Where the latency went: fixed-size per-phase µs attribution
+    /// (see [`crate::telemetry`]). Stamped breakdowns sum to
+    /// `done - issue` — asserted at the drivers' fold; an all-zero
+    /// breakdown means "unstamped" (mocks, give-ups) and is skipped.
+    pub phases: PhaseBreakdown,
+}
+
+impl Completion {
+    /// A completion with an unstamped phase breakdown (mocks, tests).
+    pub fn unstamped(done: Time, outcome: Outcome) -> Completion {
+        Completion { done, outcome, phases: PhaseBreakdown::zero() }
+    }
 }
 
 /// A metadata service under simulation.
@@ -173,6 +186,24 @@ pub trait MetadataService {
     /// hooks. Installing [`crate::chaos::ChaosPlan::none`] must leave the
     /// system draw-for-draw identical to never calling this at all.
     fn install_chaos(&mut self, _plan: &crate::chaos::ChaosPlan) {}
+
+    /// Arm the per-second timeline sampler (see [`crate::telemetry`]):
+    /// the system fills `timeline` from `on_second` with fleet gauges.
+    /// Returns `true` if the system supports sampling (λFS and the
+    /// serverful baselines do); the default drops the timeline and
+    /// returns `false`. Sampling is read-only and consumes no RNG
+    /// draws: an armed run is fingerprint-identical to an unarmed one
+    /// (pinned in `rust/tests/determinism.rs`).
+    fn install_telemetry(&mut self, timeline: Timeline) -> bool {
+        let _ = timeline;
+        false
+    }
+
+    /// Recover the filled timeline after a run (`None` if never armed
+    /// or unsupported).
+    fn take_telemetry(&mut self) -> Option<Timeline> {
+        None
+    }
 
     /// Called at each 1-second boundary for metrics/cost sampling and
     /// platform housekeeping (reclaim, heartbeats).

@@ -1,0 +1,530 @@
+//! Deterministic telemetry: phase-attributed op spans + per-second
+//! fleet timelines, exportable as Chrome trace-event JSON (Perfetto).
+//!
+//! The paper's claims are *time-resolved* (elastic scale-out under
+//! bursts, cold-start absorption, cache warming — §5), but run-level
+//! aggregates cannot say *where* an op's latency went or *when* the
+//! fleet moved. This module adds two layers:
+//!
+//! ## 1. The span layer (always on)
+//!
+//! Every [`crate::systems::Completion`] carries a fixed-size
+//! [`PhaseBreakdown`]: per-op µs attributed to the [`Phase`] axis
+//! (queue-wait, cold-start, network legs, CPU execution, coherence
+//! protocol, persistent store, retry/backoff). Systems stamp phases with
+//! a [`Span`] — a cursor walking the op's virtual timeline, attributing
+//! each `[cursor, t)` segment to exactly one phase — so the breakdown
+//! **sums to the end-to-end latency by construction**:
+//!
+//! ```text
+//! sum(phases) == done - issue        (asserted in driver::record)
+//! ```
+//!
+//! `driver::record` folds each breakdown into per-phase `Histogram`s in
+//! `RunMetrics::phase_lat`, giving p50/p99 per phase and per-phase time
+//! shares (`RunMetrics::phase_share`) to the figures and the scenario
+//! matrix.
+//!
+//! ## 2. The timeline sampler (opt in)
+//!
+//! [`Timeline`] is a per-second ring of fleet gauges — live instances
+//! per deployment, warm pool size, completed ops, backlog, cumulative
+//! cache hits/misses, cost rate, cumulative timeouts/give-ups — captured
+//! by a system's `on_second` after it is armed through
+//! `MetadataService::install_telemetry` and recovered with
+//! `take_telemetry`. The binary section ([`Timeline::encode`] /
+//! [`Timeline::decode`]) is the same zero-dependency varint dialect the
+//! chaos plan and the trace format use. [`export::chrome_trace_json`]
+//! renders a timeline (plus the run's phase totals and the chaos plan's
+//! fault schedule) as Chrome trace-event JSON: counter tracks per gauge,
+//! instant events for kills/blackouts/scale-outs — `lambdafs observe
+//! --out trace.json`, loadable in Perfetto.
+//!
+//! ## Determinism invariants (the PR-6 zero-overhead contract)
+//!
+//! * **No RNG draws.** Spans are pure arithmetic over timestamps the
+//!   systems already materialize; the sampler only *reads* platform and
+//!   metrics state. Neither touches any `Rng`.
+//! * **Telemetry-on ≡ telemetry-off.** A run with a `Timeline` installed
+//!   is `fingerprint()`- and `outcome_fingerprint()`-identical to the
+//!   same run without one (pinned for λFS, HopsFS, and CephFS in
+//!   `rust/tests/determinism.rs`), and record→replay stays bit-identical
+//!   with the sampler enabled.
+//! * **Digest compatibility.** Phase histograms fold into
+//!   `outcome_fingerprint()` only when non-empty (the chaos-counter
+//!   pattern), so runs that never stamp a phase — mocks, empty runs —
+//!   keep their historical digests. `fingerprint()` is untouched.
+//!
+//! ## Binary timeline format
+//!
+//! ```text
+//! magic "LFTL", version 0x01
+//! system    : varint len + utf8 bytes
+//! n_deps    : varint
+//! n_samples : varint
+//! sample    : second, len(live_per_dep) + each, warm, completed,
+//!             backlog, cache_hits, cache_misses, cost_usd.to_bits(),
+//!             timeouts, gave_up          (all varint)
+//! ```
+//!
+//! Decode rejects trailing bytes and truncated varints, like the chaos
+//! and trace codecs.
+
+pub mod export;
+pub mod observe;
+
+use crate::sim::Time;
+
+/// The phase axis: where an operation's end-to-end latency goes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting for a CPU slot on an already-chosen serving node.
+    Queue,
+    /// Waiting for an instance provisioned for this very request.
+    ColdStart,
+    /// TCP/HTTP legs: gateway admission, request and reply hops.
+    Net,
+    /// CPU service time on the serving node.
+    Exec,
+    /// INV/ACK coherence protocol time (writes).
+    Coherence,
+    /// Persistent store (NDB) reads and transaction commits.
+    Store,
+    /// Timeout/backoff loops, straggler re-serves, lock retries.
+    Retry,
+}
+
+/// Number of phases in [`PhaseBreakdown`] (fixed-size, no allocation).
+pub const N_PHASES: usize = 7;
+
+impl Phase {
+    /// All phases, in breakdown-array order.
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::Queue,
+        Phase::ColdStart,
+        Phase::Net,
+        Phase::Exec,
+        Phase::Coherence,
+        Phase::Store,
+        Phase::Retry,
+    ];
+
+    /// Index into a [`PhaseBreakdown`]'s array.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable short name (JSON keys, table columns).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Queue => "queue",
+            Phase::ColdStart => "cold",
+            Phase::Net => "net",
+            Phase::Exec => "exec",
+            Phase::Coherence => "coherence",
+            Phase::Store => "store",
+            Phase::Retry => "retry",
+        }
+    }
+}
+
+/// Fixed-size per-op phase attribution in µs. An all-zero breakdown
+/// means "not stamped" (mocks, give-ups); a stamped breakdown sums to
+/// the op's end-to-end latency.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseBreakdown {
+    us: [u64; N_PHASES],
+}
+
+impl PhaseBreakdown {
+    /// The unstamped (all-zero) breakdown.
+    #[inline]
+    pub fn zero() -> Self {
+        PhaseBreakdown::default()
+    }
+
+    /// µs attributed to `p`.
+    #[inline]
+    pub fn get(&self, p: Phase) -> u64 {
+        self.us[p.index()]
+    }
+
+    /// Attribute `us` more µs to `p`.
+    #[inline]
+    pub fn add(&mut self, p: Phase, us: u64) {
+        self.us[p.index()] += us;
+    }
+
+    /// Sum over all phases — equals the end-to-end latency when stamped.
+    #[inline]
+    pub fn total_us(&self) -> u64 {
+        self.us.iter().sum()
+    }
+
+    /// True when nothing has been attributed (the unstamped marker).
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.us.iter().all(|&v| v == 0)
+    }
+
+    /// The raw per-phase array, indexed by [`Phase::index`].
+    #[inline]
+    pub fn as_array(&self) -> &[u64; N_PHASES] {
+        &self.us
+    }
+}
+
+/// Cursor-based span builder: walks an op's virtual timeline from its
+/// issue time, attributing each `[cursor, t)` segment to one phase.
+/// Because the cursor only moves forward and every segment lands in
+/// exactly one phase, `sum(phases) == cursor - issue` holds at all
+/// times — the conservation invariant is true by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    cursor: Time,
+    ph: PhaseBreakdown,
+}
+
+impl Span {
+    /// Start a span at the op's realized issue time.
+    #[inline]
+    pub fn begin(at: Time) -> Span {
+        Span { cursor: at, ph: PhaseBreakdown::zero() }
+    }
+
+    /// Attribute `[cursor, to)` to `p` and move the cursor to `to`.
+    /// A `to` at or before the cursor attributes nothing (zero-length
+    /// segments are legal; the cursor never moves backwards).
+    #[inline]
+    pub fn advance(&mut self, p: Phase, to: Time) {
+        if to > self.cursor {
+            self.ph.add(p, to - self.cursor);
+            self.cursor = to;
+        }
+    }
+
+    /// Current cursor position.
+    #[inline]
+    pub fn cursor(&self) -> Time {
+        self.cursor
+    }
+
+    /// Finish at the completion time: any unattributed tail goes to
+    /// `tail` (e.g. the reply leg), then the breakdown is returned.
+    #[inline]
+    pub fn finish(mut self, tail: Phase, done: Time) -> PhaseBreakdown {
+        self.advance(tail, done);
+        debug_assert_eq!(self.cursor, done, "span cursor overran completion");
+        self.ph
+    }
+}
+
+/// One second of fleet gauges.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TimelineSample {
+    /// The 1-second boundary this sample was captured at.
+    pub second: u32,
+    /// Live instances per deployment (serverful systems report one
+    /// entry per server, constant 1 — the flat line Perfetto shows
+    /// against λFS's elastic curve).
+    pub live_per_dep: Vec<u32>,
+    /// Instances in the warm pool (provisioned, not yet serving).
+    pub warm: u32,
+    /// Ops completed within this second.
+    pub completed: u64,
+    /// Offered-load shortfall: cumulative target minus cumulative
+    /// completions (0 when the system keeps up).
+    pub backlog: u64,
+    /// Cumulative cache hits at the end of this second.
+    pub cache_hits: u64,
+    /// Cumulative cache misses.
+    pub cache_misses: u64,
+    /// Dollars accrued this second (`f64::to_bits`, varint-encoded).
+    pub cost_usd_bits: u64,
+    /// Cumulative client-visible timeouts.
+    pub timeouts: u64,
+    /// Cumulative abandoned ops.
+    pub gave_up: u64,
+}
+
+impl TimelineSample {
+    /// Fill the metrics-derived gauges from the run ledger; the caller
+    /// adds the fleet gauges (live/warm) it alone can see.
+    pub fn from_metrics(second: usize, m: &crate::metrics::RunMetrics) -> TimelineSample {
+        let sec = m.seconds.get(second).copied().unwrap_or_default();
+        let target_cum: u64 = m.seconds.iter().take(second + 1).map(|s| s.target).sum();
+        let done_cum: u64 = m.seconds.iter().take(second + 1).map(|s| s.completed).sum();
+        TimelineSample {
+            second: second as u32,
+            live_per_dep: Vec::new(),
+            warm: 0,
+            completed: sec.completed,
+            backlog: target_cum.saturating_sub(done_cum),
+            cache_hits: m.cache_hits,
+            cache_misses: m.cache_misses,
+            cost_usd_bits: sec.cost_usd.to_bits(),
+            timeouts: m.timeouts,
+            gave_up: m.gave_up,
+        }
+    }
+
+    /// This second's accrued cost in dollars.
+    #[inline]
+    pub fn cost_usd(&self) -> f64 {
+        f64::from_bits(self.cost_usd_bits)
+    }
+
+    /// Total live instances across deployments.
+    #[inline]
+    pub fn live_total(&self) -> u32 {
+        self.live_per_dep.iter().sum()
+    }
+}
+
+/// The per-second gauge ring one run produces. Installed into a system
+/// via `MetadataService::install_telemetry`, filled from `on_second`,
+/// recovered with `take_telemetry`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Timeline {
+    /// System label ("lambdafs", "hopsfs", ...).
+    pub system: String,
+    /// Deployment (or server) count the live gauge is resolved over.
+    pub n_deployments: u32,
+    pub samples: Vec<TimelineSample>,
+}
+
+const TIMELINE_MAGIC: &[u8; 4] = b"LFTL";
+const TIMELINE_VERSION: u8 = 1;
+
+impl Timeline {
+    pub fn new(system: &str, n_deployments: u32) -> Timeline {
+        Timeline { system: system.to_string(), n_deployments, samples: Vec::new() }
+    }
+
+    /// Append one sample (systems call this from `on_second`).
+    pub fn push(&mut self, s: TimelineSample) {
+        self.samples.push(s);
+    }
+
+    /// The zero-dependency varint binary section (format in the module
+    /// doc).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.samples.len() * 24);
+        out.extend_from_slice(TIMELINE_MAGIC);
+        out.push(TIMELINE_VERSION);
+        put_varint(&mut out, self.system.len() as u64);
+        out.extend_from_slice(self.system.as_bytes());
+        put_varint(&mut out, self.n_deployments as u64);
+        put_varint(&mut out, self.samples.len() as u64);
+        for s in &self.samples {
+            put_varint(&mut out, s.second as u64);
+            put_varint(&mut out, s.live_per_dep.len() as u64);
+            for &n in &s.live_per_dep {
+                put_varint(&mut out, n as u64);
+            }
+            put_varint(&mut out, s.warm as u64);
+            put_varint(&mut out, s.completed);
+            put_varint(&mut out, s.backlog);
+            put_varint(&mut out, s.cache_hits);
+            put_varint(&mut out, s.cache_misses);
+            put_varint(&mut out, s.cost_usd_bits);
+            put_varint(&mut out, s.timeouts);
+            put_varint(&mut out, s.gave_up);
+        }
+        out
+    }
+
+    /// Decode a binary timeline section. Rejects bad magic/version,
+    /// truncation, and trailing bytes.
+    pub fn decode(bytes: &[u8]) -> Result<Timeline, String> {
+        if bytes.len() < 5 || &bytes[..4] != TIMELINE_MAGIC {
+            return Err("timeline: bad magic".into());
+        }
+        if bytes[4] != TIMELINE_VERSION {
+            return Err(format!("timeline: unsupported version {}", bytes[4]));
+        }
+        let mut pos = 5;
+        let name_len = get_varint(bytes, &mut pos)? as usize;
+        if pos + name_len > bytes.len() {
+            return Err("timeline: truncated system name".into());
+        }
+        let system = std::str::from_utf8(&bytes[pos..pos + name_len])
+            .map_err(|_| "timeline: system name not utf8".to_string())?
+            .to_string();
+        pos += name_len;
+        let n_deployments = get_varint(bytes, &mut pos)? as u32;
+        let n_samples = get_varint(bytes, &mut pos)? as usize;
+        let mut samples = Vec::with_capacity(n_samples.min(1 << 20));
+        for _ in 0..n_samples {
+            let second = get_varint(bytes, &mut pos)? as u32;
+            let n_live = get_varint(bytes, &mut pos)? as usize;
+            let mut live_per_dep = Vec::with_capacity(n_live.min(1 << 16));
+            for _ in 0..n_live {
+                live_per_dep.push(get_varint(bytes, &mut pos)? as u32);
+            }
+            samples.push(TimelineSample {
+                second,
+                live_per_dep,
+                warm: get_varint(bytes, &mut pos)? as u32,
+                completed: get_varint(bytes, &mut pos)?,
+                backlog: get_varint(bytes, &mut pos)?,
+                cache_hits: get_varint(bytes, &mut pos)?,
+                cache_misses: get_varint(bytes, &mut pos)?,
+                cost_usd_bits: get_varint(bytes, &mut pos)?,
+                timeouts: get_varint(bytes, &mut pos)?,
+                gave_up: get_varint(bytes, &mut pos)?,
+            });
+        }
+        if pos != bytes.len() {
+            return Err(format!("timeline: {} trailing bytes", bytes.len() - pos));
+        }
+        Ok(Timeline { system, n_deployments, samples })
+    }
+
+    /// FNV digest of the binary encoding (test pinning).
+    pub fn fingerprint(&self) -> u64 {
+        crate::util::fnv::fnv1a64(&self.encode())
+    }
+}
+
+/// LEB128-style varint (7-bit groups, 0x80 continuation) — the same
+/// dialect `chaos` and `trace::format` use.
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn get_varint(bytes: &[u8], pos: &mut usize) -> Result<u64, String> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes.get(*pos).ok_or("timeline: truncated varint")?;
+        *pos += 1;
+        if shift >= 64 || (shift == 63 && (b & 0x7f) > 1) {
+            return Err("timeline: varint overflow".into());
+        }
+        v |= u64::from(b & 0x7f) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_conserves_by_construction() {
+        let mut sp = Span::begin(1_000);
+        sp.advance(Phase::Retry, 1_500);
+        sp.advance(Phase::Net, 2_200);
+        sp.advance(Phase::ColdStart, 4_000);
+        sp.advance(Phase::Queue, 4_000); // zero-length segment
+        sp.advance(Phase::Exec, 4_300);
+        sp.advance(Phase::Store, 5_000);
+        let ph = sp.finish(Phase::Net, 5_400);
+        assert_eq!(ph.total_us(), 5_400 - 1_000);
+        assert_eq!(ph.get(Phase::Retry), 500);
+        assert_eq!(ph.get(Phase::Net), 700 + 400);
+        assert_eq!(ph.get(Phase::ColdStart), 1_800);
+        assert_eq!(ph.get(Phase::Queue), 0);
+        assert_eq!(ph.get(Phase::Exec), 300);
+        assert_eq!(ph.get(Phase::Store), 700);
+        assert_eq!(ph.get(Phase::Coherence), 0);
+        assert!(!ph.is_zero());
+    }
+
+    #[test]
+    fn span_cursor_never_regresses() {
+        let mut sp = Span::begin(100);
+        sp.advance(Phase::Net, 50); // before the cursor: attributes nothing
+        assert_eq!(sp.cursor(), 100);
+        let ph = sp.finish(Phase::Exec, 100);
+        assert!(ph.is_zero());
+        assert_eq!(ph.total_us(), 0);
+    }
+
+    #[test]
+    fn phase_axis_is_total() {
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert!(!p.name().is_empty());
+        }
+        let mut ph = PhaseBreakdown::zero();
+        assert!(ph.is_zero());
+        ph.add(Phase::Store, 7);
+        assert_eq!(ph.as_array()[Phase::Store.index()], 7);
+    }
+
+    fn sample(second: u32) -> TimelineSample {
+        TimelineSample {
+            second,
+            live_per_dep: vec![2, 0, 5, 1],
+            warm: 3,
+            completed: 1_234,
+            backlog: 17,
+            cache_hits: 900,
+            cache_misses: 334,
+            cost_usd_bits: 0.001_25f64.to_bits(),
+            timeouts: 2,
+            gave_up: 1,
+        }
+    }
+
+    #[test]
+    fn timeline_roundtrip() {
+        let mut tl = Timeline::new("lambdafs", 4);
+        for s in 0..10 {
+            tl.push(sample(s));
+        }
+        let bytes = tl.encode();
+        let back = Timeline::decode(&bytes).unwrap();
+        assert_eq!(back, tl);
+        assert_eq!(back.fingerprint(), tl.fingerprint());
+        assert_eq!(back.samples[3].live_total(), 8);
+        assert!((back.samples[0].cost_usd() - 0.001_25).abs() < 1e-18);
+    }
+
+    #[test]
+    fn timeline_decode_rejects_garbage() {
+        assert!(Timeline::decode(b"").is_err());
+        assert!(Timeline::decode(b"XXXX\x01").is_err());
+        assert!(Timeline::decode(b"LFTL\x63").is_err());
+        let mut ok = Timeline::new("x", 1);
+        ok.push(sample(0));
+        let mut bytes = ok.encode();
+        bytes.push(0); // trailing byte
+        assert!(Timeline::decode(&bytes).is_err());
+        let truncated = &ok.encode()[..10];
+        assert!(Timeline::decode(truncated).is_err());
+    }
+
+    #[test]
+    fn sample_from_metrics_derives_backlog() {
+        let mut m = crate::metrics::RunMetrics::new();
+        m.second_mut(0).target = 100;
+        m.second_mut(1).target = 100;
+        for _ in 0..80 {
+            m.record(0, 1.0, false);
+        }
+        for _ in 0..90 {
+            m.record(1, 1.0, false);
+        }
+        let s0 = TimelineSample::from_metrics(0, &m);
+        assert_eq!(s0.completed, 80);
+        assert_eq!(s0.backlog, 20);
+        let s1 = TimelineSample::from_metrics(1, &m);
+        assert_eq!(s1.completed, 90);
+        assert_eq!(s1.backlog, 30);
+    }
+}

@@ -1,0 +1,174 @@
+//! `lambdafs observe` — one instrumented Spotify run, exported as a
+//! Perfetto-loadable Chrome trace.
+//!
+//! Runs λFS under the bursty Spotify open-loop workload with a small
+//! seeded fault schedule (two instance kills + one deployment blackout,
+//! so the trace has instants worth looking at), the per-second
+//! [`Timeline`] sampler armed, and every completion span-stamped. The
+//! timeline round-trips through its varint binary encoding before
+//! export — the binary section is the archival format, the JSON is the
+//! viewer format — and the export carries the phase ledger summary that
+//! `scripts/validate_trace_events.py` checks for conservation.
+//!
+//! The sampler obeys the zero-overhead contract: arming it consumes no
+//! RNG draws, so an `observe` run is fingerprint-identical to the same
+//! run without telemetry (see `tests/determinism.rs`).
+
+use crate::chaos::{Blackout, ChaosPlan, KillEvent};
+use crate::figures::common::{self, Fixture, Scale};
+use crate::metrics::RunMetrics;
+use crate::systems::{driver, LambdaFs, MetadataService};
+use crate::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
+
+use super::export::chrome_trace_json;
+use super::{Phase, Timeline};
+
+/// Everything one `observe` run produces: the rendered trace JSON plus
+/// the run ledger it was derived from.
+pub struct ObserveReport {
+    /// Chrome trace-event JSON (Perfetto-loadable).
+    pub json: String,
+    /// Length of the varint binary timeline section.
+    pub timeline_bytes: usize,
+    /// Per-second samples captured.
+    pub samples: usize,
+    /// The fault schedule the run executed.
+    pub plan: ChaosPlan,
+    pub metrics: RunMetrics,
+}
+
+/// Build the observe fault schedule for a run of `dur` seconds: kills at
+/// one and two thirds, a 3-second blackout of deployment 1 mid-run.
+fn observe_plan(dur: usize, n_vms: u32) -> ChaosPlan {
+    let third = (dur as u32 / 3).max(1);
+    ChaosPlan {
+        n_vms,
+        kills: vec![
+            KillEvent { second: third, deployment: 0 },
+            KillEvent { second: 2 * third, deployment: 0 },
+        ],
+        blackouts: vec![Blackout {
+            from_s: third + third / 2,
+            to_s: third + third / 2 + 3,
+            deployment: Some(1),
+        }],
+        ..ChaosPlan::none()
+    }
+}
+
+/// Run the instrumented λFS Spotify experiment at `scale`, seeded by
+/// `seed`, and render the trace.
+pub fn run(scale: Scale, seed: u64) -> ObserveReport {
+    let vcpus = scale.vcpus(512.0);
+    let x_t = scale.x_t(25_000.0);
+    let Fixture { cfg, ns, sampler, mut rng } = common::fixture_seeded(scale, vcpus, seed);
+    let mut spec_rng = rng.fork("schedule");
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::pareto_bursty(
+            scale.duration_s(),
+            15,
+            x_t,
+            2.0,
+            7.0,
+            &mut spec_rng,
+        ),
+        mix: OpMix::spotify(),
+        n_clients: scale.clients(1024),
+        n_vms: 8,
+        namespace: crate::namespace::generate::NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+    let plan = observe_plan(scale.duration_s(), spec.n_vms);
+
+    let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+    sys.install_chaos(&plan);
+    let armed = sys.install_telemetry(Timeline::new("lambdafs", cfg.lambda_fs.n_deployments));
+    debug_assert!(armed, "LambdaFs supports the timeline sampler");
+    let mut r = rng.fork("lfs");
+    driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+
+    let tl = sys.take_telemetry().expect("sampler was armed");
+    let metrics = sys.into_metrics();
+
+    // Round-trip the varint binary section: archival format first, JSON
+    // rendered from the same data.
+    let bytes = tl.encode();
+    let decoded = Timeline::decode(&bytes).expect("timeline self-decodes");
+    debug_assert_eq!(decoded.fingerprint(), tl.fingerprint(), "binary round trip");
+
+    let json = chrome_trace_json(&decoded, &metrics, &plan);
+    ObserveReport {
+        json,
+        timeline_bytes: bytes.len(),
+        samples: tl.samples.len(),
+        plan,
+        metrics,
+    }
+}
+
+impl ObserveReport {
+    /// Print the run summary: one row per phase of the span ledger, then
+    /// the conservation line the validator re-checks on the artifact.
+    pub fn print(&self) {
+        let m = &self.metrics;
+        let rows: Vec<Vec<String>> = Phase::ALL
+            .iter()
+            .map(|&p| {
+                let h = m.phase_hist(p);
+                vec![
+                    p.name().to_string(),
+                    h.sum_us().to_string(),
+                    format!("{:.1}", m.phase_share(p) * 100.0),
+                    format!("{:.1}", h.p50()),
+                    format!("{:.1}", h.p99()),
+                ]
+            })
+            .collect();
+        common::print_table(
+            "observe: λFS phase ledger (Spotify, faults injected)",
+            &["phase", "total_us", "share_%", "p50_us", "p99_us"],
+            &rows,
+        );
+        let phase_total: u64 = Phase::ALL.iter().map(|&p| m.phase_hist(p).sum_us()).sum();
+        println!(
+            "\n  conservation: sum(phase)={} us, e2e={} us ({})",
+            phase_total,
+            m.all_lat.sum_us(),
+            if phase_total == m.all_lat.sum_us() { "exact" } else { "MISMATCH" }
+        );
+        println!(
+            "  dominant phase: {}; {} samples, {} timeline bytes, {} kills, {} blackouts",
+            m.dominant_phase().map(Phase::name).unwrap_or("-"),
+            self.samples,
+            self.timeline_bytes,
+            self.plan.kills.len(),
+            self.plan.blackouts.len()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_run_produces_conserving_trace() {
+        let report = run(Scale(0.005), 7);
+        assert!(report.samples > 0, "sampler captured seconds");
+        assert!(report.json.contains("\"traceEvents\""));
+        assert!(report.json.contains("\"lambdafs-trace-events-v1\""));
+        assert!(report.json.contains("\"kill\""), "fault instants exported");
+        // The invariant the validator re-checks on the artifact.
+        let m = &report.metrics;
+        let phase_total: u64 = Phase::ALL.iter().map(|&p| m.phase_hist(p).sum_us()).sum();
+        assert_eq!(phase_total, m.all_lat.sum_us(), "phase sums conserve e2e latency");
+    }
+
+    #[test]
+    fn observe_is_seed_deterministic() {
+        let a = run(Scale(0.005), 11);
+        let b = run(Scale(0.005), 11);
+        assert_eq!(a.json, b.json, "same seed, same trace bytes");
+        assert_eq!(a.metrics.outcome_fingerprint(), b.metrics.outcome_fingerprint());
+    }
+}

@@ -21,6 +21,7 @@
 use crate::chaos::ChaosPlan;
 use crate::metrics::RunMetrics;
 use crate::systems::{Completion, MetadataService, Request};
+use crate::telemetry::Timeline;
 use crate::util::rng::Rng;
 
 use super::format::{Trace, TraceEvent, TraceMeta};
@@ -54,6 +55,17 @@ impl<S: MetadataService> MetadataService for Recorder<S> {
     fn install_chaos(&mut self, plan: &ChaosPlan) {
         self.chaos = plan.clone();
         self.inner.install_chaos(plan);
+    }
+
+    // Telemetry passes straight through: the sampler is the wrapped
+    // system's (read-only, no RNG draws), so arming it under a recording
+    // cannot perturb the captured stream.
+    fn install_telemetry(&mut self, timeline: Timeline) -> bool {
+        self.inner.install_telemetry(timeline)
+    }
+
+    fn take_telemetry(&mut self) -> Option<Timeline> {
+        self.inner.take_telemetry()
     }
 
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {

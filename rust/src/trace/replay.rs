@@ -105,7 +105,7 @@ mod tests {
     impl MetadataService for Fixed {
         fn submit(&mut self, req: Request<'_>, _r: &mut Rng) -> Completion {
             self.submits.push((req.at, req.client));
-            Completion { done: req.at + time::from_ms(2.0), outcome: Outcome::warm(0) }
+            Completion::unstamped(req.at + time::from_ms(2.0), Outcome::warm(0))
         }
         fn on_second(&mut self, s: usize) {
             self.seconds.push(s);

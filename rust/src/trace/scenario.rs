@@ -27,6 +27,7 @@ use crate::metrics::RunMetrics;
 use crate::namespace::generate::{HotspotSampler, NamespaceParams};
 use crate::namespace::Namespace;
 use crate::systems::{driver, LambdaFs, MetadataService};
+use crate::telemetry::Phase;
 use crate::util::fnv::fnv1a64;
 use crate::util::rng::Rng;
 use crate::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
@@ -43,8 +44,12 @@ use super::synth::{self, ContainerChurnSpec, MlPipelineSpec};
 /// scale replays the Spotify trace under each [`CHAOS_MODES`] fault plan
 /// against every system — and cells gained `chaos`/`submitted`/
 /// `timeouts`/`gave_up` (conservation: completed_ops + gave_up ==
-/// submitted). Earlier artifacts are not fingerprint-comparable.
-pub const SCHEMA: &str = "lambdafs-scenarios-v3";
+/// submitted). v4: the span ledger — cells gained `dominant_phase` (the
+/// phase contributing the most total latency), `p99_us` (that phase's
+/// p99), and `queue_share`/`cold_share` (the queue-wait and cold-start
+/// fractions of total phase time). Earlier artifacts are not
+/// fingerprint-comparable.
+pub const SCHEMA: &str = "lambdafs-scenarios-v4";
 
 /// Systems every workload runs against.
 pub const SYSTEMS: [&str; 4] = ["lambdafs", "hopsfs", "hopsfs+cache", "cephfs"];
@@ -85,6 +90,13 @@ pub struct ScenarioCell {
     pub timeouts: u64,
     /// Ops abandoned after exhausting the retry budget.
     pub gave_up: u64,
+    /// The phase of the span ledger contributing the most total latency
+    /// (`"-"` if the ledger is empty), its p99 in µs, and the
+    /// queue-wait / cold-start fractions of total phase time (v4).
+    pub dominant_phase: &'static str,
+    pub p99_us: f64,
+    pub queue_share: f64,
+    pub cold_share: f64,
     /// `RunMetrics::outcome_fingerprint` — the determinism contract per
     /// cell, covering the outcome columns as well as the run state.
     pub fingerprint: u64,
@@ -206,6 +218,10 @@ fn make_cell(
         retries: m.total_retries(),
         timeouts: m.timeouts,
         gave_up: m.gave_up,
+        dominant_phase: m.dominant_phase().map(Phase::name).unwrap_or("-"),
+        p99_us: m.dominant_phase().map(|p| m.phase_hist(p).p99()).unwrap_or(0.0),
+        queue_share: m.phase_share(Phase::Queue),
+        cold_share: m.phase_share(Phase::ColdStart),
         // The superset digest, so per-cell determinism also
         // pins the outcome columns, not just latencies.
         fingerprint: m.outcome_fingerprint(),
@@ -423,6 +439,10 @@ impl ScenarioReport {
                     c.retries.to_string(),
                     c.timeouts.to_string(),
                     c.gave_up.to_string(),
+                    c.dominant_phase.to_string(),
+                    format!("{:.0}", c.p99_us),
+                    format!("{:.1}", c.queue_share * 100.0),
+                    format!("{:.1}", c.cold_share * 100.0),
                     format!("{:08x}", c.fingerprint >> 32),
                 ]
             })
@@ -432,7 +452,7 @@ impl ScenarioReport {
             &[
                 "workload", "chaos", "scale", "system", "ops", "avg_tput", "peak_tput",
                 "p50_ms", "p99_ms", "cost_$", "cold", "hit_%", "retries", "t_out", "gaveup",
-                "fp",
+                "dom_phase", "dom_p99_us", "queue_%", "cold_%", "fp",
             ],
             &rows,
         );
@@ -478,6 +498,8 @@ impl ScenarioReport {
                  \"cold_starts\": {}, \"warm_ops\": {}, \"cache_hits\": {}, \
                  \"cache_misses\": {}, \"cache_hit_ratio\": {:.6}, \"retries\": {}, \
                  \"timeouts\": {}, \"gave_up\": {}, \
+                 \"dominant_phase\": \"{}\", \"p99_us\": {:.1}, \
+                 \"queue_share\": {:.6}, \"cold_share\": {:.6}, \
                  \"fingerprint\": \"{:#018x}\"}}",
                 c.system,
                 c.workload,
@@ -498,6 +520,10 @@ impl ScenarioReport {
                 c.retries,
                 c.timeouts,
                 c.gave_up,
+                c.dominant_phase,
+                c.p99_us,
+                c.queue_share,
+                c.cold_share,
                 c.fingerprint
             );
             s.push_str(if i + 1 < self.cells.len() { ",\n" } else { "\n" });
@@ -548,6 +574,14 @@ mod tests {
                 c.chaos
             );
             assert!(c.cache_hits + c.cache_misses <= c.completed_ops);
+            // v4 span-ledger columns: every real-system cell stamps
+            // phases, so the ledger is never empty and the shares are
+            // proper fractions.
+            assert_ne!(c.dominant_phase, "-", "{}/{} has a phase ledger", c.system, c.workload);
+            assert!(c.p99_us > 0.0);
+            assert!((0.0..=1.0).contains(&c.queue_share));
+            assert!((0.0..=1.0).contains(&c.cold_share));
+            assert!(c.queue_share + c.cold_share <= 1.0 + 1e-9);
             if c.chaos == "none" {
                 assert_eq!(c.timeouts, 0, "{}/{} timeouts without chaos", c.system, c.workload);
                 assert_eq!(c.gave_up, 0, "{}/{} give-ups without chaos", c.system, c.workload);
@@ -588,6 +622,10 @@ mod tests {
         }
         for mode in CHAOS_MODES {
             assert!(json.contains(mode));
+        }
+        assert!(json.contains("\"lambdafs-scenarios-v4\""));
+        for key in ["\"dominant_phase\"", "\"p99_us\"", "\"queue_share\"", "\"cold_share\""] {
+            assert!(json.contains(key), "v4 cell key {key} missing");
         }
     }
 }

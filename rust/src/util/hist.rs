@@ -120,6 +120,13 @@ impl Histogram {
         self.count
     }
 
+    /// Exact sum of recorded values as integer µs. `sum` accumulates
+    /// integer µs in f64, which is exact below 2^53 — far beyond any
+    /// simulated run's total latency.
+    pub fn sum_us(&self) -> u64 {
+        self.sum as u64
+    }
+
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0

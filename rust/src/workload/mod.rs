@@ -47,6 +47,48 @@
 //! [`crate::chaos::ChaosPlan`]s that ride in the trace header, so any
 //! recorded chaotic run replays bit-identically (pinned in
 //! `rust/tests/determinism.rs`).
+//!
+//! # Reading a Perfetto trace
+//!
+//! `lambdafs observe [--smoke] [--out trace.json]` runs the Spotify
+//! workload against λFS with the per-second timeline sampler armed and a
+//! small seeded fault schedule installed (two instance kills plus one
+//! deployment blackout, placed at fixed fractions of the run), then
+//! writes the run as Chrome trace-event JSON. Load the file at
+//! <https://ui.perfetto.dev> (or `chrome://tracing`); one trace second
+//! equals one sampled simulation second.
+//!
+//! Seven counter tracks render the sampler's gauges:
+//!
+//! | track | meaning |
+//! |---|---|
+//! | `live instances` | serverless instances per deployment (stacked series `dep0`, `dep1`, …) — watch it dip at a kill and refill as the scheduler scales back out |
+//! | `warm instances` | instances past cold-start and reusable; the gap to `live instances` is capacity still paying cold-start |
+//! | `throughput (ops/s)` | completed ops in each sampled second |
+//! | `backlog (ops)` | submitted-but-not-completed ops; growth means the offered load outruns capacity |
+//! | `cache hit ratio (%)` | metadata-cache hit rate over the ops completed that second |
+//! | `cost rate ($/s)` | simulated spend rate (the cost model's running total, differenced per second) |
+//! | `faults (cumulative)` | running count of timeouts + give-ups; flat means the fault schedule isn't biting |
+//!
+//! Instant events (grey vertical carets, global scope) mark the fault
+//! schedule and the platform's reaction: `kill` for each scheduled
+//! instance kill, `blackout start` / `blackout end` bracketing a
+//! deployment blackout, and `scale-out` when the platform adds
+//! instances. Correlating an instant with the counter tracks around it
+//! is the intended reading: a `kill` should show `live instances`
+//! dropping, `backlog (ops)` bumping, and `throughput (ops/s)`
+//! recovering within a few seconds.
+//!
+//! Beside `traceEvents`, the artifact carries a `lambdafs` summary
+//! section (schema `lambdafs-trace-events-v1`) holding the span layer's
+//! phase ledger: per-phase latency totals and p50/p99 for the seven
+//! phases (`queue`, `cold`, `net`, `exec`, `coherence`, `store`,
+//! `retry`), the dominant phase, and the end-to-end total. The ledger
+//! conserves: `sum(phase_totals_us) == e2e_total_us`, because the span
+//! cursor attributes every microsecond of every completed op to exactly
+//! one phase. `scripts/validate_trace_events.py` (run by CI on the
+//! smoke artifact) rejects any trace that violates this, has
+//! non-monotone timestamps, or is missing a counter track.
 
 pub mod schedule;
 pub mod spec;

@@ -380,10 +380,10 @@ impl MetadataService for Fixed {
         req: lambda_fs::systems::Request<'_>,
         _rng: &mut Rng,
     ) -> lambda_fs::systems::Completion {
-        lambda_fs::systems::Completion {
-            done: req.at + time::from_ms(self.per_op_ms),
-            outcome: lambda_fs::systems::Outcome::warm(0),
-        }
+        lambda_fs::systems::Completion::unstamped(
+            req.at + time::from_ms(self.per_op_ms),
+            lambda_fs::systems::Outcome::warm(0),
+        )
     }
     fn on_second(&mut self, _s: usize) {}
     fn metrics_mut(&mut self) -> &mut RunMetrics {
@@ -870,6 +870,165 @@ fn empty_chaos_plan_is_identity() {
         sys.into_metrics()
     };
     assert_eq!(run_ceph(false).fingerprint(), run_ceph(true).fingerprint());
+}
+
+/// The telemetry zero-overhead contract (PR-7 twin of the empty-chaos
+/// identity above): arming the per-second timeline sampler consumes no
+/// RNG draws and touches no simulated state, so a telemetry-on run is
+/// fingerprint-identical — base digest AND outcome ledger — to the same
+/// seed's telemetry-off run, for λFS and the baselines alike.
+#[test]
+fn telemetry_sampler_is_zero_overhead() {
+    use lambda_fs::telemetry::Timeline;
+    let (cfg, ns, sampler) = fixture(1234);
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(8, 800.0),
+        mix: OpMix::spotify(),
+        n_clients: 64,
+        n_vms: 2,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+
+    // λFS (driver stream ^ 0xd0, the same as run_lambdafs_open).
+    let run_lfs = |telemetry: bool| -> (RunMetrics, Option<Timeline>) {
+        let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+        if telemetry {
+            assert!(sys.install_telemetry(Timeline::new("lambdafs", 8)));
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0xd0);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        let tl = sys.take_telemetry();
+        (sys.into_metrics(), tl)
+    };
+    let (off, none) = run_lfs(false);
+    let (on, tl) = run_lfs(true);
+    assert!(none.is_none(), "nothing to take when never armed");
+    let tl = tl.expect("armed sampler is retrievable");
+    assert!(!tl.samples.is_empty(), "the sampler actually captured seconds");
+    assert_eq!(off.fingerprint(), on.fingerprint(), "telemetry perturbed λFS");
+    assert_eq!(off.outcome_fingerprint(), on.outcome_fingerprint(), "ledger diverged");
+
+    // HopsFS+Cache (^ 0xb0) and CephFS (^ 0xce) honor the same contract.
+    let run_hops = |telemetry: bool| -> RunMetrics {
+        let mut sys = HopsFs::new(cfg.clone(), ns.clone(), 128.0, true);
+        if telemetry {
+            assert!(sys.install_telemetry(Timeline::new("hopsfs+cache", 1)));
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0xb0);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    };
+    assert_eq!(
+        run_hops(false).outcome_fingerprint(),
+        run_hops(true).outcome_fingerprint(),
+        "telemetry perturbed HopsFS"
+    );
+
+    let run_ceph = |telemetry: bool| -> RunMetrics {
+        let mut sys = CephFs::new(cfg.clone(), ns.clone(), 128.0);
+        if telemetry {
+            assert!(sys.install_telemetry(Timeline::new("cephfs", 1)));
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0xce);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    };
+    assert_eq!(
+        run_ceph(false).outcome_fingerprint(),
+        run_ceph(true).outcome_fingerprint(),
+        "telemetry perturbed CephFS"
+    );
+}
+
+/// The span layer's conservation invariant at the run level: every
+/// completed op's phase breakdown sums to its end-to-end latency, so the
+/// per-phase totals sum exactly to the all-ops latency total — and the
+/// per-phase histograms each hold one sample per completed op.
+#[test]
+fn phase_breakdowns_conserve_e2e_latency() {
+    use lambda_fs::telemetry::Phase;
+    let m = run_lambdafs_open(1234);
+    assert!(m.completed_ops > 0);
+    let phase_total: u64 = Phase::ALL.iter().map(|&p| m.phase_hist(p).sum_us()).sum();
+    assert_eq!(phase_total, m.all_lat.sum_us(), "phase sums must conserve e2e latency");
+    for p in Phase::ALL {
+        assert_eq!(
+            m.phase_hist(p).count(),
+            m.completed_ops,
+            "phase {} stamped on every op",
+            p.name()
+        );
+    }
+    // The shares are a partition of the attributed latency.
+    let share_sum: f64 = Phase::ALL.iter().map(|&p| m.phase_share(p)).sum();
+    assert!((share_sum - 1.0).abs() < 1e-9, "shares sum to 1: {share_sum}");
+    // A Spotify λFS run touches the queue, exec, net, and store phases.
+    for p in [Phase::Queue, Phase::Exec, Phase::Net, Phase::Store] {
+        assert!(m.phase_hist(p).sum_us() > 0, "phase {} never attributed", p.name());
+    }
+}
+
+/// Record→replay stays bit-identical with the sampler armed on both
+/// sides, and the two samplers capture fingerprint-identical timelines.
+#[test]
+fn record_replay_bit_identical_with_sampler_armed() {
+    use lambda_fs::telemetry::Timeline;
+    // Mirror trace_record_replay_bit_identical_spotify with the sampler
+    // armed on both sides: recording a run with telemetry on still
+    // captures the identical trace, the replay reproduces the identical
+    // fingerprints, and both samplers saw the identical per-second story.
+    let seed = 2024u64;
+    let (cfg, ns, sampler) = fixture(seed);
+    let params = NamespaceParams { n_dirs: 384, files_per_dir: 24, ..Default::default() };
+    let mut sched_rng = Rng::new(seed ^ 0x5c);
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::pareto_bursty(6, 3, 600.0, 2.0, 7.0, &mut sched_rng),
+        mix: OpMix::spotify(),
+        n_clients: 64,
+        n_vms: 2,
+        namespace: params.clone(),
+        zipf_s: 1.3,
+    };
+    let meta = TraceMeta::new("spotify", seed, &params, spec.n_clients, spec.n_vms);
+
+    let mut rec =
+        Recorder::new(LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms), meta);
+    assert!(rec.install_telemetry(Timeline::new("lambdafs", 8)), "recorder forwards the hook");
+    let mut rng = Rng::new(cfg.seed ^ 0xabcd);
+    driver::run_open_loop(&mut rec, &spec, &ns, &sampler, &mut rng);
+    let tl_rec = rec.take_telemetry().expect("recording sampler retrievable");
+    let (sys, trace) = rec.into_parts();
+    let m_rec = sys.into_metrics();
+
+    let mut replayed = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+    assert!(replayed.install_telemetry(Timeline::new("lambdafs", 8)));
+    replay(&mut replayed, &trace, &mut Rng::new(cfg.seed ^ 0xabcd));
+    let tl_rep = replayed.take_telemetry().expect("replay sampler retrievable");
+    let m_rep = replayed.into_metrics();
+
+    assert_eq!(m_rec.fingerprint(), m_rep.fingerprint(), "sampler broke record→replay");
+    assert_eq!(m_rec.outcome_fingerprint(), m_rep.outcome_fingerprint());
+    assert_eq!(
+        tl_rec.fingerprint(),
+        tl_rep.fingerprint(),
+        "record and replay samplers captured different timelines"
+    );
+    // The binary timeline section round-trips bit for bit too.
+    let decoded = Timeline::decode(&tl_rec.encode()).expect("timeline decodes");
+    assert_eq!(decoded.fingerprint(), tl_rec.fingerprint());
+
+    // And the armed recording still matches the unarmed baseline run
+    // (zero-overhead, composed with the recording path).
+    let mut bare =
+        Recorder::new(LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms), {
+            TraceMeta::new("spotify", seed, &params, spec.n_clients, spec.n_vms)
+        });
+    let mut rng = Rng::new(cfg.seed ^ 0xabcd);
+    driver::run_open_loop(&mut bare, &spec, &ns, &sampler, &mut rng);
+    let (bare_sys, bare_trace) = bare.into_parts();
+    assert_eq!(bare_trace, trace, "telemetry must not change the captured trace");
+    assert_eq!(bare_sys.into_metrics().fingerprint(), m_rec.fingerprint());
 }
 
 /// Driving the *same closed-loop workload* through both queue

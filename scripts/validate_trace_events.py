@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Validate a `lambdafs observe` Chrome trace-event JSON artifact.
+
+Checks the three contracts the exporter promises:
+
+1. **Viewer shape** — a `traceEvents` array in the Trace Event JSON
+   Object Format: metadata/counter/instant phases only, counter args all
+   numeric (Perfetto renders them as counter tracks), instant events
+   global-scoped, and `ts` non-decreasing in rendered order.
+2. **Track coverage** — every gauge of the per-second timeline sampler
+   appears as a counter track, and the fault schedule that ran shows up
+   as instant events (`kill`, `blackout start/end`) matching the counts
+   in the summary section.
+3. **Conservation** — the `lambdafs` summary section's per-phase latency
+   totals sum exactly to the end-to-end latency total: the span layer
+   attributed every microsecond of every completed op to exactly one
+   phase.
+
+Usage: validate_trace_events.py <trace.json>
+Exits non-zero with a message on the first violated contract.
+"""
+
+import json
+import sys
+
+SCHEMA = "lambdafs-trace-events-v1"
+PHASES = ["queue", "cold", "net", "exec", "coherence", "store", "retry"]
+COUNTER_TRACKS = [
+    "live instances",
+    "warm instances",
+    "throughput (ops/s)",
+    "backlog (ops)",
+    "cache hit ratio (%)",
+    "cost rate ($/s)",
+    "faults (cumulative)",
+]
+
+
+def fail(msg):
+    print(f"validate_trace_events: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check(cond, msg):
+    if not cond:
+        fail(msg)
+
+
+def main(path):
+    with open(path) as f:
+        doc = json.load(f)
+
+    check(isinstance(doc.get("traceEvents"), list), "traceEvents array missing")
+    events = doc["traceEvents"]
+    check(len(events) > 0, "empty traceEvents")
+
+    last_ts = 0
+    counter_names = set()
+    instant_counts = {}
+    for i, ev in enumerate(events):
+        check(isinstance(ev.get("name"), str) and ev["name"], f"event {i}: no name")
+        ph = ev.get("ph")
+        check(ph in ("M", "C", "i"), f"event {i}: unexpected ph {ph!r}")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        check(isinstance(ts, int) and ts >= 0, f"event {i}: bad ts {ts!r}")
+        check(ts >= last_ts, f"event {i}: ts regressed {ts} < {last_ts}")
+        last_ts = ts
+        args = ev.get("args")
+        check(isinstance(args, dict) and args, f"event {i}: no args")
+        if ph == "C":
+            counter_names.add(ev["name"])
+            for k, v in args.items():
+                check(
+                    isinstance(v, (int, float)) and not isinstance(v, bool),
+                    f"counter {ev['name']!r} arg {k!r} not numeric: {v!r}",
+                )
+        else:  # instant
+            check(ev.get("s") == "g", f"instant {ev['name']!r}: scope {ev.get('s')!r}")
+            instant_counts[ev["name"]] = instant_counts.get(ev["name"], 0) + 1
+
+    for track in COUNTER_TRACKS:
+        check(track in counter_names, f"counter track {track!r} missing")
+
+    summary = doc.get("lambdafs")
+    check(isinstance(summary, dict), "lambdafs summary section missing")
+    check(summary.get("schema") == SCHEMA, f"schema {summary.get('schema')!r} != {SCHEMA!r}")
+    check(summary.get("completed_ops", 0) > 0, "no completed ops")
+    check(summary.get("seconds", 0) > 0, "no sampled seconds")
+
+    totals = summary.get("phase_totals_us")
+    check(isinstance(totals, dict), "phase_totals_us missing")
+    check(sorted(totals) == sorted(PHASES), f"phase keys {sorted(totals)}")
+    for name, quantiles in (("phase_p50_us", summary.get("phase_p50_us")),
+                            ("phase_p99_us", summary.get("phase_p99_us"))):
+        check(isinstance(quantiles, dict) and sorted(quantiles) == sorted(PHASES),
+              f"{name} malformed")
+    for p in PHASES:
+        check(summary["phase_p50_us"][p] <= summary["phase_p99_us"][p] + 1e-9,
+              f"phase {p}: p50 > p99")
+
+    phase_sum = sum(totals.values())
+    e2e = summary.get("e2e_total_us")
+    check(isinstance(e2e, int), "e2e_total_us missing")
+    check(
+        phase_sum == e2e,
+        f"conservation violated: sum(phase_totals_us)={phase_sum} != e2e_total_us={e2e}",
+    )
+    dom = summary.get("dominant_phase")
+    check(dom in PHASES or (dom == "-" and phase_sum == 0), f"dominant_phase {dom!r}")
+    if phase_sum > 0:
+        check(totals[dom] == max(totals.values()), "dominant_phase is not the max phase")
+
+    kills = summary.get("kills", 0)
+    if kills > 0:
+        check(
+            instant_counts.get("kill", 0) == kills,
+            f"{kills} kills in summary, {instant_counts.get('kill', 0)} kill instants",
+        )
+    blackouts = summary.get("blackouts", 0)
+    if blackouts > 0:
+        check(
+            instant_counts.get("blackout start", 0) == blackouts,
+            f"{blackouts} blackouts, {instant_counts.get('blackout start', 0)} start instants",
+        )
+
+    n_events = len(events)
+    print(
+        f"validate_trace_events: OK — {n_events} events, {len(counter_names)} counter "
+        f"tracks, {summary['seconds']} s sampled, phase sum {phase_sum} us == e2e "
+        f"({dom} dominant)"
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    main(sys.argv[1])
