@@ -34,6 +34,7 @@ use lambda_fs::metrics::BenchTimer;
 use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
 use lambda_fs::namespace::{DirId, InodeRef, Namespace};
 use lambda_fs::sim::queue::{EventQueue, HeapQueue};
+use lambda_fs::sim::shard::{self, run_open_loop_sharded, Sequential, ShardPlan, ThreadPool};
 use lambda_fs::store::NdbStore;
 use lambda_fs::systems::{driver, LambdaFs, MetadataService};
 use lambda_fs::util::dist::{self, Exp, LogNormal, Pareto, Zipf};
@@ -74,6 +75,7 @@ fn main() {
 
     spots.push(e2e_submit(&cfg, &ns, &sampler));
     spots.push(e2e_submit_batch(&cfg, &ns, &sampler));
+    spots.push(e2e_sharded(&cfg, &ns, &sampler));
     spots.push(event_queue());
     spots.push(cache(&ns, &sampler, &mut rng));
     spots.push(router(&ns, &sampler, &mut rng));
@@ -193,6 +195,62 @@ fn e2e_submit_batch(cfg: &SystemConfig, ns: &Namespace, sampler: &HotspotSampler
         key: "e2e_submit_batch",
         baseline_impl: "scalar submit loop (per-op routing-table lookup)",
         current_impl: "submit_batch (per-client-fleet chunks, amortized routing)",
+        baseline: n_ops / (ms_base / 1_000.0),
+        current: n_ops / (ms_cur / 1_000.0),
+    }
+}
+
+/// End-to-end sharded engine: the identical 4-shard λFS workload through
+/// the conservative-window engine on the scoped thread pool (current) vs
+/// the same engine driven single-threaded (baseline). Both folds must be
+/// fingerprint-identical — the thread-count-invariance contract of
+/// `sim::shard`, measured at benchmark scale.
+fn e2e_sharded(cfg: &SystemConfig, ns: &Namespace, sampler: &HotspotSampler) -> HotSpot {
+    const SHARDS: u32 = 4;
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(12, 20_000.0),
+        mix: OpMix::spotify(),
+        n_clients: 512,
+        n_vms: 8,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+    let n_ops = spec.schedule.total_ops();
+    let plan = ShardPlan::new(SHARDS, spec.n_clients, &cfg.net);
+    let fleet = || -> Vec<LambdaFs> {
+        (0..plan.n_shards)
+            .map(|i| {
+                let mut c = cfg.clone();
+                c.seed = ShardPlan::shard_seed(cfg.seed, i);
+                c.faas.vcpu_limit = cfg.faas.vcpu_limit / f64::from(plan.n_shards);
+                LambdaFs::new(c, ns.clone(), plan.slice(i).len() as u32, spec.n_vms)
+            })
+            .collect()
+    };
+
+    let mut pooled = fleet();
+    let mut r = Rng::new(cfg.seed ^ 0x54a);
+    let exec = ThreadPool::with_default_workers();
+    let (_, ms_cur) = BenchTimer::time(|| {
+        run_open_loop_sharded(&mut pooled, &spec, ns, sampler, &mut r, &plan, &exec);
+    });
+    let fp_cur = shard::fold(pooled).0.outcome_fingerprint();
+
+    let mut seq = fleet();
+    let mut r = Rng::new(cfg.seed ^ 0x54a);
+    let (_, ms_base) = BenchTimer::time(|| {
+        run_open_loop_sharded(&mut seq, &spec, ns, sampler, &mut r, &plan, &Sequential);
+    });
+    let fp_base = shard::fold(seq).0.outcome_fingerprint();
+    assert_eq!(
+        fp_cur, fp_base,
+        "executor choice changed sharded results — thread-count invariance broken"
+    );
+
+    HotSpot {
+        key: "e2e_sharded",
+        baseline_impl: "conservative-window engine on Sequential (single thread)",
+        current_impl: "conservative-window engine on ThreadPool (scoped worker pool)",
         baseline: n_ops / (ms_base / 1_000.0),
         current: n_ops / (ms_cur / 1_000.0),
     }
@@ -606,7 +664,10 @@ fn render_json(spots: &[HotSpot], fnv_rate: f64) -> String {
          SipHash-hasher configuration of current code and understate pre-overhaul \
          cost (the seed tree had no Cargo.toml, so no pre-change binary exists to \
          measure); e2e_submit_batch's baseline is the scalar per-op submit path \
-         driving the identical workload (fingerprint-checked equal)\",\n",
+         driving the identical workload (fingerprint-checked equal); e2e_sharded's \
+         baseline is the conservative-window engine on the Sequential executor — \
+         the same 4-shard plan single-threaded, fingerprint-checked equal to the \
+         thread-pool run\",\n",
     );
     let _ = writeln!(s, "  \"fnv_route_hashes_per_s\": {fnv_rate:.0},");
     s.push_str("  \"hot_spots\": {\n");

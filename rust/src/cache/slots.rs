@@ -82,6 +82,15 @@ impl<S: BuildHasher + Default> SlotCaches<S> {
         self.caches.iter()
     }
 
+    /// Mutable walk over every slot cache — the cross-shard
+    /// `remote_invalidate` fan-out, which cannot know which slots cache
+    /// the affected rows and so conservatively touches them all
+    /// (dead-but-unrecycled caches included, matching the local
+    /// protocol's stale-roster behaviour).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut InternedCache<S>> {
+        self.caches.iter_mut()
+    }
+
     /// Aggregate stats over every instance ever (clear-on-recycle
     /// preserves per-slot counters).
     pub fn total_stats(&self) -> CacheStats {

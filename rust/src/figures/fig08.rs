@@ -3,9 +3,14 @@
 //! cost-normalized HopsFS+Cache vs reduced-cache λFS (8a/8b/8c).
 
 use crate::baselines::HopsFs;
+use crate::config::NetConfig;
 use crate::metrics::cost::performance_per_cost;
 use crate::metrics::RunMetrics;
+use crate::namespace::generate::HotspotSampler;
+use crate::namespace::Namespace;
+use crate::sim::shard::{self, run_open_loop_sharded, ShardPlan, ThreadPool};
 use crate::systems::{driver, LambdaFs, MetadataService};
+use crate::util::rng::Rng;
 use crate::workload::OpenLoopSpec;
 
 use super::common::{self, Fixture, Scale};
@@ -25,8 +30,18 @@ pub struct Fig8 {
 }
 
 /// Run Figure 8 at base throughput `paper_x_t` (25_000 for 8a, 50_000 for
-/// 8b; 8c derives from the same runs).
+/// 8b; 8c derives from the same runs) on the sequential engine.
 pub fn run(scale: Scale, paper_x_t: f64) -> Fig8 {
+    run_with_shards(scale, paper_x_t, 1)
+}
+
+/// Figure 8 on `shards` conservative-window shards (see
+/// [`crate::sim::shard`]). `shards <= 1` is the classic sequential path,
+/// byte-identical to [`run`]; `shards > 1` partitions each system's
+/// client fleet across shards (per-shard seeds, evenly divided resource
+/// budgets) and drives them on the thread pool — a new fingerprint
+/// domain, but one that is invariant in the worker-thread count.
+pub fn run_with_shards(scale: Scale, paper_x_t: f64, shards: u32) -> Fig8 {
     let vcpus = scale.vcpus(512.0);
     let x_t = scale.x_t(paper_x_t);
     let Fixture { cfg, ns, sampler, mut rng } = common::fixture(scale, vcpus);
@@ -55,10 +70,24 @@ pub fn run(scale: Scale, paper_x_t: f64) -> Fig8 {
         let mut c = cfg.clone();
         c.faas.vcpu_limit = vcpus * if paper_x_t <= 30_000.0 { 0.5 } else { 1.0 };
         c.lambda_fs.gb_per_namenode = 6.0; // paper §5.2.2: 6 GB NNs here
-        let mut sys = LambdaFs::new(c, ns.clone(), spec.n_clients, spec.n_vms);
-        let mut r = rng.fork("lfs");
-        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-        outcomes.push(SystemOutcome { name: "lambdafs", metrics: sys.into_metrics() });
+        let base_limit = c.faas.vcpu_limit;
+        let metrics = drive(
+            |seed, n_clients, frac| {
+                let mut c = c.clone();
+                c.seed = seed;
+                c.faas.vcpu_limit = base_limit * frac;
+                LambdaFs::new(c, ns.clone(), n_clients, spec.n_vms)
+            },
+            "lfs",
+            &spec,
+            &ns,
+            &sampler,
+            &mut rng,
+            &cfg.net,
+            cfg.seed,
+            shards,
+        );
+        outcomes.push(SystemOutcome { name: "lambdafs", metrics });
     }
 
     // reduced-cache λFS: cache capacity below the working-set size.
@@ -68,40 +97,137 @@ pub fn run(scale: Scale, paper_x_t: f64) -> Fig8 {
         c.lambda_fs.gb_per_namenode = 6.0;
         let wss = ns.total_files() as usize + ns.n_dirs();
         c.lambda_fs.cache_capacity = (wss / 2 / 16).max(64); // <50% WSS per deployment
-        let mut sys = LambdaFs::new(c, ns.clone(), spec.n_clients, spec.n_vms);
-        let mut r = rng.fork("lfs-reduced");
-        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-        let metrics = sys.into_metrics();
+        let base_limit = c.faas.vcpu_limit;
+        let metrics = drive(
+            |seed, n_clients, frac| {
+                let mut c = c.clone();
+                c.seed = seed;
+                c.faas.vcpu_limit = base_limit * frac;
+                LambdaFs::new(c, ns.clone(), n_clients, spec.n_vms)
+            },
+            "lfs-reduced",
+            &spec,
+            &ns,
+            &sampler,
+            &mut rng,
+            &cfg.net,
+            cfg.seed,
+            shards,
+        );
         outcomes.push(SystemOutcome { name: "lambdafs-reduced-cache", metrics });
     }
 
     // HopsFS (full vCPU allocation).
     {
-        let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, false);
-        let mut r = rng.fork("hopsfs");
-        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-        outcomes.push(SystemOutcome { name: "hopsfs", metrics: sys.into_metrics() });
+        let metrics = drive(
+            |seed, _, frac| {
+                let mut c = cfg.clone();
+                c.seed = seed;
+                HopsFs::new(c, ns.clone(), vcpus * frac, false)
+            },
+            "hopsfs",
+            &spec,
+            &ns,
+            &sampler,
+            &mut rng,
+            &cfg.net,
+            cfg.seed,
+            shards,
+        );
+        outcomes.push(SystemOutcome { name: "hopsfs", metrics });
     }
 
     // HopsFS+Cache (full vCPU allocation).
     {
-        let mut sys = HopsFs::new(cfg.clone(), ns.clone(), vcpus, true);
-        let mut r = rng.fork("hopsfs-cache");
-        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-        outcomes.push(SystemOutcome { name: "hopsfs+cache", metrics: sys.into_metrics() });
+        let metrics = drive(
+            |seed, _, frac| {
+                let mut c = cfg.clone();
+                c.seed = seed;
+                HopsFs::new(c, ns.clone(), vcpus * frac, true)
+            },
+            "hopsfs-cache",
+            &spec,
+            &ns,
+            &sampler,
+            &mut rng,
+            &cfg.net,
+            cfg.seed,
+            shards,
+        );
+        outcomes.push(SystemOutcome { name: "hopsfs+cache", metrics });
     }
 
     // CN HopsFS+Cache: cost-normalized to λFS (paper: 72 / 144 vCPU of
     // 512 for the 25k / 50k workloads).
     {
         let cn_vcpus = vcpus * if paper_x_t <= 30_000.0 { 72.0 / 512.0 } else { 144.0 / 512.0 };
-        let mut sys = HopsFs::new(cfg.clone(), ns.clone(), cn_vcpus.max(16.0), true);
-        let mut r = rng.fork("cn-hopsfs-cache");
-        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
-        outcomes.push(SystemOutcome { name: "cn-hopsfs+cache", metrics: sys.into_metrics() });
+        let cn = cn_vcpus.max(16.0);
+        let metrics = drive(
+            |seed, _, frac| {
+                let mut c = cfg.clone();
+                c.seed = seed;
+                HopsFs::new(c, ns.clone(), cn * frac, true)
+            },
+            "cn-hopsfs-cache",
+            &spec,
+            &ns,
+            &sampler,
+            &mut rng,
+            &cfg.net,
+            cfg.seed,
+            shards,
+        );
+        outcomes.push(SystemOutcome { name: "cn-hopsfs+cache", metrics });
     }
 
     Fig8 { x_t, outcomes }
+}
+
+/// Drive one Fig-8 system. `mk(seed, n_clients, budget_frac)` builds the
+/// system; the sequential path (`shards <= 1`) calls it once with the
+/// run's own seed, the full fleet, and a 1.0 budget fraction — exactly
+/// the pre-shard construction (multiplying a budget by 1.0 is exact), so
+/// pinned sequential fingerprints survive. The sharded path calls it
+/// once per shard with the shard-forked seed, the shard's client-slice
+/// width, and an even budget fraction, then drives the fleet through
+/// [`run_open_loop_sharded`] and folds.
+#[allow(clippy::too_many_arguments)]
+fn drive<S, F>(
+    mk: F,
+    label: &str,
+    spec: &OpenLoopSpec,
+    ns: &Namespace,
+    sampler: &HotspotSampler,
+    rng: &mut Rng,
+    net: &NetConfig,
+    seed: u64,
+    shards: u32,
+) -> RunMetrics
+where
+    S: MetadataService + Send,
+    F: Fn(u64, u32, f64) -> S,
+{
+    let mut r = rng.fork(label);
+    if shards <= 1 {
+        let mut sys = mk(seed, spec.n_clients, 1.0);
+        driver::run_open_loop(&mut sys, spec, ns, sampler, &mut r);
+        return sys.into_metrics();
+    }
+    let plan = ShardPlan::new(shards, spec.n_clients, net);
+    let frac = 1.0 / f64::from(plan.n_shards);
+    let mut systems: Vec<S> = (0..plan.n_shards)
+        .map(|i| mk(ShardPlan::shard_seed(seed, i), plan.slice(i).len() as u32, frac))
+        .collect();
+    run_open_loop_sharded(
+        &mut systems,
+        spec,
+        ns,
+        sampler,
+        &mut r,
+        &plan,
+        &ThreadPool::with_default_workers(),
+    );
+    shard::fold(systems).0
 }
 
 impl Fig8 {
@@ -199,5 +325,27 @@ mod tests {
         assert_eq!(hops.cache_hits, 0);
         assert_eq!(hops.cold_starts, 0);
         assert_eq!(lfs.cold_starts + lfs.warm_ops, lfs.completed_ops);
+    }
+
+    /// The sharded engine drives every Fig-8 system end to end: all
+    /// cells populated, outcome conservation holds in the fold, and the
+    /// whole sharded run is deterministic (run-twice fingerprints).
+    #[test]
+    fn fig8_sharded_engine_smoke() {
+        let fig = run_with_shards(Scale(0.01), 25_000.0, 3);
+        for o in &fig.outcomes {
+            let m = &o.metrics;
+            assert!(m.completed_ops > 0, "{} empty under shards", o.name);
+            assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops, "{}", o.name);
+        }
+        let again = run_with_shards(Scale(0.01), 25_000.0, 3);
+        for (a, b) in fig.outcomes.iter().zip(&again.outcomes) {
+            assert_eq!(
+                a.metrics.outcome_fingerprint(),
+                b.metrics.outcome_fingerprint(),
+                "{} sharded run-twice determinism",
+                a.name
+            );
+        }
     }
 }

@@ -10,7 +10,9 @@
 //! * `subtree`   — run one subtree `mv` (Table 3 style) at a given size.
 //! * `scenario`  — run the (system × workload × scale) trace matrix —
 //!   replayed Spotify + ML-pipeline + container-churn across λFS and the
-//!   baselines — and write `SCENARIOS.json`.
+//!   baselines — and write `SCENARIOS.json`. `--shards N` runs every
+//!   cell on the conservative-window parallel engine and (non-smoke)
+//!   appends the sharded-only 10⁶-client `mega-fleet` tier.
 //! * `observe`   — run one instrumented Spotify λFS experiment with the
 //!   timeline sampler armed and export a Perfetto-loadable Chrome
 //!   trace (`--out trace.json`).
@@ -50,12 +52,15 @@ fn usage() {
         "lambdafs {} — λFS: elastic serverless DFS metadata service (reproduction)\n\n\
          USAGE: lambdafs <command> [--scale f] [--seed n] [--config file]\n\n\
          COMMANDS:\n\
-           spotify  [--base 25000] [--seconds 300]   Spotify workload, all systems\n\
+           spotify  [--base 25000] [--shards 1]      Spotify workload, all systems\n\
            micro    [--op read] [--clients 256]      single-op micro-benchmark\n\
            figure   <8a|8b|8c|9|10|11|12|13|14|15|16|t3|all>\n\
            subtree  [--files 262144]                 one subtree mv, λFS vs HopsFS\n\
-           scenario [--smoke] [--out SCENARIOS.json] trace matrix: replayed Spotify,\n\
-                                                     ML-pipeline, container-churn\n\
+           scenario [--smoke] [--shards N] [--out SCENARIOS.json]\n\
+                                                     trace matrix: replayed Spotify,\n\
+                                                     ML-pipeline, container-churn;\n\
+                                                     --shards N > 1 runs the parallel\n\
+                                                     engine + the 10^6-client tier\n\
            observe  [--smoke] [--out trace.json]     instrumented Spotify run ->\n\
                                                      Perfetto trace-event JSON\n\
            route    <path> [path..] [--deployments 16]  PJRT routing kernel demo\n\
@@ -89,7 +94,8 @@ fn run(args: &Args) -> Result<(), String> {
     match cmd {
         "spotify" => {
             let base = args.get_f64("base", 25_000.0)?;
-            let fig = figures::fig08::run(scale, base);
+            let shards = args.get_usize("shards", 1)? as u32;
+            let fig = figures::fig08::run_with_shards(scale, base, shards);
             fig.report(if base <= 30_000.0 { "25k" } else { "50k" });
             Ok(())
         }
@@ -112,8 +118,9 @@ fn run(args: &Args) -> Result<(), String> {
             let cfg = load_config(args)?;
             let smoke = args.flag("smoke");
             let sc = if smoke { 0.01 } else { scale.0 };
+            let shards = args.get_usize("shards", 1)? as u32;
             let out = args.get_or("out", "SCENARIOS.json");
-            let report = lambda_fs::trace::run_matrix(sc, cfg.seed, smoke);
+            let report = lambda_fs::trace::run_matrix_sharded(sc, cfg.seed, smoke, shards);
             report.print();
             report.write_json(&out)?;
             println!("\nwrote {out}");

@@ -8,10 +8,17 @@
 //! on this clock rather than wall time. Determinism contract: two runs
 //! with the same `SystemConfig.seed` produce identical metrics.
 //!
+//! [`shard`] adds a conservative parallel engine on top: a run splits
+//! into client-fleet shards that advance in lockstep RTT-bounded time
+//! windows and exchange cross-shard events at window barriers in exact
+//! `(time, seq, shard)` order, so fingerprints are independent of the
+//! worker-thread count (sharded runs are their own fingerprint domain).
+//!
 //! Time unit: **microseconds** (`Time = u64`). Helper conversions are in
 //! [`time`].
 
 pub mod queue;
+pub mod shard;
 pub mod station;
 
 pub use queue::{EventQueue, Scheduled};

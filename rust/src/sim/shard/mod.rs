@@ -1,0 +1,932 @@
+//! Conservative sharded parallel simulation engine.
+//!
+//! Partitions a run into `S` shards by client fleet: shard `i` owns a
+//! contiguous slice of the clients (see [`ShardPlan::slice`]), a full
+//! system instance over its own `SlotCaches`, a shard-local
+//! [`RunMetrics`] ledger, and a forked RNG stream
+//! (`root.fork("shard/{i}")` — one stream per shard, no cross-shard
+//! draws). Final ledgers fold through [`RunMetrics::merge`] and
+//! [`Timeline::merge`] in shard order ([`fold`]).
+//!
+//! # Conservative time windows
+//!
+//! Shards advance in lockstep *windows*. The lookahead is the network
+//! RTT floor, `rtt = from_ms(net.tcp_median_ms).max(1)` µs: no
+//! cross-shard interaction can land earlier than one TCP hop after the
+//! op that caused it completed. Each simulated second is cut into
+//! `wps = SEC.div_ceil(rtt)` windows; window `w` of second `s` spans
+//! `[s·SEC + w·SEC/wps, s·SEC + (w+1)·SEC/wps)` (multiply-before-divide,
+//! so the last window of a second ends exactly on the second boundary
+//! and every window is at most `rtt` long).
+//!
+//! # Outbox invariants and the `(time, seq, shard)` merge
+//!
+//! During a window each shard runs alone on its own state and buffers
+//! outbound cross-shard events ([`Envelope`]s — coherence invalidations
+//! for completed write-class ops) into a private outbox, stamping each
+//! with a per-shard emission counter `seq`. At the window barrier the
+//! single-threaded merge gathers all outboxes, sorts the in-flight set
+//! by `(deliver_at, seq, src_shard)` — a total order, since `(seq, src)`
+//! is unique — and delivers every envelope due before the *next*
+//! window's end to each shard except its source, via
+//! [`MetadataService::remote_invalidate`]. Conservativeness: an envelope
+//! emitted during window `w` has `deliver_at ≥ window_start(w) + rtt ≥
+//! window_end(w)`, so nothing a shard does in window `w+1` can require
+//! an envelope that was not already merged at the barrier after `w` —
+//! the lookahead bound is exactly what makes delivering
+//! `deliver_at < window_end(w+1)` at that barrier complete. The final
+//! barrier uses an infinite threshold so no envelope is dropped.
+//!
+//! Because every mutation happens either inside a shard's exclusive
+//! window or in the single-threaded barrier merge, the result is
+//! **independent of worker-thread count by construction**: the
+//! [`Sequential`] executor and the [`ThreadPool`] executor produce
+//! identical `fingerprint()` / `outcome_fingerprint()` for the same
+//! `(seed, ShardPlan)` (pinned in `rust/tests/determinism.rs`).
+//!
+//! # Determinism domains
+//!
+//! Sharded runs are a **new fingerprint domain**: per-shard RNG forking
+//! intentionally shifts the sampled streams, so an `S ≥ 2` run is not
+//! comparable to the single-threaded driver's pinned fingerprints. The
+//! unsharded default path (`--shards 1`-less CLI) does not go through
+//! this module at all and stays byte-identical to previous releases.
+//! Within the sharded domain the usual contracts hold: run-twice
+//! equality, 1-vs-N-worker equality, and record→replay bit-identity
+//! (the per-shard recorded traces replay through [`replay_sharded`]
+//! with the same window walk). An `S = 1` plan degenerates to the
+//! sequential open-loop driver run on a `shard_seed(seed, 0)` system
+//! with a `root.fork("shard/0")` stream — pinned as a differential.
+//!
+//! Chaos plans lower onto shards by cloning the declarative plan into
+//! every shard trace; each shard arms it against its own
+//! `shard_seed`-seeded system, so fault streams are shard-disjoint by
+//! the same forking argument. Partition / straggler VM indices are
+//! interpreted against the shard-local VM fleet.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use crate::config::NetConfig;
+use crate::metrics::RunMetrics;
+use crate::namespace::generate::HotspotSampler;
+use crate::namespace::{Namespace, Operation};
+use crate::sim::{time, Time};
+use crate::systems::{driver, MetadataService, Request};
+use crate::telemetry::Timeline;
+use crate::trace::{Trace, TraceEvent};
+use crate::util::fnv::fnv1a64;
+use crate::util::rng::Rng;
+use crate::workload::OpenLoopSpec;
+
+/// How a run decomposes into shards: the client-fleet partition plus the
+/// conservative window geometry derived from the network RTT floor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub n_shards: u32,
+    pub n_clients: u32,
+    /// Windows per simulated second (`SEC.div_ceil(rtt_us)`).
+    pub windows_per_sec: u64,
+    /// Conservative lookahead: the cross-shard delivery latency (µs).
+    pub rtt_us: Time,
+}
+
+impl ShardPlan {
+    /// Plan `n_shards` shards over `n_clients` clients with the lookahead
+    /// taken from the network model's TCP RTT floor.
+    pub fn new(n_shards: u32, n_clients: u32, net: &NetConfig) -> Self {
+        let rtt_us = time::from_ms(net.tcp_median_ms).max(1);
+        ShardPlan {
+            n_shards: n_shards.max(1),
+            n_clients,
+            windows_per_sec: time::SEC.div_ceil(rtt_us),
+            rtt_us,
+        }
+    }
+
+    /// The contiguous global-client range shard `shard` owns. Slices
+    /// partition `0..n_clients`; the first `n_clients % n_shards` shards
+    /// are one client longer.
+    pub fn slice(&self, shard: u32) -> std::ops::Range<u32> {
+        debug_assert!(shard < self.n_shards);
+        let base = self.n_clients / self.n_shards;
+        let rem = self.n_clients % self.n_shards;
+        let lo = shard * base + shard.min(rem);
+        lo..lo + base + u32::from(shard < rem)
+    }
+
+    /// Inverse of [`ShardPlan::slice`]: the shard owning global `client`.
+    pub fn owner_of(&self, client: u32) -> u32 {
+        debug_assert!(client < self.n_clients);
+        let base = self.n_clients / self.n_shards;
+        let rem = self.n_clients % self.n_shards;
+        if base == 0 {
+            // Fewer clients than shards: client i lives alone on shard i.
+            return client;
+        }
+        let wide = (base + 1) * rem; // clients held by the longer slices
+        if client < wide {
+            client / (base + 1)
+        } else {
+            rem + (client - wide) / base
+        }
+    }
+
+    /// The seed shard `shard`'s system instance is built from. Matches
+    /// the `root.fork("shard/{i}")` label hash so seed and stream shift
+    /// together.
+    pub fn shard_seed(base: u64, shard: u32) -> u64 {
+        base ^ fnv1a64(format!("shard/{shard}").as_bytes())
+    }
+
+    /// Exclusive end (µs) of window `round`. Rounds count globally:
+    /// round `r` is window `r % wps` of second `r / wps`. The engines
+    /// special-case the final round of a run to `Time::MAX` so straggler
+    /// events and envelopes are always consumed.
+    pub fn window_end(&self, round: u64) -> Time {
+        let wps = self.windows_per_sec;
+        (round / wps) * time::SEC + (round % wps + 1) * time::SEC / wps
+    }
+
+    /// Partition a recorded trace into one trace per shard: `Op` events
+    /// go to their client's owner with the client id remapped to the
+    /// shard-local fleet, `Second` markers are replicated with the
+    /// per-shard op count as target, and the chaos plan is cloned onto
+    /// every shard (shard-disjoint fault streams come from the per-shard
+    /// system seeds).
+    pub fn split_trace(&self, trace: &Trace) -> Vec<Trace> {
+        let mut out: Vec<Trace> = (0..self.n_shards)
+            .map(|i| {
+                let mut meta = trace.meta.clone();
+                meta.n_clients = self.slice(i).len() as u32;
+                Trace { meta, events: Vec::new(), chaos: trace.chaos.clone() }
+            })
+            .collect();
+        let mut since_marker = vec![0u64; self.n_shards as usize];
+        for ev in &trace.events {
+            match *ev {
+                TraceEvent::Op { at, client, op } => {
+                    let owner = self.owner_of(client % self.n_clients.max(1)) as usize;
+                    let lo = self.slice(owner as u32).start;
+                    out[owner].events.push(TraceEvent::Op { at, client: client - lo, op });
+                    since_marker[owner] += 1;
+                }
+                TraceEvent::Second { second, .. } => {
+                    for (i, t) in out.iter_mut().enumerate() {
+                        t.events.push(TraceEvent::Second { second, target: since_marker[i] });
+                        since_marker[i] = 0;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A buffered cross-shard event: a coherence invalidation for a completed
+/// write-class op, delivered to every shard except its source at the
+/// first window barrier whose threshold covers `deliver_at`.
+#[derive(Clone, Copy, Debug)]
+pub struct Envelope {
+    pub deliver_at: Time,
+    /// Per-source-shard emission counter; `(seq, src)` is unique, making
+    /// the `(deliver_at, seq, src)` merge key a total order.
+    pub seq: u64,
+    pub src: u32,
+    pub op: Operation,
+}
+
+/// Drives the window loop: `shard_job(round, shard)` may run on any
+/// worker thread (each shard is touched by exactly one worker per
+/// round); `barrier_job(round)` runs single-threaded after every shard
+/// finished the round. Implementations only choose *where* shard jobs
+/// run — all orderings that matter are fixed by the barrier merge, so
+/// every executor produces identical results.
+pub trait Executor {
+    fn drive<F, B>(&self, n_shards: usize, rounds: usize, shard_job: F, barrier_job: B)
+    where
+        F: Fn(usize, usize) + Sync,
+        B: FnMut(usize);
+}
+
+/// Runs every shard on the calling thread (the default executor).
+pub struct Sequential;
+
+impl Executor for Sequential {
+    fn drive<F, B>(&self, n_shards: usize, rounds: usize, shard_job: F, mut barrier_job: B)
+    where
+        F: Fn(usize, usize) + Sync,
+        B: FnMut(usize),
+    {
+        for round in 0..rounds {
+            for shard in 0..n_shards {
+                shard_job(round, shard);
+            }
+            barrier_job(round);
+        }
+    }
+}
+
+/// A zero-dependency `std::thread::scope` pool: `workers` persistent
+/// threads pull shard indices off a shared counter each round and meet
+/// the orchestrating thread at a [`std::sync::Barrier`] twice per window
+/// (release + join), so no threads are spawned inside the run loop.
+pub struct ThreadPool {
+    pub workers: usize,
+}
+
+impl ThreadPool {
+    /// One worker per available core, capped at 8 (the window barrier
+    /// serializes often enough that more rarely helps). Worker count
+    /// cannot affect results — see the module doc.
+    pub fn with_default_workers() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool { workers: n.clamp(1, 8) }
+    }
+}
+
+impl Executor for ThreadPool {
+    fn drive<F, B>(&self, n_shards: usize, rounds: usize, shard_job: F, mut barrier_job: B)
+    where
+        F: Fn(usize, usize) + Sync,
+        B: FnMut(usize),
+    {
+        let workers = self.workers.clamp(1, n_shards.max(1));
+        if workers == 1 {
+            Sequential.drive(n_shards, rounds, shard_job, barrier_job);
+            return;
+        }
+        // All parties (workers + orchestrator) wait twice per round, so
+        // the generation counts stay aligned for the whole run.
+        let barrier = Barrier::new(workers + 1);
+        let next = AtomicUsize::new(0);
+        let job = &shard_job;
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    for round in 0..rounds {
+                        barrier.wait();
+                        loop {
+                            // Relaxed suffices: the RMW hands out unique
+                            // indices, and the Barrier publishes the
+                            // orchestrator's reset (and shard state moves
+                            // between threads under each shard's Mutex).
+                            let shard = next.fetch_add(1, Ordering::Relaxed);
+                            if shard >= n_shards {
+                                break;
+                            }
+                            job(round, shard);
+                        }
+                        barrier.wait();
+                    }
+                });
+            }
+            for round in 0..rounds {
+                next.store(0, Ordering::Relaxed);
+                barrier.wait(); // release the round's shard jobs
+                barrier.wait(); // join them
+                barrier_job(round);
+            }
+        });
+    }
+}
+
+/// Per-shard mutable state for one engine run. The `Mutex` is what lets
+/// the `Fn` shard-job closure hand exclusive access to whichever worker
+/// picked the shard up this round — it is never contended (one worker
+/// per shard per round, barrier merge single-threaded).
+struct ShardCell<'a, S> {
+    sys: &'a mut S,
+    /// Submit-side stream (`root.fork("shard/{i}")`).
+    rng: Rng,
+    /// Sampling stream (`shard_rng.fork("ops")`); replay burns it.
+    op_rng: Rng,
+    /// Per-local-client rollover state.
+    ready: Vec<Time>,
+    outbox: Vec<Envelope>,
+    seq: u64,
+    /// Live engine: index of the next op within the current second.
+    op_idx: u64,
+    /// Replay engine: index of the next trace event.
+    cursor: usize,
+}
+
+fn make_cells<'a, S: MetadataService>(
+    shards: &'a mut [S],
+    ready_len: impl Fn(usize) -> usize,
+    root: &mut Rng,
+    burn_ops_fork: bool,
+) -> Vec<Mutex<ShardCell<'a, S>>> {
+    shards
+        .iter_mut()
+        .enumerate()
+        .map(|(i, sys)| {
+            let mut rng = root.fork(&format!("shard/{i}"));
+            // Replay re-issues recorded ops, so the sampling fork is
+            // burned unused — that keeps the submit stream aligned with
+            // the recording (mirrors `trace::replay`).
+            let op_rng = if burn_ops_fork {
+                let _ = rng.fork("ops");
+                Rng::new(0)
+            } else {
+                rng.fork("ops")
+            };
+            Mutex::new(ShardCell {
+                sys,
+                rng,
+                op_rng,
+                ready: vec![0; ready_len(i)],
+                outbox: Vec::new(),
+                seq: 0,
+                op_idx: 0,
+                cursor: 0,
+            })
+        })
+        .collect()
+}
+
+/// The single-threaded window-barrier merge (see the module doc): gather
+/// every outbox into the in-flight set, order by `(deliver_at, seq,
+/// src)`, deliver the prefix due before `threshold` to all non-source
+/// shards.
+fn merge_barrier<S: MetadataService>(
+    cells: &[Mutex<ShardCell<'_, S>>],
+    inflight: &mut Vec<Envelope>,
+    threshold: Time,
+) {
+    for cell in cells {
+        inflight.append(&mut cell.lock().unwrap().outbox);
+    }
+    inflight.sort_unstable_by_key(|e| (e.deliver_at, e.seq, e.src));
+    let due = inflight.partition_point(|e| e.deliver_at < threshold);
+    for e in inflight.drain(..due) {
+        for (i, cell) in cells.iter().enumerate() {
+            if i as u32 != e.src {
+                cell.lock().unwrap().sys.remote_invalidate(e.deliver_at, &e.op);
+            }
+        }
+    }
+}
+
+/// Count of `k ∈ [start, start+len) mod n` landing in `[lo, hi)`;
+/// requires `len ≤ n` (at most one wrap).
+fn circular_overlap(start: u64, len: u64, lo: u64, hi: u64, n: u64) -> u64 {
+    debug_assert!(len <= n && start < n.max(1));
+    let hit = |a: u64, b: u64| b.min(hi).saturating_sub(a.max(lo));
+    let end = start + len;
+    if end <= n {
+        hit(start, end)
+    } else {
+        hit(start, n) + hit(0, end - n)
+    }
+}
+
+/// How many of the `n_ops` round-robined ops starting at global op
+/// counter `start_g` land on clients in `[lo, hi)` (fleet size
+/// `n_clients`). Pure arithmetic — every shard recomputes the global op
+/// layout with zero RNG draws.
+fn owned_ops_in_second(lo: u32, hi: u32, n_clients: u32, start_g: u64, n_ops: u64) -> u64 {
+    let n = n_clients as u64;
+    let full = n_ops / n;
+    let rem = n_ops % n;
+    full * (hi - lo) as u64 + circular_overlap(start_g % n, rem, lo as u64, hi as u64, n)
+}
+
+/// Sharded open-loop driver: the exact op layout of
+/// [`driver::run_open_loop`] (same slots, same round-robin client
+/// rotation, same carry accumulator), decomposed so shard `i` samples
+/// and submits only the ops of its own client slice from its own forked
+/// streams. `shards[i]` must be a system over `plan.slice(i).len()`
+/// clients seeded with [`ShardPlan::shard_seed`].
+pub fn run_open_loop_sharded<S, E>(
+    shards: &mut [S],
+    spec: &OpenLoopSpec,
+    ns: &Namespace,
+    sampler: &HotspotSampler,
+    root: &mut Rng,
+    plan: &ShardPlan,
+    exec: &E,
+) where
+    S: MetadataService + Send,
+    E: Executor,
+{
+    assert_eq!(shards.len(), plan.n_shards as usize, "one system per planned shard");
+    let n_shards = shards.len();
+    let n_clients = spec.n_clients.max(1);
+    let wps = plan.windows_per_sec;
+    let duration = spec.schedule.duration_s();
+    let rounds = duration * wps as usize;
+
+    // The per-second op counts and their prefix sums: the global layout,
+    // recomputed once and shared read-only across shards.
+    let mut n_ops_by_sec = Vec::with_capacity(duration);
+    let mut cum = Vec::with_capacity(duration + 1);
+    cum.push(0u64);
+    let mut carry = 0.0f64;
+    for s in 0..duration {
+        let target = spec.schedule.target(s) + carry;
+        let n_ops = target.floor() as u64;
+        carry = target - n_ops as f64;
+        n_ops_by_sec.push(n_ops);
+        cum.push(cum[s] + n_ops);
+    }
+
+    let emit = n_shards > 1;
+    let cells = make_cells(shards, |i| plan.slice(i as u32).len(), root, false);
+
+    let shard_job = |round: usize, shard: usize| {
+        let mut cell = cells[shard].lock().unwrap();
+        let cell = &mut *cell;
+        let sec = round / wps as usize;
+        let w = round as u64 % wps;
+        let window_end =
+            if round + 1 == rounds { Time::MAX } else { plan.window_end(round as u64) };
+        let n_ops = n_ops_by_sec[sec];
+        let range = plan.slice(shard as u32);
+        if w == 0 {
+            cell.op_idx = 0;
+            cell.sys.metrics_mut().second_mut(sec).target =
+                owned_ops_in_second(range.start, range.end, n_clients, cum[sec], n_ops);
+        }
+        while cell.op_idx < n_ops {
+            let i = cell.op_idx;
+            let slot = driver::open_loop_slot(sec, i, n_ops);
+            if slot >= window_end {
+                break;
+            }
+            cell.op_idx += 1;
+            let c = ((cum[sec] + i) % n_clients as u64) as u32;
+            if !range.contains(&c) {
+                continue; // another shard's op: no draws consumed here
+            }
+            let local = c - range.start;
+            let op = spec.mix.sample_op(ns, sampler, &mut cell.op_rng);
+            let issue = slot.max(cell.ready[local as usize]);
+            let done = cell.sys.submit(Request::scheduled(slot, issue, local, &op), &mut cell.rng);
+            cell.ready[local as usize] = done.done;
+            driver::record(cell.sys, issue, &done, op.kind.is_write());
+            if emit && op.kind.is_write() && !done.outcome.gave_up {
+                cell.outbox.push(Envelope {
+                    deliver_at: done.done.saturating_add(plan.rtt_us),
+                    seq: cell.seq,
+                    src: shard as u32,
+                    op,
+                });
+                cell.seq += 1;
+            }
+        }
+        if w + 1 == wps {
+            cell.sys.on_second(sec);
+        }
+    };
+
+    let mut inflight: Vec<Envelope> = Vec::new();
+    let barrier_job = |round: usize| {
+        if !emit {
+            return;
+        }
+        let threshold =
+            if round + 1 == rounds { Time::MAX } else { plan.window_end(round as u64 + 1) };
+        merge_barrier(&cells, &mut inflight, threshold);
+    };
+
+    exec.drive(n_shards, rounds, shard_job, barrier_job);
+}
+
+/// Sharded replay: each shard walks its own split trace (see
+/// [`ShardPlan::split_trace`]) through the identical window loop,
+/// re-applying per-client rollover and reinstalling the trace's chaos
+/// plan against the shard's own system. Record→replay of a sharded run
+/// is bit-identical (pinned in `rust/tests/determinism.rs`).
+pub fn replay_sharded<S, E>(
+    shards: &mut [S],
+    traces: &[Trace],
+    plan: &ShardPlan,
+    root: &mut Rng,
+    exec: &E,
+) where
+    S: MetadataService + Send,
+    E: Executor,
+{
+    assert_eq!(shards.len(), plan.n_shards as usize, "one system per planned shard");
+    assert_eq!(shards.len(), traces.len(), "one trace per shard");
+    let n_shards = shards.len();
+    let wps = plan.windows_per_sec;
+    let duration = traces.iter().map(Trace::duration_s).max().unwrap_or(0);
+    // At least one round so marker-less traces still drain (the final
+    // round's window extends to `Time::MAX`).
+    let rounds = (duration * wps as usize).max(1);
+
+    let cells =
+        make_cells(shards, |i| traces[i].meta.n_clients.max(1) as usize, root, true);
+    for (cell, trace) in cells.iter().zip(traces) {
+        if !trace.chaos.is_none() {
+            cell.lock().unwrap().sys.install_chaos(&trace.chaos);
+        }
+    }
+
+    let emit = n_shards > 1;
+    let shard_job = |round: usize, shard: usize| {
+        let mut cell = cells[shard].lock().unwrap();
+        let cell = &mut *cell;
+        let window_end =
+            if round + 1 == rounds { Time::MAX } else { plan.window_end(round as u64) };
+        let trace = &traces[shard];
+        let n_clients = trace.meta.n_clients.max(1);
+        while cell.cursor < trace.events.len() {
+            match trace.events[cell.cursor] {
+                TraceEvent::Op { at, client, op } => {
+                    if at >= window_end {
+                        break;
+                    }
+                    let c = client % n_clients;
+                    let issue = at.max(cell.ready[c as usize]);
+                    let done =
+                        cell.sys.submit(Request::scheduled(at, issue, c, &op), &mut cell.rng);
+                    cell.ready[c as usize] = done.done;
+                    driver::record(cell.sys, issue, &done, op.kind.is_write());
+                    if emit && op.kind.is_write() && !done.outcome.gave_up {
+                        cell.outbox.push(Envelope {
+                            deliver_at: done.done.saturating_add(plan.rtt_us),
+                            seq: cell.seq,
+                            src: shard as u32,
+                            op,
+                        });
+                        cell.seq += 1;
+                    }
+                }
+                TraceEvent::Second { second, target } => {
+                    if (second as Time + 1) * time::SEC > window_end {
+                        break;
+                    }
+                    cell.sys.metrics_mut().second_mut(second as usize).target = target;
+                    cell.sys.on_second(second as usize);
+                }
+            }
+            cell.cursor += 1;
+        }
+    };
+
+    let mut inflight: Vec<Envelope> = Vec::new();
+    let barrier_job = |round: usize| {
+        if !emit {
+            return;
+        }
+        let threshold =
+            if round + 1 == rounds { Time::MAX } else { plan.window_end(round as u64 + 1) };
+        merge_barrier(&cells, &mut inflight, threshold);
+    };
+
+    exec.drive(n_shards, rounds, shard_job, barrier_job);
+}
+
+/// Fold shard systems into one run artifact: ledgers through
+/// [`RunMetrics::merge`], armed timelines through [`Timeline::merge`],
+/// both in shard order (the folds are associative, so the order only
+/// fixes tie-breaks deterministically).
+pub fn fold<S: MetadataService>(shards: Vec<S>) -> (RunMetrics, Option<Timeline>) {
+    assert!(!shards.is_empty(), "fold of zero shards");
+    let mut metrics: Option<RunMetrics> = None;
+    let mut timeline: Option<Timeline> = None;
+    for mut sys in shards {
+        if let Some(t) = sys.take_telemetry() {
+            match timeline.as_mut() {
+                Some(acc) => acc.merge(&t),
+                None => timeline = Some(t),
+            }
+        }
+        let m = sys.into_metrics();
+        match metrics.as_mut() {
+            Some(acc) => acc.merge(&m),
+            None => metrics = Some(m),
+        }
+    }
+    (metrics.expect("at least one shard"), timeline)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::namespace::generate::{generate, NamespaceParams};
+    use crate::namespace::{InodeRef, OpKind};
+    use crate::systems::{CacheOutcome, Completion, Outcome};
+    use crate::trace::TraceMeta;
+    use crate::workload::{OpMix, ThroughputSchedule};
+
+    fn plan(n_shards: u32, n_clients: u32) -> ShardPlan {
+        ShardPlan::new(n_shards, n_clients, &SystemConfig::default().net)
+    }
+
+    #[test]
+    fn slices_partition_the_fleet() {
+        for (s, n) in [(1u32, 7u32), (3, 7), (4, 1024), (5, 1023), (7, 3), (8, 8)] {
+            let p = plan(s, n);
+            let mut covered = 0u32;
+            for i in 0..s {
+                let r = p.slice(i);
+                assert_eq!(r.start, covered, "contiguous");
+                covered = r.end;
+                for c in r {
+                    assert_eq!(p.owner_of(c), i, "owner_of inverts slice ({s} shards, {n})");
+                }
+            }
+            assert_eq!(covered, n, "slices cover the fleet");
+        }
+    }
+
+    #[test]
+    fn circular_overlap_matches_brute_force() {
+        for n in [1u64, 2, 5, 8, 13] {
+            for start in 0..n {
+                for len in 0..=n {
+                    for lo in 0..n {
+                        for hi in lo..=n {
+                            let brute = (0..len).filter(|k| {
+                                let c = (start + k) % n;
+                                c >= lo && c < hi
+                            });
+                            assert_eq!(
+                                circular_overlap(start, len, lo, hi, n),
+                                brute.count() as u64,
+                                "n={n} start={start} len={len} [{lo},{hi})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn owned_ops_sum_to_n_ops() {
+        let p = plan(3, 10);
+        for start_g in [0u64, 7, 123] {
+            for n_ops in [0u64, 1, 9, 10, 11, 25, 100] {
+                let total: u64 = (0..3)
+                    .map(|i| {
+                        let r = p.slice(i);
+                        owned_ops_in_second(r.start, r.end, 10, start_g, n_ops)
+                    })
+                    .sum();
+                assert_eq!(total, n_ops, "start_g={start_g} n_ops={n_ops}");
+            }
+        }
+    }
+
+    #[test]
+    fn windows_tile_seconds_within_lookahead() {
+        let p = plan(2, 64);
+        let wps = p.windows_per_sec;
+        assert!(wps >= 1);
+        let mut prev = 0;
+        for round in 0..3 * wps {
+            let end = p.window_end(round);
+            assert!(end > prev, "windows advance");
+            assert!(end - prev <= p.rtt_us, "window no longer than the lookahead");
+            if (round + 1) % wps == 0 {
+                assert_eq!(end, (round / wps + 1) * time::SEC, "seconds tile exactly");
+            }
+            prev = end;
+        }
+    }
+
+    #[test]
+    fn shard_seed_matches_fork_label() {
+        // The per-shard system seed and the per-shard stream use the same
+        // label hash, so both shift together per shard.
+        let s0 = ShardPlan::shard_seed(42, 0);
+        let s1 = ShardPlan::shard_seed(42, 1);
+        assert_ne!(s0, s1);
+        assert_eq!(s0, 42 ^ fnv1a64(b"shard/0"));
+    }
+
+    fn tiny_trace(n_clients: u32) -> Trace {
+        let meta = TraceMeta::new("test", 7, &NamespaceParams::default(), n_clients, 2);
+        let op = |c: u32, at: Time, kind: OpKind| TraceEvent::Op {
+            at,
+            client: c,
+            op: Operation::single(kind, InodeRef::file(crate::namespace::DirId(1), 0)),
+        };
+        Trace {
+            meta,
+            events: vec![
+                op(0, 10, OpKind::Read),
+                op(1, 20, OpKind::Create),
+                op(2, 30, OpKind::Read),
+                TraceEvent::Second { second: 0, target: 3 },
+                op(3, time::SEC + 5, OpKind::Delete),
+                op(0, time::SEC + 6, OpKind::Read),
+                TraceEvent::Second { second: 1, target: 2 },
+            ],
+            chaos: crate::chaos::ChaosPlan::none(),
+        }
+    }
+
+    #[test]
+    fn split_trace_partitions_and_remaps() {
+        let p = plan(2, 4); // slices [0,2) and [2,4)
+        let t = tiny_trace(4);
+        let parts = p.split_trace(&t);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].meta.n_clients, 2);
+        assert_eq!(parts[1].meta.n_clients, 2);
+        assert_eq!(parts[0].n_ops() + parts[1].n_ops(), t.n_ops());
+        // Shard 1 got clients 2 and 3, remapped to local 0 and 1.
+        let locals: Vec<u32> = parts[1]
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Op { client, .. } => Some(*client),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(locals, vec![0, 1]);
+        // Second markers replicate with per-shard targets that conserve.
+        for (sec, want) in [(0u32, 3u64), (1, 2)] {
+            let t0 = parts.iter().map(|t| marker_target(t, sec)).sum::<u64>();
+            assert_eq!(t0, want, "second {sec} targets conserve");
+        }
+        assert_eq!(parts[0].duration_s(), 2);
+        assert_eq!(parts[1].duration_s(), 2);
+    }
+
+    fn marker_target(t: &Trace, sec: u32) -> u64 {
+        t.events
+            .iter()
+            .find_map(|e| match e {
+                TraceEvent::Second { second, target } if *second == sec => Some(*target),
+                _ => None,
+            })
+            .unwrap()
+    }
+
+    /// Executors must present each (round, shard) exactly once, with
+    /// barriers strictly between rounds, regardless of worker count.
+    #[test]
+    fn executors_respect_round_barriers() {
+        for workers in [1usize, 2, 4, 7] {
+            let n_shards = 5;
+            let rounds = 9;
+            let seen: Vec<Mutex<Vec<usize>>> =
+                (0..n_shards).map(|_| Mutex::new(Vec::new())).collect();
+            let mut barrier_rounds = Vec::new();
+            let pool = ThreadPool { workers };
+            pool.drive(
+                n_shards,
+                rounds,
+                |round, shard| seen[shard].lock().unwrap().push(round),
+                |round| {
+                    // Every shard must have finished `round` by now.
+                    for s in &seen {
+                        assert_eq!(*s.lock().unwrap().last().unwrap(), round);
+                    }
+                    barrier_rounds.push(round);
+                },
+            );
+            for s in &seen {
+                assert_eq!(*s.lock().unwrap(), (0..rounds).collect::<Vec<_>>());
+            }
+            assert_eq!(barrier_rounds, (0..rounds).collect::<Vec<_>>());
+        }
+    }
+
+    /// A deterministic mock that journals everything order-sensitive:
+    /// submits, remote invalidations, and second boundaries, hashed into
+    /// a fingerprint so executor equivalence is testable without λFS.
+    struct Journal {
+        metrics: RunMetrics,
+        digest: u64,
+    }
+
+    impl Journal {
+        fn new(seed: u64) -> Self {
+            Journal { metrics: RunMetrics::new(), digest: seed }
+        }
+        fn note(&mut self, words: &[u64]) {
+            for &w in words {
+                self.digest = (self.digest ^ w).wrapping_mul(0x100000001b3);
+            }
+        }
+    }
+
+    impl MetadataService for Journal {
+        fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
+            let jitter = rng.below(500);
+            self.note(&[1, req.at, req.client as u64, req.op.target.dir.0 as u64, jitter]);
+            let done = req.at + 1_500 + jitter;
+            Completion::unstamped(done, Outcome { cache: CacheOutcome::Hit, ..Outcome::warm(0) })
+        }
+        fn remote_invalidate(&mut self, at: Time, op: &Operation) {
+            self.note(&[2, at, op.target.dir.0 as u64]);
+        }
+        fn on_second(&mut self, s: usize) {
+            self.note(&[3, s as u64]);
+        }
+        fn metrics_mut(&mut self) -> &mut RunMetrics {
+            &mut self.metrics
+        }
+        fn into_metrics(self) -> RunMetrics {
+            self.metrics
+        }
+    }
+
+    fn spec(secs: usize, x_t: f64, n_clients: u32) -> OpenLoopSpec {
+        OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(secs, x_t),
+            mix: OpMix::spotify(),
+            n_clients,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        }
+    }
+
+    fn fixture() -> (Namespace, HotspotSampler) {
+        let mut rng = Rng::new(5);
+        let ns = generate(&NamespaceParams { n_dirs: 64, ..Default::default() }, &mut rng);
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        (ns, sampler)
+    }
+
+    fn journal_run<E: Executor>(p: &ShardPlan, exec: &E) -> (u64, u64) {
+        let (ns, sampler) = fixture();
+        let sp = spec(3, 800.0, p.n_clients);
+        let mut shards: Vec<Journal> =
+            (0..p.n_shards).map(|i| Journal::new(ShardPlan::shard_seed(11, i))).collect();
+        let mut root = Rng::new(11);
+        run_open_loop_sharded(&mut shards, &sp, &ns, &sampler, &mut root, p, exec);
+        let digest = shards.iter().fold(0u64, |acc, j| acc ^ j.digest);
+        let (m, _) = fold(shards);
+        (digest, m.fingerprint())
+    }
+
+    #[test]
+    fn executor_choice_is_invisible() {
+        let p = plan(4, 37);
+        let seq = journal_run(&p, &Sequential);
+        for workers in [2usize, 3, 4, 8] {
+            assert_eq!(journal_run(&p, &ThreadPool { workers }), seq, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn sharded_single_shard_matches_sequential_driver() {
+        // S=1 degenerates exactly to the unsharded open-loop driver on a
+        // `shard/0`-forked stream: the window walk must not change one
+        // submit, boundary, or draw.
+        let (ns, sampler) = fixture();
+        let sp = spec(4, 633.0, 48);
+        let p = plan(1, 48);
+
+        let mut shards = vec![Journal::new(ShardPlan::shard_seed(23, 0))];
+        let mut root = Rng::new(23);
+        run_open_loop_sharded(&mut shards, &sp, &ns, &sampler, &mut root, &p, &Sequential);
+        let sharded_digest = shards[0].digest;
+        let (m_sharded, _) = fold(shards);
+
+        let mut reference = Journal::new(ShardPlan::shard_seed(23, 0));
+        let mut root = Rng::new(23);
+        let mut stream = root.fork("shard/0");
+        driver::run_open_loop(&mut reference, &sp, &ns, &sampler, &mut stream);
+        assert_eq!(sharded_digest, reference.digest);
+        let m_ref = reference.into_metrics();
+        assert_eq!(m_sharded.fingerprint(), m_ref.fingerprint());
+        assert_eq!(m_sharded.outcome_fingerprint(), m_ref.outcome_fingerprint());
+    }
+
+    #[test]
+    fn barrier_merge_orders_by_time_seq_src() {
+        // Hand-built outboxes with colliding deliver times: the merge
+        // must deliver in (deliver_at, seq, src) order and hold back
+        // envelopes beyond the threshold.
+        let mk = |deliver_at, seq, src| Envelope {
+            deliver_at,
+            seq,
+            src,
+            op: Operation::single(OpKind::Read, InodeRef::file(crate::namespace::DirId(9), 0)),
+        };
+        let mut sinks: Vec<Journal> = (0u64..2).map(Journal::new).collect();
+        let mut root = Rng::new(0);
+        let cells = make_cells(&mut sinks, |_| 0, &mut root, false);
+        cells[0].lock().unwrap().outbox = vec![mk(50, 0, 0), mk(40, 1, 0), mk(99, 2, 0)];
+        cells[1].lock().unwrap().outbox = vec![mk(40, 0, 1), mk(50, 1, 1)];
+        let mut inflight = Vec::new();
+        merge_barrier(&cells, &mut inflight, 60);
+        // Held back: only the t=99 envelope.
+        assert_eq!(inflight.len(), 1);
+        assert_eq!(inflight[0].deliver_at, 99);
+        drop(cells);
+        // Shard 1 saw shard 0's envelopes in merged order: t=40 (seq 1)
+        // then t=50 (seq 0); ties across sources break by (seq, src).
+        let expect = |seed: u64, deliveries: &[(Time, u64)]| {
+            let mut j = Journal::new(seed);
+            for &(at, dir) in deliveries {
+                j.note(&[2, at, dir]);
+            }
+            j.digest
+        };
+        assert_eq!(sinks[1].digest, expect(1, &[(40, 9), (50, 9)]));
+        assert_eq!(sinks[0].digest, expect(0, &[(40, 9), (50, 9)]));
+    }
+}

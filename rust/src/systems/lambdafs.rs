@@ -683,6 +683,41 @@ impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
         }
     }
 
+    /// Apply a cross-shard coherence invalidation (the sharded engine's
+    /// window-barrier merge, see [`crate::sim::shard`]). Mirrors the
+    /// local write path's row set — target INode + parent directory
+    /// (+ mv destination), or a prefix invalidation for subtree ops —
+    /// applied to *every* slot cache, live or not-yet-recycled: the
+    /// remote shard cannot know which local deployments cache the rows,
+    /// so this is the conservative fan-out. Pure cache-state
+    /// application: no RNG draws, no metrics, no billing — required by
+    /// the trait so sharded results stay worker-count-independent.
+    fn remote_invalidate(&mut self, _at: Time, op: &Operation) {
+        let ns = &self.ns;
+        if op.kind.is_subtree() {
+            let root = op.target.dir;
+            for c in self.caches.iter_mut() {
+                c.invalidate_subtree(ns, root);
+            }
+            return;
+        }
+        let parent = match op.target.file {
+            Some(_) => InodeRef::dir(op.target.dir),
+            None => InodeRef::dir(ns.dir(op.target.dir).parent.unwrap_or(op.target.dir)),
+        };
+        let mut rows = [op.target, parent, op.target];
+        let mut n_rows = 2;
+        if let Some(dest) = op.dest {
+            rows[2] = InodeRef::dir(dest);
+            n_rows = 3;
+        }
+        for c in self.caches.iter_mut() {
+            for r in &rows[..n_rows] {
+                c.invalidate(*r);
+            }
+        }
+    }
+
     fn on_second(&mut self, second: usize) {
         let now = (second as Time + 1) * time::SEC;
         self.platform.promote_warm(now);

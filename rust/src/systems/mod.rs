@@ -187,6 +187,16 @@ pub trait MetadataService {
     /// system draw-for-draw identical to never calling this at all.
     fn install_chaos(&mut self, _plan: &crate::chaos::ChaosPlan) {}
 
+    /// Apply a cross-shard coherence invalidation (the sharded engine's
+    /// window-barrier merge, see [`crate::sim::shard`]): another shard
+    /// completed the write-class `op` and its invalidation reaches this
+    /// shard at `at`. Implementations must consume **no RNG draws** and
+    /// touch only cache state — the merge runs single-threaded between
+    /// windows, and determinism across worker counts hinges on this
+    /// being a pure state application. The default is a no-op (cacheless
+    /// baselines have nothing to invalidate).
+    fn remote_invalidate(&mut self, _at: Time, _op: &Operation) {}
+
     /// Arm the per-second timeline sampler (see [`crate::telemetry`]):
     /// the system fills `timeline` from `on_second` with fleet gauges.
     /// Returns `true` if the system supports sampling (λFS and the

@@ -386,6 +386,51 @@ impl Timeline {
     pub fn fingerprint(&self) -> u64 {
         crate::util::fnv::fnv1a64(&self.encode())
     }
+
+    /// Element-wise gauge fold, mirroring `RunMetrics::merge`: sample
+    /// `i` of `other` folds into sample `i` of `self` (both sides record
+    /// one sample per simulated second, so index alignment is second
+    /// alignment — debug-asserted). Counts and cumulative gauges add;
+    /// per-deployment live counts add element-wise (the shard fleets are
+    /// disjoint); costs add in dollars; `n_deployments` takes the max.
+    /// The fold is associative and commutative up to float addition
+    /// order, so the sharded engine folds in shard order to fix one
+    /// deterministic result.
+    pub fn merge(&mut self, other: &Timeline) {
+        if other.samples.len() > self.samples.len() {
+            let from = self.samples.len();
+            self.samples.extend(other.samples[from..].iter().cloned());
+            for (mine, theirs) in self.samples[..from].iter_mut().zip(&other.samples) {
+                merge_sample(mine, theirs);
+            }
+        } else {
+            for (mine, theirs) in self.samples.iter_mut().zip(&other.samples) {
+                merge_sample(mine, theirs);
+            }
+        }
+        self.n_deployments = self.n_deployments.max(other.n_deployments);
+    }
+}
+
+/// One-sample gauge fold for [`Timeline::merge`].
+fn merge_sample(mine: &mut TimelineSample, theirs: &TimelineSample) {
+    debug_assert_eq!(mine.second, theirs.second, "merging misaligned timeline samples");
+    if theirs.live_per_dep.len() > mine.live_per_dep.len() {
+        mine.live_per_dep.resize(theirs.live_per_dep.len(), 0);
+    }
+    for (m, t) in mine.live_per_dep.iter_mut().zip(&theirs.live_per_dep) {
+        *m += *t;
+    }
+    mine.warm += theirs.warm;
+    mine.completed += theirs.completed;
+    mine.backlog += theirs.backlog;
+    mine.cache_hits += theirs.cache_hits;
+    mine.cache_misses += theirs.cache_misses;
+    mine.cost_usd_bits = (f64::from_bits(mine.cost_usd_bits)
+        + f64::from_bits(theirs.cost_usd_bits))
+    .to_bits();
+    mine.timeouts += theirs.timeouts;
+    mine.gave_up += theirs.gave_up;
 }
 
 /// LEB128-style varint (7-bit groups, 0x80 continuation) — the same
@@ -507,6 +552,59 @@ mod tests {
         assert!(Timeline::decode(&bytes).is_err());
         let truncated = &ok.encode()[..10];
         assert!(Timeline::decode(truncated).is_err());
+    }
+
+    #[test]
+    fn timeline_merge_folds_gauges_elementwise() {
+        let mut a = Timeline::new("lambdafs", 4);
+        let mut b = Timeline::new("lambdafs", 4);
+        for s in 0..3 {
+            a.push(sample(s));
+        }
+        for s in 0..5 {
+            b.push(sample(s)); // longer run: trailing samples adopted
+        }
+        a.merge(&b);
+        assert_eq!(a.samples.len(), 5);
+        assert_eq!(a.n_deployments, 4);
+        // Overlapping seconds: counts double, per-dep gauges add.
+        assert_eq!(a.samples[0].completed, 2_468);
+        assert_eq!(a.samples[0].live_per_dep, vec![4, 0, 10, 2]);
+        assert_eq!(a.samples[0].warm, 6);
+        assert_eq!(a.samples[0].backlog, 34);
+        assert_eq!(a.samples[0].cache_hits, 1_800);
+        assert_eq!(a.samples[0].timeouts, 4);
+        assert_eq!(a.samples[0].gave_up, 2);
+        assert!((a.samples[0].cost_usd() - 0.002_5).abs() < 1e-15);
+        // Adopted tail: the shorter side contributes nothing there.
+        assert_eq!(a.samples[4], sample(4));
+        // Merged timelines still encode/decode (validate_trace_events
+        // consumes the exported gauges downstream).
+        let back = Timeline::decode(&a.encode()).unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn timeline_merge_is_associative() {
+        let mk = |n: u32, scale: u64| {
+            let mut t = Timeline::new("lambdafs", 2);
+            for s in 0..n {
+                let mut smp = sample(s);
+                smp.completed *= scale;
+                t.push(smp);
+            }
+            t
+        };
+        let (a, b, c) = (mk(2, 1), mk(4, 3), mk(3, 7));
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        assert_eq!(left.fingerprint(), right.fingerprint());
     }
 
     #[test]

@@ -33,4 +33,4 @@ pub mod synth;
 pub use format::{Trace, TraceEvent, TraceMeta};
 pub use record::Recorder;
 pub use replay::{replay, replay_into};
-pub use scenario::{run_matrix, ScenarioReport};
+pub use scenario::{run_matrix, run_matrix_sharded, ScenarioReport};

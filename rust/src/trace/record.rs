@@ -68,6 +68,16 @@ impl<S: MetadataService> MetadataService for Recorder<S> {
         self.inner.take_telemetry()
     }
 
+    // Cross-shard invalidations are *engine*-generated (window-barrier
+    // merge), not part of the op stream, so they pass through unrecorded;
+    // a sharded replay regenerates them from its own completed writes.
+    // Forwarding is still load-bearing: without it, a recording shard's
+    // caches would diverge from a replaying shard's and break the
+    // record→replay bit-identity contract.
+    fn remote_invalidate(&mut self, at: crate::sim::Time, op: &crate::namespace::Operation) {
+        self.inner.remote_invalidate(at, op);
+    }
+
     fn submit(&mut self, req: Request<'_>, rng: &mut Rng) -> Completion {
         // Record the *intended* slot, not the realized issue time: the
         // trace carries the pure schedule (see module doc).

@@ -26,6 +26,7 @@ use crate::figures::common::{print_table, Scale};
 use crate::metrics::RunMetrics;
 use crate::namespace::generate::{HotspotSampler, NamespaceParams};
 use crate::namespace::Namespace;
+use crate::sim::shard::{self, replay_sharded, ShardPlan, ThreadPool};
 use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::telemetry::Phase;
 use crate::util::fnv::fnv1a64;
@@ -47,9 +48,15 @@ use super::synth::{self, ContainerChurnSpec, MlPipelineSpec};
 /// submitted). v4: the span ledger — cells gained `dominant_phase` (the
 /// phase contributing the most total latency), `p99_us` (that phase's
 /// p99), and `queue_share`/`cold_share` (the queue-wait and cold-start
-/// fractions of total phase time). Earlier artifacts are not
-/// fingerprint-comparable.
-pub const SCHEMA: &str = "lambdafs-scenarios-v4";
+/// fractions of total phase time). v5: the sharded engine — cells gained
+/// `shards` (conservative-window shards that ran the cell; 1 = the
+/// classic sequential path, byte-identical artifacts) and `wall_s`
+/// (wall-clock seconds, constant 0.0 at `shards == 1` so unsharded
+/// artifacts stay bit-deterministic), and non-smoke sharded runs append
+/// the 10⁶-client `mega-fleet` tier. Sharded cells are a new fingerprint
+/// domain (per-shard RNG forking); unsharded cells keep their v4
+/// fingerprints. Earlier artifacts are not fingerprint-comparable.
+pub const SCHEMA: &str = "lambdafs-scenarios-v5";
 
 /// Systems every workload runs against.
 pub const SYSTEMS: [&str; 4] = ["lambdafs", "hopsfs", "hopsfs+cache", "cephfs"];
@@ -97,6 +104,14 @@ pub struct ScenarioCell {
     pub p99_us: f64,
     pub queue_share: f64,
     pub cold_share: f64,
+    /// Conservative-window shards the cell ran on (v5). 1 = the classic
+    /// sequential replay path; ≥ 2 is the sharded engine and a new
+    /// fingerprint domain (see [`crate::sim::shard`]).
+    pub shards: u32,
+    /// Wall-clock seconds for the cell (v5). Measured only when
+    /// `shards > 1`; sequential cells report a constant 0.0 so unsharded
+    /// artifacts stay bit-deterministic.
+    pub wall_s: f64,
     /// `RunMetrics::outcome_fingerprint` — the determinism contract per
     /// cell, covering the outcome columns as well as the run state.
     pub fingerprint: u64,
@@ -123,9 +138,20 @@ pub struct ScenarioReport {
     pub cells: Vec<ScenarioCell>,
 }
 
-/// Run the matrix. `smoke` runs one small scale; otherwise the base scale
-/// plus a 2× step give the scale axis.
+/// Run the matrix on the classic sequential engine (`shards == 1`).
+/// `smoke` runs one small scale; otherwise the base scale plus a 2× step
+/// give the scale axis.
 pub fn run_matrix(scale: f64, seed: u64, smoke: bool) -> ScenarioReport {
+    run_matrix_sharded(scale, seed, smoke, 1)
+}
+
+/// Run the matrix on `shards` conservative-window shards (see
+/// [`crate::sim::shard`]). `shards <= 1` is the classic sequential path
+/// and produces byte-identical artifacts to [`run_matrix`]; `shards > 1`
+/// replays every cell through the sharded engine (a new fingerprint
+/// domain) and, outside smoke mode, appends the sharded-only 10⁶-client
+/// `mega-fleet` tier.
+pub fn run_matrix_sharded(scale: f64, seed: u64, smoke: bool, shards: u32) -> ScenarioReport {
     let mut scales = vec![scale];
     if !smoke {
         let step = (scale * 2.0).min(1.0);
@@ -155,12 +181,14 @@ pub fn run_matrix(scale: f64, seed: u64, smoke: bool) -> ScenarioReport {
             // from the meta per cell would dominate large-matrix time).
             let ns = trace.meta.regenerate();
             for system in SYSTEMS {
-                let m = run_cell(system, name, &trace, &ns, sc, seed);
-                if system == "lambdafs" {
+                let (m, wall_s) = run_cell(system, name, &trace, &ns, sc, seed, shards);
+                if system == "lambdafs" && shards <= 1 {
                     if let Some(expect) = record_fp {
                         // The recording ran through submit_batch; this
                         // replay is scalar — equality (outcome ledger
-                        // included) proves the batch contract live.
+                        // included) proves the batch contract live. A
+                        // sharded replay is its own fingerprint domain,
+                        // so the identity only holds sequentially.
                         assert_eq!(
                             m.outcome_fingerprint(),
                             expect,
@@ -168,7 +196,7 @@ pub fn run_matrix(scale: f64, seed: u64, smoke: bool) -> ScenarioReport {
                         );
                     }
                 }
-                cells.push(make_cell(system, name, "none", sc, &m));
+                cells.push(make_cell(system, name, "none", sc, &m, shards, wall_s));
             }
             // The chaos axis: replay the *same* Spotify op stream under
             // each fault plan — the plan rides in the trace header, so
@@ -181,14 +209,58 @@ pub fn run_matrix(scale: f64, seed: u64, smoke: bool) -> ScenarioReport {
                     chaotic.chaos = chaos_plan(mode, trace.duration_s() as u32);
                     for system in SYSTEMS {
                         let label = format!("{name}/{mode}");
-                        let m = run_cell(system, &label, &chaotic, &ns, sc, seed);
-                        cells.push(make_cell(system, name, mode, sc, &m));
+                        let (m, wall_s) = run_cell(system, &label, &chaotic, &ns, sc, seed, shards);
+                        cells.push(make_cell(system, name, mode, sc, &m, shards, wall_s));
                     }
                 }
             }
         }
     }
+    // The mega-fleet tier: a 10⁶-client ML-ingest trace that only the
+    // sharded engine can turn around — sequential and smoke matrices
+    // skip it, so CI (which runs `--smoke`) never pays for it and the
+    // sequential artifact stays byte-identical to v4 modulo schema.
+    if !smoke && shards > 1 {
+        let (info, trace, ns) = mega_fleet_trace(seed);
+        eprintln!(
+            "  scenario: mega-fleet ({} clients, {} ops over {} s, {shards} shards)",
+            trace.meta.n_clients,
+            info.ops,
+            info.duration_s
+        );
+        workloads.push(info);
+        for system in SYSTEMS {
+            let (m, wall_s) = run_cell(system, "mega-fleet", &trace, &ns, 1.0, seed, shards);
+            cells.push(make_cell(system, "mega-fleet", "none", 1.0, &m, shards, wall_s));
+        }
+    }
     ScenarioReport { seed, smoke, workloads, cells }
+}
+
+/// The sharded-only 10⁶-client tier: an ML-ingest stream over a wide,
+/// flat namespace. Kept to a short duration — the point is fleet width
+/// (client partitioning across shards), not run length.
+fn mega_fleet_trace(seed: u64) -> (WorkloadInfo, Trace, Namespace) {
+    let params = NamespaceParams {
+        n_dirs: 4096,
+        files_per_dir: 256,
+        max_depth: 3,
+        zipf_s: 1.1,
+    };
+    let meta = TraceMeta::new("mega-fleet", seed, &params, 1_000_000, 8);
+    let ns = meta.regenerate();
+    let mut rng = Rng::new(seed ^ fnv1a64(b"scenario/mega-fleet-gen"));
+    let trace = synth::ml_pipeline(&MlPipelineSpec::at_scale(0.05), &ns, meta, &mut rng);
+    let info = WorkloadInfo {
+        name: "mega-fleet",
+        scale: 1.0,
+        source: trace.meta.source.clone(),
+        events: trace.events.len(),
+        ops: trace.n_ops(),
+        duration_s: trace.duration_s(),
+        trace_fingerprint: trace.fingerprint(),
+    };
+    (info, trace, ns)
 }
 
 fn make_cell(
@@ -197,12 +269,16 @@ fn make_cell(
     chaos: &'static str,
     sc: f64,
     m: &RunMetrics,
+    shards: u32,
+    wall_s: f64,
 ) -> ScenarioCell {
     ScenarioCell {
         system,
         workload,
         chaos,
         scale: sc,
+        shards: shards.max(1),
+        wall_s,
         submitted: m.completed_ops + m.gave_up,
         completed_ops: m.completed_ops,
         avg_throughput: m.avg_throughput(),
@@ -374,6 +450,10 @@ fn cell_rng(seed: u64, workload: &str, system: &str) -> Rng {
     Rng::new(seed ^ fnv1a64(label.as_bytes()))
 }
 
+/// Run one cell; returns the folded metrics and the cell's wall-clock
+/// seconds. Wall time is measured only on the sharded path — sequential
+/// cells report a constant 0.0 so unsharded artifacts stay
+/// bit-deterministic across runs.
 fn run_cell(
     system: &'static str,
     workload: &str,
@@ -381,12 +461,16 @@ fn run_cell(
     ns: &Namespace,
     sc: f64,
     seed: u64,
-) -> RunMetrics {
+    shards: u32,
+) -> (RunMetrics, f64) {
     let cfg = scenario_cfg(sc, seed);
-    let ns = ns.clone();
     let vcpus = Scale(sc).vcpus(512.0);
     let mut rng = cell_rng(seed, workload, system);
-    match system {
+    if shards > 1 {
+        return run_cell_sharded(system, trace, ns, cfg, vcpus, &mut rng, shards);
+    }
+    let ns = ns.clone();
+    let m = match system {
         "lambdafs" => {
             let mut sys = LambdaFs::new(cfg, ns, trace.meta.n_clients, trace.meta.n_vms);
             replay(&mut sys, trace, &mut rng);
@@ -396,7 +480,69 @@ fn run_cell(
         "hopsfs+cache" => replay_into(HopsFs::new(cfg, ns, vcpus, true), trace, &mut rng),
         "cephfs" => replay_into(CephFs::new(cfg, ns, vcpus), trace, &mut rng),
         other => panic!("unknown system {other:?}"),
-    }
+    };
+    (m, 0.0)
+}
+
+/// The sharded cell path: partition the fleet with a [`ShardPlan`],
+/// split the trace, build one system per shard (per-shard seed via
+/// [`ShardPlan::shard_seed`], resource budgets divided evenly so the
+/// cell models the *same* total cluster), replay through the
+/// conservative-window engine on the thread pool, and fold. The
+/// worker-thread count cannot affect results (pinned in
+/// `rust/tests/determinism.rs`), so wall time is the only
+/// nondeterministic output — reported in its own column, never folded
+/// into fingerprints.
+fn run_cell_sharded(
+    system: &'static str,
+    trace: &Trace,
+    ns: &Namespace,
+    cfg: SystemConfig,
+    vcpus: f64,
+    rng: &mut Rng,
+    shards: u32,
+) -> (RunMetrics, f64) {
+    let plan = ShardPlan::new(shards, trace.meta.n_clients, &cfg.net);
+    let traces = plan.split_trace(trace);
+    let shard_cfg = |i: u32| {
+        let mut c = cfg.clone();
+        c.seed = ShardPlan::shard_seed(cfg.seed, i);
+        c.faas.vcpu_limit = cfg.faas.vcpu_limit / f64::from(plan.n_shards);
+        c
+    };
+    let shard_vcpus = vcpus / f64::from(plan.n_shards);
+    let exec = ThreadPool::with_default_workers();
+    let started = std::time::Instant::now();
+    let m = match system {
+        "lambdafs" => {
+            let mut systems: Vec<_> = traces
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    LambdaFs::new(shard_cfg(i as u32), ns.clone(), t.meta.n_clients, t.meta.n_vms)
+                })
+                .collect();
+            replay_sharded(&mut systems, &traces, &plan, rng, &exec);
+            shard::fold(systems).0
+        }
+        "hopsfs" | "hopsfs+cache" => {
+            let cache = system == "hopsfs+cache";
+            let mut systems: Vec<_> = (0..plan.n_shards)
+                .map(|i| HopsFs::new(shard_cfg(i), ns.clone(), shard_vcpus, cache))
+                .collect();
+            replay_sharded(&mut systems, &traces, &plan, rng, &exec);
+            shard::fold(systems).0
+        }
+        "cephfs" => {
+            let mut systems: Vec<_> = (0..plan.n_shards)
+                .map(|i| CephFs::new(shard_cfg(i), ns.clone(), shard_vcpus))
+                .collect();
+            replay_sharded(&mut systems, &traces, &plan, rng, &exec);
+            shard::fold(systems).0
+        }
+        other => panic!("unknown system {other:?}"),
+    };
+    (m, started.elapsed().as_secs_f64())
 }
 
 impl ScenarioReport {
@@ -443,6 +589,8 @@ impl ScenarioReport {
                     format!("{:.0}", c.p99_us),
                     format!("{:.1}", c.queue_share * 100.0),
                     format!("{:.1}", c.cold_share * 100.0),
+                    c.shards.to_string(),
+                    format!("{:.2}", c.wall_s),
                     format!("{:08x}", c.fingerprint >> 32),
                 ]
             })
@@ -452,7 +600,7 @@ impl ScenarioReport {
             &[
                 "workload", "chaos", "scale", "system", "ops", "avg_tput", "peak_tput",
                 "p50_ms", "p99_ms", "cost_$", "cold", "hit_%", "retries", "t_out", "gaveup",
-                "dom_phase", "dom_p99_us", "queue_%", "cold_%", "fp",
+                "dom_phase", "dom_p99_us", "queue_%", "cold_%", "shards", "wall_s", "fp",
             ],
             &rows,
         );
@@ -500,6 +648,7 @@ impl ScenarioReport {
                  \"timeouts\": {}, \"gave_up\": {}, \
                  \"dominant_phase\": \"{}\", \"p99_us\": {:.1}, \
                  \"queue_share\": {:.6}, \"cold_share\": {:.6}, \
+                 \"shards\": {}, \"wall_s\": {:.3}, \
                  \"fingerprint\": \"{:#018x}\"}}",
                 c.system,
                 c.workload,
@@ -524,6 +673,8 @@ impl ScenarioReport {
                 c.p99_us,
                 c.queue_share,
                 c.cold_share,
+                c.shards,
+                c.wall_s,
                 c.fingerprint
             );
             s.push_str(if i + 1 < self.cells.len() { ",\n" } else { "\n" });
@@ -586,6 +737,11 @@ mod tests {
                 assert_eq!(c.timeouts, 0, "{}/{} timeouts without chaos", c.system, c.workload);
                 assert_eq!(c.gave_up, 0, "{}/{} give-ups without chaos", c.system, c.workload);
             }
+            // v5: the default matrix is the sequential engine, whose
+            // wall_s column is a constant so artifacts stay
+            // bit-deterministic.
+            assert_eq!(c.shards, 1, "{}/{} default matrix is unsharded", c.system, c.workload);
+            assert_eq!(c.wall_s, 0.0, "{}/{} sequential wall_s is constant", c.system, c.workload);
         }
         // λFS serves the hot Spotify read mix mostly from cache; the
         // stateless HopsFS cell records every read as a miss.
@@ -623,9 +779,16 @@ mod tests {
         for mode in CHAOS_MODES {
             assert!(json.contains(mode));
         }
-        assert!(json.contains("\"lambdafs-scenarios-v4\""));
-        for key in ["\"dominant_phase\"", "\"p99_us\"", "\"queue_share\"", "\"cold_share\""] {
-            assert!(json.contains(key), "v4 cell key {key} missing");
+        assert!(json.contains("\"lambdafs-scenarios-v5\""));
+        for key in [
+            "\"dominant_phase\"",
+            "\"p99_us\"",
+            "\"queue_share\"",
+            "\"cold_share\"",
+            "\"shards\"",
+            "\"wall_s\"",
+        ] {
+            assert!(json.contains(key), "v5 cell key {key} missing");
         }
     }
 }

@@ -48,6 +48,28 @@
 //! recorded chaotic run replays bit-identically (pinned in
 //! `rust/tests/determinism.rs`).
 //!
+//! # Scale tiers
+//!
+//! The matrix (and the Spotify figure driver) runs at one of four
+//! scale tiers. The first three differ only in `--scale` / `--smoke`;
+//! the mega tier additionally requires the sharded engine
+//! ([`crate::sim::shard`]), because a 10⁶-client fleet is impractical
+//! on the single-threaded event loop.
+//!
+//! | tier | scale axis | invocation | engine |
+//! |---|---|---|---|
+//! | smoke | 0.01, single scale | `lambdafs scenario --smoke` | sequential (CI runs this) |
+//! | default | 0.05 plus a 2× step | `lambdafs scenario` | sequential |
+//! | full | 1.0 (paper-scale fleets) | `lambdafs scenario --scale 1.0` | sequential or sharded |
+//! | mega | 10⁶-client mega-fleet workload | `lambdafs scenario --shards 8` (non-smoke) | sharded, required |
+//!
+//! `--shards N` (N > 1) runs *every* cell on the conservative
+//! time-window engine and records per-cell `shards` / `wall_s` columns
+//! (schema v5); the mega-fleet tier is appended only to non-smoke
+//! sharded runs. Sharded cells are their own fingerprint domain — see
+//! the artifact-comparability note in `ROADMAP.md`. The default
+//! `--shards 1` path is byte-identical to pre-sharding runs.
+//!
 //! # Reading a Perfetto trace
 //!
 //! `lambdafs observe [--smoke] [--out trace.json]` runs the Spotify

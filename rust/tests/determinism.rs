@@ -29,6 +29,13 @@
 //!    before PR 5 are not comparable to post-PR-5 runs (ROADMAP
 //!    artifact-comparability note); every test here pins *relative*
 //!    equalities, which re-pin the new values automatically.
+//! 6. **Sharded engine (PR 8, `sim::shard`).** Conservative-window
+//!    parallel runs are deterministic in the seed, invariant in the
+//!    worker-thread count (`Sequential` ≡ `ThreadPool` per shard AND
+//!    merged), record→replay bit-identically, and a single-shard plan
+//!    reproduces the classic sequential driver exactly. Sharded runs are
+//!    their own fingerprint domain — none of these pins compare a
+//!    multi-shard run against an unsharded one.
 
 use lambda_fs::baselines::hopsfs::HopsFs;
 use lambda_fs::baselines::{CephFs, InfiniCacheMds};
@@ -41,6 +48,9 @@ use lambda_fs::metrics::RunMetrics;
 use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
 use lambda_fs::namespace::Namespace;
 use lambda_fs::sim::queue::{EventQueue, HeapQueue};
+use lambda_fs::sim::shard::{
+    replay_sharded, run_open_loop_sharded, Executor, Sequential, ShardPlan, ThreadPool,
+};
 use lambda_fs::sim::time;
 use lambda_fs::systems::{driver, LambdaFs, MetadataService};
 use lambda_fs::trace::synth::{self, ContainerChurnSpec};
@@ -1068,4 +1078,226 @@ fn closed_loop_schedule_differential() {
         order
     };
     assert_eq!(run_with(true), run_with(false));
+}
+
+/// One λFS system per shard of `plan`: shard-forked seeds
+/// (`ShardPlan::shard_seed`), client-slice widths, and an evenly divided
+/// vCPU budget (shards model disjoint slices of one cluster).
+fn sharded_lambdafs_fleet(
+    cfg: &SystemConfig,
+    ns: &Namespace,
+    plan: &ShardPlan,
+    n_vms: u32,
+) -> Vec<LambdaFs> {
+    (0..plan.n_shards)
+        .map(|i| {
+            let mut c = cfg.clone();
+            c.seed = ShardPlan::shard_seed(cfg.seed, i);
+            c.faas.vcpu_limit = cfg.faas.vcpu_limit / f64::from(plan.n_shards);
+            LambdaFs::new(c, ns.clone(), plan.slice(i).len() as u32, n_vms)
+        })
+        .collect()
+}
+
+fn sharded_spec() -> OpenLoopSpec {
+    OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(8, 800.0),
+        mix: OpMix::spotify(),
+        n_clients: 64,
+        n_vms: 2,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    }
+}
+
+/// Run the sharded Spotify fixture on `exec`; returns the per-shard
+/// metrics and the merged ledger.
+fn run_sharded(seed: u64, n_shards: u32, exec: &impl Executor) -> (Vec<RunMetrics>, RunMetrics) {
+    let (cfg, ns, sampler) = fixture(seed);
+    let spec = sharded_spec();
+    let plan = ShardPlan::new(n_shards, spec.n_clients, &cfg.net);
+    let mut systems = sharded_lambdafs_fleet(&cfg, &ns, &plan, spec.n_vms);
+    let mut root = Rng::new(cfg.seed ^ 0xd0);
+    run_open_loop_sharded(&mut systems, &spec, &ns, &sampler, &mut root, &plan, exec);
+    let per_shard: Vec<RunMetrics> = systems.into_iter().map(LambdaFs::into_metrics).collect();
+    let mut merged = per_shard[0].clone();
+    for m in &per_shard[1..] {
+        merged.merge(m);
+    }
+    (per_shard, merged)
+}
+
+/// Sharded determinism pin 1: same seed → bit-identical sharded run,
+/// per shard and merged, with the conservation invariants intact and a
+/// different seed actually moving the digest.
+#[test]
+fn sharded_run_twice_fingerprint_identical() {
+    let exec = ThreadPool::with_default_workers();
+    let (shards_a, a) = run_sharded(1234, 4, &exec);
+    let (shards_b, b) = run_sharded(1234, 4, &exec);
+    assert_eq!(shards_a.len(), 4);
+    for (i, (x, y)) in shards_a.iter().zip(&shards_b).enumerate() {
+        assert_eq!(x.fingerprint(), y.fingerprint(), "shard {i} diverged");
+        assert_eq!(x.outcome_fingerprint(), y.outcome_fingerprint(), "shard {i} ledger");
+        assert!(x.completed_ops > 0, "shard {i} sat idle");
+    }
+    assert_eq!(a.fingerprint(), b.fingerprint(), "merged sharded runs diverged");
+    assert_eq!(a.outcome_fingerprint(), b.outcome_fingerprint());
+    assert_eq!(a.cold_starts + a.warm_ops, a.completed_ops, "conservation survives merge");
+    assert_eq!(a.completed_ops + a.gave_up, 8 * 800, "no op vanished across shards");
+    let (_, c) = run_sharded(4321, 4, &exec);
+    assert_ne!(a.fingerprint(), c.fingerprint(), "sharded digest insensitive to seed");
+}
+
+/// Sharded determinism pin 2: results are independent of the
+/// worker-thread count by construction — `Sequential` and thread pools
+/// of several widths produce bit-identical per-shard AND merged
+/// fingerprints.
+#[test]
+fn sharded_thread_count_invariance() {
+    let (base_shards, base) = run_sharded(77, 4, &Sequential);
+    for workers in [1usize, 2, 4, 7] {
+        let (shards, merged) = run_sharded(77, 4, &ThreadPool { workers });
+        for (i, (x, y)) in base_shards.iter().zip(&shards).enumerate() {
+            assert_eq!(
+                x.fingerprint(),
+                y.fingerprint(),
+                "shard {i} diverged under {workers} workers"
+            );
+            assert_eq!(x.outcome_fingerprint(), y.outcome_fingerprint());
+        }
+        assert_eq!(
+            base.fingerprint(),
+            merged.fingerprint(),
+            "{workers}-worker merge diverged from sequential"
+        );
+        assert_eq!(base.outcome_fingerprint(), merged.outcome_fingerprint());
+    }
+}
+
+/// Sharded determinism pin 3: record→replay of a sharded λFS run is
+/// bit-identical. Each shard records through its own `Recorder`; the
+/// captured per-shard traces round-trip through the binary format and
+/// replay through `replay_sharded` into a fresh same-seed fleet.
+#[test]
+fn sharded_record_replay_bit_identical() {
+    let seed = 2026u64;
+    let (cfg, ns, sampler) = fixture(seed);
+    let spec = sharded_spec();
+    let plan = ShardPlan::new(3, spec.n_clients, &cfg.net);
+    let params = NamespaceParams { n_dirs: 384, files_per_dir: 24, ..Default::default() };
+
+    // Record: one Recorder-wrapped system per shard, live sharded run.
+    let mut recorders: Vec<Recorder<LambdaFs>> =
+        sharded_lambdafs_fleet(&cfg, &ns, &plan, spec.n_vms)
+            .into_iter()
+            .enumerate()
+            .map(|(i, sys)| {
+                let n = plan.slice(i as u32).len() as u32;
+                let meta = TraceMeta::new("spotify-shard", seed, &params, n, 2);
+                Recorder::new(sys, meta)
+            })
+            .collect();
+    let mut root = Rng::new(cfg.seed ^ 0xd0);
+    run_open_loop_sharded(
+        &mut recorders,
+        &spec,
+        &ns,
+        &sampler,
+        &mut root,
+        &plan,
+        &ThreadPool::with_default_workers(),
+    );
+    let (rec_metrics, traces): (Vec<RunMetrics>, Vec<Trace>) = recorders
+        .into_iter()
+        .map(|r| {
+            let (sys, trace) = r.into_parts();
+            (sys.into_metrics(), trace)
+        })
+        .unzip();
+    for (i, (m, t)) in rec_metrics.iter().zip(&traces).enumerate() {
+        assert_eq!(t.n_ops(), m.completed_ops, "shard {i}: every submit captured");
+        assert!(m.completed_ops > 0, "shard {i} sat idle");
+    }
+
+    // Binary round trip per shard.
+    let decoded: Vec<Trace> = traces
+        .iter()
+        .map(|t| Trace::decode(&t.encode()).expect("decode shard trace"))
+        .collect();
+    assert_eq!(traces, decoded);
+
+    // Replay into a fresh same-seed fleet: bit-identical per shard.
+    let mut fresh = sharded_lambdafs_fleet(&cfg, &ns, &plan, spec.n_vms);
+    replay_sharded(
+        &mut fresh,
+        &decoded,
+        &plan,
+        &mut Rng::new(cfg.seed ^ 0xd0),
+        &ThreadPool::with_default_workers(),
+    );
+    for (i, (rec, sys)) in rec_metrics.iter().zip(fresh).enumerate() {
+        let rep = sys.into_metrics();
+        assert_eq!(
+            rec.fingerprint(),
+            rep.fingerprint(),
+            "shard {i}: sharded record→replay must reproduce the run bit for bit"
+        );
+        assert_eq!(rec.outcome_fingerprint(), rep.outcome_fingerprint(), "shard {i} ledger");
+    }
+}
+
+/// Sharded determinism pin 4: a single-shard plan reproduces the classic
+/// sequential driver exactly — the sharded engine's op layout, RNG
+/// forking, and rollover collapse to `driver::run_open_loop` when
+/// `n_shards == 1` — over randomized (seed, rate, duration, fleet)
+/// trials. The engine forks `shard/0` off the root and seeds the shard
+/// system with `ShardPlan::shard_seed`, so the reference run mirrors
+/// both derivations.
+#[test]
+fn sharded_single_shard_matches_sequential_driver() {
+    for trial in 0..4u64 {
+        let seed = 0x5a4d ^ (trial * 0x9e37);
+        let mut lay = Rng::new(seed ^ 0x1a9);
+        let duration = 3 + lay.below(4) as usize;
+        let rate = 300.0 + lay.below(500) as f64;
+        let n_clients = 16 + lay.below(64) as u32;
+        let (cfg, ns, sampler) = fixture(seed);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(duration, rate),
+            mix: OpMix::spotify(),
+            n_clients,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let plan = ShardPlan::new(1, spec.n_clients, &cfg.net);
+
+        let mut fleet = sharded_lambdafs_fleet(&cfg, &ns, &plan, spec.n_vms);
+        let mut root = Rng::new(seed ^ 0xd0);
+        run_open_loop_sharded(&mut fleet, &spec, &ns, &sampler, &mut root, &plan, &Sequential);
+        let sharded = fleet.pop().expect("one shard").into_metrics();
+
+        // The reference: the sequential driver over a system built the
+        // way the engine builds shard 0.
+        let mut c = cfg.clone();
+        c.seed = ShardPlan::shard_seed(cfg.seed, 0);
+        let mut sys = LambdaFs::new(c, ns.clone(), spec.n_clients, spec.n_vms);
+        let mut reference_root = Rng::new(seed ^ 0xd0);
+        let mut r = reference_root.fork("shard/0");
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+        let sequential = sys.into_metrics();
+
+        assert!(sharded.completed_ops > 0, "trial {trial} sat idle");
+        assert_eq!(
+            sharded.fingerprint(),
+            sequential.fingerprint(),
+            "trial {trial}: single-shard engine diverged from the sequential driver"
+        );
+        assert_eq!(
+            sharded.outcome_fingerprint(),
+            sequential.outcome_fingerprint(),
+            "trial {trial}: ledgers diverged"
+        );
+    }
 }

@@ -28,6 +28,7 @@ import sys
 REQUIRED_SPOTS = {
     "e2e_submit",
     "e2e_submit_batch",
+    "e2e_sharded",
     "event_queue",
     "cache",
     "router",
