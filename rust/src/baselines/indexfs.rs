@@ -14,7 +14,7 @@ use crate::cache::SlotCaches;
 use crate::client::Router;
 use crate::config::SystemConfig;
 use crate::coordinator::ServiceModel;
-use crate::faas::Platform;
+use crate::faas::{ColdTier, Platform};
 use crate::metrics::{CostModel, RunMetrics};
 use crate::namespace::Namespace;
 use crate::rpc::NetModel;
@@ -247,7 +247,7 @@ impl MetadataService for LambdaIndexFs {
             let i = self.platform.warm_instance(dep, now).unwrap();
             let arrive = now + self.net.tcp_hop(rng);
             span.advance(Phase::Net, arrive);
-            (i, arrive, false)
+            (i, arrive, ColdTier::Warm)
         } else {
             let gw = self.platform.gateway_admit(now, rng);
             let leg = self.net.http_leg(rng);
@@ -255,7 +255,7 @@ impl MetadataService for LambdaIndexFs {
             self.warm_deps[dep as usize] = true;
             let arrive = ready.max(gw + leg);
             span.advance(Phase::Net, gw + leg);
-            span.advance(if cold { Phase::ColdStart } else { Phase::Queue }, arrive);
+            span.advance(if cold.is_cold() { Phase::ColdStart } else { Phase::Queue }, arrive);
             (i, arrive, cold)
         };
         self.caches.ensure(inst);

@@ -113,7 +113,7 @@ impl MetadataService for InfiniCacheMds {
         let (inst, ready, cold_start) = self.platform.place_http_traced(dep, now, rng);
         self.caches.ensure(inst);
         span.advance(Phase::Net, gw_done + leg);
-        span.advance(if cold_start { Phase::ColdStart } else { Phase::Queue }, ready);
+        span.advance(if cold_start.is_cold() { Phase::ColdStart } else { Phase::Queue }, ready);
         let arrive = ready.max(gw_done + leg) + self.net.tcp_connect(rng);
         span.advance(Phase::Net, arrive);
 

@@ -40,6 +40,11 @@ pub struct LambdaFsConfig {
     pub subtree_offload: bool,
     /// Auto-scaling mode (Fig. 14 ablation).
     pub autoscale: AutoScaleMode,
+    /// Scale-out decision policy: purely reactive (the default, pinned
+    /// fingerprint domain) or predictive prewarming into the tier
+    /// ladder's warm pool (requires `faas.tier_ladder`). See
+    /// [`crate::scaling::predict`].
+    pub scale_policy: ScalePolicyMode,
     /// Scale-in: reclaim instances idle longer than this (ms).
     pub idle_reclaim_ms: f64,
     /// Fraction of the vCPU allocation λFS may actively provision
@@ -69,6 +74,18 @@ impl AutoScaleMode {
     }
 }
 
+/// How λFS decides to pre-provision capacity (the PR-9 policy axis).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScalePolicyMode {
+    /// React to observed backlog only ([`crate::scaling::policy::ScaleOutPolicy`]).
+    #[default]
+    Reactive,
+    /// Additionally forecast per-deployment arrivals each second and
+    /// pre-boot instances into the warm pool
+    /// ([`crate::scaling::predict::PredictivePolicy`]).
+    Predictive,
+}
+
 /// FaaS platform model (OpenWhisk-like; §2 Terminology, §3.1).
 #[derive(Clone, Debug)]
 pub struct FaasConfig {
@@ -90,6 +107,21 @@ pub struct FaasConfig {
     pub gateway_capacity: u32,
     /// Penalty for container churn under thrashing (ms per destroy+create).
     pub churn_penalty_ms: f64,
+    /// Enable the cold-start tier ladder (pool / restore / ephemeral).
+    /// Off by default: the binary warm/cold model stays the pinned
+    /// fingerprint domain (see `docs/DETERMINISM.md`).
+    pub tier_ladder: bool,
+    /// Ladder rung medians (ms): full ephemeral container boot,
+    /// checkpoint/restore, and warm-pool handover.
+    pub ephemeral_ms: f64,
+    pub restore_ms: f64,
+    pub pool_hit_ms: f64,
+    /// Lognormal sigma shared by the three ladder rungs.
+    pub tier_sigma: f64,
+    /// Warm-pool slots per deployment (predictive prewarming target).
+    pub pool_capacity: u32,
+    /// Retained checkpoints per deployment (restore-rung capacity).
+    pub checkpoint_capacity: u32,
 }
 
 /// Persistent metadata store model (MySQL Cluster NDB; §2).
@@ -196,6 +228,7 @@ impl Default for SystemConfig {
                 subtree_batch: 512,
                 subtree_offload: true,
                 autoscale: AutoScaleMode::Enabled,
+                scale_policy: ScalePolicyMode::Reactive,
                 idle_reclaim_ms: 30_000.0,
                 max_vcpu_fraction: 0.92774, // 475/512 = 76 NameNodes (paper §5.3)
             },
@@ -207,6 +240,13 @@ impl Default for SystemConfig {
                 http_timeout_ms: 5_000.0,
                 gateway_capacity: 3_000,
                 churn_penalty_ms: 800.0,
+                tier_ladder: false,
+                ephemeral_ms: 180.0,
+                restore_ms: 50.0,
+                pool_hit_ms: 5.0,
+                tier_sigma: 0.25,
+                pool_capacity: 2,
+                checkpoint_capacity: 4,
             },
             store: StoreConfig {
                 data_nodes: 4,
@@ -327,6 +367,15 @@ impl SystemConfig {
                 };
                 Ok(true)
             }
+            "lambda_fs.scale_policy" => {
+                let v = doc.get_str(key).ok_or("scale_policy: expected string")?;
+                self.lambda_fs.scale_policy = match v {
+                    "reactive" => ScalePolicyMode::Reactive,
+                    "predictive" => ScalePolicyMode::Predictive,
+                    other => return Err(format!("scale_policy: bad value {other:?}")),
+                };
+                Ok(true)
+            }
             "lambda_fs.idle_reclaim_ms" => f64_field!(self.lambda_fs.idle_reclaim_ms),
             "lambda_fs.max_vcpu_fraction" => f64_field!(self.lambda_fs.max_vcpu_fraction),
             "faas.vcpu_limit" => f64_field!(self.faas.vcpu_limit),
@@ -336,6 +385,16 @@ impl SystemConfig {
             "faas.http_timeout_ms" => f64_field!(self.faas.http_timeout_ms),
             "faas.gateway_capacity" => u32_field!(self.faas.gateway_capacity),
             "faas.churn_penalty_ms" => f64_field!(self.faas.churn_penalty_ms),
+            "faas.tier_ladder" => {
+                self.faas.tier_ladder = doc.get_bool(key).ok_or("tier_ladder: expected bool")?;
+                Ok(true)
+            }
+            "faas.ephemeral_ms" => f64_field!(self.faas.ephemeral_ms),
+            "faas.restore_ms" => f64_field!(self.faas.restore_ms),
+            "faas.pool_hit_ms" => f64_field!(self.faas.pool_hit_ms),
+            "faas.tier_sigma" => f64_field!(self.faas.tier_sigma),
+            "faas.pool_capacity" => u32_field!(self.faas.pool_capacity),
+            "faas.checkpoint_capacity" => u32_field!(self.faas.checkpoint_capacity),
             "store.data_nodes" => u32_field!(self.store.data_nodes),
             "store.per_node_concurrency" => u32_field!(self.store.per_node_concurrency),
             "store.read_ms" => f64_field!(self.store.read_ms),
@@ -455,5 +514,46 @@ mod tests {
     fn store_slots() {
         let c = SystemConfig::default();
         assert_eq!(c.store_slots(), 128);
+    }
+
+    #[test]
+    fn ladder_defaults_off_with_ordered_rungs() {
+        // The default domain must stay the binary model (fingerprint
+        // compatibility), and the ladder rungs must order sensibly.
+        let c = SystemConfig::default();
+        assert!(!c.faas.tier_ladder, "ladder must default off");
+        assert_eq!(c.lambda_fs.scale_policy, ScalePolicyMode::Reactive);
+        assert!(c.faas.pool_hit_ms < c.faas.restore_ms);
+        assert!(c.faas.restore_ms < c.faas.ephemeral_ms);
+        assert!(c.faas.ephemeral_ms < c.faas.cold_start_ms);
+        assert!(c.faas.pool_capacity >= 1 && c.faas.checkpoint_capacity >= 1);
+    }
+
+    #[test]
+    fn ladder_and_policy_keys_parse() {
+        let c = SystemConfig::from_toml(
+            r#"
+            [faas]
+            tier_ladder = true
+            ephemeral_ms = 200.0
+            restore_ms = 40.0
+            pool_hit_ms = 4.0
+            tier_sigma = 0.3
+            pool_capacity = 5
+            checkpoint_capacity = 7
+            [lambda_fs]
+            scale_policy = "predictive"
+            "#,
+        )
+        .unwrap();
+        assert!(c.faas.tier_ladder);
+        assert_eq!(c.faas.ephemeral_ms, 200.0);
+        assert_eq!(c.faas.restore_ms, 40.0);
+        assert_eq!(c.faas.pool_hit_ms, 4.0);
+        assert_eq!(c.faas.tier_sigma, 0.3);
+        assert_eq!(c.faas.pool_capacity, 5);
+        assert_eq!(c.faas.checkpoint_capacity, 7);
+        assert_eq!(c.lambda_fs.scale_policy, ScalePolicyMode::Predictive);
+        assert!(SystemConfig::from_toml("[lambda_fs]\nscale_policy = \"bogus\"").is_err());
     }
 }

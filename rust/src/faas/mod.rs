@@ -11,7 +11,10 @@
 //!   deployment out (§3.4).
 //! * **ConcurrencyLevel** — the paper's OpenWhisk extension letting one
 //!   instance serve several HTTP RPCs at once.
-//! * **Cold starts** — lognormal container-provision + JVM boot time.
+//! * **Cold starts** — lognormal container-provision + JVM boot time;
+//!   with `faas.tier_ladder` enabled, a three-rung provisioning ladder
+//!   (warm-pool hit / checkpoint-restore / ephemeral boot — see
+//!   [`platform::ColdTier`]) replaces the binary warm/cold draw.
 //! * **vCPU caps & thrashing** — under a resource cap, provisioning a new
 //!   container may require destroying another; frequent churn collapses
 //!   throughput (Appendix B), modeled via a churn penalty on cold starts.
@@ -33,5 +36,5 @@
 pub mod platform;
 pub mod reference;
 
-pub use platform::{Instance, InstanceId, Platform, PlatformStats};
+pub use platform::{ColdTier, Instance, InstanceId, Platform, PlatformStats};
 pub use reference::{ReferencePlatform, RefInstanceId};

@@ -47,6 +47,34 @@
 //! identical to the pre-arena sum whenever no instance has died, and
 //! within an ulp otherwise (per-op/latency state is integer-exact, so id
 //! recycling never perturbs completion order).
+//!
+//! # Cold-start tier ladder
+//!
+//! With `faas.tier_ladder` enabled, a provisioning event no longer draws
+//! from the single binary cold-start distribution: it walks a three-rung
+//! ladder, cheapest rung first, per deployment:
+//!
+//! | tier | latency (config median) | capacity source |
+//! |---|---|---|
+//! | [`ColdTier::Pool`] | `faas.pool_hit_ms` (~5 ms) | warm pool, filled by [`Platform::pool_prewarm`] |
+//! | [`ColdTier::Restore`] | `faas.restore_ms` (~50 ms) | checkpoints, seeded by [`Platform::kill`] |
+//! | [`ColdTier::Ephemeral`] | `faas.ephemeral_ms` (~180 ms) | unbounded (full container boot) |
+//!
+//! Each rung is its own `LogNormal` (`faas.tier_sigma`). Pool and
+//! checkpoint slots are per-deployment counters capped by
+//! `faas.pool_capacity` / `faas.checkpoint_capacity`; a kill deposits a
+//! checkpoint (the dying instance's state is snapshot-able), and
+//! prewarming — driven from `on_second` by the predictive policy in
+//! [`crate::scaling::predict`] — deposits pool slots without consuming
+//! any RNG draw.
+//!
+//! **Determinism contract:** every ladder draw comes from a dedicated
+//! stream (`Rng::new(seed).fork("tier-ladder")`, owned by the platform)
+//! and the caller's RNG is *not* advanced. With the ladder disabled
+//! (the default), [`Platform::spawn`](Platform::place_http) performs the
+//! exact legacy draw sequence on the caller's stream, so default-config
+//! runs stay bit-identical to pre-ladder artifacts (pinned in
+//! `rust/tests/determinism.rs`; see `docs/DETERMINISM.md`).
 
 use std::cell::Cell;
 
@@ -61,6 +89,37 @@ use crate::util::rng::Rng;
 const NIL: u32 = u32::MAX;
 /// Generation tag marking an unoccupied (free) slot.
 const FREE_SEQ: u32 = u32::MAX;
+/// Ladder-stream seed used by [`Platform::new`] when the caller has no
+/// config seed to thread (tests, benches). Systems use
+/// [`Platform::new_seeded`] with `SystemConfig::seed` instead.
+const DEFAULT_LADDER_SEED: u64 = 0x1add_e75e_ed00_0001;
+
+/// The provisioning tier a placement realized — `Warm` when an existing
+/// instance served the request, otherwise the rung of the cold-start
+/// ladder that booted a new one. With the ladder disabled every
+/// provisioning is [`ColdTier::Ephemeral`] (the legacy binary model), so
+/// `ephemeral_boots == cold_starts` in that domain.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ColdTier {
+    /// Reused an already-warm instance: no provisioning on this request.
+    #[default]
+    Warm,
+    /// Warm-pool hit (~5 ms): a pre-booted instance was handed over.
+    Pool,
+    /// Checkpoint/restore boot (~50 ms): resumed from a snapshot left by
+    /// a killed instance.
+    Restore,
+    /// Full ephemeral boot (~180 ms ladder default; ~1.1 s under the
+    /// legacy binary model when the ladder is off).
+    Ephemeral,
+}
+
+impl ColdTier {
+    /// Did this placement provision a new instance (pay a cold start)?
+    pub fn is_cold(self) -> bool {
+        self != ColdTier::Warm
+    }
+}
 
 /// Generational instance id: `seq` is the globally monotonic spawn
 /// sequence (the slot's generation tag), `slot` the arena index. Derived
@@ -120,6 +179,30 @@ pub struct PlatformStats {
     pub rejected_at_capacity: u64,
     /// Spawns that reused a freed arena slot (recycling effectiveness).
     pub recycled_slots: u64,
+    /// Cold starts served from the warm pool (`ColdTier::Pool`).
+    pub pool_hits: u64,
+    /// Cold starts served via checkpoint/restore (`ColdTier::Restore`).
+    pub restores: u64,
+    /// Pool slots deposited by [`Platform::pool_prewarm`].
+    pub pool_prewarms: u64,
+}
+
+/// Per-deployment state of the cold-start tier ladder (present only
+/// when `faas.tier_ladder` is enabled). All draws use the dedicated
+/// `rng` stream; the placement caller's RNG is never advanced.
+#[derive(Clone, Debug)]
+struct TierLadder {
+    ephemeral: LogNormal,
+    restore: LogNormal,
+    pool_hit: LogNormal,
+    /// Dedicated ladder stream: `Rng::new(seed).fork("tier-ladder")`.
+    rng: Rng,
+    /// Pre-booted instances per deployment, filled by `pool_prewarm`.
+    pool: Vec<u32>,
+    /// Restorable snapshots per deployment, deposited by `kill`.
+    checkpoints: Vec<u32>,
+    pool_capacity: u32,
+    checkpoint_capacity: u32,
 }
 
 /// The FaaS platform.
@@ -164,6 +247,8 @@ pub struct Platform {
     /// draw per spawn; `faas::reference::ReferencePlatform` shares the
     /// same type, so the arena↔reference differential stays draw-exact).
     cold: LogNormal,
+    /// Tier ladder state; `None` unless `faas.tier_ladder` is enabled.
+    ladder: Option<TierLadder>,
     stats: PlatformStats,
     vcpus_in_use: f64,
     /// Victim scratch for [`Platform::reclaim_idle`], reused across
@@ -175,10 +260,32 @@ pub struct Platform {
 }
 
 impl Platform {
+    /// Construct with the default ladder-stream seed. Prefer
+    /// [`Self::new_seeded`] where a `SystemConfig::seed` is in scope so
+    /// ladder draws vary with the run seed.
     pub fn new(cfg: FaasConfig, lcfg: LambdaFsConfig) -> Self {
+        Self::new_seeded(cfg, lcfg, DEFAULT_LADDER_SEED)
+    }
+
+    /// Construct with `seed` anchoring the ladder's dedicated RNG
+    /// stream. When `faas.tier_ladder` is off (the default) the seed is
+    /// unused and `new`/`new_seeded` are interchangeable — the legacy
+    /// binary cold-start model draws on the placement caller's RNG.
+    pub fn new_seeded(cfg: FaasConfig, lcfg: LambdaFsConfig, seed: u64) -> Self {
         let n = lcfg.n_deployments as usize;
+        let ladder = cfg.tier_ladder.then(|| TierLadder {
+            ephemeral: LogNormal::from_median(cfg.ephemeral_ms, cfg.tier_sigma),
+            restore: LogNormal::from_median(cfg.restore_ms, cfg.tier_sigma),
+            pool_hit: LogNormal::from_median(cfg.pool_hit_ms, cfg.tier_sigma),
+            rng: Rng::new(seed).fork("tier-ladder"),
+            pool: vec![0; n],
+            checkpoints: vec![0; n],
+            pool_capacity: cfg.pool_capacity,
+            checkpoint_capacity: cfg.checkpoint_capacity,
+        });
         Platform {
             cold: LogNormal::from_median(cfg.cold_start_ms, cfg.cold_start_sigma),
+            ladder,
             gateway: Station::new(cfg.gateway_capacity),
             // OpenWhisk adds containers when the activation queue it sees
             // exceeds ~2 ms of backlog.
@@ -596,19 +703,31 @@ impl Platform {
     }
 
     /// [`Self::place_http`] plus cold-start attribution: the returned
-    /// flag is true iff this placement provisioned a new instance (the
-    /// request pays that cold start). Centralized here so the systems
-    /// folding per-op `Outcome`s don't each re-derive it from stats
-    /// deltas.
+    /// [`ColdTier`] is `Warm` when an existing instance served the
+    /// placement, otherwise the ladder rung the new instance booted
+    /// through (always `Ephemeral` with the ladder off). Centralized
+    /// here so the systems folding per-op `Outcome`s don't each
+    /// re-derive it from stats deltas.
     pub fn place_http_traced(
         &mut self,
         dep: u32,
         now: Time,
         rng: &mut Rng,
-    ) -> (InstanceId, Time, bool) {
-        let before = self.stats.cold_starts;
+    ) -> (InstanceId, Time, ColdTier) {
+        let before = self.stats;
         let (id, ready) = self.place_http(dep, now, rng);
-        (id, ready, self.stats.cold_starts > before)
+        // A single placement spawns at most one instance, so the stats
+        // deltas identify the realized tier unambiguously.
+        let tier = if self.stats.cold_starts == before.cold_starts {
+            ColdTier::Warm
+        } else if self.stats.pool_hits > before.pool_hits {
+            ColdTier::Pool
+        } else if self.stats.restores > before.restores {
+            ColdTier::Restore
+        } else {
+            ColdTier::Ephemeral
+        };
+        (id, ready, tier)
     }
 
     /// Provision a new instance if vCPU headroom allows; otherwise try
@@ -655,10 +774,41 @@ impl Platform {
     }
 
     fn spawn(&mut self, dep: u32, now: Time, rng: &mut Rng, churn: bool) -> (InstanceId, Time) {
-        let mut cold_ms = self.cold.sample(rng);
-        if churn {
-            cold_ms += self.cfg.churn_penalty_ms * rng.range_f64(0.8, 1.2);
-        }
+        let cold_ms = match &mut self.ladder {
+            // Legacy binary model: the exact pre-ladder draw sequence on
+            // the CALLER's stream — byte-preserving the default domain.
+            None => {
+                let mut ms = self.cold.sample(rng);
+                if churn {
+                    ms += self.cfg.churn_penalty_ms * rng.range_f64(0.8, 1.2);
+                }
+                ms
+            }
+            // Ladder: cheapest available rung, all draws on the
+            // dedicated stream; the caller's RNG is not advanced. The
+            // churn penalty (destroy+create) does not apply to a pool
+            // hit — that instance was already booted before the churn.
+            Some(l) => {
+                let d = dep as usize;
+                if l.pool[d] > 0 {
+                    l.pool[d] -= 1;
+                    self.stats.pool_hits += 1;
+                    l.pool_hit.sample(&mut l.rng)
+                } else {
+                    let mut ms = if l.checkpoints[d] > 0 {
+                        l.checkpoints[d] -= 1;
+                        self.stats.restores += 1;
+                        l.restore.sample(&mut l.rng)
+                    } else {
+                        l.ephemeral.sample(&mut l.rng)
+                    };
+                    if churn {
+                        ms += self.cfg.churn_penalty_ms * l.rng.range_f64(0.8, 1.2);
+                    }
+                    ms
+                }
+            }
+        };
         let ready = now + time::from_ms(cold_ms);
         let seq = self.next_seq;
         self.next_seq += 1;
@@ -692,6 +842,38 @@ impl Platform {
         self.vcpus_in_use += self.lcfg.vcpus_per_namenode;
         self.stats.cold_starts += 1;
         (id, ready)
+    }
+
+    /// Deposit one pre-booted instance into `dep`'s warm pool (the
+    /// predictive-prewarming entry point, called from `on_second`).
+    /// Consumes **zero** RNG draws — the boot latency is drawn from the
+    /// ladder stream only when a placement claims the slot. Returns
+    /// `false` when the ladder is disabled or the pool is at capacity.
+    pub fn pool_prewarm(&mut self, dep: u32) -> bool {
+        match &mut self.ladder {
+            Some(l) if l.pool[dep as usize] < l.pool_capacity => {
+                l.pool[dep as usize] += 1;
+                self.stats.pool_prewarms += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Pre-booted instances currently waiting in warm pools, across all
+    /// deployments — the timeline sampler's pool-occupancy gauge.
+    pub fn pool_occupancy(&self) -> u32 {
+        self.ladder.as_ref().map_or(0, |l| l.pool.iter().sum())
+    }
+
+    /// Pre-booted instances waiting in `dep`'s warm pool.
+    pub fn pooled_in_deployment(&self, dep: u32) -> u32 {
+        self.ladder.as_ref().map_or(0, |l| l.pool[dep as usize])
+    }
+
+    /// Is the cold-start tier ladder active on this platform?
+    pub fn ladder_enabled(&self) -> bool {
+        self.ladder.is_some()
     }
 
     /// Unconditionally provision an instance of `dep` (pre-warming for
@@ -766,6 +948,14 @@ impl Platform {
         self.vcpus_in_use -= self.lcfg.vcpus_per_namenode;
         if !for_capacity {
             self.stats.kills += 1;
+        }
+        // Tier ladder: a dying instance's state is snapshot-able, so the
+        // kill deposits a checkpoint the next boot can restore from.
+        if let Some(l) = &mut self.ladder {
+            let d = dep as usize;
+            if l.checkpoints[d] < l.checkpoint_capacity {
+                l.checkpoints[d] += 1;
+            }
         }
     }
 
@@ -871,12 +1061,88 @@ mod tests {
     #[test]
     fn traced_placement_attributes_cold_starts() {
         let (mut p, mut rng) = platform();
-        let (id, ready, cold) = p.place_http_traced(0, 0, &mut rng);
-        assert!(cold, "first placement provisions (cold)");
+        let (id, ready, tier) = p.place_http_traced(0, 0, &mut rng);
+        assert_eq!(tier, ColdTier::Ephemeral, "first placement provisions (cold)");
+        assert!(tier.is_cold());
         p.promote_warm(ready);
-        let (id2, _, cold2) = p.place_http_traced(0, ready + 10, &mut rng);
+        let (id2, _, tier2) = p.place_http_traced(0, ready + 10, &mut rng);
         assert_eq!(id, id2);
-        assert!(!cold2, "warm reuse is not a cold start");
+        assert_eq!(tier2, ColdTier::Warm, "warm reuse is not a cold start");
+        assert!(!tier2.is_cold());
+    }
+
+    fn ladder_platform() -> (Platform, Rng) {
+        let c = SystemConfig::default();
+        let mut faas = c.faas.clone();
+        faas.tier_ladder = true;
+        (Platform::new_seeded(faas, c.lambda_fs, 0x7e57), Rng::new(11))
+    }
+
+    #[test]
+    fn ladder_off_has_no_pool() {
+        let (mut p, _) = platform();
+        assert!(!p.ladder_enabled());
+        assert!(!p.pool_prewarm(0), "prewarm is a no-op without the ladder");
+        assert_eq!(p.pool_occupancy(), 0);
+        assert_eq!(p.stats().pool_prewarms, 0);
+    }
+
+    #[test]
+    fn pool_hit_is_fastest_rung() {
+        let (mut p, mut rng) = ladder_platform();
+        assert!(p.pool_prewarm(3));
+        assert_eq!(p.pool_occupancy(), 1);
+        assert_eq!(p.pooled_in_deployment(3), 1);
+        let (_, ready, tier) = p.place_http_traced(3, 1_000, &mut rng);
+        assert_eq!(tier, ColdTier::Pool);
+        // pool_hit_ms = 5, sigma 0.25: the LUT clamps samples well
+        // under 15 ms — a pool hit never looks like a boot.
+        assert!(ready - 1_000 < time::from_ms(15.0), "pool hit is near-instant");
+        assert_eq!(p.pool_occupancy(), 0, "the hit consumed the slot");
+        assert_eq!(p.stats().pool_hits, 1);
+        assert_eq!(p.stats().cold_starts, 1, "a pool hit is still a cold start");
+    }
+
+    #[test]
+    fn kill_seeds_checkpoint_restore() {
+        let (mut p, mut rng) = ladder_platform();
+        let (id, ready, tier) = p.place_http_traced(0, 0, &mut rng);
+        assert_eq!(tier, ColdTier::Ephemeral, "empty ladder: full boot");
+        assert!(ready > time::from_ms(60.0), "ephemeral boot is the slow rung");
+        p.promote_warm(ready);
+        p.kill(id, ready + 1, false);
+        // The kill checkpointed the instance; the next boot restores.
+        let (_, ready2, tier2) = p.place_http_traced(0, ready + 10, &mut rng);
+        assert_eq!(tier2, ColdTier::Restore);
+        let boot = ready2 - (ready + 10);
+        assert!(boot > time::from_ms(15.0) && boot < time::from_ms(150.0), "restore ~50ms: {boot}");
+        assert_eq!(p.stats().restores, 1);
+        assert_eq!(p.stats().cold_starts, 2);
+    }
+
+    #[test]
+    fn pool_and_checkpoint_capacities_bind() {
+        let c = SystemConfig::default();
+        let (mut p, _) = ladder_platform();
+        for _ in 0..c.faas.pool_capacity {
+            assert!(p.pool_prewarm(0));
+        }
+        assert!(!p.pool_prewarm(0), "pool at capacity");
+        assert_eq!(p.pool_occupancy(), c.faas.pool_capacity);
+        assert_eq!(p.stats().pool_prewarms, c.faas.pool_capacity as u64);
+    }
+
+    #[test]
+    fn ladder_draws_leave_caller_stream_untouched() {
+        // All ladder boots draw on the platform-owned stream: the
+        // placement caller's RNG must come out bit-identical to an
+        // untouched twin (the contract that keeps ladder-on runs inside
+        // their own fingerprint domain without perturbing callers).
+        let (mut p, mut rng) = ladder_platform();
+        let mut twin = Rng::new(11);
+        let (_, _, tier) = p.place_http_traced(0, 0, &mut rng);
+        assert!(tier.is_cold());
+        assert_eq!(rng.next_u64(), twin.next_u64(), "caller stream advanced by a ladder draw");
     }
 
     #[test]

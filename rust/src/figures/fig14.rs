@@ -1,7 +1,12 @@
 //! Figure 14: auto-scaling ablation — enabled / limited (≤2–3 instances
-//! per deployment) / disabled (1 instance), per-op-kind throughput.
+//! per deployment) / disabled (1 instance), per-op-kind throughput —
+//! plus the PR-9 provisioning-policy ablation on the Read workload:
+//! reactive (binary cold-start model, the pinned default) vs
+//! pooled-restore (tier ladder on, reactive scale-out only) vs
+//! predictive (tier ladder + EWMA prewarming), with per-tier cold-start
+//! attribution (`pool_hits` / `restores` / `ephemeral_boots`).
 
-use crate::config::AutoScaleMode;
+use crate::config::{AutoScaleMode, ScalePolicyMode};
 use crate::metrics::RunMetrics;
 use crate::namespace::OpKind;
 use crate::systems::{driver, LambdaFs, MetadataService};
@@ -18,6 +23,19 @@ pub struct ModeOutcome {
     pub cold_starts: u64,
 }
 
+/// One provisioning-policy mode's outcome on the Read workload:
+/// throughput plus the cold-start tier breakdown (conserves
+/// `pool_hits + restores + ephemeral_boots == cold_starts`).
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyOutcome {
+    pub name: &'static str,
+    pub tput: f64,
+    pub cold_starts: u64,
+    pub pool_hits: u64,
+    pub restores: u64,
+    pub ephemeral_boots: u64,
+}
+
 #[derive(Debug)]
 pub struct Fig14 {
     /// (op, enabled, limited, disabled).
@@ -25,6 +43,9 @@ pub struct Fig14 {
     /// Full ledgers for the Read row's three modes — feeds the shared
     /// per-system summary table.
     pub read_modes: Vec<(&'static str, RunMetrics)>,
+    /// Provisioning-policy ablation rows (reactive / pooled-restore /
+    /// predictive) on the Read workload.
+    pub policy_rows: Vec<PolicyOutcome>,
 }
 
 pub fn run(scale: Scale) -> Fig14 {
@@ -66,7 +87,45 @@ pub fn run(scale: Scale) -> Fig14 {
         }
         rows.push((kind, enabled, limited, disabled));
     }
-    Fig14 { rows, read_modes }
+
+    // Provisioning-policy ablation on the Read workload: reactive
+    // (binary cold-start model — the pinned default), pooled-restore
+    // (tier ladder on, reactive scale-out), predictive (tier ladder +
+    // EWMA prewarming). Each mode forks its own stream, like the
+    // autoscale modes above.
+    let spec = ClosedLoopSpec {
+        kind: OpKind::Read,
+        n_clients,
+        n_vms: (n_clients / 128).clamp(1, 8),
+        ops_per_client,
+        namespace: crate::namespace::generate::NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+    let mut run_policy = |name: &'static str, ladder: bool, policy: ScalePolicyMode| {
+        let mut c = cfg.clone();
+        c.faas.tier_ladder = ladder;
+        c.lambda_fs.scale_policy = policy;
+        let mut sys = LambdaFs::new(c, ns.clone(), n_clients, spec.n_vms);
+        sys.prewarm(1);
+        let mut r = rng.fork(&format!("policy-{name}"));
+        driver::run_closed_loop(&mut sys, &spec, &ns, &sampler, &mut r);
+        let m = sys.into_metrics();
+        PolicyOutcome {
+            name,
+            tput: m.sustained_throughput(),
+            cold_starts: m.cold_starts,
+            pool_hits: m.pool_hits,
+            restores: m.restores,
+            ephemeral_boots: m.ephemeral_boots,
+        }
+    };
+    let policy_rows = vec![
+        run_policy("reactive", false, ScalePolicyMode::Reactive),
+        run_policy("pooled-restore", true, ScalePolicyMode::Reactive),
+        run_policy("predictive", true, ScalePolicyMode::Predictive),
+    ];
+
+    Fig14 { rows, read_modes, policy_rows }
 }
 
 impl Fig14 {
@@ -125,6 +184,42 @@ impl Fig14 {
             .map(|(name, m)| common::summary_row(name, m))
             .collect();
         common::print_summary("Figure 14 summary: Read-row ablation modes", &summary);
+
+        // Provisioning-policy ablation: per-tier cold-start attribution.
+        let prows: Vec<Vec<String>> = self
+            .policy_rows
+            .iter()
+            .map(|p| {
+                vec![
+                    p.name.to_string(),
+                    common::f0(p.tput),
+                    p.cold_starts.to_string(),
+                    p.pool_hits.to_string(),
+                    p.restores.to_string(),
+                    p.ephemeral_boots.to_string(),
+                ]
+            })
+            .collect();
+        common::print_table(
+            "Figure 14b: provisioning-policy ablation (Read)",
+            &["policy", "ops/s", "cold", "pool", "restore", "ephemeral"],
+            &prows,
+        );
+        let pcsv: Vec<String> = self
+            .policy_rows
+            .iter()
+            .map(|p| {
+                format!(
+                    "{},{:.0},{},{},{},{}",
+                    p.name, p.tput, p.cold_starts, p.pool_hits, p.restores, p.ephemeral_boots
+                )
+            })
+            .collect();
+        common::write_csv(
+            "fig14_policy.csv",
+            "policy,tput,cold_starts,pool_hits,restores,ephemeral_boots",
+            &pcsv,
+        );
     }
 
     pub fn row(&self, kind: OpKind) -> (f64, f64, f64) {
@@ -145,5 +240,22 @@ mod tests {
         // sweep reaches a milder saturation, so assert ordering + margin.
         assert!(e >= l * 0.95, "enabled {e} >= limited {l}");
         assert!(e > d * 1.15, "read ablation ratio: {}", e / d);
+        // Policy ablation: three rows, each conserving the tier ledger.
+        assert_eq!(fig.policy_rows.len(), 3);
+        for p in &fig.policy_rows {
+            assert_eq!(
+                p.pool_hits + p.restores + p.ephemeral_boots,
+                p.cold_starts,
+                "{}: tier ledger conserved",
+                p.name
+            );
+        }
+        let reactive = &fig.policy_rows[0];
+        assert_eq!(reactive.pool_hits, 0, "binary model has no pool rung");
+        assert_eq!(reactive.restores, 0, "binary model has no restore rung");
+        assert_eq!(
+            reactive.ephemeral_boots, reactive.cold_starts,
+            "ladder off: every cold start is an ephemeral boot"
+        );
     }
 }

@@ -1,6 +1,6 @@
 //! Per-run metrics: everything a figure needs from one workload execution.
 
-use crate::systems::{CacheOutcome, Outcome};
+use crate::systems::{CacheOutcome, ColdTier, Outcome};
 use crate::telemetry::{Phase, PhaseBreakdown, N_PHASES};
 use crate::util::hist::Histogram;
 
@@ -50,6 +50,13 @@ pub struct RunMetrics {
     pub cold_starts: u64,
     /// Ops served by an already-warm instance/server.
     pub warm_ops: u64,
+    /// Cold starts by ladder tier (folded from the [`ColdTier`] in
+    /// `Outcome::cold_start`). Tier conservation:
+    /// `pool_hits + restores + ephemeral_boots == cold_starts` always —
+    /// with the ladder off every cold start is an ephemeral boot.
+    pub pool_hits: u64,
+    pub restores: u64,
+    pub ephemeral_boots: u64,
     /// Ops served from an in-memory metadata cache.
     pub cache_hits: u64,
     /// Ops that missed the cache and paid a persistent-store read.
@@ -101,6 +108,9 @@ impl RunMetrics {
             last_completion_us: 0,
             cold_starts: 0,
             warm_ops: 0,
+            pool_hits: 0,
+            restores: 0,
+            ephemeral_boots: 0,
             cache_hits: 0,
             cache_misses: 0,
             retry_hist: [0; RETRY_BUCKETS],
@@ -186,6 +196,9 @@ impl RunMetrics {
         self.last_completion_us = self.last_completion_us.max(other.last_completion_us);
         self.cold_starts += other.cold_starts;
         self.warm_ops += other.warm_ops;
+        self.pool_hits += other.pool_hits;
+        self.restores += other.restores;
+        self.ephemeral_boots += other.ephemeral_boots;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
         for (a, b) in self.retry_hist.iter_mut().zip(&other.retry_hist) {
@@ -208,10 +221,20 @@ impl RunMetrics {
     /// Fold one per-op [`Outcome`] into the counters. The drivers call
     /// this exactly once per completed op, alongside [`Self::record_at`].
     pub fn record_outcome(&mut self, o: &Outcome) {
-        if o.cold_start {
-            self.cold_starts += 1;
-        } else {
-            self.warm_ops += 1;
+        match o.cold_start {
+            ColdTier::Warm => self.warm_ops += 1,
+            ColdTier::Pool => {
+                self.cold_starts += 1;
+                self.pool_hits += 1;
+            }
+            ColdTier::Restore => {
+                self.cold_starts += 1;
+                self.restores += 1;
+            }
+            ColdTier::Ephemeral => {
+                self.cold_starts += 1;
+                self.ephemeral_boots += 1;
+            }
         }
         match o.cache {
             CacheOutcome::Hit => self.cache_hits += 1,
@@ -408,6 +431,16 @@ impl RunMetrics {
             h.write_u64(n);
         }
         h.write_u64(self.attributed_cost_us);
+        // Tier counters fold in only when a non-ephemeral tier was hit.
+        // With the ladder off (the default) every cold start is an
+        // ephemeral boot — `ephemeral_boots == cold_starts`, already
+        // digested above — so default runs keep their pre-ladder
+        // digests bit-identically (pinned in tests/determinism.rs).
+        if self.pool_hits != 0 || self.restores != 0 {
+            h.write_u64(self.pool_hits);
+            h.write_u64(self.restores);
+            h.write_u64(self.ephemeral_boots);
+        }
         // Chaos counters fold in only when nonzero, so every pre-chaos
         // artifact (and every no-chaos run) keeps its historical digest.
         if self.timeouts != 0 || self.gave_up != 0 {
@@ -489,7 +522,7 @@ mod tests {
         let mut m = RunMetrics::new();
         m.record(0, 1.0, false);
         m.record_outcome(&Outcome {
-            cold_start: true,
+            cold_start: ColdTier::Ephemeral,
             cache: CacheOutcome::Miss,
             retries: 0,
             server: 3,
@@ -499,7 +532,7 @@ mod tests {
         });
         m.record(0, 2.0, false);
         m.record_outcome(&Outcome {
-            cold_start: false,
+            cold_start: ColdTier::Warm,
             cache: CacheOutcome::Hit,
             retries: 2,
             server: 1,
@@ -509,7 +542,7 @@ mod tests {
         });
         m.record(0, 3.0, true);
         m.record_outcome(&Outcome {
-            cold_start: false,
+            cold_start: ColdTier::Warm,
             cache: CacheOutcome::Bypass,
             retries: 100, // clamps into the tail bucket
             server: 3,
@@ -518,6 +551,8 @@ mod tests {
             gave_up: false,
         });
         assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops);
+        assert_eq!(m.pool_hits + m.restores + m.ephemeral_boots, m.cold_starts);
+        assert_eq!(m.ephemeral_boots, 1, "binary-model cold start is an ephemeral boot");
         assert_eq!(m.cache_hits, 1);
         assert_eq!(m.cache_misses, 1);
         assert_eq!(m.retry_hist.iter().sum::<u64>(), m.completed_ops);
@@ -551,6 +586,43 @@ mod tests {
         with.gave_up = 1;
         assert_ne!(ofp, with.outcome_fingerprint(), "chaos counters are digested");
         assert_eq!(ofp, m.outcome_fingerprint(), "zero counters keep the historical digest");
+    }
+
+    #[test]
+    fn tier_counters_fold_and_conserve() {
+        use crate::systems::Outcome;
+        let mut m = RunMetrics::new();
+        for tier in [ColdTier::Pool, ColdTier::Restore, ColdTier::Ephemeral, ColdTier::Warm] {
+            m.record(0, 1.0, false);
+            m.record_outcome(&Outcome { cold_start: tier, ..Outcome::warm(0) });
+        }
+        assert_eq!(m.cold_starts, 3);
+        assert_eq!(m.warm_ops, 1);
+        assert_eq!((m.pool_hits, m.restores, m.ephemeral_boots), (1, 1, 1));
+        assert_eq!(m.pool_hits + m.restores + m.ephemeral_boots, m.cold_starts);
+    }
+
+    #[test]
+    fn tier_counters_digest_only_off_the_ephemeral_rung() {
+        // The ladder-off ≡ pre-ladder bit-identity contract at the
+        // digest level: a run whose every cold start is an ephemeral
+        // boot (exactly what the binary model produces) must hash
+        // identically to a pre-ladder ledger with the same cold_starts —
+        // the tier counters fold in only when pool/restore rungs fire.
+        use crate::systems::Outcome;
+        let mut m = RunMetrics::new();
+        m.record(0, 1.0, false);
+        m.record_outcome(&Outcome { cold_start: ColdTier::Ephemeral, ..Outcome::warm(0) });
+        let ofp = m.outcome_fingerprint();
+        let mut legacy = m.clone();
+        legacy.ephemeral_boots = 0; // a pre-ladder ledger never set it
+        assert_eq!(ofp, legacy.outcome_fingerprint(), "ephemeral-only runs keep the old digest");
+        let mut pooled = m.clone();
+        pooled.pool_hits = 1;
+        assert_ne!(ofp, pooled.outcome_fingerprint(), "a pool hit changes the digest");
+        let mut restored = m.clone();
+        restored.restores = 1;
+        assert_ne!(ofp, restored.outcome_fingerprint(), "a restore changes the digest");
     }
 
     #[test]
@@ -595,7 +667,7 @@ mod tests {
             m.record_phases(&sp.finish(Phase::Exec, at));
         };
         let cold = Outcome {
-            cold_start: true,
+            cold_start: ColdTier::Ephemeral,
             cache: CacheOutcome::Miss,
             retries: 1,
             server: 2,

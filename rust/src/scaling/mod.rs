@@ -10,9 +10,38 @@
 //!   and anti-thrashing mode (suppress HTTP replacement when latency
 //!   degrades ≥ T_thrash × mean). Semantically identical to the L1
 //!   latency Pallas kernel; the runtime can execute either.
+//!
+//! # Reactive vs predictive scale-out
+//!
+//! Two decision layers provision capacity, split by *when* they act:
+//!
+//! * **Reactive** — [`policy::ScaleOutPolicy`], consulted inside every
+//!   HTTP placement: grow the deployment when it has no live instance
+//!   or every instance's queueing backlog exceeds the tolerance. It
+//!   acts *after* congestion exists, so each burst pays at least one
+//!   boot latency. This is the default (`lambda_fs.scale_policy =
+//!   "reactive"`) and the pinned fingerprint domain.
+//! * **Predictive** — [`predict::PredictivePolicy`], consulted once per
+//!   simulated second from `on_second`: EWMA-forecast each
+//!   deployment's arrivals and deposit the projected instance
+//!   shortfall into the tier ladder's warm pool
+//!   ([`crate::faas::Platform::pool_prewarm`]) so the next burst boots
+//!   on the ~5 ms pool rung. Requires `faas.tier_ladder`.
+//!
+//! **Zero-draw contract:** every decision in this module's policy layer
+//! is RNG-free — `ScaleOutPolicy::should_grow` and
+//! `PredictivePolicy::prewarm_quota` are pure functions of the observed
+//! congestion/arrival state. The only randomized choice in the module
+//! is `ReplacementPolicy::choose` (client-side path selection, one
+//! `chance` draw on the client's stream), and the only latency sampling
+//! tied to scaling lives in the platform's cold-start models. This is
+//! what lets the predictive policy switch on without perturbing any
+//! existing stream (see `docs/DETERMINISM.md`).
 
 pub mod policy;
+pub mod predict;
 pub mod window;
 
 pub use policy::ReplacementPolicy;
+pub use predict::PredictivePolicy;
 pub use window::LatencyWindow;

@@ -1,0 +1,152 @@
+//! Predictive prewarming: per-deployment arrival forecasting that
+//! pre-boots instances into the tier ladder's warm pool
+//! ([`crate::faas::Platform::pool_prewarm`]) *before* the reactive
+//! backlog signal fires.
+//!
+//! The reactive [`super::policy::ScaleOutPolicy`] only grows a
+//! deployment once requests are already queueing — every burst pays at
+//! least one boot latency. The predictive policy runs once per
+//! simulated second (from `LambdaFs::on_second`, after all existing
+//! housekeeping): it folds the second's observed arrivals per
+//! deployment into an EWMA forecast, converts the forecast into an
+//! instance requirement, and asks the platform to deposit the shortfall
+//! into the warm pool so the *next* burst's provisioning lands on the
+//! ~5 ms pool rung instead of a full boot.
+//!
+//! # Zero-draw contract
+//!
+//! The policy is **RNG-free**: `prewarm_quota` is a pure function of
+//! its observed inputs, and `Platform::pool_prewarm` consumes no draws
+//! (boot latency is sampled from the ladder's dedicated stream only
+//! when a placement claims the slot). Enabling
+//! `lambda_fs.scale_policy = "predictive"` therefore perturbs no
+//! existing RNG stream — the run differs only through the pool slots it
+//! deposits. Pinned by the run-twice and record→replay predictive tests
+//! in `rust/tests/determinism.rs`.
+
+/// Exponentially weighted moving average of per-deployment arrivals
+/// (ops per second), one level per deployment.
+#[derive(Clone, Debug)]
+pub struct EwmaForecast {
+    alpha: f64,
+    level: Vec<f64>,
+}
+
+impl EwmaForecast {
+    /// `alpha` is the new-observation weight in `(0, 1]`; higher tracks
+    /// bursts faster, lower smooths them.
+    pub fn new(n_deployments: u32, alpha: f64) -> Self {
+        EwmaForecast { alpha: alpha.clamp(1e-6, 1.0), level: vec![0.0; n_deployments as usize] }
+    }
+
+    /// Fold one second's observed arrivals for `dep` into the level.
+    pub fn observe(&mut self, dep: u32, arrivals: u64) {
+        let l = &mut self.level[dep as usize];
+        *l = self.alpha * arrivals as f64 + (1.0 - self.alpha) * *l;
+    }
+
+    /// Forecast arrivals (ops/s) for `dep` next second.
+    pub fn forecast(&self, dep: u32) -> f64 {
+        self.level[dep as usize]
+    }
+}
+
+/// The per-second prewarming decision. Holds the forecast state; owns
+/// no RNG and performs no sampling.
+#[derive(Clone, Debug)]
+pub struct PredictivePolicy {
+    forecast: EwmaForecast,
+    /// Serving capacity assumed per warm instance (ops/s) when
+    /// converting a forecast into an instance requirement.
+    ops_per_instance: f64,
+    /// Cap on pool deposits per deployment per second (burst damper).
+    max_per_tick: u32,
+}
+
+impl PredictivePolicy {
+    pub fn new(n_deployments: u32, ops_per_instance: f64) -> Self {
+        PredictivePolicy {
+            // alpha 0.3: a sustained burst is fully reflected after
+            // ~3 seconds, single-second spikes are damped.
+            forecast: EwmaForecast::new(n_deployments, 0.3),
+            ops_per_instance: ops_per_instance.max(1.0),
+            max_per_tick: 8,
+        }
+    }
+
+    /// One decision for `dep` at the end of a simulated second:
+    /// `arrivals` is the second's observed completions for the
+    /// deployment, `live` its live instances, `pooled` its current
+    /// warm-pool slots. Returns how many pool deposits to request
+    /// (callers then invoke `Platform::pool_prewarm` that many times;
+    /// the platform's own `pool_capacity` still binds).
+    pub fn prewarm_quota(&mut self, dep: u32, arrivals: u64, live: u32, pooled: u32) -> u32 {
+        self.forecast.observe(dep, arrivals);
+        let needed = (self.forecast.forecast(dep) / self.ops_per_instance).ceil() as u32;
+        needed.saturating_sub(live + pooled).min(self.max_per_tick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_converges_to_constant_load() {
+        let mut f = EwmaForecast::new(2, 0.3);
+        for _ in 0..30 {
+            f.observe(0, 1_000);
+        }
+        assert!((f.forecast(0) - 1_000.0).abs() < 1.0, "level {}", f.forecast(0));
+        assert_eq!(f.forecast(1), 0.0, "untouched deployment stays at zero");
+    }
+
+    #[test]
+    fn ewma_decays_after_burst() {
+        let mut f = EwmaForecast::new(1, 0.3);
+        f.observe(0, 10_000);
+        for _ in 0..40 {
+            f.observe(0, 0);
+        }
+        assert!(f.forecast(0) < 1.0, "idle load decays: {}", f.forecast(0));
+    }
+
+    #[test]
+    fn quota_covers_forecast_shortfall() {
+        let mut p = PredictivePolicy::new(1, 1_000.0);
+        // Sustained 5k ops/s with nothing live: wants ~5 instances.
+        let mut q = 0;
+        for _ in 0..20 {
+            q = p.prewarm_quota(0, 5_000, 0, 0);
+        }
+        assert!(q >= 4, "sustained load forecasts a fleet: {q}");
+        // Enough live capacity: no prewarming.
+        assert_eq!(p.prewarm_quota(0, 5_000, 10, 0), 0);
+    }
+
+    #[test]
+    fn pooled_slots_count_toward_capacity() {
+        let mut p = PredictivePolicy::new(1, 1_000.0);
+        for _ in 0..20 {
+            p.prewarm_quota(0, 3_000, 0, 0);
+        }
+        let with_pool = p.prewarm_quota(0, 3_000, 1, 2);
+        let without = p.prewarm_quota(0, 3_000, 1, 0);
+        assert!(with_pool < without, "{with_pool} !< {without}");
+    }
+
+    #[test]
+    fn quota_is_burst_damped() {
+        let mut p = PredictivePolicy::new(1, 10.0);
+        let q = p.prewarm_quota(0, 1_000_000, 0, 0);
+        assert!(q <= 8, "per-tick damper binds: {q}");
+    }
+
+    #[test]
+    fn idle_deployment_requests_nothing() {
+        let mut p = PredictivePolicy::new(4, 1_000.0);
+        for d in 0..4 {
+            assert_eq!(p.prewarm_quota(d, 0, 1, 0), 0);
+        }
+    }
+}

@@ -15,16 +15,17 @@ use crate::cache::SlotCaches;
 use crate::chaos::{self, ChaosPlan, ChaosState};
 use crate::client::{ClientState, Router};
 use crate::coherence::{protocol, AckDisruption, Coordinator, Invalidation};
-use crate::config::SystemConfig;
+use crate::config::{ScalePolicyMode, SystemConfig};
 use crate::coordinator::subtree::{self, SubtreeParams, SubtreePlan};
 use crate::coordinator::ServiceModel;
-use crate::faas::{InstanceId, Platform};
+use crate::faas::{ColdTier, InstanceId, Platform};
 use crate::metrics::{CostModel, RunMetrics};
 use crate::namespace::{InodeRef, Namespace, OpKind, Operation};
 use crate::rpc::backoff::Backoff;
 use crate::rpc::conn::VmId;
 use crate::rpc::{ConnectionTable, NetModel};
 use crate::scaling::policy::RpcPath;
+use crate::scaling::predict::PredictivePolicy;
 use crate::sim::{time, Time};
 use crate::store::NdbStore;
 use crate::telemetry::{Phase, PhaseBreakdown, Span, Timeline, TimelineSample};
@@ -73,6 +74,13 @@ pub struct LambdaFs<S: BuildHasher = FnvBuildHasher> {
     /// is read-only gauge capture: an armed run consumes the exact RNG
     /// sequence of an unarmed one.
     timeline: Option<Timeline>,
+    /// Predictive prewarming (`lambda_fs.scale_policy = "predictive"`):
+    /// one RNG-free decision per `on_second` depositing pool slots via
+    /// [`Platform::pool_prewarm`]. `None` under the reactive default.
+    predict: Option<PredictivePolicy>,
+    /// Per-deployment cumulative-op watermarks for the predictive
+    /// policy's per-second arrival deltas.
+    last_dep_ops: Vec<u64>,
     last_settle: Time,
 }
 
@@ -88,7 +96,13 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
     pub fn with_hasher(cfg: SystemConfig, ns: Namespace, n_clients: u32, n_vms: u32) -> Self {
         let rng = Rng::new(cfg.seed ^ 0x1a3b);
         let router = Router::build(&ns, cfg.lambda_fs.n_deployments);
-        let platform = Platform::new(cfg.faas.clone(), cfg.lambda_fs.clone());
+        let platform = Platform::new_seeded(cfg.faas.clone(), cfg.lambda_fs.clone(), cfg.seed);
+        let predict = (cfg.lambda_fs.scale_policy == ScalePolicyMode::Predictive).then(|| {
+            PredictivePolicy::new(
+                cfg.lambda_fs.n_deployments,
+                cfg.lambda_fs.concurrency_level as f64 * 1_000.0,
+            )
+        });
         let store = NdbStore::with_hasher(cfg.store.clone());
         let net = NetModel::new(cfg.net.clone());
         let svc = ServiceModel::new(cfg.op.clone());
@@ -126,6 +140,8 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             kill_schedule: Vec::new(),
             chaos: None,
             timeline: None,
+            predict,
+            last_dep_ops: Vec::new(),
             last_settle: 0,
         }
     }
@@ -501,7 +517,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             (RpcPath::Tcp, Some(i)) => {
                 let arrive = now + self.net.tcp_hop_chaos(rng, mults.as_ref());
                 span.advance(Phase::Net, arrive);
-                (i, arrive, false, false)
+                (i, arrive, false, ColdTier::Warm)
             }
             _ => {
                 // HTTP: gateway + invoker placement (may cold start).
@@ -517,7 +533,7 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
                 // wait for the placed instance is provisioning (cold
                 // path) or a busy-slot wait (warm path).
                 span.advance(Phase::Net, gw_done + leg);
-                span.advance(if cold { Phase::ColdStart } else { Phase::Queue }, arrive);
+                span.advance(if cold.is_cold() { Phase::ColdStart } else { Phase::Queue }, arrive);
                 (i, arrive, true, cold)
             }
         };
@@ -767,6 +783,32 @@ impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
         s.cost_usd = sample.usd;
         s.cost_simplified_usd = simplified;
 
+        // Predictive prewarming (opt-in): one RNG-free decision per
+        // deployment from the second's arrival delta. Runs before
+        // timeline sampling so the pool gauge reflects this second's
+        // deposits; consumes no draws, so the reactive default is
+        // byte-identical whether or not this block exists.
+        if let Some(p) = self.predict.as_mut() {
+            let n = self.cfg.lambda_fs.n_deployments as usize;
+            if self.last_dep_ops.len() < n {
+                self.last_dep_ops.resize(n, 0);
+            }
+            for dep in 0..n as u32 {
+                let d = dep as usize;
+                let total = self.metrics.per_deployment_ops.get(d).copied().unwrap_or(0);
+                let arrivals = total.saturating_sub(self.last_dep_ops[d]);
+                self.last_dep_ops[d] = total;
+                let live = self.platform.live_in_deployment(dep);
+                let pooled = self.platform.pooled_in_deployment(dep);
+                let quota = p.prewarm_quota(dep, arrivals, live, pooled);
+                for _ in 0..quota {
+                    if !self.platform.pool_prewarm(dep) {
+                        break;
+                    }
+                }
+            }
+        }
+
         // Timeline sampling (armed runs only): fleet gauges the metrics
         // ledger cannot see — per-deployment live counts and the
         // still-provisioning pool. Pure reads; no RNG.
@@ -776,6 +818,7 @@ impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
                 .map(|d| self.platform.live_in_deployment(d))
                 .collect();
             sample.warm = self.platform.starting_instances(now);
+            sample.pool = self.platform.pool_occupancy();
             tl.push(sample);
         }
         self.last_settle = now;

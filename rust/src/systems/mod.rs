@@ -41,6 +41,7 @@ pub mod lambdafs;
 pub use driver::{run_closed_loop, run_open_loop, run_open_loop_batched};
 pub use lambdafs::LambdaFs;
 
+pub use crate::faas::ColdTier;
 use crate::metrics::RunMetrics;
 use crate::namespace::Operation;
 use crate::sim::Time;
@@ -93,9 +94,13 @@ pub enum CacheOutcome {
 /// need to attribute *why* a completion took as long as it did.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Outcome {
-    /// The request was served by an instance provisioned for it (it paid
-    /// a cold start). Serverful systems never cold-start.
-    pub cold_start: bool,
+    /// How the serving instance was provisioned: [`ColdTier::Warm`]
+    /// when an existing instance served the request, otherwise the
+    /// cold-start ladder rung the request paid for
+    /// (pool hit / checkpoint-restore / ephemeral boot — always
+    /// `Ephemeral` under the default binary model). Serverful systems
+    /// never cold-start.
+    pub cold_start: ColdTier,
     /// Cache interaction of the primary service attempt.
     pub cache: CacheOutcome,
     /// Resubmissions performed for this op (straggler races, subtree
@@ -121,7 +126,7 @@ impl Outcome {
     /// shape; callers override the fields that apply.
     pub fn warm(server: u32) -> Outcome {
         Outcome {
-            cold_start: false,
+            cold_start: ColdTier::Warm,
             cache: CacheOutcome::Bypass,
             retries: 0,
             server,

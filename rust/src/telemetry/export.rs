@@ -58,6 +58,7 @@ pub fn chrome_trace_json(tl: &Timeline, m: &RunMetrics, plan: &ChaosPlan) -> Str
         }
         counter(&mut events, pid, ts, "live instances", &live_args);
         counter(&mut events, pid, ts, "warm instances", &format!("\"warm\": {}", s.warm));
+        counter(&mut events, pid, ts, "warm pool (instances)", &format!("\"pool\": {}", s.pool));
         counter(&mut events, pid, ts, "throughput (ops/s)", &format!("\"ops\": {}", s.completed));
         counter(&mut events, pid, ts, "backlog (ops)", &format!("\"ops\": {}", s.backlog));
         let consulted = s.cache_hits + s.cache_misses;
@@ -210,6 +211,7 @@ mod tests {
                 second: s,
                 live_per_dep: vec![1 + s, 2],
                 warm: 1,
+                pool: s,
                 completed: 100 + s as u64,
                 backlog: 0,
                 cache_hits: 50,

@@ -28,8 +28,9 @@
 //! ## 2. The timeline sampler (opt in)
 //!
 //! [`Timeline`] is a per-second ring of fleet gauges — live instances
-//! per deployment, warm pool size, completed ops, backlog, cumulative
-//! cache hits/misses, cost rate, cumulative timeouts/give-ups — captured
+//! per deployment, warm pool size, tier-ladder pool occupancy,
+//! completed ops, backlog, cumulative cache hits/misses, cost rate,
+//! cumulative timeouts/give-ups — captured
 //! by a system's `on_second` after it is armed through
 //! `MetadataService::install_telemetry` and recovered with
 //! `take_telemetry`. The binary section ([`Timeline::encode`] /
@@ -58,14 +59,18 @@
 //! ## Binary timeline format
 //!
 //! ```text
-//! magic "LFTL", version 0x01
+//! magic "LFTL", version 0x02
 //! system    : varint len + utf8 bytes
 //! n_deps    : varint
 //! n_samples : varint
-//! sample    : second, len(live_per_dep) + each, warm, completed,
+//! sample    : second, len(live_per_dep) + each, warm, pool, completed,
 //!             backlog, cache_hits, cache_misses, cost_usd.to_bits(),
 //!             timeouts, gave_up          (all varint)
 //! ```
+//!
+//! Version 0x02 (PR 9) inserts the `pool` gauge (tier-ladder warm-pool
+//! occupancy) after `warm`; version 0x01 blobs are rejected, matching
+//! the strict-versioning stance of the chaos and trace codecs.
 //!
 //! Decode rejects trailing bytes and truncated varints, like the chaos
 //! and trace codecs.
@@ -231,6 +236,10 @@ pub struct TimelineSample {
     pub live_per_dep: Vec<u32>,
     /// Instances in the warm pool (provisioned, not yet serving).
     pub warm: u32,
+    /// Tier-ladder warm-pool occupancy: pre-booted slots deposited by
+    /// prewarming, waiting to be claimed by a placement (0 whenever
+    /// `faas.tier_ladder` is off).
+    pub pool: u32,
     /// Ops completed within this second.
     pub completed: u64,
     /// Offered-load shortfall: cumulative target minus cumulative
@@ -259,6 +268,7 @@ impl TimelineSample {
             second: second as u32,
             live_per_dep: Vec::new(),
             warm: 0,
+            pool: 0,
             completed: sec.completed,
             backlog: target_cum.saturating_sub(done_cum),
             cache_hits: m.cache_hits,
@@ -295,7 +305,7 @@ pub struct Timeline {
 }
 
 const TIMELINE_MAGIC: &[u8; 4] = b"LFTL";
-const TIMELINE_VERSION: u8 = 1;
+const TIMELINE_VERSION: u8 = 2;
 
 impl Timeline {
     pub fn new(system: &str, n_deployments: u32) -> Timeline {
@@ -324,6 +334,7 @@ impl Timeline {
                 put_varint(&mut out, n as u64);
             }
             put_varint(&mut out, s.warm as u64);
+            put_varint(&mut out, s.pool as u64);
             put_varint(&mut out, s.completed);
             put_varint(&mut out, s.backlog);
             put_varint(&mut out, s.cache_hits);
@@ -367,6 +378,7 @@ impl Timeline {
                 second,
                 live_per_dep,
                 warm: get_varint(bytes, &mut pos)? as u32,
+                pool: get_varint(bytes, &mut pos)? as u32,
                 completed: get_varint(bytes, &mut pos)?,
                 backlog: get_varint(bytes, &mut pos)?,
                 cache_hits: get_varint(bytes, &mut pos)?,
@@ -422,6 +434,7 @@ fn merge_sample(mine: &mut TimelineSample, theirs: &TimelineSample) {
         *m += *t;
     }
     mine.warm += theirs.warm;
+    mine.pool += theirs.pool;
     mine.completed += theirs.completed;
     mine.backlog += theirs.backlog;
     mine.cache_hits += theirs.cache_hits;
@@ -516,6 +529,7 @@ mod tests {
             second,
             live_per_dep: vec![2, 0, 5, 1],
             warm: 3,
+            pool: 2,
             completed: 1_234,
             backlog: 17,
             cache_hits: 900,
@@ -571,6 +585,7 @@ mod tests {
         assert_eq!(a.samples[0].completed, 2_468);
         assert_eq!(a.samples[0].live_per_dep, vec![4, 0, 10, 2]);
         assert_eq!(a.samples[0].warm, 6);
+        assert_eq!(a.samples[0].pool, 4);
         assert_eq!(a.samples[0].backlog, 34);
         assert_eq!(a.samples[0].cache_hits, 1_800);
         assert_eq!(a.samples[0].timeouts, 4);

@@ -56,7 +56,16 @@ use super::synth::{self, ContainerChurnSpec, MlPipelineSpec};
 /// the 10⁶-client `mega-fleet` tier. Sharded cells are a new fingerprint
 /// domain (per-shard RNG forking); unsharded cells keep their v4
 /// fingerprints. Earlier artifacts are not fingerprint-comparable.
-pub const SCHEMA: &str = "lambdafs-scenarios-v5";
+/// v6: the provisioning-policy axis — the bursty synthetic workloads
+/// (`ml-pipeline`, `container-churn`) replay through λFS with the
+/// cold-start tier ladder armed under each [`POLICY_MODES`] mode — and
+/// cells gained `policy` plus the tier attribution columns
+/// `pool_hits`/`restores`/`ephemeral_boots` (conservation:
+/// pool_hits + restores + ephemeral_boots == cold_starts; the reactive
+/// default keeps every cold start on the ephemeral rung). Default-policy
+/// cells keep their v5 fingerprints: ladder draws live on a dedicated
+/// stream, so arming the axis perturbs no reactive cell.
+pub const SCHEMA: &str = "lambdafs-scenarios-v6";
 
 /// Systems every workload runs against.
 pub const SYSTEMS: [&str; 4] = ["lambdafs", "hopsfs", "hopsfs+cache", "cephfs"];
@@ -69,6 +78,14 @@ pub const SYSTEMS: [&str; 4] = ["lambdafs", "hopsfs", "hopsfs+cache", "cephfs"];
 /// deployment blackout (timeouts that recover).
 pub const CHAOS_MODES: [&str; 3] = ["kills", "partition", "delay-storm"];
 
+/// The provisioning-policy axis (v6): λFS-only replays of the bursty
+/// synthetic workloads with the cold-start tier ladder armed.
+/// `pooled-restore` keeps the reactive scale-out but lets kills seed
+/// checkpoints and placements claim pool/restore rungs; `predictive`
+/// additionally runs the EWMA prewarming policy each second. The plain
+/// sweep's cells are the implicit `reactive` mode.
+pub const POLICY_MODES: [&str; 2] = ["pooled-restore", "predictive"];
+
 /// One (system × workload × scale) outcome.
 #[derive(Clone, Debug)]
 pub struct ScenarioCell {
@@ -76,6 +93,9 @@ pub struct ScenarioCell {
     pub workload: &'static str,
     /// Chaos mode the cell ran under (`"none"` for the plain sweep).
     pub chaos: &'static str,
+    /// Provisioning-policy mode (v6): `"reactive"` for the plain sweep,
+    /// a [`POLICY_MODES`] entry for the λFS tier-ladder cells.
+    pub policy: &'static str,
     pub scale: f64,
     /// Ops offered to the system (completed_ops + gave_up == submitted).
     pub submitted: u64,
@@ -89,6 +109,11 @@ pub struct ScenarioCell {
     /// (cold_starts + warm_ops == completed_ops).
     pub cold_starts: u64,
     pub warm_ops: u64,
+    /// Cold-start tier attribution (v6):
+    /// `pool_hits + restores + ephemeral_boots == cold_starts`.
+    pub pool_hits: u64,
+    pub restores: u64,
+    pub ephemeral_boots: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_hit_ratio: f64,
@@ -181,7 +206,8 @@ pub fn run_matrix_sharded(scale: f64, seed: u64, smoke: bool, shards: u32) -> Sc
             // from the meta per cell would dominate large-matrix time).
             let ns = trace.meta.regenerate();
             for system in SYSTEMS {
-                let (m, wall_s) = run_cell(system, name, &trace, &ns, sc, seed, shards);
+                let (m, wall_s) =
+                    run_cell(system, name, &trace, &ns, sc, seed, shards, "reactive");
                 if system == "lambdafs" && shards <= 1 {
                     if let Some(expect) = record_fp {
                         // The recording ran through submit_batch; this
@@ -196,7 +222,19 @@ pub fn run_matrix_sharded(scale: f64, seed: u64, smoke: bool, shards: u32) -> Sc
                         );
                     }
                 }
-                cells.push(make_cell(system, name, "none", sc, &m, shards, wall_s));
+                cells.push(make_cell(system, name, "none", "reactive", sc, &m, shards, wall_s));
+            }
+            // The provisioning-policy axis (v6): the bursty synthetic
+            // workloads replayed through λFS with the tier ladder armed.
+            // Baselines never cold-start, so the axis is λFS-only; the
+            // steadier Spotify stream stays on the plain sweep.
+            if name == "ml-pipeline" || name == "container-churn" {
+                for mode in POLICY_MODES {
+                    let label = format!("{name}+{mode}");
+                    let (m, wall_s) =
+                        run_cell("lambdafs", &label, &trace, &ns, sc, seed, shards, mode);
+                    cells.push(make_cell("lambdafs", name, "none", mode, sc, &m, shards, wall_s));
+                }
             }
             // The chaos axis: replay the *same* Spotify op stream under
             // each fault plan — the plan rides in the trace header, so
@@ -209,8 +247,11 @@ pub fn run_matrix_sharded(scale: f64, seed: u64, smoke: bool, shards: u32) -> Sc
                     chaotic.chaos = chaos_plan(mode, trace.duration_s() as u32);
                     for system in SYSTEMS {
                         let label = format!("{name}/{mode}");
-                        let (m, wall_s) = run_cell(system, &label, &chaotic, &ns, sc, seed, shards);
-                        cells.push(make_cell(system, name, mode, sc, &m, shards, wall_s));
+                        let (m, wall_s) =
+                            run_cell(system, &label, &chaotic, &ns, sc, seed, shards, "reactive");
+                        cells.push(make_cell(
+                            system, name, mode, "reactive", sc, &m, shards, wall_s,
+                        ));
                     }
                 }
             }
@@ -230,8 +271,18 @@ pub fn run_matrix_sharded(scale: f64, seed: u64, smoke: bool, shards: u32) -> Sc
         );
         workloads.push(info);
         for system in SYSTEMS {
-            let (m, wall_s) = run_cell(system, "mega-fleet", &trace, &ns, 1.0, seed, shards);
-            cells.push(make_cell(system, "mega-fleet", "none", 1.0, &m, shards, wall_s));
+            let (m, wall_s) =
+                run_cell(system, "mega-fleet", &trace, &ns, 1.0, seed, shards, "reactive");
+            cells.push(make_cell(
+                system,
+                "mega-fleet",
+                "none",
+                "reactive",
+                1.0,
+                &m,
+                shards,
+                wall_s,
+            ));
         }
     }
     ScenarioReport { seed, smoke, workloads, cells }
@@ -263,10 +314,12 @@ fn mega_fleet_trace(seed: u64) -> (WorkloadInfo, Trace, Namespace) {
     (info, trace, ns)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn make_cell(
     system: &'static str,
     workload: &'static str,
     chaos: &'static str,
+    policy: &'static str,
     sc: f64,
     m: &RunMetrics,
     shards: u32,
@@ -276,6 +329,7 @@ fn make_cell(
         system,
         workload,
         chaos,
+        policy,
         scale: sc,
         shards: shards.max(1),
         wall_s,
@@ -288,6 +342,9 @@ fn make_cell(
         total_cost_usd: m.total_cost(),
         cold_starts: m.cold_starts,
         warm_ops: m.warm_ops,
+        pool_hits: m.pool_hits,
+        restores: m.restores,
+        ephemeral_boots: m.ephemeral_boots,
         cache_hits: m.cache_hits,
         cache_misses: m.cache_misses,
         cache_hit_ratio: m.cache_hit_ratio(),
@@ -450,10 +507,25 @@ fn cell_rng(seed: u64, workload: &str, system: &str) -> Rng {
     Rng::new(seed ^ fnv1a64(label.as_bytes()))
 }
 
+/// Arm a provisioning-policy mode on a cell config. `"reactive"` is the
+/// untouched default (binary cold-start model, pinned fingerprints).
+fn apply_policy(cfg: &mut SystemConfig, policy: &str) {
+    match policy {
+        "reactive" => {}
+        "pooled-restore" => cfg.faas.tier_ladder = true,
+        "predictive" => {
+            cfg.faas.tier_ladder = true;
+            cfg.lambda_fs.scale_policy = crate::config::ScalePolicyMode::Predictive;
+        }
+        other => panic!("unknown policy mode {other:?}"),
+    }
+}
+
 /// Run one cell; returns the folded metrics and the cell's wall-clock
 /// seconds. Wall time is measured only on the sharded path — sequential
 /// cells report a constant 0.0 so unsharded artifacts stay
 /// bit-deterministic across runs.
+#[allow(clippy::too_many_arguments)]
 fn run_cell(
     system: &'static str,
     workload: &str,
@@ -462,8 +534,10 @@ fn run_cell(
     sc: f64,
     seed: u64,
     shards: u32,
+    policy: &str,
 ) -> (RunMetrics, f64) {
-    let cfg = scenario_cfg(sc, seed);
+    let mut cfg = scenario_cfg(sc, seed);
+    apply_policy(&mut cfg, policy);
     let vcpus = Scale(sc).vcpus(512.0);
     let mut rng = cell_rng(seed, workload, system);
     if shards > 1 {
@@ -546,12 +620,23 @@ fn run_cell_sharded(
 }
 
 impl ScenarioReport {
-    /// Look up one plain-sweep cell (chaos == "none").
+    /// Look up one plain-sweep cell (chaos == "none", reactive policy).
     pub fn cell(&self, system: &str, workload: &str, scale: f64) -> Option<&ScenarioCell> {
         self.cells.iter().find(|c| {
             c.system == system
                 && c.workload == workload
                 && c.chaos == "none"
+                && c.policy == "reactive"
+                && (c.scale - scale).abs() < 1e-12
+        })
+    }
+
+    /// Look up one provisioning-policy-axis cell (λFS tier-ladder runs).
+    pub fn policy_cell(&self, workload: &str, policy: &str, scale: f64) -> Option<&ScenarioCell> {
+        self.cells.iter().find(|c| {
+            c.system == "lambdafs"
+                && c.workload == workload
+                && c.policy == policy
                 && (c.scale - scale).abs() < 1e-12
         })
     }
@@ -572,6 +657,7 @@ impl ScenarioReport {
                 vec![
                     c.workload.to_string(),
                     c.chaos.to_string(),
+                    c.policy.to_string(),
                     format!("{:.3}", c.scale),
                     c.system.to_string(),
                     c.completed_ops.to_string(),
@@ -581,6 +667,7 @@ impl ScenarioReport {
                     format!("{:.2}", c.p99_ms),
                     format!("{:.4}", c.total_cost_usd),
                     c.cold_starts.to_string(),
+                    format!("{}/{}/{}", c.pool_hits, c.restores, c.ephemeral_boots),
                     format!("{:.1}", c.cache_hit_ratio * 100.0),
                     c.retries.to_string(),
                     c.timeouts.to_string(),
@@ -598,9 +685,10 @@ impl ScenarioReport {
         print_table(
             &format!("Scenario matrix (seed {})", self.seed),
             &[
-                "workload", "chaos", "scale", "system", "ops", "avg_tput", "peak_tput",
-                "p50_ms", "p99_ms", "cost_$", "cold", "hit_%", "retries", "t_out", "gaveup",
-                "dom_phase", "dom_p99_us", "queue_%", "cold_%", "shards", "wall_s", "fp",
+                "workload", "chaos", "policy", "scale", "system", "ops", "avg_tput",
+                "peak_tput", "p50_ms", "p99_ms", "cost_$", "cold", "pool/rst/eph", "hit_%",
+                "retries", "t_out", "gaveup", "dom_phase", "dom_p99_us", "queue_%", "cold_%",
+                "shards", "wall_s", "fp",
             ],
             &rows,
         );
@@ -624,6 +712,11 @@ impl ScenarioReport {
             let _ = write!(s, "{}\"{mode}\"", if i > 0 { ", " } else { "" });
         }
         s.push_str("],\n");
+        s.push_str("  \"policy_modes\": [\"reactive\"");
+        for mode in POLICY_MODES {
+            let _ = write!(s, ", \"{mode}\"");
+        }
+        s.push_str("],\n");
         s.push_str("  \"workloads\": [\n");
         for (i, w) in self.workloads.iter().enumerate() {
             let _ = write!(
@@ -640,10 +733,11 @@ impl ScenarioReport {
             let _ = write!(
                 s,
                 "    {{\"system\": \"{}\", \"workload\": \"{}\", \"chaos\": \"{}\", \
-                 \"scale\": {}, \"submitted\": {}, \
+                 \"policy\": \"{}\", \"scale\": {}, \"submitted\": {}, \
                  \"completed_ops\": {}, \"avg_throughput\": {:.3}, \"peak_throughput\": {:.3}, \
                  \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"total_cost_usd\": {:.6}, \
-                 \"cold_starts\": {}, \"warm_ops\": {}, \"cache_hits\": {}, \
+                 \"cold_starts\": {}, \"warm_ops\": {}, \"pool_hits\": {}, \"restores\": {}, \
+                 \"ephemeral_boots\": {}, \"cache_hits\": {}, \
                  \"cache_misses\": {}, \"cache_hit_ratio\": {:.6}, \"retries\": {}, \
                  \"timeouts\": {}, \"gave_up\": {}, \
                  \"dominant_phase\": \"{}\", \"p99_us\": {:.1}, \
@@ -653,6 +747,7 @@ impl ScenarioReport {
                 c.system,
                 c.workload,
                 c.chaos,
+                c.policy,
                 c.scale,
                 c.submitted,
                 c.completed_ops,
@@ -663,6 +758,9 @@ impl ScenarioReport {
                 c.total_cost_usd,
                 c.cold_starts,
                 c.warm_ops,
+                c.pool_hits,
+                c.restores,
+                c.ephemeral_boots,
                 c.cache_hits,
                 c.cache_misses,
                 c.cache_hit_ratio,
@@ -700,7 +798,12 @@ mod tests {
     #[test]
     fn smoke_matrix_deterministic() {
         let a = run_matrix(0.005, 7, true);
-        assert_eq!(a.cells.len(), SYSTEMS.len() * (3 + CHAOS_MODES.len()));
+        // 4 systems × (3 workloads + spotify × 3 chaos modes) + the
+        // λFS-only policy axis on the 2 bursty workloads × 2 modes.
+        assert_eq!(
+            a.cells.len(),
+            SYSTEMS.len() * (3 + CHAOS_MODES.len()) + 2 * POLICY_MODES.len()
+        );
         assert_eq!(a.workloads.len(), 3);
         for c in &a.cells {
             assert!(c.completed_ops > 0, "{}/{} empty", c.system, c.workload);
@@ -724,6 +827,20 @@ mod tests {
                 c.workload,
                 c.chaos
             );
+            // v6 tier conservation, every cell: the tier ledger
+            // partitions the cold starts exactly.
+            assert_eq!(
+                c.pool_hits + c.restores + c.ephemeral_boots,
+                c.cold_starts,
+                "{}/{}/{} tier conservation",
+                c.system,
+                c.workload,
+                c.policy
+            );
+            if c.policy == "reactive" {
+                assert_eq!(c.pool_hits, 0, "{}/{} pool rung off", c.system, c.workload);
+                assert_eq!(c.restores, 0, "{}/{} restore rung off", c.system, c.workload);
+            }
             assert!(c.cache_hits + c.cache_misses <= c.completed_ops);
             // v4 span-ledger columns: every real-system cell stamps
             // phases, so the ledger is never empty and the shares are
@@ -749,6 +866,16 @@ mod tests {
         assert!(lfs.cache_hit_ratio > 0.1, "λFS hit ratio {}", lfs.cache_hit_ratio);
         let hops = a.cell("hopsfs", "spotify-replay", 0.005).unwrap();
         assert_eq!(hops.cache_hits, 0, "stateless HopsFS never hits a cache");
+        // The policy axis populated: a tier-ladder cell per bursty
+        // workload per mode, each serving real ops and paying its first
+        // boots on the ephemeral rung (both upper rungs start empty).
+        for w in ["ml-pipeline", "container-churn"] {
+            for mode in POLICY_MODES {
+                let c = a.policy_cell(w, mode, 0.005).unwrap();
+                assert!(c.completed_ops > 0, "{w}/{mode} empty");
+                assert!(c.ephemeral_boots > 0, "{w}/{mode}: first boots are ephemeral");
+            }
+        }
         // The chaos axis bites: severed legs drive timeouts then
         // give-ups in every system; blackout + degraded links drive
         // timeouts that recover.
@@ -779,7 +906,7 @@ mod tests {
         for mode in CHAOS_MODES {
             assert!(json.contains(mode));
         }
-        assert!(json.contains("\"lambdafs-scenarios-v5\""));
+        assert!(json.contains("\"lambdafs-scenarios-v6\""));
         for key in [
             "\"dominant_phase\"",
             "\"p99_us\"",
@@ -787,8 +914,13 @@ mod tests {
             "\"cold_share\"",
             "\"shards\"",
             "\"wall_s\"",
+            "\"policy\"",
+            "\"policy_modes\"",
+            "\"pool_hits\"",
+            "\"restores\"",
+            "\"ephemeral_boots\"",
         ] {
-            assert!(json.contains(key), "v5 cell key {key} missing");
+            assert!(json.contains(key), "cell key {key} missing");
         }
     }
 }

@@ -48,6 +48,19 @@
 //! recorded chaotic run replays bit-identically (pinned in
 //! `rust/tests/determinism.rs`).
 //!
+//! **Provisioning-policy axis (schema v6):** the matrix additionally
+//! runs the bursty workloads (ml-pipeline, container-churn) against
+//! λFS under each mode in [`crate::trace::scenario::POLICY_MODES`] —
+//! `pooled-restore` (the cold-start tier ladder on: warm-pool hits
+//! ~5 ms, checkpoint restores ~50 ms, ephemeral boots ~180 ms, reactive
+//! scale-out) and `predictive` (ladder plus EWMA per-deployment arrival
+//! forecasting pre-booting into the pool, `crate::scaling::predict`).
+//! Every cell carries a `policy` tag plus per-tier cold-start columns
+//! (`pool_hits`, `restores`, `ephemeral_boots`) conserved against
+//! `cold_starts`; plain cells are tagged `reactive` and keep the binary
+//! cold-start model (both rungs zero). Figure 14b
+//! (`fig14_policy.csv`) ablates the three modes on the Read workload.
+//!
 //! # Scale tiers
 //!
 //! The matrix (and the Spotify figure driver) runs at one of four
@@ -65,7 +78,7 @@
 //!
 //! `--shards N` (N > 1) runs *every* cell on the conservative
 //! time-window engine and records per-cell `shards` / `wall_s` columns
-//! (schema v5); the mega-fleet tier is appended only to non-smoke
+//! (since schema v5); the mega-fleet tier is appended only to non-smoke
 //! sharded runs. Sharded cells are their own fingerprint domain — see
 //! the artifact-comparability note in `ROADMAP.md`. The default
 //! `--shards 1` path is byte-identical to pre-sharding runs.
@@ -80,12 +93,13 @@
 //! <https://ui.perfetto.dev> (or `chrome://tracing`); one trace second
 //! equals one sampled simulation second.
 //!
-//! Seven counter tracks render the sampler's gauges:
+//! Eight counter tracks render the sampler's gauges:
 //!
 //! | track | meaning |
 //! |---|---|
 //! | `live instances` | serverless instances per deployment (stacked series `dep0`, `dep1`, …) — watch it dip at a kill and refill as the scheduler scales back out |
 //! | `warm instances` | instances past cold-start and reusable; the gap to `live instances` is capacity still paying cold-start |
+//! | `warm pool (instances)` | tier-ladder warm-pool occupancy (pre-booted, not yet serving); flat zero unless `faas.tier_ladder` is on — predictive prewarming shows as the pool filling *before* a burst's `scale-out` instants |
 //! | `throughput (ops/s)` | completed ops in each sampled second |
 //! | `backlog (ops)` | submitted-but-not-completed ops; growth means the offered load outruns capacity |
 //! | `cache hit ratio (%)` | metadata-cache hit rate over the ops completed that second |

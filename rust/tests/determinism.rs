@@ -36,6 +36,17 @@
 //!    reproduces the classic sequential driver exactly. Sharded runs are
 //!    their own fingerprint domain — none of these pins compare a
 //!    multi-shard run against an unsharded one.
+//! 7. **Cold-start tier ladder (PR 9, `faas::platform::TierLadder`).**
+//!    The default config keeps the ladder OFF: every cold start stays on
+//!    the ephemeral rung, the pool/restore counters stay zero, and the
+//!    outcome digest keeps its pre-ladder hash domain (the tier counters
+//!    fold only when an upper rung fired). Ladder-on runs draw all tier
+//!    latencies from a dedicated `fork("tier-ladder")` stream, so the
+//!    caller's RNG sequence is byte-identical either way; predictive
+//!    prewarming is RNG-free and composes with record→replay.
+//!
+//! The fingerprint-domain history across PRs (which digests are
+//! comparable to which) is consolidated in `docs/DETERMINISM.md`.
 
 use lambda_fs::baselines::hopsfs::HopsFs;
 use lambda_fs::baselines::{CephFs, InfiniCacheMds};
@@ -516,7 +527,14 @@ fn arena_platform_matches_reference_semantics() {
                     let (ia, ta, ca) = arena.place_http_traced(dep, now, &mut ra);
                     let (ir, tr, cr) = refp.place_http_traced(dep, now, &mut rr);
                     assert_eq!(ta, tr, "trial {trial} step {step}: ready time diverged");
-                    assert_eq!(ca, cr, "trial {trial} step {step}: cold attribution diverged");
+                    // The frozen reference keeps the binary cold/warm
+                    // attribution; under the default (ladder-off) config
+                    // the arena's tier collapses to the same bit.
+                    assert_eq!(
+                        ca.is_cold(),
+                        cr,
+                        "trial {trial} step {step}: cold attribution diverged"
+                    );
                     assert_eq!(arena.instance(ia).deployment, refp.instance(ir).deployment);
                     // Bill the placement identically on both sides.
                     arena.bill(ia, ta, ta + 700);
@@ -1300,4 +1318,151 @@ fn sharded_single_shard_matches_sequential_driver() {
             "trial {trial}: ledgers diverged"
         );
     }
+}
+
+/// Tier-ladder pin 1: the default config keeps the ladder OFF, so every
+/// system's run stays in the pre-ladder fingerprint domain — the upper
+/// rungs never fire, every λFS cold start is an ephemeral boot, and the
+/// tier counters therefore never fold into the digest (the conditional
+/// fold, unit-pinned in `metrics::run`). Run-twice identity holds for
+/// λFS and the serverful baselines alike.
+#[test]
+fn ladder_off_default_keeps_pre_ladder_domain() {
+    let a = run_lambdafs_open(1234);
+    assert_eq!(a.pool_hits, 0, "ladder off: pool rung never fires");
+    assert_eq!(a.restores, 0, "ladder off: restore rung never fires");
+    assert_eq!(
+        a.ephemeral_boots, a.cold_starts,
+        "ladder off: every cold start is an ephemeral boot"
+    );
+    assert!(a.cold_starts > 0, "a cold-started fleet records cold starts");
+    let b = run_lambdafs_open(1234);
+    assert_eq!(a.outcome_fingerprint(), b.outcome_fingerprint(), "λFS ladder-off diverged");
+
+    let (cfg, ns, sampler) = fixture(1234);
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(5, 500.0),
+        mix: OpMix::spotify(),
+        n_clients: 64,
+        n_vms: 2,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    };
+    let run_hops = || -> RunMetrics {
+        let mut sys = HopsFs::new(cfg.clone(), ns.clone(), 128.0, true);
+        let mut rng = Rng::new(cfg.seed ^ 0xb0);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    };
+    let h = run_hops();
+    assert_eq!(h.pool_hits + h.restores + h.ephemeral_boots, h.cold_starts);
+    assert_eq!(h.outcome_fingerprint(), run_hops().outcome_fingerprint(), "HopsFS diverged");
+
+    let run_ceph = || -> RunMetrics {
+        let mut sys = CephFs::new(cfg.clone(), ns.clone(), 128.0);
+        let mut rng = Rng::new(cfg.seed ^ 0xce);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    };
+    let c = run_ceph();
+    assert_eq!(c.cold_starts, 0, "serverful CephFS never cold-starts");
+    assert_eq!(c.ephemeral_boots, 0);
+    assert_eq!(c.outcome_fingerprint(), run_ceph().outcome_fingerprint(), "CephFS diverged");
+}
+
+/// Tier-ladder pin 2: a ladder-on run (reactive scale-out, kills seeding
+/// checkpoints) is deterministic in the seed and conserves the tier
+/// ledger — `pool_hits + restores + ephemeral_boots == cold_starts` —
+/// with the first boots necessarily on the ephemeral rung.
+#[test]
+fn ladder_on_run_twice_fingerprint_identical() {
+    fn run(seed: u64) -> RunMetrics {
+        let (mut cfg, ns, sampler) = fixture(seed);
+        cfg.faas.tier_ladder = true;
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(8, 800.0),
+            mix: OpMix::spotify(),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+        // Kills deposit checkpoints, so later cold starts can land on
+        // the restore rung.
+        for (i, s) in (1..8).step_by(2).enumerate() {
+            sys.schedule_kill(s, (i as u32) % 8);
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0xd0);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    }
+    let a = run(1234);
+    let b = run(1234);
+    assert_eq!(a.fingerprint(), b.fingerprint(), "ladder-on runs diverged");
+    assert_eq!(a.outcome_fingerprint(), b.outcome_fingerprint(), "ladder-on ledgers diverged");
+    assert_eq!(a.pool_hits + a.restores + a.ephemeral_boots, a.cold_starts, "tier conservation");
+    assert_eq!(a.cold_starts + a.warm_ops, a.completed_ops, "outcome conservation");
+    assert!(a.ephemeral_boots > 0, "first boots pay the ephemeral rung");
+    let c = run(4321);
+    assert_ne!(a.fingerprint(), c.fingerprint(), "ladder digest insensitive to seed");
+}
+
+/// Tier-ladder pin 3: the predictive prewarming policy is RNG-free, so a
+/// predictive run is deterministic in the seed and composes with
+/// record→replay bit for bit (the policy re-derives the same per-second
+/// arrival deltas on both sides).
+#[test]
+fn predictive_policy_record_replay_bit_identical() {
+    let seed = 2027u64;
+    let (mut cfg, ns, sampler) = fixture(seed);
+    cfg.faas.tier_ladder = true;
+    cfg.lambda_fs.scale_policy = lambda_fs::config::ScalePolicyMode::Predictive;
+    let params = NamespaceParams { n_dirs: 384, files_per_dir: 24, ..Default::default() };
+    let mut sched_rng = Rng::new(seed ^ 0x5c);
+    let spec = OpenLoopSpec {
+        schedule: ThroughputSchedule::pareto_bursty(6, 3, 600.0, 2.0, 7.0, &mut sched_rng),
+        mix: OpMix::spotify(),
+        n_clients: 64,
+        n_vms: 2,
+        namespace: params.clone(),
+        zipf_s: 1.3,
+    };
+    let meta = TraceMeta::new("spotify-predictive", seed, &params, spec.n_clients, spec.n_vms);
+
+    let mut rec =
+        Recorder::new(LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms), meta);
+    let mut rng = Rng::new(cfg.seed ^ 0xabcd);
+    driver::run_open_loop(&mut rec, &spec, &ns, &sampler, &mut rng);
+    let (sys, trace) = rec.into_parts();
+    let m_rec = sys.into_metrics();
+    assert_eq!(
+        m_rec.pool_hits + m_rec.restores + m_rec.ephemeral_boots,
+        m_rec.cold_starts,
+        "tier conservation under predictive prewarming"
+    );
+
+    let decoded = Trace::decode(&trace.encode()).expect("decode predictive trace");
+    let m_rep = replay_into(
+        LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms),
+        &decoded,
+        &mut Rng::new(cfg.seed ^ 0xabcd),
+    );
+    assert_eq!(
+        m_rec.fingerprint(),
+        m_rep.fingerprint(),
+        "predictive record→replay must reproduce the run bit for bit"
+    );
+    assert_eq!(m_rec.outcome_fingerprint(), m_rep.outcome_fingerprint());
+    assert_eq!(m_rec.pool_hits, m_rep.pool_hits);
+    assert_eq!(m_rec.restores, m_rep.restores);
+
+    // Run-twice identity for the live (non-replay) predictive path.
+    let rerun = |_: ()| -> RunMetrics {
+        let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+        let mut rng = Rng::new(cfg.seed ^ 0xd0);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    };
+    assert_eq!(rerun(()).outcome_fingerprint(), rerun(()).outcome_fingerprint());
 }

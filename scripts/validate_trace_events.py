@@ -28,6 +28,7 @@ PHASES = ["queue", "cold", "net", "exec", "coherence", "store", "retry"]
 COUNTER_TRACKS = [
     "live instances",
     "warm instances",
+    "warm pool (instances)",
     "throughput (ops/s)",
     "backlog (ops)",
     "cache hit ratio (%)",
