@@ -1,0 +1,312 @@
+//! The always-on consistency auditor: a shadow-model oracle over the
+//! per-op [`Completion`](crate::systems::Completion) stream.
+//!
+//! λFS's correctness argument (§3.5, §4) is that serverless elasticity —
+//! instances appearing, vanishing, and being killed mid-op — never
+//! weakens the metadata consistency HopsFS provides. The simulator backs
+//! that claim with an oracle that shadows every run: the drivers (and the
+//! trace replayer) feed each completion into an [`Auditor`], which tracks
+//! the *acknowledged* history per inode and per client and checks four
+//! invariants:
+//!
+//! 1. **No lost acked writes** — at end of run, every inode's final store
+//!    version ([`MetadataService::audit_probe`]) is at least the highest
+//!    version whose write was acked to a client. A crash may abort an
+//!    *unacked* write (the client retries), but an acked mutation must
+//!    survive any kill schedule.
+//! 2. **Read-your-writes** — a client's read never observes a version
+//!    older than that client's own last acked write to the same inode.
+//! 3. **No stale read after acked invalidation** — for systems whose
+//!    write path acks only after invalidations are applied
+//!    ([`MetadataService::audit_invalidations_acked`], true for λFS'
+//!    coherence protocol): any read *issued after* a write's ack observes
+//!    at least that write's version, regardless of client.
+//! 4. **Lock-leak freedom** — at end of run no row or subtree lock is
+//!    still held past the audit horizon
+//!    ([`MetadataService::audit_lock_leaks`]): crash recovery must have
+//!    released every lock stranded by a kill.
+//!
+//! Ops carry the version they observed/committed in
+//! [`Outcome::observed_version`](crate::systems::Outcome); `0` means
+//! "not applicable" (mocks, version-less baselines, subtree ops) and the
+//! op is skipped — the checks never produce false positives on systems
+//! that don't stamp versions. Give-ups are skipped entirely: an
+//! abandoned op acknowledges nothing.
+//!
+//! The auditor is pure bookkeeping over values the drivers already hold:
+//! it consumes no RNG draws and perturbs no timing, so an audited run is
+//! bit-identical to an unaudited one. Violation counts fold into
+//! [`RunMetrics::audit_violations`](crate::metrics::RunMetrics) and
+//! surface in every figure table and scenario cell. The sharded engine
+//! (`sim::shard`) deliberately does not audit: its cross-shard
+//! invalidations are applied at window barriers, so intra-window reads on
+//! remote shards are *expected* to trail — invariant 3 would flag the
+//! engine's (documented, bounded) staleness window rather than a bug.
+//! See `docs/RECOVERY.md` for the full invariant catalogue.
+
+use crate::namespace::{InodeRef, Operation};
+use crate::sim::Time;
+use crate::systems::{Completion, MetadataService};
+use crate::util::fasthash::FastMap;
+
+/// Per-inode acknowledged-write state.
+#[derive(Clone, Copy, Debug)]
+struct AckedWrite {
+    /// Highest version whose commit was acked to some client.
+    version: u64,
+    /// When that ack reached the client.
+    acked_at: Time,
+}
+
+/// Violation counts by invariant (the breakdown behind the headline
+/// count — useful in test failures and the validator's error messages).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AuditReport {
+    pub lost_acked_writes: u64,
+    pub read_your_writes: u64,
+    pub stale_reads: u64,
+    pub lock_leaks: u64,
+}
+
+impl AuditReport {
+    /// Total violations across all invariants.
+    pub fn total(&self) -> u64 {
+        self.lost_acked_writes + self.read_your_writes + self.stale_reads + self.lock_leaks
+    }
+}
+
+/// The shadow-model oracle. Construct once per run, [`Self::observe`]
+/// every completion in submission order, then [`Self::finalize`] against
+/// the system's end-of-run state.
+pub struct Auditor {
+    /// Enforce invariant 3 (the system acks invalidations before the
+    /// write ack).
+    monotone: bool,
+    /// Per-inode highest acked write.
+    acked: FastMap<InodeRef, AckedWrite>,
+    /// Per-(client, inode) last acked write version.
+    ryw: FastMap<(u32, InodeRef), u64>,
+    /// Latest completion time seen — the lock-leak probe horizon.
+    horizon: Time,
+    report: AuditReport,
+}
+
+impl Auditor {
+    /// `monotone`: pass the system's
+    /// [`MetadataService::audit_invalidations_acked`].
+    pub fn new(monotone: bool) -> Auditor {
+        Auditor {
+            monotone,
+            acked: FastMap::default(),
+            ryw: FastMap::default(),
+            horizon: 0,
+            report: AuditReport::default(),
+        }
+    }
+
+    /// Fold one completion into the shadow model. `issue` is the op's
+    /// realized issue time (`Request::at`); completions must arrive in
+    /// submission order (the drivers' natural order).
+    pub fn observe(&mut self, client: u32, op: &Operation, issue: Time, c: &Completion) {
+        if c.outcome.gave_up {
+            return; // an abandoned op acknowledges nothing
+        }
+        self.horizon = self.horizon.max(c.done);
+        let v = c.outcome.observed_version;
+        if v == 0 {
+            return; // unversioned op (mock / baseline / subtree): no check
+        }
+        let inode = op.target;
+        if op.kind.is_write() {
+            // This completion *is* an ack of version `v`.
+            let e = self.acked.entry(inode).or_insert(AckedWrite { version: v, acked_at: c.done });
+            if v >= e.version {
+                *e = AckedWrite { version: v, acked_at: c.done };
+            }
+            self.ryw.insert((client, inode), v);
+            return;
+        }
+        if op.kind.is_subtree() {
+            return; // subtree rows are synthetic; not version-tracked
+        }
+        // A read: check it against the acked history.
+        if let Some(&w) = self.ryw.get(&(client, inode)) {
+            if v < w {
+                self.report.read_your_writes += 1;
+            }
+        }
+        if self.monotone {
+            if let Some(a) = self.acked.get(&inode) {
+                if issue >= a.acked_at && v < a.version {
+                    self.report.stale_reads += 1;
+                }
+            }
+        }
+    }
+
+    /// End-of-run checks against the system's final state. Call after
+    /// [`MetadataService::finish`] so crash recovery has flushed. Returns
+    /// the per-invariant breakdown; fold [`AuditReport::total`] into
+    /// `RunMetrics::audit_violations`.
+    pub fn finalize<S: MetadataService + ?Sized>(&mut self, sys: &S) -> AuditReport {
+        for (&inode, a) in &self.acked {
+            if let Some(fin) = sys.audit_probe(inode) {
+                if fin < a.version {
+                    self.report.lost_acked_writes += 1;
+                }
+            }
+        }
+        // Probe just past the last observed completion: commit locks
+        // expire by their op's completion, so anything later is a leak.
+        self.report.lock_leaks += sys.audit_lock_leaks(self.horizon.saturating_add(1)) as u64;
+        self.report
+    }
+
+    /// The latest completion time folded in (the lock-leak horizon).
+    pub fn horizon(&self) -> Time {
+        self.horizon
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::{DirId, OpKind};
+    use crate::systems::Outcome;
+
+    struct NoStore;
+    impl MetadataService for NoStore {
+        fn submit(
+            &mut self,
+            _req: crate::systems::Request<'_>,
+            _rng: &mut crate::util::rng::Rng,
+        ) -> Completion {
+            unreachable!()
+        }
+        fn on_second(&mut self, _second: usize) {}
+        fn metrics_mut(&mut self) -> &mut crate::metrics::RunMetrics {
+            unreachable!()
+        }
+        fn into_metrics(self) -> crate::metrics::RunMetrics {
+            unreachable!()
+        }
+    }
+
+    /// A probe-able fake: fixed final version for every inode + a lock
+    /// leak count.
+    struct Probed {
+        version: u64,
+        leaks: u32,
+    }
+    impl MetadataService for Probed {
+        fn submit(
+            &mut self,
+            _req: crate::systems::Request<'_>,
+            _rng: &mut crate::util::rng::Rng,
+        ) -> Completion {
+            unreachable!()
+        }
+        fn on_second(&mut self, _second: usize) {}
+        fn audit_probe(&self, _inode: InodeRef) -> Option<u64> {
+            Some(self.version)
+        }
+        fn audit_lock_leaks(&self, _at: Time) -> u32 {
+            self.leaks
+        }
+        fn metrics_mut(&mut self) -> &mut crate::metrics::RunMetrics {
+            unreachable!()
+        }
+        fn into_metrics(self) -> crate::metrics::RunMetrics {
+            unreachable!()
+        }
+    }
+
+    fn inode() -> InodeRef {
+        InodeRef::file(DirId(3), 1)
+    }
+
+    fn op(kind: OpKind) -> Operation {
+        Operation { kind, target: inode(), dest: None }
+    }
+
+    fn done(at: Time, v: u64) -> Completion {
+        Completion::unstamped(at, Outcome { observed_version: v, ..Outcome::warm(0) })
+    }
+
+    #[test]
+    fn clean_history_passes() {
+        let mut a = Auditor::new(true);
+        a.observe(0, &op(OpKind::Create), 10, &done(20, 1));
+        a.observe(0, &op(OpKind::Read), 30, &done(40, 1));
+        a.observe(1, &op(OpKind::Read), 50, &done(60, 1));
+        let r = a.finalize(&Probed { version: 1, leaks: 0 });
+        assert_eq!(r.total(), 0);
+    }
+
+    #[test]
+    fn read_your_writes_violation_detected() {
+        let mut a = Auditor::new(false);
+        a.observe(0, &op(OpKind::Create), 10, &done(20, 5));
+        // Same client reads an older version back: violation.
+        a.observe(0, &op(OpKind::Read), 30, &done(40, 4));
+        // A *different* client reading old data is fine without the
+        // monotone guarantee (best-effort caches).
+        a.observe(1, &op(OpKind::Read), 30, &done(40, 4));
+        let r = a.finalize(&Probed { version: 5, leaks: 0 });
+        assert_eq!(r.read_your_writes, 1);
+        assert_eq!(r.total(), 1);
+    }
+
+    #[test]
+    fn stale_read_after_acked_invalidation_detected() {
+        let mut a = Auditor::new(true);
+        a.observe(0, &op(OpKind::Create), 10, &done(20, 5));
+        // Issued before the ack: may legitimately observe the old version.
+        a.observe(1, &op(OpKind::Read), 15, &done(25, 4));
+        // Issued after the ack: must see >= 5.
+        a.observe(1, &op(OpKind::Read), 30, &done(40, 4));
+        let r = a.finalize(&Probed { version: 5, leaks: 0 });
+        assert_eq!(r.stale_reads, 1);
+        assert_eq!(r.total(), 1);
+    }
+
+    #[test]
+    fn lost_acked_write_detected() {
+        let mut a = Auditor::new(true);
+        a.observe(0, &op(OpKind::Create), 10, &done(20, 7));
+        let r = a.finalize(&Probed { version: 6, leaks: 0 });
+        assert_eq!(r.lost_acked_writes, 1);
+    }
+
+    #[test]
+    fn lock_leaks_fold_in() {
+        let mut a = Auditor::new(true);
+        a.observe(0, &op(OpKind::Create), 10, &done(20, 1));
+        let r = a.finalize(&Probed { version: 1, leaks: 3 });
+        assert_eq!(r.lock_leaks, 3);
+        assert_eq!(r.total(), 3);
+    }
+
+    #[test]
+    fn unversioned_and_gave_up_ops_are_skipped() {
+        let mut a = Auditor::new(true);
+        // Version-0 write: no ack recorded.
+        a.observe(0, &op(OpKind::Create), 10, &done(20, 0));
+        // Gave-up read: skipped even with a version stamped.
+        let mut c = done(40, 9);
+        c.outcome.gave_up = true;
+        a.observe(0, &op(OpKind::Read), 30, &c);
+        let r = a.finalize(&NoStore);
+        assert_eq!(r.total(), 0);
+        assert_eq!(a.horizon(), 20, "gave-up completions do not move the horizon");
+    }
+
+    #[test]
+    fn probeless_systems_skip_the_final_sweep() {
+        let mut a = Auditor::new(true);
+        a.observe(0, &op(OpKind::Create), 10, &done(20, 7));
+        // `audit_probe` -> None: no lost-write check possible.
+        let r = a.finalize(&NoStore);
+        assert_eq!(r.total(), 0);
+    }
+}

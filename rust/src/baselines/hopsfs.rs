@@ -196,15 +196,29 @@ impl MetadataService for HopsFs {
 
         if op.kind.is_subtree() {
             // HopsFS subtree protocol, executed on the leader NameNode's
-            // cores (no serverless offloading, no coherence INV).
+            // cores (no serverless offloading, no coherence INV). The
+            // write-ahead intent brackets it like every other mutation;
+            // serverful NameNodes are never killed, so the intent always
+            // resolves here (commit on success, abort on lock conflict).
             let ns = &self.ns;
             let plan = SubtreePlan::build(ns, op.target.dir, |_| 0);
             let params = SubtreeParams {
                 batch: self.cfg.lambda_fs.subtree_batch,
                 parallelism: self.cfg.serverful.vcpus_per_namenode as u32,
             };
-            let served = subtree::execute(arrive, &plan, params, &mut self.store, &mut local_rng)
-                .unwrap_or(arrive + time::SEC);
+            let intent =
+                self.store.begin_intent(nn as u64, &[], false, Some(plan.root), arrive);
+            let served =
+                match subtree::execute(arrive, &plan, params, &mut self.store, &mut local_rng) {
+                    Ok(done) => {
+                        self.store.commit_intent(intent);
+                        done
+                    }
+                    Err(_) => {
+                        self.store.abort_intent(intent);
+                        arrive + time::SEC
+                    }
+                };
             span.advance(Phase::Store, served);
             let done = served + time::from_ms(self.rpc.sample(rng) * rpc_mult);
             if self.chaos.is_some()
@@ -229,6 +243,7 @@ impl MetadataService for HopsFs {
         span.advance(Phase::Exec, cpu_done);
 
         let mut cache_outcome = CacheOutcome::Bypass;
+        let mut observed_version = 0u64;
         let served = if op.kind.is_write() {
             // Write: transactional NDB update (target + parent rows).
             let parent_inode = match op.target.file {
@@ -245,28 +260,37 @@ impl MetadataService for HopsFs {
             }
             let rows = &row_buf[..n_rows];
             let deletes = matches!(op.kind, OpKind::Delete);
+            // Write-ahead intent around the transactional update (always
+            // committed — serverful NameNodes don't crash mid-op here).
+            let intent = self.store.begin_intent(nn as u64, rows, deletes, None, cpu_done);
             let commit = self.store.write_txn(cpu_done, rows, deletes, &mut local_rng);
+            self.store.commit_intent(intent);
+            observed_version = self.store.version(op.target);
             // +Cache: the (single) caching NameNode updates its copy.
             if let Some(caches) = &mut self.caches {
                 for r in rows {
                     caches[nn].invalidate(*r);
                 }
                 if !deletes {
-                    let v = self.store.version(op.target);
-                    caches[nn].insert_version(op.target, v);
+                    caches[nn].insert_version(op.target, observed_version);
                 }
             }
             commit
         } else if let Some(caches) = &mut self.caches {
-            // +Cache read: hit serves locally; miss goes to NDB.
-            if caches[nn].get(op.target).is_some() {
+            // +Cache read: hit serves locally; miss goes to NDB. Routing
+            // pins each inode to one caching NameNode, so the cached
+            // version is the committed one — the auditor's read-your-
+            // writes check rides on exactly this property.
+            if let Some(v) = caches[nn].get(op.target) {
                 cache_outcome = CacheOutcome::Hit;
+                observed_version = v;
                 cpu_done
             } else {
                 cache_outcome = CacheOutcome::Miss;
                 let depth = self.ns.resolution_depth(op.target);
                 let done = self.store.read_batch(cpu_done, depth, &mut local_rng);
                 let v = self.store.version(op.target);
+                observed_version = v;
                 caches[nn].insert_version(op.target, v);
                 done
             }
@@ -277,7 +301,9 @@ impl MetadataService for HopsFs {
             // which is the paper's very point about HopsFS.
             cache_outcome = CacheOutcome::Miss;
             let depth = self.ns.resolution_depth(op.target);
-            self.store.read_batch(cpu_done, depth, &mut local_rng)
+            let done = self.store.read_batch(cpu_done, depth, &mut local_rng);
+            observed_version = self.store.version(op.target);
+            done
         };
 
         // Everything past CPU completion is store time (write commit or
@@ -295,10 +321,19 @@ impl MetadataService for HopsFs {
                 cache: cache_outcome,
                 cost_us: served.saturating_sub(arrive),
                 timeouts,
+                observed_version,
                 ..Outcome::warm(nn as u32)
             },
             phases: span.finish(Phase::Net, done),
         }
+    }
+
+    fn audit_probe(&self, inode: InodeRef) -> Option<u64> {
+        Some(self.store.version(inode))
+    }
+
+    fn audit_lock_leaks(&self, at: Time) -> u32 {
+        self.store.lock_leaks(at)
     }
 
     fn on_second(&mut self, second: usize) {

@@ -15,8 +15,16 @@
 //! Subtree operations replace per-INode INVs with a single *prefix
 //! invalidation* (Appendix C) that NameNodes apply via their trie cache.
 
+//!
+//! Crash recovery rides the same membership machinery: when the
+//! Coordinator detects a dead instance, [`recovery`] parks its orphaned
+//! write-ahead intents under a lease and replays-or-aborts them once the
+//! lease expires (see `docs/RECOVERY.md`).
+
 pub mod coordinator;
 pub mod protocol;
+pub mod recovery;
 
 pub use coordinator::Coordinator;
 pub use protocol::{AckDisruption, CoherenceOutcome, Invalidation};
+pub use recovery::{ReclaimAction, RecoveryManager};

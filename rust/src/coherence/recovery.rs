@@ -1,0 +1,261 @@
+//! Lease-based orphaned-op reclamation (the crash-recovery protocol).
+//!
+//! λFS's robustness claim (§3–4) is that a NameNode can be terminated at
+//! any instant — mid-write, holding a subtree lock — and the namespace
+//! stays consistent because every mutation commits transactionally
+//! through NDB. The mechanism: each mutating op writes a *begin-intent*
+//! to the store's write-ahead intent log before touching rows and a
+//! commit mark after ([`crate::store::ndb`]). A kill landing between the
+//! two leaves a detectable orphan.
+//!
+//! This module is the coordinator-side half: when an instance's death is
+//! detected (kill or session expiry), its open intents are pulled from
+//! the log and parked under a **lease**. Only after the lease expires —
+//! when no in-flight transaction from the dead instance can still land —
+//! does the reclaimer walk the orphans in log order and, per intent:
+//!
+//! * **Replay** ([`ReclaimAction::Replay`]): the intent is *durable* —
+//!   the transaction had reached the data nodes before the crash, so NDB
+//!   committed it autonomously. Recovery writes the missing commit mark
+//!   and the op is acked late ([`crate::systems::Outcome::recovered`]).
+//! * **Abort** ([`ReclaimAction::Abort`]): the intent never became
+//!   durable — no row was touched. Recovery drops the intent; the client
+//!   retries the op after its HTTP timeout.
+//!
+//! Either way the intent's stranded lock handles (row locks for aborted
+//! writes, the subtree lock for subtree ops) are released, counted as
+//! `RunMetrics::locks_reclaimed`.
+//!
+//! Everything here is deterministic bookkeeping: no RNG, no stations.
+//! Deaths are noted in the (deterministic) order the platform detects
+//! them; reclaims drain in death order and intents within a death drain
+//! in log order. The conservation law `orphaned == recovered + aborted`
+//! holds by construction — every orphan is classified exactly once.
+
+use std::collections::VecDeque;
+
+use crate::sim::Time;
+use crate::store::Intent;
+
+/// How recovery resolves one orphaned intent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReclaimAction {
+    /// Durable intent: NDB committed autonomously; write the commit mark
+    /// and ack the op late.
+    Replay,
+    /// Non-durable intent: nothing reached the rows; drop the intent and
+    /// let the client retry.
+    Abort,
+}
+
+/// Classify one orphaned intent (pure; the only decision rule recovery
+/// applies).
+pub fn classify(intent: &Intent) -> ReclaimAction {
+    if intent.durable { ReclaimAction::Replay } else { ReclaimAction::Abort }
+}
+
+/// Lock handles this intent strands across the lease window: aborted
+/// row writes strand their row locks; subtree intents strand the
+/// coordinator subtree lock. A durable non-subtree intent's row locks
+/// were released by its (autonomously committed) transaction.
+pub fn stranded_locks(intent: &Intent) -> u32 {
+    let rows = if intent.durable { 0 } else { intent.n_rows as u32 };
+    rows + intent.subtree_root.is_some() as u32
+}
+
+/// One dead instance's orphans, parked until its lease expires.
+#[derive(Clone, Debug)]
+pub struct Reclaim {
+    /// Opaque owner token (packed instance id / server index).
+    pub owner: u64,
+    /// When the death was detected.
+    pub died_at: Time,
+    /// Lease expiry: the reclaim runs at this instant.
+    pub due: Time,
+    /// The orphaned intents, in log (id) order.
+    pub intents: Vec<Intent>,
+}
+
+/// Rolled-up counts for one reclaim sweep (feeds `RunMetrics`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReclaimSummary {
+    pub orphaned: u64,
+    pub replayed: u64,
+    pub aborted: u64,
+    pub locks_released: u64,
+}
+
+impl ReclaimSummary {
+    /// Classify every intent of `r` and fold the counts.
+    pub fn of(r: &Reclaim) -> ReclaimSummary {
+        let mut s = ReclaimSummary::default();
+        for it in &r.intents {
+            s.orphaned += 1;
+            match classify(it) {
+                ReclaimAction::Replay => s.replayed += 1,
+                ReclaimAction::Abort => s.aborted += 1,
+            }
+            s.locks_released += stranded_locks(it) as u64;
+        }
+        s
+    }
+}
+
+/// The lease queue: deaths in, due reclaims out.
+///
+/// FIFO by death order; because the simulated clock is monotone and the
+/// lease is a constant, death order == due order, so a `VecDeque` front
+/// scan drains exactly the due prefix.
+#[derive(Clone, Debug)]
+pub struct RecoveryManager {
+    lease: Time,
+    pending: VecDeque<Reclaim>,
+    deaths_noted: u64,
+    reclaims_run: u64,
+}
+
+impl RecoveryManager {
+    pub fn new(lease: Time) -> Self {
+        RecoveryManager { lease, pending: VecDeque::new(), deaths_noted: 0, reclaims_run: 0 }
+    }
+
+    /// The configured lease (µs).
+    pub fn lease(&self) -> Time {
+        self.lease
+    }
+
+    /// When would a death detected at `at` be reclaimed?
+    pub fn due_at(&self, at: Time) -> Time {
+        at + self.lease
+    }
+
+    /// Record a detected death and park its orphans. `orphans` must be
+    /// the drained open intents of `owner`, already in log order
+    /// (`NdbStore::take_orphans` guarantees this). Deaths with no
+    /// orphans are still parked — the reclaim sweep is the observable
+    /// "recovery ran" event (telemetry instants count sweeps).
+    pub fn note_death(&mut self, owner: u64, at: Time, orphans: Vec<Intent>) {
+        debug_assert!(
+            self.pending.back().map_or(true, |r| r.died_at <= at),
+            "deaths must be noted in time order"
+        );
+        self.deaths_noted += 1;
+        self.pending.push_back(Reclaim {
+            owner,
+            died_at: at,
+            due: at + self.lease,
+            intents: orphans,
+        });
+    }
+
+    /// Drain every reclaim whose lease has expired by `now`, in death
+    /// order. Call once per housekeeping tick.
+    pub fn drain_due(&mut self, now: Time) -> Vec<Reclaim> {
+        let mut out = Vec::new();
+        while self.pending.front().is_some_and(|r| r.due <= now) {
+            out.push(self.pending.pop_front().expect("front checked"));
+        }
+        self.reclaims_run += out.len() as u64;
+        out
+    }
+
+    /// Drain everything regardless of lease — the end-of-run flush
+    /// (`MetadataService::finish`), so orphans whose lease crosses the
+    /// run horizon are still classified and the conservation law closes.
+    pub fn drain_all(&mut self) -> Vec<Reclaim> {
+        let out: Vec<Reclaim> = self.pending.drain(..).collect();
+        self.reclaims_run += out.len() as u64;
+        out
+    }
+
+    /// Deaths still parked (lease not yet expired).
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// (deaths noted, reclaim sweeps run) — telemetry gauges.
+    pub fn counts(&self) -> (u64, u64) {
+        (self.deaths_noted, self.reclaims_run)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::namespace::{DirId, InodeRef};
+
+    fn intent(id: u64, durable: bool, n_rows: u8, subtree: bool) -> Intent {
+        Intent {
+            id,
+            owner: 7,
+            rows: [InodeRef::dir(DirId(0)); 3],
+            n_rows,
+            deletes: false,
+            durable,
+            subtree_root: if subtree { Some(DirId(3)) } else { None },
+            begun_at: 1_000,
+        }
+    }
+
+    #[test]
+    fn classification_follows_durability() {
+        assert_eq!(classify(&intent(1, true, 2, false)), ReclaimAction::Replay);
+        assert_eq!(classify(&intent(2, false, 2, false)), ReclaimAction::Abort);
+    }
+
+    #[test]
+    fn stranded_lock_accounting() {
+        // Aborted row write: its row locks were stranded.
+        assert_eq!(stranded_locks(&intent(1, false, 3, false)), 3);
+        // Durable row write: the committed txn released them.
+        assert_eq!(stranded_locks(&intent(2, true, 3, false)), 0);
+        // Subtree intents strand the subtree lock either way.
+        assert_eq!(stranded_locks(&intent(3, true, 1, true)), 1);
+        assert_eq!(stranded_locks(&intent(4, false, 1, true)), 2);
+    }
+
+    #[test]
+    fn lease_gates_reclaim() {
+        let mut rm = RecoveryManager::new(3_000_000);
+        rm.note_death(7, 1_000_000, vec![intent(1, true, 2, false)]);
+        assert!(rm.drain_due(3_999_999).is_empty(), "lease still running");
+        let due = rm.drain_due(4_000_000);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].due, 4_000_000);
+        assert_eq!(rm.pending(), 0);
+    }
+
+    #[test]
+    fn drains_in_death_order_and_flushes_at_finish() {
+        let mut rm = RecoveryManager::new(2_000_000);
+        rm.note_death(1, 1_000_000, vec![intent(1, false, 1, false)]);
+        rm.note_death(2, 1_500_000, vec![]);
+        rm.note_death(3, 9_000_000, vec![intent(2, true, 1, false)]);
+        let due = rm.drain_due(3_600_000);
+        assert_eq!(due.iter().map(|r| r.owner).collect::<Vec<_>>(), vec![1, 2]);
+        // Death 3's lease crosses the horizon: finish() flushes it.
+        let rest = rm.drain_all();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].owner, 3);
+        assert_eq!(rm.counts(), (3, 3));
+    }
+
+    #[test]
+    fn summary_obeys_conservation() {
+        let r = Reclaim {
+            owner: 7,
+            died_at: 0,
+            due: 0,
+            intents: vec![
+                intent(1, true, 2, false),
+                intent(2, false, 3, false),
+                intent(3, true, 1, true),
+            ],
+        };
+        let s = ReclaimSummary::of(&r);
+        assert_eq!(s.orphaned, 3);
+        assert_eq!(s.orphaned, s.replayed + s.aborted);
+        assert_eq!((s.replayed, s.aborted), (2, 1));
+        assert_eq!(s.locks_released, 0 + 3 + 1);
+    }
+}

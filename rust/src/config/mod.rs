@@ -122,6 +122,12 @@ pub struct FaasConfig {
     pub pool_capacity: u32,
     /// Retained checkpoints per deployment (restore-rung capacity).
     pub checkpoint_capacity: u32,
+    /// Checkpoint time-to-live (seconds): restores from checkpoints
+    /// deposited longer ago than this repay a staleness delta on the
+    /// Restore rung (cache/JIT state has drifted too far — the restore
+    /// degenerates toward a full boot). Only meaningful with
+    /// `tier_ladder = true`.
+    pub checkpoint_ttl_s: f64,
 }
 
 /// Persistent metadata store model (MySQL Cluster NDB; §2).
@@ -139,6 +145,10 @@ pub struct StoreConfig {
     pub rtt_ms: f64,
     /// Lock-wait retry interval for row-lock conflicts (ms).
     pub lock_retry_ms: f64,
+    /// Recovery lease (ms): how long after an instance's detected death
+    /// the coordinator waits before replaying-or-aborting its orphaned
+    /// intents and releasing its stranded locks (`coherence::recovery`).
+    pub recovery_lease_ms: f64,
 }
 
 /// Network latency model (same-AZ EC2; §3.2 observations).
@@ -247,6 +257,7 @@ impl Default for SystemConfig {
                 tier_sigma: 0.25,
                 pool_capacity: 2,
                 checkpoint_capacity: 4,
+                checkpoint_ttl_s: 120.0,
             },
             store: StoreConfig {
                 data_nodes: 4,
@@ -255,6 +266,7 @@ impl Default for SystemConfig {
                 write_ms: 1.55,
                 rtt_ms: 0.5,
                 lock_retry_ms: 2.0,
+                recovery_lease_ms: 3_000.0,
             },
             net: NetConfig {
                 tcp_median_ms: 0.8,
@@ -395,12 +407,14 @@ impl SystemConfig {
             "faas.tier_sigma" => f64_field!(self.faas.tier_sigma),
             "faas.pool_capacity" => u32_field!(self.faas.pool_capacity),
             "faas.checkpoint_capacity" => u32_field!(self.faas.checkpoint_capacity),
+            "faas.checkpoint_ttl_s" => f64_field!(self.faas.checkpoint_ttl_s),
             "store.data_nodes" => u32_field!(self.store.data_nodes),
             "store.per_node_concurrency" => u32_field!(self.store.per_node_concurrency),
             "store.read_ms" => f64_field!(self.store.read_ms),
             "store.write_ms" => f64_field!(self.store.write_ms),
             "store.rtt_ms" => f64_field!(self.store.rtt_ms),
             "store.lock_retry_ms" => f64_field!(self.store.lock_retry_ms),
+            "store.recovery_lease_ms" => f64_field!(self.store.recovery_lease_ms),
             "net.tcp_median_ms" => f64_field!(self.net.tcp_median_ms),
             "net.tcp_sigma" => f64_field!(self.net.tcp_sigma),
             "net.http_median_ms" => f64_field!(self.net.http_median_ms),
@@ -527,6 +541,10 @@ mod tests {
         assert!(c.faas.restore_ms < c.faas.ephemeral_ms);
         assert!(c.faas.ephemeral_ms < c.faas.cold_start_ms);
         assert!(c.faas.pool_capacity >= 1 && c.faas.checkpoint_capacity >= 1);
+        assert_eq!(c.faas.checkpoint_ttl_s, 120.0);
+        // Recovery lease must be shorter than the client HTTP timeout so a
+        // durable orphan's late ack lands before the client gives up on it.
+        assert!(c.store.recovery_lease_ms < c.faas.http_timeout_ms);
     }
 
     #[test]
@@ -541,6 +559,9 @@ mod tests {
             tier_sigma = 0.3
             pool_capacity = 5
             checkpoint_capacity = 7
+            checkpoint_ttl_s = 60.0
+            [store]
+            recovery_lease_ms = 1500.0
             [lambda_fs]
             scale_policy = "predictive"
             "#,
@@ -553,6 +574,8 @@ mod tests {
         assert_eq!(c.faas.tier_sigma, 0.3);
         assert_eq!(c.faas.pool_capacity, 5);
         assert_eq!(c.faas.checkpoint_capacity, 7);
+        assert_eq!(c.faas.checkpoint_ttl_s, 60.0);
+        assert_eq!(c.store.recovery_lease_ms, 1500.0);
         assert_eq!(c.lambda_fs.scale_policy, ScalePolicyMode::Predictive);
         assert!(SystemConfig::from_toml("[lambda_fs]\nscale_policy = \"bogus\"").is_err());
     }

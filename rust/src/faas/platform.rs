@@ -68,6 +68,16 @@
 //! [`crate::scaling::predict`] — deposits pool slots without consuming
 //! any RNG draw.
 //!
+//! **Checkpoint aging:** deposits are timestamped and consumed
+//! newest-first. A restore from a checkpoint older than
+//! `faas.checkpoint_ttl_s` repays a *staleness delta* on top of the
+//! Restore rung — median `ephemeral_ms - restore_ms`, i.e. re-hydrating
+//! a long-dead snapshot (cache re-validation, lease re-acquisition)
+//! degenerates toward a full boot. The delta draws on the same dedicated
+//! ladder stream, and only when a stale checkpoint is actually consumed,
+//! so short-horizon ladder runs (every restore well inside the 120 s
+//! default TTL) remain draw-for-draw identical to the pre-aging ladder.
+//!
 //! **Determinism contract:** every ladder draw comes from a dedicated
 //! stream (`Rng::new(seed).fork("tier-ladder")`, owned by the platform)
 //! and the caller's RNG is *not* advanced. With the ladder disabled
@@ -183,6 +193,9 @@ pub struct PlatformStats {
     pub pool_hits: u64,
     /// Cold starts served via checkpoint/restore (`ColdTier::Restore`).
     pub restores: u64,
+    /// Restores whose checkpoint was older than `faas.checkpoint_ttl_s`
+    /// and repaid the staleness delta (subset of `restores`).
+    pub stale_restores: u64,
     /// Pool slots deposited by [`Platform::pool_prewarm`].
     pub pool_prewarms: u64,
 }
@@ -195,14 +208,20 @@ struct TierLadder {
     ephemeral: LogNormal,
     restore: LogNormal,
     pool_hit: LogNormal,
+    /// Staleness repayment for restores from checkpoints older than
+    /// `checkpoint_ttl` (median `ephemeral_ms - restore_ms`, clamped).
+    stale: LogNormal,
     /// Dedicated ladder stream: `Rng::new(seed).fork("tier-ladder")`.
     rng: Rng,
     /// Pre-booted instances per deployment, filled by `pool_prewarm`.
     pool: Vec<u32>,
-    /// Restorable snapshots per deployment, deposited by `kill`.
-    checkpoints: Vec<u32>,
+    /// Restorable snapshots per deployment: deposit times pushed by
+    /// `kill`, popped newest-first by `spawn` (LIFO stack).
+    checkpoints: Vec<Vec<Time>>,
     pool_capacity: u32,
     checkpoint_capacity: u32,
+    /// Age beyond which a consumed checkpoint repays the stale delta.
+    checkpoint_ttl: Time,
 }
 
 /// The FaaS platform.
@@ -277,11 +296,16 @@ impl Platform {
             ephemeral: LogNormal::from_median(cfg.ephemeral_ms, cfg.tier_sigma),
             restore: LogNormal::from_median(cfg.restore_ms, cfg.tier_sigma),
             pool_hit: LogNormal::from_median(cfg.pool_hit_ms, cfg.tier_sigma),
+            stale: LogNormal::from_median(
+                (cfg.ephemeral_ms - cfg.restore_ms).max(1.0),
+                cfg.tier_sigma,
+            ),
             rng: Rng::new(seed).fork("tier-ladder"),
             pool: vec![0; n],
-            checkpoints: vec![0; n],
+            checkpoints: vec![Vec::new(); n],
             pool_capacity: cfg.pool_capacity,
             checkpoint_capacity: cfg.checkpoint_capacity,
+            checkpoint_ttl: time::from_ms(cfg.checkpoint_ttl_s * 1e3),
         });
         Platform {
             cold: LogNormal::from_median(cfg.cold_start_ms, cfg.cold_start_sigma),
@@ -795,10 +819,16 @@ impl Platform {
                     self.stats.pool_hits += 1;
                     l.pool_hit.sample(&mut l.rng)
                 } else {
-                    let mut ms = if l.checkpoints[d] > 0 {
-                        l.checkpoints[d] -= 1;
+                    let mut ms = if let Some(deposited) = l.checkpoints[d].pop() {
                         self.stats.restores += 1;
-                        l.restore.sample(&mut l.rng)
+                        let mut ms = l.restore.sample(&mut l.rng);
+                        // Aging: even the newest snapshot is past the
+                        // TTL — re-hydration degenerates toward a boot.
+                        if now.saturating_sub(deposited) > l.checkpoint_ttl {
+                            self.stats.stale_restores += 1;
+                            ms += l.stale.sample(&mut l.rng);
+                        }
+                        ms
                     } else {
                         l.ephemeral.sample(&mut l.rng)
                     };
@@ -950,11 +980,12 @@ impl Platform {
             self.stats.kills += 1;
         }
         // Tier ladder: a dying instance's state is snapshot-able, so the
-        // kill deposits a checkpoint the next boot can restore from.
+        // kill deposits a (timestamped) checkpoint the next boot can
+        // restore from — stale ones repay the aging delta on restore.
         if let Some(l) = &mut self.ladder {
             let d = dep as usize;
-            if l.checkpoints[d] < l.checkpoint_capacity {
-                l.checkpoints[d] += 1;
+            if l.checkpoints[d].len() < l.checkpoint_capacity as usize {
+                l.checkpoints[d].push(now);
             }
         }
     }
@@ -1118,6 +1149,41 @@ mod tests {
         assert!(boot > time::from_ms(15.0) && boot < time::from_ms(150.0), "restore ~50ms: {boot}");
         assert_eq!(p.stats().restores, 1);
         assert_eq!(p.stats().cold_starts, 2);
+        assert_eq!(p.stats().stale_restores, 0, "fresh restore skips the aging delta");
+    }
+
+    #[test]
+    fn stale_checkpoint_repays_aging_delta() {
+        let (mut p, mut rng) = ladder_platform();
+        let (id, ready, _) = p.place_http_traced(0, 0, &mut rng);
+        p.promote_warm(ready);
+        p.kill(id, ready + 1, false);
+        // Restore well past the 120 s default TTL: the snapshot has aged
+        // out and re-hydration degenerates toward a full boot.
+        let later = ready + 1 + 121 * time::SEC;
+        let (_, ready2, tier) = p.place_http_traced(0, later, &mut rng);
+        assert_eq!(tier, ColdTier::Restore, "a stale restore is still a restore");
+        assert_eq!(p.stats().stale_restores, 1);
+        assert_eq!(p.stats().restores, 1);
+        let boot = ready2 - later;
+        assert!(boot > time::from_ms(60.0), "stale restore repays ~ephemeral latency: {boot}");
+    }
+
+    #[test]
+    fn checkpoint_aging_is_deterministic() {
+        // Same seed, same kill/restore schedule → bit-identical boot
+        // times including the stale delta (the determinism pin for the
+        // aging path; the full-run pin lives in rust/tests).
+        let run = || {
+            let (mut p, mut rng) = ladder_platform();
+            let (id, ready, _) = p.place_http_traced(0, 0, &mut rng);
+            p.promote_warm(ready);
+            p.kill(id, ready + 1, false);
+            let later = ready + 1 + 200 * time::SEC;
+            let (_, ready2, tier) = p.place_http_traced(0, later, &mut rng);
+            (ready, ready2, tier, p.stats().stale_restores)
+        };
+        assert_eq!(run(), run(), "aging draws are seed-deterministic");
     }
 
     #[test]

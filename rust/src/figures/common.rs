@@ -160,12 +160,29 @@ pub fn outcome_cells(m: &crate::metrics::RunMetrics) -> [String; 5] {
 /// Header labels matching [`outcome_cells`].
 pub const OUTCOME_HEADER: [&str; 5] = ["hit_%", "cold", "retries", "t_out", "gaveup"];
 
+/// Crash-recovery and consistency-audit columns: orphaned intents
+/// (instance died mid-write), the recovered/aborted split (conservation:
+/// `orph == recov + abort`), and the always-on auditor's violation count
+/// (0 on every healthy run — a nonzero cell is a correctness bug, not a
+/// fault-injection artifact). Pair with [`RECOVERY_HEADER`].
+pub fn recovery_cells(m: &crate::metrics::RunMetrics) -> [String; 3] {
+    [
+        format!("{}/{}", m.orphaned_ops, m.recovered_ops),
+        m.locks_reclaimed.to_string(),
+        m.audit_violations.to_string(),
+    ]
+}
+
+/// Header labels matching [`recovery_cells`].
+pub const RECOVERY_HEADER: [&str; 3] = ["orph/rec", "lk_rec", "audit"];
+
 /// The one per-system summary row every figure table prints: throughput,
 /// latency, cost, the dominant phase of the span ledger with its p50/p99,
-/// then the outcome columns. Pair with [`SUMMARY_HEADER`]; render via
-/// [`print_summary`]. Keeping fig08/fig11/fig14/fig15 on this single
-/// builder is what makes their tables column-compatible.
-pub const SUMMARY_HEADER: [&str; 17] = [
+/// then the outcome columns and the crash-recovery/audit columns. Pair
+/// with [`SUMMARY_HEADER`]; render via [`print_summary`]. Keeping
+/// fig08/fig11/fig14/fig15 on this single builder is what makes their
+/// tables column-compatible.
+pub const SUMMARY_HEADER: [&str; 20] = [
     "system",
     "avg_tput",
     "peak_tput",
@@ -183,6 +200,9 @@ pub const SUMMARY_HEADER: [&str; 17] = [
     OUTCOME_HEADER[2],
     OUTCOME_HEADER[3],
     OUTCOME_HEADER[4],
+    RECOVERY_HEADER[0],
+    RECOVERY_HEADER[1],
+    RECOVERY_HEADER[2],
 ];
 
 /// Build the [`SUMMARY_HEADER`] row for one system's run.
@@ -210,6 +230,7 @@ pub fn summary_row(name: &str, m: &crate::metrics::RunMetrics) -> Vec<String> {
         p99,
     ];
     cells.extend(outcome_cells(m));
+    cells.extend(recovery_cells(m));
     cells
 }
 
@@ -260,6 +281,8 @@ mod tests {
         let row = summary_row("x", &m);
         assert_eq!(row.len(), SUMMARY_HEADER.len());
         assert_eq!(row[9], "-", "unstamped run has no dominant phase");
+        assert_eq!(row[17], "0/0", "no orphans on a healthy run");
+        assert_eq!(row[19], "0", "no audit violations on a healthy run");
     }
 
     #[test]

@@ -120,6 +120,17 @@ impl Fig15 {
                 vec!["retries".into(), self.retries.to_string()],
                 vec!["timeouts".into(), self.timeouts.to_string()],
                 vec!["ops given up".into(), self.gave_up.to_string()],
+                vec![
+                    "orphaned (rec+abrt)".into(),
+                    format!(
+                        "{} ({}+{})",
+                        self.metrics.orphaned_ops,
+                        self.metrics.recovered_ops,
+                        self.metrics.aborted_ops
+                    ),
+                ],
+                vec!["locks reclaimed".into(), self.metrics.locks_reclaimed.to_string()],
+                vec!["audit violations".into(), self.metrics.audit_violations.to_string()],
             ],
         );
         let csv: Vec<String> = self
@@ -153,5 +164,10 @@ mod tests {
         );
         // A kills-only plan never blocks a client leg: no give-ups.
         assert_eq!(fig.gave_up, 0, "kills alone must not abandon ops");
+        // Crash-recovery conservation holds, and recovery never corrupts
+        // client-visible state: the always-on auditor stays silent.
+        let m = &fig.metrics;
+        assert_eq!(m.orphaned_ops, m.recovered_ops + m.aborted_ops);
+        assert_eq!(m.audit_violations, 0, "auditor clean under kills");
     }
 }

@@ -24,6 +24,7 @@
 //! deterministic discrete-event simulation (`sim`) — see DESIGN.md §5/§6
 //! for the substitution table.
 
+pub mod audit;
 pub mod baselines;
 pub mod cache;
 pub mod chaos;

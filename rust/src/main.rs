@@ -15,7 +15,9 @@
 //!   appends the sharded-only 10⁶-client `mega-fleet` tier.
 //! * `observe`   — run one instrumented Spotify λFS experiment with the
 //!   timeline sampler armed and export a Perfetto-loadable Chrome
-//!   trace (`--out trace.json`).
+//!   trace (`--out trace.json`). `--storm` swaps the two-kill schedule
+//!   for the kill-storm plan so the trace shows the crash-recovery
+//!   machinery (kill instants, recovery sweeps, recovered-ops counter).
 //! * `route`     — route paths through the compiled PJRT kernel
 //!   (demonstrates the AOT artifacts on the request path).
 //! * `selftest`  — quick end-to-end smoke run.
@@ -30,7 +32,7 @@ use lambda_fs::util::cli::Args;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(&raw, &["verbose", "help", "smoke"]) {
+    let args = match Args::parse(&raw, &["verbose", "help", "smoke", "storm"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -61,8 +63,11 @@ fn usage() {
                                                      ML-pipeline, container-churn;\n\
                                                      --shards N > 1 runs the parallel\n\
                                                      engine + the 10^6-client tier\n\
-           observe  [--smoke] [--out trace.json]     instrumented Spotify run ->\n\
-                                                     Perfetto trace-event JSON\n\
+           observe  [--smoke] [--storm] [--out trace.json]\n\
+                                                     instrumented Spotify run ->\n\
+                                                     Perfetto trace-event JSON;\n\
+                                                     --storm swaps in the kill-storm\n\
+                                                     plan (crash-recovery on display)\n\
            route    <path> [path..] [--deployments 16]  PJRT routing kernel demo\n\
            selftest                                   quick smoke run",
         lambda_fs::VERSION
@@ -131,7 +136,7 @@ fn run(args: &Args) -> Result<(), String> {
             let smoke = args.flag("smoke");
             let sc = Scale(if smoke { 0.01 } else { scale.0 });
             let out = args.get_or("out", "trace.json");
-            let report = lambda_fs::telemetry::observe::run(sc, cfg.seed);
+            let report = lambda_fs::telemetry::observe::run_mode(sc, cfg.seed, args.flag("storm"));
             report.print();
             std::fs::write(&out, &report.json).map_err(|e| format!("{out}: {e}"))?;
             println!("\nwrote {out} ({} bytes)", report.json.len());

@@ -77,6 +77,28 @@ pub struct RunMetrics {
     /// `failed_ops`). Conservation: `completed_ops + gave_up` equals the
     /// submitted op count on runs without other failure modes.
     pub gave_up: u64,
+    /// Orphaned intents found by the recovery protocol: a kill landed
+    /// between an op's begin-intent and its commit mark
+    /// (`coherence::recovery`). Conservation:
+    /// `orphaned_ops == recovered_ops + aborted_ops` at end of run. 0 on
+    /// a kill-free run.
+    pub orphaned_ops: u64,
+    /// Orphans whose transaction had reached the data nodes (durable):
+    /// recovery replays the commit mark and acks the client late. Folded
+    /// per-op from [`Outcome::recovered`] by [`Self::record_outcome`];
+    /// the reclaim pass counts only `orphaned_ops`/`aborted_ops`, so the
+    /// conservation law has a single tally per term.
+    pub recovered_ops: u64,
+    /// Orphans aborted (transaction never issued): the store was never
+    /// touched; the client retried the op in the meantime.
+    pub aborted_ops: u64,
+    /// Stranded locks (row + subtree) released by recovery at lease
+    /// expiry.
+    pub locks_reclaimed: u64,
+    /// Consistency-auditor violations (lost acked writes, RYW breaks,
+    /// stale reads after acked invalidations, leaked locks). Always 0 on
+    /// a healthy run — CI fails any scenario cell where it is not.
+    pub audit_violations: u64,
     /// Per-phase latency histograms, indexed by
     /// [`Phase::index`]: where completed ops' end-to-end
     /// latency went (queue/cold/net/exec/coherence/store/retry µs). The
@@ -118,6 +140,11 @@ impl RunMetrics {
             attributed_cost_us: 0,
             timeouts: 0,
             gave_up: 0,
+            orphaned_ops: 0,
+            recovered_ops: 0,
+            aborted_ops: 0,
+            locks_reclaimed: 0,
+            audit_violations: 0,
             phase_lat: std::array::from_fn(|_| Histogram::new()),
         }
     }
@@ -213,6 +240,11 @@ impl RunMetrics {
         self.attributed_cost_us += other.attributed_cost_us;
         self.timeouts += other.timeouts;
         self.gave_up += other.gave_up;
+        self.orphaned_ops += other.orphaned_ops;
+        self.recovered_ops += other.recovered_ops;
+        self.aborted_ops += other.aborted_ops;
+        self.locks_reclaimed += other.locks_reclaimed;
+        self.audit_violations += other.audit_violations;
         for (a, b) in self.phase_lat.iter_mut().zip(&other.phase_lat) {
             a.merge(b);
         }
@@ -249,6 +281,9 @@ impl RunMetrics {
         self.per_deployment_ops[s] += 1;
         self.attributed_cost_us += o.cost_us;
         self.timeouts += o.timeouts as u64;
+        if o.recovered {
+            self.recovered_ops += 1;
+        }
     }
 
     /// Total resubmissions folded from outcomes (weighted retry_hist sum;
@@ -447,6 +482,23 @@ impl RunMetrics {
             h.write_u64(self.timeouts);
             h.write_u64(self.gave_up);
         }
+        // Recovery counters (PR 10) fold in only when a kill actually
+        // orphaned work, and the auditor's violation count only when a
+        // violation fired — kill-free (and healthy) runs keep their
+        // pre-recovery digests bit-identically.
+        if self.orphaned_ops != 0
+            || self.recovered_ops != 0
+            || self.aborted_ops != 0
+            || self.locks_reclaimed != 0
+        {
+            h.write_u64(self.orphaned_ops);
+            h.write_u64(self.recovered_ops);
+            h.write_u64(self.aborted_ops);
+            h.write_u64(self.locks_reclaimed);
+        }
+        if self.audit_violations != 0 {
+            h.write_u64(self.audit_violations);
+        }
         // Phase histograms fold in only when some op was stamped (the
         // same pattern): unstamped runs — mocks, empty ledgers — keep
         // their historical digests, while real systems (which always
@@ -529,6 +581,8 @@ mod tests {
             cost_us: 250,
             timeouts: 0,
             gave_up: false,
+            recovered: false,
+            observed_version: 0,
         });
         m.record(0, 2.0, false);
         m.record_outcome(&Outcome {
@@ -539,6 +593,8 @@ mod tests {
             cost_us: 40,
             timeouts: 0,
             gave_up: false,
+            recovered: false,
+            observed_version: 0,
         });
         m.record(0, 3.0, true);
         m.record_outcome(&Outcome {
@@ -549,6 +605,8 @@ mod tests {
             cost_us: 10,
             timeouts: 0,
             gave_up: false,
+            recovered: false,
+            observed_version: 0,
         });
         assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops);
         assert_eq!(m.pool_hits + m.restores + m.ephemeral_boots, m.cold_starts);
@@ -674,6 +732,8 @@ mod tests {
             cost_us: 100,
             timeouts: 1,
             gave_up: false,
+            recovered: false,
+            observed_version: 0,
         };
         let mut a = RunMetrics::new();
         stamp(&mut a, 500_000, 1_000, false, &Outcome::warm(0));
@@ -715,6 +775,67 @@ mod tests {
         assert_eq!(a.gave_up, 1);
         let phase_sum: u64 = a.phase_lat.iter().map(|h| h.sum_us()).sum();
         assert_eq!(phase_sum, a.all_lat.sum_us());
+    }
+
+    #[test]
+    fn recovery_counters_fold_only_when_fired() {
+        use crate::systems::Outcome;
+        let mut m = RunMetrics::new();
+        m.record(0, 1.0, true);
+        m.record_outcome(&Outcome::warm(0));
+        let ofp = m.outcome_fingerprint();
+
+        // A recovered op bumps the counter through the outcome fold and
+        // moves the digest.
+        let mut rec = m.clone();
+        rec.record(4, 4_000.0, true);
+        rec.record_outcome(&Outcome { recovered: true, ..Outcome::warm(1) });
+        assert_eq!(rec.recovered_ops, 1, "recovered folds through record_outcome");
+        assert_ne!(ofp, rec.outcome_fingerprint());
+
+        // Reclaim-side counters are digested too…
+        for field in ["orphaned", "aborted", "locks"] {
+            let mut with = m.clone();
+            match field {
+                "orphaned" => with.orphaned_ops = 1,
+                "aborted" => with.aborted_ops = 1,
+                _ => with.locks_reclaimed = 2,
+            }
+            assert_ne!(ofp, with.outcome_fingerprint(), "{field} is digested");
+        }
+        let mut viol = m.clone();
+        viol.audit_violations = 1;
+        assert_ne!(ofp, viol.outcome_fingerprint(), "violations are digested");
+
+        // …but an all-zero recovery ledger keeps the pre-recovery digest
+        // bit-identically, and never perturbs the base fingerprint.
+        assert_eq!(ofp, m.outcome_fingerprint(), "kill-free runs keep the old digest");
+        let mut base = m.clone();
+        base.orphaned_ops = 9;
+        base.audit_violations = 9;
+        assert_eq!(base.fingerprint(), m.fingerprint(), "base digest ignores recovery");
+    }
+
+    #[test]
+    fn merge_combines_recovery_ledger() {
+        let mut a = RunMetrics::new();
+        a.orphaned_ops = 3;
+        a.recovered_ops = 2;
+        a.aborted_ops = 1;
+        a.locks_reclaimed = 4;
+        let mut b = RunMetrics::new();
+        b.orphaned_ops = 2;
+        b.recovered_ops = 1;
+        b.aborted_ops = 1;
+        b.locks_reclaimed = 1;
+        b.audit_violations = 1;
+        a.merge(&b);
+        assert_eq!(
+            (a.orphaned_ops, a.recovered_ops, a.aborted_ops, a.locks_reclaimed),
+            (5, 3, 2, 5)
+        );
+        assert_eq!(a.audit_violations, 1);
+        assert_eq!(a.orphaned_ops, a.recovered_ops + a.aborted_ops, "conservation merges");
     }
 
     #[test]

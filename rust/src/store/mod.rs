@@ -11,5 +11,5 @@
 pub mod ndb;
 pub mod sstable;
 
-pub use ndb::NdbStore;
+pub use ndb::{Intent, NdbStore};
 pub use sstable::SsTableStore;

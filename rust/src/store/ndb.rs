@@ -43,6 +43,42 @@ pub enum TxnError {
     SubtreeLocked(DirId),
 }
 
+/// A write-ahead intent-log entry (PR 10).
+///
+/// Every mutating op records a begin-intent *before* touching rows and a
+/// commit mark after. A crash landing between the two leaves the entry
+/// open — a detectable orphan the recovery protocol replays or aborts
+/// once the owner's lease expires (`coherence::recovery`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Intent {
+    /// Monotone log id; orphan drains happen in id (log) order.
+    pub id: u64,
+    /// Opaque owner token — the packed instance id (λFS) or NameNode
+    /// index (HopsFS). The store stays free of platform types.
+    pub owner: u64,
+    /// Affected rows, inline (λFS row buffers never exceed 3 rows).
+    pub rows: [InodeRef; 3],
+    pub n_rows: u8,
+    /// Tombstoning write.
+    pub deletes: bool,
+    /// The transaction had been issued to the data nodes before the
+    /// crash: NDB commits it autonomously, so recovery *replays* (writes
+    /// the missing commit mark and acks late). A non-durable orphan is
+    /// aborted instead.
+    pub durable: bool,
+    /// Subtree operation: the root whose subtree-lock handle this intent
+    /// records (released by recovery if stranded).
+    pub subtree_root: Option<DirId>,
+    pub begun_at: Time,
+}
+
+impl Intent {
+    /// The affected rows as a slice.
+    pub fn rows(&self) -> &[InodeRef] {
+        &self.rows[..self.n_rows as usize]
+    }
+}
+
 /// The NDB store model.
 ///
 /// Row, lock, and subtree-lock tables are keyed by the deterministic FNV
@@ -60,6 +96,13 @@ pub struct NdbStore<S: BuildHasher = FnvBuildHasher> {
     station: Station,
     reads: u64,
     writes: u64,
+    /// Open (uncommitted) write-ahead intents, keyed by log id. Commit
+    /// marks remove the entry, so the live set only ever holds in-flight
+    /// work plus crash orphans.
+    intents: HashMap<u64, Intent, S>,
+    next_intent_id: u64,
+    intents_begun: u64,
+    intents_committed: u64,
 }
 
 impl NdbStore<FnvBuildHasher> {
@@ -81,6 +124,10 @@ impl<S: BuildHasher + Default> NdbStore<S> {
             station: Station::new(slots),
             reads: 0,
             writes: 0,
+            intents: HashMap::with_hasher(S::default()),
+            next_intent_id: 0,
+            intents_begun: 0,
+            intents_committed: 0,
         }
     }
 
@@ -213,6 +260,122 @@ impl<S: BuildHasher + Default> NdbStore<S> {
 
     fn gc_subtree_locks(&mut self, now: Time) {
         self.subtree_locks.retain(|_, &mut t| t > now);
+    }
+
+    // ------------------------------------------------------------------
+    // Write-ahead intent log (PR 10).
+    //
+    // Pure bookkeeping: none of these draw randomness or touch the
+    // service station, so an always-on intent log leaves every clean-run
+    // fingerprint byte-identical.
+    // ------------------------------------------------------------------
+
+    /// Record a begin-intent before touching any row. Returns the log id
+    /// the caller must commit (or leave open for recovery to find).
+    pub fn begin_intent(
+        &mut self,
+        owner: u64,
+        rows: &[InodeRef],
+        deletes: bool,
+        subtree_root: Option<DirId>,
+        begun_at: Time,
+    ) -> u64 {
+        debug_assert!(rows.len() <= 3, "λFS row buffers never exceed 3 rows");
+        let id = self.next_intent_id;
+        self.next_intent_id += 1;
+        let mut buf = [InodeRef::dir(DirId(0)); 3];
+        let n = rows.len().min(3);
+        buf[..n].copy_from_slice(&rows[..n]);
+        self.intents.insert(
+            id,
+            Intent {
+                id,
+                owner,
+                rows: buf,
+                n_rows: n as u8,
+                deletes,
+                durable: false,
+                subtree_root,
+                begun_at,
+            },
+        );
+        self.intents_begun += 1;
+        id
+    }
+
+    /// Mark an open intent as issued to the data nodes: NDB commits the
+    /// transaction autonomously, so a crash after this point is replayed
+    /// (not aborted) by recovery.
+    pub fn mark_intent_durable(&mut self, id: u64) {
+        if let Some(i) = self.intents.get_mut(&id) {
+            i.durable = true;
+        }
+    }
+
+    /// Write the commit mark: the intent leaves the open set.
+    pub fn commit_intent(&mut self, id: u64) {
+        if self.intents.remove(&id).is_some() {
+            self.intents_committed += 1;
+        }
+    }
+
+    /// Abort an open intent without a commit mark: the client abandoned
+    /// the op (backoff exhausted) while its owner is still alive, and
+    /// nothing reached the rows. Without this, an abandoned intent would
+    /// linger and surface as a spurious orphan if its owner is later
+    /// killed — the lock-leak/conservation audit caught exactly that.
+    pub fn abort_intent(&mut self, id: u64) {
+        self.intents.remove(&id);
+    }
+
+    /// Drain every open intent owned by `owner`, in log (id) order — the
+    /// deterministic orphan scan recovery runs once the owner's lease
+    /// expires.
+    pub fn take_orphans(&mut self, owner: u64) -> Vec<Intent> {
+        let mut ids: Vec<u64> =
+            self.intents.values().filter(|i| i.owner == owner).map(|i| i.id).collect();
+        ids.sort_unstable();
+        ids.iter().map(|id| self.intents.remove(id).expect("scanned id")).collect()
+    }
+
+    /// Strand exclusive row locks held by a crashed owner: they stay
+    /// held until `until` (the lease boundary), when recovery releases
+    /// them. Never shortens a lock already held further out.
+    pub fn strand_locks(&mut self, rows: &[InodeRef], until: Time) {
+        for &r in rows {
+            let t = self.locks.entry(r).or_insert(0);
+            *t = (*t).max(until);
+        }
+    }
+
+    /// Strand a subtree lock held by a crashed owner until `until`.
+    pub fn strand_subtree(&mut self, root: DirId, until: Time) {
+        let t = self.subtree_locks.entry(root).or_insert(0);
+        *t = (*t).max(until);
+    }
+
+    /// Open (uncommitted) intents — crash orphans plus genuinely
+    /// in-flight work.
+    pub fn open_intents(&self) -> usize {
+        self.intents.len()
+    }
+
+    /// Totals for the audit/figure layer.
+    pub fn intents_begun(&self) -> u64 {
+        self.intents_begun
+    }
+
+    pub fn intents_committed(&self) -> u64 {
+        self.intents_committed
+    }
+
+    /// Locks still held past `at` — the auditor's lock-leak-freedom
+    /// check at end of run. Row locks and subtree locks both count; a
+    /// clean shutdown (every op completed or reclaimed) leaves zero.
+    pub fn lock_leaks(&self, at: Time) -> u32 {
+        let rows = self.locks.values().filter(|&&t| t > at).count();
+        let subs = self.subtree_locks.values().filter(|&&t| t > at).count();
+        (rows + subs) as u32
     }
 
     /// Number of live (existing) rows — test hook.
@@ -350,5 +513,74 @@ mod tests {
         s.write_txn(0, &[inode(1, 0), inode(1, 1)], false, &mut rng);
         s.write_txn(0, &[inode(1, 1)], true, &mut rng);
         assert_eq!(s.live_rows(), 1);
+    }
+
+    #[test]
+    fn intent_begin_commit_cycle() {
+        let (mut s, mut rng) = store();
+        let id = s.begin_intent(7, &[inode(1, 0)], false, None, 100);
+        assert_eq!(s.open_intents(), 1);
+        s.write_txn(100, &[inode(1, 0)], false, &mut rng);
+        s.commit_intent(id);
+        assert_eq!(s.open_intents(), 0);
+        assert_eq!(s.intents_begun(), 1);
+        assert_eq!(s.intents_committed(), 1);
+    }
+
+    #[test]
+    fn orphan_scan_drains_owner_in_log_order() {
+        let (mut s, _) = store();
+        let a = s.begin_intent(7, &[inode(1, 0)], false, None, 10);
+        let _b = s.begin_intent(9, &[inode(2, 0)], false, None, 20);
+        let c = s.begin_intent(7, &[inode(3, 0)], true, None, 30);
+        let orphans = s.take_orphans(7);
+        assert_eq!(orphans.len(), 2);
+        assert_eq!((orphans[0].id, orphans[1].id), (a, c), "log order");
+        assert!(orphans[1].deletes);
+        assert_eq!(s.open_intents(), 1, "other owner's intent untouched");
+        assert!(s.take_orphans(7).is_empty(), "drain is idempotent");
+    }
+
+    #[test]
+    fn durable_mark_survives_into_orphan() {
+        let (mut s, _) = store();
+        let id = s.begin_intent(3, &[inode(1, 0), inode(1, 1)], false, None, 10);
+        s.mark_intent_durable(id);
+        let orphans = s.take_orphans(3);
+        assert!(orphans[0].durable, "issued txn replays, not aborts");
+        assert_eq!(orphans[0].rows(), &[inode(1, 0), inode(1, 1)]);
+    }
+
+    #[test]
+    fn stranded_locks_block_writers_until_lease() {
+        let (mut s, mut rng) = store();
+        let lease_end = time::from_ms(3_000.0);
+        s.strand_locks(&[inode(1, 0)], lease_end);
+        let c = s.write_txn(0, &[inode(1, 0)], false, &mut rng);
+        assert!(c > lease_end, "writer waits out the stranded lock: {c}");
+        assert_eq!(s.lock_leaks(0), 1);
+        assert_eq!(s.lock_leaks(lease_end), 1, "commit lock of the waiter");
+    }
+
+    #[test]
+    fn stranded_subtree_lock_blocks_and_releases() {
+        let (mut s, _) = store();
+        s.strand_subtree(DirId(5), 1_000_000);
+        assert_eq!(
+            s.try_subtree_lock(10, DirId(5), &[], 2_000_000),
+            Err(TxnError::SubtreeLocked(DirId(5)))
+        );
+        assert_eq!(s.lock_leaks(10), 1);
+        s.release_subtree_lock(DirId(5));
+        assert_eq!(s.lock_leaks(10), 0);
+        assert!(s.try_subtree_lock(20, DirId(5), &[], 2_000_000).is_ok());
+    }
+
+    #[test]
+    fn lock_leaks_zero_after_expiry() {
+        let (mut s, mut rng) = store();
+        let c = s.write_txn(0, &[inode(1, 0)], false, &mut rng);
+        assert!(s.lock_leaks(0) > 0, "commit lock held during the txn");
+        assert_eq!(s.lock_leaks(c), 0, "all locks expire at commit");
     }
 }

@@ -1,5 +1,15 @@
 //! Workload drivers, generic over [`MetadataService`].
+//!
+//! Every driver shadows its run with the consistency auditor
+//! ([`crate::audit::Auditor`]): each completion is folded into the
+//! shadow model in submission order, and after the last submission the
+//! driver calls [`MetadataService::finish`] (flushing deferred recovery
+//! work) and folds the auditor's violation count into
+//! `RunMetrics::audit_violations`. The auditor consumes no RNG draws and
+//! perturbs no timing, so audited runs keep their historical
+//! fingerprints.
 
+use crate::audit::Auditor;
 use crate::namespace::generate::HotspotSampler;
 use crate::namespace::{Namespace, OpKind, Operation};
 use crate::sim::queue::EventQueue;
@@ -45,6 +55,16 @@ pub(crate) fn record<S: MetadataService>(sys: &mut S, issue: Time, c: &Completio
     }
 }
 
+/// End-of-run epilogue shared by every driver: flush the system's
+/// deferred work (crash-recovery reclaims past the horizon), then run the
+/// auditor's final sweep (lost-acked-writes + lock leaks) and fold the
+/// violation total into the metrics ledger.
+pub(crate) fn finish_audited<S: MetadataService>(sys: &mut S, auditor: &mut Auditor) {
+    sys.finish();
+    let violations = auditor.finalize(sys).total();
+    sys.metrics_mut().audit_violations += violations;
+}
+
 /// The intended issue slot for op `i` of `n_ops` within second `s`:
 /// ops spread uniformly across the second. Multiply-before-divide
 /// distributes the remainder over the slots instead of truncating a
@@ -81,6 +101,7 @@ pub fn run_open_loop<S: MetadataService>(
     rng: &mut Rng,
 ) {
     let mut op_rng = rng.fork("ops");
+    let mut auditor = Auditor::new(sys.audit_invalidations_acked());
     let n_clients = spec.n_clients.max(1);
     let mut ready: Vec<Time> = vec![0; n_clients as usize];
     let mut next_client = 0u32;
@@ -105,10 +126,12 @@ pub fn run_open_loop<S: MetadataService>(
             let op = spec.mix.sample_op(ns, sampler, &mut op_rng);
             let done = sys.submit(Request::scheduled(slot, issue, c, &op), rng);
             ready[c as usize] = done.done;
+            auditor.observe(c, &op, issue, &done);
             record(sys, issue, &done, op.kind.is_write());
         }
         sys.on_second(s);
     }
+    finish_audited(sys, &mut auditor);
 }
 
 /// Open-loop driver over [`MetadataService::submit_batch`]: identical op
@@ -129,6 +152,7 @@ pub fn run_open_loop_batched<S: MetadataService>(
     rng: &mut Rng,
 ) {
     let mut op_rng = rng.fork("ops");
+    let mut auditor = Auditor::new(sys.audit_invalidations_acked());
     let n_clients = spec.n_clients.max(1);
     let mut ready: Vec<Time> = vec![0; n_clients as usize];
     let mut next_client = 0u32;
@@ -174,12 +198,14 @@ pub fn run_open_loop_batched<S: MetadataService>(
             for (idx, (op, _, issue, c)) in staged.iter().enumerate() {
                 let done = completions[idx];
                 ready[*c as usize] = done.done;
+                auditor.observe(*c, op, *issue, &done);
                 record(sys, *issue, &done, op.kind.is_write());
             }
             i += chunk;
         }
         sys.on_second(s);
     }
+    finish_audited(sys, &mut auditor);
 }
 
 /// Closed-loop driver (the §5.3 micro-benchmarks): every client issues its
@@ -212,6 +238,7 @@ pub fn run_closed_loop_from<S: MetadataService>(
     rng: &mut Rng,
 ) {
     let mut op_rng = rng.fork("ops");
+    let mut auditor = Auditor::new(sys.audit_invalidations_acked());
     let mut q: EventQueue<u32> = EventQueue::new();
     let mut remaining: Vec<u32> = vec![spec.ops_per_client; spec.n_clients as usize];
     // Stagger initial issues over the first 100 ms (clients do not start
@@ -236,6 +263,7 @@ pub fn run_closed_loop_from<S: MetadataService>(
         }
         let op = sample_closed_op(spec.kind, ns, sampler, &mut op_rng);
         let done = sys.submit(Request::new(now, c, &op), rng);
+        auditor.observe(c, &op, now, &done);
         record(sys, now, &done, op.kind.is_write());
         remaining[c as usize] -= 1;
         if remaining[c as usize] > 0 {
@@ -243,6 +271,7 @@ pub fn run_closed_loop_from<S: MetadataService>(
         }
     }
     sys.on_second(last_second);
+    finish_audited(sys, &mut auditor);
 }
 
 fn sample_closed_op(

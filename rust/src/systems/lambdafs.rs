@@ -14,7 +14,7 @@
 use crate::cache::SlotCaches;
 use crate::chaos::{self, ChaosPlan, ChaosState};
 use crate::client::{ClientState, Router};
-use crate::coherence::{protocol, AckDisruption, Coordinator, Invalidation};
+use crate::coherence::{protocol, AckDisruption, Coordinator, Invalidation, RecoveryManager};
 use crate::config::{ScalePolicyMode, SystemConfig};
 use crate::coordinator::subtree::{self, SubtreeParams, SubtreePlan};
 use crate::coordinator::ServiceModel;
@@ -82,6 +82,45 @@ pub struct LambdaFs<S: BuildHasher = FnvBuildHasher> {
     /// policy's per-second arrival deltas.
     last_dep_ops: Vec<u64>,
     last_settle: Time,
+    /// Lease-based orphaned-op reclamation (see `coherence::recovery`):
+    /// detected deaths park their orphaned write-ahead intents here until
+    /// the lease expires, then the per-second sweep (and `finish`)
+    /// releases their stranded locks.
+    recovery: RecoveryManager,
+    /// Dedicated RNG stream for recovery-path draws (the doomed-op retry
+    /// backoff). Only drained when a kill actually orphans an op, so
+    /// no-chaos runs stay fingerprint-identical to pre-recovery builds.
+    recovery_rng: Rng,
+}
+
+/// Pack an instance id into the store's opaque intent-owner token.
+fn owner_token(id: InstanceId) -> u64 {
+    (id.seq() as u64) << 32 | id.slot() as u64
+}
+
+/// How `serve_write` resolved against a predicted mid-serve kill.
+enum WriteServe {
+    /// Clean commit (the overwhelmingly common case).
+    Done(Time),
+    /// The kill lands while the coherence protocol is still running: the
+    /// transaction was never issued, the non-durable intent is orphaned
+    /// (recovery will abort it) and the client must retry. The span
+    /// cursor sits at `ready`, the would-be protocol completion.
+    Orphaned { ready: Time },
+    /// The kill lands between issuing the transaction and writing the
+    /// commit mark: NDB committed autonomously at `commit`; recovery
+    /// replays the durable intent and acks the client late at `acked`.
+    Recovered { commit: Time, acked: Time },
+}
+
+/// How `serve_subtree` resolved.
+enum SubtreeServe {
+    Done { done: Time, retries: u32 },
+    GaveUp { at: Time, retries: u32 },
+    /// Killed after the batches ran but before the subtree lock release /
+    /// commit mark reached the store: the lock is stranded until the
+    /// lease expires and recovery acks the (durable) op late.
+    Recovered { commit: Time, acked: Time, retries: u32 },
 }
 
 impl LambdaFs<FnvBuildHasher> {
@@ -120,6 +159,8 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             .collect();
         let cost = CostModel::new(cfg.cost.clone());
         let caches = SlotCaches::new(cfg.lambda_fs.cache_capacity);
+        let recovery = RecoveryManager::new(time::from_ms(cfg.store.recovery_lease_ms));
+        let recovery_rng = Rng::new(cfg.seed ^ 0x7ec0).fork("recovery");
         LambdaFs {
             cfg,
             ns,
@@ -143,6 +184,8 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             predict,
             last_dep_ops: Vec::new(),
             last_settle: 0,
+            recovery,
+            recovery_rng,
         }
     }
 
@@ -204,6 +247,33 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         self.caches.total_stats()
     }
 
+    /// The recovery manager's (deaths noted, reclaim sweeps) gauges.
+    pub fn recovery_counts(&self) -> (u64, u64) {
+        self.recovery.counts()
+    }
+
+    /// The scheduled kill that will terminate `inst` mid-serve, if any:
+    /// `kill_oldest` always takes the deployment's current oldest
+    /// instance, so an op arriving on that instance before a scheduled
+    /// kill of its deployment is doomed once its serve window crosses the
+    /// kill instant. The prediction is exact — no older instance can
+    /// appear after `arrive`, and a busy victim is never idle-reclaimed
+    /// first. Kills land on the second boundary `(s + 1) * SEC`.
+    fn doom_at(&self, inst: InstanceId, dep: u32, arrive: Time) -> Option<Time> {
+        if self.kill_schedule.is_empty() {
+            return None;
+        }
+        if self.platform.deployment_instances(dep).next() != Some(inst) {
+            return None;
+        }
+        self.kill_schedule
+            .iter()
+            .filter(|&&(_, d)| d == dep)
+            .map(|&(s, _)| (s as Time + 1) * time::SEC)
+            .filter(|&k| k > arrive)
+            .min()
+    }
+
     fn register(&mut self, id: InstanceId) {
         self.caches.ensure(id);
         if !self.coord.is_live(id) {
@@ -236,19 +306,22 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
     }
 
     /// Serve a read-class op on `inst` starting at `arrive`; returns the
-    /// service completion time on the NameNode and whether the op hit
-    /// the instance's metadata cache. `span` (cursor at `arrive`) gets
-    /// the queue-wait/exec/store segments stamped as they materialize.
+    /// service completion time on the NameNode, whether the op hit the
+    /// instance's metadata cache, and the metadata version the read
+    /// observed (feeds the consistency auditor). `span` (cursor at
+    /// `arrive`) gets the queue-wait/exec/store segments stamped as they
+    /// materialize.
     fn serve_read(
         &mut self,
         inst: InstanceId,
         op: &Operation,
         arrive: Time,
         span: &mut Span,
-    ) -> (Time, bool) {
+    ) -> (Time, bool, u64) {
         let mut rng = self.rng.fork_fast();
         let kind = op.kind;
-        let hit = self.caches.cache_mut(inst).get(op.target).is_some();
+        let cached = self.caches.cache_mut(inst).get(op.target);
+        let hit = cached.is_some();
         let cpu = if hit {
             self.svc.cache_hit(kind, &mut rng)
         } else {
@@ -257,8 +330,8 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         let (start, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
         span.advance(Phase::Queue, start);
         span.advance(Phase::Exec, cpu_done);
-        if hit {
-            return (cpu_done, true);
+        if let Some(v) = cached {
+            return (cpu_done, true, v);
         }
         // Miss: batched path resolution against NDB (one round trip — the
         // INode hint cache), then fill the cache with the whole path.
@@ -275,13 +348,24 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             cache.insert_version(InodeRef::dir(dir), self.store.version(InodeRef::dir(dir)));
             d = self.ns.dir(dir).parent;
         }
-        (store_done, false)
+        (store_done, false, version)
     }
 
-    /// Serve a write-class op on `inst`: coherence protocol, then the
-    /// transactional store write (§3.5 Algorithm 1). `span` gets the
-    /// queue/exec/coherence/store segments.
-    fn serve_write(&mut self, inst: InstanceId, op: &Operation, arrive: Time, span: &mut Span) -> Time {
+    /// Serve a write-class op on `inst`: begin-intent, coherence
+    /// protocol, then the transactional store write under the commit mark
+    /// (§3.5 Algorithm 1). `span` gets the queue/exec/coherence/store
+    /// segments. `doom` is the scheduled kill instant that will terminate
+    /// `inst` mid-serve (see [`Self::doom_at`]); when the serve window
+    /// crosses it the op resolves through the crash-recovery protocol
+    /// instead of a clean commit.
+    fn serve_write(
+        &mut self,
+        inst: InstanceId,
+        op: &Operation,
+        arrive: Time,
+        span: &mut Span,
+        doom: Option<Time>,
+    ) -> WriteServe {
         let mut rng = self.rng.fork_fast();
         let cpu = self.svc.write_cpu(&mut rng);
         let (start, cpu_done) = self.platform.submit_cpu(inst, arrive, cpu);
@@ -337,10 +421,47 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             },
         );
 
-        // Commit under exclusive row locks after all ACKs.
+        // Commit under exclusive row locks after all ACKs. The
+        // begin-intent hits the log before any row is touched — a kill
+        // landing between it and the commit mark leaves a detectable
+        // orphan (`coherence::recovery`).
         span.advance(Phase::Coherence, outcome.complete_at);
+        let ready = outcome.complete_at;
         let deletes = matches!(op.kind, OpKind::Delete);
-        let commit = self.store.write_txn(outcome.complete_at, rows, deletes, &mut rng);
+        let intent = self.store.begin_intent(owner_token(inst), rows, deletes, None, cpu_done);
+        if let Some(k) = doom {
+            if ready >= k {
+                // Killed while the coherence protocol was still running:
+                // the transaction was never issued. The open (non-durable)
+                // intent is the orphan recovery will abort; its row locks
+                // stay stranded until the lease expires. Classification
+                // happens here, at the doom instant, so the conservation
+                // law closes even if the reclaim sweep outlives the run.
+                let lease = self.recovery.lease();
+                self.store.strand_locks(rows, k + lease);
+                self.metrics.orphaned_ops += 1;
+                self.metrics.aborted_ops += 1;
+                self.metrics.locks_reclaimed += rows.len() as u64;
+                return WriteServe::Orphaned { ready };
+            }
+        }
+        let commit = self.store.write_txn(ready, rows, deletes, &mut rng);
+        if let Some(k) = doom {
+            if commit >= k {
+                // Killed between issuing the transaction and writing the
+                // commit mark: NDB commits autonomously, so the intent is
+                // durable and recovery replays it (late ack at lease
+                // expiry + one store round trip). No leader re-cache —
+                // the leader is dead; followers were already invalidated.
+                self.store.mark_intent_durable(intent);
+                self.metrics.orphaned_ops += 1;
+                let lease = self.recovery.lease();
+                let acked = commit.max(k + lease) + time::from_ms(self.cfg.store.rtt_ms);
+                span.advance(Phase::Store, commit);
+                return WriteServe::Recovered { commit, acked };
+            }
+        }
+        self.store.commit_intent(intent);
         span.advance(Phase::Store, commit);
 
         // Leader caches the fresh metadata (it holds the latest version).
@@ -348,20 +469,21 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
             let v = self.store.version(op.target);
             self.caches.cache_mut(inst).insert_version(op.target, v);
         }
-        commit
+        WriteServe::Done(commit)
     }
 
     /// Serve a subtree op (Appendix C): subtree lock + quiesce + single
-    /// prefix INV + offloaded batches. Returns the completion time, how
-    /// many lock retries the op needed, and whether it exhausted the
-    /// retry budget and gave up.
+    /// prefix INV + offloaded batches, bracketed by a write-ahead intent
+    /// carrying the subtree root so recovery can release a stranded
+    /// subtree lock. `doom` as in [`Self::serve_write`].
     fn serve_subtree(
         &mut self,
         inst: InstanceId,
         op: &Operation,
         arrive: Time,
         span: &mut Span,
-    ) -> (Time, u32, bool) {
+        doom: Option<Time>,
+    ) -> SubtreeServe {
         let mut rng = self.rng.fork_fast();
         let router = &self.router;
         let ns = &self.ns;
@@ -400,11 +522,41 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         };
         let params = SubtreeParams { batch: self.cfg.lambda_fs.subtree_batch, parallelism };
         span.advance(Phase::Coherence, outcome.complete_at);
-        match subtree::execute(outcome.complete_at, &plan, params, &mut self.store, &mut rng) {
-            Ok(done) => {
-                span.advance(Phase::Store, done);
-                (done, 0, false)
+
+        // Begin-intent before any batch touches the store. Subtree rows
+        // are synthetic (the batches own their row set), so the intent
+        // carries only the root — enough for recovery to release a
+        // stranded subtree lock.
+        let intent =
+            self.store.begin_intent(owner_token(inst), &[], false, Some(plan.root), arrive);
+        let lease = self.recovery.lease();
+        let rtt_ms = self.cfg.store.rtt_ms;
+        let finish = |store: &mut NdbStore<S>,
+                          metrics: &mut RunMetrics,
+                          span: &mut Span,
+                          done: Time,
+                          attempts: u32|
+         -> SubtreeServe {
+            span.advance(Phase::Store, done);
+            if let Some(k) = doom {
+                if done >= k {
+                    // Killed after the batches committed but before the
+                    // lock release + commit mark reached the store: the
+                    // subtree lock is re-stranded until the lease expires
+                    // and the (durable) op is acked late by recovery.
+                    store.mark_intent_durable(intent);
+                    store.strand_subtree(plan.root, k + lease);
+                    metrics.orphaned_ops += 1;
+                    metrics.locks_reclaimed += 1;
+                    let acked = done.max(k + lease) + time::from_ms(rtt_ms);
+                    return SubtreeServe::Recovered { commit: done, acked, retries: attempts };
+                }
             }
+            store.commit_intent(intent);
+            SubtreeServe::Done { done, retries: attempts }
+        };
+        match subtree::execute(outcome.complete_at, &plan, params, &mut self.store, &mut rng) {
+            Ok(done) => finish(&mut self.store, &mut self.metrics, span, done, 0),
             Err(_) => {
                 // Overlapping subtree op: retry under the backoff budget
                 // with a deterministically doubling pause. No jitter draw
@@ -423,10 +575,17 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
                     span.advance(Phase::Retry, at);
                     match subtree::execute(at, &plan, params, &mut self.store, &mut rng) {
                         Ok(done) => {
-                            span.advance(Phase::Store, done);
-                            return (done, attempt, false);
+                            return finish(&mut self.store, &mut self.metrics, span, done, attempt)
                         }
-                        Err(_) if backoff.exhausted(attempt) => return (at, attempt, true),
+                        Err(_) if backoff.exhausted(attempt) => {
+                            // The lock was never acquired (execute fails
+                            // only at the try-lock), so there is nothing
+                            // to release — but the open intent must be
+                            // aborted or a later kill of this instance
+                            // would reclaim it as a phantom orphan.
+                            self.store.abort_intent(intent);
+                            return SubtreeServe::GaveUp { at, retries: attempt };
+                        }
                         Err(_) => {}
                     }
                 }
@@ -541,18 +700,71 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
 
         let mut retries = 0u32;
         let mut gave_up = false;
+        let mut recovered = false;
+        // Late-acked (recovered) ops bill busy time to the store commit,
+        // not the recovery ack the client eventually sees.
+        let mut busy_until: Option<Time> = None;
+        let mut observed_version = 0u64;
         let (served, cache) = match op.kind {
             k if k.is_subtree() => {
-                let (t, r, gu) = self.serve_subtree(inst, op, arrive, &mut span);
-                retries += r;
-                gave_up = gu;
-                (t, CacheOutcome::Bypass)
+                let doom = self.doom_at(inst, dep, arrive);
+                match self.serve_subtree(inst, op, arrive, &mut span, doom) {
+                    SubtreeServe::Done { done, retries: r } => {
+                        retries += r;
+                        (done, CacheOutcome::Bypass)
+                    }
+                    SubtreeServe::GaveUp { at, retries: r } => {
+                        retries += r;
+                        gave_up = true;
+                        (at, CacheOutcome::Bypass)
+                    }
+                    SubtreeServe::Recovered { commit, acked, retries: r } => {
+                        retries += r;
+                        recovered = true;
+                        busy_until = Some(commit);
+                        span.advance(Phase::Retry, acked);
+                        (acked, CacheOutcome::Bypass)
+                    }
+                }
             }
             k if k.is_write() => {
-                (self.serve_write(inst, op, arrive, &mut span), CacheOutcome::Bypass)
+                let doom = self.doom_at(inst, dep, arrive);
+                let t = match self.serve_write(inst, op, arrive, &mut span, doom) {
+                    WriteServe::Done(t) => t,
+                    WriteServe::Recovered { commit, acked } => {
+                        // The reply from the killed NameNode never
+                        // arrives; recovery acks the committed op once
+                        // the lease expires.
+                        recovered = true;
+                        busy_until = Some(commit);
+                        span.advance(Phase::Retry, acked);
+                        acked
+                    }
+                    WriteServe::Orphaned { ready } => {
+                        // The client times out, backs off (one draw on
+                        // the dedicated recovery stream) and retries once
+                        // on the deployment's replacement instance. The
+                        // retry is never re-doomed: at most one scheduled
+                        // kill can land inside a serve window.
+                        timeouts += 1;
+                        retries += 1;
+                        let backoff = Backoff::default();
+                        let retry_at = ready
+                            .max(now + time::from_ms(self.cfg.faas.http_timeout_ms))
+                            + backoff.delay(0, &mut self.recovery_rng);
+                        span.advance(Phase::Retry, retry_at);
+                        match self.serve_write(inst, op, retry_at, &mut span, None) {
+                            WriteServe::Done(t) => t,
+                            _ => unreachable!("undoomed writes always commit"),
+                        }
+                    }
+                };
+                observed_version = self.store.version(op.target);
+                (t, CacheOutcome::Bypass)
             }
             _ => {
-                let (t, hit) = self.serve_read(inst, op, arrive, &mut span);
+                let (t, hit, v) = self.serve_read(inst, op, arrive, &mut span);
+                observed_version = v;
                 (t, if hit { CacheOutcome::Hit } else { CacheOutcome::Miss })
             }
         };
@@ -623,8 +835,11 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
         }
 
         // Billing: the serving instance is active from arrival to service
-        // completion (idle NameNodes accrue no pay-per-use cost).
-        self.platform.bill(inst, arrive, served);
+        // completion (idle NameNodes accrue no pay-per-use cost). A
+        // recovered op's instance died at the kill instant — it is busy
+        // only to the store commit, never to the late recovery ack.
+        let busy = busy_until.unwrap_or(served);
+        self.platform.bill(inst, arrive, busy);
         self.clients[c].observe(time::to_ms(done - now));
         Completion {
             done,
@@ -633,9 +848,11 @@ impl<S: BuildHasher + Default> LambdaFs<S> {
                 cache,
                 retries,
                 server: dep,
-                cost_us: served.saturating_sub(arrive),
+                cost_us: busy.saturating_sub(arrive),
                 timeouts,
                 gave_up,
+                recovered,
+                observed_version,
             },
             phases: phase_override.unwrap_or_else(|| span.finish(Phase::Net, done)),
         }
@@ -750,6 +967,10 @@ impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
             if let Some(victim) = self.platform.kill_oldest(dep, now) {
                 self.conns.drop_instance(victim);
                 self.coord.deregister(victim);
+                // Death detected: pull the victim's open intents off the
+                // write-ahead log and park them under the recovery lease.
+                let orphans = self.store.take_orphans(owner_token(victim));
+                self.recovery.note_death(owner_token(victim), now, orphans);
             }
         }
 
@@ -762,7 +983,23 @@ impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
             self.conns.drop_instance(victim);
             self.coord.deregister(victim);
         }
-        self.coord.expire_sessions(now);
+        // Session expiry is the second death-detection path (blackouts:
+        // an instance that stops heartbeating without an observed kill).
+        for dead in self.coord.expire_sessions(now) {
+            let orphans = self.store.take_orphans(owner_token(dead));
+            self.recovery.note_death(owner_token(dead), now, orphans);
+        }
+        // Reclaim sweep: leases that expired by this second release their
+        // stranded subtree locks; stranded row locks carry their own
+        // expiry (`strand_locks`) and need no touch once it passes. The
+        // orphans themselves were already classified at the doom site.
+        for r in self.recovery.drain_due(now) {
+            for it in &r.intents {
+                if let Some(root) = it.subtree_root {
+                    self.store.release_subtree_lock(root);
+                }
+            }
+        }
         let _ = rng.next_u64();
 
         // Cost sampling: pay-per-use delta + simplified (provisioned).
@@ -822,6 +1059,37 @@ impl<S: BuildHasher + Default> MetadataService for LambdaFs<S> {
             tl.push(sample);
         }
         self.last_settle = now;
+    }
+
+    /// End-of-run flush: reclaim every death whose lease crosses the run
+    /// horizon so stranded locks are released before the auditor's
+    /// lock-leak probe. Orphan classification already happened at the
+    /// doom sites, so this touches only lock state.
+    fn finish(&mut self) {
+        for r in self.recovery.drain_all() {
+            for it in &r.intents {
+                if let Some(root) = it.subtree_root {
+                    self.store.release_subtree_lock(root);
+                } else if !it.durable {
+                    self.store.break_locks_for_crash(it.rows(), r.died_at);
+                }
+            }
+        }
+    }
+
+    fn audit_probe(&self, inode: InodeRef) -> Option<u64> {
+        Some(self.store.version(inode))
+    }
+
+    fn audit_lock_leaks(&self, at: Time) -> u32 {
+        // Stranded locks are released by the per-second sweep, so any
+        // lock still held past both the last completion and the last
+        // housekeeping tick is a genuine leak.
+        self.store.lock_leaks(at.max(self.last_settle))
+    }
+
+    fn audit_invalidations_acked(&self) -> bool {
+        true
     }
 
     fn metrics_mut(&mut self) -> &mut RunMetrics {
@@ -989,6 +1257,115 @@ mod tests {
         let m = sys.into_metrics();
         assert!(kills >= 3, "kills happened: {kills}");
         assert_eq!(m.completed_ops, 20_000, "workload completes despite failures");
+    }
+
+    #[test]
+    fn kill_storm_orphans_writes_and_conserves() {
+        // A kill every second in every deployment, with ACK chaos
+        // stretching coherence windows so in-flight writes reliably
+        // straddle the kill instants. Checks the full recovery ledger:
+        // orphans occur, every orphan is classified exactly once
+        // (conservation), the workload still completes, and the stranded
+        // locks are reclaimed.
+        let cfg = small_cfg();
+        let ns = small_ns(&cfg);
+        let mut rng = Rng::new(11);
+        let sampler = HotspotSampler::new(&ns, 1.2, &mut rng);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(10, 1_500.0),
+            mix: OpMix::from_weights(&[
+                (OpKind::Read, 0.35),
+                (OpKind::Create, 0.40),
+                (OpKind::Delete, 0.20),
+                (OpKind::MvSubtree, 0.05),
+            ]),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.2,
+        };
+        let mut sys = LambdaFs::new(cfg, ns.clone(), 64, 2);
+        sys.prewarm(2);
+        let mut kills = Vec::new();
+        for s in 1..9u32 {
+            for dep in 0..8u32 {
+                kills.push(chaos::KillEvent { second: s, deployment: dep });
+            }
+        }
+        let plan = ChaosPlan {
+            n_vms: 2,
+            kills,
+            acks: vec![chaos::AckChaos {
+                from_s: 0,
+                to_s: 10_000,
+                drop_prob: 0.5,
+                delay_ms: 300.0,
+            }],
+            ..ChaosPlan::none()
+        };
+        sys.install_chaos(&plan);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.finish();
+        let kills_run = sys.platform().stats().kills;
+        assert!(kills_run >= 8, "storm actually killed NameNodes: {kills_run}");
+        let (deaths, sweeps) = sys.recovery_counts();
+        assert_eq!(deaths, sweeps, "every detected death is swept");
+        assert!(deaths >= kills_run, "kills are detected deaths");
+        // No stranded lock outlives recovery: probe far past the run.
+        assert_eq!(sys.store().lock_leaks(3_600 * time::SEC), 0, "no lock leaks");
+        assert_eq!(sys.store().open_intents(), 0, "no intent leaks after finish");
+        let m = sys.into_metrics();
+        assert!(m.orphaned_ops > 0, "kills orphan in-flight mutations");
+        assert_eq!(
+            m.orphaned_ops,
+            m.recovered_ops + m.aborted_ops,
+            "every orphan replays or aborts exactly once"
+        );
+        assert!(
+            m.locks_reclaimed >= m.aborted_ops,
+            "aborted intents strand (and reclaim) their row locks: {} vs {}",
+            m.locks_reclaimed,
+            m.aborted_ops
+        );
+        assert_eq!(m.completed_ops + m.gave_up, 15_000, "recovery loses no ops");
+        assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops, "outcome ledger conserved");
+        assert_eq!(m.audit_violations, 0, "the consistency auditor stays clean under the storm");
+    }
+
+    #[test]
+    fn no_kills_means_no_recovery_ledger() {
+        // The recovery machinery must be invisible without kills: zero
+        // orphans, zero recoveries, no open intents, no stranded locks.
+        let m = run_small_open(500.0, 10);
+        assert_eq!(m.orphaned_ops, 0);
+        assert_eq!(m.recovered_ops, 0);
+        assert_eq!(m.aborted_ops, 0);
+        assert_eq!(m.locks_reclaimed, 0);
+        assert_eq!(m.audit_violations, 0);
+    }
+
+    #[test]
+    fn intent_log_balances_on_clean_runs() {
+        let cfg = small_cfg();
+        let ns = small_ns(&cfg);
+        let mut rng = Rng::new(13);
+        let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(5, 500.0),
+            mix: OpMix::spotify(),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = LambdaFs::new(cfg, ns.clone(), 64, 2);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        let begun = sys.store().intents_begun();
+        let committed = sys.store().intents_committed();
+        assert!(begun > 0, "mutations write begin-intents");
+        // Give-ups abort their intents; everything else commits.
+        assert!(committed <= begun);
+        assert_eq!(sys.store().open_intents(), 0, "no intent left open");
     }
 
     #[test]

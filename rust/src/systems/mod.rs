@@ -119,6 +119,16 @@ pub struct Outcome {
     /// A gave-up completion carries the abandonment time, not a service
     /// time; drivers count it as a failed op, never as a completed one.
     pub gave_up: bool,
+    /// The op's serving instance was killed mid-commit and the op was
+    /// acked late by the recovery protocol (lease-expiry replay of a
+    /// durable orphaned intent — see `coherence::recovery`). The
+    /// completion time is the reclaim instant, not a service time.
+    pub recovered: bool,
+    /// Store row version this op observed (reads: the version served;
+    /// writes: the version committed). 0 = not applicable (mocks,
+    /// version-less systems) — the consistency auditor skips version
+    /// checks for such ops.
+    pub observed_version: u64,
 }
 
 impl Outcome {
@@ -133,6 +143,8 @@ impl Outcome {
             cost_us: 0,
             timeouts: 0,
             gave_up: false,
+            recovered: false,
+            observed_version: 0,
         }
     }
 }
@@ -223,6 +235,38 @@ pub trait MetadataService {
     /// Called at each 1-second boundary for metrics/cost sampling and
     /// platform housekeeping (reclaim, heartbeats).
     fn on_second(&mut self, second: usize);
+
+    /// End-of-run hook, called by the drivers (and the replayer) after
+    /// the last submission and before the auditor's finalize pass.
+    /// Systems with deferred work — λFS drains orphan reclaims whose
+    /// lease expires past the run horizon — flush it here. The default
+    /// is a no-op and must consume no RNG draws from the caller.
+    fn finish(&mut self) {}
+
+    /// Consistency-auditor probe: the final committed store version of
+    /// `inode`, or `None` if the system has no versioned store to probe
+    /// (mocks, journal-based baselines). Used by the auditor's
+    /// no-lost-acked-writes check at end of run.
+    fn audit_probe(&self, _inode: crate::namespace::InodeRef) -> Option<u64> {
+        None
+    }
+
+    /// Consistency-auditor probe: locks (row or subtree) still held past
+    /// `at` — the lock-leak-freedom check at end of run. Default 0 for
+    /// lock-free systems.
+    fn audit_lock_leaks(&self, _at: Time) -> u32 {
+        0
+    }
+
+    /// Whether this system acks cache invalidations before acking the
+    /// write (λFS' coherence protocol, §3.4). When true the auditor
+    /// additionally enforces global monotone reads: a read issued after
+    /// a write's ack must never observe an older version. Systems with
+    /// best-effort caches (HopsFS+Cache) return false and are only held
+    /// to per-client read-your-writes.
+    fn audit_invalidations_acked(&self) -> bool {
+        false
+    }
 
     /// Metrics sink.
     fn metrics_mut(&mut self) -> &mut RunMetrics;

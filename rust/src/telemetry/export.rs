@@ -4,16 +4,20 @@
 //! specification: a `traceEvents` array of counter events (`"ph": "C"`,
 //! one track per gauge, per-deployment live counts as stacked series)
 //! plus instant events (`"ph": "i"`, global scope) for instance kills,
-//! blackout windows, and scale-outs. Timestamps are virtual-run µs —
-//! the unit Perfetto expects — and events are emitted in non-decreasing
-//! `ts` order.
+//! the recovery sweeps that follow them (one per kill, at the kill
+//! boundary plus the recovery lease — when the reclamation protocol
+//! releases the dead instance's stranded locks), blackout windows, and
+//! scale-outs. Timestamps are virtual-run µs — the unit Perfetto
+//! expects — and events are emitted in non-decreasing `ts` order.
 //!
 //! Besides `traceEvents`, the object carries a `lambdafs` summary
 //! section (ignored by viewers, checked by
 //! `scripts/validate_trace_events.py`): per-phase latency totals and
 //! p50/p99 from `RunMetrics::phase_lat`, the end-to-end latency total,
-//! and op/fault counters — the conservation invariant
-//! `sum(phase_totals_us) == e2e_total_us` rides in the artifact itself.
+//! op/fault counters, and (v2) the crash-recovery ledger
+//! (orphaned/recovered/aborted/locks_reclaimed, conservation
+//! `orphaned_ops == recovered_ops + aborted_ops`) plus the consistency
+//! auditor's verdict — the invariants ride in the artifact itself.
 
 use std::fmt::Write as _;
 
@@ -31,8 +35,10 @@ struct Event {
 }
 
 /// Render `tl` (+ the run's phase ledger and the fault plan that ran)
-/// as Chrome trace-event JSON.
-pub fn chrome_trace_json(tl: &Timeline, m: &RunMetrics, plan: &ChaosPlan) -> String {
+/// as Chrome trace-event JSON. `lease_us` is the run's recovery lease
+/// (`store.recovery_lease_ms`), placing the per-kill recovery-sweep
+/// instants on the timeline.
+pub fn chrome_trace_json(tl: &Timeline, m: &RunMetrics, plan: &ChaosPlan, lease_us: u64) -> String {
     let mut events: Vec<Event> = Vec::new();
     let pid = 1u32;
 
@@ -73,6 +79,13 @@ pub fn chrome_trace_json(tl: &Timeline, m: &RunMetrics, plan: &ChaosPlan) -> Str
             "faults (cumulative)",
             &format!("\"timeouts\": {}, \"gave_up\": {}", s.timeouts, s.gave_up),
         );
+        counter(
+            &mut events,
+            pid,
+            ts,
+            "recovered ops (cumulative)",
+            &format!("\"recovered\": {}", s.recovered),
+        );
         // Scale-out instants: the live fleet grew since the last sample.
         let live = s.live_total();
         if let Some(prev) = prev_live {
@@ -89,10 +102,22 @@ pub fn chrome_trace_json(tl: &Timeline, m: &RunMetrics, plan: &ChaosPlan) -> Str
         prev_live = Some(live);
     }
 
-    // Fault-schedule instants from the chaos plan that ran.
+    // Fault-schedule instants from the chaos plan that ran. Every kill
+    // lands on the next second boundary and strands the victim's open
+    // intents until its lease expires — the "recovery sweep" instant
+    // marks when the reclamation protocol replays-or-aborts them and
+    // releases the stranded locks.
     for k in &plan.kills {
         let ts = k.second as u64 * time::SEC;
         instant(&mut events, pid, ts, "kill", &format!("\"deployment\": {}", k.deployment));
+        let sweep = (k.second as u64 + 1) * time::SEC + lease_us;
+        instant(
+            &mut events,
+            pid,
+            sweep,
+            "recovery sweep",
+            &format!("\"deployment\": {}", k.deployment),
+        );
     }
     for b in &plan.blackouts {
         let who = match b.deployment {
@@ -123,13 +148,19 @@ pub fn chrome_trace_json(tl: &Timeline, m: &RunMetrics, plan: &ChaosPlan) -> Str
 
     // The summary section: phase ledger + conservation data.
     s.push_str("  \"lambdafs\": {\n");
-    s.push_str("    \"schema\": \"lambdafs-trace-events-v1\",\n");
+    s.push_str("    \"schema\": \"lambdafs-trace-events-v2\",\n");
     let _ = writeln!(s, "    \"system\": \"{}\",", tl.system);
     let _ = writeln!(s, "    \"n_deployments\": {},", tl.n_deployments);
     let _ = writeln!(s, "    \"seconds\": {},", tl.samples.len());
     let _ = writeln!(s, "    \"completed_ops\": {},", m.completed_ops);
     let _ = writeln!(s, "    \"timeouts\": {},", m.timeouts);
     let _ = writeln!(s, "    \"gave_up\": {},", m.gave_up);
+    let _ = writeln!(s, "    \"orphaned_ops\": {},", m.orphaned_ops);
+    let _ = writeln!(s, "    \"recovered_ops\": {},", m.recovered_ops);
+    let _ = writeln!(s, "    \"aborted_ops\": {},", m.aborted_ops);
+    let _ = writeln!(s, "    \"locks_reclaimed\": {},", m.locks_reclaimed);
+    let _ = writeln!(s, "    \"audit_violations\": {},", m.audit_violations);
+    let _ = writeln!(s, "    \"recovery_lease_us\": {lease_us},");
     let _ = writeln!(s, "    \"kills\": {},", plan.kills.len());
     let _ = writeln!(s, "    \"blackouts\": {},", plan.blackouts.len());
     s.push_str("    \"phase_totals_us\": {");
@@ -219,6 +250,7 @@ mod tests {
                 cost_usd_bits: 0.001f64.to_bits(),
                 timeouts: 0,
                 gave_up: 0,
+                recovered: s as u64,
             });
         }
         tl
@@ -234,14 +266,22 @@ mod tests {
             n_vms: 2,
             ..ChaosPlan::none()
         };
-        let json = chrome_trace_json(&tl, &m, &plan);
+        let json = chrome_trace_json(&tl, &m, &plan, 3_000_000);
         assert!(json.contains("\"traceEvents\""));
         assert!(json.contains("\"ph\": \"C\""));
         assert!(json.contains("\"kill\""));
+        // One recovery-sweep instant per kill, one lease after the kill
+        // boundary, plus the cumulative recovered-ops counter track.
+        assert!(json.contains("\"recovery sweep\""));
+        assert!(json.contains("\"ts\": 5000000"), "sweep at (1+1)s + 3s lease");
+        assert!(json.contains("recovered ops (cumulative)"));
         // The fleet grew from 3 to 4 to 5 live: scale-out instants.
         assert!(json.contains("\"scale-out\""));
         assert!(json.contains("\"phase_totals_us\""));
         assert!(json.contains("\"e2e_total_us\""));
+        assert!(json.contains("\"orphaned_ops\""));
+        assert!(json.contains("\"audit_violations\""));
+        assert!(json.contains("\"lambdafs-trace-events-v2\""));
         // ts values appear in non-decreasing order in the rendered text.
         let mut last = 0u64;
         for part in json.split("\"ts\": ").skip(1) {

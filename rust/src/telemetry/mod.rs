@@ -59,18 +59,19 @@
 //! ## Binary timeline format
 //!
 //! ```text
-//! magic "LFTL", version 0x02
+//! magic "LFTL", version 0x03
 //! system    : varint len + utf8 bytes
 //! n_deps    : varint
 //! n_samples : varint
 //! sample    : second, len(live_per_dep) + each, warm, pool, completed,
 //!             backlog, cache_hits, cache_misses, cost_usd.to_bits(),
-//!             timeouts, gave_up          (all varint)
+//!             timeouts, gave_up, recovered          (all varint)
 //! ```
 //!
 //! Version 0x02 (PR 9) inserts the `pool` gauge (tier-ladder warm-pool
-//! occupancy) after `warm`; version 0x01 blobs are rejected, matching
-//! the strict-versioning stance of the chaos and trace codecs.
+//! occupancy) after `warm`; version 0x03 (PR 10) appends the `recovered`
+//! gauge (cumulative crash-recovered ops). Older versions are rejected,
+//! matching the strict-versioning stance of the chaos and trace codecs.
 //!
 //! Decode rejects trailing bytes and truncated varints, like the chaos
 //! and trace codecs.
@@ -255,6 +256,9 @@ pub struct TimelineSample {
     pub timeouts: u64,
     /// Cumulative abandoned ops.
     pub gave_up: u64,
+    /// Cumulative crash-recovered ops (durable orphaned intents replayed
+    /// with a late ack — 0 everywhere outside kill chaos).
+    pub recovered: u64,
 }
 
 impl TimelineSample {
@@ -276,6 +280,7 @@ impl TimelineSample {
             cost_usd_bits: sec.cost_usd.to_bits(),
             timeouts: m.timeouts,
             gave_up: m.gave_up,
+            recovered: m.recovered_ops,
         }
     }
 
@@ -305,7 +310,7 @@ pub struct Timeline {
 }
 
 const TIMELINE_MAGIC: &[u8; 4] = b"LFTL";
-const TIMELINE_VERSION: u8 = 2;
+const TIMELINE_VERSION: u8 = 3;
 
 impl Timeline {
     pub fn new(system: &str, n_deployments: u32) -> Timeline {
@@ -342,6 +347,7 @@ impl Timeline {
             put_varint(&mut out, s.cost_usd_bits);
             put_varint(&mut out, s.timeouts);
             put_varint(&mut out, s.gave_up);
+            put_varint(&mut out, s.recovered);
         }
         out
     }
@@ -386,6 +392,7 @@ impl Timeline {
                 cost_usd_bits: get_varint(bytes, &mut pos)?,
                 timeouts: get_varint(bytes, &mut pos)?,
                 gave_up: get_varint(bytes, &mut pos)?,
+                recovered: get_varint(bytes, &mut pos)?,
             });
         }
         if pos != bytes.len() {
@@ -444,6 +451,7 @@ fn merge_sample(mine: &mut TimelineSample, theirs: &TimelineSample) {
     .to_bits();
     mine.timeouts += theirs.timeouts;
     mine.gave_up += theirs.gave_up;
+    mine.recovered += theirs.recovered;
 }
 
 /// LEB128-style varint (7-bit groups, 0x80 continuation) — the same
@@ -537,6 +545,7 @@ mod tests {
             cost_usd_bits: 0.001_25f64.to_bits(),
             timeouts: 2,
             gave_up: 1,
+            recovered: 5,
         }
     }
 
@@ -590,6 +599,7 @@ mod tests {
         assert_eq!(a.samples[0].cache_hits, 1_800);
         assert_eq!(a.samples[0].timeouts, 4);
         assert_eq!(a.samples[0].gave_up, 2);
+        assert_eq!(a.samples[0].recovered, 10);
         assert!((a.samples[0].cost_usd() - 0.002_5).abs() < 1e-15);
         // Adopted tail: the shorter side contributes nothing there.
         assert_eq!(a.samples[4], sample(4));

@@ -14,9 +14,10 @@
 //! RNG draws, so an `observe` run is fingerprint-identical to the same
 //! run without telemetry (see `tests/determinism.rs`).
 
-use crate::chaos::{Blackout, ChaosPlan, KillEvent};
+use crate::chaos::{AckChaos, Blackout, ChaosPlan, KillEvent};
 use crate::figures::common::{self, Fixture, Scale};
 use crate::metrics::RunMetrics;
+use crate::sim::time;
 use crate::systems::{driver, LambdaFs, MetadataService};
 use crate::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
 
@@ -56,9 +57,33 @@ fn observe_plan(dur: usize, n_vms: u32) -> ChaosPlan {
     }
 }
 
+/// The `--storm` fault schedule (mirrors the scenario matrix's
+/// `kill-storm` mode): a kill in every deployment at every second
+/// boundary plus an invalidation-ack storm, so the exported trace shows
+/// the crash-recovery machinery — kill instants, the recovery sweeps
+/// one lease later, and the recovered-ops counter — under sustained
+/// churn rather than two isolated kills.
+fn storm_plan(dur: usize, n_vms: u32) -> ChaosPlan {
+    let end = (dur as u32).max(10);
+    ChaosPlan {
+        n_vms,
+        kills: (1..end)
+            .flat_map(|s| (0..4).map(move |d| KillEvent { second: s, deployment: d }))
+            .collect(),
+        acks: vec![AckChaos { from_s: 0, to_s: end, drop_prob: 0.35, delay_ms: 250.0 }],
+        ..ChaosPlan::none()
+    }
+}
+
 /// Run the instrumented λFS Spotify experiment at `scale`, seeded by
 /// `seed`, and render the trace.
 pub fn run(scale: Scale, seed: u64) -> ObserveReport {
+    run_mode(scale, seed, false)
+}
+
+/// [`run`] with a fault-plan selector: `storm` swaps the two-kill
+/// schedule for the kill-storm plan.
+pub fn run_mode(scale: Scale, seed: u64, storm: bool) -> ObserveReport {
     let vcpus = scale.vcpus(512.0);
     let x_t = scale.x_t(25_000.0);
     let Fixture { cfg, ns, sampler, mut rng } = common::fixture_seeded(scale, vcpus, seed);
@@ -78,7 +103,11 @@ pub fn run(scale: Scale, seed: u64) -> ObserveReport {
         namespace: crate::namespace::generate::NamespaceParams::default(),
         zipf_s: 1.3,
     };
-    let plan = observe_plan(scale.duration_s(), spec.n_vms);
+    let plan = if storm {
+        storm_plan(scale.duration_s(), spec.n_vms)
+    } else {
+        observe_plan(scale.duration_s(), spec.n_vms)
+    };
 
     let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
     sys.install_chaos(&plan);
@@ -96,7 +125,8 @@ pub fn run(scale: Scale, seed: u64) -> ObserveReport {
     let decoded = Timeline::decode(&bytes).expect("timeline self-decodes");
     debug_assert_eq!(decoded.fingerprint(), tl.fingerprint(), "binary round trip");
 
-    let json = chrome_trace_json(&decoded, &metrics, &plan);
+    let lease_us = time::from_ms(cfg.store.recovery_lease_ms);
+    let json = chrome_trace_json(&decoded, &metrics, &plan, lease_us);
     ObserveReport {
         json,
         timeline_bytes: bytes.len(),
@@ -144,6 +174,11 @@ impl ObserveReport {
             self.plan.kills.len(),
             self.plan.blackouts.len()
         );
+        println!(
+            "  recovery: {} orphaned = {} recovered + {} aborted; {} locks reclaimed, \
+             {} audit violations",
+            m.orphaned_ops, m.recovered_ops, m.aborted_ops, m.locks_reclaimed, m.audit_violations
+        );
     }
 }
 
@@ -156,12 +191,29 @@ mod tests {
         let report = run(Scale(0.005), 7);
         assert!(report.samples > 0, "sampler captured seconds");
         assert!(report.json.contains("\"traceEvents\""));
-        assert!(report.json.contains("\"lambdafs-trace-events-v1\""));
+        assert!(report.json.contains("\"lambdafs-trace-events-v2\""));
         assert!(report.json.contains("\"kill\""), "fault instants exported");
+        assert!(report.json.contains("\"recovery sweep\""), "one sweep per kill");
         // The invariant the validator re-checks on the artifact.
         let m = &report.metrics;
         let phase_total: u64 = Phase::ALL.iter().map(|&p| m.phase_hist(p).sum_us()).sum();
         assert_eq!(phase_total, m.all_lat.sum_us(), "phase sums conserve e2e latency");
+        // Recovery conservation rides in the summary of every artifact.
+        assert_eq!(m.orphaned_ops, m.recovered_ops + m.aborted_ops);
+        assert_eq!(m.audit_violations, 0, "observe run audits clean");
+    }
+
+    #[test]
+    fn observe_storm_is_deterministic_and_audits_clean() {
+        let a = run_mode(Scale(0.005), 7, true);
+        let b = run_mode(Scale(0.005), 7, true);
+        assert_eq!(a.json, b.json, "storm runs are seed-deterministic");
+        assert!(a.plan.kills.len() > 10, "storm kills every second");
+        assert!(!a.plan.acks.is_empty(), "storm disrupts the ack plane");
+        let m = &a.metrics;
+        assert_eq!(m.orphaned_ops, m.recovered_ops + m.aborted_ops);
+        assert_eq!(m.audit_violations, 0, "recovery never corrupts client-visible state");
+        assert!(m.orphaned_ops > 0, "sustained kills orphan in-flight writes");
     }
 
     #[test]

@@ -101,6 +101,26 @@ impl<S: MetadataService> MetadataService for Recorder<S> {
         self.inner.on_second(second);
     }
 
+    // Crash-recovery flush and the consistency-auditor probes pass
+    // through, so a recorded run is recovered and audited exactly like
+    // a direct one (the round-trip fingerprint contract covers the new
+    // recovery/audit counters too).
+    fn finish(&mut self) {
+        self.inner.finish();
+    }
+
+    fn audit_probe(&self, inode: crate::namespace::InodeRef) -> Option<u64> {
+        self.inner.audit_probe(inode)
+    }
+
+    fn audit_lock_leaks(&self, at: crate::sim::Time) -> u32 {
+        self.inner.audit_lock_leaks(at)
+    }
+
+    fn audit_invalidations_acked(&self) -> bool {
+        self.inner.audit_invalidations_acked()
+    }
+
     fn metrics_mut(&mut self) -> &mut RunMetrics {
         self.inner.metrics_mut()
     }

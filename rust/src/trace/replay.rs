@@ -32,6 +32,7 @@
 //! system; each replayed system applies its own rollover. Synthetic
 //! traces carry pure slots by construction.
 
+use crate::audit::Auditor;
 use crate::metrics::RunMetrics;
 use crate::sim::Time;
 use crate::systems::{driver, MetadataService, Request};
@@ -54,6 +55,10 @@ pub fn replay<S: MetadataService>(sys: &mut S, trace: &Trace, rng: &mut Rng) {
     }
     let n_clients = trace.meta.n_clients.max(1) as usize;
     let mut ready: Vec<Time> = vec![0; n_clients];
+    // Replayed runs are audited exactly like driven ones (the auditor is
+    // pure bookkeeping — zero draws, zero timing perturbation — so the
+    // round-trip fingerprint equality is unaffected).
+    let mut auditor = Auditor::new(sys.audit_invalidations_acked());
     for ev in &trace.events {
         match *ev {
             TraceEvent::Op { at, client, op } => {
@@ -61,6 +66,7 @@ pub fn replay<S: MetadataService>(sys: &mut S, trace: &Trace, rng: &mut Rng) {
                 let issue = at.max(ready[c]);
                 let done = sys.submit(Request::scheduled(at, issue, client, &op), rng);
                 ready[c] = done.done;
+                auditor.observe(client, &op, issue, &done);
                 // The drivers' shared fold: latency + throughput + the
                 // outcome ledger, always recorded together.
                 driver::record(sys, issue, &done, op.kind.is_write());
@@ -71,6 +77,7 @@ pub fn replay<S: MetadataService>(sys: &mut S, trace: &Trace, rng: &mut Rng) {
             }
         }
     }
+    driver::finish_audited(sys, &mut auditor);
 }
 
 /// Convenience: replay into an owned system and return its metrics.

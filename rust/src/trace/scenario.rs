@@ -11,6 +11,10 @@
 //!   here, pinned in `rust/tests/determinism.rs`).
 //! * `ml-pipeline` — FalconFS-style epoch-structured training reads.
 //! * `container-churn` — CFS-style deep-path create/stat/unlink churn.
+//! * `dir-reorg` — namespace maintenance: live-half file churn plus a
+//!   trickle of archive-half subtree reorganizations (§5.4 ops). Its
+//!   wide subtree serve windows carry the `kill-storm` chaos mode, the
+//!   matrix's crash-recovery stressor.
 //!
 //! Systems: λFS plus the HopsFS, HopsFS+Cache, and CephFS baselines, all
 //! fed the byte-identical op stream through [`super::replay`]. Every RNG
@@ -20,7 +24,7 @@
 use std::fmt::Write as _;
 
 use crate::baselines::{CephFs, HopsFs};
-use crate::chaos::{Blackout, ChaosPlan, DelayWindow, KillEvent, Partition, StragglerBurst};
+use crate::chaos::{AckChaos, Blackout, ChaosPlan, DelayWindow, KillEvent, Partition, StragglerBurst};
 use crate::config::SystemConfig;
 use crate::figures::common::{print_table, Scale};
 use crate::metrics::RunMetrics;
@@ -36,7 +40,7 @@ use crate::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
 use super::format::{Trace, TraceMeta};
 use super::record::Recorder;
 use super::replay::{replay, replay_into};
-use super::synth::{self, ContainerChurnSpec, MlPipelineSpec};
+use super::synth::{self, ContainerChurnSpec, DirReorgSpec, MlPipelineSpec};
 
 /// JSON schema identifier (validated in CI). v2: cells gained the
 /// outcome columns (cold_starts/warm_ops/cache_hits/cache_misses/
@@ -65,18 +69,33 @@ use super::synth::{self, ContainerChurnSpec, MlPipelineSpec};
 /// default keeps every cold start on the ephemeral rung). Default-policy
 /// cells keep their v5 fingerprints: ladder draws live on a dedicated
 /// stream, so arming the axis perturbs no reactive cell.
-pub const SCHEMA: &str = "lambdafs-scenarios-v6";
+/// v7: crash-consistent recovery — the `dir-reorg` workload joined the
+/// matrix (subtree-heavy namespace maintenance) and carries the new
+/// `kill-storm` chaos mode (kills every second on every deployment plus
+/// an invalidation-ack storm), and cells gained the recovery/audit
+/// columns `orphaned_ops`/`recovered_ops`/`aborted_ops`/
+/// `locks_reclaimed` (conservation: orphaned == recovered + aborted)
+/// plus `audit_violations` (the always-on consistency auditor's
+/// verdict; CI requires 0 on every cell). No-chaos cells keep their v6
+/// fingerprints: recovery draws live on a dedicated stream and the
+/// auditor is pure bookkeeping.
+pub const SCHEMA: &str = "lambdafs-scenarios-v7";
 
 /// Systems every workload runs against.
 pub const SYSTEMS: [&str; 4] = ["lambdafs", "hopsfs", "hopsfs+cache", "cephfs"];
 
-/// The chaos axis: seeded fault plans the Spotify trace is replayed
-/// under, against every system. `kills` stresses λFS's instance churn
-/// (baselines have no instances to kill); `partition` severs two
-/// VM↔deployment legs for the rest of the run (timeouts, then give-ups);
-/// `delay-storm` composes degraded links, a straggler burst, and a short
-/// deployment blackout (timeouts that recover).
-pub const CHAOS_MODES: [&str; 3] = ["kills", "partition", "delay-storm"];
+/// The chaos axis: seeded fault plans replayed against every system.
+/// The first three ride the Spotify trace — `kills` stresses λFS's
+/// instance churn (baselines have no instances to kill); `partition`
+/// severs two VM↔deployment legs for the rest of the run (timeouts,
+/// then give-ups); `delay-storm` composes degraded links, a straggler
+/// burst, and a short deployment blackout (timeouts that recover).
+/// `kill-storm` (v7) rides the subtree-heavy `dir-reorg` trace instead:
+/// kills every second on every deployment plus an invalidation-ack
+/// storm, so λFS's wide subtree serve windows straddle kill boundaries
+/// and the crash-recovery protocol (intent replay, abort, lock
+/// reclamation) is exercised on every run.
+pub const CHAOS_MODES: [&str; 4] = ["kills", "partition", "delay-storm", "kill-storm"];
 
 /// The provisioning-policy axis (v6): λFS-only replays of the bursty
 /// synthetic workloads with the cold-start tier ladder armed.
@@ -122,6 +141,19 @@ pub struct ScenarioCell {
     pub timeouts: u64,
     /// Ops abandoned after exhausting the retry budget.
     pub gave_up: u64,
+    /// Crash-recovery ledger (v7): ops whose serving instance died
+    /// mid-serve with a write-ahead intent open
+    /// (orphaned == recovered + aborted), how many were replayed from a
+    /// durable intent vs rolled back, and the row/subtree locks the
+    /// reclamation sweeps released.
+    pub orphaned_ops: u64,
+    pub recovered_ops: u64,
+    pub aborted_ops: u64,
+    pub locks_reclaimed: u64,
+    /// Always-on consistency auditor verdict (v7): lost acked writes +
+    /// read-your-writes violations + stale reads + leaked locks. CI
+    /// fails the artifact if any cell reports a nonzero count.
+    pub audit_violations: u64,
     /// The phase of the span ledger contributing the most total latency
     /// (`"-"` if the ledger is empty), its p99 in µs, and the
     /// queue-wait / cold-start fractions of total phase time (v4).
@@ -236,23 +268,31 @@ pub fn run_matrix_sharded(scale: f64, seed: u64, smoke: bool, shards: u32) -> Sc
                     cells.push(make_cell("lambdafs", name, "none", mode, sc, &m, shards, wall_s));
                 }
             }
-            // The chaos axis: replay the *same* Spotify op stream under
-            // each fault plan — the plan rides in the trace header, so
-            // these cells exercise the exact path a recorded chaotic
-            // trace replays through. No record_fp assertion here: chaos
-            // runs diverge from the clean recording by design.
-            if name == "spotify-replay" {
-                for mode in CHAOS_MODES {
-                    let mut chaotic = trace.clone();
-                    chaotic.chaos = chaos_plan(mode, trace.duration_s() as u32);
-                    for system in SYSTEMS {
-                        let label = format!("{name}/{mode}");
-                        let (m, wall_s) =
-                            run_cell(system, &label, &chaotic, &ns, sc, seed, shards, "reactive");
-                        cells.push(make_cell(
-                            system, name, mode, "reactive", sc, &m, shards, wall_s,
-                        ));
-                    }
+            // The chaos axis: replay the *same* op stream under each
+            // fault plan — the plan rides in the trace header, so these
+            // cells exercise the exact path a recorded chaotic trace
+            // replays through. No record_fp assertion here: chaos runs
+            // diverge from the clean recording by design. Spotify
+            // carries the three original modes; the subtree-heavy
+            // dir-reorg trace carries kill-storm, whose wide serve
+            // windows make crash-recovery outcomes (orphaned →
+            // recovered/aborted) statistically certain even at smoke
+            // scale.
+            let modes: &[&'static str] = match name {
+                "spotify-replay" => &["kills", "partition", "delay-storm"],
+                "dir-reorg" => &["kill-storm"],
+                _ => &[],
+            };
+            for &mode in modes {
+                let mut chaotic = trace.clone();
+                chaotic.chaos = chaos_plan(mode, trace.duration_s() as u32);
+                for system in SYSTEMS {
+                    let label = format!("{name}/{mode}");
+                    let (m, wall_s) =
+                        run_cell(system, &label, &chaotic, &ns, sc, seed, shards, "reactive");
+                    cells.push(make_cell(
+                        system, name, mode, "reactive", sc, &m, shards, wall_s,
+                    ));
                 }
             }
         }
@@ -351,6 +391,11 @@ fn make_cell(
         retries: m.total_retries(),
         timeouts: m.timeouts,
         gave_up: m.gave_up,
+        orphaned_ops: m.orphaned_ops,
+        recovered_ops: m.recovered_ops,
+        aborted_ops: m.aborted_ops,
+        locks_reclaimed: m.locks_reclaimed,
+        audit_violations: m.audit_violations,
         dominant_phase: m.dominant_phase().map(Phase::name).unwrap_or("-"),
         p99_us: m.dominant_phase().map(|p| m.phase_hist(p).p99()).unwrap_or(0.0),
         queue_share: m.phase_share(Phase::Queue),
@@ -389,6 +434,27 @@ fn chaos_plan(mode: &str, duration_s: u32) -> ChaosPlan {
             ],
             ..ChaosPlan::none()
         },
+        // The crash-recovery stressor (v7): kill an instance in *every*
+        // deployment at *every* second boundary, and storm the
+        // invalidation-ack plane (drops + delay) so coherence rounds —
+        // and with them the subtree serve windows of the dir-reorg
+        // trace — stretch across kill boundaries. Doomed subtree ops
+        // exercise the durable-intent replay path (`recovered`), doomed
+        // narrow writes mostly abort; both flow into the
+        // orphaned == recovered + aborted conservation law CI checks.
+        "kill-storm" => ChaosPlan {
+            n_vms: 8,
+            kills: (1..end)
+                .flat_map(|s| (0..4).map(move |d| KillEvent { second: s, deployment: d }))
+                .collect(),
+            acks: vec![AckChaos {
+                from_s: 0,
+                to_s: end,
+                drop_prob: 0.35,
+                delay_ms: 250.0,
+            }],
+            ..ChaosPlan::none()
+        },
         // Degraded links + a straggler burst + a short blackout of one
         // deployment: timeouts that recover rather than give up.
         "delay-storm" => ChaosPlan {
@@ -410,6 +476,7 @@ fn build_traces(sc: f64, seed: u64) -> Vec<(&'static str, Trace, Option<u64>)> {
         ("spotify-replay", spotify, Some(record_fp)),
         ("ml-pipeline", ml_trace(sc, seed), None),
         ("container-churn", container_trace(sc, seed), None),
+        ("dir-reorg", dir_reorg_trace(sc, seed), None),
     ]
 }
 
@@ -472,6 +539,22 @@ fn ml_trace(sc: f64, seed: u64) -> Trace {
     let ns = meta.regenerate();
     let mut rng = Rng::new(seed ^ fnv1a64(b"scenario/ml-pipeline-gen"));
     synth::ml_pipeline(&MlPipelineSpec::at_scale(sc), &ns, meta, &mut rng)
+}
+
+/// Namespace-maintenance shape: a balanced hierarchy whose upper id
+/// half is the "archive" area the subtree reorganizations sweep.
+fn dir_reorg_trace(sc: f64, seed: u64) -> Trace {
+    let scale = Scale(sc);
+    let params = NamespaceParams {
+        n_dirs: scale.dirs(),
+        files_per_dir: 32,
+        max_depth: 6,
+        zipf_s: 1.1,
+    };
+    let meta = TraceMeta::new("dir-reorg", seed, &params, scale.clients(1024), 8);
+    let ns = meta.regenerate();
+    let mut rng = Rng::new(seed ^ fnv1a64(b"scenario/dir-reorg-gen"));
+    synth::dir_reorg(&DirReorgSpec::at_scale(sc), &ns, meta, &mut rng)
 }
 
 /// CFS-style container namespace: deep, skinny hierarchy.
@@ -672,6 +755,9 @@ impl ScenarioReport {
                     c.retries.to_string(),
                     c.timeouts.to_string(),
                     c.gave_up.to_string(),
+                    format!("{}/{}/{}", c.orphaned_ops, c.recovered_ops, c.aborted_ops),
+                    c.locks_reclaimed.to_string(),
+                    c.audit_violations.to_string(),
                     c.dominant_phase.to_string(),
                     format!("{:.0}", c.p99_us),
                     format!("{:.1}", c.queue_share * 100.0),
@@ -687,8 +773,8 @@ impl ScenarioReport {
             &[
                 "workload", "chaos", "policy", "scale", "system", "ops", "avg_tput",
                 "peak_tput", "p50_ms", "p99_ms", "cost_$", "cold", "pool/rst/eph", "hit_%",
-                "retries", "t_out", "gaveup", "dom_phase", "dom_p99_us", "queue_%", "cold_%",
-                "shards", "wall_s", "fp",
+                "retries", "t_out", "gaveup", "orph/rec/abrt", "lk_rec", "audit", "dom_phase",
+                "dom_p99_us", "queue_%", "cold_%", "shards", "wall_s", "fp",
             ],
             &rows,
         );
@@ -740,6 +826,8 @@ impl ScenarioReport {
                  \"ephemeral_boots\": {}, \"cache_hits\": {}, \
                  \"cache_misses\": {}, \"cache_hit_ratio\": {:.6}, \"retries\": {}, \
                  \"timeouts\": {}, \"gave_up\": {}, \
+                 \"orphaned_ops\": {}, \"recovered_ops\": {}, \"aborted_ops\": {}, \
+                 \"locks_reclaimed\": {}, \"audit_violations\": {}, \
                  \"dominant_phase\": \"{}\", \"p99_us\": {:.1}, \
                  \"queue_share\": {:.6}, \"cold_share\": {:.6}, \
                  \"shards\": {}, \"wall_s\": {:.3}, \
@@ -767,6 +855,11 @@ impl ScenarioReport {
                 c.retries,
                 c.timeouts,
                 c.gave_up,
+                c.orphaned_ops,
+                c.recovered_ops,
+                c.aborted_ops,
+                c.locks_reclaimed,
+                c.audit_violations,
                 c.dominant_phase,
                 c.p99_us,
                 c.queue_share,
@@ -798,13 +891,14 @@ mod tests {
     #[test]
     fn smoke_matrix_deterministic() {
         let a = run_matrix(0.005, 7, true);
-        // 4 systems × (3 workloads + spotify × 3 chaos modes) + the
-        // λFS-only policy axis on the 2 bursty workloads × 2 modes.
+        // 4 systems × (4 workloads + spotify × 3 chaos modes + dir-reorg
+        // × kill-storm) + the λFS-only policy axis on the 2 bursty
+        // workloads × 2 modes.
         assert_eq!(
             a.cells.len(),
-            SYSTEMS.len() * (3 + CHAOS_MODES.len()) + 2 * POLICY_MODES.len()
+            SYSTEMS.len() * (4 + 3 + 1) + 2 * POLICY_MODES.len()
         );
-        assert_eq!(a.workloads.len(), 3);
+        assert_eq!(a.workloads.len(), 4);
         for c in &a.cells {
             assert!(c.completed_ops > 0, "{}/{} empty", c.system, c.workload);
             assert!(c.p50_ms > 0.0 && c.p99_ms >= c.p50_ms);
@@ -842,6 +936,23 @@ mod tests {
                 assert_eq!(c.restores, 0, "{}/{} restore rung off", c.system, c.workload);
             }
             assert!(c.cache_hits + c.cache_misses <= c.completed_ops);
+            // v7 crash-recovery conservation, every cell: every orphan
+            // is either replayed from a durable intent or rolled back.
+            assert_eq!(
+                c.orphaned_ops,
+                c.recovered_ops + c.aborted_ops,
+                "{}/{}/{} orphan conservation",
+                c.system,
+                c.workload,
+                c.chaos
+            );
+            // The always-on consistency auditor holds everywhere —
+            // chaos, recovery, and policy cells included.
+            assert_eq!(
+                c.audit_violations, 0,
+                "{}/{}/{} audit violations",
+                c.system, c.workload, c.chaos
+            );
             // v4 span-ledger columns: every real-system cell stamps
             // phases, so the ledger is never empty and the shares are
             // proper fractions.
@@ -853,6 +964,14 @@ mod tests {
             if c.chaos == "none" {
                 assert_eq!(c.timeouts, 0, "{}/{} timeouts without chaos", c.system, c.workload);
                 assert_eq!(c.gave_up, 0, "{}/{} give-ups without chaos", c.system, c.workload);
+                // No kills → no orphans: the recovery machinery is
+                // invisible outside chaos (fingerprint-preserving).
+                assert_eq!(c.orphaned_ops, 0, "{}/{} orphans without chaos", c.system, c.workload);
+                assert_eq!(
+                    c.locks_reclaimed, 0,
+                    "{}/{} reclaims without chaos",
+                    c.system, c.workload
+                );
             }
             // v5: the default matrix is the sequential engine, whose
             // wall_s column is a constant so artifacts stay
@@ -886,6 +1005,21 @@ mod tests {
             let d = a.chaos_cell(sys, "delay-storm", 0.005).unwrap();
             assert!(d.timeouts > 0, "{sys}/delay-storm saw no timeouts");
         }
+        // The kill-storm cell: λFS instances die mid-serve every second,
+        // so the intent log orphans ops and the recovery protocol both
+        // replays (durable subtree intents → late acks) and aborts
+        // (non-durable write intents → client retry) — with the stranded
+        // locks reclaimed by the lease sweeps. Baselines have no
+        // instances to kill: their kill-storm cells stay orphan-free.
+        let ks = a.chaos_cell("lambdafs", "kill-storm", 0.005).unwrap();
+        assert_eq!(ks.workload, "dir-reorg", "kill-storm rides the subtree workload");
+        assert!(ks.orphaned_ops > 0, "kill-storm orphaned no ops");
+        assert!(ks.recovered_ops > 0, "kill-storm replayed no durable intents");
+        assert!(ks.locks_reclaimed > 0, "kill-storm reclaimed no locks");
+        for sys in ["hopsfs", "hopsfs+cache", "cephfs"] {
+            let c = a.chaos_cell(sys, "kill-storm", 0.005).unwrap();
+            assert_eq!(c.orphaned_ops, 0, "{sys} has no instances to orphan ops on");
+        }
         let b = run_matrix(0.005, 7, true);
         for (x, y) in a.cells.iter().zip(&b.cells) {
             assert_eq!(
@@ -900,13 +1034,13 @@ mod tests {
         for sys in SYSTEMS {
             assert!(json.contains(sys));
         }
-        for w in ["spotify-replay", "ml-pipeline", "container-churn"] {
+        for w in ["spotify-replay", "ml-pipeline", "container-churn", "dir-reorg"] {
             assert!(json.contains(w));
         }
         for mode in CHAOS_MODES {
             assert!(json.contains(mode));
         }
-        assert!(json.contains("\"lambdafs-scenarios-v6\""));
+        assert!(json.contains("\"lambdafs-scenarios-v7\""));
         for key in [
             "\"dominant_phase\"",
             "\"p99_us\"",
@@ -919,6 +1053,11 @@ mod tests {
             "\"pool_hits\"",
             "\"restores\"",
             "\"ephemeral_boots\"",
+            "\"orphaned_ops\"",
+            "\"recovered_ops\"",
+            "\"aborted_ops\"",
+            "\"locks_reclaimed\"",
+            "\"audit_violations\"",
         ] {
             assert!(json.contains(key), "cell key {key} missing");
         }

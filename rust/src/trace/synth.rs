@@ -10,6 +10,14 @@
 //! * [`container_churn`] — a CFS-style (arXiv 1911.03001) container
 //!   platform: create/stat/unlink churn over deep path hierarchies with
 //!   Pareto-bursty arrivals (container cohort launches).
+//! * [`dir_reorg`] — a namespace-maintenance shape (§5.4 subtree
+//!   operations): steady small-op churn over the "live" half of the
+//!   namespace with a trickle of `mv -r` / `rm -r` reorganizations whose
+//!   roots come from the disjoint "archive" half. Subtree serve windows
+//!   are wide (prefix invalidation + batched store sweeps), which makes
+//!   this the scenario matrix's crash-recovery carrier: under a
+//!   kill-storm, doomed subtree ops reliably exercise the intent-log
+//!   replay path (`orphaned → recovered`).
 //!
 //! Generators emit a [`Trace`] directly — op slots spread uniformly
 //! within each second, clients round-robined, a `Second` marker per
@@ -230,6 +238,101 @@ pub fn container_churn(
     assemble(meta, ops_by_second)
 }
 
+/// Namespace-reorganization shape (subtree-heavy maintenance).
+#[derive(Clone, Debug)]
+pub struct DirReorgSpec {
+    pub duration_s: usize,
+    /// Steady small-op rate over the live half of the namespace.
+    pub ops_per_sec: f64,
+    /// Subtree reorganizations per second (archive-half roots).
+    pub reorgs_per_sec: f64,
+    /// Fraction of reorgs that are `MvSubtree` (rest are
+    /// `DeleteSubtree`).
+    pub mv_fraction: f64,
+}
+
+impl DirReorgSpec {
+    /// Scaled shape: `scale = 1.0` ≈ a 20k ops/s fleet with 40 subtree
+    /// reorganizations per second. The reorg floor keeps smoke-scale
+    /// kill-storm cells statistically meaningful: with dozens of wide
+    /// subtree windows per run, doomed-op recovery is a certainty, not a
+    /// coin flip.
+    pub fn at_scale(scale: f64) -> Self {
+        DirReorgSpec {
+            duration_s: ((90.0 * scale.sqrt()) as usize).clamp(20, 90),
+            ops_per_sec: (20_000.0 * scale).max(250.0),
+            reorgs_per_sec: (40.0 * scale).max(4.0),
+            mv_fraction: 0.8,
+        }
+    }
+}
+
+/// Generate a dir-reorg trace over `ns`.
+///
+/// The namespace is split by id: the lower half is the "live" area
+/// (create/stat/read churn), the upper half the "archive" area whose
+/// dirs are the subtree-op roots. The split keeps the plain (no-chaos)
+/// replay conflict-free by construction — file writes never land under
+/// an archive root, and archive roots are consumed from a pre-shuffled
+/// rotation so back-to-back reorgs target distinct subtrees (ancestor
+/// overlaps are possible but resolve within one retry backoff).
+pub fn dir_reorg(spec: &DirReorgSpec, ns: &Namespace, meta: TraceMeta, rng: &mut Rng) -> Trace {
+    let half = (ns.n_dirs() / 2).max(1) as u32;
+    let mut archive: Vec<DirId> = (half..ns.n_dirs() as u32).map(DirId).collect();
+    if archive.is_empty() {
+        archive.push(DirId(0));
+    }
+    rng.shuffle(&mut archive);
+    let mut next_root = 0usize;
+
+    let mut ops_by_second: Vec<Vec<Operation>> = Vec::with_capacity(spec.duration_s);
+    let (mut file_carry, mut reorg_carry) = (0.0f64, 0.0f64);
+    for _s in 0..spec.duration_s {
+        let want = spec.ops_per_sec.max(1.0) + file_carry;
+        let n_file = want.floor() as usize;
+        file_carry = want - n_file as f64;
+        let want = spec.reorgs_per_sec.max(0.0) + reorg_carry;
+        let n_reorg = want.floor() as usize;
+        reorg_carry = want - n_reorg as f64;
+
+        let mut ops = Vec::with_capacity(n_file + n_reorg);
+        for _ in 0..n_file {
+            let d = DirId(rng.below(half as u64) as u32);
+            let files = ns.dir(d).files;
+            let u = rng.f64();
+            let op = if u < 0.20 {
+                let fresh = files + rng.below(1 << 20) as u32;
+                Operation::single(OpKind::Create, InodeRef::file(d, fresh))
+            } else if u < 0.50 {
+                Operation::single(OpKind::Stat, sample_inode(ns, d, files, rng))
+            } else {
+                Operation::single(OpKind::Read, sample_inode(ns, d, files, rng))
+            };
+            ops.push(op);
+        }
+        // Interleave reorgs evenly through the second: their wide serve
+        // windows then sample the whole second, so boundary-crossing
+        // kill-storm dooms are not an artifact of slot placement.
+        let total = n_file + n_reorg;
+        for k in 0..n_reorg {
+            let root = archive[next_root % archive.len()];
+            next_root += 1;
+            let op = if rng.f64() < spec.mv_fraction {
+                // Archive subtree moved back into the live area.
+                let dest = DirId(rng.below(half as u64) as u32);
+                Operation::subtree(OpKind::MvSubtree, root, Some(dest))
+            } else {
+                Operation::subtree(OpKind::DeleteSubtree, root, None)
+            };
+            let pos = ((k as f64 + 0.5) / n_reorg as f64 * total as f64) as usize;
+            ops.insert(pos.min(ops.len()), op);
+        }
+        ops_by_second.push(ops);
+    }
+
+    assemble(meta, ops_by_second)
+}
+
 fn sample_inode(ns: &Namespace, d: DirId, files: u32, rng: &mut Rng) -> InodeRef {
     if files == 0 {
         InodeRef::dir(d)
@@ -357,6 +460,68 @@ mod tests {
     }
 
     #[test]
+    fn dir_reorg_shape() {
+        let ns = ml_ns();
+        let meta = TraceMeta::new("dir-reorg", 11, &NamespaceParams::default(), 32, 2);
+        let spec = DirReorgSpec {
+            duration_s: 10,
+            ops_per_sec: 200.0,
+            reorgs_per_sec: 5.0,
+            mv_fraction: 0.8,
+        };
+        let t = dir_reorg(&spec, &ns, meta, &mut Rng::new(7));
+        assert_eq!(t.duration_s(), 10);
+        let half = ns.n_dirs() as u32 / 2;
+        let (mut subtree, mut mvs, mut file_ops) = (0u64, 0u64, 0u64);
+        for ev in &t.events {
+            if let TraceEvent::Op { op, .. } = ev {
+                if op.kind.is_subtree() {
+                    subtree += 1;
+                    if op.kind == OpKind::MvSubtree {
+                        mvs += 1;
+                        // Moves land back in the live half.
+                        assert!(op.dest.unwrap().0 < half, "mv dest in live half");
+                    }
+                    // Roots come from the archive half only.
+                    assert!(op.target.dir.0 >= half, "reorg root in archive half");
+                } else {
+                    file_ops += 1;
+                    // File churn never touches the archive half, so plain
+                    // replays stay free of write × subtree-lock conflict.
+                    assert!(op.target.dir.0 < half, "file op in live half");
+                }
+            }
+        }
+        assert_eq!(subtree, 10 * 5, "reorg rate honored");
+        assert!(mvs > 0 && mvs < subtree, "both reorg kinds present");
+        assert_eq!(file_ops, 10 * 200, "file-op rate honored");
+    }
+
+    #[test]
+    fn dir_reorg_spreads_reorgs_within_seconds() {
+        // The interleave: with 4 reorgs/s their slots should land in all
+        // four quarters of a second, not cluster at its start.
+        let ns = ml_ns();
+        let meta = TraceMeta::new("dir-reorg", 11, &NamespaceParams::default(), 32, 2);
+        let spec = DirReorgSpec {
+            duration_s: 4,
+            ops_per_sec: 400.0,
+            reorgs_per_sec: 4.0,
+            mv_fraction: 0.8,
+        };
+        let t = dir_reorg(&spec, &ns, meta, &mut Rng::new(8));
+        let mut quarters = [0u64; 4];
+        for ev in &t.events {
+            if let TraceEvent::Op { at, op, .. } = ev {
+                if op.kind.is_subtree() {
+                    quarters[((at % time::SEC) * 4 / time::SEC) as usize] += 1;
+                }
+            }
+        }
+        assert!(quarters.iter().all(|&q| q > 0), "reorgs span the second: {quarters:?}");
+    }
+
+    #[test]
     fn generators_deterministic() {
         let ns = deep_ns();
         let meta = TraceMeta::new("container-churn", 12, &NamespaceParams::default(), 32, 2);
@@ -370,6 +535,12 @@ mod tests {
         let spec = MlPipelineSpec::at_scale(0.01);
         let a = ml_pipeline(&spec, &ns, meta.clone(), &mut Rng::new(4));
         let b = ml_pipeline(&spec, &ns, meta, &mut Rng::new(4));
+        assert_eq!(a.fingerprint(), b.fingerprint());
+
+        let meta = TraceMeta::new("dir-reorg", 11, &NamespaceParams::default(), 32, 2);
+        let spec = DirReorgSpec::at_scale(0.01);
+        let a = dir_reorg(&spec, &ns, meta.clone(), &mut Rng::new(6));
+        let b = dir_reorg(&spec, &ns, meta, &mut Rng::new(6));
         assert_eq!(a.fingerprint(), b.fingerprint());
     }
 

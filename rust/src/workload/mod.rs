@@ -24,6 +24,7 @@
 //! | recorded replay of any run above | `crate::trace::Recorder` | `lambdafs scenario`, `cargo run --example trace_replay` |
 //! | ML-training pipeline (epoch-structured hot-dir reads + checkpoint bursts) | FalconFS-style, `crate::trace::synth::ml_pipeline` | `lambdafs scenario` |
 //! | container-platform churn (deep-path create/stat/unlink, Pareto bursts) | CFS-style, `crate::trace::synth::container_churn` | `lambdafs scenario` |
+//! | directory reorganization (live-half file churn + archive-half subtree mv/delete) | crash-recovery stressor, `crate::trace::synth::dir_reorg` | `lambdafs scenario` |
 //!
 //! The scenario matrix sweeps (system × workload × scale) and writes
 //! `SCENARIOS.json`; see [`crate::trace::scenario`]. Since the
@@ -47,6 +48,21 @@
 //! [`crate::chaos::ChaosPlan`]s that ride in the trace header, so any
 //! recorded chaotic run replays bit-identically (pinned in
 //! `rust/tests/determinism.rs`).
+//!
+//! **Crash-recovery axis (schema v7):** the matrix replays the
+//! dir-reorg trace under `kill-storm` — a kill in every one of the
+//! first four deployments at every second boundary plus
+//! invalidation-ack chaos — against every system. Wide subtree serve
+//! windows crossing per-second kill boundaries guarantee orphaned ops,
+//! so λFS kill-storm cells must show the recovery machinery firing.
+//! Every cell (any chaos) carries five recovery columns —
+//! `orphaned_ops`, `recovered_ops`, `aborted_ops`, `locks_reclaimed`,
+//! `audit_violations` — with the intent-conservation law
+//! `orphaned_ops == recovered_ops + aborted_ops` and a hard
+//! `audit_violations == 0` gate enforced by the CI validator. See
+//! `docs/RECOVERY.md` for the protocol and the auditor's invariant
+//! catalogue, and `rust/tests/chaos_properties.rs` for the randomized
+//! fault-plan property sweep.
 //!
 //! **Provisioning-policy axis (schema v6):** the matrix additionally
 //! runs the bursty workloads (ml-pipeline, container-churn) against
@@ -85,15 +101,18 @@
 //!
 //! # Reading a Perfetto trace
 //!
-//! `lambdafs observe [--smoke] [--out trace.json]` runs the Spotify
-//! workload against λFS with the per-second timeline sampler armed and a
-//! small seeded fault schedule installed (two instance kills plus one
-//! deployment blackout, placed at fixed fractions of the run), then
-//! writes the run as Chrome trace-event JSON. Load the file at
-//! <https://ui.perfetto.dev> (or `chrome://tracing`); one trace second
-//! equals one sampled simulation second.
+//! `lambdafs observe [--smoke] [--storm] [--out trace.json]` runs the
+//! Spotify workload against λFS with the per-second timeline sampler
+//! armed and a small seeded fault schedule installed (two instance
+//! kills plus one deployment blackout, placed at fixed fractions of
+//! the run), then writes the run as Chrome trace-event JSON.
+//! `--storm` swaps in the dir-reorg workload under the kill-storm
+//! fault plan, so the crash-recovery machinery is visibly load-bearing
+//! in the trace. Load the file at <https://ui.perfetto.dev> (or
+//! `chrome://tracing`); one trace second equals one sampled simulation
+//! second.
 //!
-//! Eight counter tracks render the sampler's gauges:
+//! Nine counter tracks render the sampler's gauges:
 //!
 //! | track | meaning |
 //! |---|---|
@@ -105,26 +124,36 @@
 //! | `cache hit ratio (%)` | metadata-cache hit rate over the ops completed that second |
 //! | `cost rate ($/s)` | simulated spend rate (the cost model's running total, differenced per second) |
 //! | `faults (cumulative)` | running count of timeouts + give-ups; flat means the fault schedule isn't biting |
+//! | `recovered ops (cumulative)` | running count of orphaned ops replayed with a late ack; steps up one recovery lease after each kill boundary |
 //!
 //! Instant events (grey vertical carets, global scope) mark the fault
 //! schedule and the platform's reaction: `kill` for each scheduled
-//! instance kill, `blackout start` / `blackout end` bracketing a
-//! deployment blackout, and `scale-out` when the platform adds
-//! instances. Correlating an instant with the counter tracks around it
-//! is the intended reading: a `kill` should show `live instances`
-//! dropping, `backlog (ops)` bumping, and `throughput (ops/s)`
-//! recovering within a few seconds.
+//! instance kill, `recovery sweep` one lease after each kill boundary
+//! (the moment the reclamation protocol replays-or-aborts the dead
+//! instance's open intents and releases its stranded locks),
+//! `blackout start` / `blackout end` bracketing a deployment blackout,
+//! and `scale-out` when the platform adds instances. Correlating an
+//! instant with the counter tracks around it is the intended reading:
+//! a `kill` should show `live instances` dropping, `backlog (ops)`
+//! bumping, and `throughput (ops/s)` recovering within a few seconds.
 //!
 //! Beside `traceEvents`, the artifact carries a `lambdafs` summary
-//! section (schema `lambdafs-trace-events-v1`) holding the span layer's
-//! phase ledger: per-phase latency totals and p50/p99 for the seven
+//! section (schema `lambdafs-trace-events-v2`) holding the span layer's
+//! phase ledger — per-phase latency totals and p50/p99 for the seven
 //! phases (`queue`, `cold`, `net`, `exec`, `coherence`, `store`,
-//! `retry`), the dominant phase, and the end-to-end total. The ledger
-//! conserves: `sum(phase_totals_us) == e2e_total_us`, because the span
-//! cursor attributes every microsecond of every completed op to exactly
-//! one phase. `scripts/validate_trace_events.py` (run by CI on the
-//! smoke artifact) rejects any trace that violates this, has
-//! non-monotone timestamps, or is missing a counter track.
+//! `retry`), the dominant phase, and the end-to-end total — plus the
+//! crash-recovery ledger (`orphaned_ops`, `recovered_ops`,
+//! `aborted_ops`, `locks_reclaimed`, `audit_violations`,
+//! `recovery_lease_us`). Both ledgers conserve:
+//! `sum(phase_totals_us) == e2e_total_us` (the span cursor attributes
+//! every microsecond of every completed op to exactly one phase) and
+//! `orphaned_ops == recovered_ops + aborted_ops` (the intent log never
+//! loses an orphan). `scripts/validate_trace_events.py` (run by CI on
+//! both smoke artifacts, the storm one with `--expect-orphans`)
+//! rejects any trace that violates either law, reports auditor
+//! violations, has non-monotone timestamps, is missing a counter
+//! track, or whose `recovery sweep` instants don't sit exactly one
+//! lease past their kill boundaries.
 
 pub mod schedule;
 pub mod spec;

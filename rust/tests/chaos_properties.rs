@@ -1,0 +1,234 @@
+//! Randomized chaos-plan property sweep (PR 10): seeded random
+//! [`ChaosPlan`]s — kills, blackouts, partitions, delay windows,
+//! straggler bursts, and invalidation-ack chaos in arbitrary
+//! combinations — each driven through λFS, HopsFS+Cache, and CephFS.
+//!
+//! Whatever the plan throws, the bookkeeping invariants must hold:
+//!
+//! * **Op conservation** — `completed + gave_up == submitted`: no op is
+//!   lost or double-counted, however it died.
+//! * **Placement conservation** — `cold_starts + warm_ops == completed`
+//!   and the tier ledger `pool_hits + restores + ephemeral_boots ==
+//!   cold_starts`.
+//! * **Intent conservation** — `orphaned_ops == recovered_ops +
+//!   aborted_ops`: every intent opened by an instance that died mid-op
+//!   is either replayed (durable intent, late ack) or aborted and
+//!   retried — never silently dropped. Serverful baselines have no
+//!   instances to orphan ops on, so their recovery counters stay zero.
+//! * **Consistency** — the always-on auditor (`audit::Auditor`) reports
+//!   zero violations: no lost acked write, read-your-writes per client,
+//!   no stale read after an acked invalidation, and no leaked locks at
+//!   drain. A nonzero count under *any* plan is a correctness bug in
+//!   recovery, not a fault-injection artifact.
+//! * **Determinism** — the same seed and plan reproduce the run bit for
+//!   bit (`fingerprint` and `outcome_fingerprint`), chaos included.
+//!
+//! Plan 0 is not random: it is the kill-storm shape (a kill in every
+//! deployment at every second plus ack chaos), pinning that the sweep
+//! actually exercises the orphan/recovery path rather than sampling
+//! only quiet corners of the plan space.
+
+use lambda_fs::baselines::hopsfs::HopsFs;
+use lambda_fs::baselines::CephFs;
+use lambda_fs::chaos::{
+    AckChaos, Blackout, ChaosPlan, DelayWindow, KillEvent, Partition, StragglerBurst,
+};
+use lambda_fs::config::SystemConfig;
+use lambda_fs::metrics::RunMetrics;
+use lambda_fs::namespace::generate::{generate, HotspotSampler, NamespaceParams};
+use lambda_fs::namespace::Namespace;
+use lambda_fs::systems::{driver, LambdaFs, MetadataService};
+use lambda_fs::util::rng::Rng;
+use lambda_fs::workload::{OpMix, OpenLoopSpec, ThroughputSchedule};
+
+const DURATION_S: usize = 8;
+const RATE: f64 = 700.0;
+const N_CLIENTS: u32 = 64;
+const N_VMS: u32 = 2;
+const N_DEPLOYMENTS: u32 = 8;
+const N_PLANS: u64 = 6;
+
+/// The kill-storm shape (plan 0): a kill in every one of the first four
+/// deployments at every second boundary, under invalidation-ack chaos
+/// that stretches serve windows across those boundaries.
+fn storm_plan() -> ChaosPlan {
+    let end = DURATION_S as u32;
+    ChaosPlan {
+        n_vms: N_VMS,
+        kills: (1..end)
+            .flat_map(|s| (0..4).map(move |d| KillEvent { second: s, deployment: d }))
+            .collect(),
+        acks: vec![AckChaos { from_s: 0, to_s: end, drop_prob: 0.35, delay_ms: 250.0 }],
+        ..ChaosPlan::none()
+    }
+}
+
+/// Draw a random plan: each fault category appears with some
+/// probability, with random (bounded) windows and magnitudes.
+fn random_plan(rng: &mut Rng) -> ChaosPlan {
+    let end = DURATION_S as u32;
+    let mut plan = ChaosPlan::none();
+    plan.n_vms = N_VMS;
+    for _ in 0..rng.below(6) {
+        plan.kills.push(KillEvent {
+            second: 1 + rng.below(u64::from(end) - 1) as u32,
+            deployment: rng.below(u64::from(N_DEPLOYMENTS)) as u32,
+        });
+    }
+    if rng.chance(0.5) {
+        let from = rng.below(u64::from(end) - 2) as u32;
+        let dep = if rng.chance(0.7) {
+            Some(rng.below(u64::from(N_DEPLOYMENTS)) as u32)
+        } else {
+            None // coordinator blackout: writes stall
+        };
+        plan.blackouts.push(Blackout {
+            from_s: from,
+            to_s: from + 1 + rng.below(3) as u32,
+            deployment: dep,
+        });
+    }
+    if rng.chance(0.5) {
+        let from = rng.below(u64::from(end) - 1) as u32;
+        // Half the partitions heal, half hold to the end of the run.
+        let to = if rng.chance(0.5) { from + 1 + rng.below(3) as u32 } else { u32::MAX };
+        plan.partitions.push(Partition {
+            from_s: from,
+            to_s: to,
+            vm: rng.below(u64::from(N_VMS)) as u32,
+            deployment: rng.below(u64::from(N_DEPLOYMENTS)) as u32,
+        });
+    }
+    if rng.chance(0.5) {
+        plan.delays.push(DelayWindow {
+            from_s: 0,
+            to_s: end,
+            tcp_mult: 2.0 + rng.f64() * 10.0,
+            http_mult: 2.0 + rng.f64() * 10.0,
+        });
+    }
+    if rng.chance(0.5) {
+        plan.stragglers.push(StragglerBurst {
+            from_s: 0,
+            to_s: end,
+            prob: 0.05 + rng.f64() * 0.15,
+            factor: 10.0 + rng.f64() * 30.0,
+        });
+    }
+    if rng.chance(0.5) {
+        plan.acks.push(AckChaos {
+            from_s: 0,
+            to_s: end,
+            drop_prob: rng.f64() * 0.4,
+            delay_ms: rng.f64() * 300.0,
+        });
+    }
+    plan
+}
+
+fn fixture(seed: u64) -> (SystemConfig, Namespace, HotspotSampler) {
+    let mut cfg = SystemConfig::default();
+    cfg.seed = seed;
+    cfg.lambda_fs.n_deployments = N_DEPLOYMENTS;
+    let mut rng = Rng::new(cfg.seed);
+    let ns = generate(
+        &NamespaceParams { n_dirs: 384, files_per_dir: 24, ..Default::default() },
+        &mut rng,
+    );
+    let sampler = HotspotSampler::new(&ns, 1.3, &mut rng);
+    (cfg, ns, sampler)
+}
+
+fn spec() -> OpenLoopSpec {
+    OpenLoopSpec {
+        schedule: ThroughputSchedule::constant(DURATION_S, RATE),
+        mix: OpMix::spotify(),
+        n_clients: N_CLIENTS,
+        n_vms: N_VMS,
+        namespace: NamespaceParams::default(),
+        zipf_s: 1.3,
+    }
+}
+
+fn run_system<S, F>(mk: F, plan: &ChaosPlan, seed: u64) -> RunMetrics
+where
+    S: MetadataService,
+    F: Fn() -> S,
+{
+    let (_cfg, ns, sampler) = fixture(seed);
+    let mut sys = mk();
+    sys.install_chaos(plan);
+    let mut rng = Rng::new(seed ^ 0xc4a05);
+    driver::run_open_loop(&mut sys, &spec(), &ns, &sampler, &mut rng);
+    sys.into_metrics()
+}
+
+/// Assert every conservation law on one system's run under one plan.
+fn check_invariants(m: &RunMetrics, what: &str) {
+    let submitted = DURATION_S as u64 * RATE as u64;
+    assert_eq!(m.completed_ops + m.gave_up, submitted, "{what}: op conservation");
+    assert_eq!(m.failed_ops, m.gave_up, "{what}: give-ups are the only failures");
+    assert_eq!(m.cold_starts + m.warm_ops, m.completed_ops, "{what}: placement conservation");
+    assert_eq!(
+        m.pool_hits + m.restores + m.ephemeral_boots,
+        m.cold_starts,
+        "{what}: tier conservation"
+    );
+    assert_eq!(m.orphaned_ops, m.recovered_ops + m.aborted_ops, "{what}: intent conservation");
+    assert_eq!(m.audit_violations, 0, "{what}: consistency auditor found violations");
+}
+
+#[test]
+fn random_plans_conserve_and_audit_clean_all_systems() {
+    for plan_idx in 0..N_PLANS {
+        let mut plan_rng = Rng::new(0x91a75 ^ plan_idx);
+        let plan = if plan_idx == 0 { storm_plan() } else { random_plan(&mut plan_rng) };
+        let seed = 0x77aa ^ (plan_idx * 0x9e3779b9);
+
+        let (cfg, ns, _) = fixture(seed);
+
+        // λFS: the full recovery machinery is in play.
+        let mk_lfs = || LambdaFs::new(cfg.clone(), ns.clone(), N_CLIENTS, N_VMS);
+        let a = run_system(mk_lfs, &plan, seed);
+        let b = run_system(mk_lfs, &plan, seed);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "plan {plan_idx}: λFS diverged");
+        assert_eq!(
+            a.outcome_fingerprint(),
+            b.outcome_fingerprint(),
+            "plan {plan_idx}: λFS ledger diverged"
+        );
+        check_invariants(&a, &format!("plan {plan_idx} λFS"));
+        if plan_idx == 0 {
+            // The storm pin: the sweep reaches the orphan/recovery path.
+            assert!(a.orphaned_ops > 0, "storm plan orphaned nothing");
+            assert!(a.locks_reclaimed > 0, "storm plan reclaimed no locks");
+        }
+        if plan.kills.is_empty() {
+            assert_eq!(a.orphaned_ops, 0, "plan {plan_idx}: orphans without kills");
+            assert_eq!(a.locks_reclaimed, 0, "plan {plan_idx}: reclaims without kills");
+        }
+
+        // HopsFS+Cache and CephFS: serverful — same laws, zero orphans.
+        let mk_hops = || HopsFs::new(cfg.clone(), ns.clone(), 128.0, true);
+        let h = run_system(mk_hops, &plan, seed);
+        let h2 = run_system(mk_hops, &plan, seed);
+        assert_eq!(
+            h.outcome_fingerprint(),
+            h2.outcome_fingerprint(),
+            "plan {plan_idx}: HopsFS diverged"
+        );
+        check_invariants(&h, &format!("plan {plan_idx} HopsFS+Cache"));
+        assert_eq!(h.orphaned_ops, 0, "plan {plan_idx}: HopsFS has no instances to orphan");
+
+        let mk_ceph = || CephFs::new(cfg.clone(), ns.clone(), 128.0);
+        let ce = run_system(mk_ceph, &plan, seed);
+        let ce2 = run_system(mk_ceph, &plan, seed);
+        assert_eq!(
+            ce.outcome_fingerprint(),
+            ce2.outcome_fingerprint(),
+            "plan {plan_idx}: CephFS diverged"
+        );
+        check_invariants(&ce, &format!("plan {plan_idx} CephFS"));
+        assert_eq!(ce.orphaned_ops, 0, "plan {plan_idx}: CephFS has no instances to orphan");
+    }
+}

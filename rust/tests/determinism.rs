@@ -44,6 +44,16 @@
 //!    latencies from a dedicated `fork("tier-ladder")` stream, so the
 //!    caller's RNG sequence is byte-identical either way; predictive
 //!    prewarming is RNG-free and composes with record→replay.
+//! 8. **Crash recovery (PR 10, `coherence::recovery` + the NDB intent
+//!    log).** Recovery draws (retry backoffs) ride a dedicated
+//!    `fork("recovery")` stream, so kill-free runs are byte-identical
+//!    whatever `store.recovery_lease_ms` or `faas.checkpoint_ttl_s` say
+//!    — the machinery is invisible until an instance actually dies.
+//!    Kill-storm replays (the dir-reorg workload under per-second kills
+//!    + ack chaos) are deterministic in the seed, conserve the intent
+//!    ledger (`orphaned == recovered + aborted`), and keep the always-on
+//!    consistency auditor silent. See `tests/chaos_properties.rs` for
+//!    the randomized-plan property sweep.
 //!
 //! The fingerprint-domain history across PRs (which digests are
 //! comparable to which) is consolidated in `docs/DETERMINISM.md`.
@@ -64,7 +74,7 @@ use lambda_fs::sim::shard::{
 };
 use lambda_fs::sim::time;
 use lambda_fs::systems::{driver, LambdaFs, MetadataService};
-use lambda_fs::trace::synth::{self, ContainerChurnSpec};
+use lambda_fs::trace::synth::{self, ContainerChurnSpec, DirReorgSpec};
 use lambda_fs::trace::{replay, replay_into, Recorder, Trace, TraceEvent, TraceMeta};
 use lambda_fs::util::rng::Rng;
 use lambda_fs::workload::{ClosedLoopSpec, OpMix, OpenLoopSpec, ThroughputSchedule};
@@ -1406,6 +1416,124 @@ fn ladder_on_run_twice_fingerprint_identical() {
     assert!(a.ephemeral_boots > 0, "first boots pay the ephemeral rung");
     let c = run(4321);
     assert_ne!(a.fingerprint(), c.fingerprint(), "ladder digest insensitive to seed");
+}
+
+/// Crash-recovery pin 1: the recovery machinery is invisible on
+/// kill-free runs. Changing `store.recovery_lease_ms` or
+/// `faas.checkpoint_ttl_s` (ladder off) must not move a single bit of a
+/// default run — the reclamation sweep only acts on deaths, recovery
+/// backoffs ride their own forked stream, and checkpoint staleness only
+/// prices Restore-rung boots.
+#[test]
+fn recovery_config_invisible_without_kills() {
+    let base = run_lambdafs_open(1234);
+    assert_eq!(base.orphaned_ops, 0, "no kills, no orphans");
+    assert_eq!(base.locks_reclaimed, 0, "no kills, no stranded locks");
+    assert_eq!(base.audit_violations, 0, "healthy run audits clean");
+
+    let run_tweaked = |lease_ms: f64, ttl_s: f64| -> RunMetrics {
+        let (mut cfg, ns, sampler) = fixture(1234);
+        cfg.store.recovery_lease_ms = lease_ms;
+        cfg.faas.checkpoint_ttl_s = ttl_s;
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(8, 800.0),
+            mix: OpMix::spotify(),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+        let mut rng = Rng::new(cfg.seed ^ 0xd0);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    };
+    let m = run_tweaked(500.0, 0.5);
+    assert_eq!(base.fingerprint(), m.fingerprint(), "recovery knobs perturbed a clean run");
+    assert_eq!(base.outcome_fingerprint(), m.outcome_fingerprint(), "ledger diverged");
+}
+
+/// Crash-recovery pin 2: a kill-storm replay of the dir-reorg workload —
+/// the regime where instances die mid-op every second — is deterministic
+/// in the seed (plan in the trace header, chaos stream realigned),
+/// orphans real work, conserves the intent ledger, and audits clean.
+#[test]
+fn kill_storm_dir_reorg_replay_deterministic_and_conserving() {
+    fn run(seed: u64) -> RunMetrics {
+        let mut cfg = SystemConfig::default();
+        cfg.seed = seed;
+        cfg.lambda_fs.n_deployments = 8;
+        let params = NamespaceParams { n_dirs: 256, files_per_dir: 16, ..Default::default() };
+        let mut ns_rng = Rng::new(seed);
+        let ns = generate(&params, &mut ns_rng);
+        let spec = DirReorgSpec::at_scale(0.005); // 20 s, ~250 file ops/s, 4 reorgs/s
+        let meta = TraceMeta::new("dir-reorg-storm", seed, &params, 48, 2);
+        let mut trace_rng = Rng::new(seed ^ 0xd1e);
+        let mut trace = synth::dir_reorg(&spec, &ns, meta, &mut trace_rng);
+        let end = spec.duration_s as u32;
+        trace.chaos = ChaosPlan {
+            n_vms: 2,
+            kills: (1..end)
+                .flat_map(|s| (0..4).map(move |d| KillEvent { second: s, deployment: d }))
+                .collect(),
+            acks: vec![AckChaos { from_s: 0, to_s: end, drop_prob: 0.35, delay_ms: 250.0 }],
+            ..ChaosPlan::none()
+        };
+        // The plan rides the binary format with the ops.
+        let decoded = Trace::decode(&trace.encode()).expect("decode dir-reorg trace");
+        assert_eq!(trace, decoded);
+        replay_into(LambdaFs::new(cfg, ns, 48, 2), &decoded, &mut Rng::new(seed ^ 0x5eed))
+    }
+
+    let a = run(606);
+    let b = run(606);
+    assert_eq!(a.fingerprint(), b.fingerprint(), "kill-storm replays diverged");
+    assert_eq!(a.outcome_fingerprint(), b.outcome_fingerprint(), "storm ledgers diverged");
+    // The storm bites and the recovery protocol answers: orphans appear,
+    // every one is replayed or aborted, stranded locks come back, and
+    // the auditor never sees a lost acked write or stale read.
+    assert!(a.orphaned_ops > 0, "per-second kills orphan in-flight ops");
+    assert!(a.recovered_ops > 0, "durable intents replay with late acks");
+    assert!(a.locks_reclaimed > 0, "stranded locks are reclaimed");
+    assert_eq!(a.orphaned_ops, a.recovered_ops + a.aborted_ops, "intent conservation");
+    assert_eq!(a.audit_violations, 0, "recovery never corrupts visible state");
+    assert_eq!(a.cold_starts + a.warm_ops, a.completed_ops, "conservation under storm");
+    let c = run(909);
+    assert_ne!(a.fingerprint(), c.fingerprint(), "storm digest insensitive to seed");
+}
+
+/// Crash-recovery pin 3 (checkpoint aging): a ladder-on kill run with a
+/// tiny `checkpoint_ttl_s` — so any Restore-rung boot pays the staleness
+/// delta — stays deterministic in the seed and conserves both ledgers.
+#[test]
+fn checkpoint_aging_run_twice_identical() {
+    fn run(seed: u64) -> RunMetrics {
+        let (mut cfg, ns, sampler) = fixture(seed);
+        cfg.faas.tier_ladder = true;
+        cfg.faas.checkpoint_ttl_s = 0.5;
+        let spec = OpenLoopSpec {
+            schedule: ThroughputSchedule::constant(8, 800.0),
+            mix: OpMix::spotify(),
+            n_clients: 64,
+            n_vms: 2,
+            namespace: NamespaceParams::default(),
+            zipf_s: 1.3,
+        };
+        let mut sys = LambdaFs::new(cfg.clone(), ns.clone(), spec.n_clients, spec.n_vms);
+        for (i, s) in (1..8).step_by(2).enumerate() {
+            sys.schedule_kill(s, (i as u32) % 8);
+        }
+        let mut rng = Rng::new(cfg.seed ^ 0xd0);
+        driver::run_open_loop(&mut sys, &spec, &ns, &sampler, &mut rng);
+        sys.into_metrics()
+    }
+    let a = run(1234);
+    let b = run(1234);
+    assert_eq!(a.fingerprint(), b.fingerprint(), "aged-checkpoint runs diverged");
+    assert_eq!(a.outcome_fingerprint(), b.outcome_fingerprint(), "aged ledgers diverged");
+    assert_eq!(a.pool_hits + a.restores + a.ephemeral_boots, a.cold_starts, "tier conservation");
+    assert_eq!(a.orphaned_ops, a.recovered_ops + a.aborted_ops, "intent conservation");
+    assert_eq!(a.audit_violations, 0, "aging never corrupts visible state");
 }
 
 /// Tier-ladder pin 3: the predictive prewarming policy is RNG-free, so a

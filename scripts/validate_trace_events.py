@@ -10,20 +10,30 @@ Checks the three contracts the exporter promises:
 2. **Track coverage** — every gauge of the per-second timeline sampler
    appears as a counter track, and the fault schedule that ran shows up
    as instant events (`kill`, `blackout start/end`) matching the counts
-   in the summary section.
+   in the summary section. Every kill is followed by exactly one
+   `recovery sweep` instant, one recovery lease after the kill boundary
+   — the moment the reclamation protocol replays-or-aborts the dead
+   instance's open intents and releases its stranded locks.
 3. **Conservation** — the `lambdafs` summary section's per-phase latency
-   totals sum exactly to the end-to-end latency total: the span layer
+   totals sum exactly to the end-to-end latency total (the span layer
    attributed every microsecond of every completed op to exactly one
-   phase.
+   phase), the crash-recovery ledger conserves
+   (`orphaned_ops == recovered_ops + aborted_ops`), and the always-on
+   consistency auditor reports zero violations — on any artifact, chaos
+   or not.
 
-Usage: validate_trace_events.py <trace.json>
-Exits non-zero with a message on the first violated contract.
+Usage: validate_trace_events.py <trace.json> [--expect-orphans]
+`--expect-orphans` additionally requires orphaned_ops > 0 and
+recovered_ops > 0 (for kill-storm artifacts, where the recovery
+machinery must visibly fire). Exits non-zero with a message on the
+first violated contract.
 """
 
 import json
 import sys
 
-SCHEMA = "lambdafs-trace-events-v1"
+SCHEMA = "lambdafs-trace-events-v2"
+SEC_US = 1_000_000
 PHASES = ["queue", "cold", "net", "exec", "coherence", "store", "retry"]
 COUNTER_TRACKS = [
     "live instances",
@@ -34,6 +44,7 @@ COUNTER_TRACKS = [
     "cache hit ratio (%)",
     "cost rate ($/s)",
     "faults (cumulative)",
+    "recovered ops (cumulative)",
 ]
 
 
@@ -47,7 +58,7 @@ def check(cond, msg):
         fail(msg)
 
 
-def main(path):
+def main(path, expect_orphans=False):
     with open(path) as f:
         doc = json.load(f)
 
@@ -58,6 +69,7 @@ def main(path):
     last_ts = 0
     counter_names = set()
     instant_counts = {}
+    instant_ts = {}
     for i, ev in enumerate(events):
         check(isinstance(ev.get("name"), str) and ev["name"], f"event {i}: no name")
         ph = ev.get("ph")
@@ -80,6 +92,7 @@ def main(path):
         else:  # instant
             check(ev.get("s") == "g", f"instant {ev['name']!r}: scope {ev.get('s')!r}")
             instant_counts[ev["name"]] = instant_counts.get(ev["name"], 0) + 1
+            instant_ts.setdefault(ev["name"], []).append(ts)
 
     for track in COUNTER_TRACKS:
         check(track in counter_names, f"counter track {track!r} missing")
@@ -113,11 +126,36 @@ def main(path):
     if phase_sum > 0:
         check(totals[dom] == max(totals.values()), "dominant_phase is not the max phase")
 
+    # Crash-recovery ledger: the intent log never loses an orphan (every
+    # one is replayed or aborted), the auditor is clean, and every kill
+    # has exactly one recovery-sweep instant one lease past its boundary.
+    for k in ("orphaned_ops", "recovered_ops", "aborted_ops",
+              "locks_reclaimed", "audit_violations", "recovery_lease_us"):
+        check(isinstance(summary.get(k), int) and summary[k] >= 0, f"{k} missing/bad")
+    check(
+        summary["orphaned_ops"] == summary["recovered_ops"] + summary["aborted_ops"],
+        f"orphan conservation violated: {summary['orphaned_ops']} != "
+        f"{summary['recovered_ops']} + {summary['aborted_ops']}",
+    )
+    check(
+        summary["audit_violations"] == 0,
+        f"consistency auditor reported {summary['audit_violations']} violations",
+    )
+    if expect_orphans:
+        check(summary["orphaned_ops"] > 0, "--expect-orphans: no ops were orphaned")
+        check(summary["recovered_ops"] > 0, "--expect-orphans: no ops were recovered")
+
     kills = summary.get("kills", 0)
     if kills > 0:
         check(
             instant_counts.get("kill", 0) == kills,
             f"{kills} kills in summary, {instant_counts.get('kill', 0)} kill instants",
+        )
+        lease = summary["recovery_lease_us"]
+        expected_sweeps = sorted(t + SEC_US + lease for t in instant_ts.get("kill", []))
+        check(
+            sorted(instant_ts.get("recovery sweep", [])) == expected_sweeps,
+            "recovery sweeps do not match kill boundaries + lease",
         )
     blackouts = summary.get("blackouts", 0)
     if blackouts > 0:
@@ -130,12 +168,14 @@ def main(path):
     print(
         f"validate_trace_events: OK — {n_events} events, {len(counter_names)} counter "
         f"tracks, {summary['seconds']} s sampled, phase sum {phase_sum} us == e2e "
-        f"({dom} dominant)"
+        f"({dom} dominant), {summary['orphaned_ops']} orphaned = "
+        f"{summary['recovered_ops']} recovered + {summary['aborted_ops']} aborted"
     )
 
 
 if __name__ == "__main__":
-    if len(sys.argv) != 2:
+    argv = [a for a in sys.argv[1:] if a != "--expect-orphans"]
+    if len(argv) != 1:
         print(__doc__, file=sys.stderr)
         sys.exit(2)
-    main(sys.argv[1])
+    main(argv[0], expect_orphans="--expect-orphans" in sys.argv[1:])
